@@ -1,0 +1,54 @@
+//! Bandwidth adaptation (the §7.4 / Table 4 behaviour, live).
+//!
+//! Runs the same AlexNet iteration at three bandwidths and shows how
+//! Algorithm 1 moves the split index and keeps the transferred data —
+//! and therefore the iteration time — nearly flat while the BASELINE
+//! degrades linearly.
+//!
+//! Run with: `cargo run --release --example bandwidth_adaptation`
+
+use hapi::config::HapiConfig;
+use hapi::harness::Testbed;
+use hapi::metrics::Table;
+use hapi::netsim;
+use hapi::runtime::DeviceKind;
+use hapi::util::{fmt_bytes, fmt_duration};
+
+fn main() -> hapi::Result<()> {
+    let mut table = Table::new(
+        "Algorithm 1 under different bandwidths (alexnet, 1 epoch)",
+        &["bandwidth", "system", "split", "bytes from COS", "epoch time"],
+    );
+    for mbps in [25.0, 100.0, 1000.0] {
+        for baseline in [false, true] {
+            let mut cfg = HapiConfig::default();
+            cfg.artifacts_dir = HapiConfig::discover_artifacts()
+                .expect("run `make artifacts` first");
+            cfg.bandwidth = Some(netsim::mbps(mbps));
+            cfg.train_batch = 100;
+            let bed = Testbed::launch(cfg)?;
+            let (ds, labels) = bed.dataset("bw", "alexnet", 200)?;
+            let client = if baseline {
+                bed.baseline_client("alexnet", DeviceKind::Gpu)?
+            } else {
+                bed.hapi_client("alexnet", DeviceKind::Gpu)?
+            };
+            let t0 = std::time::Instant::now();
+            let stats = client.train_epoch(&ds, &labels)?;
+            table.row(vec![
+                format!("{mbps} Mbps"),
+                if baseline { "BASELINE" } else { "Hapi" }.into(),
+                if baseline {
+                    "-".into()
+                } else {
+                    client.split.split_idx.to_string()
+                },
+                fmt_bytes(stats.bytes_from_cos),
+                fmt_duration(t0.elapsed()),
+            ]);
+            bed.stop();
+        }
+    }
+    table.print();
+    Ok(())
+}

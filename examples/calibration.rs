@@ -1,0 +1,29 @@
+//! Memory-model calibration inspector: per-model footprints that
+//! back the config defaults (EXPERIMENTS.md §Calibration).
+//! Run with: `cargo run --release --example calibration`
+
+use hapi::config::{HapiConfig, Scale};
+use hapi::model::ModelRegistry;
+use hapi::profiler::AppProfile;
+use hapi::util::fmt_bytes;
+
+fn main() {
+    let mut cfg = HapiConfig::default();
+    cfg.artifacts_dir = HapiConfig::discover_artifacts().unwrap();
+    let models = ModelRegistry::load_dir(cfg.profiles_dir()).unwrap();
+    for m in models.iter() {
+        let app = AppProfile::new(m.clone(), Scale::Tiny);
+        let mem = app.memory();
+        let f = m.freeze_idx;
+        println!(
+            "{:12} fe(freeze,b100)={:>9} fe(freeze,b20)={:>9} base_client(b200)={:>9} base_client(b800)={:>9} hapi_client(freeze,b200)={:>9} allincos(b100)={:>9}",
+            m.name,
+            fmt_bytes(mem.fe_request_bytes(f, 100)),
+            fmt_bytes(mem.fe_request_bytes(f, 20)),
+            fmt_bytes(mem.baseline_client_bytes(200)),
+            fmt_bytes(mem.baseline_client_bytes(800)),
+            fmt_bytes(mem.client_bytes(f, 200)),
+            fmt_bytes(mem.all_in_cos_bytes(100)),
+        );
+    }
+}

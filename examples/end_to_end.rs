@@ -1,0 +1,112 @@
+//! End-to-end validation driver (DESIGN.md §4, EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real workload: fine-tunes the
+//! AlexNet TL application for ~100 SGD steps through the full stack —
+//! synthetic ImageNet-like shards in the COS, feature extraction pushed
+//! down to the Hapi server (real AOT Pallas/XLA execution), training tail
+//! on the client — logging the loss curve, then runs the BASELINE on the
+//! same data for the headline runtime/transfer comparison.
+//!
+//! Run with: `cargo run --release --example end_to_end`
+//! Environment: HAPI_E2E_EPOCHS / HAPI_E2E_SAMPLES override the defaults.
+
+use hapi::config::HapiConfig;
+use hapi::harness::Testbed;
+use hapi::metrics::Table;
+use hapi::runtime::DeviceKind;
+use hapi::util::{fmt_bytes, fmt_duration};
+
+fn env_or(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> hapi::Result<()> {
+    let epochs = env_or("HAPI_E2E_EPOCHS", 20);
+    let samples = env_or("HAPI_E2E_SAMPLES", 500);
+
+    let mut cfg = HapiConfig::default();
+    cfg.artifacts_dir = HapiConfig::discover_artifacts()
+        .expect("run `make artifacts` first");
+    cfg.train_batch = 100; // 5 steps/epoch at 500 samples
+    let bed = Testbed::launch(cfg)?;
+    let (ds, labels) = bed.dataset("e2e", "alexnet", samples)?;
+
+    let client = bed.hapi_client("alexnet", DeviceKind::Gpu)?;
+    println!(
+        "== Hapi end-to-end: alexnet, {samples} samples, batch {}, \
+         split {} / freeze {} ==",
+        bed.cfg.train_batch,
+        client.split.split_idx,
+        client.app.freeze_idx()
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut curve: Vec<(usize, f32, f32)> = Vec::new();
+    let mut step = 0;
+    for epoch in 0..epochs {
+        let stats = client.train_epoch(&ds, &labels)?;
+        for (l, a) in stats.loss.iter().zip(&stats.accuracy) {
+            step += 1;
+            curve.push((step, *l, *a));
+        }
+        println!(
+            "epoch {epoch:2}: loss {:.4}  acc {:.3}  (comm {}, comp {})",
+            stats.mean_loss(),
+            stats.accuracy.iter().sum::<f32>() / stats.accuracy.len() as f32,
+            fmt_duration(stats.comm),
+            fmt_duration(stats.comp),
+        );
+    }
+    let hapi_time = t0.elapsed();
+    let hapi_rx = bed.link.stats().rx_bytes();
+
+    // Loss-curve summary (the validation signal).
+    let first = curve.first().unwrap();
+    let last = curve.last().unwrap();
+    println!("\nloss curve ({} steps):", curve.len());
+    for (s, l, a) in curve.iter().step_by(curve.len().div_ceil(12).max(1)) {
+        println!("  step {s:3}: loss {l:.4} acc {a:.3}");
+    }
+    println!("  step {:3}: loss {:.4} acc {:.3}", last.0, last.1, last.2);
+    assert!(
+        last.1 < first.1,
+        "loss did not decrease: {} -> {}",
+        first.1,
+        last.1
+    );
+
+    // BASELINE comparison on the same dataset (one epoch each way).
+    bed.link.stats().reset();
+    let base = bed.baseline_client("alexnet", DeviceKind::Gpu)?;
+    let t0 = std::time::Instant::now();
+    let bstats = base.train_epoch(&ds, &labels)?;
+    let base_time = t0.elapsed() * epochs as u32;
+    let base_rx = bstats.bytes_from_cos * epochs as u64;
+
+    let mut t = Table::new(
+        "end-to-end summary",
+        &["system", "total time", "data from COS", "final loss"],
+    );
+    t.row(vec![
+        "Hapi".into(),
+        fmt_duration(hapi_time),
+        fmt_bytes(hapi_rx),
+        format!("{:.4}", last.1),
+    ]);
+    t.row(vec![
+        "BASELINE (extrapolated)".into(),
+        fmt_duration(base_time),
+        fmt_bytes(base_rx),
+        "-".into(),
+    ]);
+    t.print();
+    println!(
+        "transfer reduction: {:.1}x",
+        base_rx as f64 / hapi_rx.max(1) as f64
+    );
+    bed.stop();
+    Ok(())
+}

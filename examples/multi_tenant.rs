@@ -1,0 +1,88 @@
+//! Multi-tenant COS sharing (the §7.5 scenario, scaled down).
+//!
+//! Several tenants submit TL jobs at t=0 (models round-robin from
+//! Table 1); the Hapi server shares its two simulated devices among them
+//! with batch adaptation.  Compares against ALL_IN_COS, which pushes the
+//! whole computation down and scales poorly.
+//!
+//! Run with: `cargo run --release --example multi_tenant [-- tenants]`
+
+use hapi::config::HapiConfig;
+use hapi::harness::Testbed;
+use hapi::metrics::Table;
+use hapi::runtime::DeviceKind;
+use hapi::util::fmt_duration;
+use hapi::workload::run_tenants;
+
+fn main() -> hapi::Result<()> {
+    let tenants: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let mut cfg = HapiConfig::default();
+    cfg.artifacts_dir = HapiConfig::discover_artifacts()
+        .expect("run `make artifacts` first");
+    cfg.bandwidth = None; // stress the COS, not the network (§7.5)
+    cfg.train_batch = 100;
+
+    let bed = Testbed::launch(cfg)?;
+    // One dataset per tenant model (duplicates are cheap).
+    for t in 0..tenants {
+        let model = hapi::workload::tenant_model(t);
+        bed.dataset(&format!("mt-{t}"), model, 100)?;
+    }
+
+    let mut table = Table::new(
+        &format!("{tenants} tenants sharing the COS"),
+        &["system", "makespan", "avg JCT", "failures"],
+    );
+
+    for (label, all_in_cos) in [("Hapi", false), ("ALL_IN_COS", true)] {
+        let report = run_tenants(tenants, |t, model| {
+            let (ds, labels) = (
+                {
+                    let app = bed.app(model)?;
+                    let spec = hapi::client::DatasetSpec {
+                        name: format!("mt-{t}"),
+                        input_shape: app.meta().input_shape.clone(),
+                        num_classes: app.meta().num_classes,
+                        num_samples: 100,
+                        shard_samples: bed.cfg.object_samples,
+                        seed: bed.cfg.seed,
+                    };
+                    (spec.to_ref(), spec.shards().flat_map(|(_, l)| l).collect::<Vec<i32>>())
+                }
+            );
+            if all_in_cos {
+                bed.all_in_cos_client(model)?.train_epoch(&ds)?;
+            } else {
+                bed.hapi_client(model, DeviceKind::Gpu)?
+                    .train_epoch(&ds, &labels)?;
+            }
+            Ok(())
+        });
+        for r in &report.results {
+            println!(
+                "  [{label}] tenant {} ({:12}) jct {}  {}",
+                r.tenant,
+                r.model,
+                fmt_duration(r.jct),
+                if r.ok { "ok" } else { "FAILED" }
+            );
+        }
+        table.row(vec![
+            label.into(),
+            fmt_duration(report.makespan),
+            fmt_duration(report.avg_jct()),
+            report.failures().to_string(),
+        ]);
+    }
+    table.print();
+    let (total, reduced, avg_pct) = bed.server.planner().adaptation_stats();
+    println!(
+        "batch adaptation: {total} requests, {reduced} reduced, \
+         avg reduction {avg_pct:.1}%"
+    );
+    bed.stop();
+    Ok(())
+}

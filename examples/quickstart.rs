@@ -1,0 +1,49 @@
+//! Quickstart: the whole Hapi stack in ~30 lines.
+//!
+//! Launches the COS (storage nodes + proxy + Hapi server) in-process,
+//! uploads a synthetic dataset, and fine-tunes AlexNet for one epoch with
+//! the feature-extraction prefix pushed down to the COS.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+
+use hapi::config::HapiConfig;
+use hapi::harness::Testbed;
+use hapi::runtime::DeviceKind;
+use hapi::util::{fmt_bytes, fmt_duration};
+
+fn main() -> hapi::Result<()> {
+    let mut cfg = HapiConfig::default();
+    cfg.artifacts_dir = HapiConfig::discover_artifacts()
+        .expect("run `make artifacts` first");
+    cfg.train_batch = 100;
+
+    // COS + proxy + Hapi server on a real TCP port.
+    let bed = Testbed::launch(cfg)?;
+    // 300 synthetic samples, sharded into 100-sample objects.
+    let (ds, labels) = bed.dataset("quickstart", "alexnet", 300)?;
+
+    let client = bed.hapi_client("alexnet", DeviceKind::Gpu)?;
+    println!(
+        "Algorithm 1 chose split index {} (freeze index {}): \
+         {}/sample leaves the COS instead of {}/sample of raw pixels",
+        client.split.split_idx,
+        client.app.freeze_idx(),
+        fmt_bytes(client.split.out_bytes_per_sample),
+        fmt_bytes(client.app.input_bytes()),
+    );
+
+    let t0 = std::time::Instant::now();
+    let stats = client.train_epoch(&ds, &labels)?;
+    println!(
+        "epoch done in {}: {} iterations, loss {:.3} -> {:.3}, \
+         {} received from the COS",
+        fmt_duration(t0.elapsed()),
+        stats.iterations,
+        stats.loss.first().unwrap(),
+        stats.final_loss(),
+        fmt_bytes(stats.bytes_from_cos),
+    );
+    bed.stop();
+    Ok(())
+}

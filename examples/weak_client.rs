@@ -1,0 +1,51 @@
+//! The weak-client story (§7.2): "training ResNet18 … on CPU with Hapi
+//! … whereas on GPU with Baseline …" — a CPU-only client using Hapi can
+//! rival a GPU client running the BASELINE, because the expensive early
+//! convolutions run next to storage and the client's leftovers are the
+//! cheap epilogue units (Fig 3's insight).
+//!
+//! Run with: `cargo run --release --example weak_client`
+
+use hapi::config::HapiConfig;
+use hapi::harness::Testbed;
+use hapi::metrics::Table;
+use hapi::netsim;
+use hapi::runtime::DeviceKind;
+use hapi::util::fmt_duration;
+
+fn main() -> hapi::Result<()> {
+    let mut cfg = HapiConfig::default();
+    cfg.artifacts_dir = HapiConfig::discover_artifacts()
+        .expect("run `make artifacts` first");
+    cfg.bandwidth = Some(netsim::mbps(100.0));
+    cfg.train_batch = 100;
+    let bed = Testbed::launch(cfg)?;
+    let (ds, labels) = bed.dataset("weak", "resnet18", 200)?;
+
+    let mut table = Table::new(
+        "weak CPU client + Hapi vs strong GPU client + BASELINE (resnet18)",
+        &["client device", "system", "epoch time"],
+    );
+    let cases: [(&str, DeviceKind, bool); 3] = [
+        ("CPU (weak)", DeviceKind::Cpu, false),
+        ("GPU (strong)", DeviceKind::Gpu, true),
+        ("GPU (strong)", DeviceKind::Gpu, false),
+    ];
+    for (dev_label, device, baseline) in cases {
+        let client = if baseline {
+            bed.baseline_client("resnet18", device)?
+        } else {
+            bed.hapi_client("resnet18", device)?
+        };
+        let t0 = std::time::Instant::now();
+        client.train_epoch(&ds, &labels)?;
+        table.row(vec![
+            dev_label.into(),
+            if baseline { "BASELINE" } else { "Hapi" }.into(),
+            fmt_duration(t0.elapsed()),
+        ]);
+    }
+    table.print();
+    bed.stop();
+    Ok(())
+}

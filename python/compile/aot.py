@@ -1,0 +1,241 @@
+"""AOT exporter: lower every model unit + training step to HLO text.
+
+This is the single build-time Python entrypoint (``make artifacts``).  It
+runs once; afterwards the Rust binary is self-contained.  Per model it
+emits, under ``artifacts/<model>/``:
+
+- ``unit_XXX_b<MB>.hlo.txt``  -- forward of unit XXX (1-based) at the
+  micro-batch size ``MB``.  The Rust runtime serves any batch size by
+  chunking into micro-batches (zero-padding the last chunk); feature
+  extraction is deterministic with frozen weights, so chunking is
+  bit-equivalent to a single large batch (the §5.1 decoupling insight).
+- ``train_grads_b<MB>.hlo.txt`` -- one training micro-batch over the
+  unfrozen tail (summed grads + loss + correct count, for accumulation).
+- ``apply_update.hlo.txt``   -- mean-reduced SGD update from the sums.
+- ``params/uXXX_pYY.tnsr``   -- initial parameters, artifact order.
+
+plus ``artifacts/profiles/<model>.json`` with the per-unit analytic
+metadata (output shapes/bytes, parameter bytes, FLOPs) at both the executed
+``tiny`` scale and the paper's 224x224 ``paper`` scale (shape math +
+``jax.eval_shape`` only -- paper-scale weights are never materialised), and
+``artifacts/profiles/datasets.json`` with the Fig-2 dataset presets.
+
+HLO **text** is emitted, not ``.serialize()`` protos: jax >= 0.5 writes
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import models
+from .tensorio import write_tensor
+
+MICRO_BATCH = 20  # paper knobs are scaled 1:10; objects hold 100 samples
+PARAM_SEED = 42
+
+DATASETS = {
+    # Fig 2 horizontal lines: per-sample application input size.  The paper
+    # streams encoded images; we stream f32 tensors, so "input size" is the
+    # decoded tensor size at each dataset's canonical resolution.
+    "imagenet": {"side": {"tiny": 32, "paper": 224}},
+    "inatura": {"side": {"tiny": 38, "paper": 299}},
+    "plantleaves": {"side": {"tiny": 48, "paper": 256}},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def _lower_to(path, fn, specs, force):
+    if os.path.exists(path) and not force:
+        return False
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return True
+
+
+def _unit_meta(m, scale_name):
+    """Analytic per-unit metadata at a given scale (no weight allocation)."""
+    sm = models.build(m.name, scale_name)
+    in_shapes = sm.unit_in_shapes()
+    out_shapes = sm.unit_out_shapes()
+    units = []
+    key = jax.random.PRNGKey(0)
+    for i, u in enumerate(sm.units):
+        pshapes = jax.eval_shape(lambda k, s=in_shapes[i], u=u: u.init(k, s), key)
+        leaves = jax.tree_util.tree_leaves(pshapes)
+        param_count = sum(math.prod(l.shape) for l in leaves)
+        units.append(
+            {
+                "index": i + 1,
+                "name": u.name,
+                "kind": u.kind,
+                "out_shape": list(out_shapes[i]),
+                "out_bytes_per_sample": 4 * math.prod(out_shapes[i]),
+                "param_count": int(param_count),
+                "param_bytes": int(4 * param_count),
+                "flops_per_sample": int(u.flops(in_shapes[i])),
+            }
+        )
+    return {
+        "input_shape": list(sm.input_shape),
+        "input_bytes_per_sample": 4 * math.prod(sm.input_shape),
+        "num_classes": sm.num_classes,
+        "units": units,
+    }
+
+
+def export_model(name: str, out_dir: str, force: bool) -> dict:
+    t0 = time.time()
+    m = models.build(name, "tiny")
+    mdir = os.path.join(out_dir, name)
+    pdir = os.path.join(mdir, "params")
+    os.makedirs(pdir, exist_ok=True)
+
+    params = m.init_params(PARAM_SEED)
+    defs = M.param_treedefs(m, PARAM_SEED)
+    in_shapes = m.unit_in_shapes()
+
+    lowered = 0
+    unit_entries = []
+    param_entries = []
+    for i, u in enumerate(m.units):
+        leaves = defs[i][1]
+        pspecs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+        fname = f"unit_{i + 1:03d}_b{MICRO_BATCH}.hlo.txt"
+        lowered += _lower_to(
+            os.path.join(mdir, fname),
+            M.unit_fn(m, i),
+            [_f32((MICRO_BATCH,) + tuple(in_shapes[i]))] + pspecs,
+            force,
+        )
+        unit_entries.append(
+            {"index": i + 1, "file": fname, "num_params": len(leaves)}
+        )
+        files = []
+        for j, leaf in enumerate(jax.tree_util.tree_leaves(params[i])):
+            pfile = f"u{i + 1:03d}_p{j:02d}.tnsr"
+            fpath = os.path.join(pdir, pfile)
+            if force or not os.path.exists(fpath):
+                write_tensor(fpath, leaf)
+            files.append(pfile)
+        param_entries.append({"unit": i + 1, "files": files})
+
+    # Training step artifacts over the unfrozen tail.
+    tail_in = M.tail_input_shape(m)
+    tail_leaves = M.tail_param_leaves(m, params)
+    tail_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in tail_leaves]
+    tg = f"train_grads_b{MICRO_BATCH}.hlo.txt"
+    lowered += _lower_to(
+        os.path.join(mdir, tg),
+        M.train_grads_fn(m, PARAM_SEED),
+        [
+            _f32((MICRO_BATCH,) + tail_in),
+            _i32((MICRO_BATCH,)),
+            _f32((MICRO_BATCH,)),
+        ]
+        + tail_specs,
+        force,
+    )
+    lowered += _lower_to(
+        os.path.join(mdir, "apply_update.hlo.txt"),
+        M.apply_update_fn(m, PARAM_SEED),
+        [_f32(()), _f32(())] + tail_specs + tail_specs,
+        force,
+    )
+
+    profile = {
+        "name": name,
+        "num_units": len(m.units),
+        "freeze_idx": m.freeze_idx,
+        "micro_batch": MICRO_BATCH,
+        "param_seed": PARAM_SEED,
+        "table1": {
+            "freeze": models.TABLE1[name][0],
+            "units": models.TABLE1[name][1],
+        },
+        "scales": {
+            "tiny": _unit_meta(m, "tiny"),
+            "paper": _unit_meta(m, "paper"),
+        },
+        "artifacts": {
+            "units": unit_entries,
+            "train_grads": tg,
+            "apply_update": "apply_update.hlo.txt",
+            "tail_input_shape": list(tail_in),
+            "tail_num_params": len(tail_leaves),
+        },
+        "params_dir": "params",
+        "params": param_entries,
+    }
+    print(
+        f"[aot] {name}: {len(m.units)} units, {lowered} lowered, "
+        f"{time.time() - t0:.1f}s",
+        flush=True,
+    )
+    return profile
+
+
+def export_datasets(out_dir: str) -> None:
+    entries = {}
+    for name, spec in DATASETS.items():
+        entries[name] = {
+            scale: {
+                "side": side,
+                "bytes_per_sample": 4 * 3 * side * side,
+            }
+            for scale, side in spec["side"].items()
+        }
+    path = os.path.join(out_dir, "profiles", "datasets.json")
+    with open(path, "w") as f:
+        json.dump(entries, f, indent=1, sort_keys=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--models", default=",".join(models.TABLE1))
+    ap.add_argument("--force", action="store_true", help="re-lower all")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.join(args.out, "profiles"), exist_ok=True)
+    for name in args.models.split(","):
+        profile = export_model(name.strip(), args.out, args.force)
+        ppath = os.path.join(args.out, "profiles", f"{name}.json")
+        with open(ppath, "w") as f:
+            json.dump(profile, f, indent=1, sort_keys=True)
+    export_datasets(args.out)
+    # Stamp file: `make` freshness target.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print("[aot] done", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

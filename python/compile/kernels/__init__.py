@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for Hapi's compute hot-spots.
+
+Every dense compute primitive the L2 models use is routed through these
+kernels so that the AOT-lowered HLO exercises the Pallas path end to end:
+
+- :mod:`matmul` -- MXU-tiled matmul with optional fused bias + activation.
+- :mod:`conv` -- conv2d as im2col + the Pallas matmul kernel (the standard
+  TPU lowering of convolution onto the systolic array).
+- :mod:`attention` -- blocked scaled-dot-product attention.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime's CPU client runs bit-for-bit.  Correctness oracles live in
+:mod:`ref` and are enforced by ``python/tests/test_kernels.py``.
+"""
+
+from .matmul import matmul, linear  # noqa: F401
+from .conv import conv2d  # noqa: F401
+from .attention import mha  # noqa: F401

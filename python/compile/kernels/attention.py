@@ -1,0 +1,59 @@
+"""Blocked scaled-dot-product attention as a Pallas kernel.
+
+Serves the Transformer model from Table 1.  One grid step processes one
+(batch, head) pair with the whole sequence resident in VMEM -- appropriate
+for the fine-tuning sequence lengths here (<=256 tokens), where Q, K, V and
+the score tile all fit comfortably in the ~16 MiB TPU scratchpad.  The
+softmax is computed in the numerically stable max-subtracted form inside
+the kernel so scores never round-trip to HBM (the same insight as
+FlashAttention's on-chip softmax, specialised to the
+whole-sequence-in-VMEM regime).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[0]  # (s, d)
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def mha(q, k, v):
+    """Multi-head attention core: softmax(q kᵀ / sqrt(d)) v.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)`` float arrays.
+
+    Returns:
+      ``(batch, heads, seq, head_dim)`` float32 output.
+    """
+    if q.shape != k.shape or q.shape != v.shape or q.ndim != 4:
+        raise ValueError(f"mha shapes {q.shape} {k.shape} {v.shape}")
+    b, h, s, d = q.shape
+    scale = 1.0 / (d**0.5)
+
+    qf = q.astype(jnp.float32).reshape(b * h, s, d)
+    kf = k.astype(jnp.float32).reshape(b * h, s, d)
+    vf = v.astype(jnp.float32).reshape(b * h, s, d)
+
+    spec = pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_mha_kernel, scale=scale),
+        grid=(b * h,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,55 @@
+"""conv2d lowered as im2col + the Pallas MXU matmul kernel.
+
+The paper's feature-extraction hot-spot is convolution on CUDA GPUs.  The
+TPU-native formulation of convolution is a patch-extraction (im2col)
+followed by a systolic-array matmul -- exactly how XLA lowers conv onto the
+MXU.  We make that lowering explicit so the dense FLOPs flow through the
+Layer-1 Pallas kernel (:func:`kernels.matmul.matmul`) and therefore through
+the AOT HLO the Rust runtime executes.
+
+Layout: NCHW activations, OIHW weights (matches the PyTorch models the
+paper profiles, and keeps the Rust-side shape math identical to Table 1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def conv2d(x, w, b=None, *, stride=1, padding=0, activation=None):
+    """2-D convolution with optional fused bias + activation.
+
+    Args:
+      x: ``(n, c_in, h, w)`` input.
+      w: ``(c_out, c_in, kh, kw)`` filters.
+      b: optional ``(c_out,)`` bias, fused into the matmul epilogue.
+      stride: int or (sh, sw).
+      padding: int or (ph, pw), symmetric zero padding.
+      activation: fused epilogue activation (see kernels.matmul).
+
+    Returns:
+      ``(n, c_out, h_out, w_out)`` float32 output.
+    """
+    n, c_in, h, wid = x.shape
+    c_out, c_in_w, kh, kw = w.shape
+    if c_in != c_in_w:
+        raise ValueError(f"conv2d channel mismatch {x.shape} vs {w.shape}")
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    ph, pw = (padding, padding) if isinstance(padding, int) else padding
+
+    # im2col: (n, c_in*kh*kw, h_out*w_out) patches.
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(sh, sw),
+        padding=((ph, ph), (pw, pw)),
+    )
+    _, pk, h_out, w_out = patches.shape
+    # Rows = every output pixel of every image; cols = receptive field.
+    cols = patches.transpose(0, 2, 3, 1).reshape(n * h_out * w_out, pk)
+    # Filters as a (receptive field, c_out) matrix for the MXU kernel.
+    wmat = w.astype(jnp.float32).reshape(c_out, pk).T
+
+    y = matmul(cols, wmat, b, activation=activation)
+    return y.reshape(n, h_out, w_out, c_out).transpose(0, 3, 1, 2)

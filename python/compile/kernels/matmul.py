@@ -1,0 +1,223 @@
+"""MXU-tiled Pallas matmul with fused bias + activation epilogue.
+
+Hardware adaptation (DESIGN.md section 5): the paper's hot-spot runs on CUDA
+GPUs with threadblock tiling into shared memory.  On TPU the analogous
+structure is a systolic-array (MXU) matmul whose HBM<->VMEM schedule is
+expressed with ``BlockSpec``:
+
+- the grid iterates output tiles ``(bm, bn)`` and a reduction axis ``nk``;
+- each step stages an ``(bm, bk)`` LHS tile and a ``(bk, bn)`` RHS tile in
+  VMEM (the TPU scratchpad, playing the role CUDA shared memory plays);
+- partial products accumulate into the output ref in f32
+  (``preferred_element_type``), the MXU-native accumulate layout;
+- bias add + activation are fused into the last reduction step so the
+  epilogue never round-trips through HBM.
+
+Block sizes default to MXU-friendly 128x128 tiles, clamped to the problem
+shape; inputs are zero-padded up to block multiples and the result sliced
+back, so arbitrary shapes are supported.  ``interpret=True`` always: CPU
+PJRT cannot run Mosaic custom-calls (see kernels/__init__.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU tile. 128 is the systolic array edge on current TPUs.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+}
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk, activation):
+    """One (m, n, k) grid step: accumulate an MXU tile of x @ w into o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if b_ref is not None:
+            acc = acc + b_ref[...]
+        o_ref[...] = _ACTIVATIONS[activation](acc)
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _matmul_raw(
+    x,
+    w,
+    bias,
+    activation,
+    block_m=DEFAULT_BLOCK_M,
+    block_n=DEFAULT_BLOCK_N,
+    block_k=DEFAULT_BLOCK_K,
+):
+    """Pallas forward only (no VJP): pad to tiles, run the kernel, slice."""
+    m, k = x.shape
+    _, n = w.shape
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+
+    xp = _pad_to(x.astype(jnp.float32), mp, kp)
+    wp = _pad_to(w.astype(jnp.float32), kp, np_)
+    nk = kp // bk
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [xp, wp]
+    if bias is not None:
+        bp = jnp.pad(bias.astype(jnp.float32), (0, np_ - n)).reshape(1, np_)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.append(bp)
+        kernel = functools.partial(_matmul_kernel, nk=nk, activation=activation)
+    else:
+        kernel = functools.partial(
+            lambda x_ref, w_ref, o_ref, nk, activation: _matmul_kernel(
+                x_ref, w_ref, None, o_ref, nk=nk, activation=activation
+            ),
+            nk=nk,
+            activation=activation,
+        )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(*operands)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Custom VJP: the backward pass is itself two Pallas MXU matmuls
+# (dX = dZ @ Wᵀ, dW = Xᵀ @ dZ), so training-tail gradients flow through the
+# same Layer-1 kernel as the forward.  jax cannot autodiff through
+# pl.program_id, hence the explicit rule.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mm(cfg, x, w, b):
+    activation, bm, bn, bk = cfg
+    return _matmul_raw(x, w, b, activation, bm, bn, bk)
+
+
+def _mm_fwd(cfg, x, w, b):
+    activation, bm, bn, bk = cfg
+    if activation == "gelu":
+        # gelu' needs the pre-activation; compute z unfused, gelu outside
+        # (XLA fuses the elementwise tail anyway).
+        z = _matmul_raw(x, w, b, None, bm, bn, bk)
+        return jax.nn.gelu(z), (x, w, z)
+    out = _matmul_raw(x, w, b, activation, bm, bn, bk)
+    return out, (x, w, out)
+
+
+def _mm_bwd(cfg, res, g):
+    activation, bm, bn, bk = cfg
+    x, w, r = res
+    if activation is None:
+        dz = g
+    elif activation == "relu":
+        dz = g * (r > 0).astype(g.dtype)
+    elif activation == "tanh":
+        dz = g * (1.0 - r * r)
+    elif activation == "gelu":
+        _, vjp = jax.vjp(jax.nn.gelu, r)
+        (dz,) = vjp(g)
+    else:  # pragma: no cover - guarded in matmul()
+        raise ValueError(activation)
+    dx = _matmul_raw(dz, w.T, None, None, bm, bn, bk)
+    dw = _matmul_raw(x.T, dz, None, None, bm, bn, bk)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+_mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k"),
+)
+def matmul(
+    x,
+    w,
+    bias=None,
+    *,
+    activation=None,
+    block_m=DEFAULT_BLOCK_M,
+    block_n=DEFAULT_BLOCK_N,
+    block_k=DEFAULT_BLOCK_K,
+):
+    """``activation(x @ w + bias)`` via the Pallas MXU kernel.
+
+    Differentiable w.r.t. ``x``, ``w`` and ``bias`` through an explicit VJP
+    whose dX/dW products run on the same Pallas kernel.
+
+    Args:
+      x: ``(m, k)`` float array.
+      w: ``(k, n)`` float array.
+      bias: optional ``(n,)`` float array, fused into the epilogue.
+      activation: one of ``None | "relu" | "gelu" | "tanh"`` (fused).
+      block_m/block_n/block_k: VMEM tile sizes; clamped to the (padded)
+        problem shape.  Exposed so the perf pass can sweep them.
+
+    Returns:
+      ``(m, n)`` float32 array.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"matmul shapes {x.shape} @ {w.shape}")
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    if bias is None:
+        # A concrete zero bias keeps the custom_vjp signature uniform; the
+        # epilogue add is fused and free at these sizes.
+        bias = jnp.zeros((w.shape[1],), jnp.float32)
+    return _mm(
+        (activation, block_m, block_n, block_k),
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        bias.astype(jnp.float32),
+    )
+
+
+def linear(x, w, b, *, activation=None):
+    """Fully-connected layer over the last axis: ``act(x @ w + b)``.
+
+    Flattens leading axes into the matmul M dimension so the same MXU
+    kernel serves 2-D activations and (batch, features) tensors alike.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = matmul(x2, w, b, activation=activation)
+    return y.reshape(lead + (w.shape[1],))

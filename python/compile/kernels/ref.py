@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the Layer-1 kernels are tested against
+(``python/tests/test_kernels.py`` sweeps shapes/dtypes with hypothesis and
+asserts allclose).  Keep them boring: direct jnp formulations with no
+tiling, padding, or fusion tricks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+}
+
+
+def matmul_ref(x, w, bias=None, *, activation=None):
+    """Oracle for kernels.matmul.matmul."""
+    y = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return _ACTIVATIONS[activation](y)
+
+
+def linear_ref(x, w, b, *, activation=None):
+    """Oracle for kernels.matmul.linear."""
+    lead = x.shape[:-1]
+    y = matmul_ref(x.reshape((-1, x.shape[-1])), w, b, activation=activation)
+    return y.reshape(lead + (w.shape[1],))
+
+
+def conv2d_ref(x, w, b=None, *, stride=1, padding=0, activation=None):
+    """Oracle for kernels.conv.conv2d (NCHW / OIHW)."""
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    ph, pw = (padding, padding) if isinstance(padding, int) else padding
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(sh, sw),
+        padding=((ph, ph), (pw, pw)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    if b is not None:
+        y = y + b.astype(jnp.float32).reshape(1, -1, 1, 1)
+    return _ACTIVATIONS[activation](y)
+
+
+def mha_ref(q, k, v):
+    """Oracle for kernels.attention.mha."""
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (d**0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

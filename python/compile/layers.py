@@ -1,0 +1,573 @@
+"""Splittable-unit framework for the Layer-2 JAX models.
+
+The paper splits each fine-tuning DNN at the granularity reported in
+Table 1 ("for DNNs structured as a sequence of blocks we split at block
+boundary").  A model here is a plain sequence of :class:`Unit` objects;
+every unit is an independently AOT-lowerable function ``(x, *params) -> y``
+plus the analytic metadata Hapi's Rust side needs (output shape, parameter
+bytes, FLOPs).  The split index / freeze index of the paper are simply
+indices into this sequence.
+
+Conventions:
+- activations are NCHW f32 (vision) or (batch, seq, d) f32 (transformer);
+- parameters are flat ``{name: array}`` dicts; jax traverses dict pytrees
+  in sorted-key order, which fixes the artifact parameter order the Rust
+  runtime relies on;
+- batch-norm runs in inference mode (affine scale/shift with fixed running
+  stats).  This mirrors common fine-tuning practice ("frozen BN") and keeps
+  feature extraction deterministic -- the property §5.1 of the paper relies
+  on for safe batch-size adaptation;
+- dropout is identity (eval mode) for the same determinism reason.
+
+All dense compute is routed through the Layer-1 Pallas kernels.
+"""
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, linear, mha
+
+Params = Dict[str, jnp.ndarray]
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """One splittable unit of a model.
+
+    Attributes:
+      name: unique unit name within the model (e.g. ``conv1``).
+      kind: coarse kind used by the Rust device speed model:
+        ``conv | pool | act | fc | norm | block | attn | embed | flatten``.
+      init: ``init(key, in_shape) -> Params`` (in_shape has no batch dim).
+      apply: ``apply(params, x) -> y`` (x has a leading batch dim).
+      out_shape: ``out_shape(in_shape) -> Shape`` (no batch dim).
+      flops: per-sample forward FLOPs given the (batch-free) input shape.
+    """
+
+    name: str
+    kind: str
+    init: Callable[[jax.Array, Shape], Params]
+    apply: Callable[[Params, jnp.ndarray], jnp.ndarray]
+    out_shape: Callable[[Shape], Shape]
+    flops: Callable[[Shape], int]
+
+
+def _no_params(_key, _shape) -> Params:
+    return {}
+
+
+def _conv_out_hw(h: int, w: int, k: int, s: int, p: int) -> Tuple[int, int]:
+    return (h + 2 * p - k) // s + 1, (w + 2 * p - k) // s + 1
+
+
+def _kaiming(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# Elementary units
+# ---------------------------------------------------------------------------
+
+
+def conv(name, c_out, k, *, stride=1, padding=0, activation=None) -> Unit:
+    """Convolution unit (optionally with fused ReLU/GELU epilogue)."""
+
+    def init(key, in_shape):
+        c_in = in_shape[0]
+        kw, kb = jax.random.split(key)
+        return {
+            "b": jnp.zeros((c_out,), jnp.float32),
+            "w": _kaiming(kw, (c_out, c_in, k, k), c_in * k * k),
+        }
+
+    def apply(params, x):
+        return conv2d(
+            x, params["w"], params["b"], stride=stride, padding=padding,
+            activation=activation,
+        )
+
+    def out_shape(in_shape):
+        _, h, w = in_shape
+        ho, wo = _conv_out_hw(h, w, k, stride, padding)
+        return (c_out, ho, wo)
+
+    def flops(in_shape):
+        c_in, h, w = in_shape
+        ho, wo = _conv_out_hw(h, w, k, stride, padding)
+        return 2 * c_in * k * k * c_out * ho * wo
+
+    return Unit(name, "conv", init, apply, out_shape, flops)
+
+
+def relu(name) -> Unit:
+    def apply(_p, x):
+        return jnp.maximum(x, 0.0)
+
+    return Unit(
+        name, "act", _no_params, apply,
+        lambda s: s, lambda s: math.prod(s),
+    )
+
+
+def dropout(name) -> Unit:
+    """Eval-mode dropout: identity (determinism; see module docstring)."""
+    return Unit(
+        name, "act", _no_params, lambda _p, x: x, lambda s: s, lambda s: 0
+    )
+
+
+def max_pool(name, k, *, stride=None, padding=0) -> Unit:
+    s = stride or k
+
+    def apply(_p, x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, 1, k, k), (1, 1, s, s),
+            ((0, 0), (0, 0), (padding, padding), (padding, padding)),
+        )
+
+    def out_shape(in_shape):
+        c, h, w = in_shape
+        ho, wo = _conv_out_hw(h, w, k, s, padding)
+        return (c, ho, wo)
+
+    def flops(in_shape):
+        c, h, w = in_shape
+        ho, wo = _conv_out_hw(h, w, k, s, padding)
+        return c * ho * wo * k * k
+
+    return Unit(name, "pool", _no_params, apply, out_shape, flops)
+
+
+def avg_pool_to(name, out_hw) -> Unit:
+    """Adaptive average pool to a fixed (h, w), like nn.AdaptiveAvgPool2d."""
+
+    def apply(_p, x):
+        _, _, h, w = x.shape
+        kh, kw = h // out_hw[0], w // out_hw[1]
+        y = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 1, kh, kw), (1, 1, kh, kw), "VALID"
+        )
+        return y / (kh * kw)
+
+    def out_shape(in_shape):
+        return (in_shape[0], out_hw[0], out_hw[1])
+
+    return Unit(
+        name, "pool", _no_params, apply, out_shape,
+        lambda s: math.prod(s),
+    )
+
+
+def global_avg_pool(name) -> Unit:
+    """Global average pool straight to a flat (c,) feature vector.
+
+    Mirrors the torchvision ``avgpool`` child that Table 1 counts as a
+    single unit (the flatten is part of it, not a separate unit).
+    """
+
+    def apply(_p, x):
+        return jnp.mean(x, axis=(2, 3))
+
+    return Unit(
+        name, "pool", _no_params, apply,
+        lambda s: (s[0],), lambda s: math.prod(s),
+    )
+
+
+def flatten(name) -> Unit:
+    def apply(_p, x):
+        return x.reshape(x.shape[0], -1)
+
+    return Unit(
+        name, "flatten", _no_params, apply,
+        lambda s: (math.prod(s),), lambda s: 0,
+    )
+
+
+def fc(name, n_out, *, activation=None) -> Unit:
+    """Fully-connected unit through the Pallas linear kernel."""
+
+    def init(key, in_shape):
+        (n_in,) = in_shape
+        return {
+            "b": jnp.zeros((n_out,), jnp.float32),
+            "w": _kaiming(key, (n_in, n_out), n_in),
+        }
+
+    def apply(params, x):
+        return linear(x, params["w"], params["b"], activation=activation)
+
+    return Unit(
+        name, "fc", init, apply,
+        lambda s: (n_out,), lambda s: 2 * s[0] * n_out,
+    )
+
+
+def batch_norm(name) -> Unit:
+    """Inference-mode batch norm: per-channel affine scale/shift."""
+
+    def init(_key, in_shape):
+        c = in_shape[0]
+        return {
+            "bias": jnp.zeros((c,), jnp.float32),
+            "scale": jnp.ones((c,), jnp.float32),
+        }
+
+    def apply(params, x):
+        s = params["scale"].reshape(1, -1, 1, 1)
+        b = params["bias"].reshape(1, -1, 1, 1)
+        return x * s + b
+
+    return Unit(
+        name, "norm", init, apply, lambda s: s, lambda s: 2 * math.prod(s)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Composite blocks (ResNet / DenseNet / Transformer)
+# ---------------------------------------------------------------------------
+
+
+def _bn_affine(params, prefix, x):
+    s = params[f"{prefix}_scale"].reshape(1, -1, 1, 1)
+    b = params[f"{prefix}_bias"].reshape(1, -1, 1, 1)
+    return x * s + b
+
+
+def _bn_init(c):
+    return {
+        "bias": jnp.zeros((c,), jnp.float32),
+        "scale": jnp.ones((c,), jnp.float32),
+    }
+
+
+def basic_block(name, c_out, *, stride=1) -> Unit:
+    """ResNet-18/34 basic block: two 3x3 convs + identity/projection."""
+
+    def init(key, in_shape):
+        c_in = in_shape[0]
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "conv1_w": _kaiming(k1, (c_out, c_in, 3, 3), c_in * 9),
+            "conv2_w": _kaiming(k2, (c_out, c_out, 3, 3), c_out * 9),
+        }
+        for pre, c in (("bn1", c_out), ("bn2", c_out)):
+            for k, v in _bn_init(c).items():
+                p[f"{pre}_{k}"] = v
+        if stride != 1 or c_in != c_out:
+            p["down_w"] = _kaiming(k3, (c_out, c_in, 1, 1), c_in)
+            for k, v in _bn_init(c_out).items():
+                p[f"downbn_{k}"] = v
+        return p
+
+    def apply(p, x):
+        y = conv2d(x, p["conv1_w"], stride=stride, padding=1)
+        y = jnp.maximum(_bn_affine(p, "bn1", y), 0.0)
+        y = conv2d(y, p["conv2_w"], stride=1, padding=1)
+        y = _bn_affine(p, "bn2", y)
+        if "down_w" in p:
+            sc = conv2d(x, p["down_w"], stride=stride, padding=0)
+            sc = _bn_affine(p, "downbn", sc)
+        else:
+            sc = x
+        return jnp.maximum(y + sc, 0.0)
+
+    def out_shape(in_shape):
+        c, h, w = in_shape
+        return (c_out, (h + stride - 1) // stride, (w + stride - 1) // stride)
+
+    def flops(in_shape):
+        c_in, h, w = in_shape
+        ho, wo = -(-h // stride), -(-w // stride)
+        f = 2 * c_in * 9 * c_out * ho * wo + 2 * c_out * 9 * c_out * ho * wo
+        if stride != 1 or c_in != c_out:
+            f += 2 * c_in * c_out * ho * wo
+        return f
+
+    return Unit(name, "block", init, apply, out_shape, flops)
+
+
+def bottleneck(name, c_mid, *, stride=1, expansion=4) -> Unit:
+    """ResNet-50 bottleneck block: 1x1 -> 3x3 -> 1x1 with expansion."""
+    c_out = c_mid * expansion
+
+    def init(key, in_shape):
+        c_in = in_shape[0]
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "conv1_w": _kaiming(k1, (c_mid, c_in, 1, 1), c_in),
+            "conv2_w": _kaiming(k2, (c_mid, c_mid, 3, 3), c_mid * 9),
+            "conv3_w": _kaiming(k3, (c_out, c_mid, 1, 1), c_mid),
+        }
+        for pre, c in (("bn1", c_mid), ("bn2", c_mid), ("bn3", c_out)):
+            for k, v in _bn_init(c).items():
+                p[f"{pre}_{k}"] = v
+        if stride != 1 or c_in != c_out:
+            p["down_w"] = _kaiming(k4, (c_out, c_in, 1, 1), c_in)
+            for k, v in _bn_init(c_out).items():
+                p[f"downbn_{k}"] = v
+        return p
+
+    def apply(p, x):
+        y = conv2d(x, p["conv1_w"])
+        y = jnp.maximum(_bn_affine(p, "bn1", y), 0.0)
+        y = conv2d(y, p["conv2_w"], stride=stride, padding=1)
+        y = jnp.maximum(_bn_affine(p, "bn2", y), 0.0)
+        y = conv2d(y, p["conv3_w"])
+        y = _bn_affine(p, "bn3", y)
+        if "down_w" in p:
+            sc = _bn_affine(p, "downbn", conv2d(x, p["down_w"], stride=stride))
+        else:
+            sc = x
+        return jnp.maximum(y + sc, 0.0)
+
+    def out_shape(in_shape):
+        _, h, w = in_shape
+        return (c_out, -(-h // stride), -(-w // stride))
+
+    def flops(in_shape):
+        c_in, h, w = in_shape
+        ho, wo = -(-h // stride), -(-w // stride)
+        f = 2 * c_in * c_mid * h * w
+        f += 2 * c_mid * 9 * c_mid * ho * wo
+        f += 2 * c_mid * c_out * ho * wo
+        if stride != 1 or c_in != c_out:
+            f += 2 * c_in * c_out * ho * wo
+        return f
+
+    return Unit(name, "block", init, apply, out_shape, flops)
+
+
+def dense_segment(name, n_layers, growth) -> Unit:
+    """A run of DenseNet layers: each appends ``growth`` channels.
+
+    DenseNet-121's four dense blocks are split into several such segments
+    so the model exposes the Table-1 unit count (22) at block boundaries.
+    """
+
+    def init(key, in_shape):
+        c_in = in_shape[0]
+        p = {}
+        keys = jax.random.split(key, n_layers)
+        c = c_in
+        for i in range(n_layers):
+            p[f"l{i:02d}_w"] = _kaiming(keys[i], (growth, c, 3, 3), c * 9)
+            for k, v in _bn_init(c).items():
+                p[f"l{i:02d}_bn_{k}"] = v
+            c += growth
+        return p
+
+    def apply(p, x):
+        feats = x
+        for i in range(n_layers):
+            y = _bn_affine(p, f"l{i:02d}_bn", feats)
+            y = jnp.maximum(y, 0.0)
+            y = conv2d(y, p[f"l{i:02d}_w"], padding=1)
+            feats = jnp.concatenate([feats, y], axis=1)
+        return feats
+
+    def out_shape(in_shape):
+        c, h, w = in_shape
+        return (c + n_layers * growth, h, w)
+
+    def flops(in_shape):
+        c, h, w = in_shape
+        f = 0
+        for _ in range(n_layers):
+            f += 2 * c * 9 * growth * h * w
+            c += growth
+        return f
+
+    return Unit(name, "block", init, apply, out_shape, flops)
+
+
+def transition(name, c_out) -> Unit:
+    """DenseNet transition: 1x1 conv + 2x2 average pool."""
+
+    def init(key, in_shape):
+        c_in = in_shape[0]
+        p = {"conv_w": _kaiming(key, (c_out, c_in, 1, 1), c_in)}
+        for k, v in _bn_init(c_in).items():
+            p[f"bn_{k}"] = v
+        return p
+
+    def apply(p, x):
+        y = jnp.maximum(_bn_affine(p, "bn", x), 0.0)
+        y = conv2d(y, p["conv_w"])
+        return jax.lax.reduce_window(
+            y, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+        ) / 4.0
+
+    def out_shape(in_shape):
+        c, h, w = in_shape
+        return (c_out, h // 2, w // 2)
+
+    def flops(in_shape):
+        c, h, w = in_shape
+        return 2 * c * c_out * h * w + c_out * h * w
+
+    return Unit(name, "block", init, apply, out_shape, flops)
+
+
+def patch_embed(name, patch, d_model) -> Unit:
+    """ViT patchify + linear embed + learned positional embedding."""
+
+    def init(key, in_shape):
+        c, h, w = in_shape
+        n_tok = (h // patch) * (w // patch)
+        k1, k2 = jax.random.split(key)
+        return {
+            "pos": jax.random.normal(k1, (n_tok, d_model), jnp.float32) * 0.02,
+            "w": _kaiming(k2, (c * patch * patch, d_model), c * patch * patch),
+        }
+
+    def apply(p, x):
+        n, c, h, w = x.shape
+        x = x.reshape(n, c, h // patch, patch, w // patch, patch)
+        x = x.transpose(0, 2, 4, 1, 3, 5).reshape(
+            n, (h // patch) * (w // patch), c * patch * patch
+        )
+        zeros = jnp.zeros((d_model,), jnp.float32)
+        return linear(x, p["w"], zeros) + p["pos"][None]
+
+    def out_shape(in_shape):
+        c, h, w = in_shape
+        return ((h // patch) * (w // patch), d_model)
+
+    def flops(in_shape):
+        c, h, w = in_shape
+        n_tok = (h // patch) * (w // patch)
+        return 2 * n_tok * c * patch * patch * d_model
+
+    return Unit(name, "embed", init, apply, out_shape, flops)
+
+
+def _ln(x, scale, bias):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale + bias
+
+
+def encoder_block(name, d_model, n_heads, d_mlp) -> Unit:
+    """Pre-LN transformer encoder block (attention via the Pallas kernel)."""
+    d_head = d_model // n_heads
+
+    def init(key, in_shape):
+        k = jax.random.split(key, 4)
+        return {
+            "ln1_bias": jnp.zeros((d_model,), jnp.float32),
+            "ln1_scale": jnp.ones((d_model,), jnp.float32),
+            "ln2_bias": jnp.zeros((d_model,), jnp.float32),
+            "ln2_scale": jnp.ones((d_model,), jnp.float32),
+            "mlp1_b": jnp.zeros((d_mlp,), jnp.float32),
+            "mlp1_w": _kaiming(k[0], (d_model, d_mlp), d_model),
+            "mlp2_b": jnp.zeros((d_model,), jnp.float32),
+            "mlp2_w": _kaiming(k[1], (d_mlp, d_model), d_mlp),
+            "qkv_b": jnp.zeros((3 * d_model,), jnp.float32),
+            "qkv_w": _kaiming(k[2], (d_model, 3 * d_model), d_model),
+            "out_b": jnp.zeros((d_model,), jnp.float32),
+            "out_w": _kaiming(k[3], (d_model, d_model), d_model),
+        }
+
+    def apply(p, x):
+        n, s, _ = x.shape
+        h = _ln(x, p["ln1_scale"], p["ln1_bias"])
+        qkv = linear(h, p["qkv_w"], p["qkv_b"])
+        qkv = qkv.reshape(n, s, 3, n_heads, d_head).transpose(2, 0, 3, 1, 4)
+        att = mha(qkv[0], qkv[1], qkv[2])
+        att = att.transpose(0, 2, 1, 3).reshape(n, s, d_model)
+        x = x + linear(att, p["out_w"], p["out_b"])
+        h = _ln(x, p["ln2_scale"], p["ln2_bias"])
+        h = linear(h, p["mlp1_w"], p["mlp1_b"], activation="gelu")
+        return x + linear(h, p["mlp2_w"], p["mlp2_b"])
+
+    def flops(in_shape):
+        s, _ = in_shape
+        f = 2 * s * d_model * 3 * d_model  # qkv
+        f += 2 * s * s * d_model * 2  # scores + weighted sum
+        f += 2 * s * d_model * d_model  # out proj
+        f += 2 * s * d_model * d_mlp * 2  # mlp
+        return f
+
+    return Unit(name, "attn", init, apply, lambda s: s, flops)
+
+
+def layer_norm_pool(name, d_model) -> Unit:
+    """Final LN + mean pool over tokens (ViT head input)."""
+
+    def init(_key, _in_shape):
+        return {
+            "bias": jnp.zeros((d_model,), jnp.float32),
+            "scale": jnp.ones((d_model,), jnp.float32),
+        }
+
+    def apply(p, x):
+        return jnp.mean(_ln(x, p["scale"], p["bias"]), axis=1)
+
+    return Unit(
+        name, "norm", init, apply,
+        lambda s: (d_model,), lambda s: 4 * math.prod(s),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model container
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """A splittable model: a named sequence of units plus TL metadata."""
+
+    name: str
+    units: Sequence[Unit]
+    input_shape: Shape  # (c, h, w), no batch dim
+    freeze_idx: int  # 1-based index of the last feature-extraction unit
+    num_classes: int
+
+    def __post_init__(self):
+        if not (1 <= self.freeze_idx <= len(self.units)):
+            raise ValueError(
+                f"{self.name}: freeze_idx {self.freeze_idx} out of range"
+            )
+        names = [u.name for u in self.units]
+        if len(set(names)) != len(names):
+            raise ValueError(f"{self.name}: duplicate unit names")
+
+    def unit_in_shapes(self) -> Sequence[Shape]:
+        """Input shape (batch-free) of every unit."""
+        shapes = [self.input_shape]
+        for u in self.units[:-1]:
+            shapes.append(u.out_shape(shapes[-1]))
+        return shapes
+
+    def unit_out_shapes(self) -> Sequence[Shape]:
+        ins = self.unit_in_shapes()
+        return [u.out_shape(s) for u, s in zip(self.units, ins)]
+
+    def init_params(self, seed: int = 0) -> Sequence[Params]:
+        key = jax.random.PRNGKey(seed)
+        keys = jax.random.split(key, len(self.units))
+        return [
+            u.init(k, s)
+            for u, k, s in zip(self.units, keys, self.unit_in_shapes())
+        ]
+
+    def forward(
+        self,
+        params: Sequence[Params],
+        x: jnp.ndarray,
+        start: int = 0,
+        end: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Run units ``start..end`` (0-based, end exclusive; None = all)."""
+        end = len(self.units) if end is None else end
+        for u, p in zip(self.units[start:end], params[start:end]):
+            x = u.apply(p, x)
+        return x

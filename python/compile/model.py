@@ -1,0 +1,159 @@
+"""Layer-2 lowering surface: per-unit forward fns and the training step.
+
+Everything the Rust runtime executes is defined here as a jittable function
+over *flat* parameter lists (jax dict pytrees traverse in sorted-key order,
+which fixes the artifact order `rust/src/runtime` relies on):
+
+- ``unit_fn(model, i)`` -- ``(x, *params_i) -> (y,)``: one splittable unit.
+  The COS executes units ``[0, split)``; the client executes
+  ``[split, freeze)`` plus the training tail.
+- ``train_grads_fn(model)`` -- one *micro-batch* of the training phase:
+  forward through the unfrozen tail + cross-entropy + backward.  Returns
+  summed gradients, the summed loss and the correct-prediction count so the
+  client can **accumulate over micro-batches**: summing per-micro-batch
+  gradient sums and dividing by the total sample count is bit-equivalent to
+  a full-batch mean-reduced SGD step, so one AOT artifact serves every
+  training batch size (HLO shapes are static).
+- ``apply_update_fn(model)`` -- the SGD update given accumulated sums.
+
+Padding: partial micro-batches are zero-padded; a 0/1 ``mask`` input zeroes
+padded samples' loss contributions, so gradients are unaffected.
+"""
+
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Model
+
+FlatFn = Callable[..., Tuple[jnp.ndarray, ...]]
+
+
+def param_treedefs(model: Model, seed: int = 0):
+    """Treedefs + leaf templates for every unit's parameter dict."""
+    params = model.init_params(seed)
+    out = []
+    for p in params:
+        leaves, treedef = jax.tree_util.tree_flatten(p)
+        out.append((treedef, leaves))
+    return out
+
+
+def unit_fn(model: Model, i: int) -> FlatFn:
+    """Forward function for unit ``i``: ``(x, *flat_params) -> (y,)``."""
+    u = model.units[i]
+    treedef = jax.tree_util.tree_structure(
+        u.init(jax.random.PRNGKey(0), model.unit_in_shapes()[i])
+    )
+
+    def fn(x, *flat):
+        params = jax.tree_util.tree_unflatten(treedef, list(flat))
+        return (u.apply(params, x),)
+
+    return fn
+
+
+def segment_fn(model: Model, start: int, end: int, seed: int = 0) -> FlatFn:
+    """Forward through units ``[start, end)``: ``(x, *all_flat) -> (y,)``.
+
+    Parameters of the covered units are concatenated in unit order.  Used by
+    tests to check that per-unit artifacts compose to the full forward, and
+    by ALL_IN_COS-style single-artifact execution.
+    """
+    defs = param_treedefs(model, seed)[start:end]
+    counts = [len(leaves) for _t, leaves in defs]
+
+    def fn(x, *flat):
+        off = 0
+        y = x
+        for (treedef, _), n, u in zip(defs, counts, model.units[start:end]):
+            p = jax.tree_util.tree_unflatten(treedef, list(flat[off:off + n]))
+            off += n
+            y = u.apply(p, y)
+        return (y,)
+
+    return fn
+
+
+def flatten_params(params: Sequence[dict]) -> List[jnp.ndarray]:
+    """Flatten a per-unit params list into one artifact-ordered leaf list."""
+    out: List[jnp.ndarray] = []
+    for p in params:
+        out.extend(jax.tree_util.tree_leaves(p))
+    return out
+
+
+def _tail_defs(model: Model, seed: int):
+    """Treedefs/leaf-counts of the trainable tail (units[freeze_idx:])."""
+    return param_treedefs(model, seed)[model.freeze_idx:]
+
+
+def tail_param_leaves(model: Model, params: Sequence[dict]) -> List[jnp.ndarray]:
+    return flatten_params(params[model.freeze_idx:])
+
+
+def _tail_forward(model: Model, defs, flat, x):
+    off = 0
+    y = x
+    for (treedef, leaves), u in zip(defs, model.units[model.freeze_idx:]):
+        n = len(leaves)
+        p = jax.tree_util.tree_unflatten(treedef, list(flat[off:off + n]))
+        off += n
+        y = u.apply(p, y)
+    return y
+
+
+def train_grads_fn(model: Model, seed: int = 0) -> FlatFn:
+    """One training micro-batch over the unfrozen tail.
+
+    Signature: ``(x_feat, labels, mask, *tail_params) ->
+    (*grad_sums, loss_sum, correct_count)`` where
+
+    - ``x_feat``: output of the freeze unit for the micro-batch,
+    - ``labels``: int32 class ids, ``mask``: 0/1 f32 validity mask,
+    - gradient outputs are *sums* over the micro-batch (not means).
+    """
+    defs = _tail_defs(model, seed)
+    ncls = model.num_classes
+
+    def loss(flat, x_feat, labels, mask):
+        logits = _tail_forward(model, defs, flat, x_feat)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, ncls, dtype=jnp.float32)
+        per_sample = -jnp.sum(onehot * logp, axis=-1) * mask
+        loss_sum = jnp.sum(per_sample)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32) * mask
+        )
+        return loss_sum, correct
+
+    def fn(x_feat, labels, mask, *flat):
+        (loss_sum, correct), grads = jax.value_and_grad(loss, has_aux=True)(
+            list(flat), x_feat, labels, mask
+        )
+        return (*grads, loss_sum, correct)
+
+    return fn
+
+
+def apply_update_fn(model: Model, seed: int = 0) -> FlatFn:
+    """SGD update from accumulated sums.
+
+    Signature: ``(lr, count, *tail_params, *grad_sums) -> (*new_params,)``
+    computing ``p - lr * g_sum / count`` (i.e. mean-reduced full-batch SGD).
+    """
+    defs = _tail_defs(model, seed)
+    n = sum(len(leaves) for _t, leaves in defs)
+
+    def fn(lr, count, *rest):
+        params, grads = rest[:n], rest[n:]
+        scale = lr / jnp.maximum(count, 1.0)
+        return tuple(p - scale * g for p, g in zip(params, grads))
+
+    return fn
+
+
+def tail_input_shape(model: Model) -> Tuple[int, ...]:
+    """Batch-free input shape of the training tail (freeze unit output)."""
+    return tuple(model.unit_out_shapes()[model.freeze_idx - 1])

@@ -1,0 +1,313 @@
+"""The seven Table-1 models as splittable unit sequences.
+
+Each builder matches the paper's Table 1 exactly in the two quantities the
+Hapi algorithms consume: the **number of splittable units** and the
+**default freeze index**:
+
+    model          freeze  units
+    AlexNet          17      22
+    ResNet18         11      14
+    ResNet50         21      22
+    VGG11            25      28
+    VGG19            36      45
+    DenseNet121      20      22
+    Transformer      17      19
+
+Two scales are exposed:
+
+- ``tiny``  -- 32x32x3 inputs, width-reduced channels, 10 classes.  These
+  are the models that are AOT-lowered and *executed* by the Rust runtime on
+  the CPU PJRT client.
+- ``paper`` -- 224x224x3 inputs with the original channel widths and 1000
+  classes.  Never executed; used only for analytic shape/memory metadata
+  (``jax.eval_shape`` + the Unit shape math) backing the size/memory
+  figures (Figs 2, 4, 7, 15).
+
+The topology property the splitting algorithm exploits -- per-unit output
+sizes that decay non-monotonically, with early units already dipping below
+the application input size -- is preserved at both scales because it is a
+function of the layer structure, not of absolute width.
+"""
+
+from typing import Callable, Dict, List
+
+from . import layers as L
+from .layers import Model, Unit
+
+_TINY, _PAPER = "tiny", "paper"
+
+
+def _scaled(scale: str, tiny: int, paper: int) -> int:
+    if scale == _TINY:
+        return tiny
+    if scale == _PAPER:
+        return paper
+    raise ValueError(f"unknown scale {scale!r}")
+
+
+def _classes(scale: str) -> int:
+    return _scaled(scale, 10, 1000)
+
+
+def _input_shape(scale: str):
+    return _scaled(scale, 32, 224)
+
+
+# ---------------------------------------------------------------------------
+# AlexNet: 22 units, freeze 17
+# ---------------------------------------------------------------------------
+
+
+def alexnet(scale: str = _TINY) -> Model:
+    side = _input_shape(scale)
+    w = lambda c: _scaled(scale, max(c // 8, 8), c)  # noqa: E731
+    if scale == _PAPER:
+        first = L.conv("conv1", w(64), 11, stride=4, padding=2)
+    else:
+        first = L.conv("conv1", w(64), 3, stride=1, padding=1)
+    units: List[Unit] = [
+        first,
+        L.relu("relu1"),
+        L.max_pool("pool1", 3 if scale == _PAPER else 2, stride=2),
+        L.conv("conv2", w(192), 5 if scale == _PAPER else 3,
+               padding=2 if scale == _PAPER else 1),
+        L.relu("relu2"),
+        L.max_pool("pool2", 3 if scale == _PAPER else 2, stride=2),
+        L.conv("conv3", w(384), 3, padding=1),
+        L.relu("relu3"),
+        L.conv("conv4", w(256), 3, padding=1),
+        L.relu("relu4"),
+        L.conv("conv5", w(256), 3, padding=1),
+        L.relu("relu5"),
+        L.max_pool("pool5", 3 if scale == _PAPER else 2, stride=2),
+        L.avg_pool_to("avgpool", (6, 6) if scale == _PAPER else (2, 2)),
+        L.flatten("flatten"),
+        L.dropout("drop1"),
+        L.fc("fc6", w(4096), activation="relu"),  # unit 17 = freeze index
+        L.dropout("drop2"),
+        L.fc("fc7", w(4096)),
+        L.relu("relu7"),
+        L.dropout("drop3"),
+        L.fc("fc8", _classes(scale)),
+    ]
+    return Model("alexnet", units, (3, side, side), 17, _classes(scale))
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18: 14 units, freeze 11 / ResNet-50: 22 units, freeze 21
+# ---------------------------------------------------------------------------
+
+
+def _resnet_stem(scale: str, c1: int) -> List[Unit]:
+    if scale == _PAPER:
+        return [
+            L.conv("conv1", c1, 7, stride=2, padding=3),
+            L.batch_norm("bn1"),
+            L.relu("relu1"),
+            L.max_pool("maxpool", 3, stride=2, padding=1),
+        ]
+    return [
+        L.conv("conv1", c1, 3, stride=1, padding=1),
+        L.batch_norm("bn1"),
+        L.relu("relu1"),
+        L.max_pool("maxpool", 2, stride=2),
+    ]
+
+
+def resnet18(scale: str = _TINY) -> Model:
+    side = _input_shape(scale)
+    w = lambda c: _scaled(scale, max(c // 8, 8), c)  # noqa: E731
+    units = _resnet_stem(scale, w(64))
+    stages = [(w(64), 1), (w(64), 1), (w(128), 2), (w(128), 1),
+              (w(256), 2), (w(256), 1), (w(512), 2), (w(512), 1)]
+    for i, (c, s) in enumerate(stages):
+        units.append(L.basic_block(f"block{i + 1}", c, stride=s))
+    units += [L.global_avg_pool("avgpool"), L.fc("fc", _classes(scale))]
+    return Model("resnet18", units, (3, side, side), 11, _classes(scale))
+
+
+def resnet50(scale: str = _TINY) -> Model:
+    side = _input_shape(scale)
+    w = lambda c: _scaled(scale, max(c // 16, 4), c)  # noqa: E731
+    units = _resnet_stem(scale, w(64))
+    plan = [(w(64), 3, 1), (w(128), 4, 2), (w(256), 6, 2), (w(512), 3, 2)]
+    i = 0
+    for c_mid, n, first_stride in plan:
+        for j in range(n):
+            i += 1
+            units.append(
+                L.bottleneck(
+                    f"block{i}", c_mid, stride=first_stride if j == 0 else 1
+                )
+            )
+    units += [L.global_avg_pool("avgpool"), L.fc("fc", _classes(scale))]
+    return Model("resnet50", units, (3, side, side), 21, _classes(scale))
+
+
+# ---------------------------------------------------------------------------
+# VGG-11: 28 units, freeze 25 / VGG-19: 45 units, freeze 36
+# ---------------------------------------------------------------------------
+
+
+def _vgg(scale: str, cfg, name: str, freeze: int, n_classifier_units) -> Model:
+    side = _input_shape(scale)
+    w = lambda c: _scaled(scale, max(c // 8, 8), c)  # noqa: E731
+    units: List[Unit] = []
+    ci, pi = 0, 0
+    for item in cfg:
+        if item == "M":
+            pi += 1
+            units.append(L.max_pool(f"pool{pi}", 2, stride=2))
+        else:
+            ci += 1
+            units.append(L.conv(f"conv{ci}", w(item), 3, padding=1))
+            units.append(L.relu(f"relu{ci}"))
+    units.append(
+        L.avg_pool_to("avgpool", (7, 7) if scale == _PAPER else (1, 1))
+    )
+    units.append(L.flatten("flatten"))
+    units += n_classifier_units(w)
+    return Model(name, units, (3, side, side), freeze, _classes(scale))
+
+
+def vgg11(scale: str = _TINY) -> Model:
+    cfg = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+
+    def classifier(w):
+        return [
+            L.fc("fc1", w(4096), activation="relu"),
+            L.relu("relu_fc1"),
+            L.fc("fc2", w(4096), activation="relu"),
+            L.relu("relu_fc2"),
+            L.fc("fc3", _classes(scale)),
+        ]
+
+    return _vgg(scale, cfg, "vgg11", 25, classifier)
+
+
+def vgg19(scale: str = _TINY) -> Model:
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+           512, 512, 512, 512, "M", 512, 512, 512, 512, "M"]
+
+    def classifier(w):
+        return [
+            L.fc("fc1", w(4096), activation="relu"),
+            L.relu("relu_fc1"),
+            L.dropout("drop1"),
+            L.fc("fc2", w(4096), activation="relu"),
+            L.relu("relu_fc2"),
+            L.fc("fc3", _classes(scale)),
+        ]
+
+    return _vgg(scale, cfg, "vgg19", 36, classifier)
+
+
+# ---------------------------------------------------------------------------
+# DenseNet-121: 22 units, freeze 20
+# ---------------------------------------------------------------------------
+
+
+def densenet121(scale: str = _TINY) -> Model:
+    side = _input_shape(scale)
+    growth = _scaled(scale, 8, 32)
+    c0 = _scaled(scale, 16, 64)
+    # DenseNet-121 block sizes (6, 12, 24, 16), split at block boundaries
+    # into (2, 2, 4, 3) segments to expose Table 1's 22 units.
+    segs = {
+        "db1": _split_layers(_scaled(scale, 4, 6), 2),
+        "db2": _split_layers(_scaled(scale, 6, 12), 2),
+        "db3": _split_layers(_scaled(scale, 8, 24), 4),
+        "db4": _split_layers(_scaled(scale, 6, 16), 3),
+    }
+    if scale == _PAPER:
+        units: List[Unit] = [
+            L.conv("conv0", c0, 7, stride=2, padding=3),
+            L.batch_norm("bn0"),
+            L.relu("relu0"),
+            L.max_pool("pool0", 3, stride=2, padding=1),
+        ]
+    else:
+        units = [
+            L.conv("conv0", c0, 3, stride=1, padding=1),
+            L.batch_norm("bn0"),
+            L.relu("relu0"),
+            L.max_pool("pool0", 2, stride=2),
+        ]
+    c = c0
+    for bi, key in enumerate(["db1", "db2", "db3", "db4"], start=1):
+        for si, n in enumerate(segs[key], start=1):
+            units.append(L.dense_segment(f"{key}_seg{si}", n, growth))
+            c += n * growth
+        if bi < 4:
+            c = c // 2
+            units.append(L.transition(f"trans{bi}", c))
+    units += [
+        L.batch_norm("norm_final"),
+        L.relu("relu_final"),
+        L.global_avg_pool("avgpool"),
+        L.fc("fc", _classes(scale)),
+    ]
+    return Model("densenet121", units, (3, side, side), 20, _classes(scale))
+
+
+def _split_layers(total: int, parts: int) -> List[int]:
+    base, rem = divmod(total, parts)
+    return [base + (1 if i < rem else 0) for i in range(parts)]
+
+
+# ---------------------------------------------------------------------------
+# Transformer (ViT-style): 19 units, freeze 17
+# ---------------------------------------------------------------------------
+
+
+def transformer(scale: str = _TINY) -> Model:
+    # d_model is chosen strictly below patch*patch*3 so the token stream is
+    # *smaller* than the pixel stream: with d_model == patch^2*3 (ViT-Base's
+    # 768 at patch 16) every encoder output is exactly the input size and no
+    # early split candidate exists (Fig 2's insight would be vacuous).
+    side = _input_shape(scale)
+    patch = _scaled(scale, 4, 16)
+    d_model = _scaled(scale, 40, 512)
+    n_heads = _scaled(scale, 4, 8)
+    d_mlp = _scaled(scale, 128, 2048)
+    units: List[Unit] = [L.patch_embed("patch_embed", patch, d_model)]
+    for i in range(16):
+        units.append(L.encoder_block(f"enc{i + 1:02d}", d_model, n_heads, d_mlp))
+    units += [
+        L.layer_norm_pool("ln_pool", d_model),
+        L.fc("head", _classes(scale)),
+    ]
+    return Model("transformer", units, (3, side, side), 17, _classes(scale))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+REGISTRY: Dict[str, Callable[[str], Model]] = {
+    "alexnet": alexnet,
+    "resnet18": resnet18,
+    "resnet50": resnet50,
+    "vgg11": vgg11,
+    "vgg19": vgg19,
+    "densenet121": densenet121,
+    "transformer": transformer,
+}
+
+# Paper Table 1: model -> (freeze index, number of splittable units).
+TABLE1 = {
+    "alexnet": (17, 22),
+    "resnet18": (11, 14),
+    "resnet50": (21, 22),
+    "vgg11": (25, 28),
+    "vgg19": (36, 45),
+    "densenet121": (20, 22),
+    "transformer": (17, 19),
+}
+
+
+def build(name: str, scale: str = _TINY) -> Model:
+    """Build a registered model at the given scale."""
+    if name not in REGISTRY:
+        raise KeyError(f"unknown model {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name](scale)

@@ -1,0 +1,46 @@
+""".tnsr — the trivially-parseable tensor interchange format.
+
+Parameters flow from the Python compile path to the Rust runtime without
+numpy/pickle on the Rust side.  Layout (little-endian):
+
+    magic   4 bytes  b"TNSR"
+    dtype   u8       0 = f32, 1 = i32
+    rank    u8
+    dims    rank x u32
+    data    product(dims) x itemsize
+
+The Rust reader lives in ``rust/src/runtime/tensor.rs``; keep the two in
+lockstep.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TNSR"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensor(path, arr) -> None:
+    # NB: np.ascontiguousarray would promote 0-d scalars to 1-d; tobytes()
+    # handles arbitrary strides, so plain asarray preserves rank.
+    arr = np.asarray(arr)
+    if arr.dtype not in _CODES:
+        raise ValueError(f"unsupported dtype {arr.dtype}")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.tobytes())
+
+
+def read_tensor(path) -> np.ndarray:
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        code, rank = struct.unpack("<BB", f.read(2))
+        dims = struct.unpack(f"<{rank}I", f.read(4 * rank))
+        dtype = _DTYPES[code]
+        data = np.frombuffer(f.read(), dtype=dtype)
+        return data.reshape(dims)

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# Tests run from python/ (see Makefile) or the repo root; make both work.
+_HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+ARTIFACTS = os.path.join(os.path.dirname(_HERE), "artifacts")
+
+# Persistent XLA compilation cache: the suite traces/compiles many small
+# Pallas-interpret programs; caching makes repeat runs dramatically faster
+# on the single-core CI box.
+import jax  # noqa: E402
+
+jax.config.update("jax_compilation_cache_dir", "/tmp/hapi_jax_cache")
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)

@@ -1,0 +1,134 @@
+"""Artifact and profile validation: the Python->Rust interchange contract.
+
+Validates the JSON profiles, the .tnsr parameter dumps, and the HLO text
+files that ``make artifacts`` produced.  Skipped when artifacts are absent
+(run ``make artifacts`` first).
+"""
+
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import models
+from compile.tensorio import read_tensor, write_tensor
+from .conftest import ARTIFACTS
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, ".stamp")),
+    reason="run `make artifacts` first",
+)
+
+
+def _profile(name):
+    with open(os.path.join(ARTIFACTS, "profiles", f"{name}.json")) as f:
+        return json.load(f)
+
+
+class TestTensorIO:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        shape=st.lists(st.integers(1, 7), min_size=0, max_size=4),
+        dtype=st.sampled_from([np.float32, np.int32]),
+        seed=st.integers(0, 1000),
+    )
+    def test_roundtrip(self, tmp_path_factory, shape, dtype, seed):
+        path = str(tmp_path_factory.mktemp("t") / "x.tnsr")
+        rng = np.random.default_rng(seed)
+        arr = (rng.normal(size=shape) * 100).astype(dtype)
+        write_tensor(path, arr)
+        back = read_tensor(path)
+        assert back.dtype == arr.dtype and back.shape == arr.shape
+        np.testing.assert_array_equal(back, arr)
+
+    def test_rejects_bad_magic(self, tmp_path):
+        p = tmp_path / "bad.tnsr"
+        p.write_bytes(b"NOPE" + b"\x00" * 16)
+        with pytest.raises(ValueError):
+            read_tensor(str(p))
+
+    def test_rejects_unsupported_dtype(self, tmp_path):
+        with pytest.raises(ValueError):
+            write_tensor(str(tmp_path / "x.tnsr"), np.zeros((2,), np.float64))
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", sorted(models.TABLE1))
+class TestProfiles:
+    def test_matches_table1(self, name):
+        p = _profile(name)
+        freeze, units = models.TABLE1[name]
+        assert p["freeze_idx"] == freeze == p["table1"]["freeze"]
+        assert p["num_units"] == units == p["table1"]["units"]
+        for scale in ("tiny", "paper"):
+            assert len(p["scales"][scale]["units"]) == units
+
+    def test_unit_metadata_consistent(self, name):
+        p = _profile(name)
+        m = models.build(name, "tiny")
+        outs = m.unit_out_shapes()
+        for i, u in enumerate(p["scales"]["tiny"]["units"]):
+            assert u["index"] == i + 1
+            assert u["name"] == m.units[i].name
+            assert u["kind"] == m.units[i].kind
+            assert tuple(u["out_shape"]) == tuple(outs[i])
+            assert u["out_bytes_per_sample"] == 4 * math.prod(outs[i])
+            assert u["param_bytes"] == 4 * u["param_count"]
+
+    def test_hlo_files_exist_and_parse(self, name):
+        p = _profile(name)
+        mdir = os.path.join(ARTIFACTS, name)
+        files = [u["file"] for u in p["artifacts"]["units"]]
+        files += [p["artifacts"]["train_grads"], p["artifacts"]["apply_update"]]
+        for f in files:
+            path = os.path.join(mdir, f)
+            assert os.path.exists(path), path
+            with open(path) as fh:
+                head = fh.read(64)
+            assert head.startswith("HloModule"), path
+
+    def test_params_match_manifest_and_model(self, name):
+        p = _profile(name)
+        m = models.build(name, "tiny")
+        params = m.init_params(p["param_seed"])
+        import jax
+
+        pdir = os.path.join(ARTIFACTS, name, p["params_dir"])
+        for entry, unit_params in zip(p["params"], params):
+            leaves = jax.tree_util.tree_leaves(unit_params)
+            assert len(entry["files"]) == len(leaves)
+            for fname, leaf in zip(entry["files"], leaves):
+                arr = read_tensor(os.path.join(pdir, fname))
+                assert arr.shape == leaf.shape
+                np.testing.assert_allclose(arr, leaf, rtol=1e-6, atol=1e-7)
+
+    def test_early_split_candidates_exist_at_paper_scale(self, name):
+        """Fig 2's key insight must hold in the exported metadata."""
+        p = _profile(name)
+        scale = p["scales"]["paper"]
+        inp = scale["input_bytes_per_sample"]
+        early = [
+            u["out_bytes_per_sample"]
+            for u in scale["units"][: p["freeze_idx"]]
+        ]
+        assert min(early) < inp
+
+
+@needs_artifacts
+def test_datasets_json():
+    with open(os.path.join(ARTIFACTS, "profiles", "datasets.json")) as f:
+        d = json.load(f)
+    assert set(d) == {"imagenet", "inatura", "plantleaves"}
+    for spec in d.values():
+        for scale in ("tiny", "paper"):
+            s = spec[scale]
+            assert s["bytes_per_sample"] == 4 * 3 * s["side"] ** 2
+
+
+@needs_artifacts
+def test_micro_batch_consistent():
+    mbs = {_profile(n)["micro_batch"] for n in models.TABLE1}
+    assert len(mbs) == 1

@@ -1,0 +1,168 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, block sizes and fused epilogues; every
+case asserts allclose against ``kernels/ref.py``.  This is the core
+correctness signal for the compute hot-spot that every AOT artifact embeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, linear, matmul, mha
+from compile.kernels import ref
+
+# Example counts are tuned for the single-core CI box: every distinct shape
+# traces + compiles a Pallas-interpret program, which dominates runtime.
+SETTINGS = dict(max_examples=8, deadline=None)
+
+dims = st.integers(min_value=1, max_value=97)
+small = st.integers(min_value=1, max_value=24)
+acts = st.sampled_from([None, "relu", "gelu", "tanh"])
+dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(*dtypes_used):
+    if jnp.bfloat16 in dtypes_used:
+        return dict(rtol=5e-2, atol=5e-2)
+    return dict(rtol=2e-4, atol=2e-4)
+
+
+class TestMatmul:
+    @settings(**SETTINGS)
+    @given(m=dims, k=dims, n=dims, act=acts, dtype=dtypes, bias=st.booleans())
+    def test_matches_ref(self, m, k, n, act, dtype, bias):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(m * 7 + n), 3)
+        x = _rand(k1, (m, k), dtype)
+        w = _rand(k2, (k, n), dtype)
+        b = _rand(k3, (n,), dtype) if bias else None
+        got = matmul(x, w, b, activation=act)
+        want = ref.matmul_ref(x, w, b, activation=act)
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    @settings(**SETTINGS)
+    @given(
+        m=dims, k=dims, n=dims,
+        bm=st.sampled_from([8, 16, 32, 128]),
+        bn=st.sampled_from([8, 16, 32, 128]),
+        bk=st.sampled_from([8, 16, 32, 128]),
+    )
+    def test_block_shape_invariance(self, m, k, n, bm, bn, bk):
+        """Tiling is an implementation detail: results match at any block."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m + n * 131), 2)
+        x = _rand(k1, (m, k), jnp.float32)
+        w = _rand(k2, (k, n), jnp.float32)
+        got = matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), **_tol())
+
+    @settings(**SETTINGS)
+    @given(m=small, k=small, n=small, act=acts)
+    def test_gradients_match_ref(self, m, k, n, act):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(m * 31 + n), 3)
+        x = _rand(k1, (m, k), jnp.float32)
+        w = _rand(k2, (k, n), jnp.float32)
+        b = _rand(k3, (n,), jnp.float32)
+
+        def f(fn):
+            return lambda *a: jnp.sum(fn(*a, activation=act) ** 2)
+
+        got = jax.grad(f(matmul), (0, 1, 2))(x, w, b)
+        want = jax.grad(f(ref.matmul_ref), (0, 1, 2))(x, w, b)
+        for g, r in zip(got, want):
+            np.testing.assert_allclose(g, r, rtol=1e-3, atol=1e-3)
+
+    def test_rejects_bad_shapes(self):
+        x = jnp.zeros((3, 4))
+        with pytest.raises(ValueError):
+            matmul(x, jnp.zeros((5, 2)))
+        with pytest.raises(ValueError):
+            matmul(x, jnp.zeros((4, 2)), activation="swish")
+
+    @settings(**SETTINGS)
+    @given(b=small, s=small, n=small)
+    def test_linear_leading_axes(self, b, s, n):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(b * s + n), 2)
+        x = _rand(k1, (b, s, 13), jnp.float32)
+        w = _rand(k2, (13, n), jnp.float32)
+        bias = jnp.zeros((n,), jnp.float32)
+        got = linear(x, w, bias, activation="relu")
+        want = ref.linear_ref(x, w, bias, activation="relu")
+        assert got.shape == (b, s, n)
+        np.testing.assert_allclose(got, want, **_tol())
+
+
+class TestConv2d:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(1, 4),
+        c_in=st.integers(1, 8),
+        c_out=st.integers(1, 12),
+        hw=st.integers(4, 20),
+        k=st.sampled_from([1, 3, 5]),
+        stride=st.sampled_from([1, 2]),
+        act=acts,
+    )
+    def test_matches_ref(self, n, c_in, c_out, hw, k, stride, act):
+        pad = k // 2
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(hw * 17 + k), 3)
+        x = _rand(k1, (n, c_in, hw, hw), jnp.float32)
+        w = _rand(k2, (c_out, c_in, k, k), jnp.float32)
+        b = _rand(k3, (c_out,), jnp.float32)
+        got = conv2d(x, w, b, stride=stride, padding=pad, activation=act)
+        want = ref.conv2d_ref(x, w, b, stride=stride, padding=pad, activation=act)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_channel_mismatch(self):
+        with pytest.raises(ValueError):
+            conv2d(jnp.zeros((1, 3, 8, 8)), jnp.zeros((4, 2, 3, 3)))
+
+    @settings(**SETTINGS)
+    @given(hw=st.integers(4, 16), c=st.integers(1, 6))
+    def test_gradients_flow(self, hw, c):
+        """conv2d (via the matmul VJP) is differentiable end to end."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(hw + c), 2)
+        x = _rand(k1, (2, c, hw, hw), jnp.float32)
+        w = _rand(k2, (4, c, 3, 3), jnp.float32)
+
+        def f(conv):
+            return lambda x, w: jnp.sum(conv(x, w, padding=1) ** 2)
+
+        gx, gw = jax.grad(f(conv2d), (0, 1))(x, w)
+        rx, rw = jax.grad(f(ref.conv2d_ref), (0, 1))(x, w)
+        np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-3)
+
+
+class TestAttention:
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 3),
+        h=st.sampled_from([1, 2, 4]),
+        s=st.integers(1, 32),
+        d=st.sampled_from([4, 8, 16]),
+    )
+    def test_matches_ref(self, b, h, s, d):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(s * 3 + d), 3)
+        q = _rand(k1, (b, h, s, d), jnp.float32)
+        k = _rand(k2, (b, h, s, d), jnp.float32)
+        v = _rand(k3, (b, h, s, d), jnp.float32)
+        np.testing.assert_allclose(
+            mha(q, k, v), ref.mha_ref(q, k, v), rtol=1e-4, atol=1e-4
+        )
+
+    def test_softmax_stability(self):
+        """Large logits must not overflow (max-subtracted softmax)."""
+        q = jnp.full((1, 1, 4, 8), 50.0, jnp.float32)
+        out = mha(q, q, q)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_rejects_bad_rank(self):
+        with pytest.raises(ValueError):
+            mha(jnp.zeros((2, 3, 4)), jnp.zeros((2, 3, 4)), jnp.zeros((2, 3, 4)))

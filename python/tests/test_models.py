@@ -1,0 +1,138 @@
+"""Layer-2 model structure and composition tests.
+
+Checks the seven Table-1 models expose exactly the paper's splittable-unit
+counts and freeze indices, that analytic shape/FLOPs metadata agrees with
+real execution, and that per-unit execution composes to the full forward
+(the property that makes arbitrary split indices safe).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import models
+
+ALL = sorted(models.TABLE1)
+
+
+@pytest.fixture(scope="session")
+def built():
+    out = {}
+    for name in ALL:
+        m = models.build(name, "tiny")
+        out[name] = (m, m.init_params(7))
+    return out
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_table1_counts(name):
+    freeze, units = models.TABLE1[name]
+    for scale in ("tiny", "paper"):
+        m = models.build(name, scale)
+        assert len(m.units) == units, f"{name}@{scale}"
+        assert m.freeze_idx == freeze, f"{name}@{scale}"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_analytic_shapes_match_execution(name, built):
+    m, params = built[name]
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, *m.input_shape), jnp.float32)
+    outs = m.unit_out_shapes()
+    y = x
+    for i, (u, p) in enumerate(zip(m.units, params)):
+        y = u.apply(p, y)
+        assert y.shape == (2, *outs[i]), (name, u.name)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_split_composition(name, built):
+    """forward(0..k) then forward(k..end) == forward(0..end)."""
+    m, params = built[name]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *m.input_shape), jnp.float32)
+    full = m.forward(params, x)
+    n = len(m.units)
+    for k in {m.freeze_idx, n // 3}:
+        mid = m.forward(params, x, 0, k)
+        got = m.forward(params, mid, k, n)
+        np.testing.assert_allclose(got, full, rtol=1e-5, atol=1e-5)
+
+
+# Subset: chunking invariance is structural; three model families cover the
+# conv, residual and attention paths without re-compiling every model at a
+# second batch size (slow on the 1-core box).
+@pytest.mark.parametrize("name", ["alexnet", "resnet18", "transformer"])
+def test_chunked_feature_extraction_is_exact(name, built):
+    """The §5.1 decoupling insight: frozen feature extraction is chunking-
+    invariant, so any COS batch size yields identical training inputs."""
+    m, params = built[name]
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, *m.input_shape), jnp.float32)
+    k = m.freeze_idx
+    whole = m.forward(params, x, 0, k)
+    chunks = jnp.concatenate(
+        [m.forward(params, x[i : i + 2], 0, k) for i in range(0, 4, 2)]
+    )
+    # Equivalence is at float-reassociation level: XLA fuses/pads the
+    # Pallas tiles differently per batch shape, so ~1e-5 drift across a
+    # dozen conv layers is expected and harmless to the learning
+    # trajectory (weights are frozen; the training batch never changes).
+    np.testing.assert_allclose(chunks, whole, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["alexnet", "densenet121", "transformer"])
+def test_unit_fn_matches_direct_apply(name, built):
+    """The AOT-lowered per-unit functions compute exactly Unit.apply."""
+    m, params = built[name]
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, *m.input_shape), jnp.float32)
+    in_shapes = m.unit_in_shapes()
+    y = x
+    for i in range(min(4, len(m.units))):
+        fn = M.unit_fn(m, i)
+        flat = jax.tree_util.tree_leaves(params[i])
+        (got,) = fn(y, *flat)
+        want = m.units[i].apply(params[i], y)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+        assert got.shape[1:] == tuple(m.unit_out_shapes()[i])
+        y = want
+
+
+def test_segment_fn_composes(built):
+    m, params = built["resnet18"]
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, *m.input_shape), jnp.float32)
+    fn = M.segment_fn(m, 0, len(m.units), seed=7)
+    flat = M.flatten_params(params)
+    (got,) = fn(x, *flat)
+    np.testing.assert_allclose(got, m.forward(params, x), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_output_sizes_nonmonotone_decay(name):
+    """The §3.1 insight the splitting algorithm relies on: at paper scale
+    there exist units *before the freeze index* whose output is smaller
+    than the application input."""
+    m = models.build(name, "paper")
+    inp = 4 * int(np.prod(m.input_shape))
+    outs = [4 * int(np.prod(s)) for s in m.unit_out_shapes()]
+    early = outs[: m.freeze_idx]
+    assert min(early) < inp, f"{name}: no early split candidate"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_flops_positive_and_conv_heavy(name):
+    m = models.build(name, "paper")
+    ins = m.unit_in_shapes()
+    flops = [u.flops(s) for u, s in zip(m.units, ins)]
+    assert all(f >= 0 for f in flops)
+    dense = [
+        f for u, f in zip(m.units, flops)
+        if u.kind in ("conv", "block", "fc", "attn", "embed")
+    ]
+    assert sum(dense) > 0.9 * sum(flops)
+
+
+def test_build_rejects_unknown():
+    with pytest.raises(KeyError):
+        models.build("lenet")
+    with pytest.raises(ValueError):
+        models.build("alexnet", "huge")

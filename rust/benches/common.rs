@@ -1,0 +1,31 @@
+//! Shared scaffolding for the figure/table benches.
+//!
+//! Every bench regenerates one table or figure of the paper's evaluation
+//! (§3, §7) at the 1:10 tiny scale (DESIGN.md §2) and prints the same
+//! rows/series the paper reports.  Absolute numbers differ (simulated
+//! substrate); the *shape* — who wins, by what factor, where crossovers
+//! fall — is the reproduction target recorded in EXPERIMENTS.md.
+
+use hapi::config::HapiConfig;
+
+/// Default bench config: discovered artifacts + paper-mapped knobs.
+pub fn bench_config() -> HapiConfig {
+    let mut cfg = HapiConfig::default();
+    cfg.artifacts_dir = HapiConfig::discover_artifacts()
+        .expect("run `make artifacts` before cargo bench");
+    cfg
+}
+
+/// The four models of the §3 measurement study.
+#[allow(dead_code)] // each bench uses the subset it needs
+pub const STUDY_MODELS: [&str; 4] =
+    ["alexnet", "resnet18", "vgg11", "densenet121"];
+
+/// Scale helper: the paper's batch knob divided by 10 (DESIGN.md §2).
+#[allow(dead_code)]
+pub fn scaled(paper_value: usize) -> usize {
+    (paper_value / 10).max(1)
+}
+
+#[allow(dead_code)]
+fn main() {}

@@ -1,0 +1,57 @@
+//! Fig 2 — per-layer output sizes vs application input sizes.
+//!
+//! Paper: bars = per-unit output size at batch 1; horizontal lines =
+//! per-sample input size of ImageNet / iNatura / PlantLeaves.  The key
+//! takeaway (early units already dip below the input size) must hold.
+
+#[path = "common.rs"]
+mod common;
+
+use hapi::config::Scale;
+use hapi::metrics::Table;
+use hapi::model::{profiles::load_datasets, ModelRegistry};
+use hapi::profiler::AppProfile;
+use hapi::util::fmt_bytes;
+
+fn main() {
+    let cfg = common::bench_config();
+    let reg = ModelRegistry::load_dir(cfg.profiles_dir()).unwrap();
+    let datasets = load_datasets(
+        cfg.profiles_dir().join("datasets.json"),
+        Scale::Paper,
+    )
+    .unwrap();
+
+    println!("== Fig 2: per-layer output sizes (paper-scale shapes) ==\n");
+    let mut lines = String::from("dataset input sizes per sample: ");
+    for d in &datasets {
+        lines.push_str(&format!("{}={}  ", d.name, fmt_bytes(d.bytes_per_sample)));
+    }
+    println!("{lines}\n");
+
+    for name in common::STUDY_MODELS {
+        let app = AppProfile::new(reg.get(name).unwrap(), Scale::Paper);
+        let mut t = Table::new(
+            &format!("{name} (input {}/sample)", fmt_bytes(app.input_bytes())),
+            &["unit", "name", "output/sample", "< input?"],
+        );
+        for i in 1..=app.num_units() {
+            let out = app.out_bytes(i);
+            t.row(vec![
+                i.to_string(),
+                app.meta().units[i - 1].name.clone(),
+                fmt_bytes(out),
+                if out < app.input_bytes() { "yes" } else { "" }.into(),
+            ]);
+        }
+        t.print();
+        let first_candidate = (1..=app.freeze_idx())
+            .find(|&i| app.out_bytes(i) < app.input_bytes());
+        println!(
+            "earliest split candidate: unit {:?} (freeze {})\n",
+            first_candidate,
+            app.freeze_idx()
+        );
+        assert!(first_candidate.is_some(), "{name}: Fig 2 insight violated");
+    }
+}

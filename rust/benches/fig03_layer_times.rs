@@ -1,0 +1,86 @@
+//! Fig 3 — per-layer forward computation time, CPU vs GPU.
+//!
+//! Real execution per unit (PJRT CPU) gives the GPU-tier line (native);
+//! the CPU-tier line applies the per-kind device model (DESIGN.md §2).
+//! Expected shape: early conv units dominate; the epilogue units cost
+//! nearly the same on both tiers (the weak-client enabler).
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hapi::metrics::table::fnum;
+use hapi::metrics::Table;
+use hapi::model::ModelRegistry;
+use hapi::runtime::{DeviceKind, Engine, ModelArtifacts, Tensor};
+use hapi::util::rng::Rng;
+
+fn main() {
+    let cfg = common::bench_config();
+    let engine = Engine::cpu().unwrap();
+    let reg = ModelRegistry::load_dir(cfg.profiles_dir()).unwrap();
+    let batch = common::scaled(200);
+
+    println!("== Fig 3: per-unit forward time at batch {batch} ==\n");
+    for name in common::STUDY_MODELS {
+        let profile = reg.get(name).unwrap();
+        let arts = Arc::new(
+            ModelArtifacts::load(
+                engine.clone(),
+                profile.clone(),
+                cfg.model_dir(name),
+            )
+            .unwrap(),
+        );
+        let mut rng = Rng::new(7);
+        let elems: usize =
+            profile.tiny.input_shape.iter().product::<usize>() * batch;
+        let data: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
+        let mut dims = vec![batch];
+        dims.extend(&profile.tiny.input_shape);
+        let x = Tensor::from_f32(dims, &data);
+
+        // Warm (compile) then measure.
+        arts.warm().unwrap();
+        let mut times: Vec<Duration> = Vec::new();
+        arts.forward_segment(
+            &x,
+            1,
+            profile.num_units,
+            DeviceKind::Gpu,
+            Some(&mut times),
+        )
+        .unwrap();
+
+        let mut t = Table::new(
+            &format!("{name}"),
+            &["unit", "name", "kind", "GPU ms", "CPU ms (modeled)"],
+        );
+        for i in 1..=profile.num_units {
+            let u = &profile.tiny.units[i - 1];
+            let gpu_ms = times[i].as_secs_f64() * 1e3;
+            let cpu_ms = gpu_ms * DeviceKind::Cpu.slowdown(u.kind);
+            t.row(vec![
+                i.to_string(),
+                u.name.clone(),
+                format!("{:?}", u.kind),
+                fnum(gpu_ms),
+                fnum(cpu_ms),
+            ]);
+        }
+        t.print();
+
+        // Shape checks: conv-ish prefix dominates; epilogue CPU≈GPU.
+        let dense_prefix: f64 = (1..=profile.freeze_idx.min(8))
+            .map(|i| times[i].as_secs_f64())
+            .sum();
+        let total: f64 =
+            (1..=profile.num_units).map(|i| times[i].as_secs_f64()).sum();
+        println!(
+            "first-8-unit share of total: {:.0}%\n",
+            100.0 * dense_prefix / total
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig 4 — per-layer maximum device memory (forward), plus the
+//! aggregated backward-phase memory from the freeze index to the end.
+//!
+//! Expected shape: early units need the most memory; batch growth
+//! inflates early units far faster; at large batches the early units
+//! exceed the whole backward phase — the motivation for COS-side batch
+//! adaptation.
+
+#[path = "common.rs"]
+mod common;
+
+use hapi::config::Scale;
+use hapi::metrics::Table;
+use hapi::model::ModelRegistry;
+use hapi::profiler::AppProfile;
+use hapi::util::fmt_bytes;
+
+fn main() {
+    let cfg = common::bench_config();
+    let reg = ModelRegistry::load_dir(cfg.profiles_dir()).unwrap();
+    let batches = [common::scaled(200), common::scaled(500), common::scaled(1000)];
+
+    println!("== Fig 4: per-unit forward memory + backward aggregate ==\n");
+    for name in common::STUDY_MODELS {
+        let app = AppProfile::new(reg.get(name).unwrap(), Scale::Tiny);
+        let mem = app.memory();
+        let mut t = Table::new(
+            &format!("{name} (freeze {})", app.freeze_idx()),
+            &[
+                "unit",
+                &format!("fwd b={}", batches[0]),
+                &format!("fwd b={}", batches[1]),
+                &format!("fwd b={}", batches[2]),
+            ],
+        );
+        for i in 1..=app.num_units() {
+            t.row(vec![
+                format!("{i} {}", app.meta().units[i - 1].name),
+                fmt_bytes(mem.unit_forward_bytes(i, batches[0])),
+                fmt_bytes(mem.unit_forward_bytes(i, batches[1])),
+                fmt_bytes(mem.unit_forward_bytes(i, batches[2])),
+            ]);
+        }
+        t.print();
+        for &b in &batches {
+            println!(
+                "backward phase (units {}..{}) at b={b}: {}",
+                app.freeze_idx() + 1,
+                app.num_units(),
+                fmt_bytes(mem.backward_bytes(b))
+            );
+        }
+
+        // Shape assertions.
+        let early_max = (1..=4)
+            .map(|i| mem.unit_forward_bytes(i, batches[2]))
+            .max()
+            .unwrap();
+        let late_max = (app.num_units() - 2..=app.num_units())
+            .map(|i| mem.unit_forward_bytes(i, batches[2]))
+            .max()
+            .unwrap();
+        assert!(
+            early_max > late_max,
+            "{name}: early units should dominate memory"
+        );
+        // Insight 3: at a large enough batch the early units out-weigh
+        // the whole backward phase.
+        assert!(
+            early_max > mem.backward_bytes(batches[0]),
+            "{name}: early fwd at b={} should exceed bwd at b={}",
+            batches[2],
+            batches[0]
+        );
+        println!();
+    }
+}

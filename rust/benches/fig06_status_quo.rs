@@ -1,0 +1,69 @@
+//! Fig 6 — status quo: communication/computation breakdown of the
+//! BASELINE (train in the compute tier, stream images from the COS) at a
+//! rate-limited link.  The paper chokes a real GPU at 150 Mbps; our
+//! "GPU" executes on a CPU core, so the equivalent choke point —
+//! transfer time ≥ compute time — sits near 0.3 Mbps on this testbed
+//! (EXPERIMENTS.md §Calibration maps the bandwidth axis).
+//!
+//! Expected shape: on the GPU tier the epoch is communication-bound (the
+//! device idles waiting for data); on the CPU tier computation dominates.
+
+#[path = "common.rs"]
+mod common;
+
+use hapi::harness::Testbed;
+use hapi::metrics::Table;
+use hapi::netsim;
+use hapi::runtime::DeviceKind;
+use hapi::util::fmt_duration;
+
+fn main() {
+    let batch = common::scaled(500);
+    println!(
+        "== Fig 6: BASELINE comm/comp breakdown at 0.3 Mbps, batch {batch} ==\n"
+    );
+    let mut t = Table::new(
+        "BASELINE breakdown",
+        &["model", "client", "comm", "comp", "comm share", "status"],
+    );
+    for model in ["alexnet", "vgg11", "transformer"] {
+        for device in [DeviceKind::Gpu, DeviceKind::Cpu] {
+            let mut cfg = common::bench_config();
+            cfg.bandwidth = Some(netsim::mbps(0.3));
+            cfg.train_batch = batch;
+            let bed = Testbed::launch(cfg).unwrap();
+            let (ds, labels) = bed.dataset("f6", model, batch).unwrap();
+            let client = bed.baseline_client(model, device).unwrap();
+            let row = match client.train_epoch(&ds, &labels) {
+                Ok(stats) => {
+                    let comm = stats.comm.as_secs_f64();
+                    let comp = stats.comp.as_secs_f64();
+                    vec![
+                        model.to_string(),
+                        format!("{device:?}"),
+                        fmt_duration(stats.comm),
+                        fmt_duration(stats.comp),
+                        format!("{:.0}%", 100.0 * comm / (comm + comp)),
+                        "ok".into(),
+                    ]
+                }
+                Err(e) if e.is_oom() => vec![
+                    model.to_string(),
+                    format!("{device:?}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "X (OOM)".into(),
+                ],
+                Err(e) => panic!("{model}: {e}"),
+            };
+            t.row(row);
+            bed.stop();
+        }
+    }
+    t.print();
+    println!(
+        "paper shape: GPU rows communication-bound, CPU rows \
+         computation-bound; large models marked X"
+    );
+}

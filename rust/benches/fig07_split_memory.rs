@@ -1,0 +1,72 @@
+//! Fig 7 — device memory breakdown when splitting the forward pass at
+//! different units: batch 10 before the split (the COS side), batch 100
+//! after (paper: 100/1000 at 1:10 scale).
+//!
+//! Expected shape: a small pre-split batch combined with a later split
+//! index shrinks total memory, sometimes below the no-split status quo.
+
+#[path = "common.rs"]
+mod common;
+
+use hapi::config::Scale;
+use hapi::metrics::Table;
+use hapi::model::ModelRegistry;
+use hapi::profiler::AppProfile;
+use hapi::util::fmt_bytes;
+
+fn main() {
+    let cfg = common::bench_config();
+    let reg = ModelRegistry::load_dir(cfg.profiles_dir()).unwrap();
+    let pre_batch = common::scaled(100);
+    let post_batch = common::scaled(1000);
+
+    println!(
+        "== Fig 7: memory with split fwd (b={pre_batch} before, \
+         b={post_batch} after) ==\n"
+    );
+    for name in ["alexnet", "resnet18", "vgg11"] {
+        let app = AppProfile::new(reg.get(name).unwrap(), Scale::Tiny);
+        let mem = app.memory();
+        let freeze = app.freeze_idx();
+        // Status quo: everything at the post batch, no split.
+        let status_quo = mem.fe_request_bytes(freeze, post_batch)
+            + mem.backward_bytes(post_batch);
+        let mut t = Table::new(
+            &format!("{name} (status quo: {})", fmt_bytes(status_quo)),
+            &["split idx", "before (COS)", "after (client)", "total", "< status quo?"],
+        );
+        // Candidate split indexes: units whose output < input (Fig 2).
+        let candidates: Vec<usize> = (1..=freeze)
+            .filter(|&i| app.out_bytes(i) < app.input_bytes())
+            .collect();
+        let mut totals = Vec::new();
+        for &s in &candidates {
+            let before = mem.fe_request_bytes(s, pre_batch);
+            let after = mem.client_bytes(s, post_batch);
+            let total = before + after;
+            totals.push(total);
+            t.row(vec![
+                s.to_string(),
+                fmt_bytes(before),
+                fmt_bytes(after),
+                fmt_bytes(total),
+                if total < status_quo { "yes" } else { "" }.into(),
+            ]);
+        }
+        t.print();
+        assert!(
+            totals.iter().any(|&t| t < status_quo),
+            "{name}: no split beats the status quo"
+        );
+        // Later splits reduce the client side monotonically.
+        let client_sides: Vec<u64> = candidates
+            .iter()
+            .map(|&s| mem.client_bytes(s, post_batch))
+            .collect();
+        assert!(
+            client_sides.windows(2).all(|w| w[1] <= w[0]),
+            "{name}: client memory should shrink with later splits"
+        );
+        println!();
+    }
+}

@@ -1,0 +1,90 @@
+//! Fig 11 + Table 4 — impact of the client↔COS bandwidth.
+//!
+//! Sweeps the link rate.  The paper sweeps 0.05–12 Gbps around its
+//! testbed's comm/comp crossover; ours sits near 2 Mbps (CPU-tier
+//! compute), so the sweep covers 0.5–24 Mbps — the same positions
+//! relative to the crossover.  Runs
+//! one epoch of Hapi and BASELINE each, reporting epoch time, bytes per
+//! iteration, and the split index Algorithm 1 chose (Table 4).
+//!
+//! Expected shape: Hapi's curve is nearly flat (the split index walks
+//! from the freeze layer toward early units as bandwidth grows) while
+//! BASELINE degrades sharply at low bandwidth.
+
+#[path = "common.rs"]
+mod common;
+
+use hapi::harness::Testbed;
+use hapi::metrics::Table;
+use hapi::netsim;
+use hapi::runtime::DeviceKind;
+use hapi::util::fmt_bytes;
+
+fn main() {
+    let batch = common::scaled(2000);
+    println!("== Fig 11 / Table 4: bandwidth sweep (alexnet, batch {batch}) ==\n");
+    let mut t = Table::new(
+        "bandwidth sweep",
+        &[
+            "bandwidth (Mbps)",
+            "split idx",
+            "Hapi time (s)",
+            "Hapi bytes/iter",
+            "BASE time (s)",
+            "BASE bytes/iter",
+        ],
+    );
+    let mut hapi_times = Vec::new();
+    let mut base_times = Vec::new();
+    let mut split_indices = Vec::new();
+    for mbps in [0.5, 1.0, 2.0, 6.0, 24.0] {
+        let mut cfg = common::bench_config();
+        cfg.bandwidth = Some(netsim::mbps(mbps));
+        cfg.train_batch = batch;
+        let bed = Testbed::launch(cfg).unwrap();
+        let (ds, labels) = bed.dataset("f11", "alexnet", batch).unwrap();
+        bed.server.warm("alexnet").unwrap();
+
+        let hapi = bed.hapi_client("alexnet", DeviceKind::Gpu).unwrap();
+        let split = hapi.split.split_idx;
+        let t0 = std::time::Instant::now();
+        let hs = hapi.train_epoch(&ds, &labels).unwrap();
+        let hapi_t = t0.elapsed().as_secs_f64();
+
+        let base = bed.baseline_client("alexnet", DeviceKind::Gpu).unwrap();
+        let t0 = std::time::Instant::now();
+        let bs = base.train_epoch(&ds, &labels).unwrap();
+        let base_t = t0.elapsed().as_secs_f64();
+
+        t.row(vec![
+            format!("{mbps}"),
+            split.to_string(),
+            format!("{hapi_t:.1}"),
+            fmt_bytes(hs.bytes_from_cos / hs.iterations.max(1) as u64),
+            format!("{base_t:.1}"),
+            fmt_bytes(bs.bytes_from_cos / bs.iterations.max(1) as u64),
+        ]);
+        hapi_times.push(hapi_t);
+        base_times.push(base_t);
+        split_indices.push(split);
+        bed.stop();
+    }
+    t.print();
+
+    // Table 4 dynamic: split index non-increasing as bandwidth grows.
+    assert!(
+        split_indices.windows(2).all(|w| w[1] <= w[0]),
+        "split indices should move earlier with more bandwidth: {split_indices:?}"
+    );
+    // Fig 11a shape: Hapi flat-ish, BASELINE steep.
+    let hapi_ratio = hapi_times[0] / hapi_times.last().unwrap();
+    let base_ratio = base_times[0] / base_times.last().unwrap();
+    println!(
+        "\nslowest/fastest epoch ratio — Hapi {hapi_ratio:.1}x vs \
+         BASELINE {base_ratio:.1}x (paper: Hapi nearly flat)"
+    );
+    assert!(
+        base_ratio > hapi_ratio,
+        "BASELINE should degrade more with scarce bandwidth"
+    );
+}

@@ -1,0 +1,90 @@
+//! Fig 15 — total device memory used by Hapi (client + COS) vs the
+//! BASELINE (client only), at two COS batch sizes.
+//!
+//! Expected shape: with a large COS batch the aggregate exceeds what the
+//! client alone could provide (the "extra memory" illusion); with a
+//! small COS batch the aggregate drops below the BASELINE — the COS
+//! batch knob controls memory.
+
+#[path = "common.rs"]
+mod common;
+
+use hapi::config::Scale;
+use hapi::metrics::Table;
+use hapi::model::ModelRegistry;
+use hapi::netsim;
+use hapi::profiler::AppProfile;
+use hapi::split::choose_split_idx;
+use hapi::util::fmt_bytes;
+
+fn main() {
+    let cfg = common::bench_config();
+    let reg = ModelRegistry::load_dir(cfg.profiles_dir()).unwrap();
+    let app = AppProfile::new(reg.get("alexnet").unwrap(), Scale::Tiny);
+    let mem = app.memory();
+    let client_cap = cfg.client_gpu_mem;
+
+    println!("== Fig 15: memory breakdown, Hapi vs BASELINE (alexnet) ==\n");
+    for cos_batch in [100usize, 20] {
+        let mut t = Table::new(
+            &format!("COS batch {cos_batch}"),
+            &[
+                "train batch",
+                "posts",
+                "client mem",
+                "COS mem (all posts)",
+                "Hapi total",
+                "BASELINE client",
+                "BASE > client cap?",
+            ],
+        );
+        for paper_batch in [2000usize, 4000, 8000, 12000] {
+            let batch = common::scaled(paper_batch);
+            let posts = batch / 100;
+            let split = choose_split_idx(
+                &app,
+                Some(netsim::mbps(100.0)),
+                1.0,
+                batch,
+            )
+            .split_idx;
+            let client = mem.client_bytes(split, batch);
+            let cos =
+                posts as u64 * mem.fe_request_bytes(split, cos_batch.min(100));
+            let base = mem.baseline_client_bytes(batch);
+            t.row(vec![
+                batch.to_string(),
+                posts.to_string(),
+                fmt_bytes(client),
+                fmt_bytes(cos),
+                fmt_bytes(client + cos),
+                fmt_bytes(base),
+                if base > client_cap { "X (OOM)" } else { "" }.into(),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    // Shape assertions: the aggregate at the big COS batch and train
+    // batch 1200 exceeds the client capability (the paper's ">30 GB at
+    // batch 12000" point), while the small COS batch drops aggregate
+    // usage below the BASELINE.
+    let split = choose_split_idx(&app, Some(netsim::mbps(100.0)), 1.0, 1200)
+        .split_idx;
+    let big = mem.client_bytes(split, 1200)
+        + 12 * mem.fe_request_bytes(split, 100);
+    assert!(
+        big > client_cap,
+        "aggregate ({}) should exceed the client capability ({})",
+        fmt_bytes(big),
+        fmt_bytes(client_cap)
+    );
+    let small = mem.client_bytes(split, 400)
+        + 4 * mem.fe_request_bytes(split, 20);
+    assert!(
+        small < mem.baseline_client_bytes(400),
+        "small COS batch should undercut the BASELINE"
+    );
+    println!("shape checks passed");
+}

@@ -1,0 +1,112 @@
+//! L3 hot-path micro-benchmarks (the §Perf baseline in EXPERIMENTS.md).
+//!
+//! Targets, per the paper's own budgets:
+//! - the batch-adaptation solve must stay well under the paper's 25 ms
+//!   per run;
+//! - the proxy frame path and feature-tensor (de)serialisation must not
+//!   bottleneck a multi-MB/s request stream;
+//! - micro-batch chunk/pad/concat is on the per-request path.
+
+#[path = "common.rs"]
+mod common;
+
+use hapi::batch::{solve, BatchRequest};
+use hapi::benchkit::Bench;
+use hapi::cos::protocol::{Request, Response};
+use hapi::runtime::Tensor;
+use hapi::server::request::PostRequest;
+use hapi::util::json::Json;
+use hapi::util::rng::Rng;
+
+fn main() {
+    println!("== L3 hot-path microbenches ==\n");
+
+    // 1. Eq. 4 solve: 10 queued requests (the paper's max tenancy).
+    let reqs: Vec<BatchRequest> = (0..10)
+        .map(|i| BatchRequest {
+            id: i,
+            data_bytes_per_sample: 50_000 + i * 1000,
+            model_bytes: 500_000,
+            b_max: 100,
+        })
+        .collect();
+    let stats = Bench::new("ba_solve_10_requests")
+        .samples(50, 2000)
+        .budget(std::time::Duration::from_secs(2))
+        .run(|| solve(&reqs, 16 << 20, 20, 20).unwrap());
+    assert!(
+        stats.p50 < std::time::Duration::from_millis(25),
+        "BA solve exceeds the paper's 25 ms budget"
+    );
+
+    // 2. POST header build + parse (JSON on the request path).
+    let post = PostRequest {
+        id: 42,
+        model: "alexnet".into(),
+        split_idx: 13,
+        object: "ds/shard_00042".into(),
+        labels_object: String::new(),
+        input_dims: vec![100, 3, 32, 32],
+        b_max: 100,
+        mem_data_per_sample: 47_520,
+        mem_model_bytes: 1_234_567,
+        mode: hapi::server::request::RequestMode::FeatureExtract,
+    };
+    Bench::new("post_header_roundtrip")
+        .samples(50, 5000)
+        .budget(std::time::Duration::from_secs(2))
+        .run(|| {
+            let j = post.to_json();
+            PostRequest::parse(&j).unwrap()
+        });
+
+    // 3. Wire frame encode/decode of a 1 MiB feature tensor response.
+    let body = vec![7u8; 1 << 20];
+    let header = Json::parse(r#"{"req_id": 1, "out_dims": [100, 8, 16, 16]}"#)
+        .unwrap();
+    Bench::new("response_encode_1MiB")
+        .samples(20, 500)
+        .budget(std::time::Duration::from_secs(2))
+        .run(|| {
+            let r = Response::OkPost(header.clone(), body.clone());
+            let (op, payload) = r.encode();
+            Response::decode(op, payload).unwrap()
+        });
+
+    // 4. GET request frame (tiny, latency-bound).
+    Bench::new("get_request_encode")
+        .samples(50, 10_000)
+        .budget(std::time::Duration::from_secs(1))
+        .run(|| {
+            let (op, p) = Request::Get("ds/shard_00001".into()).encode();
+            Request::decode(op, p).unwrap()
+        });
+
+    // 5. Micro-batch chunk/pad/concat of a 100×(3·32·32) batch.
+    let mut rng = Rng::new(1);
+    let vals: Vec<f32> = (0..100 * 3072).map(|_| rng.normal()).collect();
+    let tensor = Tensor::from_f32(vec![100, 3, 32, 32], &vals);
+    Bench::new("chunk_pad_concat_100x3072")
+        .samples(50, 2000)
+        .budget(std::time::Duration::from_secs(2))
+        .run(|| {
+            let parts: Vec<Tensor> = (0..5)
+                .map(|i| tensor.slice_batch(i * 20, 20).pad_batch(20))
+                .collect();
+            Tensor::concat_batch(&parts).unwrap()
+        });
+
+    // 6. Gradient accumulation over a 1 M-element tail.
+    let grads: Vec<Tensor> =
+        vec![Tensor::from_f32(vec![1 << 20], &vec![0.5; 1 << 20])];
+    Bench::new("grad_accumulate_1M")
+        .samples(20, 200)
+        .budget(std::time::Duration::from_secs(2))
+        .run(|| {
+            let mut acc =
+                vec![Tensor::from_f32(vec![1 << 20], &vec![0.1; 1 << 20])];
+            hapi::runtime::ModelArtifacts::accumulate(&mut acc, &grads)
+                .unwrap();
+            acc
+        });
+}

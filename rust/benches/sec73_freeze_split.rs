@@ -1,0 +1,136 @@
+//! §7.3 — dynamic splitting vs static splitting at the freeze layer.
+//!
+//! Paper setup: DenseNet121, 4 concurrent clients, unrestricted
+//! bandwidth.  Hapi picks an *earlier* split (larger output, fewer
+//! pushed-down units) and wins because COS time is multiplied by the
+//! number of concurrent requests (Eq. 1's |R(t)|·L_COS term) while
+//! client time is not (every tenant has its own compute tier).
+//!
+//! On this single-box testbed all four "clients" share the same CPU as
+//! the COS, so the tier asymmetry the paper exploits cannot show up in
+//! wall-clock — both strategies execute the same total work on one core.
+//! The bench therefore (a) *measures* the per-unit costs and transfers
+//! for both strategies on the real system, then (b) evaluates the §4
+//! cost model with the measured constants under the paper's
+//! dedicated-client assumption, which is where the 85.86 s vs 92.56 s
+//! ordering must (and does) reappear.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hapi::harness::Testbed;
+use hapi::metrics::Table;
+use hapi::runtime::{DeviceKind, ModelArtifacts, Tensor};
+use hapi::split::choose_split_idx;
+use hapi::theory::{predict, CostConstants};
+use hapi::util::fmt_bytes;
+use hapi::util::rng::Rng;
+
+fn main() {
+    println!("== §7.3: dynamic vs static-freeze split (densenet121, 4 clients) ==\n");
+    let mut cfg = common::bench_config();
+    cfg.bandwidth = None;
+    cfg.train_batch = 100;
+    let bed = Testbed::launch(cfg).unwrap();
+    let profile = bed.models.get("densenet121").unwrap();
+    let app = bed.app("densenet121").unwrap();
+    let freeze = app.freeze_idx();
+    let dynamic = choose_split_idx(&app, None, 1.0, 100).split_idx;
+    assert!(dynamic < freeze, "dynamic should split earlier than freeze");
+
+    // (a) Measure per-unit forward costs on the real runtime.
+    let arts = Arc::new(
+        ModelArtifacts::load(
+            bed.engine.clone(),
+            profile.clone(),
+            bed.cfg.model_dir("densenet121"),
+        )
+        .unwrap(),
+    );
+    arts.warm().unwrap();
+    let mut rng = Rng::new(5);
+    let elems: usize = profile.tiny.input_shape.iter().product::<usize>() * 20;
+    let vals: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
+    let mut dims = vec![20usize];
+    dims.extend(&profile.tiny.input_shape);
+    let x = Tensor::from_f32(dims, &vals);
+    let mut times: Vec<Duration> = Vec::new();
+    arts.forward_segment(&x, 1, profile.num_units, DeviceKind::Gpu, Some(&mut times))
+        .unwrap();
+    let per_unit_secs: f64 = times.iter().map(|d| d.as_secs_f64()).sum::<f64>()
+        / profile.num_units as f64;
+
+    // (b) Fit the §4 constants from the measurement and predict under 4
+    // concurrent tenants with dedicated client tiers.
+    let k = CostConstants {
+        c11: 1e-10,
+        c12: per_unit_secs * 5.0, // per unit per request (batch 100)
+        c21: 1e-10,
+        c22: per_unit_secs * 5.0,
+    };
+    let p_dyn = predict(&app, &k, dynamic, 20, 100, 400, 4, 1e9);
+    let p_static = predict(&app, &k, freeze, 20, 100, 400, 4, 1e9);
+
+    // (c) Also run both strategies for real and report everything.
+    let mut table = Table::new(
+        "4 concurrent clients (measured + modelled)",
+        &[
+            "strategy",
+            "split idx",
+            "measured makespan",
+            "bytes from COS",
+            "modelled epoch (dedicated clients)",
+        ],
+    );
+    for static_freeze in [false, true] {
+        let (ds, labels) = bed.dataset("s73", "densenet121", 100).unwrap();
+        bed.link.stats().reset();
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let c = if static_freeze {
+                        bed.static_freeze_client("densenet121", DeviceKind::Gpu)
+                    } else {
+                        bed.hapi_client("densenet121", DeviceKind::Gpu)
+                    }
+                    .unwrap();
+                    c.train_epoch(&ds, &labels).unwrap();
+                });
+            }
+        });
+        let makespan = t0.elapsed();
+        let (split, modelled) = if static_freeze {
+            (freeze, &p_static)
+        } else {
+            (dynamic, &p_dyn)
+        };
+        table.row(vec![
+            if static_freeze { "static @ freeze" } else { "Hapi dynamic" }
+                .into(),
+            split.to_string(),
+            format!("{:.1}s", makespan.as_secs_f64()),
+            fmt_bytes(bed.link.stats().rx_bytes()),
+            format!(
+                "{:.1}s (COS {:.1} + client {:.1} + net {:.1})",
+                modelled.total(),
+                modelled.c_cos,
+                modelled.c_client,
+                modelled.t_data
+            ),
+        ]);
+    }
+    table.print();
+    println!(
+        "paper shape: the dynamic split transfers more yet wins once COS \
+         time is shared 4 ways (85.86s vs 92.56s in the paper)."
+    );
+    assert!(
+        p_dyn.total() < p_static.total(),
+        "cost model must prefer the dynamic split under contention"
+    );
+    bed.stop();
+}

@@ -1,0 +1,262 @@
+//! §5.5 — the batch-adaptation solver (Eq. 4).
+//!
+//! Given the queued requests on one device, choose a COS batch size
+//! `b_r ∈ [b_min, b_max_r]` per request maximising memory utilisation
+//!
+//! ```text
+//!   max Σ_r b_r · M_r(data) + M_r(model)
+//!   s.t. Σ_r b_r · M_r(data) + M_r(model) ≤ M_total − M(occupied)
+//! ```
+//!
+//! Since the objective equals the constraint's left side, the optimum
+//! packs as much memory as fits.  We solve it greedily in micro-batch
+//! steps (water-filling): start everyone at `b_min`; if even that does
+//! not fit, drop the *last* queued request and retry (the paper: "removes
+//! one request at a time and retries"; dropped requests join the next
+//! round).  Then repeatedly grant one step to the request with the
+//! *smallest* current batch that still fits (max–min fairness across
+//! tenants, maximal packing overall).
+//!
+//! Invariants (property-tested in `rust/tests/batch_props.rs`):
+//! - the solution never exceeds the budget;
+//! - every admitted `b_r` is within bounds and a multiple of the step;
+//! - maximality: no admitted request can be bumped one more step;
+//! - infeasibility shrinks the set by exactly one request per retry.
+
+use crate::error::{Error, Result};
+
+/// One queued request's view for the solver.
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    /// Opaque id (request id on the server).
+    pub id: u64,
+    /// Eq. 4's M_r(data): bytes per sample at this request's split.
+    pub data_bytes_per_sample: u64,
+    /// Eq. 4's M_r(model): bytes for the pushed-down weights.
+    pub model_bytes: u64,
+    /// Upper bound b_r_max (set by the client; ≤ its remaining samples).
+    pub b_max: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    pub id: u64,
+    pub batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Granted batch sizes, in the input request order.
+    pub assignments: Vec<Assignment>,
+    /// Requests that had to be deferred to the next round.
+    pub deferred: Vec<u64>,
+    /// Total bytes the solution occupies.
+    pub planned_bytes: u64,
+}
+
+/// Solve Eq. 4 for `requests` against `budget` bytes of free memory.
+///
+/// `b_min` is the operator's minimum batch (paper: 25); `step` is the
+/// execution granularity (our AOT micro-batch).  Returns
+/// [`Error::Infeasible`] only when even a single request at `b_min`
+/// cannot fit.
+pub fn solve(
+    requests: &[BatchRequest],
+    budget: u64,
+    b_min: usize,
+    step: usize,
+) -> Result<Solution> {
+    assert!(step > 0 && b_min > 0);
+    if requests.is_empty() {
+        return Ok(Solution {
+            assignments: vec![],
+            deferred: vec![],
+            planned_bytes: 0,
+        });
+    }
+
+    // Paper: drop the tail request and retry until the floor fits.
+    let mut active = requests.len();
+    loop {
+        let floor: u64 = requests[..active]
+            .iter()
+            .map(|r| r.model_bytes + r.min_batch(b_min) as u64 * r.data_bytes_per_sample)
+            .sum();
+        if floor <= budget {
+            break;
+        }
+        active -= 1;
+        if active == 0 {
+            return Err(Error::Infeasible(format!(
+                "request {} needs {} bytes at b_min={}, budget {}",
+                requests[0].id,
+                requests[0].model_bytes
+                    + requests[0].min_batch(b_min) as u64
+                        * requests[0].data_bytes_per_sample,
+                b_min,
+                budget
+            )));
+        }
+    }
+
+    let mut batches: Vec<usize> = requests[..active]
+        .iter()
+        .map(|r| r.min_batch(b_min))
+        .collect();
+    let mut used: u64 = requests[..active]
+        .iter()
+        .zip(&batches)
+        .map(|(r, &b)| r.model_bytes + b as u64 * r.data_bytes_per_sample)
+        .sum();
+
+    // Water-fill in `step` increments, smallest-batch-first.
+    loop {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, r) in requests[..active].iter().enumerate() {
+            if batches[i] + step > r.b_max {
+                continue;
+            }
+            let cost = step as u64 * r.data_bytes_per_sample;
+            if used + cost > budget {
+                continue;
+            }
+            match best {
+                Some((j, _)) if batches[j] <= batches[i] => {}
+                _ => best = Some((i, cost)),
+            }
+        }
+        match best {
+            Some((i, cost)) => {
+                batches[i] += step;
+                used += cost;
+            }
+            None => break,
+        }
+    }
+
+    Ok(Solution {
+        assignments: requests[..active]
+            .iter()
+            .zip(&batches)
+            .map(|(r, &b)| Assignment { id: r.id, batch: b })
+            .collect(),
+        deferred: requests[active..].iter().map(|r| r.id).collect(),
+        planned_bytes: used,
+    })
+}
+
+impl BatchRequest {
+    /// Smallest admissible batch: `min(b_min, b_max)` — a request smaller
+    /// than the operator floor (e.g. a final partial object) is admitted
+    /// whole rather than rejected.
+    fn min_batch(&self, b_min: usize) -> usize {
+        b_min.min(self.b_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, per_sample: u64, model: u64, b_max: usize) -> BatchRequest {
+        BatchRequest {
+            id,
+            data_bytes_per_sample: per_sample,
+            model_bytes: model,
+            b_max,
+        }
+    }
+
+    fn total(reqs: &[BatchRequest], sol: &Solution) -> u64 {
+        sol.assignments
+            .iter()
+            .map(|a| {
+                let r = reqs.iter().find(|r| r.id == a.id).unwrap();
+                r.model_bytes + a.batch as u64 * r.data_bytes_per_sample
+            })
+            .sum()
+    }
+
+    #[test]
+    fn everyone_gets_b_max_when_memory_abounds() {
+        let reqs = vec![req(1, 100, 1000, 80), req(2, 50, 500, 100)];
+        let sol = solve(&reqs, 1 << 30, 20, 20).unwrap();
+        assert_eq!(sol.assignments[0].batch, 80);
+        assert_eq!(sol.assignments[1].batch, 100);
+        assert!(sol.deferred.is_empty());
+        assert_eq!(sol.planned_bytes, total(&reqs, &sol));
+    }
+
+    #[test]
+    fn tight_memory_reduces_batches() {
+        // Two identical requests, budget for model(0) + 60 samples total.
+        let reqs = vec![req(1, 100, 0, 100), req(2, 100, 0, 100)];
+        let sol = solve(&reqs, 6000, 20, 20).unwrap();
+        let sum: usize = sol.assignments.iter().map(|a| a.batch).sum();
+        assert_eq!(sum, 60);
+        // Fairness: no request is starved below b_min.
+        for a in &sol.assignments {
+            assert!(a.batch >= 20);
+        }
+        assert!(total(&reqs, &sol) <= 6000);
+    }
+
+    #[test]
+    fn maximality_no_request_can_grow() {
+        let reqs = vec![req(1, 100, 0, 100), req(2, 70, 0, 100)];
+        let budget = 9000;
+        let sol = solve(&reqs, budget, 20, 10).unwrap();
+        let used = total(&reqs, &sol);
+        for a in &sol.assignments {
+            let r = reqs.iter().find(|r| r.id == a.id).unwrap();
+            if a.batch + 10 <= r.b_max {
+                assert!(
+                    used + 10 * r.data_bytes_per_sample > budget,
+                    "request {} could still grow",
+                    a.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn defers_tail_request_when_floor_does_not_fit() {
+        let reqs = vec![req(1, 100, 0, 100), req(2, 100, 0, 100), req(3, 100, 0, 100)];
+        // Budget fits two at b_min=20 (4000) but not three (6000).
+        let sol = solve(&reqs, 5000, 20, 20).unwrap();
+        assert_eq!(sol.deferred, vec![3]);
+        assert_eq!(sol.assignments.len(), 2);
+    }
+
+    #[test]
+    fn single_oversized_request_is_infeasible() {
+        let reqs = vec![req(1, 1000, 500, 100)];
+        let err = solve(&reqs, 1000, 20, 20).unwrap_err();
+        assert!(matches!(err, Error::Infeasible(_)));
+    }
+
+    #[test]
+    fn small_final_request_admitted_below_b_min() {
+        // b_max = 7 < b_min = 20: the last partial object of an epoch.
+        let reqs = vec![req(1, 100, 0, 7)];
+        let sol = solve(&reqs, 1000, 20, 20).unwrap();
+        assert_eq!(sol.assignments[0].batch, 7);
+    }
+
+    #[test]
+    fn empty_input() {
+        let sol = solve(&[], 100, 20, 20).unwrap();
+        assert!(sol.assignments.is_empty() && sol.deferred.is_empty());
+    }
+
+    #[test]
+    fn model_bytes_counted_once_per_request() {
+        let reqs = vec![req(1, 10, 10_000, 40)];
+        let sol = solve(&reqs, 10_500, 20, 20).unwrap();
+        // 10_000 + 20*10 = 10_200 fits; +20 more samples (200) doesn't
+        // exceed? 10_400 fits, so b=40.
+        assert_eq!(sol.assignments[0].batch, 40);
+        let sol = solve(&reqs, 10_250, 20, 20).unwrap();
+        assert_eq!(sol.assignments[0].batch, 20);
+    }
+}

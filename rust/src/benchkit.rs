@@ -1,0 +1,177 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, fixed-iteration or fixed-duration sampling, and robust stats
+//! (mean, stddev, p50/p95, min).  For the macro experiment benches the
+//! [`Bench::run_once`] escape hatch times a single end-to-end run.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::table::fnum;
+use crate::util::fmt_duration;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<Duration>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_unstable();
+        let n = xs.len();
+        let mean_ns =
+            xs.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / n as f64;
+        let var = xs
+            .iter()
+            .map(|d| {
+                let v = d.as_nanos() as f64 - mean_ns;
+                v * v
+            })
+            .sum::<f64>()
+            / n as f64;
+        let pick = |q: f64| xs[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            samples: n,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+            min: xs[0],
+            p50: pick(0.50),
+            p95: pick(0.95),
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "mean {} ± {} (min {}, p50 {}, p95 {}, n={})",
+            fmt_duration(self.mean),
+            fmt_duration(self.stddev),
+            fmt_duration(self.min),
+            fmt_duration(self.p50),
+            fmt_duration(self.p95),
+            self.samples
+        )
+    }
+}
+
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    min_samples: usize,
+    max_samples: usize,
+    budget: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: 2,
+            min_samples: 5,
+            max_samples: 100,
+            budget: Duration::from_secs(5),
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, min: usize, max: usize) -> Self {
+        self.min_samples = min;
+        self.max_samples = max;
+        self
+    }
+
+    pub fn budget(mut self, d: Duration) -> Self {
+        self.budget = d;
+        self
+    }
+
+    /// Sample `f` until the time budget or max samples is hit.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_samples
+            || (samples.len() < self.max_samples && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let stats = Stats::from_samples(samples);
+        println!("bench {:40} {}", self.name, stats.summary());
+        stats
+    }
+
+    /// Time one end-to-end run (macro experiments).
+    pub fn run_once<T>(&self, f: impl FnOnce() -> T) -> (Duration, T) {
+        let t0 = Instant::now();
+        let out = f();
+        let d = t0.elapsed();
+        println!("bench {:40} single run: {}", self.name, fmt_duration(d));
+        (d, out)
+    }
+}
+
+/// Throughput helper: items/sec over a duration.
+pub fn throughput(items: u64, d: Duration) -> f64 {
+    if d.is_zero() {
+        return f64::INFINITY;
+    }
+    items as f64 / d.as_secs_f64()
+}
+
+/// Ratio formatted as the paper reports speedups ("2.13x").
+pub fn speedup(baseline: Duration, ours: Duration) -> String {
+    if ours.is_zero() {
+        return "inf".into();
+    }
+    format!("{}x", fnum(baseline.as_secs_f64() / ours.as_secs_f64()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ]);
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.p50, Duration::from_millis(20));
+        assert_eq!(s.mean, Duration::from_millis(20));
+    }
+
+    #[test]
+    fn bench_runs_enough_samples() {
+        let stats = Bench::new("noop")
+            .warmup(1)
+            .samples(3, 10)
+            .budget(Duration::from_millis(50))
+            .run(|| 1 + 1);
+        assert!(stats.samples >= 3);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(throughput(100, Duration::from_secs(2)), 50.0);
+        assert_eq!(
+            speedup(Duration::from_secs(4), Duration::from_secs(2)),
+            "2.00x"
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! Command-line argument parsing substrate (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! typed lookups with defaults.  `hapi <subcommand> [args]` is modelled by
+//! taking the first positional as the subcommand.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (without the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing.
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                Error::Config(format!("--{name}: cannot parse {v:?}"))
+            }),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::Config(format!("missing required --{name}")))
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NB: a bare `--flag` followed by a non-option would greedily
+        // consume it as a value, so positionals go before flags (or after
+        // `--`).  This matches the documented greedy rule.
+        let a = args(&[
+            "train", "extra", "--model", "alexnet", "--batch=200",
+            "--verbose",
+        ]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("model"), Some("alexnet"));
+        assert_eq!(a.parse_or("batch", 0u32).unwrap(), 200);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["train", "extra"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = args(&["--x", "notanum"]);
+        assert_eq!(a.parse_or("missing", 7u32).unwrap(), 7);
+        assert!(a.parse_or("x", 0u32).is_err());
+        assert!(a.require("absent").is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = args(&["run", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["run", "--not-an-option"]);
+        assert!(!a.flag("not-an-option"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = args(&["--models", "a, b,c"]);
+        assert_eq!(a.list_or("models", &[]), vec!["a", "b", "c"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+}

@@ -1,0 +1,176 @@
+//! Synthetic datasets: generation, sharding, and upload to the COS.
+//!
+//! The paper streams ImageNet shards of 1000 images per object; we
+//! generate a learnable synthetic classification task with the same
+//! layout (100 samples per object at tiny scale).  Each class has a
+//! random template; a sample is `template[class] + noise`, which the
+//! training tail can separate — the end-to-end example's loss visibly
+//! falls (EXPERIMENTS.md §E2E).
+//!
+//! Shard objects store raw f32 tensor bytes `[samples, C, H, W]`; label
+//! shards store raw i32 `[samples]` next to them, so ALL_IN_COS jobs can
+//! train server-side and clients can GET the (tiny) label objects.
+
+use std::sync::Arc;
+
+use crate::cos::storage::StorageCluster;
+use crate::cos::{Object, ObjectKey};
+use crate::error::Result;
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub input_shape: Vec<usize>, // (C, H, W)
+    pub num_classes: usize,
+    pub num_samples: usize,
+    pub shard_samples: usize,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetRef {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub num_samples: usize,
+    pub shard_samples: usize,
+    pub num_shards: usize,
+}
+
+impl DatasetSpec {
+    pub fn shard_key(&self, i: usize) -> ObjectKey {
+        ObjectKey::shard(&self.name, i)
+    }
+
+    pub fn labels_key(&self, i: usize) -> ObjectKey {
+        ObjectKey::new(format!("{}/labels_{i:05}", self.name))
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.num_samples.div_ceil(self.shard_samples)
+    }
+
+    pub fn to_ref(&self) -> DatasetRef {
+        DatasetRef {
+            name: self.name.clone(),
+            input_shape: self.input_shape.clone(),
+            num_samples: self.num_samples,
+            shard_samples: self.shard_samples,
+            num_shards: self.num_shards(),
+        }
+    }
+
+    /// Generate + store all shards directly into the cluster (benches and
+    /// the server-side of experiments; uploads through the proxy should
+    /// use [`upload`]).
+    pub fn materialize(&self, cluster: &Arc<StorageCluster>) -> Result<DatasetRef> {
+        for (i, (images, labels)) in self.shards().enumerate() {
+            cluster.put(Object::new(self.shard_key(i), images.into_raw()));
+            let label_bytes: Vec<u8> = labels
+                .iter()
+                .flat_map(|l| l.to_le_bytes())
+                .collect();
+            cluster.put(Object::new(self.labels_key(i), label_bytes));
+        }
+        Ok(self.to_ref())
+    }
+
+    /// Iterator over generated shards `(images, labels)`.
+    pub fn shards(&self) -> impl Iterator<Item = (Tensor, Vec<i32>)> + '_ {
+        let sample_elems: usize = self.input_shape.iter().product();
+        // Class templates: one random pattern per class.
+        let mut trng = Rng::new(self.seed ^ 0xDA7A);
+        let templates: Vec<Vec<f32>> = (0..self.num_classes)
+            .map(|_| (0..sample_elems).map(|_| trng.normal()).collect())
+            .collect();
+        (0..self.num_shards()).map(move |shard| {
+            let mut rng = Rng::new(self.seed.wrapping_add(shard as u64 * 7919));
+            let n = self
+                .shard_samples
+                .min(self.num_samples - shard * self.shard_samples);
+            let mut data = Vec::with_capacity(n * sample_elems);
+            let mut labels = Vec::with_capacity(n);
+            for _ in 0..n {
+                let class = rng.usize_below(self.num_classes);
+                labels.push(class as i32);
+                let t = &templates[class];
+                for e in t.iter().take(sample_elems) {
+                    data.push(0.7 * e + 0.5 * rng.normal());
+                }
+            }
+            let mut dims = vec![n];
+            dims.extend(&self.input_shape);
+            (Tensor::from_f32(dims, &data), labels)
+        })
+    }
+
+    /// Fetch all labels from the cluster in shard order.
+    pub fn fetch_labels(
+        ds: &DatasetRef,
+        cluster: &Arc<StorageCluster>,
+    ) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(ds.num_samples);
+        for i in 0..ds.num_shards {
+            let key = ObjectKey::new(format!("{}/labels_{i:05}", ds.name));
+            let obj = cluster.get(&key)?;
+            out.extend(obj.data.chunks_exact(4).map(|c| {
+                i32::from_le_bytes([c[0], c[1], c[2], c[3]])
+            }));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec {
+            name: "test".into(),
+            input_shape: vec![3, 4, 4],
+            num_classes: 5,
+            num_samples: 250,
+            shard_samples: 100,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn shard_count_and_sizes() {
+        let s = spec();
+        assert_eq!(s.num_shards(), 3);
+        let shards: Vec<_> = s.shards().collect();
+        assert_eq!(shards[0].0.dims, vec![100, 3, 4, 4]);
+        assert_eq!(shards[2].0.dims, vec![50, 3, 4, 4]); // partial tail
+        assert_eq!(shards[2].1.len(), 50);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a: Vec<_> = spec().shards().collect();
+        let b: Vec<_> = spec().shards().collect();
+        assert_eq!(a[0].0, b[0].0);
+        assert_eq!(a[1].1, b[1].1);
+    }
+
+    #[test]
+    fn labels_in_range() {
+        for (_imgs, labels) in spec().shards() {
+            assert!(labels.iter().all(|&l| (0..5).contains(&l)));
+        }
+    }
+
+    #[test]
+    fn materialize_and_fetch() {
+        let cluster = Arc::new(StorageCluster::new(3, 2));
+        let s = spec();
+        let ds = s.materialize(&cluster).unwrap();
+        assert!(cluster.contains(&s.shard_key(0)));
+        let labels = DatasetSpec::fetch_labels(&ds, &cluster).unwrap();
+        assert_eq!(labels.len(), 250);
+        let direct: Vec<i32> = s.shards().flat_map(|(_, l)| l).collect();
+        assert_eq!(labels, direct);
+    }
+}

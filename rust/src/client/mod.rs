@@ -1,0 +1,391 @@
+//! The Hapi client — the compute-tier half of the system (§5.2, §5.4).
+//!
+//! Per application it profiles the model (§5.3; the static profile comes
+//! from the AOT metadata), chooses the split index once (Algorithm 1),
+//! then per training iteration fans out one POST per storage object,
+//! reorders the intermediate results into training-batch order
+//! (preserving the learning trajectory), executes the leftover frozen
+//! units `[split+1, freeze]` at the *training* batch size, and trains the
+//! tail with gradient accumulation over micro-batches + one SGD update —
+//! numerically a full-batch step (see `python/compile/model.py`).
+//!
+//! Iterations are double-buffered: iteration `k+1`'s POSTs are in flight
+//! while iteration `k` computes, the same overlap the paper's baseline
+//! and Hapi both employ.
+
+pub mod dataset;
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::HapiConfig;
+use crate::cos::protocol::CosConnection;
+use crate::error::{Error, Result};
+use crate::netsim::Link;
+use crate::profiler::AppProfile;
+use crate::runtime::{DeviceKind, DeviceSim, ModelArtifacts, Tensor};
+use crate::server::request::{PostRequest, RequestMode};
+use crate::split::{choose_split_idx, SplitDecision};
+
+pub use dataset::{DatasetRef, DatasetSpec};
+
+/// Outcome of one epoch.
+#[derive(Debug, Clone, Default)]
+pub struct EpochStats {
+    pub iterations: usize,
+    pub loss: Vec<f32>,
+    pub accuracy: Vec<f32>,
+    /// Wall time blocked on network+COS results (per iteration).
+    pub comm: Duration,
+    /// Wall time computing locally (per iteration sums).
+    pub comp: Duration,
+    pub bytes_from_cos: u64,
+    pub bytes_to_cos: u64,
+}
+
+impl EpochStats {
+    pub fn mean_loss(&self) -> f32 {
+        if self.loss.is_empty() {
+            0.0
+        } else {
+            self.loss.iter().sum::<f32>() / self.loss.len() as f32
+        }
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        self.loss.last().copied().unwrap_or(0.0)
+    }
+}
+
+pub struct HapiClient {
+    pub app: AppProfile,
+    pub split: SplitDecision,
+    arts: Arc<ModelArtifacts>,
+    cfg: HapiConfig,
+    addr: String,
+    link: Link,
+    device_kind: DeviceKind,
+    device: Arc<DeviceSim>,
+    tail_params: Mutex<Vec<Tensor>>,
+    next_req_id: std::sync::atomic::AtomicU64,
+}
+
+impl HapiClient {
+    /// The §7 BASELINE: stream raw images with GETs and run the whole
+    /// network on the compute tier.  Encoded as split index 0 (no units
+    /// pushed down); everything else (pipelining, training, memory
+    /// accounting) is shared with the Hapi path, mirroring §6's "users
+    /// provide the same training parameters in both cases".
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_baseline(
+        app: AppProfile,
+        arts: Arc<ModelArtifacts>,
+        cfg: HapiConfig,
+        addr: String,
+        link: Link,
+        device_kind: DeviceKind,
+    ) -> HapiClient {
+        let split = SplitDecision {
+            split_idx: 0,
+            out_bytes_per_sample: app.input_bytes(),
+            bytes_per_iteration: app.input_bytes() * cfg.train_batch as u64,
+            candidates: vec![],
+        };
+        let device =
+            DeviceSim::new("client-dev", device_kind, cfg.client_gpu_mem, 0);
+        let tail_params = Mutex::new(arts.initial_tail_params());
+        HapiClient {
+            app,
+            split,
+            arts,
+            cfg,
+            addr,
+            link,
+            device_kind,
+            device,
+            tail_params,
+            next_req_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// `split_override` forces a split index (the §7.3 static-freeze
+    /// competitor); `None` runs Algorithm 1.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        app: AppProfile,
+        arts: Arc<ModelArtifacts>,
+        cfg: HapiConfig,
+        addr: String,
+        link: Link,
+        device_kind: DeviceKind,
+        split_override: Option<usize>,
+    ) -> HapiClient {
+        let split = match split_override {
+            Some(idx) => SplitDecision {
+                split_idx: idx,
+                out_bytes_per_sample: app.out_bytes(idx),
+                bytes_per_iteration: app.out_bytes(idx)
+                    * cfg.train_batch as u64,
+                candidates: vec![idx],
+            },
+            None => choose_split_idx(
+                &app,
+                link.rate(),
+                cfg.split_window_secs,
+                cfg.train_batch,
+            ),
+        };
+        let device = DeviceSim::new(
+            "client-dev",
+            device_kind,
+            cfg.client_gpu_mem,
+            0,
+        );
+        let tail_params = Mutex::new(arts.initial_tail_params());
+        HapiClient {
+            app,
+            split,
+            arts,
+            cfg,
+            addr,
+            link,
+            device_kind,
+            device,
+            tail_params,
+            next_req_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    pub fn device(&self) -> &Arc<DeviceSim> {
+        &self.device
+    }
+
+    fn req_id(&self) -> u64 {
+        self.next_req_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Fan out one request per shard of the iteration and reassemble the
+    /// results in shard order (the reorder buffer of §5.2).  Hapi mode
+    /// (split ≥ 1) POSTs feature-extraction requests; BASELINE (split 0)
+    /// GETs the raw image objects.
+    fn fetch_features(&self, ds: &DatasetRef, shards: &[usize]) -> Result<Tensor> {
+        let mem = self.app.memory();
+        let split = self.split.split_idx;
+        let slots: Vec<Mutex<Option<Result<Tensor>>>> =
+            shards.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for (slot, &shard) in slots.iter().zip(shards) {
+                let link = self.link.clone();
+                let addr = self.addr.clone();
+                let samples = ds
+                    .shard_samples
+                    .min(ds.num_samples - shard * ds.shard_samples);
+                let mut dims = vec![samples];
+                dims.extend(&ds.input_shape);
+                let key = crate::cos::ObjectKey::shard(&ds.name, shard);
+                if split == 0 {
+                    // BASELINE: stream the raw object.
+                    scope.spawn(move || {
+                        let result = (|| -> Result<Tensor> {
+                            let mut conn =
+                                CosConnection::connect(&addr, link)?;
+                            let body = conn.get(&key)?;
+                            Tensor::from_raw(
+                                crate::runtime::DType::F32,
+                                dims,
+                                body,
+                            )
+                        })();
+                        *slot.lock().unwrap() = Some(result);
+                    });
+                    continue;
+                }
+                let req = PostRequest {
+                    id: self.req_id(),
+                    model: self.app.model.name.clone(),
+                    split_idx: split,
+                    object: key,
+                    labels_object: String::new(),
+                    input_dims: dims,
+                    b_max: self.cfg.object_samples.min(samples),
+                    mem_data_per_sample: mem.fe_data_bytes_per_sample(split),
+                    mem_model_bytes: mem.fe_model_bytes(split),
+                    mode: RequestMode::FeatureExtract,
+                };
+                scope.spawn(move || {
+                    let result = (|| -> Result<Tensor> {
+                        let mut conn = CosConnection::connect(&addr, link)?;
+                        let (header, body) =
+                            conn.post(req.to_json(), Vec::new())?;
+                        let dims =
+                            header.get("out_dims")?.as_usize_vec()?;
+                        Tensor::from_raw(
+                            crate::runtime::DType::F32,
+                            dims,
+                            body,
+                        )
+                    })();
+                    *slot.lock().unwrap() = Some(result);
+                });
+            }
+        });
+        // Reorder: shard order == training-batch order, regardless of
+        // POST completion order.
+        let mut parts = Vec::with_capacity(shards.len());
+        for slot in slots {
+            parts.push(slot.into_inner().unwrap().unwrap()?);
+        }
+        Tensor::concat_batch(&parts)
+    }
+
+    /// Compute phase for one iteration: leftover frozen units at the
+    /// training batch size, then grad accumulation + one SGD update.
+    fn compute_iteration(&self, feats: Tensor, labels: &[i32]) -> Result<(f32, f32)> {
+        let split = self.split.split_idx;
+        let freeze = self.app.freeze_idx();
+        let mem = self.app.memory();
+        let _lease = self
+            .device
+            .admit(mem.client_bytes(split, feats.dims[0]))?;
+
+        let feats = if split < freeze {
+            self.arts.forward_segment(
+                &feats,
+                split + 1,
+                freeze,
+                self.device_kind,
+                None,
+            )?
+        } else {
+            feats
+        };
+
+        let mb = self.arts.micro_batch();
+        let n = feats.dims[0];
+        debug_assert_eq!(n, labels.len());
+        let mut tail = self.tail_params.lock().unwrap();
+        let mut grad_sums: Option<Vec<Tensor>> = None;
+        let mut loss_sum = 0.0f32;
+        let mut correct_sum = 0.0f32;
+        let mut off = 0;
+        while off < n {
+            let len = mb.min(n - off);
+            let x = feats.slice_batch(off, len).pad_batch(mb);
+            let mut ybuf = vec![0i32; mb];
+            ybuf[..len].copy_from_slice(&labels[off..off + len]);
+            let y = Tensor::from_i32(vec![mb], &ybuf);
+            let mut mask = vec![0.0f32; mb];
+            mask[..len].iter_mut().for_each(|m| *m = 1.0);
+            let mask = Tensor::from_f32(vec![mb], &mask);
+            let t0 = Instant::now();
+            let (grads, loss, correct) =
+                self.arts.train_grads(&x, &y, &mask, &tail)?;
+            // Training compute on a weak client is modeled like its
+            // dominating dense kind (fully-connected backward).
+            self.device_kind
+                .charge(crate::model::UnitKind::Fc, t0.elapsed());
+            loss_sum += loss;
+            correct_sum += correct;
+            match grad_sums.as_mut() {
+                Some(acc) => ModelArtifacts::accumulate(acc, &grads)?,
+                None => grad_sums = Some(grads),
+            }
+            off += len;
+        }
+        if let Some(grads) = grad_sums {
+            let new_tail = self.arts.apply_update(
+                self.cfg.learning_rate,
+                n as f32,
+                &tail,
+                &grads,
+            )?;
+            *tail = new_tail;
+        }
+        Ok((loss_sum / n as f32, correct_sum / n as f32))
+    }
+
+    /// Train one epoch over the dataset; `labels` in global sample order.
+    pub fn train_epoch(&self, ds: &DatasetRef, labels: &[i32]) -> Result<EpochStats> {
+        if labels.len() != ds.num_samples {
+            return Err(Error::other("labels/dataset size mismatch"));
+        }
+        // Pre-flight memory check: a batch that can never fit the client
+        // device fails immediately (CUDA would crash on the first
+        // iteration's first allocation; failing before the transfer
+        // avoids paying for bytes a doomed epoch would stream).
+        let need = self.app.memory().client_bytes(
+            self.split.split_idx,
+            self.cfg.train_batch.min(ds.num_samples),
+        );
+        if need > self.device.usable() {
+            return Err(Error::Oom {
+                needed: need,
+                free: self.device.usable(),
+                capacity: self.device.capacity(),
+            });
+        }
+        let shards_per_iter =
+            (self.cfg.train_batch / ds.shard_samples).max(1);
+        let mut stats = EpochStats::default();
+        let tx0 = self.link.stats().tx_bytes();
+        let rx0 = self.link.stats().rx_bytes();
+
+        let iterations: Vec<Vec<usize>> = (0..ds.num_shards)
+            .collect::<Vec<_>>()
+            .chunks(shards_per_iter)
+            .map(|c| c.to_vec())
+            .collect();
+
+        // Double buffering: prefetch iteration k+1 while computing k.
+        let mut pending: Option<Result<Tensor>> = None;
+        for (it, shards) in iterations.iter().enumerate() {
+            let t_fetch = Instant::now();
+            let feats = match pending.take() {
+                Some(f) => f?,
+                None => self.fetch_features(ds, shards)?,
+            };
+            stats.comm += t_fetch.elapsed();
+
+            let next = iterations.get(it + 1).cloned();
+            let t_comp = Instant::now();
+            let (loss, acc) = std::thread::scope(|scope| {
+                let prefetch = next.map(|shards| {
+                    scope.spawn(move || self.fetch_features(ds, &shards))
+                });
+                let first = shards[0] * ds.shard_samples;
+                let count: usize = shards
+                    .iter()
+                    .map(|&s| {
+                        ds.shard_samples
+                            .min(ds.num_samples - s * ds.shard_samples)
+                    })
+                    .sum();
+                let out =
+                    self.compute_iteration(feats, &labels[first..first + count]);
+                if let Some(p) = prefetch {
+                    pending = Some(p.join().expect("prefetch panicked"));
+                }
+                out
+            })?;
+            stats.comp += t_comp.elapsed();
+            stats.iterations += 1;
+            stats.loss.push(loss);
+            stats.accuracy.push(acc);
+        }
+        stats.bytes_to_cos = self.link.stats().tx_bytes() - tx0;
+        stats.bytes_from_cos = self.link.stats().rx_bytes() - rx0;
+        Ok(stats)
+    }
+
+    /// Bytes transferred per iteration at the current split (analytic).
+    pub fn planned_bytes_per_iteration(&self) -> u64 {
+        self.split.bytes_per_iteration
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // HapiClient is integration-tested end to end in rust/tests/ (it
+    // needs artifacts + a running proxy); unit tests cover dataset.rs.
+}

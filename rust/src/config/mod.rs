@@ -1,0 +1,392 @@
+//! Configuration system: defaults, JSON config files, CLI overrides.
+//!
+//! All experiment knobs live here, mirroring the paper's §7.1 setup scaled
+//! 1:10 (DESIGN.md §2): object size 1000 → 100 samples, training batch
+//! 2000 → 200, COS batch 200 → 20, minimum COS batch 25 → 20 (one
+//! micro-batch), two simulated accelerators per tier.  Precedence:
+//! defaults < `--config file.json` < individual `--key` flags.
+
+use std::path::{Path, PathBuf};
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+use crate::netsim;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct HapiConfig {
+    /// Artifacts directory produced by `make artifacts`.
+    pub artifacts_dir: PathBuf,
+    /// Profile scale used for *analytic* size/memory figures.
+    pub scale: Scale,
+
+    // --- network (client ↔ COS link) --------------------------------
+    /// Bandwidth in bytes/sec; `None` = unshaped (the paper's 12 Gbps
+    /// "unrestricted" case).
+    pub bandwidth: Option<u64>,
+
+    // --- COS ----------------------------------------------------------
+    pub storage_nodes: usize,
+    pub replicas: usize,
+    /// Simulated storage-media read throughput per node (bytes/sec);
+    /// `None` = instantaneous (in-memory).  models the §2.1 storage-media bandwidth.
+    pub storage_read_rate: Option<u64>,
+    /// Samples per stored object (paper: 1000; tiny scale: 100).
+    pub object_samples: usize,
+
+    // --- simulated accelerators ---------------------------------------
+    /// Devices on the COS side (paper: 2× T4).
+    pub cos_gpus: usize,
+    /// Modeled memory capacity per COS device, bytes.
+    pub cos_gpu_mem: u64,
+    /// Memory reserved per device for the runtime (paper §7.7: CUDA +
+    /// framework reservations explain 32 GB − 28 GB).
+    pub reserved_bytes: u64,
+    /// Client-side device memory (strong client).
+    pub client_gpu_mem: u64,
+
+    // --- Hapi algorithm knobs ------------------------------------------
+    /// Minimum COS batch size (paper: 25).
+    pub min_cos_batch: usize,
+    /// Default COS batch size when batch adaptation is off (paper: 200).
+    pub default_cos_batch: usize,
+    /// Default training batch size (paper: 2000).
+    pub train_batch: usize,
+    /// Winner-selection constant C = bandwidth × `split_window_secs`
+    /// (§5.4: "a good value for C is network bandwidth times 1s").
+    pub split_window_secs: f64,
+    /// Enable server-side batch adaptation (§5.5).
+    pub batch_adaptation: bool,
+
+    // --- training -------------------------------------------------------
+    pub learning_rate: f32,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Paper,
+}
+
+impl Scale {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scale::Tiny => "tiny",
+            Scale::Paper => "paper",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Scale> {
+        match s {
+            "tiny" => Ok(Scale::Tiny),
+            "paper" => Ok(Scale::Paper),
+            other => Err(Error::Config(format!("unknown scale {other:?}"))),
+        }
+    }
+}
+
+impl Default for HapiConfig {
+    fn default() -> Self {
+        HapiConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            scale: Scale::Tiny,
+            // 1 Gbps in the paper ≙ 100 Mbps at tiny scale (data per
+            // iteration shrinks ~10x; see DESIGN.md §2 scale mapping).
+            bandwidth: Some(netsim::mbps(100.0)),
+            storage_nodes: 3,
+            replicas: 2,
+            storage_read_rate: None,
+            object_samples: 100,
+            cos_gpus: 2,
+            // Calibrated (EXPERIMENTS.md §Calibration) so the paper's
+            // crossovers reproduce at tiny scale: with forced COS batch
+            // 100, >6 concurrent no-BA requests exceed the two devices
+            // (Fig 14), and the BASELINE client OOMs the large models at
+            // train batch 800 while Hapi never does (Fig 10).
+            cos_gpu_mem: 29 << 20,
+            reserved_bytes: 8 << 20,
+            client_gpu_mem: 53 << 20,
+            min_cos_batch: 20,
+            default_cos_batch: 20,
+            train_batch: 200,
+            split_window_secs: 1.0,
+            batch_adaptation: true,
+            learning_rate: 0.02,
+            seed: 42,
+        }
+    }
+}
+
+impl HapiConfig {
+    /// defaults <- optional `--config <file>` <- individual flags.
+    pub fn from_args(args: &Args) -> Result<HapiConfig> {
+        let mut cfg = HapiConfig::default();
+        if let Some(path) = args.get("config") {
+            cfg.merge_json(&Json::parse_file(path)?)?;
+        }
+        cfg.apply_args(args)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn merge_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj()?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "artifacts_dir" => {
+                    self.artifacts_dir = PathBuf::from(v.as_str()?)
+                }
+                "scale" => self.scale = Scale::parse(v.as_str()?)?,
+                "bandwidth_mbps" => {
+                    let m = v.as_f64()?;
+                    self.bandwidth =
+                        if m <= 0.0 { None } else { Some(netsim::mbps(m)) };
+                }
+                "storage_nodes" => self.storage_nodes = v.as_usize()?,
+                "storage_read_rate_mbps" => {
+                    let m = v.as_f64()?;
+                    self.storage_read_rate = if m <= 0.0 {
+                        None
+                    } else {
+                        Some((m * 1e6 / 8.0) as u64)
+                    };
+                }
+                "replicas" => self.replicas = v.as_usize()?,
+                "object_samples" => self.object_samples = v.as_usize()?,
+                "cos_gpus" => self.cos_gpus = v.as_usize()?,
+                "cos_gpu_mem" => self.cos_gpu_mem = v.as_u64()?,
+                "reserved_bytes" => self.reserved_bytes = v.as_u64()?,
+                "client_gpu_mem" => self.client_gpu_mem = v.as_u64()?,
+                "min_cos_batch" => self.min_cos_batch = v.as_usize()?,
+                "default_cos_batch" => {
+                    self.default_cos_batch = v.as_usize()?
+                }
+                "train_batch" => self.train_batch = v.as_usize()?,
+                "split_window_secs" => {
+                    self.split_window_secs = v.as_f64()?
+                }
+                "batch_adaptation" => {
+                    self.batch_adaptation = v.as_bool()?
+                }
+                "learning_rate" => self.learning_rate = v.as_f64()? as f32,
+                "seed" => self.seed = v.as_u64()?,
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown config key {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("scale") {
+            self.scale = Scale::parse(v)?;
+        }
+        if let Some(v) = args.get("bandwidth-mbps") {
+            let m: f64 = v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad bandwidth {v:?}")))?;
+            self.bandwidth = if m <= 0.0 { None } else { Some(netsim::mbps(m)) };
+        }
+        self.storage_nodes = args.parse_or("storage-nodes", self.storage_nodes)?;
+        self.replicas = args.parse_or("replicas", self.replicas)?;
+        self.object_samples =
+            args.parse_or("object-samples", self.object_samples)?;
+        self.cos_gpus = args.parse_or("cos-gpus", self.cos_gpus)?;
+        self.cos_gpu_mem = args.parse_or("cos-gpu-mem", self.cos_gpu_mem)?;
+        self.min_cos_batch =
+            args.parse_or("min-cos-batch", self.min_cos_batch)?;
+        self.default_cos_batch =
+            args.parse_or("cos-batch", self.default_cos_batch)?;
+        self.train_batch = args.parse_or("train-batch", self.train_batch)?;
+        self.learning_rate =
+            args.parse_or("learning-rate", self.learning_rate)?;
+        self.seed = args.parse_or("seed", self.seed)?;
+        if args.flag("no-batch-adaptation") {
+            self.batch_adaptation = false;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.storage_nodes == 0 || self.replicas == 0 {
+            return Err(Error::Config("need ≥1 node and ≥1 replica".into()));
+        }
+        if self.replicas > self.storage_nodes {
+            return Err(Error::Config(format!(
+                "replicas {} > storage nodes {}",
+                self.replicas, self.storage_nodes
+            )));
+        }
+        if self.cos_gpus == 0 {
+            return Err(Error::Config("need ≥1 COS device".into()));
+        }
+        if self.min_cos_batch == 0 || self.object_samples == 0 {
+            return Err(Error::Config("batch knobs must be ≥1".into()));
+        }
+        if self.min_cos_batch > self.object_samples {
+            return Err(Error::Config(
+                "min COS batch exceeds object size".into(),
+            ));
+        }
+        if self.reserved_bytes >= self.cos_gpu_mem {
+            return Err(Error::Config(
+                "reserved bytes exceed device memory".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn profiles_dir(&self) -> PathBuf {
+        self.artifacts_dir.join("profiles")
+    }
+
+    pub fn model_dir(&self, model: &str) -> PathBuf {
+        self.artifacts_dir.join(model)
+    }
+
+    pub fn artifacts_present(&self) -> bool {
+        self.artifacts_dir.join(".stamp").exists()
+    }
+
+    /// Locate the artifacts dir from the current or parent dirs (tests and
+    /// examples run from various working directories).
+    pub fn discover_artifacts() -> Option<PathBuf> {
+        let mut dir = std::env::current_dir().ok()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join(".stamp").exists() {
+                return Some(cand);
+            }
+            if !dir.pop() {
+                return None;
+            }
+        }
+    }
+
+    /// Default config with a discovered artifacts dir (panics if absent —
+    /// experiment binaries require `make artifacts` first).
+    pub fn discovered() -> HapiConfig {
+        let mut cfg = HapiConfig::default();
+        if let Some(dir) = Self::discover_artifacts() {
+            cfg.artifacts_dir = dir;
+        }
+        cfg
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "artifacts_dir",
+                Json::str(self.artifacts_dir.display().to_string()),
+            ),
+            ("scale", Json::str(self.scale.as_str())),
+            (
+                "bandwidth_mbps",
+                Json::num(
+                    self.bandwidth
+                        .map(|b| b as f64 * 8.0 / 1e6)
+                        .unwrap_or(0.0),
+                ),
+            ),
+            ("storage_nodes", Json::num(self.storage_nodes as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("object_samples", Json::num(self.object_samples as f64)),
+            ("cos_gpus", Json::num(self.cos_gpus as f64)),
+            ("cos_gpu_mem", Json::num(self.cos_gpu_mem as f64)),
+            ("reserved_bytes", Json::num(self.reserved_bytes as f64)),
+            ("client_gpu_mem", Json::num(self.client_gpu_mem as f64)),
+            ("min_cos_batch", Json::num(self.min_cos_batch as f64)),
+            (
+                "default_cos_batch",
+                Json::num(self.default_cos_batch as f64),
+            ),
+            ("train_batch", Json::num(self.train_batch as f64)),
+            ("split_window_secs", Json::num(self.split_window_secs)),
+            ("batch_adaptation", Json::Bool(self.batch_adaptation)),
+            ("learning_rate", Json::num(self.learning_rate as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn defaults_validate() {
+        HapiConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let cfg = HapiConfig::from_args(&args(&[
+            "--train-batch",
+            "800",
+            "--bandwidth-mbps",
+            "50",
+            "--no-batch-adaptation",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.train_batch, 800);
+        assert_eq!(cfg.bandwidth, Some(netsim::mbps(50.0)));
+        assert!(!cfg.batch_adaptation);
+    }
+
+    #[test]
+    fn zero_bandwidth_means_unshaped() {
+        let cfg =
+            HapiConfig::from_args(&args(&["--bandwidth-mbps", "0"])).unwrap();
+        assert_eq!(cfg.bandwidth, None);
+    }
+
+    #[test]
+    fn json_merge_and_unknown_key() {
+        let mut cfg = HapiConfig::default();
+        cfg.merge_json(&Json::parse(r#"{"train_batch": 400}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.train_batch, 400);
+        assert!(cfg
+            .merge_json(&Json::parse(r#"{"nope": 1}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = HapiConfig::default();
+        cfg.replicas = 10;
+        assert!(cfg.validate().is_err());
+        let mut cfg = HapiConfig::default();
+        cfg.min_cos_batch = 1000;
+        assert!(cfg.validate().is_err());
+        let mut cfg = HapiConfig::default();
+        cfg.reserved_bytes = cfg.cos_gpu_mem;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = HapiConfig::default();
+        let mut cfg2 = HapiConfig::default();
+        cfg2.train_batch = 1; // will be overwritten
+        cfg2.merge_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.train_batch, cfg.train_batch);
+        assert_eq!(cfg2.bandwidth, cfg.bandwidth);
+    }
+}

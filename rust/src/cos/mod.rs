@@ -1,0 +1,29 @@
+//! The cloud-object-store substrate (OpenStack-Swift-like).
+//!
+//! The paper assumes a Swift-style COS: **proxy servers** front
+//! **storage nodes** that hold replicated, fixed-size objects; clients
+//! speak to the proxy over a bandwidth-constrained network while the
+//! proxy ↔ storage path is fast (§2.1).  Swift itself is not available to
+//! a pure-Rust offline build, so this module *is* the object store:
+//!
+//! - [`object`]  — keys, objects, integrity checksums;
+//! - [`ring`]    — consistent-hash placement with virtual nodes and
+//!   N-way replication (Swift's "ring");
+//! - [`storage`] — storage nodes and the replicated cluster API;
+//! - [`protocol`] — the length-prefixed wire protocol (GET / PUT / POST /
+//!   STAT verbs) with exact byte metering through [`crate::netsim::Link`];
+//! - [`proxy`]   — the TCP proxy server; the Hapi server (§5) plugs in as
+//!   the POST handler, mirroring how the paper embeds compute next to the
+//!   Swift proxy.
+
+pub mod object;
+pub mod protocol;
+pub mod proxy;
+pub mod ring;
+pub mod storage;
+
+pub use object::{Object, ObjectKey};
+pub use protocol::{CosConnection, Request, Response};
+pub use proxy::{PostHandler, Proxy, ProxyConfig};
+pub use ring::Ring;
+pub use storage::{StorageCluster, StorageNode};

@@ -1,0 +1,369 @@
+//! Length-prefixed wire protocol between the compute tier and the COS
+//! proxy, with exact byte metering through [`crate::netsim::Link`].
+//!
+//! Frame layout (little-endian):
+//!
+//! ```text
+//! u8 opcode | u32 payload_len | payload
+//! ```
+//!
+//! Verbs mirror the paper's request flow (§5.2): `GET`/`PUT` move raw
+//! objects (the BASELINE streams training data with GETs), `POST` carries
+//! a Hapi feature-extraction request — a JSON header (split index, model,
+//! batch bounds, memory estimates) plus an opaque binary body — and
+//! `STAT` exposes server metrics.  Every frame that crosses the link is
+//! charged to the connection's [`Link`], which is where the §7.4
+//! bandwidth limits bite.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::error::{Error, Result};
+use crate::netsim::Link;
+use crate::util::json::Json;
+
+use super::object::ObjectKey;
+
+const MAX_FRAME: u32 = 1 << 30; // 1 GiB sanity bound
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Get(ObjectKey),
+    Put(ObjectKey, Vec<u8>),
+    /// JSON header + binary body (Hapi feature-extraction request).
+    Post(Json, Vec<u8>),
+    Stat,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Raw payload (GET result, PUT ack is empty).
+    Ok(Vec<u8>),
+    /// JSON header + binary body (Hapi feature-extraction result).
+    OkPost(Json, Vec<u8>),
+    Err(String),
+}
+
+const OP_GET: u8 = 1;
+const OP_PUT: u8 = 2;
+const OP_POST: u8 = 3;
+const OP_STAT: u8 = 4;
+const OP_OK: u8 = 128;
+const OP_OK_POST: u8 = 129;
+const OP_ERR: u8 = 130;
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u16(b: &[u8], at: usize) -> Result<u16> {
+    b.get(at..at + 2)
+        .map(|s| u16::from_le_bytes([s[0], s[1]]))
+        .ok_or_else(|| Error::Protocol("truncated u16".into()))
+}
+
+fn get_u32(b: &[u8], at: usize) -> Result<u32> {
+    b.get(at..at + 4)
+        .map(|s| u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        .ok_or_else(|| Error::Protocol("truncated u32".into()))
+}
+
+impl Request {
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            Request::Get(key) => (OP_GET, key.as_str().as_bytes().to_vec()),
+            Request::Put(key, data) => {
+                let kb = key.as_str().as_bytes();
+                let mut p = Vec::with_capacity(2 + kb.len() + data.len());
+                put_u16(&mut p, kb.len() as u16);
+                p.extend_from_slice(kb);
+                p.extend_from_slice(data);
+                (OP_PUT, p)
+            }
+            Request::Post(header, body) => {
+                let hs = header.to_string_compact();
+                let hb = hs.as_bytes();
+                let mut p = Vec::with_capacity(4 + hb.len() + body.len());
+                put_u32(&mut p, hb.len() as u32);
+                p.extend_from_slice(hb);
+                p.extend_from_slice(body);
+                (OP_POST, p)
+            }
+            Request::Stat => (OP_STAT, Vec::new()),
+        }
+    }
+
+    pub fn decode(op: u8, payload: Vec<u8>) -> Result<Request> {
+        match op {
+            OP_GET => Ok(Request::Get(ObjectKey::new(
+                String::from_utf8(payload)
+                    .map_err(|_| Error::Protocol("bad utf8 key".into()))?,
+            ))),
+            OP_PUT => {
+                let klen = get_u16(&payload, 0)? as usize;
+                if payload.len() < 2 + klen {
+                    return Err(Error::Protocol("truncated PUT".into()));
+                }
+                let key = std::str::from_utf8(&payload[2..2 + klen])
+                    .map_err(|_| Error::Protocol("bad utf8 key".into()))?
+                    .to_string();
+                Ok(Request::Put(
+                    ObjectKey::new(key),
+                    payload[2 + klen..].to_vec(),
+                ))
+            }
+            OP_POST => {
+                let hlen = get_u32(&payload, 0)? as usize;
+                if payload.len() < 4 + hlen {
+                    return Err(Error::Protocol("truncated POST".into()));
+                }
+                let header = Json::parse(
+                    std::str::from_utf8(&payload[4..4 + hlen])
+                        .map_err(|_| Error::Protocol("bad utf8 header".into()))?,
+                )?;
+                Ok(Request::Post(header, payload[4 + hlen..].to_vec()))
+            }
+            OP_STAT => Ok(Request::Stat),
+            other => Err(Error::Protocol(format!("unknown request op {other}"))),
+        }
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            Response::Ok(data) => (OP_OK, data.clone()),
+            Response::OkPost(header, body) => {
+                let hs = header.to_string_compact();
+                let hb = hs.as_bytes();
+                let mut p = Vec::with_capacity(4 + hb.len() + body.len());
+                put_u32(&mut p, hb.len() as u32);
+                p.extend_from_slice(hb);
+                p.extend_from_slice(body);
+                (OP_OK_POST, p)
+            }
+            Response::Err(msg) => (OP_ERR, msg.as_bytes().to_vec()),
+        }
+    }
+
+    pub fn decode(op: u8, payload: Vec<u8>) -> Result<Response> {
+        match op {
+            OP_OK => Ok(Response::Ok(payload)),
+            OP_OK_POST => {
+                let hlen = get_u32(&payload, 0)? as usize;
+                if payload.len() < 4 + hlen {
+                    return Err(Error::Protocol("truncated OK_POST".into()));
+                }
+                let header = Json::parse(
+                    std::str::from_utf8(&payload[4..4 + hlen])
+                        .map_err(|_| Error::Protocol("bad utf8 header".into()))?,
+                )?;
+                Ok(Response::OkPost(header, payload[4 + hlen..].to_vec()))
+            }
+            OP_ERR => Ok(Response::Err(
+                String::from_utf8_lossy(&payload).into_owned(),
+            )),
+            other => Err(Error::Protocol(format!("unknown response op {other}"))),
+        }
+    }
+
+    pub fn into_result(self) -> Result<Response> {
+        match self {
+            Response::Err(msg) => Err(Error::Cos(msg)),
+            ok => Ok(ok),
+        }
+    }
+}
+
+/// A framed, metered connection.  Used on both ends: the client charges
+/// its shaped [`Link`]; the proxy passes an unshaped link (shaping once is
+/// both sufficient and avoids double-charging the same bytes).
+pub struct CosConnection {
+    stream: TcpStream,
+    link: Link,
+}
+
+impl CosConnection {
+    pub fn new(stream: TcpStream, link: Link) -> Self {
+        stream.set_nodelay(true).ok();
+        CosConnection { stream, link }
+    }
+
+    pub fn connect(addr: &str, link: Link) -> Result<Self> {
+        Ok(CosConnection::new(TcpStream::connect(addr)?, link))
+    }
+
+    pub fn link(&self) -> &Link {
+        &self.link
+    }
+
+    fn write_frame(&mut self, op: u8, payload: &[u8]) -> Result<()> {
+        let total = 5 + payload.len() as u64;
+        self.link.send(total);
+        let mut head = [0u8; 5];
+        head[0] = op;
+        head[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.stream.write_all(&head)?;
+        self.stream.write_all(payload)?;
+        Ok(())
+    }
+
+    fn read_frame(&mut self) -> Result<(u8, Vec<u8>)> {
+        let mut head = [0u8; 5];
+        self.stream.read_exact(&mut head)?;
+        let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
+        if len > MAX_FRAME {
+            return Err(Error::Protocol(format!("frame too large: {len}")));
+        }
+        let mut payload = vec![0u8; len as usize];
+        self.stream.read_exact(&mut payload)?;
+        self.link.recv(5 + len as u64);
+        Ok((head[0], payload))
+    }
+
+    // --- client side -------------------------------------------------
+
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        let (op, payload) = req.encode();
+        self.write_frame(op, &payload)?;
+        let (rop, rpayload) = self.read_frame()?;
+        Response::decode(rop, rpayload)?.into_result()
+    }
+
+    pub fn get(&mut self, key: &ObjectKey) -> Result<Vec<u8>> {
+        match self.call(&Request::Get(key.clone()))? {
+            Response::Ok(data) => Ok(data),
+            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    pub fn put(&mut self, key: &ObjectKey, data: Vec<u8>) -> Result<()> {
+        match self.call(&Request::Put(key.clone(), data))? {
+            Response::Ok(_) => Ok(()),
+            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    pub fn post(&mut self, header: Json, body: Vec<u8>) -> Result<(Json, Vec<u8>)> {
+        match self.call(&Request::Post(header, body))? {
+            Response::OkPost(h, b) => Ok((h, b)),
+            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    pub fn stat(&mut self) -> Result<Json> {
+        match self.call(&Request::Stat)? {
+            Response::Ok(data) => Json::parse(
+                std::str::from_utf8(&data)
+                    .map_err(|_| Error::Protocol("bad stat utf8".into()))?,
+            ),
+            other => Err(Error::Protocol(format!("unexpected {other:?}"))),
+        }
+    }
+
+    // --- server side ---------------------------------------------------
+
+    /// Read one request; `Ok(None)` on clean EOF.
+    pub fn read_request(&mut self) -> Result<Option<Request>> {
+        match self.read_frame() {
+            Ok((op, payload)) => Ok(Some(Request::decode(op, payload)?)),
+            Err(Error::Io(e))
+                if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+            {
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    pub fn write_response(&mut self, resp: &Response) -> Result<()> {
+        let (op, payload) = resp.encode();
+        self.write_frame(op, &payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        let (op, p) = r.encode();
+        assert_eq!(Request::decode(op, p).unwrap(), r);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(Request::Get("a/b".into()));
+        roundtrip_req(Request::Put("k".into(), vec![1, 2, 3]));
+        roundtrip_req(Request::Post(
+            Json::parse(r#"{"split": 5, "model": "alexnet"}"#).unwrap(),
+            vec![9; 100],
+        ));
+        roundtrip_req(Request::Stat);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for r in [
+            Response::Ok(vec![4, 5]),
+            Response::OkPost(Json::parse("{}").unwrap(), vec![1]),
+            Response::Err("boom".into()),
+        ] {
+            let (op, p) = r.encode();
+            assert_eq!(Response::decode(op, p).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn err_becomes_error() {
+        assert!(Response::Err("x".into()).into_result().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_and_truncated() {
+        assert!(Request::decode(99, vec![]).is_err());
+        assert!(Request::decode(OP_PUT, vec![5, 0, b'a']).is_err());
+        assert!(Request::decode(OP_POST, vec![10, 0, 0, 0, b'{']).is_err());
+        assert!(Response::decode(77, vec![]).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip_with_metering() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = CosConnection::new(s, Link::unshaped());
+            while let Some(req) = conn.read_request().unwrap() {
+                let resp = match req {
+                    Request::Get(k) => {
+                        Response::Ok(k.as_str().as_bytes().to_vec())
+                    }
+                    Request::Put(..) => Response::Ok(vec![]),
+                    Request::Post(h, b) => Response::OkPost(h, b),
+                    Request::Stat => Response::Ok(b"{}".to_vec()),
+                };
+                conn.write_response(&resp).unwrap();
+            }
+        });
+
+        let link = Link::unshaped();
+        let mut conn =
+            CosConnection::connect(&addr.to_string(), link.clone()).unwrap();
+        assert_eq!(conn.get(&"hello".into()).unwrap(), b"hello".to_vec());
+        let (h, b) = conn
+            .post(Json::parse(r#"{"x":1}"#).unwrap(), vec![7; 10])
+            .unwrap();
+        assert_eq!(h.get("x").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(b, vec![7; 10]);
+        assert!(link.stats().tx_bytes() > 0);
+        assert!(link.stats().rx_bytes() > 0);
+        drop(conn);
+        server.join().unwrap();
+    }
+}

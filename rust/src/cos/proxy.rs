@@ -1,0 +1,391 @@
+//! The COS proxy server.
+//!
+//! Accepts client connections, serves `GET`/`PUT` against the replicated
+//! [`StorageCluster`], and dispatches `POST` (Hapi feature-extraction
+//! requests) to a pluggable [`PostHandler`] — exactly how the paper embeds
+//! Hapi next to the Swift proxy (§6).
+//!
+//! Two execution modes reproduce Table 3:
+//! - [`ProxyMode::InProxy`]: POST work runs on the proxy's own small I/O
+//!   pool (Swift's green-threading, one OS process doing everything);
+//! - [`ProxyMode::Decoupled`]: POST work runs on a dedicated worker pool,
+//!   the design the paper ships.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::error::Result;
+use crate::exec::Pool;
+use crate::metrics::Registry;
+use crate::netsim::Link;
+use crate::util::json::Json;
+
+use super::protocol::{CosConnection, Request, Response};
+use super::storage::StorageCluster;
+
+/// Server-side hook for Hapi POSTs.
+pub trait PostHandler: Send + Sync {
+    fn handle(&self, header: Json, body: Vec<u8>) -> Result<(Json, Vec<u8>)>;
+}
+
+/// No-op handler (plain object store).
+pub struct NoPost;
+
+impl PostHandler for NoPost {
+    fn handle(&self, _h: Json, _b: Vec<u8>) -> Result<(Json, Vec<u8>)> {
+        Err(crate::error::Error::Cos(
+            "this proxy has no compute handler".into(),
+        ))
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProxyMode {
+    InProxy,
+    Decoupled,
+}
+
+#[derive(Clone)]
+pub struct ProxyConfig {
+    pub mode: ProxyMode,
+    /// Worker threads for POST compute (Decoupled mode).
+    pub compute_workers: usize,
+    /// Threads serving connection I/O (and POSTs in InProxy mode).
+    pub io_workers: usize,
+}
+
+impl Default for ProxyConfig {
+    fn default() -> Self {
+        ProxyConfig {
+            mode: ProxyMode::Decoupled,
+            compute_workers: 2,
+            io_workers: 8,
+        }
+    }
+}
+
+pub struct Proxy {
+    addr: String,
+    accept_thread: Option<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+struct Shared {
+    cluster: Arc<StorageCluster>,
+    handler: Arc<dyn PostHandler>,
+    compute: Option<Arc<Pool>>, // None => InProxy (inline on I/O thread)
+    /// InProxy mode: Swift's green-threading runs every request in one
+    /// OS process, so CPU-bound ML work blocks all other request
+    /// handling — modeled by serialising the dispatch+response path.
+    green_thread: Option<std::sync::Mutex<()>>,
+    registry: Registry,
+}
+
+impl Proxy {
+    /// Start listening on an ephemeral localhost port.
+    pub fn start(
+        cluster: Arc<StorageCluster>,
+        handler: Arc<dyn PostHandler>,
+        config: ProxyConfig,
+        registry: Registry,
+    ) -> Result<Proxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let compute = match config.mode {
+            ProxyMode::Decoupled => Some(Arc::new(Pool::new(
+                "cos-compute",
+                config.compute_workers,
+            ))),
+            ProxyMode::InProxy => None,
+        };
+        let shared = Arc::new(Shared {
+            cluster,
+            handler,
+            compute,
+            green_thread: match config.mode {
+                ProxyMode::InProxy => Some(std::sync::Mutex::new(())),
+                ProxyMode::Decoupled => None,
+            },
+            registry,
+        });
+
+        let sd = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("cos-accept".into())
+            .spawn(move || {
+                // Connection threads are detached: they exit on client
+                // EOF.  Joining them here would deadlock shutdown while a
+                // client keeps an idle connection open.
+                while !sd.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let shared = shared.clone();
+                            std::thread::Builder::new()
+                                .name("cos-conn".into())
+                                .spawn(move || serve_conn(stream, shared))
+                                .expect("spawn conn");
+                        }
+                        Err(e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(2),
+                            );
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn accept");
+
+        Ok(Proxy {
+            addr,
+            accept_thread: Some(accept_thread),
+            shutdown,
+        })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Proxy {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
+    // The proxy side never shapes: the client's connection already charged
+    // the (single) constrained link for these bytes.
+    let mut conn = CosConnection::new(stream, Link::unshaped());
+    loop {
+        let req = match conn.read_request() {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean EOF
+            Err(e) => {
+                log::debug!("connection error: {e}");
+                return;
+            }
+        };
+        let _green = shared
+            .green_thread
+            .as_ref()
+            .map(|m| m.lock().unwrap());
+        let resp = handle(&shared, req);
+        if conn.write_response(&resp).is_err() {
+            return;
+        }
+        drop(_green);
+    }
+}
+
+fn handle(shared: &Arc<Shared>, req: Request) -> Response {
+    match req {
+        Request::Get(key) => {
+            shared.registry.counter("cos.get").inc();
+            match shared.cluster.get(&key) {
+                Ok(obj) => {
+                    shared
+                        .registry
+                        .counter("cos.get_bytes")
+                        .add(obj.len() as u64);
+                    Response::Ok(obj.data.as_ref().clone())
+                }
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+        Request::Put(key, data) => {
+            shared.registry.counter("cos.put").inc();
+            shared
+                .registry
+                .counter("cos.put_bytes")
+                .add(data.len() as u64);
+            shared
+                .cluster
+                .put(super::object::Object::new(key, data));
+            Response::Ok(Vec::new())
+        }
+        Request::Post(header, body) => {
+            shared.registry.counter("cos.post").inc();
+            let t0 = std::time::Instant::now();
+            let result = match &shared.compute {
+                // Decoupled: run on the dedicated pool, wait for the slot.
+                Some(pool) => {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    let h = shared.handler.clone();
+                    pool.submit(move || {
+                        let _ = tx.send(h.handle(header, body));
+                    });
+                    rx.recv().unwrap_or_else(|_| {
+                        Err(crate::error::Error::Cos(
+                            "compute worker died".into(),
+                        ))
+                    })
+                }
+                // InProxy: inline on the connection thread (green-thread
+                // style sharing of the proxy process).
+                None => shared.handler.handle(header, body),
+            };
+            shared
+                .registry
+                .histogram("cos.post_latency_ns")
+                .record(t0.elapsed().as_nanos() as u64);
+            match result {
+                Ok((h, b)) => Response::OkPost(h, b),
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+        Request::Stat => {
+            Response::Ok(shared.registry.snapshot().to_string_compact().into_bytes())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cos::object::Object;
+
+    fn start_proxy(handler: Arc<dyn PostHandler>) -> (Proxy, Arc<StorageCluster>) {
+        let cluster = Arc::new(StorageCluster::new(3, 2));
+        let proxy = Proxy::start(
+            cluster.clone(),
+            handler,
+            ProxyConfig::default(),
+            Registry::new(),
+        )
+        .unwrap();
+        (proxy, cluster)
+    }
+
+    #[test]
+    fn get_put_over_tcp() {
+        let (proxy, cluster) = start_proxy(Arc::new(NoPost));
+        let mut conn =
+            CosConnection::connect(proxy.addr(), Link::unshaped()).unwrap();
+        conn.put(&"c/obj1".into(), vec![5; 64]).unwrap();
+        assert!(cluster.contains(&"c/obj1".into()));
+        assert_eq!(conn.get(&"c/obj1".into()).unwrap(), vec![5; 64]);
+        assert!(conn.get(&"missing".into()).is_err());
+        proxy.stop();
+    }
+
+    struct Echo;
+
+    impl PostHandler for Echo {
+        fn handle(&self, h: Json, b: Vec<u8>) -> Result<(Json, Vec<u8>)> {
+            Ok((h, b.iter().rev().copied().collect()))
+        }
+    }
+
+    #[test]
+    fn post_dispatches_to_handler() {
+        let (proxy, _cluster) = start_proxy(Arc::new(Echo));
+        let mut conn =
+            CosConnection::connect(proxy.addr(), Link::unshaped()).unwrap();
+        let (h, b) = conn
+            .post(Json::parse(r#"{"id": 3}"#).unwrap(), vec![1, 2, 3])
+            .unwrap();
+        assert_eq!(h.get("id").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(b, vec![3, 2, 1]);
+        proxy.stop();
+    }
+
+    #[test]
+    fn stat_returns_metrics() {
+        let (proxy, _cluster) = start_proxy(Arc::new(NoPost));
+        let mut conn =
+            CosConnection::connect(proxy.addr(), Link::unshaped()).unwrap();
+        conn.put(&"a".into(), vec![0; 10]).unwrap();
+        let stats = conn.stat().unwrap();
+        let puts = stats
+            .get("counters")
+            .unwrap()
+            .get("cos.put")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        assert_eq!(puts, 1);
+        proxy.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (proxy, _cluster) = start_proxy(Arc::new(Echo));
+        let addr = proxy.addr().to_string();
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut conn =
+                        CosConnection::connect(&addr, Link::unshaped())
+                            .unwrap();
+                    for j in 0..20 {
+                        let key =
+                            crate::cos::ObjectKey::new(format!("t{i}/o{j}"));
+                        conn.put(&key, vec![i as u8; 128]).unwrap();
+                        assert_eq!(
+                            conn.get(&key).unwrap(),
+                            vec![i as u8; 128]
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        proxy.stop();
+    }
+
+    #[test]
+    fn in_proxy_mode_serves() {
+        let cluster = Arc::new(StorageCluster::new(2, 1));
+        let proxy = Proxy::start(
+            cluster,
+            Arc::new(Echo),
+            ProxyConfig {
+                mode: ProxyMode::InProxy,
+                compute_workers: 0,
+                io_workers: 2,
+            },
+            Registry::new(),
+        )
+        .unwrap();
+        let mut conn =
+            CosConnection::connect(proxy.addr(), Link::unshaped()).unwrap();
+        let (_, b) = conn.post(Json::parse("{}").unwrap(), vec![9, 8]).unwrap();
+        assert_eq!(b, vec![8, 9]);
+        proxy.stop();
+    }
+
+    #[test]
+    fn object_checksum_roundtrip_through_cluster() {
+        let (proxy, cluster) = start_proxy(Arc::new(NoPost));
+        let mut conn =
+            CosConnection::connect(proxy.addr(), Link::unshaped()).unwrap();
+        let data: Vec<u8> = (0..=255).cycle().take(10_000).collect();
+        conn.put(&"big".into(), data.clone()).unwrap();
+        let obj = cluster.get(&"big".into()).unwrap();
+        assert!(obj.verify());
+        assert_eq!(Object::new("big".into(), data).checksum, obj.checksum);
+        proxy.stop();
+    }
+}

@@ -1,0 +1,179 @@
+//! Consistent-hash ring with virtual nodes and N-way replication —
+//! Swift's "ring" in miniature.
+//!
+//! Placement invariants (property-tested below and in `rust/tests/`):
+//! - every key maps to exactly `replicas` *distinct* nodes (when enough
+//!   nodes exist);
+//! - placement is deterministic;
+//! - adding/removing one node only moves the minimal share of keys
+//!   (consistent hashing's raison d'être).
+
+use std::collections::BTreeMap;
+
+use super::object::fnv1a;
+
+const VNODES: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// hash point → node id
+    points: BTreeMap<u64, usize>,
+    nodes: Vec<String>,
+    replicas: usize,
+}
+
+impl Ring {
+    pub fn new(node_names: &[String], replicas: usize) -> Self {
+        assert!(!node_names.is_empty());
+        assert!(replicas >= 1);
+        let mut ring = Ring {
+            points: BTreeMap::new(),
+            nodes: Vec::new(),
+            replicas,
+        };
+        for name in node_names {
+            ring.add_node(name.clone());
+        }
+        ring
+    }
+
+    pub fn add_node(&mut self, name: String) -> usize {
+        let id = self.nodes.len();
+        for v in 0..VNODES {
+            let point = fnv1a(format!("{name}#{v}").as_bytes());
+            self.points.insert(point, id);
+        }
+        self.nodes.push(name);
+        id
+    }
+
+    pub fn remove_node(&mut self, id: usize) {
+        let name = self.nodes[id].clone();
+        for v in 0..VNODES {
+            let point = fnv1a(format!("{name}#{v}").as_bytes());
+            self.points.remove(&point);
+        }
+        // Keep ids stable: mark the slot dead rather than re-indexing.
+        self.nodes[id] = String::new();
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.is_empty()).count()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// The `replicas` distinct nodes responsible for `key`, primary first.
+    pub fn nodes_for(&self, key: &str) -> Vec<usize> {
+        let h = fnv1a(key.as_bytes());
+        let mut out = Vec::with_capacity(self.replicas);
+        // Walk the ring clockwise from h, wrapping, collecting distinct
+        // node ids.
+        for (_, &id) in self.points.range(h..).chain(self.points.range(..h)) {
+            if !out.contains(&id) {
+                out.push(id);
+                if out.len() == self.replicas.min(self.num_nodes()) {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn primary_for(&self, key: &str) -> usize {
+        self.nodes_for(key)[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("node{i}")).collect()
+    }
+
+    #[test]
+    fn deterministic_and_distinct() {
+        let ring = Ring::new(&names(5), 3);
+        for i in 0..200 {
+            let key = format!("obj{i}");
+            let a = ring.nodes_for(&key);
+            let b = ring.nodes_for(&key);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), 3);
+            let mut d = a.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 3, "replicas must be distinct");
+        }
+    }
+
+    #[test]
+    fn fewer_nodes_than_replicas() {
+        let ring = Ring::new(&names(2), 3);
+        assert_eq!(ring.nodes_for("x").len(), 2);
+    }
+
+    #[test]
+    fn balanced_within_reason() {
+        let ring = Ring::new(&names(4), 1);
+        let mut counts = [0usize; 4];
+        let mut rng = Rng::new(11);
+        for _ in 0..4000 {
+            let key = format!("k{}", rng.next_u64());
+            counts[ring.primary_for(&key)] += 1;
+        }
+        for &c in &counts {
+            assert!(
+                (500..=2000).contains(&c),
+                "imbalanced: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn minimal_movement_on_node_add() {
+        let ring_a = Ring::new(&names(4), 1);
+        let mut ring_b = Ring::new(&names(4), 1);
+        ring_b.add_node("node4".to_string());
+        let mut moved = 0;
+        let total = 2000;
+        for i in 0..total {
+            let key = format!("obj{i}");
+            if ring_a.primary_for(&key) != ring_b.primary_for(&key) {
+                moved += 1;
+            }
+        }
+        // Ideal movement is 1/5 of keys; allow 2x slack for hash variance.
+        assert!(
+            moved < total * 2 / 5,
+            "moved {moved}/{total}, expected ~{}",
+            total / 5
+        );
+        assert!(moved > 0);
+    }
+
+    #[test]
+    fn removal_reroutes_only_removed_nodes_keys() {
+        let mut ring = Ring::new(&names(4), 1);
+        let before: Vec<(String, usize)> = (0..500)
+            .map(|i| {
+                let k = format!("obj{i}");
+                let p = ring.primary_for(&k);
+                (k, p)
+            })
+            .collect();
+        ring.remove_node(2);
+        for (k, old_primary) in before {
+            let new_primary = ring.primary_for(&k);
+            assert_ne!(new_primary, 2);
+            if old_primary != 2 {
+                assert_eq!(new_primary, old_primary, "key {k} moved needlessly");
+            }
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Storage nodes and the replicated cluster behind the proxy.
+//!
+//! A [`StorageNode`] is a thread-safe object map with byte accounting and
+//! an optional per-read latency model (spinning-rust vs NVMe presets feed
+//! the §2.1 storage-bandwidth discussion).  [`StorageCluster`] places
+//! objects through the [`Ring`][super::ring::Ring] and handles replica
+//! fan-out on writes and failover on reads.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use super::object::{Object, ObjectKey};
+use super::ring::Ring;
+use crate::error::{Error, Result};
+
+#[derive(Debug, Default)]
+pub struct NodeStats {
+    pub gets: AtomicU64,
+    pub puts: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+}
+
+pub struct StorageNode {
+    name: String,
+    objects: RwLock<BTreeMap<ObjectKey, Object>>,
+    stats: NodeStats,
+    /// Simulated media read throughput (bytes/sec); None = instantaneous.
+    read_rate: Option<u64>,
+}
+
+impl StorageNode {
+    pub fn new(name: impl Into<String>) -> Self {
+        StorageNode {
+            name: name.into(),
+            objects: RwLock::new(BTreeMap::new()),
+            stats: NodeStats::default(),
+            read_rate: None,
+        }
+    }
+
+    /// Model media throughput; reads sleep `len / rate`.
+    pub fn with_read_rate(mut self, bytes_per_sec: u64) -> Self {
+        self.read_rate = Some(bytes_per_sec);
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn put(&self, obj: Object) {
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_written
+            .fetch_add(obj.len() as u64, Ordering::Relaxed);
+        self.objects.write().unwrap().insert(obj.key.clone(), obj);
+    }
+
+    pub fn get(&self, key: &ObjectKey) -> Option<Object> {
+        let obj = self.objects.read().unwrap().get(key).cloned()?;
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_read
+            .fetch_add(obj.len() as u64, Ordering::Relaxed);
+        if let Some(rate) = self.read_rate {
+            std::thread::sleep(Duration::from_secs_f64(
+                obj.len() as f64 / rate as f64,
+            ));
+        }
+        Some(obj)
+    }
+
+    pub fn delete(&self, key: &ObjectKey) -> bool {
+        self.objects.write().unwrap().remove(key).is_some()
+    }
+
+    pub fn contains(&self, key: &ObjectKey) -> bool {
+        self.objects.read().unwrap().contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes_stored(&self) -> u64 {
+        self.objects
+            .read()
+            .unwrap()
+            .values()
+            .map(|o| o.len() as u64)
+            .sum()
+    }
+
+    pub fn stats(&self) -> &NodeStats {
+        &self.stats
+    }
+}
+
+/// Ring + nodes: the storage tier behind one proxy.
+pub struct StorageCluster {
+    ring: Ring,
+    nodes: Vec<Arc<StorageNode>>,
+}
+
+impl StorageCluster {
+    /// `n` fresh nodes with `replicas`-way replication.
+    pub fn new(n: usize, replicas: usize) -> Self {
+        let nodes: Vec<Arc<StorageNode>> = (0..n)
+            .map(|i| Arc::new(StorageNode::new(format!("node{i}"))))
+            .collect();
+        let names: Vec<String> =
+            nodes.iter().map(|n| n.name().to_string()).collect();
+        StorageCluster {
+            ring: Ring::new(&names, replicas),
+            nodes,
+        }
+    }
+
+    pub fn from_nodes(nodes: Vec<Arc<StorageNode>>, replicas: usize) -> Self {
+        let names: Vec<String> =
+            nodes.iter().map(|n| n.name().to_string()).collect();
+        StorageCluster {
+            ring: Ring::new(&names, replicas),
+            nodes,
+        }
+    }
+
+    /// Write to every replica.
+    pub fn put(&self, obj: Object) {
+        for id in self.ring.nodes_for(obj.key.as_str()) {
+            self.nodes[id].put(obj.clone());
+        }
+    }
+
+    /// Read from the primary, failing over to replicas.
+    pub fn get(&self, key: &ObjectKey) -> Result<Object> {
+        for id in self.ring.nodes_for(key.as_str()) {
+            if let Some(obj) = self.nodes[id].get(key) {
+                if !obj.verify() {
+                    return Err(Error::Cos(format!(
+                        "checksum mismatch for {key}"
+                    )));
+                }
+                return Ok(obj);
+            }
+        }
+        Err(Error::Cos(format!("object not found: {key}")))
+    }
+
+    pub fn delete(&self, key: &ObjectKey) {
+        for id in self.ring.nodes_for(key.as_str()) {
+            self.nodes[id].delete(key);
+        }
+    }
+
+    pub fn contains(&self, key: &ObjectKey) -> bool {
+        self.ring
+            .nodes_for(key.as_str())
+            .iter()
+            .any(|&id| self.nodes[id].contains(key))
+    }
+
+    pub fn nodes(&self) -> &[Arc<StorageNode>] {
+        &self.nodes
+    }
+
+    pub fn ring(&self) -> &Ring {
+        &self.ring
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_replicates() {
+        let c = StorageCluster::new(4, 3);
+        c.put(Object::new("a/b".into(), vec![9; 100]));
+        let copies: usize = c
+            .nodes()
+            .iter()
+            .filter(|n| n.contains(&"a/b".into()))
+            .count();
+        assert_eq!(copies, 3);
+    }
+
+    #[test]
+    fn get_after_primary_loss() {
+        let c = StorageCluster::new(4, 2);
+        let key: ObjectKey = "x/y".into();
+        c.put(Object::new(key.clone(), vec![1, 2, 3]));
+        // Knock out the primary replica.
+        let primary = c.ring().primary_for(key.as_str());
+        c.nodes()[primary].delete(&key);
+        let got = c.get(&key).unwrap();
+        assert_eq!(&*got.data, &vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn missing_object_errors() {
+        let c = StorageCluster::new(2, 2);
+        assert!(c.get(&"nope".into()).is_err());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let n = StorageNode::new("n");
+        n.put(Object::new("k".into(), vec![0; 50]));
+        n.get(&"k".into());
+        n.get(&"k".into());
+        assert_eq!(n.stats().bytes_written.load(Ordering::Relaxed), 50);
+        assert_eq!(n.stats().bytes_read.load(Ordering::Relaxed), 100);
+        assert_eq!(n.bytes_stored(), 50);
+    }
+
+    #[test]
+    fn delete_removes_everywhere() {
+        let c = StorageCluster::new(3, 3);
+        let key: ObjectKey = "d/e".into();
+        c.put(Object::new(key.clone(), vec![7]));
+        c.delete(&key);
+        assert!(!c.contains(&key));
+    }
+}

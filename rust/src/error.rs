@@ -1,0 +1,74 @@
+//! Crate-wide error type.
+//!
+//! Every layer reports through [`Error`]; the variants mirror the failure
+//! domains of the system (COS protocol, artifacts, XLA runtime, simulated
+//! device OOM, algorithm infeasibility) so call sites can match on what
+//! actually went wrong — in particular [`Error::Oom`], which the batch
+//! adaptation experiments (§7.7) rely on distinguishing from hard faults.
+
+use std::io;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+
+    #[error("json: {0}")]
+    Json(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Simulated accelerator out-of-memory (the CUDA OOM analogue).
+    #[error("device OOM: need {needed} bytes, free {free} of {capacity}")]
+    Oom {
+        needed: u64,
+        free: u64,
+        capacity: u64,
+    },
+
+    #[error("protocol: {0}")]
+    Protocol(String),
+
+    #[error("object store: {0}")]
+    Cos(String),
+
+    /// Batch-adaptation optimisation infeasible even at minimum batch.
+    #[error("batch adaptation infeasible: {0}")]
+    Infeasible(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+
+    /// True when the error is the simulated device OOM — including OOMs
+    /// raised on the COS and surfaced to the client as a wire-level
+    /// error string (the `device OOM` marker is stable; see
+    /// [`Error::Oom`]'s Display form).
+    pub fn is_oom(&self) -> bool {
+        match self {
+            Error::Oom { .. } => true,
+            Error::Cos(m) | Error::Other(m) => m.contains("device OOM"),
+            _ => false,
+        }
+    }
+}

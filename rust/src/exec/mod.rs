@@ -1,0 +1,14 @@
+//! Thread-pool / concurrency substrate (tokio is not vendored).
+//!
+//! The Hapi server and the COS proxy are thread-per-component with shared
+//! bounded queues; this module provides the pieces: a fixed [`Pool`] of
+//! workers, a [`WaitGroup`] for fan-out joins, and a bounded MPMC
+//! [`queue`] built on `Mutex` + `Condvar`.
+
+pub mod pool;
+pub mod queue;
+pub mod waitgroup;
+
+pub use pool::Pool;
+pub use queue::Queue;
+pub use waitgroup::WaitGroup;

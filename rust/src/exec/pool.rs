@@ -1,0 +1,151 @@
+//! Fixed-size worker pool executing boxed jobs from a shared queue.
+//!
+//! Two usage modes matter to Hapi:
+//! - the **decoupled** server mode gives ML execution its own pool,
+//! - the **in-proxy** mode (Table 3's slow competitor) shares one pool —
+//!   built by just handing the same `Pool` to both components.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::queue::Queue;
+use super::waitgroup::WaitGroup;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct Pool {
+    queue: Arc<Queue<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl Pool {
+    /// Spawn `n` workers named `{name}-{i}`.
+    pub fn new(name: &str, n: usize) -> Self {
+        assert!(n > 0);
+        let queue: Arc<Queue<Job>> = Arc::new(Queue::bounded(1024));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let q = queue.clone();
+                let inf = inflight.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = q.pop() {
+                            job();
+                            inf.fetch_sub(1, Ordering::Release);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool {
+            queue,
+            workers,
+            inflight,
+        }
+    }
+
+    /// Submit a job; blocks if the internal queue is full.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.inflight.fetch_add(1, Ordering::Acquire);
+        if self.queue.push(Box::new(job)).is_err() {
+            self.inflight.fetch_sub(1, Ordering::Release);
+            panic!("submit on shut-down pool");
+        }
+    }
+
+    /// Submit a batch and wait for all of them to finish.
+    pub fn scatter_join<F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let wg = WaitGroup::new(jobs.len());
+        for job in jobs {
+            let wg = wg.clone();
+            self.submit(move || {
+                job();
+                wg.done();
+            });
+        }
+        wg.wait();
+    }
+
+    /// Jobs queued or running.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Finish queued work, then stop the workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = Pool::new("t", 4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<_> = (0..200)
+            .map(|_| {
+                let c = counter.clone();
+                move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.scatter_join(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn shutdown_completes_queued_work() {
+        let pool = Pool::new("t", 2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = counter.clone();
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn inflight_tracks() {
+        let pool = Pool::new("t", 1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.submit(move || {
+            let _ = rx.recv();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(pool.inflight(), 1);
+        tx.send(()).unwrap();
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,68 @@
+//! Go-style WaitGroup: block until N completions are signalled.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+#[derive(Clone)]
+pub struct WaitGroup {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl WaitGroup {
+    pub fn new(count: usize) -> Self {
+        WaitGroup {
+            inner: Arc::new((Mutex::new(count), Condvar::new())),
+        }
+    }
+
+    pub fn add(&self, n: usize) {
+        let (lock, _) = &*self.inner;
+        *lock.lock().unwrap() += n;
+    }
+
+    pub fn done(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        assert!(*g > 0, "WaitGroup::done without matching add");
+        *g -= 1;
+        if *g == 0 {
+            cv.notify_all();
+        }
+    }
+
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        while *g > 0 {
+            g = cv.wait(g).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn waits_for_all() {
+        let wg = WaitGroup::new(8);
+        let done = Arc::new(AtomicU32::new(0));
+        for _ in 0..8 {
+            let wg = wg.clone();
+            let d = done.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                d.fetch_add(1, Ordering::SeqCst);
+                wg.done();
+            });
+        }
+        wg.wait();
+        assert_eq!(done.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn zero_count_returns_immediately() {
+        WaitGroup::new(0).wait();
+    }
+}

@@ -1,0 +1,198 @@
+//! Experiment harness: one-call assembly of the full system.
+//!
+//! Everything the paper's testbed has, in-process: storage cluster →
+//! proxy (+ embedded Hapi server) on a real TCP port, a shaped client
+//! link, dataset materialisation, and client constructors for Hapi and
+//! every competitor.  Examples, integration tests and all the fig/table
+//! benches build on this.
+
+use std::sync::Arc;
+
+use crate::baseline::AllInCosClient;
+use crate::client::{DatasetRef, DatasetSpec, HapiClient};
+use crate::config::HapiConfig;
+use crate::cos::proxy::{Proxy, ProxyConfig, ProxyMode};
+use crate::cos::storage::StorageCluster;
+use crate::error::Result;
+use crate::metrics::Registry;
+use crate::model::ModelRegistry;
+use crate::netsim::Link;
+use crate::profiler::AppProfile;
+use crate::runtime::{DeviceKind, Engine, ModelArtifacts};
+use crate::server::HapiServer;
+
+pub struct Testbed {
+    pub cfg: HapiConfig,
+    pub engine: Arc<Engine>,
+    pub models: ModelRegistry,
+    pub cluster: Arc<StorageCluster>,
+    pub server: Arc<HapiServer>,
+    pub registry: Registry,
+    proxy: Proxy,
+    /// The constrained compute-tier ↔ COS link (shared by all tenants,
+    /// like the single NIC of the paper's client machine).
+    pub link: Link,
+}
+
+impl Testbed {
+    pub fn launch(cfg: HapiConfig) -> Result<Testbed> {
+        Self::launch_with_mode(cfg, ProxyMode::Decoupled)
+    }
+
+    pub fn launch_with_mode(cfg: HapiConfig, mode: ProxyMode) -> Result<Testbed> {
+        crate::util::logging::init();
+        let registry = Registry::new();
+        let engine = Engine::cpu()?;
+        let models = ModelRegistry::load_dir(cfg.profiles_dir())?;
+        let cluster = Arc::new(match cfg.storage_read_rate {
+            None => StorageCluster::new(cfg.storage_nodes, cfg.replicas),
+            Some(rate) => {
+                let nodes = (0..cfg.storage_nodes)
+                    .map(|i| {
+                        Arc::new(
+                            crate::cos::StorageNode::new(format!("node{i}"))
+                                .with_read_rate(rate),
+                        )
+                    })
+                    .collect();
+                StorageCluster::from_nodes(nodes, cfg.replicas)
+            }
+        });
+        let server = HapiServer::new(
+            engine.clone(),
+            models.clone(),
+            cluster.clone(),
+            cfg.clone(),
+            registry.clone(),
+        );
+        let proxy = Proxy::start(
+            cluster.clone(),
+            server.clone(),
+            ProxyConfig {
+                mode,
+                // Do not cap request concurrency below what the devices'
+                // admission control allows: the paper serves each POST in
+                // its own process.  16 >= any tenancy we bench.
+                compute_workers: 16,
+                io_workers: 8,
+            },
+            registry.clone(),
+        )?;
+        let link = match cfg.bandwidth {
+            Some(rate) => Link::shaped(rate),
+            None => Link::unshaped(),
+        };
+        Ok(Testbed {
+            cfg,
+            engine,
+            models,
+            cluster,
+            server,
+            registry,
+            proxy,
+            link,
+        })
+    }
+
+    pub fn addr(&self) -> String {
+        self.proxy.addr().to_string()
+    }
+
+    pub fn app(&self, model: &str) -> Result<AppProfile> {
+        Ok(AppProfile::new(self.models.get(model)?, self.cfg.scale))
+    }
+
+    pub fn artifacts(&self, model: &str) -> Result<Arc<ModelArtifacts>> {
+        let profile = self.models.get(model)?;
+        Ok(Arc::new(ModelArtifacts::load(
+            self.engine.clone(),
+            profile,
+            self.cfg.model_dir(model),
+        )?))
+    }
+
+    /// Generate + store a dataset shaped for `model`, returning the
+    /// reference and the labels in global order.
+    pub fn dataset(
+        &self,
+        name: &str,
+        model: &str,
+        num_samples: usize,
+    ) -> Result<(DatasetRef, Vec<i32>)> {
+        let app = self.app(model)?;
+        let spec = DatasetSpec {
+            name: name.to_string(),
+            input_shape: app.meta().input_shape.clone(),
+            num_classes: app.meta().num_classes,
+            num_samples,
+            shard_samples: self.cfg.object_samples,
+            seed: self.cfg.seed,
+        };
+        let labels: Vec<i32> =
+            spec.shards().flat_map(|(_, l)| l).collect();
+        let ds = spec.materialize(&self.cluster)?;
+        Ok((ds, labels))
+    }
+
+    pub fn hapi_client(
+        &self,
+        model: &str,
+        device: DeviceKind,
+    ) -> Result<HapiClient> {
+        Ok(HapiClient::new(
+            self.app(model)?,
+            self.artifacts(model)?,
+            self.cfg.clone(),
+            self.addr(),
+            self.link.clone(),
+            device,
+            None,
+        ))
+    }
+
+    pub fn baseline_client(
+        &self,
+        model: &str,
+        device: DeviceKind,
+    ) -> Result<HapiClient> {
+        Ok(HapiClient::new_baseline(
+            self.app(model)?,
+            self.artifacts(model)?,
+            self.cfg.clone(),
+            self.addr(),
+            self.link.clone(),
+            device,
+        ))
+    }
+
+    pub fn static_freeze_client(
+        &self,
+        model: &str,
+        device: DeviceKind,
+    ) -> Result<HapiClient> {
+        let app = self.app(model)?;
+        let freeze = app.freeze_idx();
+        Ok(HapiClient::new(
+            app,
+            self.artifacts(model)?,
+            self.cfg.clone(),
+            self.addr(),
+            self.link.clone(),
+            device,
+            Some(freeze),
+        ))
+    }
+
+    pub fn all_in_cos_client(&self, model: &str) -> Result<AllInCosClient> {
+        Ok(AllInCosClient::new(
+            self.app(model)?,
+            self.cfg.clone(),
+            self.addr(),
+            self.link.clone(),
+        ))
+    }
+
+    pub fn stop(self) {
+        self.proxy.stop();
+    }
+}

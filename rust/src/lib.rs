@@ -1,0 +1,53 @@
+//! # Hapi — near-data transfer learning on cloud object stores
+//!
+//! Reproduction of *"Accelerating Transfer Learning with Near-Data
+//! Computation on Cloud Object Stores"* as a three-layer Rust + JAX +
+//! Pallas stack.  This crate is **Layer 3**: the paper's coordination
+//! contribution plus every substrate it depends on.  Python runs only at
+//! build time (`make artifacts`); the request path is pure Rust executing
+//! AOT-compiled HLO through the XLA PJRT CPU client.
+//!
+//! ## Map
+//!
+//! - [`cos`] — the Swift-like cloud object store substrate (hash ring,
+//!   storage nodes, proxy, wire protocol).
+//! - [`netsim`] — token-bucket bandwidth shaping + byte metering for the
+//!   compute-tier ↔ COS link (the paper's `tc` rate limits).
+//! - [`model`]/[`profiler`] — per-unit model metadata and the §5.3 hybrid
+//!   memory/size estimator.
+//! - [`runtime`] — PJRT engine (HLO text → executable), `.tnsr` tensors,
+//!   and the simulated accelerator device (memory ledger + OOM + speed
+//!   model; see DESIGN.md §2 for the substitution argument).
+//! - [`split`] — the paper's Algorithm 1 (split-index selection).
+//! - [`batch`] — the Eq. 4 batch-adaptation solver.
+//! - [`server`]/[`client`] — the Hapi server (COS side) and client
+//!   (compute tier).
+//! - [`baseline`] — BASELINE / ALL_IN_COS / static-freeze-split
+//!   competitors from §7.
+//! - [`theory`] — the §4 cost model (Eqs. 1–3).
+//! - [`util`], [`cli`], [`exec`], [`metrics`], [`benchkit`], [`workload`],
+//!   [`config`] — substrates (no serde/clap/tokio/criterion offline; we
+//!   build what we need).
+
+pub mod baseline;
+pub mod batch;
+pub mod benchkit;
+pub mod cli;
+pub mod client;
+pub mod config;
+pub mod cos;
+pub mod error;
+pub mod exec;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod profiler;
+pub mod runtime;
+pub mod server;
+pub mod split;
+pub mod theory;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

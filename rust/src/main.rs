@@ -1,0 +1,238 @@
+//! `hapi` — the command-line launcher.
+//!
+//! Subcommands:
+//!
+//! - `info`      — artifact/model inventory and the resolved config;
+//! - `profile`   — per-unit profile tables (sizes, FLOPs, params);
+//! - `split`     — run Algorithm 1 for a model across bandwidths;
+//! - `train`     — end-to-end training of one model through the full
+//!   stack (COS + proxy + Hapi server + client), reporting the loss
+//!   curve and transfer stats;
+//! - `serve`     — start the COS + Hapi server and print its address
+//!   (foreground; ^C to stop).
+
+use hapi::baseline::construct;
+use hapi::cli::Args;
+use hapi::config::HapiConfig;
+use hapi::harness::Testbed;
+use hapi::metrics::table::fnum;
+use hapi::metrics::Table;
+use hapi::model::TABLE1_MODELS;
+use hapi::netsim;
+use hapi::runtime::DeviceKind;
+use hapi::split::choose_split_idx;
+use hapi::util::{fmt_bytes, fmt_duration};
+
+fn main() {
+    hapi::util::logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> hapi::Result<()> {
+    let mut cfg = HapiConfig::from_args(args)?;
+    if args.get("artifacts").is_none() && !cfg.artifacts_present() {
+        if let Some(dir) = HapiConfig::discover_artifacts() {
+            cfg.artifacts_dir = dir;
+        }
+    }
+    match args.subcommand() {
+        Some("info") => info(&cfg),
+        Some("profile") => profile(&cfg, args),
+        Some("split") => split(&cfg, args),
+        Some("train") => train(cfg, args),
+        Some("serve") => serve(cfg),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            usage();
+            Ok(())
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "usage: hapi <info|profile|split|train|serve> [options]\n\n\
+         common options:\n\
+         \x20 --artifacts DIR        artifacts directory (default: discover)\n\
+         \x20 --scale tiny|paper     profile scale for analytics\n\
+         \x20 --model NAME           model (default alexnet)\n\
+         \x20 --train-batch N        training batch size\n\
+         \x20 --bandwidth-mbps M     client<->COS bandwidth (0 = unshaped)\n\
+         \x20 --cos-gpus N, --cos-gpu-mem BYTES, --no-batch-adaptation\n\
+         \x20 --baseline             (train) run the BASELINE competitor\n\
+         \x20 --weak-client          (train) CPU-only client device model\n\
+         \x20 --samples N            (train) dataset size\n\
+         \x20 --epochs N             (train) epochs to run"
+    );
+}
+
+fn info(cfg: &HapiConfig) -> hapi::Result<()> {
+    println!("config:\n{}\n", cfg.to_json().to_string_pretty());
+    if !cfg.artifacts_present() {
+        println!("artifacts: NOT FOUND — run `make artifacts`");
+        return Ok(());
+    }
+    let models = hapi::model::ModelRegistry::load_dir(cfg.profiles_dir())?;
+    let mut t = Table::new(
+        "Models (Table 1)",
+        &["model", "units", "freeze", "params", "input/sample"],
+    );
+    for m in models.iter() {
+        let meta = m.at_scale(cfg.scale);
+        t.row(vec![
+            m.name.clone(),
+            m.num_units.to_string(),
+            m.freeze_idx.to_string(),
+            fmt_bytes(meta.model_bytes()),
+            fmt_bytes(meta.input_bytes_per_sample),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn profile(cfg: &HapiConfig, args: &Args) -> hapi::Result<()> {
+    let models = hapi::model::ModelRegistry::load_dir(cfg.profiles_dir())?;
+    let name = args.str_or("model", "alexnet");
+    let m = models.get(&name)?;
+    let meta = m.at_scale(cfg.scale);
+    let mut t = Table::new(
+        &format!("{name} per-unit profile ({})", cfg.scale.as_str()),
+        &["idx", "name", "kind", "out bytes/sample", "params", "MFLOPs"],
+    );
+    for u in &meta.units {
+        t.row(vec![
+            u.index.to_string(),
+            u.name.clone(),
+            format!("{:?}", u.kind),
+            fmt_bytes(u.out_bytes_per_sample),
+            fmt_bytes(u.param_bytes),
+            fnum(u.flops_per_sample as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    println!(
+        "input/sample: {}   freeze idx: {}",
+        fmt_bytes(meta.input_bytes_per_sample),
+        m.freeze_idx
+    );
+    Ok(())
+}
+
+fn split(cfg: &HapiConfig, args: &Args) -> hapi::Result<()> {
+    let models = hapi::model::ModelRegistry::load_dir(cfg.profiles_dir())?;
+    let name = args.str_or("model", "alexnet");
+    let app =
+        hapi::profiler::AppProfile::new(models.get(&name)?, cfg.scale);
+    let mut t = Table::new(
+        &format!(
+            "Algorithm 1: {name}, train batch {} ({} scale)",
+            cfg.train_batch,
+            cfg.scale.as_str()
+        ),
+        &["bandwidth", "split idx", "out/sample", "bytes/iteration"],
+    );
+    for mbps in
+        [50.0, 100.0, 500.0, 1000.0, 2000.0, 3000.0, 5000.0, 10000.0, 12000.0]
+    {
+        let d = choose_split_idx(
+            &app,
+            Some(netsim::mbps(mbps)),
+            cfg.split_window_secs,
+            cfg.train_batch,
+        );
+        t.row(vec![
+            format!("{} Mbps", mbps),
+            d.split_idx.to_string(),
+            fmt_bytes(d.out_bytes_per_sample),
+            fmt_bytes(d.bytes_per_iteration),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn train(cfg: HapiConfig, args: &Args) -> hapi::Result<()> {
+    let model = args.str_or("model", "alexnet");
+    let samples = args.parse_or("samples", 1000usize)?;
+    let epochs = args.parse_or("epochs", 1usize)?;
+    let device = if args.flag("weak-client") {
+        DeviceKind::Cpu
+    } else {
+        DeviceKind::Gpu
+    };
+    let bed = Testbed::launch(cfg)?;
+    let (ds, labels) = bed.dataset("train-ds", &model, samples)?;
+    let client = if args.flag("baseline") {
+        construct::baseline(
+            bed.app(&model)?,
+            bed.artifacts(&model)?,
+            bed.cfg.clone(),
+            bed.addr(),
+            bed.link.clone(),
+            device,
+        )
+    } else {
+        construct::hapi(
+            bed.app(&model)?,
+            bed.artifacts(&model)?,
+            bed.cfg.clone(),
+            bed.addr(),
+            bed.link.clone(),
+            device,
+        )
+    };
+    println!(
+        "model={model} split_idx={} freeze={} train_batch={} samples={samples}",
+        client.split.split_idx,
+        client.app.freeze_idx(),
+        bed.cfg.train_batch
+    );
+    let start = std::time::Instant::now();
+    for epoch in 0..epochs {
+        let stats = client.train_epoch(&ds, &labels)?;
+        println!(
+            "epoch {epoch}: loss {:.4} -> {:.4}  acc {:.3}  comm {}  comp {}  rx {}  tx {}",
+            stats.loss.first().copied().unwrap_or(0.0),
+            stats.final_loss(),
+            stats.accuracy.last().copied().unwrap_or(0.0),
+            fmt_duration(stats.comm),
+            fmt_duration(stats.comp),
+            fmt_bytes(stats.bytes_from_cos),
+            fmt_bytes(stats.bytes_to_cos),
+        );
+    }
+    println!("total: {}", fmt_duration(start.elapsed()));
+    bed.stop();
+    Ok(())
+}
+
+fn serve(cfg: HapiConfig) -> hapi::Result<()> {
+    let bed = Testbed::launch(cfg)?;
+    for m in TABLE1_MODELS {
+        if bed.models.get(m).is_ok() {
+            bed.server.warm(m)?;
+        }
+    }
+    println!("hapi server listening on {}", bed.addr());
+    println!("(^C to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,14 @@
+//! Metrics substrate: counters, gauges, histograms, and report tables.
+//!
+//! Every experiment binary reports through this module so the paper-style
+//! tables (EXPERIMENTS.md) come out of one formatter.  Histograms use
+//! fixed-precision log buckets — enough for p50/p95/p99 on latencies
+//! spanning µs to minutes.
+
+pub mod histogram;
+pub mod registry;
+pub mod table;
+
+pub use histogram::Histogram;
+pub use registry::{Counter, Gauge, Registry};
+pub use table::Table;

@@ -1,0 +1,161 @@
+//! Named counters/gauges/histograms with a JSON snapshot.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::histogram::Histogram;
+use crate::util::json::Json;
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Process-wide registry; cheap to clone, interior-mutable.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histograms: BTreeMap<String, Arc<Histogram>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner
+            .lock()
+            .unwrap()
+            .gauges
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// JSON snapshot: counters/gauges verbatim, histograms as summary.
+    pub fn snapshot(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters = g
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+            .collect();
+        let gauges = g
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+            .collect();
+        let hists = g
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean", Json::num(h.mean())),
+                        ("p50", Json::num(h.p50() as f64)),
+                        ("p95", Json::num(h.p95() as f64)),
+                        ("p99", Json::num(h.p99() as f64)),
+                        ("max", Json::num(h.max() as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("histograms".to_string(), Json::Obj(hists)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_same_instance() {
+        let r = Registry::new();
+        r.counter("x").inc();
+        r.counter("x").add(2);
+        assert_eq!(r.counter("x").get(), 3);
+        r.gauge("g").set(-5);
+        assert_eq!(r.gauge("g").get(), -5);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let r = Registry::new();
+        r.counter("reqs").add(7);
+        r.histogram("lat").record(100);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("counters").unwrap().get("reqs").unwrap().as_u64().unwrap(),
+            7
+        );
+        let lat = snap.get("histograms").unwrap().get("lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_u64().unwrap(), 1);
+    }
+}

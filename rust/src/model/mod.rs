@@ -1,0 +1,26 @@
+//! Model metadata: the Rust-side view of the AOT profiles.
+//!
+//! `python/compile/aot.py` emits one JSON profile per Table-1 model with
+//! per-unit analytic metadata at both scales plus the artifact manifest.
+//! Everything the Hapi algorithms consume (output sizes, parameter bytes,
+//! FLOPs, freeze indices) comes from here — the Rust side never needs to
+//! understand the network beyond this sequence-of-units abstraction.
+
+pub mod profiles;
+pub mod registry;
+
+pub use profiles::{
+    ArtifactsMeta, DatasetPreset, ModelProfile, ScaleMeta, UnitKind, UnitMeta,
+};
+pub use registry::ModelRegistry;
+
+/// The seven models of Table 1 in the paper's order.
+pub const TABLE1_MODELS: [&str; 7] = [
+    "alexnet",
+    "resnet18",
+    "resnet50",
+    "vgg11",
+    "vgg19",
+    "densenet121",
+    "transformer",
+];

@@ -1,0 +1,353 @@
+//! Parsing of the per-model profile JSON emitted by `aot.py`.
+
+use std::path::Path;
+
+use crate::config::Scale;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Coarse unit kind; drives the device speed model (conv-heavy units have
+/// the largest CPU/GPU gap in Fig 3, the epilogue units almost none).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitKind {
+    Conv,
+    Pool,
+    Act,
+    Fc,
+    Norm,
+    Block,
+    Attn,
+    Embed,
+    Flatten,
+}
+
+impl UnitKind {
+    pub fn parse(s: &str) -> Result<UnitKind> {
+        Ok(match s {
+            "conv" => UnitKind::Conv,
+            "pool" => UnitKind::Pool,
+            "act" => UnitKind::Act,
+            "fc" => UnitKind::Fc,
+            "norm" => UnitKind::Norm,
+            "block" => UnitKind::Block,
+            "attn" => UnitKind::Attn,
+            "embed" => UnitKind::Embed,
+            "flatten" => UnitKind::Flatten,
+            other => {
+                return Err(Error::Json(format!("unknown unit kind {other:?}")))
+            }
+        })
+    }
+}
+
+/// Analytic metadata of one splittable unit at one scale.
+#[derive(Debug, Clone)]
+pub struct UnitMeta {
+    /// 1-based index (paper numbering; split/freeze indices index these).
+    pub index: usize,
+    pub name: String,
+    pub kind: UnitKind,
+    pub out_shape: Vec<usize>,
+    pub out_bytes_per_sample: u64,
+    pub param_count: u64,
+    pub param_bytes: u64,
+    pub flops_per_sample: u64,
+}
+
+/// Per-scale view of a model.
+#[derive(Debug, Clone)]
+pub struct ScaleMeta {
+    pub input_shape: Vec<usize>,
+    pub input_bytes_per_sample: u64,
+    pub num_classes: usize,
+    pub units: Vec<UnitMeta>,
+}
+
+impl ScaleMeta {
+    fn parse(j: &Json) -> Result<ScaleMeta> {
+        let units = j
+            .get("units")?
+            .as_arr()?
+            .iter()
+            .map(|u| {
+                Ok(UnitMeta {
+                    index: u.get("index")?.as_usize()?,
+                    name: u.get("name")?.as_str()?.to_string(),
+                    kind: UnitKind::parse(u.get("kind")?.as_str()?)?,
+                    out_shape: u.get("out_shape")?.as_usize_vec()?,
+                    out_bytes_per_sample: u
+                        .get("out_bytes_per_sample")?
+                        .as_u64()?,
+                    param_count: u.get("param_count")?.as_u64()?,
+                    param_bytes: u.get("param_bytes")?.as_u64()?,
+                    flops_per_sample: u.get("flops_per_sample")?.as_u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ScaleMeta {
+            input_shape: j.get("input_shape")?.as_usize_vec()?,
+            input_bytes_per_sample: j.get("input_bytes_per_sample")?.as_u64()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            units,
+        })
+    }
+
+    /// Output bytes of unit `index` (1-based) per sample.
+    pub fn out_bytes(&self, index: usize) -> u64 {
+        self.units[index - 1].out_bytes_per_sample
+    }
+
+    /// Total model parameter bytes.
+    pub fn model_bytes(&self) -> u64 {
+        self.units.iter().map(|u| u.param_bytes).sum()
+    }
+
+    /// Parameter bytes of units `[1, end]` (1-based inclusive).
+    pub fn prefix_param_bytes(&self, end: usize) -> u64 {
+        self.units[..end].iter().map(|u| u.param_bytes).sum()
+    }
+
+    /// Per-sample forward FLOPs of units `[start, end]` (1-based incl).
+    pub fn segment_flops(&self, start: usize, end: usize) -> u64 {
+        self.units[start - 1..end]
+            .iter()
+            .map(|u| u.flops_per_sample)
+            .sum()
+    }
+}
+
+/// Artifact manifest: which HLO file implements which unit.
+#[derive(Debug, Clone)]
+pub struct ArtifactsMeta {
+    /// `(unit index, hlo file name, number of parameter tensors)`.
+    pub units: Vec<(usize, String, usize)>,
+    pub train_grads: String,
+    pub apply_update: String,
+    pub tail_input_shape: Vec<usize>,
+    pub tail_num_params: usize,
+}
+
+/// Dataset presets for the Fig-2 input-size lines.
+#[derive(Debug, Clone)]
+pub struct DatasetPreset {
+    pub name: String,
+    pub side: usize,
+    pub bytes_per_sample: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    pub num_units: usize,
+    /// 1-based index of the last feature-extraction unit (Table 1).
+    pub freeze_idx: usize,
+    pub micro_batch: usize,
+    pub param_seed: u64,
+    pub tiny: ScaleMeta,
+    pub paper: ScaleMeta,
+    pub artifacts: ArtifactsMeta,
+    /// Per-unit parameter file names (artifact order), 0-based by unit.
+    pub param_files: Vec<Vec<String>>,
+    pub params_dir: String,
+}
+
+impl ModelProfile {
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelProfile> {
+        let j = Json::parse_file(path)?;
+        ModelProfile::parse(&j)
+    }
+
+    pub fn parse(j: &Json) -> Result<ModelProfile> {
+        let scales = j.get("scales")?;
+        let arts = j.get("artifacts")?;
+        let units = arts
+            .get("units")?
+            .as_arr()?
+            .iter()
+            .map(|u| {
+                Ok((
+                    u.get("index")?.as_usize()?,
+                    u.get("file")?.as_str()?.to_string(),
+                    u.get("num_params")?.as_usize()?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let param_files = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                e.get("files")?
+                    .as_arr()?
+                    .iter()
+                    .map(|f| Ok(f.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let profile = ModelProfile {
+            name: j.get("name")?.as_str()?.to_string(),
+            num_units: j.get("num_units")?.as_usize()?,
+            freeze_idx: j.get("freeze_idx")?.as_usize()?,
+            micro_batch: j.get("micro_batch")?.as_usize()?,
+            param_seed: j.get("param_seed")?.as_u64()?,
+            tiny: ScaleMeta::parse(scales.get("tiny")?)?,
+            paper: ScaleMeta::parse(scales.get("paper")?)?,
+            artifacts: ArtifactsMeta {
+                units,
+                train_grads: arts.get("train_grads")?.as_str()?.to_string(),
+                apply_update: arts.get("apply_update")?.as_str()?.to_string(),
+                tail_input_shape: arts
+                    .get("tail_input_shape")?
+                    .as_usize_vec()?,
+                tail_num_params: arts.get("tail_num_params")?.as_usize()?,
+            },
+            param_files,
+            params_dir: j.get("params_dir")?.as_str()?.to_string(),
+        };
+        profile.validate()?;
+        Ok(profile)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let n = self.num_units;
+        let check = |label: &str, len: usize| {
+            if len != n {
+                return Err(Error::Json(format!(
+                    "{}: {label} has {len} entries, expected {n}",
+                    self.name
+                )));
+            }
+            Ok(())
+        };
+        check("tiny units", self.tiny.units.len())?;
+        check("paper units", self.paper.units.len())?;
+        check("artifact units", self.artifacts.units.len())?;
+        check("param manifest", self.param_files.len())?;
+        if self.freeze_idx == 0 || self.freeze_idx > n {
+            return Err(Error::Json(format!(
+                "{}: freeze_idx {} out of range",
+                self.name, self.freeze_idx
+            )));
+        }
+        for (i, (idx, _, num_params)) in self.artifacts.units.iter().enumerate()
+        {
+            if *idx != i + 1 {
+                return Err(Error::Json(format!(
+                    "{}: artifact unit {i} has index {idx}",
+                    self.name
+                )));
+            }
+            if self.param_files[i].len() != *num_params {
+                return Err(Error::Json(format!(
+                    "{}: unit {} param count mismatch",
+                    self.name,
+                    i + 1
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn at_scale(&self, scale: Scale) -> &ScaleMeta {
+        match scale {
+            Scale::Tiny => &self.tiny,
+            Scale::Paper => &self.paper,
+        }
+    }
+
+    /// Number of trainable-tail parameter tensors == artifact expectation.
+    pub fn tail_param_range(&self) -> std::ops::Range<usize> {
+        self.freeze_idx..self.num_units
+    }
+}
+
+pub fn load_datasets(path: impl AsRef<Path>, scale: Scale) -> Result<Vec<DatasetPreset>> {
+    let j = Json::parse_file(path)?;
+    let mut out = Vec::new();
+    for (name, spec) in j.as_obj()? {
+        let s = spec.get(scale.as_str())?;
+        out.push(DatasetPreset {
+            name: name.clone(),
+            side: s.get("side")?.as_usize()?,
+            bytes_per_sample: s.get("bytes_per_sample")?.as_u64()?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_profile_json() -> String {
+        r#"{
+            "name": "toy", "num_units": 2, "freeze_idx": 1,
+            "micro_batch": 4, "param_seed": 42,
+            "table1": {"freeze": 1, "units": 2},
+            "scales": {
+              "tiny": {"input_shape": [3,8,8], "input_bytes_per_sample": 768,
+                "num_classes": 10,
+                "units": [
+                  {"index":1,"name":"conv1","kind":"conv","out_shape":[4,8,8],
+                   "out_bytes_per_sample":1024,"param_count":112,
+                   "param_bytes":448,"flops_per_sample":1000},
+                  {"index":2,"name":"fc","kind":"fc","out_shape":[10],
+                   "out_bytes_per_sample":40,"param_count":2570,
+                   "param_bytes":10280,"flops_per_sample":5120}]},
+              "paper": {"input_shape": [3,16,16], "input_bytes_per_sample": 3072,
+                "num_classes": 10,
+                "units": [
+                  {"index":1,"name":"conv1","kind":"conv","out_shape":[4,16,16],
+                   "out_bytes_per_sample":4096,"param_count":112,
+                   "param_bytes":448,"flops_per_sample":4000},
+                  {"index":2,"name":"fc","kind":"fc","out_shape":[10],
+                   "out_bytes_per_sample":40,"param_count":10250,
+                   "param_bytes":41000,"flops_per_sample":20480}]}
+            },
+            "artifacts": {
+              "units": [
+                {"index":1,"file":"unit_001_b4.hlo.txt","num_params":2},
+                {"index":2,"file":"unit_002_b4.hlo.txt","num_params":2}],
+              "train_grads": "train_grads_b4.hlo.txt",
+              "apply_update": "apply_update.hlo.txt",
+              "tail_input_shape": [4,8,8],
+              "tail_num_params": 2
+            },
+            "params_dir": "params",
+            "params": [
+              {"unit":1,"files":["u001_p00.tnsr","u001_p01.tnsr"]},
+              {"unit":2,"files":["u002_p00.tnsr","u002_p01.tnsr"]}]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_minimal() {
+        let p =
+            ModelProfile::parse(&Json::parse(&minimal_profile_json()).unwrap())
+                .unwrap();
+        assert_eq!(p.name, "toy");
+        assert_eq!(p.tiny.out_bytes(1), 1024);
+        assert_eq!(p.tiny.model_bytes(), 448 + 10280);
+        assert_eq!(p.tiny.prefix_param_bytes(1), 448);
+        assert_eq!(p.paper.segment_flops(1, 2), 24480);
+        assert_eq!(p.tail_param_range(), 1..2);
+    }
+
+    #[test]
+    fn validation_rejects_mismatches() {
+        let mut txt = minimal_profile_json();
+        txt = txt.replace("\"freeze_idx\": 1", "\"freeze_idx\": 9");
+        assert!(ModelProfile::parse(&Json::parse(&txt).unwrap()).is_err());
+        let mut txt2 = minimal_profile_json();
+        txt2 = txt2.replace("\"num_params\":2},", "\"num_params\":3},");
+        assert!(ModelProfile::parse(&Json::parse(&txt2).unwrap()).is_err());
+    }
+
+    #[test]
+    fn unit_kind_parse() {
+        assert_eq!(UnitKind::parse("attn").unwrap(), UnitKind::Attn);
+        assert!(UnitKind::parse("magic").is_err());
+    }
+}

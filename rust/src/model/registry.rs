@@ -1,0 +1,84 @@
+//! Registry of loaded model profiles.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+use super::profiles::ModelProfile;
+
+#[derive(Debug, Clone, Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Arc<ModelProfile>>,
+}
+
+impl ModelRegistry {
+    /// Load every `*.json` profile in `profiles_dir` (skips
+    /// `datasets.json`).
+    pub fn load_dir(profiles_dir: impl AsRef<Path>) -> Result<ModelRegistry> {
+        let dir = profiles_dir.as_ref();
+        let mut models = BTreeMap::new();
+        let entries = std::fs::read_dir(dir).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read profiles dir {} ({e}); run `make artifacts`",
+                dir.display()
+            ))
+        })?;
+        for entry in entries {
+            let path = entry?.path();
+            let fname = path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or_default();
+            if !fname.ends_with(".json") || fname == "datasets.json" {
+                continue;
+            }
+            let profile = Arc::new(ModelProfile::load(&path)?);
+            models.insert(profile.name.clone(), profile);
+        }
+        if models.is_empty() {
+            return Err(Error::Artifact(format!(
+                "no model profiles in {}; run `make artifacts`",
+                dir.display()
+            )));
+        }
+        Ok(ModelRegistry { models })
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<ModelProfile>> {
+        self.models.get(name).cloned().ok_or_else(|| {
+            Error::Artifact(format!(
+                "unknown model {name:?}; have {:?}",
+                self.names()
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<ModelProfile>> {
+        self.models.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_artifact_error() {
+        let err = ModelRegistry::load_dir("/nonexistent/profiles").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Blocking token bucket.
+//!
+//! `take(n)` debits `n` tokens (bytes), sleeping until the continuous
+//! refill covers the deficit.  The bucket admits bursts up to `burst`
+//! tokens, so short messages pass at line rate while the long-run average
+//! converges to `rate` — the same behaviour as a `tc tbf` qdisc.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub struct TokenBucket {
+    state: Mutex<State>,
+    rate: f64,  // tokens (bytes) per second
+    burst: f64, // bucket depth
+}
+
+struct State {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// `rate` in bytes/sec. `burst` caps instantaneous debt; a good default
+    /// is ~50 ms worth of line rate.
+    pub fn new(rate: u64, burst: u64) -> Self {
+        assert!(rate > 0);
+        TokenBucket {
+            state: Mutex::new(State {
+                tokens: burst as f64,
+                last: Instant::now(),
+            }),
+            rate: rate as f64,
+            burst: burst.max(1) as f64,
+        }
+    }
+
+    /// Bucket with a burst of 50 ms at line rate (min 64 KiB).
+    pub fn with_default_burst(rate: u64) -> Self {
+        let burst = ((rate as f64) * 0.05) as u64;
+        TokenBucket::new(rate, burst.max(64 * 1024))
+    }
+
+    /// Debit `n` bytes, blocking as needed.  Large `n` are fine: the call
+    /// sleeps exactly the deficit, it does not busy-wait.
+    pub fn take(&self, n: u64) {
+        let wait = {
+            let mut s = self.state.lock().unwrap();
+            let now = Instant::now();
+            let elapsed = now.duration_since(s.last).as_secs_f64();
+            s.tokens = (s.tokens + elapsed * self.rate).min(self.burst);
+            s.last = now;
+            s.tokens -= n as f64;
+            if s.tokens >= 0.0 {
+                Duration::ZERO
+            } else {
+                Duration::from_secs_f64(-s.tokens / self.rate)
+            }
+        };
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+    }
+
+    pub fn rate(&self) -> u64 {
+        self.rate as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_run_rate_is_respected() {
+        // 10 MiB/s, send 2 MiB beyond the burst -> ≥ ~0.2s minus burst.
+        let rate = 10 * 1024 * 1024;
+        let bucket = TokenBucket::new(rate, 64 * 1024);
+        let start = Instant::now();
+        let total: u64 = 2 * 1024 * 1024;
+        let mut sent = 0;
+        while sent < total {
+            let chunk = 64 * 1024;
+            bucket.take(chunk);
+            sent += chunk;
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        let expected = (total - 64 * 1024) as f64 / rate as f64;
+        assert!(
+            elapsed >= expected * 0.85,
+            "elapsed {elapsed:.3}s expected >= {expected:.3}s"
+        );
+        // And not pathologically slow either (3x margin for CI noise).
+        assert!(elapsed < expected * 3.0 + 0.2, "elapsed {elapsed:.3}s");
+    }
+
+    #[test]
+    fn burst_passes_without_sleep() {
+        let bucket = TokenBucket::new(1024, 1024 * 1024);
+        let start = Instant::now();
+        bucket.take(512 * 1024); // within burst
+        assert!(start.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn concurrent_takers_share_rate() {
+        use std::sync::Arc;
+        let rate = 8 * 1024 * 1024;
+        let bucket = Arc::new(TokenBucket::new(rate, 32 * 1024));
+        let start = Instant::now();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let b = bucket.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..8 {
+                        b.take(64 * 1024);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 4 threads x 512 KiB = 2 MiB at 8 MiB/s ≈ 0.25s.
+        let elapsed = start.elapsed().as_secs_f64();
+        assert!(elapsed > 0.15, "elapsed {elapsed:.3}");
+    }
+}

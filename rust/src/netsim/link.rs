@@ -1,0 +1,134 @@
+//! A metered, optionally shaped, bidirectional link.
+//!
+//! One [`Link`] models the compute-tier ↔ COS network: a shared token
+//! bucket (both directions contend for the same capacity, like a `tc`
+//! limited NIC) plus per-direction byte counters.  The COS wire protocol
+//! calls [`Link::send`]/[`Link::recv`] around every frame.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::bucket::TokenBucket;
+
+/// Shape bytes in chunks so concurrent streams interleave fairly.
+const CHUNK: u64 = 64 * 1024;
+
+#[derive(Debug, Default)]
+pub struct LinkStats {
+    /// Bytes client → COS (POST bodies, PUT uploads).
+    pub tx: AtomicU64,
+    /// Bytes COS → client (GET data, feature tensors).
+    pub rx: AtomicU64,
+}
+
+impl LinkStats {
+    pub fn tx_bytes(&self) -> u64 {
+        self.tx.load(Ordering::Relaxed)
+    }
+
+    pub fn rx_bytes(&self) -> u64 {
+        self.rx.load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tx_bytes() + self.rx_bytes()
+    }
+
+    pub fn reset(&self) {
+        self.tx.store(0, Ordering::Relaxed);
+        self.rx.store(0, Ordering::Relaxed);
+    }
+}
+
+#[derive(Clone)]
+pub struct Link {
+    bucket: Option<Arc<TokenBucket>>,
+    stats: Arc<LinkStats>,
+}
+
+impl Link {
+    /// Unshaped link (still metered).  Used for the proxy ↔ storage-node
+    /// path, which the paper treats as a fast internal network.
+    pub fn unshaped() -> Self {
+        Link {
+            bucket: None,
+            stats: Arc::new(LinkStats::default()),
+        }
+    }
+
+    /// Link limited to `rate` bytes/second.
+    pub fn shaped(rate: u64) -> Self {
+        Link {
+            bucket: Some(Arc::new(TokenBucket::with_default_burst(rate))),
+            stats: Arc::new(LinkStats::default()),
+        }
+    }
+
+    /// Account + shape `n` bytes moving client → COS.
+    pub fn send(&self, n: u64) {
+        self.stats.tx.fetch_add(n, Ordering::Relaxed);
+        self.shape(n);
+    }
+
+    /// Account + shape `n` bytes moving COS → client.
+    pub fn recv(&self, n: u64) {
+        self.stats.rx.fetch_add(n, Ordering::Relaxed);
+        self.shape(n);
+    }
+
+    fn shape(&self, n: u64) {
+        if let Some(bucket) = &self.bucket {
+            let mut left = n;
+            while left > 0 {
+                let take = left.min(CHUNK);
+                bucket.take(take);
+                left -= take;
+            }
+        }
+    }
+
+    pub fn stats(&self) -> &LinkStats {
+        &self.stats
+    }
+
+    pub fn rate(&self) -> Option<u64> {
+        self.bucket.as_ref().map(|b| b.rate())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn meters_both_directions() {
+        let link = Link::unshaped();
+        link.send(100);
+        link.recv(250);
+        link.send(1);
+        assert_eq!(link.stats().tx_bytes(), 101);
+        assert_eq!(link.stats().rx_bytes(), 250);
+        assert_eq!(link.stats().total(), 351);
+        link.stats().reset();
+        assert_eq!(link.stats().total(), 0);
+    }
+
+    #[test]
+    fn shaped_link_slows_transfer() {
+        let rate = 4 * 1024 * 1024; // 4 MiB/s
+        let link = Link::shaped(rate);
+        let start = Instant::now();
+        link.recv(1024 * 1024); // 1 MiB beyond ~200 KiB burst
+        let elapsed = start.elapsed().as_secs_f64();
+        assert!(elapsed > 0.1, "elapsed {elapsed}");
+    }
+
+    #[test]
+    fn unshaped_is_instant() {
+        let link = Link::unshaped();
+        let start = Instant::now();
+        link.recv(1 << 30);
+        assert!(start.elapsed().as_millis() < 50);
+    }
+}

@@ -1,0 +1,33 @@
+//! Network substrate: token-bucket bandwidth shaping + byte metering.
+//!
+//! The paper rate-limits the compute-tier ↔ COS link with `tc` (50 Mbps to
+//! 12 Gbps, §7.4).  We reproduce that with a token bucket applied to every
+//! byte crossing the link, plus exact per-direction byte meters that back
+//! the "data transferred" axes of Figs 11b and 13.
+
+pub mod bucket;
+pub mod link;
+
+pub use bucket::TokenBucket;
+pub use link::{Link, LinkStats};
+
+/// Convenience: Gbps → bytes/second.
+pub fn gbps(g: f64) -> u64 {
+    (g * 1e9 / 8.0) as u64
+}
+
+/// Convenience: Mbps → bytes/second.
+pub fn mbps(m: f64) -> u64 {
+    (m * 1e6 / 8.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(gbps(1.0), 125_000_000);
+        assert_eq!(mbps(150.0), 18_750_000);
+    }
+}

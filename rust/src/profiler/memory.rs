@@ -1,0 +1,200 @@
+//! The GPU-memory cost model (drives Figs 4, 7, 14, 15 and Eq. 4).
+//!
+//! Components, following §5.3's decomposition:
+//! 1. model weights of the executed units (constant in the batch size);
+//! 2. input data for the executed segment (∝ batch);
+//! 3. intermediate outputs — for the *forward* pass the working set is
+//!    the largest in+out pair across executed units (earlier buffers are
+//!    released); for the *backward* pass every participating unit's
+//!    output stays resident until the phase ends (§3.3), plus gradients.
+//!
+//! A proportional `SLACK` models the allocator/runtime residual the paper
+//! calibrates with its batch-1 run; it inflates (never deflates) the
+//! estimate, preserving the paper's over-estimation guarantee.
+
+use super::AppProfile;
+
+/// Allocator/runtime residual, as a fraction of the batch-proportional
+/// memory (§5.3's extrapolated calibration gap).
+pub const SLACK: f64 = 0.05;
+
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    app: AppProfile,
+}
+
+impl MemoryModel {
+    pub fn new(app: AppProfile) -> MemoryModel {
+        MemoryModel { app }
+    }
+
+    fn slacked(batch_bytes: u64) -> u64 {
+        (batch_bytes as f64 * (1.0 + SLACK)).ceil() as u64
+    }
+
+    /// Peak per-sample activation working set of units `[start, end]`
+    /// (1-based inclusive): max over units of in+out bytes.
+    pub fn peak_activation_per_sample(&self, start: usize, end: usize) -> u64 {
+        (start..=end)
+            .map(|i| self.app.in_bytes(i) + self.app.out_bytes(i))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Weights of units `[start, end]`.
+    pub fn segment_param_bytes(&self, start: usize, end: usize) -> u64 {
+        self.app.meta().units[start - 1..end]
+            .iter()
+            .map(|u| u.param_bytes)
+            .sum()
+    }
+
+    /// Forward memory for one unit at a batch size (Fig 4 left bars).
+    pub fn unit_forward_bytes(&self, i: usize, batch: usize) -> u64 {
+        let act = (self.app.in_bytes(i) + self.app.out_bytes(i)) * batch as u64;
+        self.app.meta().units[i - 1].param_bytes + Self::slacked(act)
+    }
+
+    /// Memory for a feature-extraction request on the COS: units
+    /// `[1, split]` at the COS batch size (what Eq. 4's M_r(data) +
+    /// M_r(model) decomposes into).
+    pub fn fe_request_bytes(&self, split: usize, cos_batch: usize) -> u64 {
+        self.fe_model_bytes(split) + self.fe_data_bytes(split, cos_batch)
+    }
+
+    /// Eq. 4's M_r(model): weights of the pushed-down prefix.
+    pub fn fe_model_bytes(&self, split: usize) -> u64 {
+        self.segment_param_bytes(1, split)
+    }
+
+    /// Eq. 4's b_r × M_r(data) at b_r = `cos_batch`.
+    pub fn fe_data_bytes(&self, split: usize, cos_batch: usize) -> u64 {
+        Self::slacked(
+            self.peak_activation_per_sample(1, split) * cos_batch as u64,
+        )
+    }
+
+    /// Per-sample M_r(data) (the unit Eq. 4 scales by b_r).
+    pub fn fe_data_bytes_per_sample(&self, split: usize) -> u64 {
+        Self::slacked(self.peak_activation_per_sample(1, split))
+    }
+
+    /// Backward-phase memory at the client: all unfrozen units'
+    /// activations stay resident + gradients mirror the tail weights
+    /// (§3.3's aggregated right-hand bars in Fig 4).
+    pub fn backward_bytes(&self, train_batch: usize) -> u64 {
+        let freeze = self.app.freeze_idx();
+        let n = self.app.num_units();
+        if freeze >= n {
+            return 0; // nothing trainable
+        }
+        let mut acts = self.app.in_bytes(freeze + 1);
+        for i in freeze + 1..=n {
+            acts += self.app.out_bytes(i);
+        }
+        let tail_params = self.segment_param_bytes(freeze + 1, n);
+        // params + grads (same size) + resident activations.
+        2 * tail_params + Self::slacked(acts * train_batch as u64)
+    }
+
+    /// Client-side memory when the client executes units
+    /// `[split+1, freeze]` (frozen leftovers) then trains the tail.
+    /// Peak is the max of the two phases (they do not overlap per batch).
+    pub fn client_bytes(&self, split: usize, train_batch: usize) -> u64 {
+        let freeze = self.app.freeze_idx();
+        let fwd = if split < freeze {
+            self.segment_param_bytes(split + 1, freeze)
+                + Self::slacked(
+                    self.peak_activation_per_sample(split + 1, freeze)
+                        * train_batch as u64,
+                )
+        } else {
+            0
+        };
+        fwd.max(self.backward_bytes(train_batch))
+    }
+
+    /// BASELINE client memory: the whole network on the client — forward
+    /// peak over all units plus the backward phase.
+    pub fn baseline_client_bytes(&self, train_batch: usize) -> u64 {
+        self.client_bytes(0, train_batch)
+            .max(self.fe_request_bytes(self.app.freeze_idx(), train_batch))
+    }
+
+    /// ALL_IN_COS request memory: feature extraction *and* training on
+    /// the COS at the training batch size (no decoupling — §5.1's
+    /// limitation).
+    pub fn all_in_cos_bytes(&self, train_batch: usize) -> u64 {
+        let freeze = self.app.freeze_idx();
+        self.fe_request_bytes(freeze, train_batch)
+            .max(self.backward_bytes(train_batch) + self.fe_model_bytes(freeze))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::toy_profile;
+    use super::super::AppProfile;
+    use super::*;
+    use crate::config::Scale;
+
+    fn model() -> MemoryModel {
+        AppProfile::new(toy_profile(), Scale::Tiny).memory()
+    }
+
+    #[test]
+    fn peak_activation_is_max_pair() {
+        let m = model();
+        // unit1: 192+256=448; unit2: 256+128=384; unit3: 128+64=192.
+        assert_eq!(m.peak_activation_per_sample(1, 3), 448);
+        assert_eq!(m.peak_activation_per_sample(2, 3), 384);
+        assert_eq!(m.peak_activation_per_sample(3, 3), 192);
+    }
+
+    #[test]
+    fn fe_memory_scales_with_batch_but_model_constant() {
+        let m = model();
+        let m1 = m.fe_request_bytes(2, 10);
+        let m2 = m.fe_request_bytes(2, 20);
+        let model_bytes = m.fe_model_bytes(2);
+        assert_eq!(model_bytes, 3000);
+        assert_eq!(m2 - model_bytes, 2 * (m1 - model_bytes));
+    }
+
+    #[test]
+    fn overestimates_by_slack() {
+        let m = model();
+        let raw = 448u64 * 10;
+        assert!(m.fe_data_bytes(1, 10) >= raw);
+        assert!(m.fe_data_bytes(1, 10) <= raw + raw / 10);
+    }
+
+    #[test]
+    fn deeper_split_uses_more_model_memory() {
+        let m = model();
+        assert!(m.fe_model_bytes(3) > m.fe_model_bytes(1));
+    }
+
+    #[test]
+    fn backward_holds_all_tail_activations() {
+        let m = model();
+        // tail = unit 4 only: acts = in(4)=64 + out(4)=40 per sample.
+        let b = m.backward_bytes(10);
+        assert!(b >= 2 * 500 + 104 * 10);
+    }
+
+    #[test]
+    fn client_peak_is_max_of_phases() {
+        let m = model();
+        let at_freeze = m.client_bytes(3, 10);
+        assert_eq!(at_freeze, m.backward_bytes(10));
+        let earlier = m.client_bytes(1, 10);
+        assert!(earlier >= at_freeze);
+    }
+
+    #[test]
+    fn all_in_cos_exceeds_fe_only() {
+        let m = model();
+        assert!(m.all_in_cos_bytes(10) >= m.fe_request_bytes(3, 10));
+    }
+}

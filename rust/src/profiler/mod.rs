@@ -1,0 +1,134 @@
+//! §5.3 hybrid profiling: the memory/size estimator.
+//!
+//! The paper's client profiles once per application: statically known
+//! layer output sizes + model size, plus a cheap batch-size-1 run whose
+//! residual is extrapolated linearly in the batch size.  Our AOT profiles
+//! carry the static sizes exactly; the residual is modeled as a
+//! proportional allocator-slack factor, biased to **over-estimate** —
+//! §5.3: "when the estimation is not perfect, we always over-estimate,
+//! thus guarding against OOM".
+//!
+//! All estimates are per-scale (`tiny` executes; `paper` reproduces the
+//! 224×224 analytic figures) and are exactly what the simulated device
+//! ledger charges, so planner and "hardware" agree the way the paper's
+//! calibrated estimator agrees with `nvidia-smi` to within a few percent.
+
+pub mod memory;
+
+pub use memory::MemoryModel;
+
+use std::sync::Arc;
+
+use crate::config::Scale;
+use crate::model::{ModelProfile, ScaleMeta};
+
+/// Static per-application profile (Alg 1 line 1-5's `profile_model`).
+#[derive(Debug, Clone)]
+pub struct AppProfile {
+    pub model: Arc<ModelProfile>,
+    pub scale: Scale,
+}
+
+impl AppProfile {
+    pub fn new(model: Arc<ModelProfile>, scale: Scale) -> AppProfile {
+        AppProfile { model, scale }
+    }
+
+    pub fn meta(&self) -> &ScaleMeta {
+        self.model.at_scale(self.scale)
+    }
+
+    /// Input bytes per sample of unit `i` (1-based).
+    pub fn in_bytes(&self, i: usize) -> u64 {
+        let m = self.meta();
+        if i == 1 {
+            m.input_bytes_per_sample
+        } else {
+            m.out_bytes(i - 1)
+        }
+    }
+
+    /// Output bytes per sample of unit `i` (1-based).
+    pub fn out_bytes(&self, i: usize) -> u64 {
+        self.meta().out_bytes(i)
+    }
+
+    /// Per-sample application input size (Fig 2's horizontal line).
+    pub fn input_bytes(&self) -> u64 {
+        self.meta().input_bytes_per_sample
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.model.num_units
+    }
+
+    pub fn freeze_idx(&self) -> usize {
+        self.model.freeze_idx
+    }
+
+    pub fn memory(&self) -> MemoryModel {
+        MemoryModel::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::profiles::{ArtifactsMeta, UnitKind, UnitMeta};
+
+    pub(crate) fn toy_profile() -> Arc<ModelProfile> {
+        let unit = |index: usize, out: u64, params: u64| UnitMeta {
+            index,
+            name: format!("u{index}"),
+            kind: UnitKind::Conv,
+            out_shape: vec![out as usize / 4],
+            out_bytes_per_sample: out,
+            param_count: params / 4,
+            param_bytes: params,
+            flops_per_sample: 1000,
+        };
+        let meta = ScaleMeta {
+            input_shape: vec![3, 4, 4],
+            input_bytes_per_sample: 192,
+            num_classes: 10,
+            units: vec![
+                unit(1, 256, 1000), // bigger than input
+                unit(2, 128, 2000),
+                unit(3, 64, 4000),
+                unit(4, 40, 500),
+            ],
+        };
+        Arc::new(ModelProfile {
+            name: "toy".into(),
+            num_units: 4,
+            freeze_idx: 3,
+            micro_batch: 4,
+            param_seed: 42,
+            tiny: meta.clone(),
+            paper: meta,
+            artifacts: ArtifactsMeta {
+                units: vec![
+                    (1, "u1".into(), 2),
+                    (2, "u2".into(), 2),
+                    (3, "u3".into(), 2),
+                    (4, "u4".into(), 2),
+                ],
+                train_grads: "tg".into(),
+                apply_update: "au".into(),
+                tail_input_shape: vec![16],
+                tail_num_params: 2,
+            },
+            param_files: vec![vec!["a".into(), "b".into()]; 4],
+            params_dir: "params".into(),
+        })
+    }
+
+    #[test]
+    fn in_out_bytes() {
+        let app = AppProfile::new(toy_profile(), Scale::Tiny);
+        assert_eq!(app.in_bytes(1), 192);
+        assert_eq!(app.in_bytes(2), 256);
+        assert_eq!(app.out_bytes(2), 128);
+        assert_eq!(app.input_bytes(), 192);
+    }
+}

@@ -1,0 +1,258 @@
+//! Per-model artifact bundles and chunked segment execution.
+//!
+//! A [`ModelArtifacts`] owns the initial parameters (host tensors read
+//! from `.tnsr`) and lazily loads/compiles the per-unit HLO executables
+//! through the engine cache.  All executables are shape-specialised to the
+//! AOT micro-batch; [`ModelArtifacts::forward_segment`] serves arbitrary
+//! batch sizes by chunking along axis 0 and zero-padding the last chunk —
+//! numerically equivalent for the frozen feature-extraction units (§5.1's
+//! decoupling insight, validated in `python/tests/test_models.py`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::model::ModelProfile;
+
+use super::device::DeviceKind;
+use super::engine::{Engine, Exe};
+use super::tensor::Tensor;
+
+pub struct ModelArtifacts {
+    pub profile: Arc<ModelProfile>,
+    engine: Arc<Engine>,
+    dir: PathBuf,
+    /// Initial parameters per unit, artifact order.
+    params: Vec<Vec<Tensor>>,
+}
+
+impl ModelArtifacts {
+    pub fn load(
+        engine: Arc<Engine>,
+        profile: Arc<ModelProfile>,
+        model_dir: impl Into<PathBuf>,
+    ) -> Result<ModelArtifacts> {
+        let dir = model_dir.into();
+        let pdir = dir.join(&profile.params_dir);
+        let mut params = Vec::with_capacity(profile.num_units);
+        for files in &profile.param_files {
+            let tensors = files
+                .iter()
+                .map(|f| Tensor::read_tnsr(pdir.join(f)))
+                .collect::<Result<Vec<_>>>()?;
+            params.push(tensors);
+        }
+        Ok(ModelArtifacts {
+            profile,
+            engine,
+            dir,
+            params,
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    pub fn micro_batch(&self) -> usize {
+        self.profile.micro_batch
+    }
+
+    /// Parameters of unit `i` (1-based).
+    pub fn unit_params(&self, i: usize) -> &[Tensor] {
+        &self.params[i - 1]
+    }
+
+    /// Initial trainable-tail parameters (cloned; training mutates them).
+    pub fn initial_tail_params(&self) -> Vec<Tensor> {
+        self.params[self.profile.freeze_idx..]
+            .iter()
+            .flat_map(|unit| unit.iter().cloned())
+            .collect()
+    }
+
+    pub fn unit_exe(&self, i: usize) -> Result<Arc<Exe>> {
+        let (_, file, _) = &self.profile.artifacts.units[i - 1];
+        self.engine.load(self.dir.join(file))
+    }
+
+    pub fn train_grads_exe(&self) -> Result<Arc<Exe>> {
+        self.engine
+            .load(self.dir.join(&self.profile.artifacts.train_grads))
+    }
+
+    pub fn apply_update_exe(&self) -> Result<Arc<Exe>> {
+        self.engine
+            .load(self.dir.join(&self.profile.artifacts.apply_update))
+    }
+
+    /// Pre-compile every unit executable (used by servers at startup so
+    /// compile time does not pollute request latencies).
+    pub fn warm(&self) -> Result<()> {
+        for i in 1..=self.profile.num_units {
+            self.unit_exe(i)?;
+        }
+        Ok(())
+    }
+
+    /// Forward through units `[start, end]` (1-based, inclusive) for an
+    /// arbitrary batch, chunking into micro-batches.
+    ///
+    /// `device` models the executing tier's speed (Fig 3); pass
+    /// [`DeviceKind::Gpu`] for native.  `unit_times`, when provided,
+    /// accumulates wall time per unit index (Fig 3's measurement hook).
+    pub fn forward_segment(
+        &self,
+        input: &Tensor,
+        start: usize,
+        end: usize,
+        device: DeviceKind,
+        mut unit_times: Option<&mut Vec<Duration>>,
+    ) -> Result<Tensor> {
+        if start < 1 || end > self.profile.num_units || start > end {
+            return Err(Error::other(format!(
+                "bad segment [{start}, {end}] for {}",
+                self.profile.name
+            )));
+        }
+        if let Some(times) = unit_times.as_deref_mut() {
+            times.resize(self.profile.num_units + 1, Duration::ZERO);
+        }
+        let mb = self.micro_batch();
+        let n = input.dims[0];
+        // Chunk once up front (unit-outer loop): parameters are staged as
+        // literals once per unit and shared by every micro-batch, instead
+        // of being re-converted per (chunk, unit) pair — the §Perf pass's
+        // biggest L3 win for multi-chunk requests.
+        let mut chunks: Vec<Tensor> = Vec::with_capacity(n.div_ceil(mb));
+        let mut lens: Vec<usize> = Vec::with_capacity(chunks.capacity());
+        let mut off = 0;
+        while off < n {
+            let len = mb.min(n - off);
+            let chunk = input.slice_batch(off, len);
+            chunks.push(if len < mb { chunk.pad_batch(mb) } else { chunk });
+            lens.push(len);
+            off += len;
+        }
+        for i in start..=end {
+            let exe = self.unit_exe(i)?;
+            let kind = self.profile.tiny.units[i - 1].kind;
+            let param_lits: Vec<xla::Literal> = self.params[i - 1]
+                .iter()
+                .map(|p| p.to_literal())
+                .collect::<Result<_>>()?;
+            for x in chunks.iter_mut() {
+                let x_lit = x.to_literal()?;
+                let mut args: Vec<&xla::Literal> =
+                    Vec::with_capacity(1 + param_lits.len());
+                args.push(&x_lit);
+                args.extend(param_lits.iter());
+                let t0 = Instant::now();
+                let mut out = self.engine.run_literal_refs(&exe, &args)?;
+                let real = t0.elapsed();
+                device.charge(kind, real);
+                if let Some(times) = unit_times.as_deref_mut() {
+                    times[i] += real.mul_f64(device.slowdown(kind).max(1.0));
+                }
+                *x = out.pop().ok_or_else(|| {
+                    Error::Xla("unit returned no outputs".into())
+                })?;
+            }
+        }
+        let outs: Vec<Tensor> = chunks
+            .into_iter()
+            .zip(&lens)
+            .map(|(x, &len)| {
+                if len < mb {
+                    x.slice_batch(0, len)
+                } else {
+                    x
+                }
+            })
+            .collect();
+        Tensor::concat_batch(&outs)
+    }
+
+    /// One training micro-batch: returns (gradient sums, loss sum,
+    /// correct count).  Inputs must already be micro-batch sized.
+    pub fn train_grads(
+        &self,
+        x_feat: &Tensor,
+        labels: &Tensor,
+        mask: &Tensor,
+        tail_params: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f32, f32)> {
+        let exe = self.train_grads_exe()?;
+        let mut args =
+            Vec::with_capacity(3 + tail_params.len());
+        args.push(x_feat.clone());
+        args.push(labels.clone());
+        args.push(mask.clone());
+        args.extend(tail_params.iter().cloned());
+        let mut out = self.engine.run(&exe, &args)?;
+        let correct = out
+            .pop()
+            .ok_or_else(|| Error::Xla("missing correct output".into()))?;
+        let loss = out
+            .pop()
+            .ok_or_else(|| Error::Xla("missing loss output".into()))?;
+        let loss_v = loss.as_f32()?[0];
+        let correct_v = correct.as_f32()?[0];
+        Ok((out, loss_v, correct_v))
+    }
+
+    /// SGD update from accumulated sums: `p - lr * g / count`.
+    pub fn apply_update(
+        &self,
+        lr: f32,
+        count: f32,
+        tail_params: &[Tensor],
+        grad_sums: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        if tail_params.len() != grad_sums.len() {
+            return Err(Error::other("params/grads arity mismatch"));
+        }
+        let exe = self.apply_update_exe()?;
+        let mut args = Vec::with_capacity(2 + 2 * tail_params.len());
+        args.push(Tensor::scalar_f32(lr));
+        args.push(Tensor::scalar_f32(count));
+        args.extend(tail_params.iter().cloned());
+        args.extend(grad_sums.iter().cloned());
+        self.engine.run(&exe, &args)
+    }
+
+    /// Element-wise accumulate `src` into `acc` (gradient accumulation
+    /// across micro-batches happens host-side; both are f32).  In-place
+    /// over the raw payloads — see the §Perf iteration log.
+    pub fn accumulate(acc: &mut [Tensor], src: &[Tensor]) -> Result<()> {
+        if acc.len() != src.len() {
+            return Err(Error::other("accumulate arity mismatch"));
+        }
+        for (a, s) in acc.iter_mut().zip(src) {
+            a.add_assign_f32(s)
+                .map_err(|e| Error::other(format!("accumulate: {e}")))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_adds() {
+        let mut acc = vec![Tensor::from_f32(vec![2], &[1.0, 2.0])];
+        let src = vec![Tensor::from_f32(vec![2], &[0.5, -1.0])];
+        ModelArtifacts::accumulate(&mut acc, &src).unwrap();
+        assert_eq!(acc[0].as_f32().unwrap(), vec![1.5, 1.0]);
+    }
+
+    #[test]
+    fn accumulate_rejects_mismatch() {
+        let mut acc = vec![Tensor::from_f32(vec![2], &[1.0, 2.0])];
+        let src = vec![Tensor::from_f32(vec![3], &[0.5, -1.0, 0.0])];
+        assert!(ModelArtifacts::accumulate(&mut acc, &src).is_err());
+    }
+}

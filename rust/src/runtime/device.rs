@@ -1,0 +1,277 @@
+//! The simulated accelerator device.
+//!
+//! The paper's testbed has 2× Tesla T4 (16 GB) per machine; this box has
+//! CPUs only.  Per DESIGN.md §2 the substitution is:
+//!
+//! - **Execution** is real (PJRT CPU runs the AOT HLO).
+//! - **Memory** is a ledger: requests admit their *modeled* footprint
+//!   (the same §5.3 estimate Hapi itself plans with) against a configured
+//!   capacity; admission beyond capacity without batch adaptation raises
+//!   [`crate::Error::Oom`] — the CUDA OOM analogue that Figs 6/10/14 mark
+//!   with '✗'.
+//! - **Speed** uses a per-unit-kind CPU/GPU ratio (Fig 3's measured
+//!   pattern: convs are ~an order of magnitude slower on CPU, the
+//!   epilogue units nearly identical).  A `Gpu` device runs at native
+//!   speed; a `Cpu` device sleeps the modeled slowdown after each real
+//!   execution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::model::UnitKind;
+
+/// Which tier-device personality this simulated device exhibits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// Native execution speed (the T4 stand-in).
+    Gpu,
+    /// Slowed by the per-kind ratio (the weak CPU-only client of §7.2).
+    Cpu,
+}
+
+impl DeviceKind {
+    /// CPU/GPU forward-time ratio per unit kind (Fig 3 pattern).
+    pub fn slowdown(&self, kind: UnitKind) -> f64 {
+        match self {
+            DeviceKind::Gpu => 1.0,
+            DeviceKind::Cpu => match kind {
+                UnitKind::Conv | UnitKind::Block => 8.0,
+                UnitKind::Attn | UnitKind::Embed => 6.0,
+                UnitKind::Fc => 2.5,
+                UnitKind::Pool => 1.5,
+                UnitKind::Norm | UnitKind::Act | UnitKind::Flatten => 1.1,
+            },
+        }
+    }
+
+    /// Sleep out the difference between modeled and real time.
+    pub fn charge(&self, kind: UnitKind, real: Duration) {
+        let ratio = self.slowdown(kind);
+        if ratio > 1.0 {
+            let extra = real.mul_f64(ratio - 1.0);
+            if !extra.is_zero() {
+                std::thread::sleep(extra);
+            }
+        }
+    }
+}
+
+/// Memory ledger of one simulated device.
+pub struct DeviceSim {
+    name: String,
+    kind: DeviceKind,
+    capacity: u64,
+    reserved: u64,
+    used: Mutex<u64>,
+    freed: Condvar,
+    peak: AtomicU64,
+    oom_events: AtomicU64,
+}
+
+impl DeviceSim {
+    pub fn new(name: impl Into<String>, kind: DeviceKind, capacity: u64, reserved: u64) -> Arc<Self> {
+        assert!(reserved < capacity);
+        Arc::new(DeviceSim {
+            name: name.into(),
+            kind,
+            capacity,
+            reserved,
+            used: Mutex::new(0),
+            freed: Condvar::new(),
+            peak: AtomicU64::new(0),
+            oom_events: AtomicU64::new(0),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn kind(&self) -> DeviceKind {
+        self.kind
+    }
+
+    /// Usable capacity (total minus runtime reservation).
+    pub fn usable(&self) -> u64 {
+        self.capacity - self.reserved
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        *self.used.lock().unwrap()
+    }
+
+    pub fn free(&self) -> u64 {
+        self.usable() - self.used()
+    }
+
+    /// Highest concurrent usage seen, including the reservation (this is
+    /// what `nvidia-smi` would have reported in §7.7).
+    pub fn peak_with_reserved(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed) + self.reserved
+    }
+
+    pub fn oom_events(&self) -> u64 {
+        self.oom_events.load(Ordering::Relaxed)
+    }
+
+    /// Admit `bytes` or fail with OOM (the no-batch-adaptation path: a
+    /// request that does not fit *now* crashes, like a CUDA allocation).
+    pub fn admit(self: &Arc<Self>, bytes: u64) -> Result<Lease> {
+        let mut used = self.used.lock().unwrap();
+        if bytes > self.usable() - *used {
+            self.oom_events.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Oom {
+                needed: bytes,
+                free: self.usable() - *used,
+                capacity: self.capacity,
+            });
+        }
+        *used += bytes;
+        self.peak.fetch_max(*used, Ordering::Relaxed);
+        Ok(Lease {
+            device: self.clone(),
+            bytes,
+        })
+    }
+
+    /// Admit `bytes`, waiting for earlier leases to release if the device
+    /// is merely *busy*; still OOMs if `bytes` can never fit.
+    pub fn admit_blocking(self: &Arc<Self>, bytes: u64) -> Result<Lease> {
+        if bytes > self.usable() {
+            self.oom_events.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Oom {
+                needed: bytes,
+                free: self.usable(),
+                capacity: self.capacity,
+            });
+        }
+        let mut used = self.used.lock().unwrap();
+        while bytes > self.usable() - *used {
+            used = self.freed.wait(used).unwrap();
+        }
+        *used += bytes;
+        self.peak.fetch_max(*used, Ordering::Relaxed);
+        Ok(Lease {
+            device: self.clone(),
+            bytes,
+        })
+    }
+
+    fn release(&self, bytes: u64) {
+        let mut used = self.used.lock().unwrap();
+        debug_assert!(*used >= bytes, "ledger underflow");
+        *used -= bytes;
+        self.freed.notify_all();
+    }
+}
+
+/// RAII memory lease; releasing is automatic and exact.
+pub struct Lease {
+    device: Arc<DeviceSim>,
+    bytes: u64,
+}
+
+impl std::fmt::Debug for Lease {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Lease({} bytes on {})", self.bytes, self.device.name)
+    }
+}
+
+impl Lease {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        self.device.release(self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(cap: u64) -> Arc<DeviceSim> {
+        DeviceSim::new("d0", DeviceKind::Gpu, cap, 0)
+    }
+
+    #[test]
+    fn admit_and_release() {
+        let d = DeviceSim::new("d0", DeviceKind::Gpu, 100, 10);
+        assert_eq!(d.usable(), 90);
+        let lease = d.admit(60).unwrap();
+        assert_eq!(d.used(), 60);
+        assert_eq!(d.free(), 30);
+        drop(lease);
+        assert_eq!(d.used(), 0);
+        assert_eq!(d.peak_with_reserved(), 70);
+    }
+
+    #[test]
+    fn oom_when_over_capacity() {
+        let d = dev(100);
+        let _l = d.admit(80).unwrap();
+        let err = d.admit(30).unwrap_err();
+        assert!(err.is_oom());
+        assert_eq!(d.oom_events(), 1);
+    }
+
+    #[test]
+    fn blocking_admit_waits_for_release() {
+        let d = dev(100);
+        let l = d.admit(80).unwrap();
+        let d2 = d.clone();
+        let h = std::thread::spawn(move || {
+            let _l2 = d2.admit_blocking(50).unwrap();
+            d2.used()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(l);
+        assert_eq!(h.join().unwrap(), 50);
+    }
+
+    #[test]
+    fn blocking_admit_still_ooms_on_impossible() {
+        let d = dev(100);
+        assert!(d.admit_blocking(200).unwrap_err().is_oom());
+    }
+
+    #[test]
+    fn never_exceeds_capacity_under_concurrency() {
+        let d = dev(100);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let d = d.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        if let Ok(l) = d.admit_blocking(30) {
+                            assert!(d.used() <= 100);
+                            drop(l);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(d.used(), 0);
+        assert!(d.peak_with_reserved() <= 100);
+    }
+
+    #[test]
+    fn cpu_slowdown_ordering() {
+        let cpu = DeviceKind::Cpu;
+        assert!(cpu.slowdown(UnitKind::Conv) > cpu.slowdown(UnitKind::Fc));
+        assert!(cpu.slowdown(UnitKind::Fc) > cpu.slowdown(UnitKind::Act));
+        assert_eq!(DeviceKind::Gpu.slowdown(UnitKind::Conv), 1.0);
+    }
+}

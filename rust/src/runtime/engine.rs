@@ -1,0 +1,177 @@
+//! The PJRT engine: HLO text → compiled executable, with a cache.
+//!
+//! Interchange is HLO **text** (see DESIGN.md §1): jax ≥ 0.5 serializes
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! `HloModuleProto::from_text_file` re-parses and reassigns ids.  One
+//! [`Engine`] wraps one `PjRtClient::cpu()` and memoizes compiled
+//! executables by path — model loads are the dominant fixed cost on the
+//! Hapi server (the paper's stateless design reloads DNNs per request; we
+//! cache the *compiled code* but re-stage parameters per request, which is
+//! the analogous behaviour for an AOT runtime).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+use super::tensor::Tensor;
+
+/// Compiled-executable handle shareable across threads.
+///
+/// SAFETY: the underlying C++ objects are documented thread-safe for the
+/// operations we use — `PjRtLoadedExecutable::Execute` may be called
+/// concurrently (PJRT executables are immutable once compiled), and we
+/// only ever *read* from `Literal`s after construction.  The Rust wrapper
+/// types are `!Send` only because they hold raw pointers.
+pub struct Exe(xla::PjRtLoadedExecutable);
+
+unsafe impl Send for Exe {}
+unsafe impl Sync for Exe {}
+
+impl std::ops::Deref for Exe {
+    type Target = xla::PjRtLoadedExecutable;
+
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<PathBuf, Arc<Exe>>>,
+}
+
+// SAFETY: PjRtClient (CPU) is thread-safe for compile/execute; see `Exe`.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn cpu() -> Result<Arc<Engine>> {
+        Ok(Arc::new(Engine {
+            client: xla::PjRtClient::cpu()?,
+            cache: Mutex::new(BTreeMap::new()),
+        }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (memoized).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Arc<Exe>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(exe) = self.cache.lock().unwrap().get(&path) {
+            return Ok(exe.clone());
+        }
+        // Compile outside the lock: compiles are slow and independent.
+        let text_path = path.to_str().ok_or_else(|| {
+            Error::Artifact(format!("non-utf8 path {}", path.display()))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(text_path)
+            .map_err(|e| {
+                Error::Artifact(format!("{}: {e}", path.display()))
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(Exe(self.client.compile(&comp)?));
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(path).or_insert(exe).clone())
+    }
+
+    /// Execute with host tensors; returns the flattened output tuple.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the result
+    /// is a one-element list whose single literal is a tuple.
+    pub fn run(&self, exe: &Exe, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(exe, &literals)
+    }
+
+    /// Execute with pre-staged literal references (hot path: parameters
+    /// are converted once per segment and shared across micro-batches —
+    /// see the §Perf iteration log in EXPERIMENTS.md).
+    pub fn run_literal_refs(
+        &self,
+        exe: &Exe,
+        literals: &[&xla::Literal],
+    ) -> Result<Vec<Tensor>> {
+        let result = exe.execute::<&xla::Literal>(literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute with pre-staged literals.
+    pub fn run_literals(
+        &self,
+        exe: &Exe,
+        literals: &[xla::Literal],
+    ) -> Result<Vec<Tensor>> {
+        let result = exe.execute::<xla::Literal>(literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal hand-written HLO: (x, y) -> (x + y,) over f32[2].
+    const ADD_HLO: &str = r#"HloModule test_add, entry_computation_layout={(f32[2]{0}, f32[2]{0})->(f32[2]{0})}
+
+ENTRY main {
+  x = f32[2]{0} parameter(0)
+  y = f32[2]{0} parameter(1)
+  s = f32[2]{0} add(x, y)
+  ROOT t = (f32[2]{0}) tuple(s)
+}
+"#;
+
+    fn write_hlo() -> PathBuf {
+        let dir = std::env::temp_dir().join("hapi_engine_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("add.hlo.txt");
+        std::fs::write(&path, ADD_HLO).unwrap();
+        path
+    }
+
+    #[test]
+    fn compile_and_run_hlo_text() {
+        let engine = Engine::cpu().unwrap();
+        let path = write_hlo();
+        let exe = engine.load(&path).unwrap();
+        let x = Tensor::from_f32(vec![2], &[1.0, 2.0]);
+        let y = Tensor::from_f32(vec![2], &[10.0, 20.0]);
+        let out = engine.run(&exe, &[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_f32().unwrap(), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn cache_hits() {
+        let engine = Engine::cpu().unwrap();
+        let path = write_hlo();
+        let a = engine.load(&path).unwrap();
+        let b = engine.load(&path).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(engine.cached_executables(), 1);
+    }
+
+    #[test]
+    fn missing_file_is_artifact_error() {
+        let engine = Engine::cpu().unwrap();
+        assert!(matches!(
+            engine.load("/no/such/file.hlo.txt"),
+            Err(Error::Artifact(_))
+        ));
+    }
+}

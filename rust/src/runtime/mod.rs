@@ -1,0 +1,21 @@
+//! Execution runtime: PJRT engine, tensors, artifacts, simulated device.
+//!
+//! - [`tensor`]   — host tensors + the `.tnsr` interchange format and the
+//!   Literal bridge (kept in lockstep with `python/compile/tensorio.py`);
+//! - [`engine`]   — the XLA PJRT CPU client: HLO text → compiled
+//!   executable, with a process-wide executable cache;
+//! - [`artifact`] — per-model artifact bundles (unit executables, initial
+//!   parameters, train-step executables) and chunked segment execution;
+//! - [`device`]   — the **simulated accelerator**: a memory ledger driving
+//!   OOM semantics plus a per-unit-kind speed model (DESIGN.md §2
+//!   documents why this substitution preserves the paper's behaviour).
+
+pub mod artifact;
+pub mod device;
+pub mod engine;
+pub mod tensor;
+
+pub use artifact::ModelArtifacts;
+pub use device::{DeviceKind, DeviceSim, Lease};
+pub use engine::Engine;
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,406 @@
+//! Host tensors, the `.tnsr` interchange format, and the Literal bridge.
+//!
+//! `.tnsr` layout (little-endian), mirrored in
+//! `python/compile/tensorio.py` — keep the two in lockstep:
+//!
+//! ```text
+//! magic "TNSR" | u8 dtype (0=f32, 1=i32) | u8 rank | rank×u32 dims | data
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size(&self) -> usize {
+        4
+    }
+
+    fn code(&self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<DType> {
+        match c {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            other => Err(Error::Artifact(format!("bad dtype code {other}"))),
+        }
+    }
+
+    fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// A dense host tensor (row-major raw bytes + dims).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(dims: Vec<usize>, values: &[f32]) -> Tensor {
+        assert_eq!(values.len(), dims.iter().product::<usize>());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::F32,
+            dims,
+            data,
+        }
+    }
+
+    pub fn from_i32(dims: Vec<usize>, values: &[i32]) -> Tensor {
+        assert_eq!(values.len(), dims.iter().product::<usize>());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::I32,
+            dims,
+            data,
+        }
+    }
+
+    pub fn zeros(dtype: DType, dims: Vec<usize>) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor {
+            dtype,
+            dims,
+            data: vec![0u8; n * dtype.size()],
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(vec![], &[v])
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn raw(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn into_raw(self) -> Vec<u8> {
+        self.data
+    }
+
+    /// Reinterpret raw bytes (length must match dims × dtype size).
+    pub fn from_raw(dtype: DType, dims: Vec<usize>, data: Vec<u8>) -> Result<Tensor> {
+        let want: usize = dims.iter().product::<usize>() * dtype.size();
+        if data.len() != want {
+            return Err(Error::Artifact(format!(
+                "tensor raw size {} != expected {want} for dims {dims:?}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { dtype, dims, data })
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::Artifact("not an f32 tensor".into()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::Artifact("not an i32 tensor".into()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// In-place element-wise `self += other` over f32 payloads — the
+    /// gradient-accumulation hot path (perf pass: avoids the two full
+    /// copies of the naive as_f32/from_f32 round-trip).
+    pub fn add_assign_f32(&mut self, other: &Tensor) -> Result<()> {
+        if self.dtype != DType::F32 || other.dtype != DType::F32 {
+            return Err(Error::Artifact("add_assign_f32 needs f32".into()));
+        }
+        if self.data.len() != other.data.len() {
+            return Err(Error::Artifact("add_assign_f32 shape mismatch".into()));
+        }
+        for (a, b) in self
+            .data
+            .chunks_exact_mut(4)
+            .zip(other.data.chunks_exact(4))
+        {
+            let v = f32::from_le_bytes([a[0], a[1], a[2], a[3]])
+                + f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            a.copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    // --- batch (axis 0) helpers for micro-batch chunking ----------------
+
+    /// Bytes per one axis-0 slice.
+    pub fn sample_bytes(&self) -> usize {
+        if self.dims.is_empty() {
+            return self.data.len();
+        }
+        self.dims[1..].iter().product::<usize>() * self.dtype.size()
+    }
+
+    /// Sub-tensor `[start, start+len)` along axis 0 (copies).
+    pub fn slice_batch(&self, start: usize, len: usize) -> Tensor {
+        assert!(!self.dims.is_empty());
+        assert!(start + len <= self.dims[0]);
+        let sb = self.sample_bytes();
+        let mut dims = self.dims.clone();
+        dims[0] = len;
+        Tensor {
+            dtype: self.dtype,
+            dims,
+            data: self.data[start * sb..(start + len) * sb].to_vec(),
+        }
+    }
+
+    /// Zero-pad along axis 0 to `n` rows.
+    pub fn pad_batch(&self, n: usize) -> Tensor {
+        assert!(!self.dims.is_empty());
+        assert!(n >= self.dims[0]);
+        if n == self.dims[0] {
+            return self.clone();
+        }
+        let sb = self.sample_bytes();
+        let mut dims = self.dims.clone();
+        dims[0] = n;
+        let mut data = self.data.clone();
+        data.resize(n * sb, 0);
+        Tensor {
+            dtype: self.dtype,
+            dims,
+            data,
+        }
+    }
+
+    /// Concatenate along axis 0.
+    pub fn concat_batch(parts: &[Tensor]) -> Result<Tensor> {
+        let first = parts
+            .first()
+            .ok_or_else(|| Error::Artifact("concat of nothing".into()))?;
+        let mut dims = first.dims.clone();
+        let mut total = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            if p.dims[1..] != first.dims[1..] || p.dtype != first.dtype {
+                return Err(Error::Artifact(format!(
+                    "concat shape mismatch {:?} vs {:?}",
+                    p.dims, first.dims
+                )));
+            }
+            total += p.dims[0];
+            data.extend_from_slice(&p.data);
+        }
+        dims[0] = total;
+        Ok(Tensor {
+            dtype: first.dtype,
+            dims,
+            data,
+        })
+    }
+
+    // --- .tnsr IO ---------------------------------------------------------
+
+    pub fn read_tnsr(path: impl AsRef<Path>) -> Result<Tensor> {
+        let mut f = std::fs::File::open(&path).map_err(|e| {
+            Error::Artifact(format!("{}: {e}", path.as_ref().display()))
+        })?;
+        let mut head = [0u8; 6];
+        f.read_exact(&mut head)?;
+        if &head[..4] != b"TNSR" {
+            return Err(Error::Artifact(format!(
+                "{}: bad magic",
+                path.as_ref().display()
+            )));
+        }
+        let dtype = DType::from_code(head[4])?;
+        let rank = head[5] as usize;
+        let mut dims = Vec::with_capacity(rank);
+        let mut dim_buf = [0u8; 4];
+        for _ in 0..rank {
+            f.read_exact(&mut dim_buf)?;
+            dims.push(u32::from_le_bytes(dim_buf) as usize);
+        }
+        let mut data = Vec::new();
+        f.read_to_end(&mut data)?;
+        Tensor::from_raw(dtype, dims, data)
+    }
+
+    pub fn write_tnsr(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"TNSR")?;
+        f.write_all(&[self.dtype.code(), self.dims.len() as u8])?;
+        for d in &self.dims {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        f.write_all(&self.data)?;
+        Ok(())
+    }
+
+    // --- Literal bridge -----------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.dims,
+            &self.data,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let dtype = match shape.primitive_type() {
+            xla::PrimitiveType::F32 => DType::F32,
+            xla::PrimitiveType::S32 => DType::I32,
+            other => {
+                return Err(Error::Xla(format!(
+                    "unsupported literal type {other:?}"
+                )))
+            }
+        };
+        let n: usize = dims.iter().product();
+        let mut data = vec![0u8; n * dtype.size()];
+        match dtype {
+            DType::F32 => {
+                let mut tmp = vec![0f32; n];
+                lit.copy_raw_to(&mut tmp)?;
+                for (i, v) in tmp.iter().enumerate() {
+                    data[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::I32 => {
+                let mut tmp = vec![0i32; n];
+                lit.copy_raw_to(&mut tmp)?;
+                for (i, v) in tmp.iter().enumerate() {
+                    data[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        Tensor::from_raw(dtype, dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_values() {
+        let t = Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.sample_bytes(), 12);
+    }
+
+    #[test]
+    fn tnsr_file_roundtrip() {
+        let dir = std::env::temp_dir().join("hapi_tnsr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.tnsr");
+        let t = Tensor::from_i32(vec![4], &[-1, 0, 7, 42]);
+        t.write_tnsr(&path).unwrap();
+        let back = Tensor::read_tnsr(&path).unwrap();
+        assert_eq!(back, t);
+        // Scalar (rank 0).
+        let s = Tensor::scalar_f32(3.5);
+        s.write_tnsr(&path).unwrap();
+        let back = Tensor::read_tnsr(&path).unwrap();
+        assert_eq!(back.dims, Vec::<usize>::new());
+        assert_eq!(back.as_f32().unwrap(), vec![3.5]);
+    }
+
+    #[test]
+    fn reads_python_written_tnsr() {
+        // Bytes equivalent to tensorio.write_tensor(np.arange(3, f32)).
+        let mut bytes = b"TNSR".to_vec();
+        bytes.push(0); // f32
+        bytes.push(1); // rank 1
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        for v in [0f32, 1.0, 2.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let dir = std::env::temp_dir().join("hapi_tnsr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("py.tnsr");
+        std::fs::write(&path, bytes).unwrap();
+        let t = Tensor::read_tnsr(&path).unwrap();
+        assert_eq!(t.dims, vec![3]);
+        assert_eq!(t.as_f32().unwrap(), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn batch_slicing_and_padding() {
+        let t = Tensor::from_f32(vec![3, 2], &[1., 2., 3., 4., 5., 6.]);
+        let s = t.slice_batch(1, 2);
+        assert_eq!(s.dims, vec![2, 2]);
+        assert_eq!(s.as_f32().unwrap(), vec![3., 4., 5., 6.]);
+        let p = s.pad_batch(4);
+        assert_eq!(p.dims, vec![4, 2]);
+        assert_eq!(p.as_f32().unwrap(), vec![3., 4., 5., 6., 0., 0., 0., 0.]);
+        let c = Tensor::concat_batch(&[t.clone(), s]).unwrap();
+        assert_eq!(c.dims, vec![5, 2]);
+    }
+
+    #[test]
+    fn add_assign_inplace() {
+        let mut a = Tensor::from_f32(vec![3], &[1.0, 2.0, 3.0]);
+        let b = Tensor::from_f32(vec![3], &[0.5, -2.0, 1.0]);
+        a.add_assign_f32(&b).unwrap();
+        assert_eq!(a.as_f32().unwrap(), vec![1.5, 0.0, 4.0]);
+        // mismatched length / dtype rejected
+        let c = Tensor::from_f32(vec![2], &[0.0, 0.0]);
+        assert!(a.add_assign_f32(&c).is_err());
+        let mut d = Tensor::from_i32(vec![3], &[1, 2, 3]);
+        assert!(d.add_assign_f32(&b).is_err());
+    }
+
+    #[test]
+    fn concat_rejects_mismatch() {
+        let a = Tensor::from_f32(vec![1, 2], &[1., 2.]);
+        let b = Tensor::from_f32(vec![1, 3], &[1., 2., 3.]);
+        assert!(Tensor::concat_batch(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn from_raw_validates() {
+        assert!(Tensor::from_raw(DType::F32, vec![2], vec![0; 7]).is_err());
+        assert!(Tensor::from_raw(DType::F32, vec![2], vec![0; 8]).is_ok());
+    }
+}

@@ -1,0 +1,267 @@
+//! The Hapi server — the COS-side half of the system (§5.2, §5.5).
+//!
+//! Plugs into the COS proxy as its [`PostHandler`].  For every POST it:
+//!
+//! 1. reads the referenced object (a *storage request* to the storage
+//!    nodes) and, for ALL_IN_COS jobs, the matching label shard;
+//! 2. registers with the [`planner`] which assigns a device
+//!    (round-robin, §5.5: "distributes requests evenly on the existing
+//!    GPUs") and — when batch adaptation is on — solves Eq. 4 over the
+//!    queued requests after a short gather window, granting each request
+//!    a COS batch size and a memory lease;
+//! 3. executes feature extraction up to the split index on the real PJRT
+//!    engine, charging the simulated device;
+//! 4. returns the split-layer outputs (or, for ALL_IN_COS, performs the
+//!    training step server-side and returns only the loss).
+//!
+//! The server is **stateless across requests** like the paper's: no
+//! per-job state is kept; every POST carries the profile information the
+//! planner needs (the compiled-executable cache is shared, which is the
+//! AOT analogue of the paper reloading DNN weights per request — weights
+//! here are re-staged per request too).
+
+pub mod planner;
+pub mod request;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::HapiConfig;
+use crate::cos::proxy::PostHandler;
+use crate::cos::storage::StorageCluster;
+use crate::cos::ObjectKey;
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+use crate::model::ModelRegistry;
+use crate::runtime::{DeviceKind, DeviceSim, Engine, ModelArtifacts, Tensor};
+use crate::util::json::Json;
+
+pub use planner::Planner;
+pub use request::{PostRequest, RequestMode};
+
+pub struct HapiServer {
+    engine: Arc<Engine>,
+    models: ModelRegistry,
+    artifacts: Mutex<BTreeMap<String, Arc<ModelArtifacts>>>,
+    cluster: Arc<StorageCluster>,
+    devices: Vec<Arc<DeviceSim>>,
+    planner: Planner,
+    next_device: AtomicUsize,
+    cfg: HapiConfig,
+    registry: Registry,
+}
+
+impl HapiServer {
+    pub fn new(
+        engine: Arc<Engine>,
+        models: ModelRegistry,
+        cluster: Arc<StorageCluster>,
+        cfg: HapiConfig,
+        registry: Registry,
+    ) -> Arc<HapiServer> {
+        let devices: Vec<Arc<DeviceSim>> = (0..cfg.cos_gpus)
+            .map(|i| {
+                DeviceSim::new(
+                    format!("cos-gpu{i}"),
+                    DeviceKind::Gpu,
+                    cfg.cos_gpu_mem,
+                    cfg.reserved_bytes,
+                )
+            })
+            .collect();
+        let planner = Planner::new(
+            devices.clone(),
+            cfg.min_cos_batch,
+            cfg.batch_adaptation,
+            registry.clone(),
+        );
+        Arc::new(HapiServer {
+            engine,
+            models,
+            artifacts: Mutex::new(BTreeMap::new()),
+            cluster,
+            devices,
+            planner,
+            next_device: AtomicUsize::new(0),
+            cfg,
+            registry,
+        })
+    }
+
+    pub fn devices(&self) -> &[Arc<DeviceSim>] {
+        &self.devices
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// Pre-compile all unit executables of a model (startup warming).
+    pub fn warm(&self, model: &str) -> Result<()> {
+        self.artifacts_for(model)?.warm()
+    }
+
+    fn artifacts_for(&self, model: &str) -> Result<Arc<ModelArtifacts>> {
+        if let Some(a) = self.artifacts.lock().unwrap().get(model) {
+            return Ok(a.clone());
+        }
+        let profile = self.models.get(model)?;
+        let arts = Arc::new(ModelArtifacts::load(
+            self.engine.clone(),
+            profile,
+            self.cfg.model_dir(model),
+        )?);
+        let mut guard = self.artifacts.lock().unwrap();
+        Ok(guard.entry(model.to_string()).or_insert(arts).clone())
+    }
+
+    fn read_object_tensor(
+        &self,
+        key: &ObjectKey,
+        dims: &[usize],
+    ) -> Result<Tensor> {
+        let obj = self.cluster.get(key)?;
+        Tensor::from_raw(
+            crate::runtime::DType::F32,
+            dims.to_vec(),
+            obj.data.as_ref().clone(),
+        )
+    }
+
+    fn handle_request(&self, req: PostRequest, _body: Vec<u8>) -> Result<(Json, Vec<u8>)> {
+        let arts = self.artifacts_for(&req.model)?;
+        let samples = req.input_dims[0];
+
+        // Storage request: fetch the training-data object.
+        let input = self.read_object_tensor(&req.object, &req.input_dims)?;
+
+        // Device assignment (round-robin) + batch adaptation (Eq. 4).
+        let device_idx =
+            self.next_device.fetch_add(1, Ordering::Relaxed) % self.devices.len();
+        let grant = self.planner.admit(
+            req.id,
+            device_idx,
+            req.mem_data_per_sample,
+            req.mem_model_bytes,
+            req.b_max.min(samples),
+            self.cfg.default_cos_batch,
+        )?;
+        let device = &self.devices[device_idx];
+
+        self.registry.counter("hapi.requests").inc();
+        self.registry
+            .gauge("hapi.device_used_max")
+            .set(device.peak_with_reserved() as i64);
+
+        let out = match req.mode {
+            RequestMode::FeatureExtract => {
+                let feats = arts.forward_segment(
+                    &input,
+                    1,
+                    req.split_idx,
+                    DeviceKind::Gpu,
+                    None,
+                )?;
+                let header = Json::obj(vec![
+                    ("req_id", Json::num(req.id as f64)),
+                    ("cos_batch", Json::num(grant.batch as f64)),
+                    (
+                        "out_dims",
+                        Json::Arr(
+                            feats
+                                .dims
+                                .iter()
+                                .map(|&d| Json::num(d as f64))
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                (header, feats.into_raw())
+            }
+            RequestMode::AllInCos => {
+                // §5.1's strawman: both phases on the COS at the training
+                // batch size (no decoupling).  Labels live next to data.
+                let labels_key = ObjectKey::new(req.labels_object.clone());
+                let labels_obj = self.cluster.get(&labels_key)?;
+                let labels = Tensor::from_raw(
+                    crate::runtime::DType::I32,
+                    vec![samples],
+                    labels_obj.data.as_ref().clone(),
+                )?;
+                let loss = self.train_on_cos(&arts, &input, &labels)?;
+                let header = Json::obj(vec![
+                    ("req_id", Json::num(req.id as f64)),
+                    ("cos_batch", Json::num(grant.batch as f64)),
+                    ("loss", Json::num(loss as f64)),
+                ]);
+                (header, Vec::new())
+            }
+        };
+        drop(grant);
+        Ok(out)
+    }
+
+    /// ALL_IN_COS: feature extraction + training step, all server-side.
+    fn train_on_cos(
+        &self,
+        arts: &ModelArtifacts,
+        input: &Tensor,
+        labels: &Tensor,
+    ) -> Result<f32> {
+        let freeze = arts.profile.freeze_idx;
+        let feats =
+            arts.forward_segment(input, 1, freeze, DeviceKind::Gpu, None)?;
+        let mb = arts.micro_batch();
+        let n = feats.dims[0];
+        let mut tail = arts.initial_tail_params();
+        let mut grad_sums: Option<Vec<Tensor>> = None;
+        let mut loss_sum = 0.0f32;
+        let mut off = 0;
+        while off < n {
+            let len = mb.min(n - off);
+            let x = feats.slice_batch(off, len).pad_batch(mb);
+            let y = labels.slice_batch(off, len).pad_batch(mb);
+            let mut mask = vec![0.0f32; mb];
+            mask[..len].iter_mut().for_each(|m| *m = 1.0);
+            let mask = Tensor::from_f32(vec![mb], &mask);
+            let (grads, loss, _correct) =
+                arts.train_grads(&x, &y, &mask, &tail)?;
+            loss_sum += loss;
+            match grad_sums.as_mut() {
+                Some(acc) => ModelArtifacts::accumulate(acc, &grads)?,
+                None => grad_sums = Some(grads),
+            }
+            off += len;
+        }
+        if let Some(grads) = grad_sums {
+            tail = arts.apply_update(
+                self.cfg.learning_rate,
+                n as f32,
+                &tail,
+                &grads,
+            )?;
+            let _ = tail; // stateless server: updated weights discarded
+        }
+        Ok(loss_sum / n as f32)
+    }
+}
+
+impl PostHandler for HapiServer {
+    fn handle(&self, header: Json, body: Vec<u8>) -> Result<(Json, Vec<u8>)> {
+        let req = PostRequest::parse(&header)?;
+        let t0 = std::time::Instant::now();
+        let out = self.handle_request(req, body);
+        self.registry
+            .histogram("hapi.request_ns")
+            .record(t0.elapsed().as_nanos() as u64);
+        if let Err(Error::Oom { .. }) = &out {
+            self.registry.counter("hapi.oom").inc();
+        }
+        out
+    }
+}

@@ -1,0 +1,390 @@
+//! The batch-adaptation planner: queues requests, gathers them briefly,
+//! and grants (COS batch size, memory lease) pairs by solving Eq. 4.
+//!
+//! §5.5's trigger conditions are implemented literally: a planning round
+//! runs when (1) there is free memory and (2) un-planned requests are
+//! queued; the planner waits a *small* gather window first ("the HAPI
+//! server waits for new requests for a small amount of time, a small
+//! fraction of the time needed to serve one request") so bursts from the
+//! same iteration are planned together.  Requests that do not fit stay
+//! queued and are re-planned as running leases release (the paper's
+//! retry-after-removal loop).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::batch::{solve, BatchRequest};
+use crate::error::{Error, Result};
+use crate::metrics::Registry;
+use crate::runtime::{DeviceSim, Lease};
+
+/// Gather window before planning a burst (≪ one request's service time).
+const GATHER_WINDOW: Duration = Duration::from_millis(3);
+/// Poll interval while requests wait for memory to free up.
+const RETRY_INTERVAL: Duration = Duration::from_millis(2);
+
+/// What a request receives once planned.
+#[derive(Debug)]
+pub struct Grant {
+    pub batch: usize,
+    _lease: Lease,
+}
+
+struct Pending {
+    id: u64,
+    device: usize,
+    per_sample: u64,
+    model_bytes: u64,
+    b_max: usize,
+    grant: Option<Result<Grant>>,
+}
+
+struct State {
+    queue: Vec<Pending>,
+    closed: bool,
+}
+
+pub struct Planner {
+    state: Arc<(Mutex<State>, Condvar)>,
+    devices: Vec<Arc<DeviceSim>>,
+    enabled: bool,
+    registry: Registry,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Planner {
+    pub fn new(
+        devices: Vec<Arc<DeviceSim>>,
+        min_batch: usize,
+        enabled: bool,
+        registry: Registry,
+    ) -> Planner {
+        let state = Arc::new((
+            Mutex::new(State {
+                queue: Vec::new(),
+                closed: false,
+            }),
+            Condvar::new(),
+        ));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let thread = if enabled {
+            let st = state.clone();
+            let devs = devices.clone();
+            let reg = registry.clone();
+            let sd = shutdown.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("hapi-planner".into())
+                    .spawn(move || planner_loop(st, devs, min_batch, reg, sd))
+                    .expect("spawn planner"),
+            )
+        } else {
+            None
+        };
+        Planner {
+            state,
+            devices,
+            enabled,
+            registry,
+            thread: Mutex::new(thread),
+            shutdown,
+        }
+    }
+
+    /// Admit one request: returns its granted COS batch + lease.
+    ///
+    /// With batch adaptation **on**, blocks until the planner fits the
+    /// request (possibly reduced).  With it **off**, charges
+    /// `min(default_batch, b_max)` immediately and fails with OOM when
+    /// the device is full — the Fig 14 "w/o BA" behaviour.
+    pub fn admit(
+        &self,
+        id: u64,
+        device: usize,
+        per_sample: u64,
+        model_bytes: u64,
+        b_max: usize,
+        default_batch: usize,
+    ) -> Result<Grant> {
+        self.registry.counter("ba.requests").inc();
+        if !self.enabled {
+            let batch = default_batch.min(b_max).max(1);
+            let bytes = model_bytes + batch as u64 * per_sample;
+            let lease = self.devices[device].admit(bytes)?;
+            return Ok(Grant {
+                batch,
+                _lease: lease,
+            });
+        }
+
+        let (lock, cv) = &*self.state;
+        {
+            let mut st = lock.lock().unwrap();
+            if st.closed {
+                return Err(Error::other("planner shut down"));
+            }
+            st.queue.push(Pending {
+                id,
+                device,
+                per_sample,
+                model_bytes,
+                b_max,
+                grant: None,
+            });
+            cv.notify_all();
+        }
+        // Wait for our grant.
+        let mut st = lock.lock().unwrap();
+        loop {
+            if let Some(pos) = st
+                .queue
+                .iter()
+                .position(|p| p.id == id && p.grant.is_some())
+            {
+                let p = st.queue.remove(pos);
+                return p.grant.unwrap();
+            }
+            if st.closed {
+                return Err(Error::other("planner shut down"));
+            }
+            st = cv.wait(st).unwrap();
+        }
+    }
+
+    /// Stats snapshot for Table 5.
+    pub fn adaptation_stats(&self) -> (u64, u64, f64) {
+        let total = self.registry.counter("ba.requests").get();
+        let reduced = self.registry.counter("ba.reduced").get();
+        let pct_sum =
+            self.registry.counter("ba.reduction_pctx100").get() as f64 / 100.0;
+        let avg = if reduced > 0 {
+            pct_sum / reduced as f64
+        } else {
+            0.0
+        };
+        (total, reduced, avg)
+    }
+}
+
+impl Drop for Planner {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let (lock, cv) = &*self.state;
+        lock.lock().unwrap().closed = true;
+        cv.notify_all();
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn planner_loop(
+    state: Arc<(Mutex<State>, Condvar)>,
+    devices: Vec<Arc<DeviceSim>>,
+    min_batch: usize,
+    registry: Registry,
+    shutdown: Arc<AtomicBool>,
+) {
+    let (lock, cv) = &*state;
+    loop {
+        // Wait for work.
+        {
+            let mut st = lock.lock().unwrap();
+            while st.queue.iter().all(|p| p.grant.is_some()) && !st.closed {
+                let (g, _t) = cv
+                    .wait_timeout(st, Duration::from_millis(50))
+                    .unwrap();
+                st = g;
+                if shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            if st.closed {
+                return;
+            }
+        }
+        // Gather window: let the burst arrive.
+        std::thread::sleep(GATHER_WINDOW);
+
+        let t0 = std::time::Instant::now();
+        let mut made_progress = false;
+        {
+            let mut st = lock.lock().unwrap();
+            if st.closed {
+                return;
+            }
+            for (dev_idx, device) in devices.iter().enumerate() {
+                let waiting: Vec<usize> = st
+                    .queue
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.device == dev_idx && p.grant.is_none())
+                    .map(|(i, _)| i)
+                    .collect();
+                if waiting.is_empty() {
+                    continue;
+                }
+                // Anything that can never fit alone fails fast with OOM.
+                for &i in &waiting {
+                    let p = &st.queue[i];
+                    let floor = p.model_bytes
+                        + (min_batch.min(p.b_max)) as u64 * p.per_sample;
+                    if floor > device.usable() {
+                        let err = Err(Error::Oom {
+                            needed: floor,
+                            free: device.usable(),
+                            capacity: device.capacity(),
+                        });
+                        st.queue[i].grant = Some(err);
+                        made_progress = true;
+                    }
+                }
+                let waiting: Vec<usize> = st
+                    .queue
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.device == dev_idx && p.grant.is_none())
+                    .map(|(i, _)| i)
+                    .collect();
+                if waiting.is_empty() {
+                    continue;
+                }
+                let reqs: Vec<BatchRequest> = waiting
+                    .iter()
+                    .map(|&i| {
+                        let p = &st.queue[i];
+                        BatchRequest {
+                            id: p.id,
+                            data_bytes_per_sample: p.per_sample,
+                            model_bytes: p.model_bytes,
+                            b_max: p.b_max,
+                        }
+                    })
+                    .collect();
+                let budget = device.free();
+                let Ok(sol) = solve(&reqs, budget, min_batch, min_batch)
+                else {
+                    // Nothing fits right now; retry once leases release.
+                    continue;
+                };
+                registry.counter("ba.runs").inc();
+                for a in &sol.assignments {
+                    let &i = waiting
+                        .iter()
+                        .find(|&&i| st.queue[i].id == a.id)
+                        .unwrap();
+                    let p = &st.queue[i];
+                    let bytes =
+                        p.model_bytes + a.batch as u64 * p.per_sample;
+                    match device.admit(bytes) {
+                        Ok(lease) => {
+                            if a.batch < p.b_max {
+                                registry.counter("ba.reduced").inc();
+                                let pct = 100.0
+                                    * (p.b_max - a.batch) as f64
+                                    / p.b_max as f64;
+                                registry
+                                    .counter("ba.reduction_pctx100")
+                                    .add((pct * 100.0) as u64);
+                            }
+                            st.queue[i].grant = Some(Ok(Grant {
+                                batch: a.batch,
+                                _lease: lease,
+                            }));
+                            made_progress = true;
+                        }
+                        Err(_) => {
+                            // Raced with another allocation; retry later.
+                        }
+                    }
+                }
+            }
+            if made_progress {
+                cv.notify_all();
+            }
+        }
+        registry
+            .histogram("ba.solve_ns")
+            .record(t0.elapsed().as_nanos() as u64);
+        if !made_progress {
+            std::thread::sleep(RETRY_INTERVAL);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::DeviceKind;
+
+    fn devices(cap: u64) -> Vec<Arc<DeviceSim>> {
+        vec![DeviceSim::new("d0", DeviceKind::Gpu, cap, 0)]
+    }
+
+    #[test]
+    fn ba_off_charges_default_and_ooms() {
+        let devs = devices(10_000);
+        let planner =
+            Planner::new(devs.clone(), 20, false, Registry::new());
+        // 20 samples × 100 B = 2000 B per grant; five fit, the sixth OOMs.
+        let grants: Vec<Grant> = (0..5)
+            .map(|i| planner.admit(i, 0, 100, 0, 100, 20).unwrap())
+            .collect();
+        assert!(planner.admit(9, 0, 100, 0, 100, 20).unwrap_err().is_oom());
+        drop(grants);
+        assert_eq!(devs[0].used(), 0);
+    }
+
+    #[test]
+    fn ba_on_reduces_to_fit() {
+        let planner = Planner::new(devices(6_000), 20, true, Registry::new());
+        // Two concurrent requests, each wanting 100 samples × 100 B;
+        // only 60 samples total fit: both get reduced.
+        let p = Arc::new(planner);
+        let handles: Vec<_> = (0..2)
+            .map(|i| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    p.admit(i, 0, 100, 0, 100, 100).unwrap().batch
+                })
+            })
+            .collect();
+        let batches: Vec<usize> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let sum: usize = batches.iter().sum();
+        assert!(sum <= 60, "sum {sum}");
+        for b in &batches {
+            assert!(*b >= 20);
+        }
+        let (total, reduced, avg_pct) = p.adaptation_stats();
+        assert_eq!(total, 2);
+        assert_eq!(reduced, 2);
+        assert!(avg_pct > 0.0);
+    }
+
+    #[test]
+    fn ba_on_waits_for_release_then_grants() {
+        let devs = devices(2_100);
+        let planner =
+            Arc::new(Planner::new(devs.clone(), 20, true, Registry::new()));
+        let first = planner.admit(1, 0, 100, 0, 20, 20).unwrap();
+        assert_eq!(first.batch, 20);
+        // Second cannot fit while the first holds the lease.
+        let p2 = planner.clone();
+        let h = std::thread::spawn(move || {
+            p2.admit(2, 0, 100, 0, 20, 20).unwrap().batch
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(first);
+        assert_eq!(h.join().unwrap(), 20);
+    }
+
+    #[test]
+    fn impossible_request_fails_fast_with_oom() {
+        let planner = Planner::new(devices(1_000), 20, true, Registry::new());
+        let err = planner.admit(1, 0, 100, 0, 100, 20).unwrap_err();
+        assert!(err.is_oom());
+    }
+}

@@ -1,0 +1,170 @@
+//! POST request parsing: the JSON header every Hapi POST carries (§5.2:
+//! "the HAPI client sends ... the necessary information: split index,
+//! model type, and the name of the object", plus the §5.3 profiling
+//! results the server's planner multiplies by its chosen COS batch).
+
+use crate::cos::ObjectKey;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestMode {
+    /// Normal Hapi pushdown: feature extraction up to the split index.
+    FeatureExtract,
+    /// §5.1 strawman: the entire TL computation on the COS.
+    AllInCos,
+}
+
+#[derive(Debug, Clone)]
+pub struct PostRequest {
+    pub id: u64,
+    pub model: String,
+    pub split_idx: usize,
+    pub object: ObjectKey,
+    /// Label shard key (ALL_IN_COS only).
+    pub labels_object: String,
+    pub input_dims: Vec<usize>,
+    /// Client's cap on the COS batch (§5.2 observation 2: bounded by the
+    /// training batch size).
+    pub b_max: usize,
+    /// §5.3 profile: per-sample activation bytes at this split.
+    pub mem_data_per_sample: u64,
+    /// §5.3 profile: pushed-down weight bytes.
+    pub mem_model_bytes: u64,
+    pub mode: RequestMode,
+}
+
+impl PostRequest {
+    pub fn parse(j: &Json) -> Result<PostRequest> {
+        let mode = match j.opt("mode").map(|m| m.as_str()).transpose()? {
+            Some("all_in_cos") => RequestMode::AllInCos,
+            Some("feature_extract") | None => RequestMode::FeatureExtract,
+            Some(other) => {
+                return Err(Error::Protocol(format!(
+                    "unknown request mode {other:?}"
+                )))
+            }
+        };
+        let mem = j.get("mem")?;
+        let req = PostRequest {
+            id: j.get("req_id")?.as_u64()?,
+            model: j.get("model")?.as_str()?.to_string(),
+            split_idx: j.get("split_idx")?.as_usize()?,
+            object: ObjectKey::new(j.get("object")?.as_str()?),
+            labels_object: j
+                .opt("labels_object")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+            input_dims: j.get("input_dims")?.as_usize_vec()?,
+            b_max: j.get("b_max")?.as_usize()?,
+            mem_data_per_sample: mem.get("data_per_sample")?.as_u64()?,
+            mem_model_bytes: mem.get("model_bytes")?.as_u64()?,
+            mode,
+        };
+        if req.input_dims.is_empty() || req.input_dims[0] == 0 {
+            return Err(Error::Protocol("empty input dims".into()));
+        }
+        if req.split_idx == 0 {
+            return Err(Error::Protocol("split_idx must be ≥ 1".into()));
+        }
+        if req.b_max == 0 {
+            return Err(Error::Protocol("b_max must be ≥ 1".into()));
+        }
+        Ok(req)
+    }
+
+    /// Build the header JSON (client side).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("req_id", Json::num(self.id as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("split_idx", Json::num(self.split_idx as f64)),
+            ("object", Json::str(self.object.as_str())),
+            (
+                "input_dims",
+                Json::Arr(
+                    self.input_dims
+                        .iter()
+                        .map(|&d| Json::num(d as f64))
+                        .collect(),
+                ),
+            ),
+            ("b_max", Json::num(self.b_max as f64)),
+            (
+                "mem",
+                Json::obj(vec![
+                    (
+                        "data_per_sample",
+                        Json::num(self.mem_data_per_sample as f64),
+                    ),
+                    ("model_bytes", Json::num(self.mem_model_bytes as f64)),
+                ]),
+            ),
+        ];
+        if self.mode == RequestMode::AllInCos {
+            fields.push(("mode", Json::str("all_in_cos")));
+            fields.push((
+                "labels_object",
+                Json::str(self.labels_object.clone()),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PostRequest {
+        PostRequest {
+            id: 7,
+            model: "alexnet".into(),
+            split_idx: 5,
+            object: ObjectKey::new("ds/shard_00001"),
+            labels_object: String::new(),
+            input_dims: vec![100, 3, 32, 32],
+            b_max: 100,
+            mem_data_per_sample: 65536,
+            mem_model_bytes: 123456,
+            mode: RequestMode::FeatureExtract,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let r = sample();
+        let j = r.to_json();
+        let back = PostRequest::parse(&j).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.model, "alexnet");
+        assert_eq!(back.split_idx, 5);
+        assert_eq!(back.input_dims, vec![100, 3, 32, 32]);
+        assert_eq!(back.mem_data_per_sample, 65536);
+        assert_eq!(back.mode, RequestMode::FeatureExtract);
+    }
+
+    #[test]
+    fn all_in_cos_roundtrip() {
+        let mut r = sample();
+        r.mode = RequestMode::AllInCos;
+        r.labels_object = "ds/labels_00001".into();
+        let back = PostRequest::parse(&r.to_json()).unwrap();
+        assert_eq!(back.mode, RequestMode::AllInCos);
+        assert_eq!(back.labels_object, "ds/labels_00001");
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let mut r = sample();
+        r.split_idx = 0;
+        assert!(PostRequest::parse(&r.to_json()).is_err());
+        let mut r = sample();
+        r.b_max = 0;
+        assert!(PostRequest::parse(&r.to_json()).is_err());
+        let mut r = sample();
+        r.input_dims = vec![];
+        assert!(PostRequest::parse(&r.to_json()).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Algorithm 1 — choosing the split index.
+//!
+//! Two phases, exactly as the paper's pseudo-code:
+//!
+//! 1. **Candidate selection** (model properties only): units whose output
+//!    size is smaller than the application input size *and* that are not
+//!    after the freeze index (training never runs on the COS).
+//! 2. **Winner selection** (environment): the *earliest* candidate whose
+//!    per-iteration transfer (output size × training batch) fits under
+//!    `C = bandwidth × window` — trading the transfer-optimal split for a
+//!    smaller pushdown (§4's observation that `L_COS` must be minimised).
+//!    Falls back to the freeze index when no candidate qualifies
+//!    (bandwidth too scarce).
+//!
+//! With abundant bandwidth the winner moves *early* (bigger outputs are
+//! affordable); with scarce bandwidth it moves toward the freeze layer —
+//! Table 4's dynamics.
+
+use crate::profiler::AppProfile;
+
+#[derive(Debug, Clone)]
+pub struct SplitDecision {
+    /// Chosen split index (1-based; COS executes units `[1, split]`).
+    pub split_idx: usize,
+    /// Bytes per sample leaving the COS at this split.
+    pub out_bytes_per_sample: u64,
+    /// Bytes transferred per training iteration (× training batch).
+    pub bytes_per_iteration: u64,
+    /// All candidate indices from phase 1 (for diagnostics/benches).
+    pub candidates: Vec<usize>,
+}
+
+/// Phase 1: candidate units (output < application input, before freeze).
+pub fn candidates(app: &AppProfile) -> Vec<usize> {
+    let input = app.input_bytes();
+    (1..=app.freeze_idx())
+        .filter(|&i| app.out_bytes(i) < input)
+        .collect()
+}
+
+/// Phase 2: the full Algorithm 1.
+///
+/// `bandwidth` is bytes/sec as measured by the client (`None` = unshaped,
+/// treated as infinite); `window_secs` is the paper's "1s" constant;
+/// `train_batch` scales per-sample outputs to per-iteration transfers.
+pub fn choose_split_idx(
+    app: &AppProfile,
+    bandwidth: Option<u64>,
+    window_secs: f64,
+    train_batch: usize,
+) -> SplitDecision {
+    let cands = candidates(app);
+    let budget = bandwidth
+        .map(|bw| (bw as f64 * window_secs) as u64)
+        .unwrap_or(u64::MAX);
+
+    let mut winner = app.freeze_idx();
+    for &i in &cands {
+        let per_iter = app.out_bytes(i) * train_batch as u64;
+        if per_iter < budget {
+            winner = i;
+            break;
+        }
+    }
+    SplitDecision {
+        split_idx: winner,
+        out_bytes_per_sample: app.out_bytes(winner),
+        bytes_per_iteration: app.out_bytes(winner) * train_batch as u64,
+        candidates: cands,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::model::profiles::{ArtifactsMeta, ModelProfile, ScaleMeta, UnitKind, UnitMeta};
+    use std::sync::Arc;
+
+    /// input 1000 B/sample; unit outputs (B/sample):
+    /// u1=1500 (not a candidate), u2=800, u3=1200 (not), u4=200,
+    /// u5=100 (freeze=5), u6=50 (after freeze — never a candidate).
+    fn app() -> AppProfile {
+        let unit = |index: usize, out: u64| UnitMeta {
+            index,
+            name: format!("u{index}"),
+            kind: UnitKind::Conv,
+            out_shape: vec![out as usize / 4],
+            out_bytes_per_sample: out,
+            param_count: 10,
+            param_bytes: 40,
+            flops_per_sample: 100,
+        };
+        let meta = ScaleMeta {
+            input_shape: vec![1000 / 4],
+            input_bytes_per_sample: 1000,
+            num_classes: 10,
+            units: vec![
+                unit(1, 1500),
+                unit(2, 800),
+                unit(3, 1200),
+                unit(4, 200),
+                unit(5, 100),
+                unit(6, 50),
+            ],
+        };
+        let p = Arc::new(ModelProfile {
+            name: "toy".into(),
+            num_units: 6,
+            freeze_idx: 5,
+            micro_batch: 4,
+            param_seed: 42,
+            tiny: meta.clone(),
+            paper: meta,
+            artifacts: ArtifactsMeta {
+                units: (1..=6).map(|i| (i, format!("u{i}"), 1)).collect(),
+                train_grads: "tg".into(),
+                apply_update: "au".into(),
+                tail_input_shape: vec![25],
+                tail_num_params: 1,
+            },
+            param_files: vec![vec!["a".into()]; 6],
+            params_dir: "params".into(),
+        });
+        AppProfile::new(p, Scale::Tiny)
+    }
+
+    #[test]
+    fn candidates_respect_both_constraints() {
+        // < input (1000) AND index <= freeze (5).
+        assert_eq!(candidates(&app()), vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn abundant_bandwidth_splits_early() {
+        // budget = 1e9 B: unit 2's 800 B × 10 = 8 KB fits -> earliest wins.
+        let d = choose_split_idx(&app(), Some(1_000_000_000), 1.0, 10);
+        assert_eq!(d.split_idx, 2);
+        assert_eq!(d.bytes_per_iteration, 8000);
+    }
+
+    #[test]
+    fn unshaped_is_treated_as_infinite() {
+        assert_eq!(choose_split_idx(&app(), None, 1.0, 10_000).split_idx, 2);
+    }
+
+    #[test]
+    fn scarce_bandwidth_moves_toward_freeze() {
+        // budget 3000 B/iter at batch 10: u2 = 8000 (no), u4 = 2000 (yes).
+        let d = choose_split_idx(&app(), Some(3000), 1.0, 10);
+        assert_eq!(d.split_idx, 4);
+        // budget 600: u4 = 2000 (no), u5 = 1000 (no) -> freeze fallback.
+        let d = choose_split_idx(&app(), Some(600), 1.0, 10);
+        assert_eq!(d.split_idx, 5);
+    }
+
+    #[test]
+    fn larger_batch_pushes_split_later() {
+        let small = choose_split_idx(&app(), Some(10_000), 1.0, 10);
+        let large = choose_split_idx(&app(), Some(10_000), 1.0, 40);
+        assert!(large.split_idx >= small.split_idx);
+        assert_eq!(small.split_idx, 2); // 8000 < 10000
+        assert_eq!(large.split_idx, 4); // 32000 no, 8000 yes
+    }
+
+    #[test]
+    fn split_never_exceeds_freeze() {
+        for bw in [1u64, 100, 10_000, 1_000_000] {
+            let d = choose_split_idx(&app(), Some(bw), 1.0, 100);
+            assert!(d.split_idx <= app().freeze_idx());
+            assert!(d.split_idx >= 1);
+        }
+    }
+}

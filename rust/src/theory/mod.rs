@@ -1,0 +1,216 @@
+//! §4 — the analytic cost model (Eqs. 1–3).
+//!
+//! Predicts one epoch's training time as
+//! `C_COS + C_Client + T_Data` under the paper's four assumptions
+//! (time-sliced COS GPU, linear PCIe transfers, uniform per-layer cost,
+//! perfect intra-batch parallelism).  Used by the §7.3 analysis (dynamic
+//! vs static-freeze split) and by tests that check the splitter's choices
+//! are consistent with the model's ordering.
+
+use crate::profiler::AppProfile;
+
+/// Constants of Eqs. 1–2.  Defaults are in arbitrary-but-consistent time
+/// units; only *orderings and ratios* of predictions are meaningful,
+/// which is all §4 uses them for.
+#[derive(Debug, Clone)]
+pub struct CostConstants {
+    /// C11: COS DRAM↔GPU transfer seconds per byte.
+    pub c11: f64,
+    /// C12: COS seconds per processed unit (per request).
+    pub c12: f64,
+    /// C21: client DRAM↔GPU transfer seconds per byte.
+    pub c21: f64,
+    /// C22: client seconds per processed unit.
+    pub c22: f64,
+}
+
+impl Default for CostConstants {
+    fn default() -> Self {
+        CostConstants {
+            c11: 1e-9,
+            c12: 1e-3,
+            c21: 1e-9,
+            c22: 1e-3,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EpochPrediction {
+    pub c_cos: f64,
+    pub c_client: f64,
+    pub t_data: f64,
+}
+
+impl EpochPrediction {
+    pub fn total(&self) -> f64 {
+        self.c_cos + self.c_client + self.t_data
+    }
+}
+
+/// Eq. 1: COS computation time for one epoch.
+///
+/// `concurrent` is |R(t)| (time-sliced sharing), `dataset` is |D|.
+pub fn c_cos(
+    app: &AppProfile,
+    k: &CostConstants,
+    split: usize,
+    cos_batch: usize,
+    dataset: usize,
+    concurrent: usize,
+) -> f64 {
+    let l0 = app.input_bytes() as f64;
+    let l_split = app.out_bytes(split) as f64;
+    let batches = (dataset as f64 / cos_batch as f64).ceil();
+    concurrent as f64
+        * batches
+        * (k.c11 * cos_batch as f64 * (l0 + l_split) + k.c12 * split as f64)
+}
+
+/// Eq. 2: client computation time for one epoch.
+pub fn c_client(
+    app: &AppProfile,
+    k: &CostConstants,
+    split: usize,
+    train_batch: usize,
+    dataset: usize,
+) -> f64 {
+    let l_split = app.out_bytes(split) as f64;
+    let l_client = (app.num_units() - split) as f64;
+    let batches = (dataset as f64 / train_batch as f64).ceil();
+    batches * (k.c21 * train_batch as f64 * l_split + k.c22 * l_client)
+}
+
+/// T_Data: network transfer time for one epoch.
+pub fn t_data(app: &AppProfile, split: usize, dataset: usize, bandwidth: f64) -> f64 {
+    app.out_bytes(split) as f64 * dataset as f64 / bandwidth
+}
+
+/// Full Eq. 3 objective for a candidate split.
+#[allow(clippy::too_many_arguments)]
+pub fn predict(
+    app: &AppProfile,
+    k: &CostConstants,
+    split: usize,
+    cos_batch: usize,
+    train_batch: usize,
+    dataset: usize,
+    concurrent: usize,
+    bandwidth: f64,
+) -> EpochPrediction {
+    EpochPrediction {
+        c_cos: c_cos(app, k, split, cos_batch, dataset, concurrent),
+        c_client: c_client(app, k, split, train_batch, dataset),
+        t_data: t_data(app, split, dataset, bandwidth),
+    }
+}
+
+/// §4's headline observations, as checkable predicates.
+pub mod observations {
+    use super::*;
+
+    /// Obs 2: pushing more units down costs more COS time when shared.
+    pub fn deeper_split_costs_more_cos(
+        app: &AppProfile,
+        k: &CostConstants,
+        concurrent: usize,
+    ) -> bool {
+        let a = c_cos(app, k, 1, 20, 1000, concurrent);
+        let b = c_cos(app, k, app.freeze_idx(), 20, 1000, concurrent);
+        b >= a
+    }
+
+    /// Obs 1: T_Data is monotone in l_split.
+    pub fn t_data_monotone_in_output(app: &AppProfile, i: usize, j: usize) -> bool {
+        (app.out_bytes(i) <= app.out_bytes(j))
+            == (t_data(app, i, 1000, 1e6) <= t_data(app, j, 1000, 1e6))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::model::profiles::{ArtifactsMeta, ModelProfile, ScaleMeta, UnitKind, UnitMeta};
+    use std::sync::Arc;
+
+    fn app() -> AppProfile {
+        let unit = |index: usize, out: u64| UnitMeta {
+            index,
+            name: format!("u{index}"),
+            kind: UnitKind::Conv,
+            out_shape: vec![out as usize / 4],
+            out_bytes_per_sample: out,
+            param_count: 10,
+            param_bytes: 40,
+            flops_per_sample: 100,
+        };
+        let meta = ScaleMeta {
+            input_shape: vec![250],
+            input_bytes_per_sample: 1000,
+            num_classes: 10,
+            units: (1..=6)
+                .map(|i| unit(i, 1000 >> i.min(5)))
+                .collect(),
+        };
+        let p = Arc::new(ModelProfile {
+            name: "toy".into(),
+            num_units: 6,
+            freeze_idx: 5,
+            micro_batch: 4,
+            param_seed: 42,
+            tiny: meta.clone(),
+            paper: meta,
+            artifacts: ArtifactsMeta {
+                units: (1..=6).map(|i| (i, format!("u{i}"), 1)).collect(),
+                train_grads: "tg".into(),
+                apply_update: "au".into(),
+                tail_input_shape: vec![8],
+                tail_num_params: 1,
+            },
+            param_files: vec![vec!["a".into()]; 6],
+            params_dir: "params".into(),
+        });
+        AppProfile::new(p, Scale::Tiny)
+    }
+
+    #[test]
+    fn t_data_drops_with_later_split() {
+        let a = app();
+        assert!(t_data(&a, 1, 1000, 1e6) > t_data(&a, 5, 1000, 1e6));
+    }
+
+    #[test]
+    fn concurrency_scales_cos_time() {
+        let a = app();
+        let k = CostConstants::default();
+        let one = c_cos(&a, &k, 3, 20, 1000, 1);
+        let four = c_cos(&a, &k, 3, 20, 1000, 4);
+        assert!((four / one - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observations_hold() {
+        let a = app();
+        let k = CostConstants::default();
+        assert!(observations::deeper_split_costs_more_cos(&a, &k, 4));
+        assert!(observations::t_data_monotone_in_output(&a, 1, 4));
+    }
+
+    #[test]
+    fn sec73_tradeoff_reproducible() {
+        // With many concurrent tenants, an earlier split (larger output,
+        // fewer pushed-down units) can beat splitting at the freeze layer
+        // — the §7.3 DenseNet observation.
+        let a = app();
+        let k = CostConstants {
+            c12: 1.0, // expensive COS compute per unit
+            ..CostConstants::default()
+        };
+        let early =
+            predict(&a, &k, 1, 20, 100, 1000, 4, 1e9).total();
+        let at_freeze =
+            predict(&a, &k, 5, 20, 100, 1000, 4, 1e9).total();
+        assert!(early < at_freeze);
+    }
+}

@@ -1,0 +1,60 @@
+//! Human-readable byte / duration formatting for reports and logs.
+
+use std::time::Duration;
+
+/// `1536 -> "1.5 KiB"`, `0 -> "0 B"`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if bytes < 1024 {
+        return format!("{bytes} B");
+    }
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if v >= 100.0 {
+        format!("{v:.0} {}", UNITS[unit])
+    } else {
+        format!("{v:.1} {}", UNITS[unit])
+    }
+}
+
+/// `Duration -> "1.25s" / "340ms" / "87µs"`.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{s:.0}s")
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.0}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.0}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(1023), "1023 B");
+        assert_eq!(fmt_bytes(1536), "1.5 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+        assert_eq!(fmt_bytes(200 * 1024 * 1024 * 1024), "200 GiB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(Duration::from_secs(120)), "120s");
+        assert_eq!(fmt_duration(Duration::from_millis(1250)), "1.25s");
+        assert_eq!(fmt_duration(Duration::from_millis(340)), "340ms");
+        assert_eq!(fmt_duration(Duration::from_micros(87)), "87µs");
+    }
+}

@@ -1,0 +1,70 @@
+//! Tiny `log` backend (env_logger is not in the offline vendor set).
+//!
+//! Level comes from `HAPI_LOG` (error|warn|info|debug|trace), default
+//! `info`.  Timestamps are seconds since logger init — good enough to read
+//! event ordering in experiment logs.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct Logger {
+    start: Instant,
+}
+
+impl log::Log for Logger {
+    fn enabled(&self, _m: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{t:9.3} {lvl} {}] {}",
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| Logger {
+        start: Instant::now(),
+    });
+    let level = match std::env::var("HAPI_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    // set_logger fails if already set; that's fine (tests call init often).
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger alive");
+    }
+}

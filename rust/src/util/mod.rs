@@ -1,0 +1,12 @@
+//! Small substrates the crate would normally pull from crates.io
+//! (serde, rand, env_logger, humansize) but builds itself: the offline
+//! vendor set ships only the XLA dependency tree.
+
+pub mod fmtsize;
+pub mod json;
+pub mod logging;
+pub mod rng;
+
+pub use fmtsize::{fmt_bytes, fmt_duration};
+pub use json::Json;
+pub use rng::Rng;

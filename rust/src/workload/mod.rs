@@ -1,0 +1,124 @@
+//! Multi-tenant workload driver (Fig 12's experiment shape).
+//!
+//! Spawns N tenant threads at t=0, each submitting one job (model picked
+//! round-robin from Table 1, as in §7.5), and reports per-tenant job
+//! completion times, the makespan, and average JCT.
+
+pub mod trace;
+
+pub use trace::{Trace, TraceEntry};
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::model::TABLE1_MODELS;
+
+#[derive(Debug, Clone)]
+pub struct TenantResult {
+    pub tenant: usize,
+    pub model: String,
+    pub jct: Duration,
+    pub ok: bool,
+    pub error: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    pub results: Vec<TenantResult>,
+    pub makespan: Duration,
+}
+
+impl WorkloadReport {
+    pub fn avg_jct(&self) -> Duration {
+        let ok: Vec<&TenantResult> =
+            self.results.iter().filter(|r| r.ok).collect();
+        if ok.is_empty() {
+            return Duration::ZERO;
+        }
+        ok.iter().map(|r| r.jct).sum::<Duration>() / ok.len() as u32
+    }
+
+    pub fn failures(&self) -> usize {
+        self.results.iter().filter(|r| !r.ok).count()
+    }
+
+    /// Average throughput in jobs/sec based on average JCT (the §7.5
+    /// comparison metric).
+    pub fn throughput(&self) -> f64 {
+        let jct = self.avg_jct().as_secs_f64();
+        if jct == 0.0 {
+            0.0
+        } else {
+            1.0 / jct
+        }
+    }
+}
+
+/// The model each tenant trains (round-robin over Table 1, §7.5).
+pub fn tenant_model(tenant: usize) -> &'static str {
+    TABLE1_MODELS[tenant % TABLE1_MODELS.len()]
+}
+
+/// Run `tenants` concurrent jobs; `job(tenant, model)` blocks until that
+/// tenant's work completes.  All jobs start at t=0.
+pub fn run_tenants<F>(tenants: usize, job: F) -> WorkloadReport
+where
+    F: Fn(usize, &str) -> Result<()> + Send + Sync,
+{
+    let job = Arc::new(job);
+    let start = Instant::now();
+    let results: Vec<TenantResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..tenants)
+            .map(|t| {
+                let job = job.clone();
+                scope.spawn(move || {
+                    let model = tenant_model(t);
+                    let t0 = Instant::now();
+                    let out = job(t, model);
+                    TenantResult {
+                        tenant: t,
+                        model: model.to_string(),
+                        jct: t0.elapsed(),
+                        ok: out.is_ok(),
+                        error: out.err().map(|e| e.to_string()),
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    WorkloadReport {
+        makespan: start.elapsed(),
+        results,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_models() {
+        assert_eq!(tenant_model(0), "alexnet");
+        assert_eq!(tenant_model(7), "alexnet");
+        assert_eq!(tenant_model(8), tenant_model(1));
+    }
+
+    #[test]
+    fn report_metrics() {
+        let report = run_tenants(4, |t, _model| {
+            std::thread::sleep(Duration::from_millis(10 * (t as u64 + 1)));
+            if t == 3 {
+                Err(crate::error::Error::other("boom"))
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(report.results.len(), 4);
+        assert_eq!(report.failures(), 1);
+        assert!(report.makespan >= Duration::from_millis(40));
+        assert!(report.avg_jct() > Duration::ZERO);
+        assert!(report.throughput() > 0.0);
+    }
+}

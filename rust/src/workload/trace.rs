@@ -1,0 +1,151 @@
+//! Workload traces: job arrivals beyond the Fig-12 "all at t=0" burst.
+//!
+//! Real tenants arrive over time; the paper's scalability story holds
+//! only if Hapi absorbs *staggered* load too.  A [`Trace`] is a
+//! deterministic schedule of (arrival offset, tenant, model) generated
+//! from a Poisson process (exponential inter-arrivals) or fixed period,
+//! replayable against any job closure.
+
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::model::TABLE1_MODELS;
+use crate::util::rng::Rng;
+
+use super::{TenantResult, WorkloadReport};
+
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub at: Duration,
+    pub tenant: usize,
+    pub model: &'static str,
+}
+
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// Poisson arrivals: `jobs` arrivals at `rate_per_sec`, models
+    /// round-robin over Table 1.  Deterministic for a given seed.
+    pub fn poisson(jobs: usize, rate_per_sec: f64, seed: u64) -> Trace {
+        assert!(rate_per_sec > 0.0);
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0f64;
+        let entries = (0..jobs)
+            .map(|i| {
+                // Exponential inter-arrival via inverse CDF.
+                let u = (1.0 - rng.f32() as f64).max(1e-9);
+                t += -u.ln() / rate_per_sec;
+                TraceEntry {
+                    at: Duration::from_secs_f64(t),
+                    tenant: i,
+                    model: TABLE1_MODELS[i % TABLE1_MODELS.len()],
+                }
+            })
+            .collect();
+        Trace { entries }
+    }
+
+    /// Fixed-period arrivals (one job every `period`).
+    pub fn periodic(jobs: usize, period: Duration) -> Trace {
+        Trace {
+            entries: (0..jobs)
+                .map(|i| TraceEntry {
+                    at: period * i as u32,
+                    tenant: i,
+                    model: TABLE1_MODELS[i % TABLE1_MODELS.len()],
+                })
+                .collect(),
+        }
+    }
+
+    pub fn duration(&self) -> Duration {
+        self.entries.last().map(|e| e.at).unwrap_or(Duration::ZERO)
+    }
+
+    /// Replay the trace: each entry's job starts at its arrival offset
+    /// (sleeping as needed) on its own thread; returns per-job results.
+    pub fn replay<F>(&self, job: F) -> WorkloadReport
+    where
+        F: Fn(usize, &str) -> Result<()> + Send + Sync,
+    {
+        let start = Instant::now();
+        let results: Vec<TenantResult> = std::thread::scope(|scope| {
+            let job = &job;
+            let handles: Vec<_> = self
+                .entries
+                .iter()
+                .map(|e| {
+                    scope.spawn(move || {
+                        let now = start.elapsed();
+                        if e.at > now {
+                            std::thread::sleep(e.at - now);
+                        }
+                        let t0 = Instant::now();
+                        let out = job(e.tenant, e.model);
+                        TenantResult {
+                            tenant: e.tenant,
+                            model: e.model.to_string(),
+                            jct: t0.elapsed(),
+                            ok: out.is_ok(),
+                            error: out.err().map(|e| e.to_string()),
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        WorkloadReport {
+            makespan: start.elapsed(),
+            results,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn poisson_is_deterministic_and_ordered() {
+        let a = Trace::poisson(20, 5.0, 9);
+        let b = Trace::poisson(20, 5.0, 9);
+        assert_eq!(a.entries.len(), 20);
+        for (x, y) in a.entries.iter().zip(&b.entries) {
+            assert_eq!(x.at, y.at);
+        }
+        assert!(a.entries.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let t = Trace::poisson(400, 50.0, 3);
+        let secs = t.duration().as_secs_f64();
+        let rate = 400.0 / secs;
+        assert!((25.0..100.0).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn periodic_spacing() {
+        let t = Trace::periodic(4, Duration::from_millis(10));
+        assert_eq!(t.entries[3].at, Duration::from_millis(30));
+        assert_eq!(t.entries[0].model, "alexnet");
+    }
+
+    #[test]
+    fn replay_runs_all_jobs_respecting_arrivals() {
+        let trace = Trace::periodic(5, Duration::from_millis(15));
+        let count = AtomicUsize::new(0);
+        let report = trace.replay(|_t, _m| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+        assert_eq!(report.failures(), 0);
+        // Makespan covers at least the last arrival.
+        assert!(report.makespan >= Duration::from_millis(60));
+    }
+}

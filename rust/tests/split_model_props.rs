@@ -1,0 +1,174 @@
+//! Splitting-algorithm and profile invariants over the *real* AOT
+//! profiles of all seven Table-1 models (requires `make artifacts`).
+
+use hapi::config::{HapiConfig, Scale};
+use hapi::model::{ModelRegistry, TABLE1_MODELS};
+use hapi::netsim;
+use hapi::profiler::AppProfile;
+use hapi::split::{candidates, choose_split_idx};
+
+fn registry() -> ModelRegistry {
+    let dir = HapiConfig::discover_artifacts()
+        .expect("run `make artifacts` before cargo test");
+    ModelRegistry::load_dir(dir.join("profiles")).unwrap()
+}
+
+#[test]
+fn table1_counts_match_paper() {
+    let reg = registry();
+    let expected = [
+        ("alexnet", 17, 22),
+        ("resnet18", 11, 14),
+        ("resnet50", 21, 22),
+        ("vgg11", 25, 28),
+        ("vgg19", 36, 45),
+        ("densenet121", 20, 22),
+        ("transformer", 17, 19),
+    ];
+    for (name, freeze, units) in expected {
+        let m = reg.get(name).unwrap();
+        assert_eq!(m.freeze_idx, freeze, "{name}");
+        assert_eq!(m.num_units, units, "{name}");
+    }
+}
+
+#[test]
+fn split_respects_constraints_all_models_all_bandwidths() {
+    let reg = registry();
+    for scale in [Scale::Tiny, Scale::Paper] {
+        for name in TABLE1_MODELS {
+            let app = AppProfile::new(reg.get(name).unwrap(), scale);
+            for mbps in [5.0, 50.0, 150.0, 1000.0, 12000.0] {
+                for batch in [100usize, 200, 800] {
+                    let d = choose_split_idx(
+                        &app,
+                        Some(netsim::mbps(mbps)),
+                        1.0,
+                        batch,
+                    );
+                    assert!(
+                        d.split_idx >= 1 && d.split_idx <= app.freeze_idx(),
+                        "{name}@{scale:?}: split {} out of range",
+                        d.split_idx
+                    );
+                    // Every candidate obeys both Alg-1 phase-1 rules.
+                    for &c in &d.candidates {
+                        assert!(c <= app.freeze_idx());
+                        assert!(app.out_bytes(c) < app.input_bytes());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn split_monotone_lower_bandwidth_never_earlier() {
+    let reg = registry();
+    for name in TABLE1_MODELS {
+        let app = AppProfile::new(reg.get(name).unwrap(), Scale::Paper);
+        let mut last = 0usize;
+        // Sweep from abundant down to scarce: split index must be
+        // non-decreasing (Table 4's dynamic).
+        for mbps in [12000.0, 5000.0, 1000.0, 500.0, 100.0, 50.0, 10.0] {
+            let d =
+                choose_split_idx(&app, Some(netsim::mbps(mbps)), 1.0, 2000);
+            assert!(
+                d.split_idx >= last,
+                "{name}: split went earlier ({last} -> {}) as bandwidth fell",
+                d.split_idx
+            );
+            last = d.split_idx;
+        }
+    }
+}
+
+#[test]
+fn every_model_has_early_candidates_at_paper_scale() {
+    // Fig 2's central insight, validated against the real profiles.
+    let reg = registry();
+    for name in TABLE1_MODELS {
+        let app = AppProfile::new(reg.get(name).unwrap(), Scale::Paper);
+        let cands = candidates(&app);
+        assert!(!cands.is_empty(), "{name}: no split candidates");
+        assert!(
+            *cands.first().unwrap() < app.freeze_idx(),
+            "{name}: earliest candidate is the freeze layer itself"
+        );
+    }
+}
+
+#[test]
+fn output_sizes_decay_nonmonotonically() {
+    // §3.1: sizes generally rise then fall, but not monotonically —
+    // there must exist a local re-increase before the freeze idx for the
+    // conv models whose blocks widen (ResNet's profile only rises at
+    // conv1 and then strictly decays, so it is excluded).
+    let reg = registry();
+    for name in ["alexnet", "vgg11", "densenet121"] {
+        let app = AppProfile::new(reg.get(name).unwrap(), Scale::Paper);
+        let sizes: Vec<u64> =
+            (1..=app.freeze_idx()).map(|i| app.out_bytes(i)).collect();
+        let nonmonotone = sizes.windows(2).any(|w| w[1] > w[0])
+            && sizes.windows(2).any(|w| w[1] < w[0]);
+        assert!(nonmonotone, "{name}: sizes unexpectedly monotone");
+    }
+}
+
+#[test]
+fn memory_model_scales_linearly_in_batch() {
+    let reg = registry();
+    for name in TABLE1_MODELS {
+        let app = AppProfile::new(reg.get(name).unwrap(), Scale::Tiny);
+        let mem = app.memory();
+        let f = app.freeze_idx();
+        let m20 = mem.fe_request_bytes(f, 20);
+        let m40 = mem.fe_request_bytes(f, 40);
+        let m80 = mem.fe_request_bytes(f, 80);
+        let model = mem.fe_model_bytes(f);
+        // (m - model) is proportional to batch.
+        let d1 = m40 - model;
+        let d0 = m20 - model;
+        assert!(
+            (d1 as f64 / d0 as f64 - 2.0).abs() < 0.02,
+            "{name}: non-linear batch scaling"
+        );
+        assert!(m80 > m40 && m40 > m20, "{name}");
+    }
+}
+
+#[test]
+fn theory_predictions_consistent_with_splitter() {
+    // For every model: under abundant bandwidth, the theory model must
+    // not prefer the freeze split over the algorithm's choice when COS
+    // is contended (the §7.3 phenomenon).
+    let reg = registry();
+    let k = hapi::theory::CostConstants {
+        c12: 0.1,
+        ..Default::default()
+    };
+    for name in TABLE1_MODELS {
+        let app = AppProfile::new(reg.get(name).unwrap(), Scale::Paper);
+        let d = choose_split_idx(&app, None, 1.0, 2000);
+        let ours = hapi::theory::predict(
+            &app, &k, d.split_idx, 200, 2000, 10_000, 4, 1.5e9,
+        )
+        .total();
+        let freeze = hapi::theory::predict(
+            &app,
+            &k,
+            app.freeze_idx(),
+            200,
+            2000,
+            10_000,
+            4,
+            1.5e9,
+        )
+        .total();
+        assert!(
+            ours <= freeze * 1.001,
+            "{name}: algorithm pick predicted slower than freeze split \
+             ({ours:.2} vs {freeze:.2})"
+        );
+    }
+}

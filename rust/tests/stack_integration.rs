@@ -1,0 +1,187 @@
+//! Full-stack integration: COS + proxy + Hapi server + client over real
+//! TCP, executing real AOT HLO.  Requires `make artifacts`.
+
+use hapi::config::HapiConfig;
+use hapi::cos::proxy::ProxyMode;
+use hapi::harness::Testbed;
+use hapi::runtime::DeviceKind;
+
+fn test_config() -> HapiConfig {
+    let mut cfg = HapiConfig::default();
+    cfg.artifacts_dir = HapiConfig::discover_artifacts()
+        .expect("run `make artifacts` before cargo test");
+    cfg.bandwidth = None; // unshaped: tests should be fast
+    cfg.train_batch = 100;
+    cfg
+}
+
+#[test]
+fn hapi_trains_and_loss_is_finite() {
+    let bed = Testbed::launch(test_config()).unwrap();
+    let (ds, labels) = bed.dataset("it-ds", "alexnet", 200).unwrap();
+    let client = bed.hapi_client("alexnet", DeviceKind::Gpu).unwrap();
+    assert!(client.split.split_idx >= 1);
+    assert!(client.split.split_idx <= client.app.freeze_idx());
+    let stats = client.train_epoch(&ds, &labels).unwrap();
+    assert_eq!(stats.iterations, 2);
+    assert!(stats.loss.iter().all(|l| l.is_finite()));
+    assert!(stats.bytes_from_cos > 0);
+    bed.stop();
+}
+
+#[test]
+fn hapi_matches_baseline_loss_trajectory() {
+    // The decoupling/reorder invariant: split execution + COS batch
+    // chunking must not change what the trainer sees, so the loss
+    // sequence matches the no-split BASELINE run to float-accumulation
+    // tolerance.
+    let bed = Testbed::launch(test_config()).unwrap();
+    let (ds, labels) = bed.dataset("eq-ds", "resnet18", 200).unwrap();
+
+    let hapi = bed.hapi_client("resnet18", DeviceKind::Gpu).unwrap();
+    let base = bed.baseline_client("resnet18", DeviceKind::Gpu).unwrap();
+    let s1 = hapi.train_epoch(&ds, &labels).unwrap();
+    let s2 = base.train_epoch(&ds, &labels).unwrap();
+    assert_eq!(s1.loss.len(), s2.loss.len());
+    for (a, b) in s1.loss.iter().zip(&s2.loss) {
+        assert!(
+            (a - b).abs() < 2e-2 * a.abs().max(1.0),
+            "loss diverged: {a} vs {b}"
+        );
+    }
+    // And Hapi moved fewer bytes (resnet18's split output < raw images).
+    assert!(s1.bytes_from_cos < s2.bytes_from_cos);
+    bed.stop();
+}
+
+#[test]
+fn weak_cpu_client_works_and_is_slower() {
+    let bed = Testbed::launch(test_config()).unwrap();
+    let (ds, labels) = bed.dataset("cpu-ds", "alexnet", 100).unwrap();
+    let gpu = bed.hapi_client("alexnet", DeviceKind::Gpu).unwrap();
+    let cpu = bed.hapi_client("alexnet", DeviceKind::Cpu).unwrap();
+    let t0 = std::time::Instant::now();
+    gpu.train_epoch(&ds, &labels).unwrap();
+    let gpu_t = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    cpu.train_epoch(&ds, &labels).unwrap();
+    let cpu_t = t0.elapsed();
+    assert!(
+        cpu_t > gpu_t,
+        "CPU client should be slower: {cpu_t:?} vs {gpu_t:?}"
+    );
+    bed.stop();
+}
+
+#[test]
+fn baseline_ooms_on_large_batch_hapi_does_not() {
+    // Fig 10's OOM column: at train batch 800 the BASELINE client's
+    // forward of the whole network exceeds the calibrated client device;
+    // Hapi's client (training tail only) fits.
+    let mut cfg = test_config();
+    cfg.train_batch = 800;
+    let bed = Testbed::launch(cfg).unwrap();
+    let (ds, labels) = bed.dataset("oom-ds", "vgg11", 800).unwrap();
+
+    let base = bed.baseline_client("vgg11", DeviceKind::Gpu).unwrap();
+    let err = base.train_epoch(&ds, &labels).unwrap_err();
+    assert!(err.is_oom(), "expected OOM, got {err}");
+
+    let hapi = bed.hapi_client("vgg11", DeviceKind::Gpu).unwrap();
+    let stats = hapi.train_epoch(&ds, &labels).unwrap();
+    assert_eq!(stats.iterations, 1);
+    bed.stop();
+}
+
+#[test]
+fn all_in_cos_trains_server_side() {
+    let bed = Testbed::launch(test_config()).unwrap();
+    let (ds, _labels) = bed.dataset("aic-ds", "alexnet", 200).unwrap();
+    let client = bed.all_in_cos_client("alexnet").unwrap();
+    let stats = client.train_epoch(&ds).unwrap();
+    assert_eq!(stats.iterations, 2);
+    assert!(stats.loss.iter().all(|l| l.is_finite() && *l > 0.0));
+    // Only losses cross the wire: orders of magnitude fewer bytes than a
+    // feature-extraction epoch.
+    assert!(stats.bytes_from_cos < 10_000);
+    bed.stop();
+}
+
+#[test]
+fn static_freeze_split_transfers_less_than_dynamic() {
+    // §7.3: splitting at the freeze layer minimises transfer (but costs
+    // COS compute — the time tradeoff is benched in sec73).
+    let bed = Testbed::launch(test_config()).unwrap();
+    let (ds, labels) = bed.dataset("sf-ds", "densenet121", 100).unwrap();
+    let stat = bed
+        .static_freeze_client("densenet121", DeviceKind::Gpu)
+        .unwrap();
+    let dyn_ = bed.hapi_client("densenet121", DeviceKind::Gpu).unwrap();
+    assert_eq!(stat.split.split_idx, dyn_.app.freeze_idx());
+    let s1 = stat.train_epoch(&ds, &labels).unwrap();
+    let s2 = dyn_.train_epoch(&ds, &labels).unwrap();
+    if dyn_.split.split_idx < dyn_.app.freeze_idx() {
+        assert!(s1.bytes_from_cos <= s2.bytes_from_cos);
+    }
+    bed.stop();
+}
+
+#[test]
+fn in_proxy_mode_serves_training() {
+    // Table 3's competitor still works, just shares the proxy threads.
+    let bed =
+        Testbed::launch_with_mode(test_config(), ProxyMode::InProxy).unwrap();
+    let (ds, labels) = bed.dataset("ip-ds", "resnet50", 100).unwrap();
+    let client = bed.hapi_client("resnet50", DeviceKind::Gpu).unwrap();
+    let stats = client.train_epoch(&ds, &labels).unwrap();
+    assert_eq!(stats.iterations, 1);
+    bed.stop();
+}
+
+#[test]
+fn shaped_link_meters_and_slows() {
+    let mut cfg = test_config();
+    cfg.bandwidth = Some(hapi::netsim::mbps(50.0));
+    let bed = Testbed::launch(cfg).unwrap();
+    let (ds, labels) = bed.dataset("bw-ds", "alexnet", 100).unwrap();
+    let client = bed.hapi_client("alexnet", DeviceKind::Gpu).unwrap();
+    let stats = client.train_epoch(&ds, &labels).unwrap();
+    // Bytes metered on the link equal the epoch accounting.
+    assert_eq!(
+        stats.bytes_from_cos + stats.bytes_to_cos,
+        bed.link.stats().total()
+    );
+    bed.stop();
+}
+
+#[test]
+fn batch_adaptation_prevents_oom_under_burst() {
+    // Fig 14's mechanism at integration level: burst of parallel POSTs
+    // with b_max = whole object; without BA some fail with OOM, with BA
+    // all succeed (reduced).
+    let mut cfg = test_config();
+    cfg.train_batch = 800; // 8 parallel POSTs per iteration
+    cfg.default_cos_batch = 100;
+    cfg.batch_adaptation = false;
+    let bed = Testbed::launch(cfg.clone()).unwrap();
+    let (ds, labels) = bed.dataset("ba-ds", "alexnet", 800).unwrap();
+    let client = bed.hapi_client("alexnet", DeviceKind::Gpu).unwrap();
+    let no_ba = client.train_epoch(&ds, &labels);
+    bed.stop();
+
+    cfg.batch_adaptation = true;
+    let bed = Testbed::launch(cfg).unwrap();
+    let (ds, labels) = bed.dataset("ba-ds", "alexnet", 800).unwrap();
+    let client = bed.hapi_client("alexnet", DeviceKind::Gpu).unwrap();
+    let with_ba = client.train_epoch(&ds, &labels);
+    assert!(
+        with_ba.is_ok(),
+        "with BA the epoch must survive: {with_ba:?}"
+    );
+    // The no-BA run must have hit OOM for the burst to be meaningful.
+    assert!(
+        no_ba.is_err(),
+        "calibration drift: no-BA burst should OOM (got {no_ba:?})"
+    );
+    bed.stop();
+}
