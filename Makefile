@@ -1,0 +1,29 @@
+# HAPI reproduction — build entry points.
+#
+# `make artifacts` runs the Python AOT pipeline (JAX → HLO text + .tnsr
+# parameters) that the real-PJRT execution path consumes.  The Rust
+# stack itself builds and tests WITHOUT artifacts: artifact-dependent
+# integration tests skip cleanly and the SimBackend covers the
+# end-to-end pipeline deterministically.
+
+ARTIFACTS ?= artifacts
+
+.PHONY: all build test fmt artifacts clean-artifacts
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --check
+
+artifacts:
+	python3 -m python.compile.aot --out $(ARTIFACTS)
+	touch $(ARTIFACTS)/.stamp
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

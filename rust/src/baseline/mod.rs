@@ -2,21 +2,28 @@
 //!
 //! - **BASELINE** — train entirely on the compute tier, streaming raw
 //!   images from the COS with pipelined GETs.  Built as a
-//!   [`HapiClient`] with split index 0 (`HapiClient::new_baseline`), so
-//!   training parameters and pipelining are identical to Hapi's (§6).
+//!   [`crate::client::HapiClient`] with split index 0
+//!   (`HapiClient::from_backend_baseline`), so training parameters and
+//!   pipelining are identical to Hapi's (§6).
 //! - **STATIC_FREEZE** — split statically at the freeze layer (§7.3's
-//!   strawman): `HapiClient::new` with `split_override = freeze_idx`.
+//!   strawman): `HapiClient::from_backend` with
+//!   `split_override = Some(freeze_idx)`.
 //! - **ALL_IN_COS** — push *both* TL phases down (§5.1's limitation
 //!   study, Fig 12): [`AllInCosClient`] sends one `all_in_cos` POST per
 //!   object; the server extracts features *and* trains at the training
 //!   batch size, returning only the loss.
+//!
+//! All three ride the same [`pipeline`] prefetch engine as Hapi — the
+//! `pipeline_depth` knob applies uniformly, so depth sweeps compare
+//! like with like.
 
-use std::sync::Arc;
+use std::sync::Mutex;
 
-use crate::client::{DatasetRef, EpochStats};
+use crate::client::{pipeline, DatasetRef, EpochStats, Fetched};
 use crate::config::HapiConfig;
 use crate::cos::protocol::CosConnection;
 use crate::error::Result;
+use crate::metrics::Registry;
 use crate::netsim::Link;
 use crate::profiler::AppProfile;
 use crate::server::request::{PostRequest, RequestMode};
@@ -28,6 +35,7 @@ pub struct AllInCosClient {
     addr: String,
     link: Link,
     next_id: std::sync::atomic::AtomicU64,
+    registry: Registry,
 }
 
 impl AllInCosClient {
@@ -43,97 +51,96 @@ impl AllInCosClient {
             addr,
             link,
             next_id: std::sync::atomic::AtomicU64::new(1),
+            registry: Registry::new(),
         }
+    }
+
+    /// Route pipeline metrics into a shared registry.
+    pub fn set_registry(&mut self, registry: Registry) {
+        self.registry = registry;
     }
 
     /// Run one epoch fully on the COS; the client only sequences
     /// requests and collects losses (no local compute, no decoupling:
-    /// the COS batch bound equals the training batch size).
+    /// the COS batch bound equals the training batch size).  Requests
+    /// flow through the same prefetch window as Hapi's — `pipeline_depth`
+    /// training steps in flight, losses delivered in shard order.
     pub fn train_epoch(&self, ds: &DatasetRef) -> Result<EpochStats> {
         let mem = self.app.memory();
         let freeze = self.app.freeze_idx();
         let mut stats = EpochStats::default();
         let rx0 = self.link.stats().rx_bytes();
         let tx0 = self.link.stats().tx_bytes();
-        let mut conn =
-            CosConnection::connect(&self.addr, self.link.clone())?;
-        for shard in 0..ds.num_shards {
-            let samples = ds
-                .shard_samples
-                .min(ds.num_samples - shard * ds.shard_samples);
-            let mut dims = vec![samples];
-            dims.extend(&ds.input_shape);
-            let req = PostRequest {
-                id: self
-                    .next_id
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed),
-                model: self.app.model.name.clone(),
-                split_idx: freeze,
-                object: crate::cos::ObjectKey::shard(&ds.name, shard),
-                labels_object: format!("{}/labels_{shard:05}", ds.name),
-                input_dims: dims,
-                // No decoupling: the server must process at the training
-                // granularity (bounded by the object here, as one object
-                // is one request).
-                b_max: self.cfg.train_batch.min(samples),
-                mem_data_per_sample: mem
-                    .fe_data_bytes_per_sample(freeze)
-                    .max(mem.all_in_cos_bytes(samples) / samples as u64),
-                mem_model_bytes: mem.fe_model_bytes(freeze),
-                mode: RequestMode::AllInCos,
-            };
-            let t0 = std::time::Instant::now();
-            let (header, _body) = conn.post(req.to_json(), Vec::new())?;
-            stats.comm += t0.elapsed();
-            stats.iterations += 1;
-            stats
-                .loss
-                .push(header.get("loss")?.as_f64()? as f32);
-            stats.accuracy.push(0.0);
-        }
+        let jobs = pipeline::jobs_for(ds.num_shards, 1);
+        // Connection pool: at most `depth` live connections, reused
+        // across requests (one connect per worker, not per shard); a
+        // connection that errored is dropped instead of returned.
+        let conns: Mutex<Vec<CosConnection>> = Mutex::new(Vec::new());
+        let report = pipeline::run(
+            self.cfg.pipeline_depth,
+            &jobs,
+            &self.registry,
+            |job| {
+                let shard = job.shards[0];
+                let samples = ds
+                    .shard_samples
+                    .min(ds.num_samples - shard * ds.shard_samples);
+                let mut dims = vec![samples];
+                dims.extend(&ds.input_shape);
+                let req = PostRequest {
+                    id: self
+                        .next_id
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+                    model: self.app.model.name.clone(),
+                    split_idx: freeze,
+                    object: crate::cos::ObjectKey::shard(&ds.name, shard),
+                    labels_object: format!(
+                        "{}/labels_{shard:05}",
+                        ds.name
+                    ),
+                    input_dims: dims,
+                    // No decoupling: the server must process at the
+                    // training granularity (bounded by the object here,
+                    // as one object is one request).
+                    b_max: self.cfg.train_batch.min(samples),
+                    mem_data_per_sample: mem
+                        .fe_data_bytes_per_sample(freeze)
+                        .max(mem.all_in_cos_bytes(samples) / samples as u64),
+                    mem_model_bytes: mem.fe_model_bytes(freeze),
+                    mode: RequestMode::AllInCos,
+                };
+                let mut conn = match conns.lock().unwrap().pop() {
+                    Some(c) => c,
+                    None => CosConnection::connect(
+                        &self.addr,
+                        self.link.clone(),
+                    )?,
+                };
+                let (header, _body) =
+                    conn.post(req.to_json(), Vec::new())?;
+                conns.lock().unwrap().push(conn);
+                let loss = header.get("loss")?.as_f64()? as f32;
+                Ok(Fetched {
+                    payload: loss,
+                    bytes: 0, // only the loss crosses the wire
+                    fetch_time: std::time::Duration::ZERO,
+                })
+            },
+            |delivery| {
+                stats.comm += delivery.stall;
+                stats.iterations += 1;
+                stats.loss.push(delivery.payload);
+                stats.accuracy.push(0.0);
+                Ok(())
+            },
+        )?;
+        stats.max_inflight = report.inflight_max;
         stats.bytes_from_cos = self.link.stats().rx_bytes() - rx0;
         stats.bytes_to_cos = self.link.stats().tx_bytes() - tx0;
         Ok(stats)
     }
 }
 
-/// Convenience constructors mirroring the paper's competitor names.
-pub mod construct {
-    use super::*;
-    use crate::client::HapiClient;
-    use crate::runtime::{DeviceKind, ModelArtifacts};
-
-    pub fn baseline(
-        app: AppProfile,
-        arts: Arc<ModelArtifacts>,
-        cfg: HapiConfig,
-        addr: String,
-        link: Link,
-        device: DeviceKind,
-    ) -> HapiClient {
-        HapiClient::new_baseline(app, arts, cfg, addr, link, device)
-    }
-
-    pub fn hapi(
-        app: AppProfile,
-        arts: Arc<ModelArtifacts>,
-        cfg: HapiConfig,
-        addr: String,
-        link: Link,
-        device: DeviceKind,
-    ) -> HapiClient {
-        HapiClient::new(app, arts, cfg, addr, link, device, None)
-    }
-
-    pub fn static_freeze(
-        app: AppProfile,
-        arts: Arc<ModelArtifacts>,
-        cfg: HapiConfig,
-        addr: String,
-        link: Link,
-        device: DeviceKind,
-    ) -> HapiClient {
-        let freeze = app.freeze_idx();
-        HapiClient::new(app, arts, cfg, addr, link, device, Some(freeze))
-    }
-}
+// The old `construct` convenience module is gone: every in-repo caller
+// builds competitors through `harness::Testbed`'s client constructors,
+// which also wire the shared metrics registry.

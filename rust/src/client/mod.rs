@@ -1,33 +1,50 @@
 //! The Hapi client — the compute-tier half of the system (§5.2, §5.4).
 //!
 //! Per application it profiles the model (§5.3; the static profile comes
-//! from the AOT metadata), chooses the split index once (Algorithm 1),
-//! then per training iteration fans out one POST per storage object,
-//! reorders the intermediate results into training-batch order
-//! (preserving the learning trajectory), executes the leftover frozen
-//! units `[split+1, freeze]` at the *training* batch size, and trains the
-//! tail with gradient accumulation over micro-batches + one SGD update —
-//! numerically a full-batch step (see `python/compile/model.py`).
+//! from the AOT metadata), chooses the split index (Algorithm 1), then
+//! trains through the [`pipeline`] prefetch engine: a configurable-depth
+//! sliding window of training iterations is kept in flight against the
+//! COS (one POST per storage object, or GETs for the BASELINE), results
+//! are reordered into submission order (preserving the learning
+//! trajectory bit-for-bit at any depth), and the trainer consumes them
+//! on the calling thread — leftover frozen units `[split+1, freeze]` at
+//! the *training* batch size, then gradient accumulation over
+//! micro-batches + one SGD update, numerically a full-batch step (see
+//! `python/compile/model.py`).
 //!
-//! Iterations are double-buffered: iteration `k+1`'s POSTs are in flight
-//! while iteration `k` computes, the same overlap the paper's baseline
-//! and Hapi both employ.
+//! Depth 1 is the paper's double buffering; deeper windows hide
+//! per-request COS latency behind compute (`pipeline_depth` in
+//! [`HapiConfig`]).  With `adaptive_split` on, the client re-measures
+//! the link bandwidth per delivery window and re-runs Algorithm 1
+//! between iterations on windows where the trainer stalled on the
+//! network, moving the split toward the freeze layer as bandwidth
+//! shrinks (Table 4 dynamics) — never past it, and never earlier than
+//! the initial (memory-checked) decision.
+//!
+//! Execution goes through [`ExecBackend`]: real AOT HLO via PJRT, or
+//! the artifact-free SimBackend (identical orchestration, deterministic
+//! values) — which is how the pipeline's invariants are tested without
+//! `make artifacts`.
 
 pub mod dataset;
+pub mod pipeline;
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::HapiConfig;
 use crate::cos::protocol::CosConnection;
 use crate::error::{Error, Result};
+use crate::metrics::Registry;
 use crate::netsim::Link;
 use crate::profiler::AppProfile;
-use crate::runtime::{DeviceKind, DeviceSim, ModelArtifacts, Tensor};
+use crate::runtime::{DeviceKind, DeviceSim, ExecBackend, Tensor};
 use crate::server::request::{PostRequest, RequestMode};
 use crate::split::{choose_split_idx, SplitDecision};
 
 pub use dataset::{DatasetRef, DatasetSpec};
+pub use pipeline::{Delivery, Fetched, Job, PipelineReport};
 
 /// Outcome of one epoch.
 #[derive(Debug, Clone, Default)]
@@ -35,12 +52,18 @@ pub struct EpochStats {
     pub iterations: usize,
     pub loss: Vec<f32>,
     pub accuracy: Vec<f32>,
-    /// Wall time blocked on network+COS results (per iteration).
+    /// Wall time blocked on network+COS results (per-iteration stalls).
     pub comm: Duration,
     /// Wall time computing locally (per iteration sums).
     pub comp: Duration,
     pub bytes_from_cos: u64,
     pub bytes_to_cos: u64,
+    /// Split index each iteration trained at (changes only with
+    /// `adaptive_split`; never exceeds the freeze index).
+    pub splits: Vec<usize>,
+    /// High-water mark of in-flight prefetched iterations (bounded by
+    /// `pipeline_depth`).
+    pub max_inflight: usize,
 }
 
 impl EpochStats {
@@ -59,61 +82,27 @@ impl EpochStats {
 
 pub struct HapiClient {
     pub app: AppProfile,
+    /// The initial (Algorithm 1) decision; `adaptive_split` re-decides
+    /// per window at runtime without mutating this record.
     pub split: SplitDecision,
-    arts: Arc<ModelArtifacts>,
+    backend: ExecBackend,
     cfg: HapiConfig,
     addr: String,
     link: Link,
     device_kind: DeviceKind,
     device: Arc<DeviceSim>,
     tail_params: Mutex<Vec<Tensor>>,
-    next_req_id: std::sync::atomic::AtomicU64,
+    next_req_id: AtomicU64,
+    registry: Registry,
 }
 
 impl HapiClient {
-    /// The §7 BASELINE: stream raw images with GETs and run the whole
-    /// network on the compute tier.  Encoded as split index 0 (no units
-    /// pushed down); everything else (pipelining, training, memory
-    /// accounting) is shared with the Hapi path, mirroring §6's "users
-    /// provide the same training parameters in both cases".
-    #[allow(clippy::too_many_arguments)]
-    pub fn new_baseline(
+    /// General constructor over any execution backend.  `split_override`
+    /// forces a split index (the §7.3 static-freeze competitor); `None`
+    /// runs Algorithm 1.
+    pub fn from_backend(
         app: AppProfile,
-        arts: Arc<ModelArtifacts>,
-        cfg: HapiConfig,
-        addr: String,
-        link: Link,
-        device_kind: DeviceKind,
-    ) -> HapiClient {
-        let split = SplitDecision {
-            split_idx: 0,
-            out_bytes_per_sample: app.input_bytes(),
-            bytes_per_iteration: app.input_bytes() * cfg.train_batch as u64,
-            candidates: vec![],
-        };
-        let device =
-            DeviceSim::new("client-dev", device_kind, cfg.client_gpu_mem, 0);
-        let tail_params = Mutex::new(arts.initial_tail_params());
-        HapiClient {
-            app,
-            split,
-            arts,
-            cfg,
-            addr,
-            link,
-            device_kind,
-            device,
-            tail_params,
-            next_req_id: std::sync::atomic::AtomicU64::new(1),
-        }
-    }
-
-    /// `split_override` forces a split index (the §7.3 static-freeze
-    /// competitor); `None` runs Algorithm 1.
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        app: AppProfile,
-        arts: Arc<ModelArtifacts>,
+        backend: ExecBackend,
         cfg: HapiConfig,
         addr: String,
         link: Link,
@@ -135,25 +124,67 @@ impl HapiClient {
                 cfg.train_batch,
             ),
         };
-        let device = DeviceSim::new(
-            "client-dev",
-            device_kind,
-            cfg.client_gpu_mem,
-            0,
-        );
-        let tail_params = Mutex::new(arts.initial_tail_params());
+        Self::assemble(app, backend, cfg, addr, link, device_kind, split)
+    }
+
+    /// The §7 BASELINE over any backend: stream raw images with GETs and
+    /// run the whole network on the compute tier.  Encoded as split
+    /// index 0 (no units pushed down); everything else — pipelining,
+    /// training, memory accounting — is shared with the Hapi path,
+    /// mirroring §6's "users provide the same training parameters in
+    /// both cases".
+    pub fn from_backend_baseline(
+        app: AppProfile,
+        backend: ExecBackend,
+        cfg: HapiConfig,
+        addr: String,
+        link: Link,
+        device_kind: DeviceKind,
+    ) -> HapiClient {
+        let split = SplitDecision {
+            split_idx: 0,
+            out_bytes_per_sample: app.input_bytes(),
+            bytes_per_iteration: app.input_bytes() * cfg.train_batch as u64,
+            candidates: vec![],
+        };
+        Self::assemble(app, backend, cfg, addr, link, device_kind, split)
+    }
+
+    fn assemble(
+        app: AppProfile,
+        backend: ExecBackend,
+        cfg: HapiConfig,
+        addr: String,
+        link: Link,
+        device_kind: DeviceKind,
+        split: SplitDecision,
+    ) -> HapiClient {
+        let device =
+            DeviceSim::new("client-dev", device_kind, cfg.client_gpu_mem, 0);
+        let tail_params = Mutex::new(backend.initial_tail_params());
         HapiClient {
             app,
             split,
-            arts,
+            backend,
             cfg,
             addr,
             link,
             device_kind,
             device,
             tail_params,
-            next_req_id: std::sync::atomic::AtomicU64::new(1),
+            next_req_id: AtomicU64::new(1),
+            registry: Registry::new(),
         }
+    }
+
+    /// Route the client's pipeline metrics into a shared registry (the
+    /// harness points this at the testbed's).
+    pub fn set_registry(&mut self, registry: Registry) {
+        self.registry = registry;
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
     }
 
     pub fn device(&self) -> &Arc<DeviceSim> {
@@ -161,17 +192,20 @@ impl HapiClient {
     }
 
     fn req_id(&self) -> u64 {
-        self.next_req_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        self.next_req_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Fan out one request per shard of the iteration and reassemble the
-    /// results in shard order (the reorder buffer of §5.2).  Hapi mode
-    /// (split ≥ 1) POSTs feature-extraction requests; BASELINE (split 0)
-    /// GETs the raw image objects.
-    fn fetch_features(&self, ds: &DatasetRef, shards: &[usize]) -> Result<Tensor> {
+    /// Fetch one iteration's shard group at `split` and reassemble the
+    /// results in shard order (the reorder buffer of §5.2, shard level).
+    /// Hapi mode (split ≥ 1) POSTs feature-extraction requests; BASELINE
+    /// (split 0) GETs the raw image objects.
+    fn fetch_iteration(
+        &self,
+        ds: &DatasetRef,
+        shards: &[usize],
+        split: usize,
+    ) -> Result<Tensor> {
         let mem = self.app.memory();
-        let split = self.split.split_idx;
         let slots: Vec<Mutex<Option<Result<Tensor>>>> =
             shards.iter().map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
@@ -241,8 +275,14 @@ impl HapiClient {
 
     /// Compute phase for one iteration: leftover frozen units at the
     /// training batch size, then grad accumulation + one SGD update.
-    fn compute_iteration(&self, feats: Tensor, labels: &[i32]) -> Result<(f32, f32)> {
-        let split = self.split.split_idx;
+    /// `split` is the index this iteration's features were extracted at
+    /// (it can differ across iterations under `adaptive_split`).
+    fn compute_iteration(
+        &self,
+        split: usize,
+        feats: Tensor,
+        labels: &[i32],
+    ) -> Result<(f32, f32)> {
         let freeze = self.app.freeze_idx();
         let mem = self.app.memory();
         let _lease = self
@@ -250,7 +290,7 @@ impl HapiClient {
             .admit(mem.client_bytes(split, feats.dims[0]))?;
 
         let feats = if split < freeze {
-            self.arts.forward_segment(
+            self.backend.forward_segment(
                 &feats,
                 split + 1,
                 freeze,
@@ -261,7 +301,7 @@ impl HapiClient {
             feats
         };
 
-        let mb = self.arts.micro_batch();
+        let mb = self.backend.micro_batch();
         let n = feats.dims[0];
         debug_assert_eq!(n, labels.len());
         let mut tail = self.tail_params.lock().unwrap();
@@ -280,7 +320,7 @@ impl HapiClient {
             let mask = Tensor::from_f32(vec![mb], &mask);
             let t0 = Instant::now();
             let (grads, loss, correct) =
-                self.arts.train_grads(&x, &y, &mask, &tail)?;
+                self.backend.train_grads(&x, &y, &mask, &tail)?;
             // Training compute on a weak client is modeled like its
             // dominating dense kind (fully-connected backward).
             self.device_kind
@@ -288,13 +328,13 @@ impl HapiClient {
             loss_sum += loss;
             correct_sum += correct;
             match grad_sums.as_mut() {
-                Some(acc) => ModelArtifacts::accumulate(acc, &grads)?,
+                Some(acc) => ExecBackend::accumulate(acc, &grads)?,
                 None => grad_sums = Some(grads),
             }
             off += len;
         }
         if let Some(grads) = grad_sums {
-            let new_tail = self.arts.apply_update(
+            let new_tail = self.backend.apply_update(
                 self.cfg.learning_rate,
                 n as f32,
                 &tail,
@@ -306,6 +346,10 @@ impl HapiClient {
     }
 
     /// Train one epoch over the dataset; `labels` in global sample order.
+    ///
+    /// Iterations flow through the [`pipeline`] engine: `pipeline_depth`
+    /// iterations are prefetched against the COS while earlier ones
+    /// compute, delivered strictly in order.
     pub fn train_epoch(&self, ds: &DatasetRef, labels: &[i32]) -> Result<EpochStats> {
         if labels.len() != ds.num_samples {
             return Err(Error::other("labels/dataset size mismatch"));
@@ -313,7 +357,11 @@ impl HapiClient {
         // Pre-flight memory check: a batch that can never fit the client
         // device fails immediately (CUDA would crash on the first
         // iteration's first allocation; failing before the transfer
-        // avoids paying for bytes a doomed epoch would stream).
+        // avoids paying for bytes a doomed epoch would stream).  The
+        // initial split is the most client-memory-hungry one admitted:
+        // the adaptive re-decision below is clamped to never move the
+        // split earlier than it (later splits push more down and leave
+        // fewer leftover units on the client).
         let need = self.app.memory().client_bytes(
             self.split.split_idx,
             self.cfg.train_batch.min(ds.num_samples),
@@ -327,32 +375,38 @@ impl HapiClient {
         }
         let shards_per_iter =
             (self.cfg.train_batch / ds.shard_samples).max(1);
+        let jobs = pipeline::jobs_for(ds.num_shards, shards_per_iter);
+
         let mut stats = EpochStats::default();
         let tx0 = self.link.stats().tx_bytes();
         let rx0 = self.link.stats().rx_bytes();
 
-        let iterations: Vec<Vec<usize>> = (0..ds.num_shards)
-            .collect::<Vec<_>>()
-            .chunks(shards_per_iter)
-            .map(|c| c.to_vec())
-            .collect();
+        // Split shared between the trainer (re-decides) and the fetch
+        // workers (read it when a job starts).
+        let cur_split = AtomicUsize::new(self.split.split_idx);
+        let adaptive =
+            self.cfg.adaptive_split && self.split.split_idx >= 1;
+        // Per-window bandwidth re-measurement state (trainer-side).
+        let mut win_rx = rx0;
+        let mut win_t = Instant::now();
 
-        // Double buffering: prefetch iteration k+1 while computing k.
-        let mut pending: Option<Result<Tensor>> = None;
-        for (it, shards) in iterations.iter().enumerate() {
-            let t_fetch = Instant::now();
-            let feats = match pending.take() {
-                Some(f) => f?,
-                None => self.fetch_features(ds, shards)?,
-            };
-            stats.comm += t_fetch.elapsed();
-
-            let next = iterations.get(it + 1).cloned();
-            let t_comp = Instant::now();
-            let (loss, acc) = std::thread::scope(|scope| {
-                let prefetch = next.map(|shards| {
-                    scope.spawn(move || self.fetch_features(ds, &shards))
-                });
+        let report = pipeline::run(
+            self.cfg.pipeline_depth,
+            &jobs,
+            &self.registry,
+            |job| {
+                let split = cur_split.load(Ordering::Relaxed);
+                let tensor = self.fetch_iteration(ds, &job.shards, split)?;
+                Ok(Fetched {
+                    bytes: tensor.byte_len() as u64,
+                    payload: (tensor, split),
+                    fetch_time: Duration::ZERO, // stamped by the engine
+                })
+            },
+            |delivery| {
+                let (feats, split) = delivery.payload;
+                stats.comm += delivery.stall;
+                let shards = &jobs[delivery.seq].shards;
                 let first = shards[0] * ds.shard_samples;
                 let count: usize = shards
                     .iter()
@@ -361,18 +415,71 @@ impl HapiClient {
                             .min(ds.num_samples - s * ds.shard_samples)
                     })
                     .sum();
-                let out =
-                    self.compute_iteration(feats, &labels[first..first + count]);
-                if let Some(p) = prefetch {
-                    pending = Some(p.join().expect("prefetch panicked"));
+                let t_comp = Instant::now();
+                let (loss, acc) = self.compute_iteration(
+                    split,
+                    feats,
+                    &labels[first..first + count],
+                )?;
+                self.registry
+                    .histogram("pipeline.compute_ns")
+                    .record(t_comp.elapsed().as_nanos() as u64);
+                stats.comp += t_comp.elapsed();
+                stats.iterations += 1;
+                stats.loss.push(loss);
+                stats.accuracy.push(acc);
+                stats.splits.push(split);
+
+                if adaptive {
+                    // Re-measure the link over the delivery window and
+                    // re-run Algorithm 1 (Table 4 dynamics).  The window
+                    // aggregates all concurrent fetches — it observes
+                    // link goodput, not per-connection shares.  Two
+                    // guards keep the estimate honest:
+                    //
+                    // - only *stalled* windows re-decide: when the
+                    //   trainer never waited on the network, the link
+                    //   was demand-limited (idle during compute), the
+                    //   measurement reflects demand rather than
+                    //   availability, and bandwidth is not the
+                    //   bottleneck anyway;
+                    // - the new split is clamped to never move earlier
+                    //   than the initial decision: the pre-flight
+                    //   memory check admitted the initial split, and
+                    //   every later split needs *less* client memory.
+                    let now = Instant::now();
+                    let dt = now.duration_since(win_t).as_secs_f64();
+                    let rx = self.link.stats().rx_bytes();
+                    if dt >= 0.01 && rx > win_rx {
+                        let stalled =
+                            delivery.stall.as_secs_f64() >= 0.1 * dt;
+                        let bw = ((rx - win_rx) as f64 / dt).max(1.0);
+                        win_rx = rx;
+                        win_t = now;
+                        if stalled {
+                            let d = choose_split_idx(
+                                &self.app,
+                                Some(bw as u64),
+                                self.cfg.split_window_secs,
+                                self.cfg.train_batch,
+                            );
+                            let new = d
+                                .split_idx
+                                .max(self.split.split_idx);
+                            let old = cur_split.load(Ordering::Relaxed);
+                            if new != old {
+                                cur_split.store(new, Ordering::Relaxed);
+                                self.registry
+                                    .counter("pipeline.split_redecisions")
+                                    .inc();
+                            }
+                        }
+                    }
                 }
-                out
-            })?;
-            stats.comp += t_comp.elapsed();
-            stats.iterations += 1;
-            stats.loss.push(loss);
-            stats.accuracy.push(acc);
-        }
+                Ok(())
+            },
+        )?;
+        stats.max_inflight = report.inflight_max;
         stats.bytes_to_cos = self.link.stats().tx_bytes() - tx0;
         stats.bytes_from_cos = self.link.stats().rx_bytes() - rx0;
         Ok(stats)
@@ -386,6 +493,9 @@ impl HapiClient {
 
 #[cfg(test)]
 mod tests {
-    // HapiClient is integration-tested end to end in rust/tests/ (it
-    // needs artifacts + a running proxy); unit tests cover dataset.rs.
+    // HapiClient is integration-tested end to end: rust/tests/
+    // stack_integration.rs (HLO backend; needs artifacts + a proxy) and
+    // rust/tests/sim_backend.rs (SimBackend; artifact-free).  The
+    // pipeline engine has its own unit + property tests (pipeline.rs,
+    // rust/tests/pipeline_props.rs); unit tests here cover dataset.rs.
 }

@@ -1,0 +1,564 @@
+//! The cross-tier prefetch pipeline (§4–5's iteration overlap,
+//! generalised).
+//!
+//! The paper's client overlaps *one* iteration of storage-tier work with
+//! compute (double buffering).  This engine generalises that to a
+//! configurable sliding window of `depth` training iterations in flight
+//! against the COS at once, with:
+//!
+//! - **bounded backpressure** — iteration `k + depth` is not submitted
+//!   until iteration `k` has been *delivered* to the trainer, so at most
+//!   `depth` iterations are ever submitted-but-undelivered (memory and
+//!   COS load are bounded, and the window cannot deadlock: the next
+//!   needed iteration is always either fetched, fetching, or startable);
+//! - **in-order delivery** — fetch completions are reordered so the
+//!   trainer consumes iteration results in submission order, preserving
+//!   the learning trajectory bit-for-bit regardless of depth (§5.2's
+//!   reorder buffer, lifted from shard level to iteration level);
+//! - **per-stage metrics** — fetch latency, delivery stall, bytes moved
+//!   and the high-water in-flight mark land in a [`Registry`].
+//!
+//! The engine is payload-generic and transport-agnostic: the Hapi client
+//! drives it with feature-extraction POSTs, the BASELINE with raw-object
+//! GETs, and ALL_IN_COS with training POSTs — all three competitors ride
+//! the same machinery (§6's "same parameters in both cases").  Tests
+//! drive it with synthetic closures, no network at all.
+//!
+//! Depth 1 reproduces the old double buffering exactly: while the
+//! trainer computes iteration `k` (already delivered), iteration `k+1`
+//! is the one submission the window admits.
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::metrics::Registry;
+
+/// One unit of pipelined work: a training iteration's shard group.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Submission index; delivery happens in exactly this order.
+    pub seq: usize,
+    /// COS shard indices fetched for this iteration.
+    pub shards: Vec<usize>,
+}
+
+/// A completed fetch, as produced by the fetch stage.
+pub struct Fetched<T> {
+    /// The fetched payload (features + metadata for the trainer).
+    pub payload: T,
+    /// Bytes that crossed the link for this fetch (for bandwidth
+    /// re-measurement and the Fig 13 transfer accounting).
+    pub bytes: u64,
+    /// Wall time the fetch stage spent on this job.
+    pub fetch_time: Duration,
+}
+
+/// What the consumer receives, in submission order.
+pub struct Delivery<T> {
+    pub seq: usize,
+    pub payload: T,
+    pub bytes: u64,
+    pub fetch_time: Duration,
+    /// How long the trainer was blocked waiting for this delivery — the
+    /// per-iteration stall the depth sweep (fig16) minimises.
+    pub stall: Duration,
+}
+
+/// End-of-run accounting.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    pub iterations: usize,
+    pub bytes: u64,
+    /// High-water mark of submitted-but-undelivered iterations; the
+    /// bounded-backpressure invariant is `inflight_max <= depth`.
+    pub inflight_max: usize,
+    /// Total trainer stall across deliveries.
+    pub stall: Duration,
+}
+
+struct State<T> {
+    next_job: usize,
+    delivered: usize,
+    results: BTreeMap<usize, Result<Fetched<T>>>,
+    aborted: bool,
+    inflight_max: usize,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    /// Workers wait here for window space.
+    submit: Condvar,
+    /// The consumer waits here for the next in-order result.
+    ready: Condvar,
+}
+
+/// Panic guard for a worker's claimed job: if the fetch closure unwinds,
+/// deliver an `Err` sentinel for its seq so the consumer fails fast
+/// instead of waiting forever on a result that will never arrive (the
+/// worker's panic then resurfaces when the scope joins it).
+struct FetchPanicGuard<'a, T> {
+    shared: &'a Shared<T>,
+    seq: usize,
+    armed: bool,
+}
+
+impl<T> Drop for FetchPanicGuard<'_, T> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        st.results.insert(
+            self.seq,
+            Err(crate::error::Error::other("pipeline fetch panicked")),
+        );
+        self.shared.ready.notify_all();
+    }
+}
+
+/// Abort guard for the consumer side: runs unconditionally when the
+/// scope closure exits — including by panic in `consume` — so workers
+/// parked on the window condvar always wake and drain instead of
+/// deadlocking the scope join.  Redundant (harmless) on clean exits.
+struct AbortOnExit<'a, T> {
+    shared: &'a Shared<T>,
+}
+
+impl<T> Drop for AbortOnExit<'_, T> {
+    fn drop(&mut self) {
+        abort(self.shared);
+    }
+}
+
+/// Run `jobs` through a `depth`-deep fetch window, delivering to
+/// `consume` strictly in `seq` order.  `fetch` runs on `depth` worker
+/// threads; `consume` runs on the calling thread (it is the trainer).
+///
+/// The first fetch error or `consume` error aborts the pipeline and is
+/// returned (in delivery order for fetch errors, immediately for
+/// consume errors); workers finish their current fetch and exit.
+pub fn run<T, F, C>(
+    depth: usize,
+    jobs: &[Job],
+    registry: &Registry,
+    fetch: F,
+    mut consume: C,
+) -> Result<PipelineReport>
+where
+    T: Send,
+    F: Fn(&Job) -> Result<Fetched<T>> + Sync,
+    C: FnMut(Delivery<T>) -> Result<()>,
+{
+    assert!(depth >= 1, "pipeline depth must be >= 1");
+    debug_assert!(
+        jobs.iter().enumerate().all(|(i, j)| j.seq == i),
+        "job seqs must be dense and position-ordered (use jobs_for)"
+    );
+    registry.gauge("pipeline.depth").set(depth as i64);
+    let mut report = PipelineReport::default();
+    if jobs.is_empty() {
+        return Ok(report);
+    }
+    let shared = Shared {
+        state: Mutex::new(State {
+            next_job: 0,
+            delivered: 0,
+            results: BTreeMap::new(),
+            aborted: false,
+            inflight_max: 0,
+        }),
+        submit: Condvar::new(),
+        ready: Condvar::new(),
+    };
+    let fetch = &fetch;
+    let shared = &shared;
+
+    let out: Result<()> = std::thread::scope(|scope| {
+        let _abort_on_exit = AbortOnExit { shared };
+        for _ in 0..depth.min(jobs.len()) {
+            scope.spawn(move || {
+                loop {
+                    // Claim the next job once the window has room.
+                    let idx = {
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            if st.aborted || st.next_job >= jobs.len() {
+                                return;
+                            }
+                            if st.next_job < st.delivered + depth {
+                                break;
+                            }
+                            st = shared.submit.wait(st).unwrap();
+                        }
+                        let idx = st.next_job;
+                        st.next_job += 1;
+                        st.inflight_max = st
+                            .inflight_max
+                            .max(st.next_job - st.delivered);
+                        idx
+                    };
+                    let mut guard = FetchPanicGuard {
+                        shared,
+                        seq: jobs[idx].seq,
+                        armed: true,
+                    };
+                    let t0 = Instant::now();
+                    let mut res = fetch(&jobs[idx]);
+                    guard.armed = false;
+                    if let Ok(f) = res.as_mut() {
+                        f.fetch_time = t0.elapsed();
+                        registry
+                            .histogram("pipeline.fetch_ns")
+                            .record(f.fetch_time.as_nanos() as u64);
+                        registry.counter("pipeline.bytes").add(f.bytes);
+                    }
+                    let mut st = shared.state.lock().unwrap();
+                    st.results.insert(jobs[idx].seq, res);
+                    shared.ready.notify_all();
+                }
+            });
+        }
+
+        // The consumer: this thread is the trainer.
+        for seq in 0..jobs.len() {
+            let wait0 = Instant::now();
+            let fetched = {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    if let Some(r) = st.results.remove(&seq) {
+                        break r;
+                    }
+                    st = shared.ready.wait(st).unwrap();
+                }
+            };
+            let stall = wait0.elapsed();
+            registry
+                .histogram("pipeline.stall_ns")
+                .record(stall.as_nanos() as u64);
+            let fetched = match fetched {
+                Ok(f) => f,
+                Err(e) => {
+                    abort(shared);
+                    return Err(e);
+                }
+            };
+            // Open the window *before* computing so the freed slot's
+            // fetch overlaps this iteration's compute.
+            {
+                let mut st = shared.state.lock().unwrap();
+                st.delivered += 1;
+                shared.submit.notify_all();
+            }
+            report.iterations += 1;
+            report.bytes += fetched.bytes;
+            report.stall += stall;
+            registry.counter("pipeline.iterations").inc();
+            let delivery = Delivery {
+                seq,
+                payload: fetched.payload,
+                bytes: fetched.bytes,
+                fetch_time: fetched.fetch_time,
+                stall,
+            };
+            if let Err(e) = consume(delivery) {
+                abort(shared);
+                return Err(e);
+            }
+        }
+        Ok(())
+    });
+    out?;
+
+    let st = shared.state.lock().unwrap();
+    report.inflight_max = st.inflight_max;
+    registry
+        .gauge("pipeline.inflight_max")
+        .set(st.inflight_max as i64);
+    Ok(report)
+}
+
+fn abort<T>(shared: &Shared<T>) {
+    let mut st = shared.state.lock().unwrap();
+    st.aborted = true;
+    shared.submit.notify_all();
+    shared.ready.notify_all();
+}
+
+/// Build per-iteration jobs from a shard count and group size (the
+/// client's `train_batch / object_samples` fan-out).
+pub fn jobs_for(num_shards: usize, shards_per_iter: usize) -> Vec<Job> {
+    let per = shards_per_iter.max(1);
+    (0..num_shards)
+        .collect::<Vec<_>>()
+        .chunks(per)
+        .enumerate()
+        .map(|(seq, c)| Job {
+            seq,
+            shards: c.to_vec(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn fetched(v: usize) -> Fetched<usize> {
+        Fetched {
+            payload: v,
+            bytes: 10,
+            fetch_time: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn delivers_in_submission_order() {
+        let jobs = jobs_for(24, 2);
+        let reg = Registry::new();
+        let mut seen = Vec::new();
+        let report = run(
+            4,
+            &jobs,
+            &reg,
+            |job| {
+                // Later jobs finish faster: reordering pressure.
+                std::thread::sleep(Duration::from_micros(
+                    ((jobs.len() - job.seq) * 200) as u64,
+                ));
+                Ok(fetched(job.seq))
+            },
+            |d| {
+                seen.push(d.payload);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, (0..12).collect::<Vec<_>>());
+        assert_eq!(report.iterations, 12);
+        assert_eq!(report.bytes, 120);
+        assert!(report.inflight_max <= 4);
+    }
+
+    #[test]
+    fn inflight_never_exceeds_depth() {
+        for depth in 1..=5usize {
+            let jobs = jobs_for(30, 1);
+            let reg = Registry::new();
+            let concurrent = AtomicUsize::new(0);
+            let max_seen = AtomicUsize::new(0);
+            let report = run(
+                depth,
+                &jobs,
+                &reg,
+                |job| {
+                    let now =
+                        concurrent.fetch_add(1, Ordering::SeqCst) + 1;
+                    max_seen.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_micros(
+                        100 + (job.seq % 3) as u64 * 150,
+                    ));
+                    concurrent.fetch_sub(1, Ordering::SeqCst);
+                    Ok(fetched(job.seq))
+                },
+                |_| Ok(()),
+            )
+            .unwrap();
+            assert!(
+                max_seen.load(Ordering::SeqCst) <= depth,
+                "depth {depth}: {} concurrent fetches",
+                max_seen.load(Ordering::SeqCst)
+            );
+            assert!(report.inflight_max <= depth);
+            assert_eq!(report.iterations, 30);
+        }
+    }
+
+    #[test]
+    fn depth_one_is_double_buffering() {
+        // With depth 1, exactly one fetch may overlap the consumer; the
+        // fetch of k+1 must be able to START while k is being consumed.
+        let jobs = jobs_for(6, 1);
+        let reg = Registry::new();
+        let started = AtomicUsize::new(0);
+        run(
+            1,
+            &jobs,
+            &reg,
+            |job| {
+                started.fetch_max(job.seq + 1, Ordering::SeqCst);
+                Ok(fetched(job.seq))
+            },
+            |d| {
+                if d.seq == 0 {
+                    // While consuming 0, job 1 becomes startable; give
+                    // the worker a moment and verify it did start.
+                    let t0 = Instant::now();
+                    while started.load(Ordering::SeqCst) < 2
+                        && t0.elapsed() < Duration::from_secs(1)
+                    {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    assert!(
+                        started.load(Ordering::SeqCst) >= 2,
+                        "depth 1 must prefetch one iteration ahead"
+                    );
+                }
+                Ok(())
+            },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn fetch_error_surfaces_in_order() {
+        let jobs = jobs_for(10, 1);
+        let reg = Registry::new();
+        let mut seen = Vec::new();
+        let err = run(
+            3,
+            &jobs,
+            &reg,
+            |job| {
+                if job.seq == 4 {
+                    Err(Error::other("boom"))
+                } else {
+                    Ok(fetched(job.seq))
+                }
+            },
+            |d| {
+                seen.push(d.seq);
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        // Everything before the failed iteration was delivered in order.
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn consume_error_aborts() {
+        let jobs = jobs_for(50, 1);
+        let reg = Registry::new();
+        let fetches = AtomicUsize::new(0);
+        let err = run(
+            2,
+            &jobs,
+            &reg,
+            |job| {
+                fetches.fetch_add(1, Ordering::SeqCst);
+                Ok(fetched(job.seq))
+            },
+            |d| {
+                if d.seq == 2 {
+                    Err(Error::other("trainer failed"))
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("trainer failed"));
+        // Backpressure bounds wasted work: no runaway fetching after
+        // the abort (window = delivered + depth, plus the slot freed at
+        // the failing delivery).
+        assert!(fetches.load(Ordering::SeqCst) <= 3 + 2);
+    }
+
+    #[test]
+    fn fetch_panic_fails_fast_instead_of_hanging() {
+        // A panicking fetch must not strand the consumer on the reorder
+        // buffer: the panic guard delivers an Err sentinel, the run
+        // aborts, and the worker's panic resurfaces at scope join.
+        let jobs = jobs_for(10, 1);
+        let reg = Registry::new();
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                run(
+                    2,
+                    &jobs,
+                    &reg,
+                    |job| {
+                        if job.seq == 3 {
+                            panic!("boom in fetch");
+                        }
+                        Ok(fetched(job.seq))
+                    },
+                    |_| Ok(()),
+                )
+            }),
+        );
+        assert!(outcome.is_err(), "worker panic must propagate");
+    }
+
+    #[test]
+    fn consume_panic_releases_the_workers() {
+        // A panicking consumer must wake workers parked on the window
+        // condvar so the scope can join (no deadlock on unwind).
+        let jobs = jobs_for(20, 1);
+        let reg = Registry::new();
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                run(
+                    2,
+                    &jobs,
+                    &reg,
+                    |job| Ok(fetched(job.seq)),
+                    |d| {
+                        if d.seq == 1 {
+                            panic!("boom in consume");
+                        }
+                        Ok(())
+                    },
+                )
+            }),
+        );
+        assert!(outcome.is_err(), "consumer panic must propagate");
+    }
+
+    #[test]
+    fn empty_and_single_job_edge_cases() {
+        let reg = Registry::new();
+        let report =
+            run(3, &[], &reg, |_: &Job| Ok(fetched(0)), |_| Ok(()))
+                .unwrap();
+        assert_eq!(report.iterations, 0);
+        let jobs = jobs_for(1, 8);
+        let mut n = 0;
+        run(8, &jobs, &reg, |j| Ok(fetched(j.seq)), |_| {
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn jobs_for_partitions_all_shards() {
+        let jobs = jobs_for(7, 3);
+        assert_eq!(jobs.len(), 3);
+        let all: Vec<usize> =
+            jobs.iter().flat_map(|j| j.shards.clone()).collect();
+        assert_eq!(all, (0..7).collect::<Vec<_>>());
+        assert_eq!(jobs[2].shards, vec![6]);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.seq, i);
+        }
+    }
+
+    #[test]
+    fn metrics_are_recorded() {
+        let jobs = jobs_for(8, 1);
+        let reg = Registry::new();
+        run(2, &jobs, &reg, |j| Ok(fetched(j.seq)), |_| Ok(())).unwrap();
+        assert_eq!(reg.counter("pipeline.iterations").get(), 8);
+        assert_eq!(reg.counter("pipeline.bytes").get(), 80);
+        assert!(reg.gauge("pipeline.inflight_max").get() <= 2);
+        assert_eq!(reg.gauge("pipeline.depth").get(), 2);
+        assert_eq!(reg.histogram("pipeline.fetch_ns").count(), 8);
+    }
+}

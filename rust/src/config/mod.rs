@@ -5,6 +5,22 @@
 //! 2000 → 200, COS batch 200 → 20, minimum COS batch 25 → 20 (one
 //! micro-batch), two simulated accelerators per tier.  Precedence:
 //! defaults < `--config file.json` < individual `--key` flags.
+//!
+//! Pipeline + backend knobs (this layer's additions over the paper's
+//! setup):
+//!
+//! - `pipeline_depth` (`--pipeline-depth`, default 1 = the paper's
+//!   double buffering) — training iterations kept in flight against the
+//!   COS by the client's prefetch engine; deeper windows hide COS
+//!   latency (fig16 sweeps the axis).
+//! - `adaptive_split` (`--adaptive-split`, default off) — re-run
+//!   Algorithm 1 between iterations from per-window bandwidth
+//!   re-measurement (Table 4 dynamics).
+//! - `backend` (`--backend hlo|sim`, default `hlo`) — real AOT HLO via
+//!   PJRT, or the artifact-free deterministic SimBackend
+//!   ([`HapiConfig::sim`] is the ready-made sim preset).
+//! - `sim_compute_gflops` (`--sim-gflops`, default 0) — modeled compute
+//!   rate for the SimBackend; 0 keeps execution instantaneous.
 
 use std::path::{Path, PathBuf};
 
@@ -58,9 +74,57 @@ pub struct HapiConfig {
     /// Enable server-side batch adaptation (§5.5).
     pub batch_adaptation: bool,
 
+    // --- client pipeline (§4–5 cross-tier overlap) ---------------------
+    /// Prefetch window: iterations allowed in flight (submitted, not yet
+    /// delivered to the trainer).  The default 1 is the paper's double
+    /// buffering (fetch k+1 overlaps compute k) so the fig/table benches
+    /// reproduce the paper's comm/comp balance; deeper windows hide
+    /// per-request COS latency behind more compute (fig16 sweeps this).
+    pub pipeline_depth: usize,
+    /// Re-run Algorithm 1 between iterations from per-window bandwidth
+    /// re-measurement (Table 4 dynamics).  Off by default: the paper's
+    /// client decides once per application.
+    pub adaptive_split: bool,
+
+    // --- execution backend ---------------------------------------------
+    /// HLO artifacts through PJRT, or the artifact-free SimBackend.
+    pub backend: BackendKind,
+    /// SimBackend modeled compute throughput in GFLOP/s; 0 disables time
+    /// modeling (pure-value mode — deterministic tests want this).
+    pub sim_compute_gflops: f64,
+
     // --- training -------------------------------------------------------
     pub learning_rate: f32,
     pub seed: u64,
+}
+
+/// Which execution backend serves forward/training computation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Real AOT HLO (requires `make artifacts`; execution additionally
+    /// needs the `pjrt` cargo feature).
+    Hlo,
+    /// Deterministic in-process simulation from the profile tables.
+    Sim,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Hlo => "hlo",
+            BackendKind::Sim => "sim",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "hlo" => Ok(BackendKind::Hlo),
+            "sim" => Ok(BackendKind::Sim),
+            other => {
+                Err(Error::Config(format!("unknown backend {other:?}")))
+            }
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -112,6 +176,10 @@ impl Default for HapiConfig {
             train_batch: 200,
             split_window_secs: 1.0,
             batch_adaptation: true,
+            pipeline_depth: 1,
+            adaptive_split: false,
+            backend: BackendKind::Hlo,
+            sim_compute_gflops: 0.0,
             learning_rate: 0.02,
             seed: 42,
         }
@@ -169,6 +237,14 @@ impl HapiConfig {
                 "batch_adaptation" => {
                     self.batch_adaptation = v.as_bool()?
                 }
+                "pipeline_depth" => self.pipeline_depth = v.as_usize()?,
+                "adaptive_split" => self.adaptive_split = v.as_bool()?,
+                "backend" => {
+                    self.backend = BackendKind::parse(v.as_str()?)?
+                }
+                "sim_compute_gflops" => {
+                    self.sim_compute_gflops = v.as_f64()?
+                }
                 "learning_rate" => self.learning_rate = v.as_f64()? as f32,
                 "seed" => self.seed = v.as_u64()?,
                 other => {
@@ -205,6 +281,16 @@ impl HapiConfig {
         self.default_cos_batch =
             args.parse_or("cos-batch", self.default_cos_batch)?;
         self.train_batch = args.parse_or("train-batch", self.train_batch)?;
+        self.pipeline_depth =
+            args.parse_or("pipeline-depth", self.pipeline_depth)?;
+        if args.flag("adaptive-split") {
+            self.adaptive_split = true;
+        }
+        if let Some(v) = args.get("backend") {
+            self.backend = BackendKind::parse(v)?;
+        }
+        self.sim_compute_gflops =
+            args.parse_or("sim-gflops", self.sim_compute_gflops)?;
         self.learning_rate =
             args.parse_or("learning-rate", self.learning_rate)?;
         self.seed = args.parse_or("seed", self.seed)?;
@@ -238,6 +324,16 @@ impl HapiConfig {
         if self.reserved_bytes >= self.cos_gpu_mem {
             return Err(Error::Config(
                 "reserved bytes exceed device memory".into(),
+            ));
+        }
+        if self.pipeline_depth == 0 {
+            return Err(Error::Config(
+                "pipeline depth must be ≥ 1 (1 = double buffering)".into(),
+            ));
+        }
+        if self.sim_compute_gflops < 0.0 {
+            return Err(Error::Config(
+                "sim compute rate must be ≥ 0".into(),
             ));
         }
         Ok(())
@@ -280,6 +376,20 @@ impl HapiConfig {
         cfg
     }
 
+    /// Config for the artifact-free SimBackend: runs the full stack on a
+    /// fresh clone (no `make artifacts`, no PJRT).  Batch knobs are
+    /// shrunk to the sim profiles' scale so tests stay fast.
+    pub fn sim() -> HapiConfig {
+        HapiConfig {
+            backend: BackendKind::Sim,
+            object_samples: 20,
+            min_cos_batch: 5,
+            default_cos_batch: 5,
+            train_batch: 40,
+            ..HapiConfig::default()
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             (
@@ -310,6 +420,13 @@ impl HapiConfig {
             ("train_batch", Json::num(self.train_batch as f64)),
             ("split_window_secs", Json::num(self.split_window_secs)),
             ("batch_adaptation", Json::Bool(self.batch_adaptation)),
+            ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
+            ("adaptive_split", Json::Bool(self.adaptive_split)),
+            ("backend", Json::str(self.backend.as_str())),
+            (
+                "sim_compute_gflops",
+                Json::num(self.sim_compute_gflops),
+            ),
             ("learning_rate", Json::num(self.learning_rate as f64)),
             ("seed", Json::num(self.seed as f64)),
         ])
@@ -385,8 +502,43 @@ mod tests {
         let cfg = HapiConfig::default();
         let mut cfg2 = HapiConfig::default();
         cfg2.train_batch = 1; // will be overwritten
+        cfg2.pipeline_depth = 9;
+        cfg2.backend = BackendKind::Sim;
         cfg2.merge_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg2.train_batch, cfg.train_batch);
         assert_eq!(cfg2.bandwidth, cfg.bandwidth);
+        assert_eq!(cfg2.pipeline_depth, cfg.pipeline_depth);
+        assert_eq!(cfg2.backend, cfg.backend);
+    }
+
+    #[test]
+    fn pipeline_and_backend_knobs() {
+        let cfg = HapiConfig::from_args(&args(&[
+            "--pipeline-depth",
+            "4",
+            "--backend",
+            "sim",
+            "--sim-gflops",
+            "1.5",
+            "--adaptive-split",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.pipeline_depth, 4);
+        assert_eq!(cfg.backend, BackendKind::Sim);
+        assert_eq!(cfg.sim_compute_gflops, 1.5);
+        assert!(cfg.adaptive_split);
+
+        let mut bad = HapiConfig::default();
+        bad.pipeline_depth = 0;
+        assert!(bad.validate().is_err());
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn sim_config_validates_and_needs_no_artifacts() {
+        let cfg = HapiConfig::sim();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.backend, BackendKind::Sim);
+        assert!(cfg.train_batch >= cfg.object_samples);
     }
 }

@@ -180,7 +180,10 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
             Ok(Some(r)) => r,
             Ok(None) => return, // clean EOF
             Err(e) => {
-                log::debug!("connection error: {e}");
+                crate::util::logging::debug(
+                    "proxy",
+                    format_args!("connection error: {e}"),
+                );
                 return;
             }
         };

@@ -5,48 +5,77 @@
 //! device OOM, algorithm infeasibility) so call sites can match on what
 //! actually went wrong — in particular [`Error::Oom`], which the batch
 //! adaptation experiments (§7.7) rely on distinguishing from hard faults.
+//!
+//! Hand-written `Display`/`From` impls (no `thiserror`): the offline
+//! build is dependency-free.
 
+use std::fmt;
 use std::io;
+
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::xla_shim as xla;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-
-    #[error("json: {0}")]
+    Io(io::Error),
     Json(String),
-
-    #[error("config: {0}")]
     Config(String),
-
-    #[error("artifact: {0}")]
     Artifact(String),
-
-    #[error("xla: {0}")]
     Xla(String),
-
     /// Simulated accelerator out-of-memory (the CUDA OOM analogue).
-    #[error("device OOM: need {needed} bytes, free {free} of {capacity}")]
     Oom {
         needed: u64,
         free: u64,
         capacity: u64,
     },
-
-    #[error("protocol: {0}")]
     Protocol(String),
-
-    #[error("object store: {0}")]
     Cos(String),
-
     /// Batch-adaptation optimisation infeasible even at minimum batch.
-    #[error("batch adaptation infeasible: {0}")]
     Infeasible(String),
-
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(m) => write!(f, "json: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Oom {
+                needed,
+                free,
+                capacity,
+            } => write!(
+                f,
+                "device OOM: need {needed} bytes, free {free} of {capacity}"
+            ),
+            Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Cos(m) => write!(f, "object store: {m}"),
+            Error::Infeasible(m) => {
+                write!(f, "batch adaptation infeasible: {m}")
+            }
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for Error {
+    fn from(e: io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -70,5 +99,31 @@ impl Error {
             Error::Cos(m) | Error::Other(m) => m.contains("device OOM"),
             _ => false,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oom_display_is_stable() {
+        let e = Error::Oom {
+            needed: 10,
+            free: 2,
+            capacity: 8,
+        };
+        assert_eq!(e.to_string(), "device OOM: need 10 bytes, free 2 of 8");
+        assert!(e.is_oom());
+        assert!(Error::Cos(e.to_string()).is_oom());
+        assert!(!Error::Config("x".into()).is_oom());
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let e: Error =
+            io::Error::new(io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
     }
 }

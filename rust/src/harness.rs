@@ -5,6 +5,12 @@
 //! link, dataset materialisation, and client constructors for Hapi and
 //! every competitor.  Examples, integration tests and all the fig/table
 //! benches build on this.
+//!
+//! The testbed follows `cfg.backend`: with `BackendKind::Hlo` it loads
+//! the AOT profiles/artifacts from `make artifacts`; with
+//! `BackendKind::Sim` it runs entirely from the built-in synthetic
+//! profiles and the deterministic `SimExecutor` — a fresh clone can
+//! launch it with `HapiConfig::sim()` and no artifacts at all.
 
 use std::sync::Arc;
 
@@ -18,7 +24,7 @@ use crate::metrics::Registry;
 use crate::model::ModelRegistry;
 use crate::netsim::Link;
 use crate::profiler::AppProfile;
-use crate::runtime::{DeviceKind, Engine, ModelArtifacts};
+use crate::runtime::{DeviceKind, Engine, ExecBackend, ModelArtifacts};
 use crate::server::HapiServer;
 
 pub struct Testbed {
@@ -43,7 +49,7 @@ impl Testbed {
         crate::util::logging::init();
         let registry = Registry::new();
         let engine = Engine::cpu()?;
-        let models = ModelRegistry::load_dir(cfg.profiles_dir())?;
+        let models = ModelRegistry::for_config(&cfg)?;
         let cluster = Arc::new(match cfg.storage_read_rate {
             None => StorageCluster::new(cfg.storage_nodes, cfg.replicas),
             Some(rate) => {
@@ -65,15 +71,22 @@ impl Testbed {
             cfg.clone(),
             registry.clone(),
         );
+        // Do not cap request concurrency below what the devices'
+        // admission control allows: the paper serves each POST in its
+        // own process.  The pipelined client keeps up to
+        // `depth × shards-per-iteration` POSTs outstanding inside the
+        // planner's gather window; size the pool so the window actually
+        // sees the whole burst (16 covers any single-tenant bench).
+        let shards_per_iter =
+            (cfg.train_batch / cfg.object_samples).max(1);
+        let compute_workers =
+            16.max(cfg.pipeline_depth * shards_per_iter);
         let proxy = Proxy::start(
             cluster.clone(),
             server.clone(),
             ProxyConfig {
                 mode,
-                // Do not cap request concurrency below what the devices'
-                // admission control allows: the paper serves each POST in
-                // its own process.  16 >= any tenancy we bench.
-                compute_workers: 16,
+                compute_workers,
                 io_workers: 8,
             },
             registry.clone(),
@@ -102,6 +115,13 @@ impl Testbed {
         Ok(AppProfile::new(self.models.get(model)?, self.cfg.scale))
     }
 
+    /// The execution backend clients should use, per `cfg.backend`.
+    pub fn backend(&self, model: &str) -> Result<ExecBackend> {
+        let profile = self.models.get(model)?;
+        ExecBackend::for_model(&self.cfg, &self.engine, profile)
+    }
+
+    /// HLO artifacts for `model` (experiment binaries on the HLO path).
     pub fn artifacts(&self, model: &str) -> Result<Arc<ModelArtifacts>> {
         let profile = self.models.get(model)?;
         Ok(Arc::new(ModelArtifacts::load(
@@ -139,15 +159,17 @@ impl Testbed {
         model: &str,
         device: DeviceKind,
     ) -> Result<HapiClient> {
-        Ok(HapiClient::new(
+        let mut client = HapiClient::from_backend(
             self.app(model)?,
-            self.artifacts(model)?,
+            self.backend(model)?,
             self.cfg.clone(),
             self.addr(),
             self.link.clone(),
             device,
             None,
-        ))
+        );
+        client.set_registry(self.registry.clone());
+        Ok(client)
     }
 
     pub fn baseline_client(
@@ -155,14 +177,16 @@ impl Testbed {
         model: &str,
         device: DeviceKind,
     ) -> Result<HapiClient> {
-        Ok(HapiClient::new_baseline(
+        let mut client = HapiClient::from_backend_baseline(
             self.app(model)?,
-            self.artifacts(model)?,
+            self.backend(model)?,
             self.cfg.clone(),
             self.addr(),
             self.link.clone(),
             device,
-        ))
+        );
+        client.set_registry(self.registry.clone());
+        Ok(client)
     }
 
     pub fn static_freeze_client(
@@ -172,24 +196,28 @@ impl Testbed {
     ) -> Result<HapiClient> {
         let app = self.app(model)?;
         let freeze = app.freeze_idx();
-        Ok(HapiClient::new(
+        let mut client = HapiClient::from_backend(
             app,
-            self.artifacts(model)?,
+            self.backend(model)?,
             self.cfg.clone(),
             self.addr(),
             self.link.clone(),
             device,
             Some(freeze),
-        ))
+        );
+        client.set_registry(self.registry.clone());
+        Ok(client)
     }
 
     pub fn all_in_cos_client(&self, model: &str) -> Result<AllInCosClient> {
-        Ok(AllInCosClient::new(
+        let mut client = AllInCosClient::new(
             self.app(model)?,
             self.cfg.clone(),
             self.addr(),
             self.link.clone(),
-        ))
+        );
+        client.set_registry(self.registry.clone());
+        Ok(client)
     }
 
     pub fn stop(self) {

@@ -16,12 +16,15 @@
 //! - [`model`]/[`profiler`] — per-unit model metadata and the §5.3 hybrid
 //!   memory/size estimator.
 //! - [`runtime`] — PJRT engine (HLO text → executable), `.tnsr` tensors,
-//!   and the simulated accelerator device (memory ledger + OOM + speed
-//!   model; see DESIGN.md §2 for the substitution argument).
+//!   the simulated accelerator device (memory ledger + OOM + speed
+//!   model; see DESIGN.md §2 for the substitution argument), and the
+//!   artifact-free SimBackend (`runtime::sim`) behind the
+//!   `runtime::ExecBackend` dispatch.
 //! - [`split`] — the paper's Algorithm 1 (split-index selection).
 //! - [`batch`] — the Eq. 4 batch-adaptation solver.
 //! - [`server`]/[`client`] — the Hapi server (COS side) and client
-//!   (compute tier).
+//!   (compute tier); `client::pipeline` is the configurable-depth
+//!   cross-tier prefetch engine every competitor trains through.
 //! - [`baseline`] — BASELINE / ALL_IN_COS / static-freeze-split
 //!   competitors from §7.
 //! - [`theory`] — the §4 cost model (Eqs. 1–3).

@@ -11,13 +11,12 @@
 //! - `serve`     — start the COS + Hapi server and print its address
 //!   (foreground; ^C to stop).
 
-use hapi::baseline::construct;
 use hapi::cli::Args;
-use hapi::config::HapiConfig;
+use hapi::config::{BackendKind, HapiConfig};
 use hapi::harness::Testbed;
 use hapi::metrics::table::fnum;
 use hapi::metrics::Table;
-use hapi::model::TABLE1_MODELS;
+use hapi::model::ModelRegistry;
 use hapi::netsim;
 use hapi::runtime::DeviceKind;
 use hapi::split::choose_split_idx;
@@ -75,6 +74,10 @@ fn usage() {
          \x20 --train-batch N        training batch size\n\
          \x20 --bandwidth-mbps M     client<->COS bandwidth (0 = unshaped)\n\
          \x20 --cos-gpus N, --cos-gpu-mem BYTES, --no-batch-adaptation\n\
+         \x20 --backend hlo|sim      execution backend (sim needs no artifacts)\n\
+         \x20 --pipeline-depth N     prefetched iterations in flight (default 1)\n\
+         \x20 --adaptive-split       re-run Algorithm 1 per bandwidth window\n\
+         \x20 --sim-gflops G         sim backend modeled compute rate (0 = instant)\n\
          \x20 --baseline             (train) run the BASELINE competitor\n\
          \x20 --weak-client          (train) CPU-only client device model\n\
          \x20 --samples N            (train) dataset size\n\
@@ -84,11 +87,14 @@ fn usage() {
 
 fn info(cfg: &HapiConfig) -> hapi::Result<()> {
     println!("config:\n{}\n", cfg.to_json().to_string_pretty());
-    if !cfg.artifacts_present() {
-        println!("artifacts: NOT FOUND — run `make artifacts`");
+    if cfg.backend == BackendKind::Hlo && !cfg.artifacts_present() {
+        println!(
+            "artifacts: NOT FOUND — run `make artifacts` (or use \
+             --backend sim)"
+        );
         return Ok(());
     }
-    let models = hapi::model::ModelRegistry::load_dir(cfg.profiles_dir())?;
+    let models = ModelRegistry::for_config(cfg)?;
     let mut t = Table::new(
         "Models (Table 1)",
         &["model", "units", "freeze", "params", "input/sample"],
@@ -108,8 +114,8 @@ fn info(cfg: &HapiConfig) -> hapi::Result<()> {
 }
 
 fn profile(cfg: &HapiConfig, args: &Args) -> hapi::Result<()> {
-    let models = hapi::model::ModelRegistry::load_dir(cfg.profiles_dir())?;
-    let name = args.str_or("model", "alexnet");
+    let models = ModelRegistry::for_config(cfg)?;
+    let name = args.str_or("model", default_model(cfg));
     let m = models.get(&name)?;
     let meta = m.at_scale(cfg.scale);
     let mut t = Table::new(
@@ -136,8 +142,8 @@ fn profile(cfg: &HapiConfig, args: &Args) -> hapi::Result<()> {
 }
 
 fn split(cfg: &HapiConfig, args: &Args) -> hapi::Result<()> {
-    let models = hapi::model::ModelRegistry::load_dir(cfg.profiles_dir())?;
-    let name = args.str_or("model", "alexnet");
+    let models = ModelRegistry::for_config(cfg)?;
+    let name = args.str_or("model", default_model(cfg));
     let app =
         hapi::profiler::AppProfile::new(models.get(&name)?, cfg.scale);
     let mut t = Table::new(
@@ -168,8 +174,15 @@ fn split(cfg: &HapiConfig, args: &Args) -> hapi::Result<()> {
     Ok(())
 }
 
+fn default_model(cfg: &HapiConfig) -> &'static str {
+    match cfg.backend {
+        BackendKind::Hlo => "alexnet",
+        BackendKind::Sim => "simnet",
+    }
+}
+
 fn train(cfg: HapiConfig, args: &Args) -> hapi::Result<()> {
-    let model = args.str_or("model", "alexnet");
+    let model = args.str_or("model", default_model(&cfg));
     let samples = args.parse_or("samples", 1000usize)?;
     let epochs = args.parse_or("epochs", 1usize)?;
     let device = if args.flag("weak-client") {
@@ -180,29 +193,17 @@ fn train(cfg: HapiConfig, args: &Args) -> hapi::Result<()> {
     let bed = Testbed::launch(cfg)?;
     let (ds, labels) = bed.dataset("train-ds", &model, samples)?;
     let client = if args.flag("baseline") {
-        construct::baseline(
-            bed.app(&model)?,
-            bed.artifacts(&model)?,
-            bed.cfg.clone(),
-            bed.addr(),
-            bed.link.clone(),
-            device,
-        )
+        bed.baseline_client(&model, device)?
     } else {
-        construct::hapi(
-            bed.app(&model)?,
-            bed.artifacts(&model)?,
-            bed.cfg.clone(),
-            bed.addr(),
-            bed.link.clone(),
-            device,
-        )
+        bed.hapi_client(&model, device)?
     };
     println!(
-        "model={model} split_idx={} freeze={} train_batch={} samples={samples}",
+        "model={model} split_idx={} freeze={} train_batch={} \
+         pipeline_depth={} samples={samples}",
         client.split.split_idx,
         client.app.freeze_idx(),
-        bed.cfg.train_batch
+        bed.cfg.train_batch,
+        bed.cfg.pipeline_depth,
     );
     let start = std::time::Instant::now();
     for epoch in 0..epochs {
@@ -225,10 +226,10 @@ fn train(cfg: HapiConfig, args: &Args) -> hapi::Result<()> {
 
 fn serve(cfg: HapiConfig) -> hapi::Result<()> {
     let bed = Testbed::launch(cfg)?;
-    for m in TABLE1_MODELS {
-        if bed.models.get(m).is_ok() {
-            bed.server.warm(m)?;
-        }
+    let names: Vec<String> =
+        bed.models.names().iter().map(|s| s.to_string()).collect();
+    for m in &names {
+        bed.server.warm(m)?;
     }
     println!("hapi server listening on {}", bed.addr());
     println!("(^C to stop)");

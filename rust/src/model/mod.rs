@@ -8,11 +8,13 @@
 
 pub mod profiles;
 pub mod registry;
+pub mod sim_profiles;
 
 pub use profiles::{
     ArtifactsMeta, DatasetPreset, ModelProfile, ScaleMeta, UnitKind, UnitMeta,
 };
 pub use registry::ModelRegistry;
+pub use sim_profiles::SIM_MODELS;
 
 /// The seven models of Table 1 in the paper's order.
 pub const TABLE1_MODELS: [&str; 7] = [

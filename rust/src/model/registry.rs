@@ -46,6 +46,38 @@ impl ModelRegistry {
         Ok(ModelRegistry { models })
     }
 
+    /// Registry over profiles constructed in code (no files).
+    pub fn from_profiles(
+        profiles: impl IntoIterator<Item = Arc<ModelProfile>>,
+    ) -> ModelRegistry {
+        let models = profiles
+            .into_iter()
+            .map(|p| (p.name.clone(), p))
+            .collect();
+        ModelRegistry { models }
+    }
+
+    /// The built-in synthetic profiles the SimBackend executes — usable
+    /// on a fresh clone with no artifacts present.
+    pub fn simulated() -> ModelRegistry {
+        Self::from_profiles([
+            super::sim_profiles::simnet(),
+            super::sim_profiles::simdeep(),
+        ])
+    }
+
+    /// The registry `cfg` selects: AOT JSON profiles (HLO) or the
+    /// built-in synthetic set (sim — no files needed).  The single
+    /// selection path for the harness and the CLI.
+    pub fn for_config(cfg: &crate::config::HapiConfig) -> Result<ModelRegistry> {
+        match cfg.backend {
+            crate::config::BackendKind::Hlo => {
+                Self::load_dir(cfg.profiles_dir())
+            }
+            crate::config::BackendKind::Sim => Ok(Self::simulated()),
+        }
+    }
+
     pub fn get(&self, name: &str) -> Result<Arc<ModelProfile>> {
         self.models.get(name).cloned().ok_or_else(|| {
             Error::Artifact(format!(
@@ -80,5 +112,14 @@ mod tests {
     fn missing_dir_is_artifact_error() {
         let err = ModelRegistry::load_dir("/nonexistent/profiles").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn simulated_registry_needs_no_files() {
+        let r = ModelRegistry::simulated();
+        assert!(r.get("simnet").is_ok());
+        assert!(r.get("simdeep").is_ok());
+        assert!(r.get("alexnet").is_err());
+        assert_eq!(r.len(), 2);
     }
 }

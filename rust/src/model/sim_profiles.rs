@@ -1,0 +1,269 @@
+//! Built-in synthetic model profiles for the artifact-free SimBackend.
+//!
+//! `make artifacts` emits the real Table-1 profiles (JSON) from the AOT
+//! pipeline; these constructors synthesize structurally equivalent
+//! [`ModelProfile`]s **in code** so a fresh clone can run the full stack
+//! (split selection, memory model, batch adaptation, pipelined client)
+//! deterministically with [`crate::runtime::SimExecutor`].  Shapes are
+//! chosen so the interesting regimes exist at tiny scale:
+//!
+//! - early units *grow* the activation (never split candidates, like the
+//!   real conv stems in Fig 2);
+//! - later units shrink it monotonically, giving Algorithm 1 a ladder of
+//!   candidates to walk toward the freeze layer as bandwidth drops
+//!   (Table 4 dynamics);
+//! - the freeze output is wide enough (32 features) for the linear sim
+//!   tail to separate the synthetic classes, so loss curves fall.
+//!
+//! The artifact manifest entries are placeholders — the SimBackend never
+//! opens them; they only keep [`ModelProfile`]'s invariants intact.
+
+use std::sync::Arc;
+
+use super::profiles::{
+    ArtifactsMeta, ModelProfile, ScaleMeta, UnitKind, UnitMeta,
+};
+
+/// Names of the built-in sim profiles, in registry order.
+pub const SIM_MODELS: [&str; 2] = ["simnet", "simdeep"];
+
+struct UnitSpec {
+    name: &'static str,
+    kind: UnitKind,
+    out_shape: &'static [usize],
+    param_bytes: u64,
+    flops_per_sample: u64,
+}
+
+fn build(
+    name: &str,
+    param_seed: u64,
+    input_shape: &[usize],
+    num_classes: usize,
+    freeze_idx: usize,
+    micro_batch: usize,
+    units: &[UnitSpec],
+) -> Arc<ModelProfile> {
+    let metas: Vec<UnitMeta> = units
+        .iter()
+        .enumerate()
+        .map(|(i, u)| UnitMeta {
+            index: i + 1,
+            name: u.name.to_string(),
+            kind: u.kind,
+            out_shape: u.out_shape.to_vec(),
+            out_bytes_per_sample: 4 * u.out_shape.iter().product::<usize>()
+                as u64,
+            param_count: u.param_bytes / 4,
+            param_bytes: u.param_bytes,
+            flops_per_sample: u.flops_per_sample,
+        })
+        .collect();
+    let scale_meta = ScaleMeta {
+        input_shape: input_shape.to_vec(),
+        input_bytes_per_sample: 4 * input_shape.iter().product::<usize>()
+            as u64,
+        num_classes,
+        units: metas,
+    };
+    let n = units.len();
+    Arc::new(ModelProfile {
+        name: name.to_string(),
+        num_units: n,
+        freeze_idx,
+        micro_batch,
+        param_seed,
+        tiny: scale_meta.clone(),
+        // Sim profiles execute at one scale; the paper-scale view aliases
+        // it (analytic figures for sim models are not a reproduction
+        // target).
+        paper: scale_meta,
+        artifacts: ArtifactsMeta {
+            units: (1..=n).map(|i| (i, format!("sim_unit_{i:03}"), 1)).collect(),
+            train_grads: "sim_train_grads".into(),
+            apply_update: "sim_apply_update".into(),
+            tail_input_shape: units[freeze_idx - 1].out_shape.to_vec(),
+            tail_num_params: 2,
+        },
+        param_files: vec![vec!["sim".into()]; n],
+        params_dir: "params".into(),
+    })
+}
+
+/// A 6-unit convnet-shaped profile: input 3×8×8 (768 B/sample), split
+/// candidates at units 3/4/5, freeze at 5, linear tail over 32 features.
+pub fn simnet() -> Arc<ModelProfile> {
+    build(
+        "simnet",
+        4242,
+        &[3, 8, 8],
+        10,
+        5,
+        10,
+        &[
+            UnitSpec {
+                name: "conv1",
+                kind: UnitKind::Conv,
+                out_shape: &[16, 8, 8], // 4096 B: grows, not a candidate
+                param_bytes: 6 << 10,
+                flops_per_sample: 2_000_000,
+            },
+            UnitSpec {
+                name: "conv2",
+                kind: UnitKind::Conv,
+                out_shape: &[8, 8, 8], // 2048 B: still above input
+                param_bytes: 12 << 10,
+                flops_per_sample: 1_500_000,
+            },
+            UnitSpec {
+                name: "block3",
+                kind: UnitKind::Block,
+                out_shape: &[96], // 384 B: first candidate
+                param_bytes: 24 << 10,
+                flops_per_sample: 800_000,
+            },
+            UnitSpec {
+                name: "conv4",
+                kind: UnitKind::Conv,
+                out_shape: &[48], // 192 B
+                param_bytes: 16 << 10,
+                flops_per_sample: 400_000,
+            },
+            UnitSpec {
+                name: "pool5",
+                kind: UnitKind::Pool,
+                out_shape: &[32], // 128 B: the freeze layer
+                param_bytes: 2 << 10,
+                flops_per_sample: 100_000,
+            },
+            UnitSpec {
+                name: "fc6",
+                kind: UnitKind::Fc,
+                out_shape: &[10],
+                param_bytes: 1320,
+                flops_per_sample: 50_000,
+            },
+        ],
+    )
+}
+
+/// A deeper 10-unit profile with a longer candidate ladder (exercises
+/// split re-decision across more steps) and a heavier stem.
+pub fn simdeep() -> Arc<ModelProfile> {
+    build(
+        "simdeep",
+        52_52,
+        &[3, 8, 8],
+        8,
+        8,
+        10,
+        &[
+            UnitSpec {
+                name: "conv1",
+                kind: UnitKind::Conv,
+                out_shape: &[24, 8, 8],
+                param_bytes: 8 << 10,
+                flops_per_sample: 3_000_000,
+            },
+            UnitSpec {
+                name: "block2",
+                kind: UnitKind::Block,
+                out_shape: &[16, 8, 8],
+                param_bytes: 16 << 10,
+                flops_per_sample: 2_500_000,
+            },
+            UnitSpec {
+                name: "block3",
+                kind: UnitKind::Block,
+                out_shape: &[8, 8, 8],
+                param_bytes: 24 << 10,
+                flops_per_sample: 2_000_000,
+            },
+            UnitSpec {
+                name: "conv4",
+                kind: UnitKind::Conv,
+                out_shape: &[128], // 512 B: first candidate
+                param_bytes: 32 << 10,
+                flops_per_sample: 1_200_000,
+            },
+            UnitSpec {
+                name: "block5",
+                kind: UnitKind::Block,
+                out_shape: &[96],
+                param_bytes: 24 << 10,
+                flops_per_sample: 900_000,
+            },
+            UnitSpec {
+                name: "conv6",
+                kind: UnitKind::Conv,
+                out_shape: &[64],
+                param_bytes: 16 << 10,
+                flops_per_sample: 600_000,
+            },
+            UnitSpec {
+                name: "pool7",
+                kind: UnitKind::Pool,
+                out_shape: &[48],
+                param_bytes: 4 << 10,
+                flops_per_sample: 200_000,
+            },
+            UnitSpec {
+                name: "norm8",
+                kind: UnitKind::Norm,
+                out_shape: &[32], // freeze layer
+                param_bytes: 2 << 10,
+                flops_per_sample: 100_000,
+            },
+            UnitSpec {
+                name: "fc9",
+                kind: UnitKind::Fc,
+                out_shape: &[16],
+                param_bytes: 2 << 10,
+                flops_per_sample: 60_000,
+            },
+            UnitSpec {
+                name: "fc10",
+                kind: UnitKind::Fc,
+                out_shape: &[8],
+                param_bytes: 528,
+                flops_per_sample: 30_000,
+            },
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::profiler::AppProfile;
+    use crate::split::candidates;
+
+    #[test]
+    fn simnet_has_a_candidate_ladder() {
+        let app = AppProfile::new(simnet(), Scale::Tiny);
+        assert_eq!(candidates(&app), vec![3, 4, 5]);
+        assert_eq!(app.freeze_idx(), 5);
+        assert_eq!(app.input_bytes(), 768);
+    }
+
+    #[test]
+    fn simdeep_freeze_before_tail() {
+        let p = simdeep();
+        assert!(p.freeze_idx < p.num_units);
+        let app = AppProfile::new(p, Scale::Tiny);
+        assert!(!candidates(&app).is_empty());
+    }
+
+    #[test]
+    fn out_bytes_match_shapes() {
+        for p in [simnet(), simdeep()] {
+            for u in &p.tiny.units {
+                assert_eq!(
+                    u.out_bytes_per_sample,
+                    4 * u.out_shape.iter().product::<usize>() as u64
+                );
+            }
+        }
+    }
+}

@@ -10,13 +10,13 @@ use std::time::{Duration, Instant};
 
 pub struct TokenBucket {
     state: Mutex<State>,
-    rate: f64,  // tokens (bytes) per second
-    burst: f64, // bucket depth
 }
 
 struct State {
     tokens: f64,
     last: Instant,
+    rate: f64,  // tokens (bytes) per second
+    burst: f64, // bucket depth
 }
 
 impl TokenBucket {
@@ -28,9 +28,9 @@ impl TokenBucket {
             state: Mutex::new(State {
                 tokens: burst as f64,
                 last: Instant::now(),
+                rate: rate as f64,
+                burst: burst.max(1) as f64,
             }),
-            rate: rate as f64,
-            burst: burst.max(1) as f64,
         }
     }
 
@@ -47,13 +47,13 @@ impl TokenBucket {
             let mut s = self.state.lock().unwrap();
             let now = Instant::now();
             let elapsed = now.duration_since(s.last).as_secs_f64();
-            s.tokens = (s.tokens + elapsed * self.rate).min(self.burst);
+            s.tokens = (s.tokens + elapsed * s.rate).min(s.burst);
             s.last = now;
             s.tokens -= n as f64;
             if s.tokens >= 0.0 {
                 Duration::ZERO
             } else {
-                Duration::from_secs_f64(-s.tokens / self.rate)
+                Duration::from_secs_f64(-s.tokens / s.rate)
             }
         };
         if !wait.is_zero() {
@@ -62,7 +62,34 @@ impl TokenBucket {
     }
 
     pub fn rate(&self) -> u64 {
-        self.rate as u64
+        self.state.lock().unwrap().rate as u64
+    }
+
+    /// Re-shape the bucket mid-run (the paper's `tc` rate changes in
+    /// §7.4 / Table 4).  The burst shrinks/grows to ~50 ms of the new
+    /// line rate and accumulated credit is clamped so an old fast-rate
+    /// burst cannot leak through the new slow rate.
+    ///
+    /// The burst floor here is deliberately 1 KiB, tighter than
+    /// [`TokenBucket::with_default_burst`]'s 64 KiB cold-start floor: a
+    /// re-shaped link is already hot, and granting it a fresh 64 KiB of
+    /// credit would let transfers ride the *old* rate's burst for a
+    /// while, masking the very rate change the experiment (and the
+    /// client's per-window bandwidth re-measurement) is meant to
+    /// observe.  A link *constructed* at the low rate keeps the larger
+    /// cold-start burst, so the two are intentionally not like-for-like
+    /// in their first ~64 KiB.
+    pub fn set_rate(&self, rate: u64) {
+        assert!(rate > 0);
+        let mut s = self.state.lock().unwrap();
+        // Settle the refill at the old rate up to now, then switch.
+        let now = Instant::now();
+        let elapsed = now.duration_since(s.last).as_secs_f64();
+        s.tokens = (s.tokens + elapsed * s.rate).min(s.burst);
+        s.last = now;
+        s.rate = rate as f64;
+        s.burst = ((rate as f64) * 0.05).max(1024.0);
+        s.tokens = s.tokens.min(s.burst);
     }
 }
 
@@ -99,6 +126,23 @@ mod tests {
         let start = Instant::now();
         bucket.take(512 * 1024); // within burst
         assert!(start.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn set_rate_takes_effect_and_clamps_burst() {
+        let bucket = TokenBucket::new(100 * 1024 * 1024, 1024 * 1024);
+        bucket.take(64 * 1024); // within burst, instant
+        bucket.set_rate(64 * 1024); // 64 KiB/s
+        assert_eq!(bucket.rate(), 64 * 1024);
+        // The old 1 MiB burst must not leak through: 64 KiB now costs
+        // about a second.
+        let start = Instant::now();
+        bucket.take(64 * 1024);
+        assert!(
+            start.elapsed() >= Duration::from_millis(500),
+            "old burst leaked: {:?}",
+            start.elapsed()
+        );
     }
 
     #[test]

@@ -94,6 +94,15 @@ impl Link {
     pub fn rate(&self) -> Option<u64> {
         self.bucket.as_ref().map(|b| b.rate())
     }
+
+    /// Re-shape a shaped link mid-run (Table 4's bandwidth changes); a
+    /// no-op on unshaped links.  All clones of this link see the new
+    /// rate — they share the bucket, like flows behind one `tc` qdisc.
+    pub fn set_rate(&self, rate: u64) {
+        if let Some(bucket) = &self.bucket {
+            bucket.set_rate(rate);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +131,18 @@ mod tests {
         link.recv(1024 * 1024); // 1 MiB beyond ~200 KiB burst
         let elapsed = start.elapsed().as_secs_f64();
         assert!(elapsed > 0.1, "elapsed {elapsed}");
+    }
+
+    #[test]
+    fn set_rate_is_shared_across_clones() {
+        let link = Link::shaped(100 * 1024 * 1024);
+        let clone = link.clone();
+        clone.set_rate(1234);
+        assert_eq!(link.rate(), Some(1234));
+        // Unshaped links ignore it.
+        let un = Link::unshaped();
+        un.set_rate(99);
+        assert_eq!(un.rate(), None);
     }
 
     #[test]

@@ -15,6 +15,9 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::model::ModelProfile;
 
+#[cfg(not(feature = "pjrt"))]
+use super::xla_shim as xla;
+
 use super::device::DeviceKind;
 use super::engine::{Engine, Exe};
 use super::tensor::Tensor;

@@ -1,0 +1,155 @@
+//! Execution-backend dispatch: real AOT HLO vs the artifact-free sim.
+//!
+//! Client and server code is written against [`ExecBackend`]; the two
+//! variants share the exact same contract (shape-preserving forward
+//! segments, summed-gradient training micro-batches, mean-reduced SGD
+//! updates), so every invariant test that passes on the sim backend
+//! exercises the same orchestration paths the HLO backend uses.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::{BackendKind, HapiConfig};
+use crate::error::Result;
+use crate::model::ModelProfile;
+
+use super::artifact::ModelArtifacts;
+use super::device::DeviceKind;
+use super::engine::Engine;
+use super::sim::SimExecutor;
+use super::tensor::Tensor;
+
+#[derive(Clone)]
+pub enum ExecBackend {
+    /// Real AOT HLO through the PJRT engine (requires `make artifacts`
+    /// and the `pjrt` feature for actual execution).
+    Hlo(Arc<ModelArtifacts>),
+    /// Deterministic in-process simulation (no artifacts required).
+    Sim(Arc<SimExecutor>),
+}
+
+impl From<Arc<ModelArtifacts>> for ExecBackend {
+    fn from(arts: Arc<ModelArtifacts>) -> Self {
+        ExecBackend::Hlo(arts)
+    }
+}
+
+impl From<Arc<SimExecutor>> for ExecBackend {
+    fn from(sim: Arc<SimExecutor>) -> Self {
+        ExecBackend::Sim(sim)
+    }
+}
+
+impl ExecBackend {
+    /// Construct the backend `cfg` selects for `profile` — the single
+    /// construction path shared by the client-side harness and the Hapi
+    /// server, so the two tiers can never diverge on backend choice.
+    pub fn for_model(
+        cfg: &HapiConfig,
+        engine: &Arc<Engine>,
+        profile: Arc<ModelProfile>,
+    ) -> Result<ExecBackend> {
+        Ok(match cfg.backend {
+            BackendKind::Hlo => {
+                let dir = cfg.model_dir(&profile.name);
+                ExecBackend::Hlo(Arc::new(ModelArtifacts::load(
+                    engine.clone(),
+                    profile,
+                    dir,
+                )?))
+            }
+            BackendKind::Sim => ExecBackend::Sim(SimExecutor::new(
+                profile,
+                cfg.scale,
+                cfg.sim_compute_gflops,
+            )),
+        })
+    }
+
+    /// The model profile this backend executes.
+    pub fn profile(&self) -> &Arc<ModelProfile> {
+        match self {
+            ExecBackend::Hlo(a) => &a.profile,
+            ExecBackend::Sim(s) => s.profile(),
+        }
+    }
+
+    pub fn micro_batch(&self) -> usize {
+        match self {
+            ExecBackend::Hlo(a) => a.micro_batch(),
+            ExecBackend::Sim(s) => s.micro_batch(),
+        }
+    }
+
+    pub fn initial_tail_params(&self) -> Vec<Tensor> {
+        match self {
+            ExecBackend::Hlo(a) => a.initial_tail_params(),
+            ExecBackend::Sim(s) => s.initial_tail_params(),
+        }
+    }
+
+    pub fn forward_segment(
+        &self,
+        input: &Tensor,
+        start: usize,
+        end: usize,
+        device: DeviceKind,
+        unit_times: Option<&mut Vec<Duration>>,
+    ) -> Result<Tensor> {
+        match self {
+            ExecBackend::Hlo(a) => {
+                a.forward_segment(input, start, end, device, unit_times)
+            }
+            ExecBackend::Sim(s) => {
+                s.forward_segment(input, start, end, device, unit_times)
+            }
+        }
+    }
+
+    pub fn train_grads(
+        &self,
+        x_feat: &Tensor,
+        labels: &Tensor,
+        mask: &Tensor,
+        tail_params: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f32, f32)> {
+        match self {
+            ExecBackend::Hlo(a) => {
+                a.train_grads(x_feat, labels, mask, tail_params)
+            }
+            ExecBackend::Sim(s) => {
+                s.train_grads(x_feat, labels, mask, tail_params)
+            }
+        }
+    }
+
+    pub fn apply_update(
+        &self,
+        lr: f32,
+        count: f32,
+        tail_params: &[Tensor],
+        grad_sums: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        match self {
+            ExecBackend::Hlo(a) => {
+                a.apply_update(lr, count, tail_params, grad_sums)
+            }
+            ExecBackend::Sim(s) => {
+                s.apply_update(lr, count, tail_params, grad_sums)
+            }
+        }
+    }
+
+    /// Pre-compile/pre-warm whatever the backend lazily builds.
+    pub fn warm(&self) -> Result<()> {
+        match self {
+            ExecBackend::Hlo(a) => a.warm(),
+            ExecBackend::Sim(_) => Ok(()),
+        }
+    }
+
+    /// Element-wise gradient-sum accumulation (shared host-side path).
+    pub fn accumulate(acc: &mut [Tensor], src: &[Tensor]) -> Result<()> {
+        ModelArtifacts::accumulate(acc, src)
+    }
+}

@@ -6,16 +6,28 @@
 //!   executable, with a process-wide executable cache;
 //! - [`artifact`] — per-model artifact bundles (unit executables, initial
 //!   parameters, train-step executables) and chunked segment execution;
+//! - [`sim`]      — the artifact-free SimBackend: deterministic
+//!   per-sample execution derived from the profile tables alone (no
+//!   PJRT, no HLO, no `make artifacts`);
+//! - [`backend`]  — [`ExecBackend`], the HLO/sim dispatch the client and
+//!   server are written against;
 //! - [`device`]   — the **simulated accelerator**: a memory ledger driving
 //!   OOM semantics plus a per-unit-kind speed model (DESIGN.md §2
-//!   documents why this substitution preserves the paper's behaviour).
+//!   documents why this substitution preserves the paper's behaviour);
+//! - [`xla_shim`] — compile-time stand-in for the vendored `xla` crate
+//!   when the `pjrt` feature is off (the offline default).
 
 pub mod artifact;
+pub mod backend;
 pub mod device;
 pub mod engine;
+pub mod sim;
 pub mod tensor;
+pub mod xla_shim;
 
 pub use artifact::ModelArtifacts;
+pub use backend::ExecBackend;
 pub use device::{DeviceKind, DeviceSim, Lease};
 pub use engine::Engine;
+pub use sim::SimExecutor;
 pub use tensor::{DType, Tensor};

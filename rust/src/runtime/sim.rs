@@ -1,0 +1,531 @@
+//! SimBackend: deterministic, artifact-free model execution.
+//!
+//! [`SimExecutor`] mirrors the call surface of
+//! [`super::artifact::ModelArtifacts`] (forward segments, training
+//! micro-batches, SGD updates) but needs **no** HLO artifacts, no PJRT
+//! and no parameter files: everything derives from the analytic
+//! [`ModelProfile`] tables plus the profile's `param_seed`.  It exists so
+//! the full stack — COS, proxy, Hapi server, pipelined client — runs end
+//! to end in tests and benches on a fresh clone (`make artifacts` never
+//! required), with these properties:
+//!
+//! - **Deterministic**: same inputs → bit-identical outputs, in-process.
+//!   The pipeline's delivery-order invariants are checked against this
+//!   (loss trajectories must be bitwise stable across pipeline depths).
+//! - **Per-sample**: every unit maps each sample independently, so
+//!   micro-batch chunking, zero-padding and re-concatenation are exact
+//!   no-ops on the values — the same §5.1 decoupling property the real
+//!   AOT units have.
+//! - **Learnable**: units compute sparse random projections (not plain
+//!   means), so class-template structure in the synthetic datasets
+//!   survives to the features and the linear tail separates it; loss
+//!   curves visibly fall like the HLO path's.
+//! - **Time-modeled** (optional): with a configured FLOP rate the
+//!   executor sleeps each call's modeled duration
+//!   (`flops_per_sample × batch / rate`), giving benches a realistic
+//!   compute/communication balance without real kernels.  Sleeps never
+//!   affect computed values.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::Scale;
+use crate::error::{Error, Result};
+use crate::model::{ModelProfile, ScaleMeta};
+use crate::util::rng::Rng;
+
+use super::device::DeviceKind;
+use super::tensor::{DType, Tensor};
+
+/// Per-output-element coefficients of one unit's sparse projection.
+struct UnitCoef {
+    /// `(input index a, input index b, gain a, gain b, bias)` per output
+    /// element; indices are reduced modulo the actual input length.
+    taps: Vec<(usize, usize, f32, f32, f32)>,
+    out_elems: usize,
+}
+
+pub struct SimExecutor {
+    profile: Arc<ModelProfile>,
+    meta: ScaleMeta,
+    coefs: Vec<UnitCoef>,
+    /// Modeled compute throughput (FLOP/s); `None` = instantaneous.
+    flops_per_sec: Option<f64>,
+    tail_dim: usize,
+}
+
+impl SimExecutor {
+    /// `gflops <= 0` disables time modeling (pure-value mode for the
+    /// deterministic invariant tests).
+    pub fn new(profile: Arc<ModelProfile>, scale: Scale, gflops: f64) -> Arc<SimExecutor> {
+        let meta = profile.at_scale(scale).clone();
+        let mut coefs = Vec::with_capacity(meta.units.len());
+        for u in &meta.units {
+            let out_elems: usize = u.out_shape.iter().product::<usize>().max(1);
+            let mut rng = Rng::new(
+                profile
+                    .param_seed
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(u.index as u64),
+            );
+            let taps = (0..out_elems)
+                .map(|_| {
+                    (
+                        rng.next_u64() as usize,
+                        rng.next_u64() as usize,
+                        rng.normal() * 0.9,
+                        rng.normal() * 0.9,
+                        rng.normal() * 0.1,
+                    )
+                })
+                .collect();
+            coefs.push(UnitCoef { taps, out_elems });
+        }
+        let tail_dim = meta.units[profile.freeze_idx - 1]
+            .out_shape
+            .iter()
+            .product::<usize>()
+            .max(1);
+        Arc::new(SimExecutor {
+            profile,
+            meta,
+            coefs,
+            flops_per_sec: if gflops > 0.0 {
+                Some(gflops * 1e9)
+            } else {
+                None
+            },
+            tail_dim,
+        })
+    }
+
+    pub fn profile(&self) -> &Arc<ModelProfile> {
+        &self.profile
+    }
+
+    pub fn micro_batch(&self) -> usize {
+        self.profile.micro_batch
+    }
+
+    /// Number of classes the tail classifier separates.
+    pub fn num_classes(&self) -> usize {
+        self.meta.num_classes
+    }
+
+    fn modeled_sleep(&self, flops: f64) {
+        if let Some(rate) = self.flops_per_sec {
+            let secs = flops / rate;
+            if secs > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(secs));
+            }
+        }
+    }
+
+    /// Deterministic tail parameters: `[W (classes × feat), b (classes)]`.
+    pub fn initial_tail_params(&self) -> Vec<Tensor> {
+        let classes = self.meta.num_classes;
+        let feat = self.tail_dim;
+        let mut rng = Rng::new(self.profile.param_seed ^ 0x7417_5EED);
+        let w: Vec<f32> =
+            (0..classes * feat).map(|_| rng.normal() * 0.05).collect();
+        vec![
+            Tensor::from_f32(vec![classes, feat], &w),
+            Tensor::zeros(DType::F32, vec![classes]),
+        ]
+    }
+
+    /// Forward through units `[start, end]` (1-based, inclusive), any
+    /// batch size.  Mirrors `ModelArtifacts::forward_segment` semantics:
+    /// output dims are `[n, <unit end's out_shape>]`.
+    pub fn forward_segment(
+        &self,
+        input: &Tensor,
+        start: usize,
+        end: usize,
+        device: DeviceKind,
+        mut unit_times: Option<&mut Vec<Duration>>,
+    ) -> Result<Tensor> {
+        if start < 1 || end > self.profile.num_units || start > end {
+            return Err(Error::other(format!(
+                "bad segment [{start}, {end}] for {}",
+                self.profile.name
+            )));
+        }
+        if input.dims.is_empty() {
+            return Err(Error::other("sim forward needs a batch axis"));
+        }
+        if let Some(times) = unit_times.as_deref_mut() {
+            times.resize(self.profile.num_units + 1, Duration::ZERO);
+        }
+        let n = input.dims[0];
+        let mut cur = input.as_f32()?;
+        let mut cur_elems = if n == 0 { 0 } else { cur.len() / n };
+        // Shape check the HLO backend gets for free from XLA: the input
+        // must be unit `start`'s expected input (the model input for
+        // start == 1, the previous unit's output otherwise).  The sparse
+        // taps would silently "work" on any width, hiding split
+        // bookkeeping bugs the sim tests exist to catch.
+        let want_elems: usize = if start == 1 {
+            self.meta.input_shape.iter().product()
+        } else {
+            self.meta.units[start - 2].out_shape.iter().product()
+        };
+        if n > 0 && cur_elems != want_elems {
+            return Err(Error::other(format!(
+                "sim forward: unit {start} of {} expects {want_elems} \
+                 elements/sample, got {cur_elems}",
+                self.profile.name
+            )));
+        }
+        for i in start..=end {
+            let coef = &self.coefs[i - 1];
+            let kind = self.meta.units[i - 1].kind;
+            let out_elems = coef.out_elems;
+            let t0 = Instant::now();
+            let mut next = vec![0.0f32; n * out_elems];
+            for s in 0..n {
+                let row = &cur[s * cur_elems..(s + 1) * cur_elems];
+                let out = &mut next[s * out_elems..(s + 1) * out_elems];
+                for (j, &(a, b, ga, gb, bias)) in
+                    coef.taps.iter().enumerate()
+                {
+                    let xa = row[a % cur_elems.max(1)];
+                    let xb = row[b % cur_elems.max(1)];
+                    let v = ga * xa + gb * xb + bias;
+                    // Algebraic sigmoid: bounded, smooth, and pure
+                    // arithmetic (bit-deterministic everywhere).
+                    out[j] = v / (1.0 + v.abs());
+                }
+            }
+            self.modeled_sleep(
+                self.meta.units[i - 1].flops_per_sample as f64 * n as f64,
+            );
+            let real = t0.elapsed();
+            device.charge(kind, real);
+            if let Some(times) = unit_times.as_deref_mut() {
+                times[i] += real.mul_f64(device.slowdown(kind).max(1.0));
+            }
+            cur = next;
+            cur_elems = out_elems;
+        }
+        let mut dims = vec![n];
+        dims.extend(&self.meta.units[end - 1].out_shape);
+        Ok(Tensor::from_f32(dims, &cur))
+    }
+
+    /// One training micro-batch over the linear tail: softmax cross
+    /// entropy.  Returns `(summed grads [dW, db], loss sum, correct
+    /// count)` — the same accumulate-then-mean contract as the HLO
+    /// `train_grads` artifact.
+    pub fn train_grads(
+        &self,
+        x_feat: &Tensor,
+        labels: &Tensor,
+        mask: &Tensor,
+        tail_params: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f32, f32)> {
+        if tail_params.len() != 2 {
+            return Err(Error::other(
+                "sim tail expects [weights, bias] parameters",
+            ));
+        }
+        let mb = x_feat.dims[0];
+        let feat = if mb == 0 {
+            0
+        } else {
+            x_feat.element_count() / mb
+        };
+        if feat != self.tail_dim {
+            return Err(Error::other(format!(
+                "sim tail feature dim {feat} != expected {}",
+                self.tail_dim
+            )));
+        }
+        let classes = self.meta.num_classes;
+        let x = x_feat.as_f32()?;
+        let y = labels.as_i32()?;
+        let m = mask.as_f32()?;
+        let w = tail_params[0].as_f32()?;
+        let b = tail_params[1].as_f32()?;
+        if w.len() != classes * feat || b.len() != classes {
+            return Err(Error::other("sim tail parameter shape mismatch"));
+        }
+
+        let mut dw = vec![0.0f32; classes * feat];
+        let mut db = vec![0.0f32; classes];
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut logits = vec![0.0f32; classes];
+        for s in 0..mb {
+            if m[s] == 0.0 {
+                continue; // zero-padded row
+            }
+            let row = &x[s * feat..(s + 1) * feat];
+            for (c, l) in logits.iter_mut().enumerate() {
+                let wrow = &w[c * feat..(c + 1) * feat];
+                let mut acc = b[c];
+                for k in 0..feat {
+                    acc += wrow[k] * row[k];
+                }
+                *l = acc;
+            }
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for l in &logits {
+                denom += (l - max).exp();
+            }
+            let yi = y[s] as usize;
+            if yi >= classes {
+                return Err(Error::other(format!(
+                    "label {yi} out of range (classes {classes})"
+                )));
+            }
+            loss_sum += denom.ln() - (logits[yi] - max);
+            // First strictly-greatest logit wins: deterministic argmax.
+            let mut best = 0usize;
+            for (c, l) in logits.iter().enumerate() {
+                if *l > logits[best] {
+                    best = c;
+                }
+            }
+            if best == yi {
+                correct += 1.0;
+            }
+            for c in 0..classes {
+                let p = (logits[c] - max).exp() / denom;
+                let g = p - if c == yi { 1.0 } else { 0.0 };
+                db[c] += g;
+                let dwrow = &mut dw[c * feat..(c + 1) * feat];
+                for k in 0..feat {
+                    dwrow[k] += g * row[k];
+                }
+            }
+        }
+        // Modeled training cost: forward+backward over the tail ≈ 3× the
+        // tail units' forward FLOPs (standard backprop accounting).
+        let tail_flops: u64 = self.meta.units[self.profile.freeze_idx..]
+            .iter()
+            .map(|u| u.flops_per_sample)
+            .sum();
+        self.modeled_sleep(3.0 * tail_flops as f64 * mb as f64);
+        Ok((
+            vec![
+                Tensor::from_f32(vec![classes, feat], &dw),
+                Tensor::from_f32(vec![classes], &db),
+            ],
+            loss_sum,
+            correct,
+        ))
+    }
+
+    /// SGD from accumulated sums: `p - lr * g / count` (same contract as
+    /// the `apply_update` HLO artifact).
+    pub fn apply_update(
+        &self,
+        lr: f32,
+        count: f32,
+        tail_params: &[Tensor],
+        grad_sums: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        if tail_params.len() != grad_sums.len() {
+            return Err(Error::other("params/grads arity mismatch"));
+        }
+        tail_params
+            .iter()
+            .zip(grad_sums)
+            .map(|(p, g)| {
+                let pv = p.as_f32()?;
+                let gv = g.as_f32()?;
+                if pv.len() != gv.len() {
+                    return Err(Error::other("apply_update shape mismatch"));
+                }
+                let out: Vec<f32> = pv
+                    .iter()
+                    .zip(&gv)
+                    .map(|(p, g)| p - lr * g / count)
+                    .collect();
+                Ok(Tensor::from_f32(p.dims.clone(), &out))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sim_profiles;
+
+    fn exec() -> Arc<SimExecutor> {
+        SimExecutor::new(sim_profiles::simnet(), Scale::Tiny, 0.0)
+    }
+
+    fn batch(n: usize, seed: u64) -> Tensor {
+        let ex = exec();
+        let elems: usize = ex.meta.input_shape.iter().product();
+        let mut rng = Rng::new(seed);
+        let vals: Vec<f32> = (0..n * elems).map(|_| rng.normal()).collect();
+        let mut dims = vec![n];
+        dims.extend(&ex.meta.input_shape);
+        Tensor::from_f32(dims, &vals)
+    }
+
+    #[test]
+    fn forward_shapes_match_profile() {
+        let ex = exec();
+        let x = batch(6, 1);
+        for end in 1..=ex.profile.num_units {
+            let out = ex
+                .forward_segment(&x, 1, end, DeviceKind::Gpu, None)
+                .unwrap();
+            assert_eq!(out.dims[0], 6);
+            let want: usize =
+                ex.meta.units[end - 1].out_shape.iter().product();
+            assert_eq!(out.element_count(), 6 * want);
+        }
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_per_sample() {
+        let ex = exec();
+        let x = batch(8, 7);
+        let full = ex
+            .forward_segment(&x, 1, 3, DeviceKind::Gpu, None)
+            .unwrap();
+        let again = ex
+            .forward_segment(&x, 1, 3, DeviceKind::Gpu, None)
+            .unwrap();
+        assert_eq!(full, again);
+        // Chunked + padded + sliced must be bit-identical (decoupling).
+        let mut parts = Vec::new();
+        for off in (0..8).step_by(3) {
+            let len = 3.min(8 - off);
+            let chunk = x.slice_batch(off, len).pad_batch(3);
+            let out = ex
+                .forward_segment(&chunk, 1, 3, DeviceKind::Gpu, None)
+                .unwrap();
+            parts.push(out.slice_batch(0, len));
+        }
+        assert_eq!(Tensor::concat_batch(&parts).unwrap(), full);
+    }
+
+    #[test]
+    fn segment_composition_equals_full_run() {
+        let ex = exec();
+        let x = batch(4, 3);
+        let ab = ex
+            .forward_segment(&x, 1, 4, DeviceKind::Gpu, None)
+            .unwrap();
+        let a = ex
+            .forward_segment(&x, 1, 2, DeviceKind::Gpu, None)
+            .unwrap();
+        let b = ex
+            .forward_segment(&a, 3, 4, DeviceKind::Gpu, None)
+            .unwrap();
+        assert_eq!(ab, b);
+    }
+
+    #[test]
+    fn forward_rejects_mismatched_input_shape() {
+        let ex = exec();
+        let x = batch(4, 3);
+        // Raw model input fed to unit 3 (which expects unit 2's output
+        // width) must be rejected, like XLA would.
+        let err = ex
+            .forward_segment(&x, 3, 4, DeviceKind::Gpu, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("elements/sample"), "{err}");
+        // And a segment output fed back to unit 1 likewise.
+        let a = ex
+            .forward_segment(&x, 1, 2, DeviceKind::Gpu, None)
+            .unwrap();
+        assert!(ex
+            .forward_segment(&a, 1, 2, DeviceKind::Gpu, None)
+            .is_err());
+    }
+
+    #[test]
+    fn training_reduces_loss_on_separable_data() {
+        let ex = exec();
+        let classes = ex.num_classes();
+        let feat = ex.tail_dim;
+        // Synthetic separable features: class c clusters near its
+        // template direction.
+        let mut rng = Rng::new(11);
+        let templates: Vec<Vec<f32>> = (0..classes)
+            .map(|_| (0..feat).map(|_| rng.normal()).collect())
+            .collect();
+        let n = ex.micro_batch();
+        let make = |rng: &mut Rng| {
+            let mut xs = Vec::with_capacity(n * feat);
+            let mut ys = Vec::with_capacity(n);
+            for _ in 0..n {
+                let c = rng.usize_below(classes);
+                ys.push(c as i32);
+                for k in 0..feat {
+                    xs.push(templates[c][k] + 0.1 * rng.normal());
+                }
+            }
+            (
+                Tensor::from_f32(vec![n, feat], &xs),
+                Tensor::from_i32(vec![n], &ys),
+            )
+        };
+        let mask = Tensor::from_f32(vec![n], &vec![1.0; n]);
+        let mut tail = ex.initial_tail_params();
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let (x, y) = make(&mut rng);
+            let (grads, loss, _c) =
+                ex.train_grads(&x, &y, &mask, &tail).unwrap();
+            tail = ex.apply_update(0.5, n as f32, &tail, &grads).unwrap();
+            last = loss / n as f32;
+            first.get_or_insert(last);
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.7,
+            "loss should fall: first {first}, last {last}"
+        );
+    }
+
+    #[test]
+    fn masked_rows_do_not_contribute() {
+        let ex = exec();
+        let feat = ex.tail_dim;
+        let n = ex.micro_batch();
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> = (0..n * feat).map(|_| rng.normal()).collect();
+        let ys: Vec<i32> = (0..n)
+            .map(|_| rng.usize_below(ex.num_classes()) as i32)
+            .collect();
+        let x = Tensor::from_f32(vec![n, feat], &xs);
+        let y = Tensor::from_i32(vec![n], &ys);
+        let tail = ex.initial_tail_params();
+
+        let full = Tensor::from_f32(vec![n], &vec![1.0; n]);
+        let mut half_mask = vec![1.0f32; n];
+        for v in half_mask.iter_mut().skip(n / 2) {
+            *v = 0.0;
+        }
+        let half = Tensor::from_f32(vec![n], &half_mask);
+
+        let (_, l_full, _) = ex.train_grads(&x, &y, &full, &tail).unwrap();
+        let (_, l_half, _) = ex.train_grads(&x, &y, &half, &tail).unwrap();
+        assert!(l_half < l_full);
+
+        // A fully-padded trailing region is equivalent to slicing it off:
+        // recompute on the valid prefix only.
+        let x2 = x.slice_batch(0, n / 2).pad_batch(n);
+        let mut y2v = ys.clone();
+        for v in y2v.iter_mut().skip(n / 2) {
+            *v = 0;
+        }
+        let y2 = Tensor::from_i32(vec![n], &y2v);
+        let (g2, l2, _) = ex.train_grads(&x2, &y2, &half, &tail).unwrap();
+        let (g1, l1, _) = ex.train_grads(&x, &y, &half, &tail).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(g1[0], g2[0]);
+        assert_eq!(g1[1], g2[1]);
+    }
+}

@@ -12,6 +12,9 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use super::xla_shim as xla;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
     F32,

@@ -9,8 +9,10 @@
 //!    GPUs") and — when batch adaptation is on — solves Eq. 4 over the
 //!    queued requests after a short gather window, granting each request
 //!    a COS batch size and a memory lease;
-//! 3. executes feature extraction up to the split index on the real PJRT
-//!    engine, charging the simulated device;
+//! 3. executes feature extraction up to the split index — real AOT HLO
+//!    on the PJRT engine or the artifact-free SimBackend, per the
+//!    configured [`crate::config::BackendKind`] — charging the simulated
+//!    device either way;
 //! 4. returns the split-layer outputs (or, for ALL_IN_COS, performs the
 //!    training step server-side and returns only the loss).
 //!
@@ -34,7 +36,7 @@ use crate::cos::ObjectKey;
 use crate::error::{Error, Result};
 use crate::metrics::Registry;
 use crate::model::ModelRegistry;
-use crate::runtime::{DeviceKind, DeviceSim, Engine, ModelArtifacts, Tensor};
+use crate::runtime::{DeviceKind, DeviceSim, Engine, ExecBackend, Tensor};
 use crate::util::json::Json;
 
 pub use planner::Planner;
@@ -43,7 +45,7 @@ pub use request::{PostRequest, RequestMode};
 pub struct HapiServer {
     engine: Arc<Engine>,
     models: ModelRegistry,
-    artifacts: Mutex<BTreeMap<String, Arc<ModelArtifacts>>>,
+    backends: Mutex<BTreeMap<String, ExecBackend>>,
     cluster: Arc<StorageCluster>,
     devices: Vec<Arc<DeviceSim>>,
     planner: Planner,
@@ -79,7 +81,7 @@ impl HapiServer {
         Arc::new(HapiServer {
             engine,
             models,
-            artifacts: Mutex::new(BTreeMap::new()),
+            backends: Mutex::new(BTreeMap::new()),
             cluster,
             devices,
             planner,
@@ -103,21 +105,23 @@ impl HapiServer {
 
     /// Pre-compile all unit executables of a model (startup warming).
     pub fn warm(&self, model: &str) -> Result<()> {
-        self.artifacts_for(model)?.warm()
+        self.backend_for(model)?.warm()
     }
 
-    fn artifacts_for(&self, model: &str) -> Result<Arc<ModelArtifacts>> {
-        if let Some(a) = self.artifacts.lock().unwrap().get(model) {
-            return Ok(a.clone());
+    /// The execution backend serving `model`'s requests — AOT HLO or the
+    /// artifact-free sim, per `cfg.backend` (memoized per model).
+    fn backend_for(&self, model: &str) -> Result<ExecBackend> {
+        if let Some(b) = self.backends.lock().unwrap().get(model) {
+            return Ok(b.clone());
         }
         let profile = self.models.get(model)?;
-        let arts = Arc::new(ModelArtifacts::load(
-            self.engine.clone(),
-            profile,
-            self.cfg.model_dir(model),
-        )?);
-        let mut guard = self.artifacts.lock().unwrap();
-        Ok(guard.entry(model.to_string()).or_insert(arts).clone())
+        let backend =
+            ExecBackend::for_model(&self.cfg, &self.engine, profile)?;
+        let mut guard = self.backends.lock().unwrap();
+        Ok(guard
+            .entry(model.to_string())
+            .or_insert(backend)
+            .clone())
     }
 
     fn read_object_tensor(
@@ -134,7 +138,7 @@ impl HapiServer {
     }
 
     fn handle_request(&self, req: PostRequest, _body: Vec<u8>) -> Result<(Json, Vec<u8>)> {
-        let arts = self.artifacts_for(&req.model)?;
+        let arts = self.backend_for(&req.model)?;
         let samples = req.input_dims[0];
 
         // Storage request: fetch the training-data object.
@@ -209,11 +213,11 @@ impl HapiServer {
     /// ALL_IN_COS: feature extraction + training step, all server-side.
     fn train_on_cos(
         &self,
-        arts: &ModelArtifacts,
+        arts: &ExecBackend,
         input: &Tensor,
         labels: &Tensor,
     ) -> Result<f32> {
-        let freeze = arts.profile.freeze_idx;
+        let freeze = arts.profile().freeze_idx;
         let feats =
             arts.forward_segment(input, 1, freeze, DeviceKind::Gpu, None)?;
         let mb = arts.micro_batch();
@@ -233,7 +237,7 @@ impl HapiServer {
                 arts.train_grads(&x, &y, &mask, &tail)?;
             loss_sum += loss;
             match grad_sums.as_mut() {
-                Some(acc) => ModelArtifacts::accumulate(acc, &grads)?,
+                Some(acc) => ExecBackend::accumulate(acc, &grads)?,
                 None => grad_sums = Some(grads),
             }
             off += len;

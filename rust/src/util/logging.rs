@@ -1,70 +1,113 @@
-//! Tiny `log` backend (env_logger is not in the offline vendor set).
+//! Tiny std-only logger (neither `log` nor `env_logger` is in the
+//! offline vendor set — the crate builds with zero dependencies).
 //!
 //! Level comes from `HAPI_LOG` (error|warn|info|debug|trace), default
-//! `info`.  Timestamps are seconds since logger init — good enough to read
-//! event ordering in experiment logs.
+//! `info`.  Timestamps are seconds since logger init — good enough to
+//! read event ordering in experiment logs.  Call sites use the
+//! `format_args!` helpers: `logging::debug("proxy", format_args!(...))`.
 
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-use log::{Level, LevelFilter, Metadata, Record};
-
-struct Logger {
-    start: Instant,
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl log::Log for Logger {
-    fn enabled(&self, _m: &Metadata) -> bool {
-        true
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = self.start.elapsed().as_secs_f64();
-        let lvl = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!(
-            "[{t:9.3} {lvl} {}] {}",
-            record.target().split("::").last().unwrap_or(""),
-            record.args()
-        );
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: OnceLock<Logger> = OnceLock::new();
+static START: OnceLock<Instant> = OnceLock::new();
+/// 0 = uninitialised; otherwise a `Level` discriminant.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
 
 /// Install the logger (idempotent).
 pub fn init() {
-    let logger = LOGGER.get_or_init(|| Logger {
-        start: Instant::now(),
-    });
+    START.get_or_init(Instant::now);
+    if MAX_LEVEL.load(Ordering::Relaxed) != 0 {
+        return;
+    }
     let level = match std::env::var("HAPI_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    // set_logger fails if already set; that's fine (tests call init often).
-    let _ = log::set_logger(logger);
-    log::set_max_level(level);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    let max = MAX_LEVEL.load(Ordering::Relaxed);
+    // Logging before init() behaves like the default `info` level.
+    let max = if max == 0 { Level::Info as u8 } else { max };
+    level as u8 <= max
+}
+
+/// Emit one record; `target` is a short component name.
+pub fn log(level: Level, target: &str, args: fmt::Arguments) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3} {} {target}] {args}", level.tag());
+}
+
+pub fn error(target: &str, args: fmt::Arguments) {
+    log(Level::Error, target, args)
+}
+
+pub fn warn(target: &str, args: fmt::Arguments) {
+    log(Level::Warn, target, args)
+}
+
+pub fn info(target: &str, args: fmt::Arguments) {
+    log(Level::Info, target, args)
+}
+
+pub fn debug(target: &str, args: fmt::Arguments) {
+    log(Level::Debug, target, args)
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logger alive");
+        init();
+        init();
+        info("test", format_args!("logger alive"));
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        // At the default level, info is on and debug off (unless the
+        // environment opts into debug/trace).
+        init();
+        if !matches!(
+            std::env::var("HAPI_LOG").as_deref(),
+            Ok("debug") | Ok("trace")
+        ) {
+            assert!(enabled(Level::Info));
+            assert!(!enabled(Level::Trace));
+        }
     }
 }

@@ -1,0 +1,194 @@
+//! Property tests over the client prefetch pipeline's invariants
+//! (`props.rs` style: the crate's deterministic RNG, many random cases,
+//! seed printed on failure).  No network, no artifacts — the fetch stage
+//! is a synthetic closure with randomized latencies.
+//!
+//! Invariants:
+//! 1. delivered order == submission order, for any depth / chunking /
+//!    completion-order scramble;
+//! 2. concurrent fetches — and more generally submitted-but-undelivered
+//!    iterations — never exceed the configured depth (bounded
+//!    backpressure);
+//! 3. every shard is fetched exactly once (no loss, no duplication);
+//! 4. a fetch failure surfaces as the run's error after all earlier
+//!    iterations were delivered in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use hapi::client::pipeline::{self, Fetched};
+use hapi::metrics::Registry;
+use hapi::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+#[test]
+fn random_depths_and_chunkings_deliver_in_order() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x9090);
+        let depth = rng.range(1, 6) as usize;
+        let num_shards = rng.range(1, 40) as usize;
+        let per_iter = rng.range(1, 5) as usize;
+        let jobs = pipeline::jobs_for(num_shards, per_iter);
+        let n_jobs = jobs.len();
+
+        // Each fetch sleeps a seed-derived pseudo-random time so
+        // completion order is scrambled relative to submission order.
+        let delays: Vec<u64> =
+            (0..n_jobs).map(|_| rng.range(0, 2_000)).collect();
+
+        let concurrent = AtomicUsize::new(0);
+        let max_concurrent = AtomicUsize::new(0);
+        let fetched_shards = Mutex::new(Vec::<usize>::new());
+        let reg = Registry::new();
+        let mut delivered = Vec::new();
+
+        let report = pipeline::run(
+            depth,
+            &jobs,
+            &reg,
+            |job| {
+                let now = concurrent.fetch_add(1, Ordering::SeqCst) + 1;
+                max_concurrent.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_micros(
+                    delays[job.seq],
+                ));
+                fetched_shards
+                    .lock()
+                    .unwrap()
+                    .extend(job.shards.iter().copied());
+                concurrent.fetch_sub(1, Ordering::SeqCst);
+                Ok(Fetched {
+                    payload: job.seq,
+                    bytes: job.shards.len() as u64,
+                    fetch_time: Duration::ZERO,
+                })
+            },
+            |d| {
+                delivered.push(d.payload);
+                Ok(())
+            },
+        )
+        .unwrap();
+
+        // 1. In-order delivery.
+        assert_eq!(
+            delivered,
+            (0..n_jobs).collect::<Vec<_>>(),
+            "seed {seed}: out-of-order delivery"
+        );
+        // 2. Bounded in-flight.
+        assert!(
+            max_concurrent.load(Ordering::SeqCst) <= depth,
+            "seed {seed}: {} concurrent fetches > depth {depth}",
+            max_concurrent.load(Ordering::SeqCst)
+        );
+        assert!(
+            report.inflight_max <= depth,
+            "seed {seed}: window {} > depth {depth}",
+            report.inflight_max
+        );
+        // 3. Exactly-once shard coverage.
+        let mut shards = fetched_shards.into_inner().unwrap();
+        shards.sort_unstable();
+        assert_eq!(
+            shards,
+            (0..num_shards).collect::<Vec<_>>(),
+            "seed {seed}: shard coverage broken"
+        );
+        // Bytes account one unit per shard here.
+        assert_eq!(report.bytes, num_shards as u64, "seed {seed}");
+        assert_eq!(report.iterations, n_jobs, "seed {seed}");
+    }
+}
+
+#[test]
+fn failures_surface_after_ordered_prefix() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xFA11);
+        let depth = rng.range(1, 5) as usize;
+        let n_jobs = rng.range(2, 25) as usize;
+        let bad = rng.usize_below(n_jobs);
+        let jobs = pipeline::jobs_for(n_jobs, 1);
+        let reg = Registry::new();
+        let mut delivered = Vec::new();
+        let err = pipeline::run(
+            depth,
+            &jobs,
+            &reg,
+            |job| {
+                std::thread::sleep(Duration::from_micros(
+                    (job.seq % 4) as u64 * 120,
+                ));
+                if job.seq == bad {
+                    Err(hapi::Error::other(format!("fail@{bad}")))
+                } else {
+                    Ok(Fetched {
+                        payload: job.seq,
+                        bytes: 1,
+                        fetch_time: Duration::ZERO,
+                    })
+                }
+            },
+            |d| {
+                delivered.push(d.payload);
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains(&format!("fail@{bad}")),
+            "seed {seed}: wrong error {err}"
+        );
+        assert_eq!(
+            delivered,
+            (0..bad).collect::<Vec<_>>(),
+            "seed {seed}: prefix before failure must deliver in order"
+        );
+    }
+}
+
+#[test]
+fn consumer_abort_stops_the_window() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xAB07);
+        let depth = rng.range(1, 5) as usize;
+        let n_jobs = rng.range(3, 30) as usize;
+        let stop_at = rng.usize_below(n_jobs);
+        let jobs = pipeline::jobs_for(n_jobs, 1);
+        let reg = Registry::new();
+        let started = AtomicUsize::new(0);
+        let err = pipeline::run(
+            depth,
+            &jobs,
+            &reg,
+            |job| {
+                started.fetch_add(1, Ordering::SeqCst);
+                Ok(Fetched {
+                    payload: job.seq,
+                    bytes: 1,
+                    fetch_time: Duration::ZERO,
+                })
+            },
+            |d| {
+                if d.payload == stop_at {
+                    Err(hapi::Error::other("stop"))
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("stop"), "seed {seed}");
+        // Backpressure bound on wasted work: the window admits at most
+        // `delivered + depth` submissions, and the failing delivery
+        // frees one more slot before the abort lands.
+        assert!(
+            started.load(Ordering::SeqCst) <= stop_at + 1 + depth + 1,
+            "seed {seed}: {} fetches started for stop_at {stop_at}, \
+             depth {depth}",
+            started.load(Ordering::SeqCst)
+        );
+    }
+}

@@ -1,5 +1,8 @@
 //! Splitting-algorithm and profile invariants over the *real* AOT
-//! profiles of all seven Table-1 models (requires `make artifacts`).
+//! profiles of all seven Table-1 models.  Requires `make artifacts`
+//! (profile JSON only — no PJRT); on a fresh clone every test skips
+//! cleanly.  The synthetic-profile analogues run unconditionally in the
+//! crate's unit tests (`model::sim_profiles`, `split`).
 
 use hapi::config::{HapiConfig, Scale};
 use hapi::model::{ModelRegistry, TABLE1_MODELS};
@@ -7,15 +10,21 @@ use hapi::netsim;
 use hapi::profiler::AppProfile;
 use hapi::split::{candidates, choose_split_idx};
 
-fn registry() -> ModelRegistry {
-    let dir = HapiConfig::discover_artifacts()
-        .expect("run `make artifacts` before cargo test");
-    ModelRegistry::load_dir(dir.join("profiles")).unwrap()
+/// `None` (with a labeled skip message) when no artifacts are present.
+fn registry() -> Option<ModelRegistry> {
+    let Some(dir) = HapiConfig::discover_artifacts() else {
+        eprintln!(
+            "SKIP split_model_props: artifacts not present — run \
+             `make artifacts` to enable this test"
+        );
+        return None;
+    };
+    Some(ModelRegistry::load_dir(dir.join("profiles")).unwrap())
 }
 
 #[test]
 fn table1_counts_match_paper() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let expected = [
         ("alexnet", 17, 22),
         ("resnet18", 11, 14),
@@ -34,7 +43,7 @@ fn table1_counts_match_paper() {
 
 #[test]
 fn split_respects_constraints_all_models_all_bandwidths() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     for scale in [Scale::Tiny, Scale::Paper] {
         for name in TABLE1_MODELS {
             let app = AppProfile::new(reg.get(name).unwrap(), scale);
@@ -64,7 +73,7 @@ fn split_respects_constraints_all_models_all_bandwidths() {
 
 #[test]
 fn split_monotone_lower_bandwidth_never_earlier() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     for name in TABLE1_MODELS {
         let app = AppProfile::new(reg.get(name).unwrap(), Scale::Paper);
         let mut last = 0usize;
@@ -86,7 +95,7 @@ fn split_monotone_lower_bandwidth_never_earlier() {
 #[test]
 fn every_model_has_early_candidates_at_paper_scale() {
     // Fig 2's central insight, validated against the real profiles.
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     for name in TABLE1_MODELS {
         let app = AppProfile::new(reg.get(name).unwrap(), Scale::Paper);
         let cands = candidates(&app);
@@ -104,7 +113,7 @@ fn output_sizes_decay_nonmonotonically() {
     // there must exist a local re-increase before the freeze idx for the
     // conv models whose blocks widen (ResNet's profile only rises at
     // conv1 and then strictly decays, so it is excluded).
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     for name in ["alexnet", "vgg11", "densenet121"] {
         let app = AppProfile::new(reg.get(name).unwrap(), Scale::Paper);
         let sizes: Vec<u64> =
@@ -117,7 +126,7 @@ fn output_sizes_decay_nonmonotonically() {
 
 #[test]
 fn memory_model_scales_linearly_in_batch() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     for name in TABLE1_MODELS {
         let app = AppProfile::new(reg.get(name).unwrap(), Scale::Tiny);
         let mem = app.memory();
@@ -142,7 +151,7 @@ fn theory_predictions_consistent_with_splitter() {
     // For every model: under abundant bandwidth, the theory model must
     // not prefer the freeze split over the algorithm's choice when COS
     // is contended (the §7.3 phenomenon).
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let k = hapi::theory::CostConstants {
         c12: 0.1,
         ..Default::default()

@@ -1,23 +1,44 @@
 //! Full-stack integration: COS + proxy + Hapi server + client over real
-//! TCP, executing real AOT HLO.  Requires `make artifacts`.
+//! TCP, executing real AOT HLO.
+//!
+//! Requires `make artifacts` AND the `pjrt` cargo feature; on a fresh
+//! clone every test here **skips cleanly** (prints a `SKIP` line and
+//! passes) instead of panicking.  The same end-to-end paths run
+//! artifact-free in `sim_backend.rs`.
 
 use hapi::config::HapiConfig;
 use hapi::cos::proxy::ProxyMode;
 use hapi::harness::Testbed;
 use hapi::runtime::DeviceKind;
 
-fn test_config() -> HapiConfig {
+/// `None` (with a labeled skip message) when this build/checkout cannot
+/// execute real HLO; tests early-return on it.
+fn test_config() -> Option<HapiConfig> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!(
+            "SKIP stack_integration: built without the `pjrt` feature \
+             (vendored xla crate required for real HLO execution)"
+        );
+        return None;
+    }
+    let Some(dir) = HapiConfig::discover_artifacts() else {
+        eprintln!(
+            "SKIP stack_integration: artifacts not present — run \
+             `make artifacts` to enable this test"
+        );
+        return None;
+    };
     let mut cfg = HapiConfig::default();
-    cfg.artifacts_dir = HapiConfig::discover_artifacts()
-        .expect("run `make artifacts` before cargo test");
+    cfg.artifacts_dir = dir;
     cfg.bandwidth = None; // unshaped: tests should be fast
     cfg.train_batch = 100;
-    cfg
+    Some(cfg)
 }
 
 #[test]
 fn hapi_trains_and_loss_is_finite() {
-    let bed = Testbed::launch(test_config()).unwrap();
+    let Some(cfg) = test_config() else { return };
+    let bed = Testbed::launch(cfg).unwrap();
     let (ds, labels) = bed.dataset("it-ds", "alexnet", 200).unwrap();
     let client = bed.hapi_client("alexnet", DeviceKind::Gpu).unwrap();
     assert!(client.split.split_idx >= 1);
@@ -35,7 +56,8 @@ fn hapi_matches_baseline_loss_trajectory() {
     // chunking must not change what the trainer sees, so the loss
     // sequence matches the no-split BASELINE run to float-accumulation
     // tolerance.
-    let bed = Testbed::launch(test_config()).unwrap();
+    let Some(cfg) = test_config() else { return };
+    let bed = Testbed::launch(cfg).unwrap();
     let (ds, labels) = bed.dataset("eq-ds", "resnet18", 200).unwrap();
 
     let hapi = bed.hapi_client("resnet18", DeviceKind::Gpu).unwrap();
@@ -56,7 +78,8 @@ fn hapi_matches_baseline_loss_trajectory() {
 
 #[test]
 fn weak_cpu_client_works_and_is_slower() {
-    let bed = Testbed::launch(test_config()).unwrap();
+    let Some(cfg) = test_config() else { return };
+    let bed = Testbed::launch(cfg).unwrap();
     let (ds, labels) = bed.dataset("cpu-ds", "alexnet", 100).unwrap();
     let gpu = bed.hapi_client("alexnet", DeviceKind::Gpu).unwrap();
     let cpu = bed.hapi_client("alexnet", DeviceKind::Cpu).unwrap();
@@ -78,7 +101,7 @@ fn baseline_ooms_on_large_batch_hapi_does_not() {
     // Fig 10's OOM column: at train batch 800 the BASELINE client's
     // forward of the whole network exceeds the calibrated client device;
     // Hapi's client (training tail only) fits.
-    let mut cfg = test_config();
+    let Some(mut cfg) = test_config() else { return };
     cfg.train_batch = 800;
     let bed = Testbed::launch(cfg).unwrap();
     let (ds, labels) = bed.dataset("oom-ds", "vgg11", 800).unwrap();
@@ -95,7 +118,8 @@ fn baseline_ooms_on_large_batch_hapi_does_not() {
 
 #[test]
 fn all_in_cos_trains_server_side() {
-    let bed = Testbed::launch(test_config()).unwrap();
+    let Some(cfg) = test_config() else { return };
+    let bed = Testbed::launch(cfg).unwrap();
     let (ds, _labels) = bed.dataset("aic-ds", "alexnet", 200).unwrap();
     let client = bed.all_in_cos_client("alexnet").unwrap();
     let stats = client.train_epoch(&ds).unwrap();
@@ -111,7 +135,8 @@ fn all_in_cos_trains_server_side() {
 fn static_freeze_split_transfers_less_than_dynamic() {
     // §7.3: splitting at the freeze layer minimises transfer (but costs
     // COS compute — the time tradeoff is benched in sec73).
-    let bed = Testbed::launch(test_config()).unwrap();
+    let Some(cfg) = test_config() else { return };
+    let bed = Testbed::launch(cfg).unwrap();
     let (ds, labels) = bed.dataset("sf-ds", "densenet121", 100).unwrap();
     let stat = bed
         .static_freeze_client("densenet121", DeviceKind::Gpu)
@@ -129,8 +154,8 @@ fn static_freeze_split_transfers_less_than_dynamic() {
 #[test]
 fn in_proxy_mode_serves_training() {
     // Table 3's competitor still works, just shares the proxy threads.
-    let bed =
-        Testbed::launch_with_mode(test_config(), ProxyMode::InProxy).unwrap();
+    let Some(cfg) = test_config() else { return };
+    let bed = Testbed::launch_with_mode(cfg, ProxyMode::InProxy).unwrap();
     let (ds, labels) = bed.dataset("ip-ds", "resnet50", 100).unwrap();
     let client = bed.hapi_client("resnet50", DeviceKind::Gpu).unwrap();
     let stats = client.train_epoch(&ds, &labels).unwrap();
@@ -140,7 +165,7 @@ fn in_proxy_mode_serves_training() {
 
 #[test]
 fn shaped_link_meters_and_slows() {
-    let mut cfg = test_config();
+    let Some(mut cfg) = test_config() else { return };
     cfg.bandwidth = Some(hapi::netsim::mbps(50.0));
     let bed = Testbed::launch(cfg).unwrap();
     let (ds, labels) = bed.dataset("bw-ds", "alexnet", 100).unwrap();
@@ -159,7 +184,7 @@ fn batch_adaptation_prevents_oom_under_burst() {
     // Fig 14's mechanism at integration level: burst of parallel POSTs
     // with b_max = whole object; without BA some fail with OOM, with BA
     // all succeed (reduced).
-    let mut cfg = test_config();
+    let Some(mut cfg) = test_config() else { return };
     cfg.train_batch = 800; // 8 parallel POSTs per iteration
     cfg.default_cos_batch = 100;
     cfg.batch_adaptation = false;
