@@ -79,9 +79,10 @@ fn main() -> hapi::Result<()> {
     }
     table.print();
     let (total, reduced, avg_pct) = bed.server.planner().adaptation_stats();
+    let p95 = bed.server.planner().reduction_pct_quantile(0.95);
     println!(
         "batch adaptation: {total} requests, {reduced} reduced, \
-         avg reduction {avg_pct:.1}%"
+         avg reduction {avg_pct:.1}% (p95 {p95:.1}%)"
     );
     bed.stop();
     Ok(())

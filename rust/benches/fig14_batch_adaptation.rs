@@ -28,6 +28,7 @@ fn main() {
             "BA peak mem",
             "% reduced",
             "avg reduction %",
+            "p95 reduction %",
         ],
     );
     let mut no_ba_oom_at = None;
@@ -36,6 +37,7 @@ fn main() {
         let posts = batch / 100;
         let mut row = vec![batch.to_string(), posts.to_string()];
         let mut ba_stats = (0u64, 0u64, 0.0f64);
+        let mut ba_p95 = 0.0f64;
         let mut ba_peak = 0u64;
         for ba in [false, true] {
             let mut cfg = common::bench_config();
@@ -68,6 +70,8 @@ fn main() {
                 assert!(out.is_ok(), "BA epoch failed: {out:?}");
                 row.push(format!("{secs:.1}"));
                 ba_stats = bed.server.planner().adaptation_stats();
+                ba_p95 =
+                    bed.server.planner().reduction_pct_quantile(0.95);
                 ba_peak = bed
                     .server
                     .devices()
@@ -85,6 +89,7 @@ fn main() {
             100.0 * reduced as f64 / total.max(1) as f64
         ));
         row.push(format!("{avg_pct:.1}"));
+        row.push(format!("{ba_p95:.1}"));
         t.row(row);
     }
     t.print();

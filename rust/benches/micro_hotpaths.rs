@@ -50,6 +50,7 @@ fn main() {
         b_max: 100,
         mem_data_per_sample: 47_520,
         mem_model_bytes: 1_234_567,
+        burst_width: 8,
         mode: hapi::server::request::RequestMode::FeatureExtract,
     };
     Bench::new("post_header_roundtrip")

@@ -13,13 +13,13 @@
 //!   object; the server extracts features *and* trains at the training
 //!   batch size, returning only the loss.
 //!
-//! All three ride the same [`pipeline`] prefetch engine as Hapi — the
-//! `pipeline_depth` knob applies uniformly, so depth sweeps compare
-//! like with like.
+//! All three ride the same [`pipeline`] sharded prefetch engine as Hapi
+//! — the `pipeline_depth` and `fetch_fanout` knobs apply uniformly, so
+//! depth and fanout sweeps compare like with like.
 
 use std::sync::Mutex;
 
-use crate::client::{pipeline, DatasetRef, EpochStats, Fetched};
+use crate::client::{pipeline, DatasetRef, EpochStats};
 use crate::config::HapiConfig;
 use crate::cos::protocol::CosConnection;
 use crate::error::Result;
@@ -63,8 +63,9 @@ impl AllInCosClient {
     /// Run one epoch fully on the COS; the client only sequences
     /// requests and collects losses (no local compute, no decoupling:
     /// the COS batch bound equals the training batch size).  Requests
-    /// flow through the same prefetch window as Hapi's — `pipeline_depth`
-    /// training steps in flight, losses delivered in shard order.
+    /// flow through the same sharded fetch engine as Hapi's —
+    /// `pipeline_depth` training steps in flight over a `fetch_fanout`
+    /// connection pool, losses delivered in shard order.
     pub fn train_epoch(&self, ds: &DatasetRef) -> Result<EpochStats> {
         let mem = self.app.memory();
         let freeze = self.app.freeze_idx();
@@ -72,16 +73,26 @@ impl AllInCosClient {
         let rx0 = self.link.stats().rx_bytes();
         let tx0 = self.link.stats().tx_bytes();
         let jobs = pipeline::jobs_for(ds.num_shards, 1);
-        // Connection pool: at most `depth` live connections, reused
-        // across requests (one connect per worker, not per shard); a
-        // connection that errored is dropped instead of returned.
-        let conns: Mutex<Vec<CosConnection>> = Mutex::new(Vec::new());
-        let report = pipeline::run(
+        // One POST per iteration: one shard per job, so the burst the
+        // planner should gather is the pipeline depth — capped by the
+        // connection pool, which bounds how many POSTs can actually be
+        // outstanding at once.
+        let fanout = self.cfg.resolved_fanout(1);
+        let burst_width = self.cfg.pipeline_depth.min(fanout);
+        // Connection pool: `fanout` lazily-connected slots, reused
+        // across requests; a connection that errored is dropped so its
+        // slot reconnects (the engine retries on another slot).
+        let pool: Vec<Mutex<Option<CosConnection>>> =
+            (0..fanout).map(|_| Mutex::new(None)).collect();
+        let report = pipeline::run_sharded(
             self.cfg.pipeline_depth,
+            fanout,
             &jobs,
             &self.registry,
-            |job| {
-                let shard = job.shards[0];
+            true,
+            |_job| (),
+            |ctx, _: &(), job, shard_pos| {
+                let shard = job.shards[shard_pos];
                 let samples = ds
                     .shard_samples
                     .min(ds.num_samples - shard * ds.shard_samples);
@@ -107,24 +118,30 @@ impl AllInCosClient {
                         .fe_data_bytes_per_sample(freeze)
                         .max(mem.all_in_cos_bytes(samples) / samples as u64),
                     mem_model_bytes: mem.fe_model_bytes(freeze),
+                    burst_width,
                     mode: RequestMode::AllInCos,
                 };
-                let mut conn = match conns.lock().unwrap().pop() {
+                let mut guard = pool[ctx.conn].lock().unwrap();
+                let mut conn = match guard.take() {
                     Some(c) => c,
                     None => CosConnection::connect(
                         &self.addr,
                         self.link.clone(),
                     )?,
                 };
-                let (header, _body) =
-                    conn.post(req.to_json(), Vec::new())?;
-                conns.lock().unwrap().push(conn);
+                let result = conn.post(req.to_json(), Vec::new());
+                if result.is_ok() {
+                    *guard = Some(conn);
+                }
+                let (header, _body) = result?;
                 let loss = header.get("loss")?.as_f64()? as f32;
-                Ok(Fetched {
+                Ok(pipeline::ShardFetched {
                     payload: loss,
                     bytes: 0, // only the loss crosses the wire
-                    fetch_time: std::time::Duration::ZERO,
                 })
+            },
+            |_job, _: &(), mut parts| {
+                Ok(parts.pop().expect("one shard per job"))
             },
             |delivery| {
                 stats.comm += delivery.stall;

@@ -2,11 +2,13 @@
 //!
 //! Per application it profiles the model (§5.3; the static profile comes
 //! from the AOT metadata), chooses the split index (Algorithm 1), then
-//! trains through the [`pipeline`] prefetch engine: a configurable-depth
-//! sliding window of training iterations is kept in flight against the
-//! COS (one POST per storage object, or GETs for the BASELINE), results
-//! are reordered into submission order (preserving the learning
-//! trajectory bit-for-bit at any depth), and the trainer consumes them
+//! trains through the [`pipeline`] sharded prefetch engine: a
+//! configurable-depth sliding window of training iterations is kept in
+//! flight against the COS, each iteration's shards fanned out over a
+//! `fetch_fanout`-sized pool of persistent connections (one POST per
+//! storage object, or GETs for the BASELINE), results are reordered
+//! into shard then submission order (preserving the learning trajectory
+//! bit-for-bit at any fanout × depth), and the trainer consumes them
 //! on the calling thread — leftover frozen units `[split+1, freeze]` at
 //! the *training* batch size, then gradient accumulation over
 //! micro-batches + one SGD update, numerically a full-batch step (see
@@ -44,7 +46,9 @@ use crate::server::request::{PostRequest, RequestMode};
 use crate::split::{choose_split_idx, SplitDecision};
 
 pub use dataset::{DatasetRef, DatasetSpec};
-pub use pipeline::{Delivery, Fetched, Job, PipelineReport};
+pub use pipeline::{
+    Delivery, Fetched, Job, PipelineReport, ShardCtx, ShardFetched,
+};
 
 /// Outcome of one epoch.
 #[derive(Debug, Clone, Default)]
@@ -195,82 +199,67 @@ impl HapiClient {
         self.next_req_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Fetch one iteration's shard group at `split` and reassemble the
-    /// results in shard order (the reorder buffer of §5.2, shard level).
-    /// Hapi mode (split ≥ 1) POSTs feature-extraction requests; BASELINE
-    /// (split 0) GETs the raw image objects.
-    fn fetch_iteration(
+    /// Fetch one shard at `split` over the pooled connection in `slot`
+    /// (lazily connected; a connection that errored is dropped so the
+    /// slot reconnects on its next use — this is what makes the
+    /// engine's retry land on a *healthy* link).  Hapi mode (split ≥ 1)
+    /// POSTs a feature-extraction request; BASELINE (split 0) GETs the
+    /// raw image object.  `burst_width` tells the storage-side planner
+    /// how many requests this client keeps in flight
+    /// (`pipeline_depth × shards_per_iter`) so its gather window can
+    /// adapt to the whole burst.
+    fn fetch_shard_on(
         &self,
         ds: &DatasetRef,
-        shards: &[usize],
+        shard: usize,
         split: usize,
+        burst_width: usize,
+        slot: &Mutex<Option<CosConnection>>,
     ) -> Result<Tensor> {
-        let mem = self.app.memory();
-        let slots: Vec<Mutex<Option<Result<Tensor>>>> =
-            shards.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for (slot, &shard) in slots.iter().zip(shards) {
-                let link = self.link.clone();
-                let addr = self.addr.clone();
-                let samples = ds
-                    .shard_samples
-                    .min(ds.num_samples - shard * ds.shard_samples);
-                let mut dims = vec![samples];
-                dims.extend(&ds.input_shape);
-                let key = crate::cos::ObjectKey::shard(&ds.name, shard);
-                if split == 0 {
-                    // BASELINE: stream the raw object.
-                    scope.spawn(move || {
-                        let result = (|| -> Result<Tensor> {
-                            let mut conn =
-                                CosConnection::connect(&addr, link)?;
-                            let body = conn.get(&key)?;
-                            Tensor::from_raw(
-                                crate::runtime::DType::F32,
-                                dims,
-                                body,
-                            )
-                        })();
-                        *slot.lock().unwrap() = Some(result);
-                    });
-                    continue;
-                }
-                let req = PostRequest {
-                    id: self.req_id(),
-                    model: self.app.model.name.clone(),
-                    split_idx: split,
-                    object: key,
-                    labels_object: String::new(),
-                    input_dims: dims,
-                    b_max: self.cfg.object_samples.min(samples),
-                    mem_data_per_sample: mem.fe_data_bytes_per_sample(split),
-                    mem_model_bytes: mem.fe_model_bytes(split),
-                    mode: RequestMode::FeatureExtract,
-                };
-                scope.spawn(move || {
-                    let result = (|| -> Result<Tensor> {
-                        let mut conn = CosConnection::connect(&addr, link)?;
-                        let (header, body) =
-                            conn.post(req.to_json(), Vec::new())?;
-                        let dims =
-                            header.get("out_dims")?.as_usize_vec()?;
-                        Tensor::from_raw(
-                            crate::runtime::DType::F32,
-                            dims,
-                            body,
-                        )
-                    })();
-                    *slot.lock().unwrap() = Some(result);
-                });
+        let samples = ds
+            .shard_samples
+            .min(ds.num_samples - shard * ds.shard_samples);
+        let mut dims = vec![samples];
+        dims.extend(&ds.input_shape);
+        let key = crate::cos::ObjectKey::shard(&ds.name, shard);
+        // Holding the slot for the whole exchange serialises use of one
+        // connection, exactly like a real multiplexed link pool.
+        let mut guard = slot.lock().unwrap();
+        let mut conn = match guard.take() {
+            Some(c) => c,
+            None => CosConnection::connect(&self.addr, self.link.clone())?,
+        };
+        let result = (|| -> Result<Tensor> {
+            if split == 0 {
+                let body = conn.get(&key)?;
+                return Tensor::from_raw(
+                    crate::runtime::DType::F32,
+                    dims,
+                    body,
+                );
             }
-        });
-        // Reorder: shard order == training-batch order, regardless of
-        // POST completion order.
-        let mut parts = Vec::with_capacity(shards.len());
-        for slot in slots {
-            parts.push(slot.into_inner().unwrap().unwrap()?);
+            let mem = self.app.memory();
+            let req = PostRequest {
+                id: self.req_id(),
+                model: self.app.model.name.clone(),
+                split_idx: split,
+                object: key,
+                labels_object: String::new(),
+                input_dims: dims,
+                b_max: self.cfg.object_samples.min(samples),
+                mem_data_per_sample: mem.fe_data_bytes_per_sample(split),
+                mem_model_bytes: mem.fe_model_bytes(split),
+                burst_width,
+                mode: RequestMode::FeatureExtract,
+            };
+            let (header, body) = conn.post(req.to_json(), Vec::new())?;
+            let out_dims = header.get("out_dims")?.as_usize_vec()?;
+            Tensor::from_raw(crate::runtime::DType::F32, out_dims, body)
+        })();
+        if result.is_ok() {
+            *guard = Some(conn);
         }
-        Tensor::concat_batch(&parts)
+        result
     }
 
     /// Compute phase for one iteration: leftover frozen units at the
@@ -376,32 +365,67 @@ impl HapiClient {
         let shards_per_iter =
             (self.cfg.train_batch / ds.shard_samples).max(1);
         let jobs = pipeline::jobs_for(ds.num_shards, shards_per_iter);
+        let fanout = self.cfg.resolved_fanout(shards_per_iter);
+        // The burst the storage-side planner should expect from this
+        // client: every in-flight iteration contributes its shard
+        // count, but never more requests than the connection pool can
+        // actually keep outstanding (each fetch holds a pool slot for
+        // the whole exchange) — overstating it would make the planner's
+        // early-exit unreachable and tax every pass with the full wait.
+        let burst_width =
+            (self.cfg.pipeline_depth * shards_per_iter).min(fanout);
 
         let mut stats = EpochStats::default();
         let tx0 = self.link.stats().tx_bytes();
         let rx0 = self.link.stats().rx_bytes();
 
         // Split shared between the trainer (re-decides) and the fetch
-        // workers (read it when a job starts).
+        // workers (sampled once per iteration when it enters the window,
+        // so all shards of one training batch share a split).
         let cur_split = AtomicUsize::new(self.split.split_idx);
         let adaptive =
             self.cfg.adaptive_split && self.split.split_idx >= 1;
+        // Connection pool: `fanout` lazily-connected slots, reused
+        // across shards and iterations (multi-link fetch); a connection
+        // that errored is dropped and its slot reconnects.
+        let pool: Vec<Mutex<Option<CosConnection>>> =
+            (0..fanout).map(|_| Mutex::new(None)).collect();
+        // Per-connection received-byte samples; their merged sum drives
+        // the per-window bandwidth re-measurement below.
+        let conn_rx: Vec<AtomicU64> =
+            (0..fanout).map(|_| AtomicU64::new(0)).collect();
         // Per-window bandwidth re-measurement state (trainer-side).
-        let mut win_rx = rx0;
+        let mut win_rx = 0u64;
         let mut win_t = Instant::now();
 
-        let report = pipeline::run(
+        let report = pipeline::run_sharded(
             self.cfg.pipeline_depth,
+            fanout,
             &jobs,
             &self.registry,
-            |job| {
-                let split = cur_split.load(Ordering::Relaxed);
-                let tensor = self.fetch_iteration(ds, &job.shards, split)?;
-                Ok(Fetched {
-                    bytes: tensor.byte_len() as u64,
-                    payload: (tensor, split),
-                    fetch_time: Duration::ZERO, // stamped by the engine
+            true,
+            |_job| cur_split.load(Ordering::Relaxed),
+            |ctx, &split, job, shard_pos| {
+                let tensor = self.fetch_shard_on(
+                    ds,
+                    job.shards[shard_pos],
+                    split,
+                    burst_width,
+                    &pool[ctx.conn],
+                )?;
+                let bytes = tensor.byte_len() as u64;
+                conn_rx[ctx.conn].fetch_add(bytes, Ordering::Relaxed);
+                Ok(pipeline::ShardFetched {
+                    payload: tensor,
+                    bytes,
                 })
+            },
+            |_job, &split, parts| {
+                // Reorder: shard order == training-batch order,
+                // regardless of per-connection completion order (§5.2's
+                // reorder buffer, shard level).
+                let tensor = Tensor::concat_batch(&parts)?;
+                Ok((tensor, split))
             },
             |delivery| {
                 let (feats, split) = delivery.payload;
@@ -432,10 +456,12 @@ impl HapiClient {
 
                 if adaptive {
                     // Re-measure the link over the delivery window and
-                    // re-run Algorithm 1 (Table 4 dynamics).  The window
-                    // aggregates all concurrent fetches — it observes
-                    // link goodput, not per-connection shares.  Two
-                    // guards keep the estimate honest:
+                    // re-run Algorithm 1 (Table 4 dynamics).  The
+                    // per-connection samples are merged (summed) into
+                    // one window measurement — it observes link
+                    // goodput across every live connection, not
+                    // per-connection shares.  Two guards keep the
+                    // estimate honest:
                     //
                     // - only *stalled* windows re-decide: when the
                     //   trainer never waited on the network, the link
@@ -449,7 +475,10 @@ impl HapiClient {
                     //   every later split needs *less* client memory.
                     let now = Instant::now();
                     let dt = now.duration_since(win_t).as_secs_f64();
-                    let rx = self.link.stats().rx_bytes();
+                    let rx: u64 = conn_rx
+                        .iter()
+                        .map(|c| c.load(Ordering::Relaxed))
+                        .sum();
                     if dt >= 0.01 && rx > win_rx {
                         let stalled =
                             delivery.stall.as_secs_f64() >= 0.1 * dt;

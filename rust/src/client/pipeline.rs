@@ -27,9 +27,18 @@
 //! Depth 1 reproduces the old double buffering exactly: while the
 //! trainer computes iteration `k` (already delivered), iteration `k+1`
 //! is the one submission the window admits.
+//!
+//! [`run`] fetches whole iterations; [`run_sharded`] is the sharded,
+//! multi-connection generalisation: each in-flight iteration's shards
+//! are fanned out over a pool of `fanout` connection slots (the
+//! `fetch_fanout` knob), with per-shard retry on another connection,
+//! shard-order reassembly per iteration and the same strict in-order
+//! iteration delivery — so the learning trajectory is bitwise identical
+//! at any `fanout × depth`, only timing changes.  Per-connection byte
+//! and latency metrics land in the registry (`pipeline.connN.*`).
 
 use std::collections::BTreeMap;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::Result;
@@ -284,6 +293,505 @@ fn abort<T>(shared: &Shared<T>) {
     st.aborted = true;
     shared.submit.notify_all();
     shared.ready.notify_all();
+}
+
+// ---------------------------------------------------------------------
+// Sharded multi-connection engine
+// ---------------------------------------------------------------------
+
+/// One fetched shard, as produced by the per-shard fetch stage of
+/// [`run_sharded`].
+pub struct ShardFetched<S> {
+    /// The shard's payload (one shard's tensor, loss, …).
+    pub payload: S,
+    /// Bytes that crossed the link for this shard.
+    pub bytes: u64,
+}
+
+/// Where a shard fetch runs: the connection-slot id it should use and
+/// which attempt this is (0 = first try, 1 = retry on another slot).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardCtx {
+    /// Connection-slot index in `0..fanout`.  The transport closure maps
+    /// this to a pooled connection; the engine never uses the same slot
+    /// for both attempts of a shard when `fanout > 1`.
+    pub conn: usize,
+    /// 0 on the first try, 1 on the retry-on-other-connection.
+    pub attempt: usize,
+}
+
+/// In-flight bookkeeping for one iteration whose shards are being
+/// fetched by the sharded engine.
+struct JobSlot<J, S> {
+    /// Job context captured by `begin` when the iteration entered the
+    /// window (e.g. the split index all its shards must share).
+    ctx: Arc<J>,
+    started: Instant,
+    /// Shards claimed so far (dense prefix of the shard list).
+    next_shard: usize,
+    /// Shards claimed but not yet finished.
+    outstanding: usize,
+    /// Shards finished successfully.
+    done: usize,
+    parts: Vec<Option<S>>,
+    bytes: u64,
+    /// A shard failed (after retry): stop claiming the rest; the slot
+    /// dies once outstanding fetches drain.
+    failed: bool,
+}
+
+struct ShardedState<J, S, T> {
+    /// Jobs begun (entered the window); window invariant:
+    /// `next_job - delivered <= depth`.
+    next_job: usize,
+    /// Jobs claimed for `begin` whose slot is not yet inserted — keeps
+    /// workers from concluding no work will ever appear.
+    begins_pending: usize,
+    delivered: usize,
+    inflight: BTreeMap<usize, JobSlot<J, S>>,
+    results: BTreeMap<usize, Result<Fetched<T>>>,
+    aborted: bool,
+    inflight_max: usize,
+}
+
+struct ShardedShared<J, S, T> {
+    state: Mutex<ShardedState<J, S, T>>,
+    /// Workers wait here for claimable work (window space or shards).
+    submit: Condvar,
+    /// The consumer waits here for the next in-order result.
+    ready: Condvar,
+}
+
+/// Panic guard for a claimed unit of sharded work: if `begin`, the shard
+/// fetch or `assemble` unwinds, deliver an `Err` sentinel for the job so
+/// the consumer fails fast, and repair the claim accounting so sibling
+/// workers can still exit (the panic resurfaces at scope join).
+struct ShardedPanicGuard<'a, J, S, T> {
+    shared: &'a ShardedShared<J, S, T>,
+    seq: usize,
+    pending_begin: bool,
+    armed: bool,
+}
+
+impl<J, S, T> Drop for ShardedPanicGuard<'_, J, S, T> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        if self.pending_begin {
+            st.begins_pending -= 1;
+        } else if let Some(slot) = st.inflight.get_mut(&self.seq) {
+            // A claimed shard fetch unwound: give its claim back and
+            // poison the job so siblings stop fetching shards that can
+            // never assemble (mirrors finish_shard's error path).  If
+            // the slot is already gone, the panic came from `assemble`
+            // — nothing left to account.
+            slot.outstanding -= 1;
+            slot.failed = true;
+            if slot.outstanding == 0 {
+                st.inflight.remove(&self.seq);
+            }
+        }
+        st.results.entry(self.seq).or_insert_with(|| {
+            Err(crate::error::Error::other(
+                "sharded pipeline stage panicked",
+            ))
+        });
+        drop(st);
+        self.shared.ready.notify_all();
+        self.shared.submit.notify_all();
+    }
+}
+
+/// Abort guard mirroring [`AbortOnExit`] for the sharded engine.
+struct ShardedAbortOnExit<'a, J, S, T> {
+    shared: &'a ShardedShared<J, S, T>,
+}
+
+impl<J, S, T> Drop for ShardedAbortOnExit<'_, J, S, T> {
+    fn drop(&mut self) {
+        abort_sharded(self.shared);
+    }
+}
+
+fn abort_sharded<J, S, T>(shared: &ShardedShared<J, S, T>) {
+    let mut st = shared.state.lock().unwrap();
+    st.aborted = true;
+    drop(st);
+    shared.submit.notify_all();
+    shared.ready.notify_all();
+}
+
+/// A unit of work a sharded worker can claim.
+enum ShardWork<J> {
+    /// Enter job `seq` into the window (calls `begin` outside the lock).
+    Begin(usize),
+    /// Fetch shard position `.1` of job `.0` with the job context `.2`.
+    Fetch(usize, usize, Arc<J>),
+}
+
+/// Run `jobs` through a `depth`-deep iteration window whose shards are
+/// fanned out over `fanout` connection slots, delivering to `consume`
+/// strictly in `seq` order.
+///
+/// - `begin(job)` runs once per iteration, in window-entry order, and
+///   produces the job context every shard of that iteration shares
+///   (e.g. the adaptive split index — sampling it per *iteration* keeps
+///   all shards of one training batch shape-compatible).
+/// - `fetch_shard(ctx, job_ctx, job, shard_pos)` fetches one shard on
+///   connection slot `ctx.conn`.  On error it is retried exactly once —
+///   on a *different* slot when `fanout > 1` (`retry` enables this; the
+///   second failure is the job's error).
+/// - `assemble(job, job_ctx, parts)` reassembles the shard payloads in
+///   shard order into the iteration payload (§5.2's reorder buffer at
+///   shard level).
+/// - `consume` runs on the calling thread (it is the trainer), exactly
+///   like [`run`].
+///
+/// At most `depth` iterations are begun-but-undelivered and at most
+/// `fanout` shard fetches run concurrently.  Delivery order, shard
+/// reassembly order and therefore the learning trajectory are identical
+/// for every `fanout × depth` combination.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded<J, S, T, B, F, A, C>(
+    depth: usize,
+    fanout: usize,
+    jobs: &[Job],
+    registry: &Registry,
+    retry: bool,
+    begin: B,
+    fetch_shard: F,
+    assemble: A,
+    mut consume: C,
+) -> Result<PipelineReport>
+where
+    J: Send + Sync,
+    S: Send,
+    T: Send,
+    B: Fn(&Job) -> J + Sync,
+    F: Fn(ShardCtx, &J, &Job, usize) -> Result<ShardFetched<S>> + Sync,
+    A: Fn(&Job, &J, Vec<S>) -> Result<T> + Sync,
+    C: FnMut(Delivery<T>) -> Result<()>,
+{
+    assert!(depth >= 1, "pipeline depth must be >= 1");
+    assert!(fanout >= 1, "fetch fanout must be >= 1");
+    debug_assert!(
+        jobs.iter().enumerate().all(|(i, j)| j.seq == i),
+        "job seqs must be dense and position-ordered (use jobs_for)"
+    );
+    debug_assert!(
+        jobs.iter().all(|j| !j.shards.is_empty()),
+        "every job must carry at least one shard"
+    );
+    registry.gauge("pipeline.depth").set(depth as i64);
+    registry.gauge("pipeline.fanout").set(fanout as i64);
+    let mut report = PipelineReport::default();
+    if jobs.is_empty() {
+        return Ok(report);
+    }
+    // Per-connection accounting, resolved once (workers share by index).
+    let conn_bytes: Vec<_> = (0..fanout)
+        .map(|c| registry.counter(&format!("pipeline.conn{c}.bytes")))
+        .collect();
+    let conn_lat: Vec<_> = (0..fanout)
+        .map(|c| registry.histogram(&format!("pipeline.conn{c}.fetch_ns")))
+        .collect();
+    let shard_lat = registry.histogram("pipeline.shard_fetch_ns");
+    let retries = registry.counter("pipeline.shard_retries");
+
+    let shared = ShardedShared {
+        state: Mutex::new(ShardedState {
+            next_job: 0,
+            begins_pending: 0,
+            delivered: 0,
+            inflight: BTreeMap::new(),
+            results: BTreeMap::new(),
+            aborted: false,
+            inflight_max: 0,
+        }),
+        submit: Condvar::new(),
+        ready: Condvar::new(),
+    };
+    let shared = &shared;
+    let begin = &begin;
+    let fetch_shard = &fetch_shard;
+    let assemble = &assemble;
+    let conn_bytes = &conn_bytes;
+    let conn_lat = &conn_lat;
+    let shard_lat = &shard_lat;
+    let retries = &retries;
+
+    let out: Result<()> = std::thread::scope(|scope| {
+        let _abort_on_exit = ShardedAbortOnExit { shared };
+        for w in 0..fanout {
+            scope.spawn(move || loop {
+                // Claim the lowest-seq unit of available work.
+                let work = {
+                    let mut st = shared.state.lock().unwrap();
+                    loop {
+                        if st.aborted {
+                            return;
+                        }
+                        let claim = st
+                            .inflight
+                            .iter()
+                            .find(|(_, s)| {
+                                !s.failed && s.next_shard < s.parts.len()
+                            })
+                            .map(|(&seq, _)| seq);
+                        if let Some(seq) = claim {
+                            let slot = st.inflight.get_mut(&seq).unwrap();
+                            let shard = slot.next_shard;
+                            slot.next_shard += 1;
+                            slot.outstanding += 1;
+                            break ShardWork::Fetch(
+                                seq,
+                                shard,
+                                slot.ctx.clone(),
+                            );
+                        }
+                        if st.next_job < jobs.len()
+                            && st.next_job < st.delivered + depth
+                        {
+                            let seq = st.next_job;
+                            st.next_job += 1;
+                            st.begins_pending += 1;
+                            st.inflight_max = st
+                                .inflight_max
+                                .max(st.next_job - st.delivered);
+                            break ShardWork::Begin(seq);
+                        }
+                        if st.next_job >= jobs.len()
+                            && st.begins_pending == 0
+                        {
+                            // Every job is begun and every startable
+                            // shard is claimed: no new work can appear
+                            // for this worker.
+                            return;
+                        }
+                        st = shared.submit.wait(st).unwrap();
+                    }
+                };
+                match work {
+                    ShardWork::Begin(seq) => {
+                        let mut guard = ShardedPanicGuard {
+                            shared,
+                            seq,
+                            pending_begin: true,
+                            armed: true,
+                        };
+                        let ctx = Arc::new(begin(&jobs[seq]));
+                        guard.armed = false;
+                        let n = jobs[seq].shards.len().max(1);
+                        let mut st = shared.state.lock().unwrap();
+                        st.begins_pending -= 1;
+                        st.inflight.insert(
+                            seq,
+                            JobSlot {
+                                ctx,
+                                started: Instant::now(),
+                                next_shard: 0,
+                                outstanding: 0,
+                                done: 0,
+                                parts: (0..n).map(|_| None).collect(),
+                                bytes: 0,
+                                failed: false,
+                            },
+                        );
+                        drop(st);
+                        // Siblings can now claim this job's shards.
+                        shared.submit.notify_all();
+                    }
+                    ShardWork::Fetch(seq, shard, ctx) => {
+                        let mut guard = ShardedPanicGuard {
+                            shared,
+                            seq,
+                            pending_begin: false,
+                            armed: true,
+                        };
+                        let t0 = Instant::now();
+                        let mut used_conn = w;
+                        let mut res = fetch_shard(
+                            ShardCtx {
+                                conn: used_conn,
+                                attempt: 0,
+                            },
+                            &ctx,
+                            &jobs[seq],
+                            shard,
+                        );
+                        if res.is_err() && retry {
+                            // Retry once on another connection slot (the
+                            // same, reconnected, slot when fanout == 1).
+                            used_conn = (w + 1) % fanout;
+                            retries.inc();
+                            res = fetch_shard(
+                                ShardCtx {
+                                    conn: used_conn,
+                                    attempt: 1,
+                                },
+                                &ctx,
+                                &jobs[seq],
+                                shard,
+                            );
+                        }
+                        let elapsed = t0.elapsed();
+                        if let Ok(sf) = &res {
+                            shard_lat.record(elapsed.as_nanos() as u64);
+                            conn_lat[used_conn]
+                                .record(elapsed.as_nanos() as u64);
+                            conn_bytes[used_conn].add(sf.bytes);
+                        }
+                        finish_shard(
+                            shared, registry, jobs, assemble, seq, shard,
+                            res,
+                        );
+                        guard.armed = false;
+                    }
+                }
+            });
+        }
+
+        // The consumer: this thread is the trainer.
+        for seq in 0..jobs.len() {
+            let wait0 = Instant::now();
+            let fetched = {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    if let Some(r) = st.results.remove(&seq) {
+                        break r;
+                    }
+                    st = shared.ready.wait(st).unwrap();
+                }
+            };
+            let stall = wait0.elapsed();
+            registry
+                .histogram("pipeline.stall_ns")
+                .record(stall.as_nanos() as u64);
+            let fetched = match fetched {
+                Ok(f) => f,
+                Err(e) => {
+                    abort_sharded(shared);
+                    return Err(e);
+                }
+            };
+            // Open the window *before* computing so the freed slot's
+            // shards overlap this iteration's compute.
+            {
+                let mut st = shared.state.lock().unwrap();
+                st.delivered += 1;
+                drop(st);
+                shared.submit.notify_all();
+            }
+            report.iterations += 1;
+            report.bytes += fetched.bytes;
+            report.stall += stall;
+            registry.counter("pipeline.iterations").inc();
+            let delivery = Delivery {
+                seq,
+                payload: fetched.payload,
+                bytes: fetched.bytes,
+                fetch_time: fetched.fetch_time,
+                stall,
+            };
+            if let Err(e) = consume(delivery) {
+                abort_sharded(shared);
+                return Err(e);
+            }
+        }
+        Ok(())
+    });
+    out?;
+
+    let st = shared.state.lock().unwrap();
+    report.inflight_max = st.inflight_max;
+    registry
+        .gauge("pipeline.inflight_max")
+        .set(st.inflight_max as i64);
+    Ok(report)
+}
+
+/// Fold one finished shard fetch into its job slot: record the part,
+/// fail the job on error, and — when the last part lands — reassemble
+/// in shard order and publish the iteration result.
+fn finish_shard<J, S, T, A>(
+    shared: &ShardedShared<J, S, T>,
+    registry: &Registry,
+    jobs: &[Job],
+    assemble: &A,
+    seq: usize,
+    shard: usize,
+    res: Result<ShardFetched<S>>,
+) where
+    A: Fn(&Job, &J, Vec<S>) -> Result<T> + Sync,
+{
+    let mut st = shared.state.lock().unwrap();
+    if st.aborted {
+        return;
+    }
+    let Some(slot) = st.inflight.get_mut(&seq) else {
+        // Slot already failed out and drained; nothing to record.
+        return;
+    };
+    slot.outstanding -= 1;
+    match res {
+        Err(e) => {
+            slot.failed = true;
+            if slot.outstanding == 0 {
+                st.inflight.remove(&seq);
+            }
+            st.results.entry(seq).or_insert_with(|| Err(e));
+            drop(st);
+            shared.ready.notify_all();
+            // Unclaimed shards of this job vanished: waiting workers
+            // must re-evaluate their exit condition.
+            shared.submit.notify_all();
+        }
+        Ok(sf) => {
+            slot.bytes += sf.bytes;
+            slot.parts[shard] = Some(sf.payload);
+            slot.done += 1;
+            if slot.failed {
+                if slot.outstanding == 0 {
+                    st.inflight.remove(&seq);
+                }
+                return;
+            }
+            if slot.done < slot.parts.len() {
+                return;
+            }
+            // Last part: reassemble outside the lock.
+            let JobSlot {
+                ctx,
+                started,
+                parts,
+                bytes,
+                ..
+            } = st.inflight.remove(&seq).unwrap();
+            drop(st);
+            let fetch_time = started.elapsed();
+            let parts: Vec<S> =
+                parts.into_iter().map(|p| p.unwrap()).collect();
+            let assembled = assemble(&jobs[seq], &ctx, parts).map(
+                |payload| Fetched {
+                    payload,
+                    bytes,
+                    fetch_time,
+                },
+            );
+            if assembled.is_ok() {
+                registry
+                    .histogram("pipeline.fetch_ns")
+                    .record(fetch_time.as_nanos() as u64);
+                registry.counter("pipeline.bytes").add(bytes);
+            }
+            let mut st = shared.state.lock().unwrap();
+            st.results.insert(seq, assembled);
+            drop(st);
+            shared.ready.notify_all();
+        }
+    }
 }
 
 /// Build per-iteration jobs from a shard count and group size (the
@@ -560,5 +1068,217 @@ mod tests {
         assert!(reg.gauge("pipeline.inflight_max").get() <= 2);
         assert_eq!(reg.gauge("pipeline.depth").get(), 2);
         assert_eq!(reg.histogram("pipeline.fetch_ns").count(), 8);
+    }
+
+    // --- sharded engine ------------------------------------------------
+
+    #[test]
+    fn sharded_delivers_in_order_and_reassembles_shards() {
+        let jobs = jobs_for(24, 3); // 8 iterations × 3 shards
+        let reg = Registry::new();
+        let mut seen = Vec::new();
+        let report = run_sharded(
+            2,
+            4,
+            &jobs,
+            &reg,
+            true,
+            |job| job.seq * 100,
+            |_ctx, job_ctx, job, shard| {
+                // Scramble completion order across shards and jobs.
+                std::thread::sleep(Duration::from_micros(
+                    ((job.shards[shard] * 37) % 11) as u64 * 120,
+                ));
+                Ok(ShardFetched {
+                    payload: (*job_ctx, job.shards[shard]),
+                    bytes: 5,
+                })
+            },
+            |job, job_ctx, parts| {
+                // Shard-order reassembly: parts arrive in shard order
+                // regardless of completion order.
+                assert_eq!(parts.len(), job.shards.len());
+                for (p, &s) in parts.iter().zip(&job.shards) {
+                    assert_eq!(p, &(*job_ctx, s));
+                }
+                Ok(job.seq)
+            },
+            |d| {
+                seen.push(d.payload);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        assert_eq!(report.iterations, 8);
+        assert_eq!(report.bytes, 24 * 5);
+        assert!(report.inflight_max <= 2);
+        assert_eq!(reg.gauge("pipeline.fanout").get(), 4);
+        assert_eq!(reg.histogram("pipeline.shard_fetch_ns").count(), 24);
+        // Per-connection byte accounting sums to the total.
+        let per_conn: u64 = (0..4)
+            .map(|c| reg.counter(&format!("pipeline.conn{c}.bytes")).get())
+            .sum();
+        assert_eq!(per_conn, 24 * 5);
+    }
+
+    #[test]
+    fn sharded_retries_on_another_connection() {
+        let jobs = jobs_for(12, 2);
+        let reg = Registry::new();
+        let first_conns = Mutex::new(std::collections::BTreeMap::new());
+        let report = run_sharded(
+            2,
+            3,
+            &jobs,
+            &reg,
+            true,
+            |_| (),
+            |ctx, _: &(), job, shard| {
+                let key = (job.seq, shard);
+                if ctx.attempt == 0 {
+                    first_conns.lock().unwrap().insert(key, ctx.conn);
+                    if job.shards[shard] % 3 == 0 {
+                        return Err(Error::other("flaky link"));
+                    }
+                } else {
+                    // Retry must land on a different connection slot.
+                    let first =
+                        *first_conns.lock().unwrap().get(&key).unwrap();
+                    assert_ne!(
+                        ctx.conn, first,
+                        "retry reused the failing connection"
+                    );
+                }
+                Ok(ShardFetched {
+                    payload: job.shards[shard],
+                    bytes: 1,
+                })
+            },
+            |job, _, parts| {
+                assert_eq!(parts, job.shards);
+                Ok(job.seq)
+            },
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(report.iterations, 6);
+        assert_eq!(reg.counter("pipeline.shard_retries").get(), 4);
+    }
+
+    #[test]
+    fn sharded_double_failure_surfaces_in_order() {
+        let jobs = jobs_for(10, 2); // 5 iterations
+        let reg = Registry::new();
+        let mut seen = Vec::new();
+        let err = run_sharded(
+            3,
+            2,
+            &jobs,
+            &reg,
+            true,
+            |_| (),
+            |_ctx, _: &(), job, shard| {
+                if job.seq == 2 && shard == 1 {
+                    Err(Error::other("dead shard"))
+                } else {
+                    Ok(ShardFetched {
+                        payload: job.shards[shard],
+                        bytes: 1,
+                    })
+                }
+            },
+            |job, _, _| Ok(job.seq),
+            |d| {
+                seen.push(d.payload);
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("dead shard"));
+        assert_eq!(seen, vec![0, 1]);
+    }
+
+    #[test]
+    fn sharded_consume_error_aborts() {
+        let jobs = jobs_for(40, 1);
+        let reg = Registry::new();
+        let err = run_sharded(
+            2,
+            2,
+            &jobs,
+            &reg,
+            false,
+            |_| (),
+            |_ctx, _: &(), job, _| {
+                Ok(ShardFetched {
+                    payload: job.seq,
+                    bytes: 1,
+                })
+            },
+            |job, _, _| Ok(job.seq),
+            |d| {
+                if d.payload == 3 {
+                    Err(Error::other("trainer failed"))
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("trainer failed"));
+    }
+
+    #[test]
+    fn sharded_fetch_panic_fails_fast() {
+        let jobs = jobs_for(8, 2);
+        let reg = Registry::new();
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                run_sharded(
+                    2,
+                    2,
+                    &jobs,
+                    &reg,
+                    false,
+                    |_| (),
+                    |_ctx, _: &(), job, shard| {
+                        if job.seq == 1 && shard == 0 {
+                            panic!("boom in shard fetch");
+                        }
+                        Ok(ShardFetched {
+                            payload: (),
+                            bytes: 1,
+                        })
+                    },
+                    |job, _, _| Ok(job.seq),
+                    |_| Ok(()),
+                )
+            }),
+        );
+        assert!(outcome.is_err(), "worker panic must propagate");
+    }
+
+    #[test]
+    fn sharded_empty_jobs() {
+        let reg = Registry::new();
+        let report = run_sharded(
+            2,
+            3,
+            &[],
+            &reg,
+            true,
+            |_| (),
+            |_ctx, _: &(), _, _| {
+                Ok(ShardFetched {
+                    payload: (),
+                    bytes: 0,
+                })
+            },
+            |job, _: &(), _| Ok(job.seq),
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(report.iterations, 0);
     }
 }

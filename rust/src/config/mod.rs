@@ -13,6 +13,12 @@
 //!   double buffering) — training iterations kept in flight against the
 //!   COS by the client's prefetch engine; deeper windows hide COS
 //!   latency (fig16 sweeps the axis).
+//! - `fetch_fanout` (`--fetch-fanout`, default 0 = auto) — COS
+//!   connections in the client's sharded fetch pool; shards of every
+//!   in-flight iteration are fanned out over these links.  Auto sizes
+//!   the pool to one link per in-flight shard
+//!   (`pipeline_depth × shards_per_iter`, capped); the fanout-sweep
+//!   bench (`fig16_fetch_fanout`) sweeps the axis.
 //! - `adaptive_split` (`--adaptive-split`, default off) — re-run
 //!   Algorithm 1 between iterations from per-window bandwidth
 //!   re-measurement (Table 4 dynamics).
@@ -81,6 +87,13 @@ pub struct HapiConfig {
     /// reproduce the paper's comm/comp balance; deeper windows hide
     /// per-request COS latency behind more compute (fig16 sweeps this).
     pub pipeline_depth: usize,
+    /// Connection-pool size for the client's sharded multi-link fetch:
+    /// shards of every in-flight iteration are fanned out over this
+    /// many COS connections.  0 = auto (one link per in-flight shard,
+    /// `pipeline_depth × shards_per_iter`, capped at
+    /// [`HapiConfig::MAX_AUTO_FANOUT`]); see
+    /// [`HapiConfig::resolved_fanout`].
+    pub fetch_fanout: usize,
     /// Re-run Algorithm 1 between iterations from per-window bandwidth
     /// re-measurement (Table 4 dynamics).  Off by default: the paper's
     /// client decides once per application.
@@ -177,6 +190,7 @@ impl Default for HapiConfig {
             split_window_secs: 1.0,
             batch_adaptation: true,
             pipeline_depth: 1,
+            fetch_fanout: 0,
             adaptive_split: false,
             backend: BackendKind::Hlo,
             sim_compute_gflops: 0.0,
@@ -187,6 +201,22 @@ impl Default for HapiConfig {
 }
 
 impl HapiConfig {
+    /// Cap on the auto-sized (`fetch_fanout = 0`) connection pool.
+    pub const MAX_AUTO_FANOUT: usize = 32;
+
+    /// Effective connection-pool size for a client fetching
+    /// `shards_per_iter` shards per iteration: `fetch_fanout` when set,
+    /// else one link per in-flight shard
+    /// (`pipeline_depth × shards_per_iter`), capped at
+    /// [`Self::MAX_AUTO_FANOUT`].
+    pub fn resolved_fanout(&self, shards_per_iter: usize) -> usize {
+        match self.fetch_fanout {
+            0 => (self.pipeline_depth * shards_per_iter.max(1))
+                .clamp(1, Self::MAX_AUTO_FANOUT),
+            n => n,
+        }
+    }
+
     /// defaults <- optional `--config <file>` <- individual flags.
     pub fn from_args(args: &Args) -> Result<HapiConfig> {
         let mut cfg = HapiConfig::default();
@@ -238,6 +268,7 @@ impl HapiConfig {
                     self.batch_adaptation = v.as_bool()?
                 }
                 "pipeline_depth" => self.pipeline_depth = v.as_usize()?,
+                "fetch_fanout" => self.fetch_fanout = v.as_usize()?,
                 "adaptive_split" => self.adaptive_split = v.as_bool()?,
                 "backend" => {
                     self.backend = BackendKind::parse(v.as_str()?)?
@@ -283,6 +314,8 @@ impl HapiConfig {
         self.train_batch = args.parse_or("train-batch", self.train_batch)?;
         self.pipeline_depth =
             args.parse_or("pipeline-depth", self.pipeline_depth)?;
+        self.fetch_fanout =
+            args.parse_or("fetch-fanout", self.fetch_fanout)?;
         if args.flag("adaptive-split") {
             self.adaptive_split = true;
         }
@@ -421,6 +454,7 @@ impl HapiConfig {
             ("split_window_secs", Json::num(self.split_window_secs)),
             ("batch_adaptation", Json::Bool(self.batch_adaptation)),
             ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
+            ("fetch_fanout", Json::num(self.fetch_fanout as f64)),
             ("adaptive_split", Json::Bool(self.adaptive_split)),
             ("backend", Json::str(self.backend.as_str())),
             (
@@ -516,6 +550,8 @@ mod tests {
         let cfg = HapiConfig::from_args(&args(&[
             "--pipeline-depth",
             "4",
+            "--fetch-fanout",
+            "3",
             "--backend",
             "sim",
             "--sim-gflops",
@@ -524,6 +560,7 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(cfg.pipeline_depth, 4);
+        assert_eq!(cfg.fetch_fanout, 3);
         assert_eq!(cfg.backend, BackendKind::Sim);
         assert_eq!(cfg.sim_compute_gflops, 1.5);
         assert!(cfg.adaptive_split);
@@ -532,6 +569,27 @@ mod tests {
         bad.pipeline_depth = 0;
         assert!(bad.validate().is_err());
         assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn fanout_resolution() {
+        let mut cfg = HapiConfig::default();
+        // Auto: one link per in-flight shard, capped.
+        cfg.pipeline_depth = 2;
+        assert_eq!(cfg.resolved_fanout(5), 10);
+        assert_eq!(cfg.resolved_fanout(0), 2);
+        cfg.pipeline_depth = 64;
+        assert_eq!(
+            cfg.resolved_fanout(64),
+            HapiConfig::MAX_AUTO_FANOUT
+        );
+        // Explicit fanout wins verbatim.
+        cfg.fetch_fanout = 3;
+        assert_eq!(cfg.resolved_fanout(64), 3);
+        // JSON roundtrip carries the knob.
+        let mut cfg2 = HapiConfig::default();
+        cfg2.merge_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.fetch_fanout, 3);
     }
 
     #[test]

@@ -73,14 +73,14 @@ impl Testbed {
         );
         // Do not cap request concurrency below what the devices'
         // admission control allows: the paper serves each POST in its
-        // own process.  The pipelined client keeps up to
-        // `depth × shards-per-iteration` POSTs outstanding inside the
-        // planner's gather window; size the pool so the window actually
-        // sees the whole burst (16 covers any single-tenant bench).
+        // own process.  The sharded client keeps up to
+        // `resolved_fanout` POSTs outstanding inside the planner's
+        // gather window; size the pool so the window actually sees the
+        // whole burst (16 covers any single-tenant bench).
         let shards_per_iter =
             (cfg.train_batch / cfg.object_samples).max(1);
         let compute_workers =
-            16.max(cfg.pipeline_depth * shards_per_iter);
+            16.max(cfg.resolved_fanout(shards_per_iter));
         let proxy = Proxy::start(
             cluster.clone(),
             server.clone(),

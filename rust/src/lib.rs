@@ -23,8 +23,9 @@
 //! - [`split`] — the paper's Algorithm 1 (split-index selection).
 //! - [`batch`] — the Eq. 4 batch-adaptation solver.
 //! - [`server`]/[`client`] — the Hapi server (COS side) and client
-//!   (compute tier); `client::pipeline` is the configurable-depth
-//!   cross-tier prefetch engine every competitor trains through.
+//!   (compute tier); `client::pipeline` is the configurable-depth,
+//!   sharded multi-connection cross-tier prefetch engine every
+//!   competitor trains through (`pipeline_depth` × `fetch_fanout`).
 //! - [`baseline`] — BASELINE / ALL_IN_COS / static-freeze-split
 //!   competitors from §7.
 //! - [`theory`] — the §4 cost model (Eqs. 1–3).

@@ -76,6 +76,8 @@ fn usage() {
          \x20 --cos-gpus N, --cos-gpu-mem BYTES, --no-batch-adaptation\n\
          \x20 --backend hlo|sim      execution backend (sim needs no artifacts)\n\
          \x20 --pipeline-depth N     prefetched iterations in flight (default 1)\n\
+         \x20 --fetch-fanout N       COS connections in the sharded fetch pool\n\
+         \x20                        (default 0 = one per in-flight shard)\n\
          \x20 --adaptive-split       re-run Algorithm 1 per bandwidth window\n\
          \x20 --sim-gflops G         sim backend modeled compute rate (0 = instant)\n\
          \x20 --baseline             (train) run the BASELINE competitor\n\

@@ -154,6 +154,7 @@ impl HapiServer {
             req.mem_model_bytes,
             req.b_max.min(samples),
             self.cfg.default_cos_batch,
+            req.burst_width,
         )?;
         let device = &self.devices[device_idx];
 

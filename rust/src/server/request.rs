@@ -31,6 +31,11 @@ pub struct PostRequest {
     pub mem_data_per_sample: u64,
     /// §5.3 profile: pushed-down weight bytes.
     pub mem_model_bytes: u64,
+    /// How many requests this client keeps in flight
+    /// (`pipeline_depth × shards_per_iter`): the burst the planner's
+    /// adaptive gather window should wait for.  0 = unreported (old
+    /// clients); the planner treats it as 1.
+    pub burst_width: usize,
     pub mode: RequestMode,
 }
 
@@ -60,6 +65,11 @@ impl PostRequest {
             b_max: j.get("b_max")?.as_usize()?,
             mem_data_per_sample: mem.get("data_per_sample")?.as_u64()?,
             mem_model_bytes: mem.get("model_bytes")?.as_u64()?,
+            burst_width: j
+                .opt("burst_width")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(0),
             mode,
         };
         if req.input_dims.is_empty() || req.input_dims[0] == 0 {
@@ -91,6 +101,7 @@ impl PostRequest {
                 ),
             ),
             ("b_max", Json::num(self.b_max as f64)),
+            ("burst_width", Json::num(self.burst_width as f64)),
             (
                 "mem",
                 Json::obj(vec![
@@ -128,6 +139,7 @@ mod tests {
             b_max: 100,
             mem_data_per_sample: 65536,
             mem_model_bytes: 123456,
+            burst_width: 8,
             mode: RequestMode::FeatureExtract,
         }
     }
@@ -142,7 +154,20 @@ mod tests {
         assert_eq!(back.split_idx, 5);
         assert_eq!(back.input_dims, vec![100, 3, 32, 32]);
         assert_eq!(back.mem_data_per_sample, 65536);
+        assert_eq!(back.burst_width, 8);
         assert_eq!(back.mode, RequestMode::FeatureExtract);
+    }
+
+    #[test]
+    fn burst_width_defaults_to_unreported() {
+        // Headers from clients that predate the sharded engine carry no
+        // burst_width; parsing must not reject them.
+        let mut j = sample().to_json();
+        if let crate::util::json::Json::Obj(fields) = &mut j {
+            fields.remove("burst_width");
+        }
+        let back = PostRequest::parse(&j).unwrap();
+        assert_eq!(back.burst_width, 0);
     }
 
     #[test]

@@ -86,6 +86,49 @@ fn loss_trajectory_bitwise_stable_across_depths() {
     assert_eq!(d1, d4, "depth 4 changed the loss trajectory");
 }
 
+/// The sharded-fetch invariant, end to end: fanning an iteration's
+/// shards over 1, 2 or 4 COS connections at pipeline depth 1 or 2 only
+/// changes timing — the loss trajectory stays **bitwise** identical
+/// (shard-order reassembly + in-order delivery).
+#[test]
+fn loss_trajectory_bitwise_stable_across_fanout_and_depth() {
+    let run_cfg = |depth: usize, fanout: usize| -> Vec<u32> {
+        let mut cfg = sim_cfg();
+        cfg.pipeline_depth = depth;
+        cfg.fetch_fanout = fanout;
+        let bed = Testbed::launch(cfg).unwrap();
+        let (ds, labels) =
+            bed.dataset("fan-ds", "simnet", 240).unwrap();
+        let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+        let stats = client.train_epoch(&ds, &labels).unwrap();
+        assert_eq!(stats.iterations, 6);
+        assert!(stats.max_inflight <= depth);
+        // Per-connection byte accounting covers every connection slot
+        // that moved data, and sums to the pipeline total.
+        let total = bed.registry.counter("pipeline.bytes").get();
+        let per_conn: u64 = (0..fanout)
+            .map(|c| {
+                bed.registry
+                    .counter(&format!("pipeline.conn{c}.bytes"))
+                    .get()
+            })
+            .sum();
+        assert_eq!(per_conn, total, "per-connection bytes must merge");
+        assert!(total > 0);
+        bed.stop();
+        stats.loss.iter().map(|l| l.to_bits()).collect()
+    };
+
+    let base = run_cfg(1, 1);
+    for (depth, fanout) in [(1, 2), (1, 4), (2, 1), (2, 2), (2, 4)] {
+        assert_eq!(
+            base,
+            run_cfg(depth, fanout),
+            "depth {depth} × fanout {fanout} changed the trajectory"
+        );
+    }
+}
+
 /// Decoupling invariant on the sim backend, bitwise: pushing units down
 /// to the COS (Hapi) computes exactly what the local BASELINE computes.
 #[test]
