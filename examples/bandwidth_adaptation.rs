@@ -6,6 +6,8 @@
 //! degrades linearly.
 //!
 //! Run with: `cargo run --release --example bandwidth_adaptation`
+//! (uses HLO artifacts when `make artifacts` was run, else the
+//! artifact-free sim backend).
 
 use hapi::config::HapiConfig;
 use hapi::harness::Testbed;
@@ -13,25 +15,26 @@ use hapi::metrics::Table;
 use hapi::netsim;
 use hapi::runtime::DeviceKind;
 use hapi::util::{fmt_bytes, fmt_duration};
+use hapi::workload::tenant_model_for;
 
 fn main() -> hapi::Result<()> {
     let mut table = Table::new(
-        "Algorithm 1 under different bandwidths (alexnet, 1 epoch)",
+        "Algorithm 1 under different bandwidths (1 epoch)",
         &["bandwidth", "system", "split", "bytes from COS", "epoch time"],
     );
     for mbps in [25.0, 100.0, 1000.0] {
         for baseline in [false, true] {
-            let mut cfg = HapiConfig::default();
-            cfg.artifacts_dir = HapiConfig::discover_artifacts()
-                .expect("run `make artifacts` first");
+            let mut cfg = HapiConfig::discovered_or_sim();
             cfg.bandwidth = Some(netsim::mbps(mbps));
             cfg.train_batch = 100;
+            // alexnet, or simnet on the sim fallback.
+            let model = tenant_model_for(&cfg, 0);
             let bed = Testbed::launch(cfg)?;
-            let (ds, labels) = bed.dataset("bw", "alexnet", 200)?;
+            let (ds, labels) = bed.dataset("bw", model, 200)?;
             let client = if baseline {
-                bed.baseline_client("alexnet", DeviceKind::Gpu)?
+                bed.baseline_client(model, DeviceKind::Gpu)?
             } else {
-                bed.hapi_client("alexnet", DeviceKind::Gpu)?
+                bed.hapi_client(model, DeviceKind::Gpu)?
             };
             let t0 = std::time::Instant::now();
             let stats = client.train_epoch(&ds, &labels)?;

@@ -1,6 +1,8 @@
 //! Memory-model calibration inspector: per-model footprints that
 //! back the config defaults (EXPERIMENTS.md §Calibration).
 //! Run with: `cargo run --release --example calibration`
+//! (uses HLO artifacts when `make artifacts` was run, else the
+//! built-in sim profiles).
 
 use hapi::config::{HapiConfig, Scale};
 use hapi::model::ModelRegistry;
@@ -8,9 +10,8 @@ use hapi::profiler::AppProfile;
 use hapi::util::fmt_bytes;
 
 fn main() {
-    let mut cfg = HapiConfig::default();
-    cfg.artifacts_dir = HapiConfig::discover_artifacts().unwrap();
-    let models = ModelRegistry::load_dir(cfg.profiles_dir()).unwrap();
+    let cfg = HapiConfig::discovered_or_sim();
+    let models = ModelRegistry::for_config(&cfg).unwrap();
     for m in models.iter() {
         let app = AppProfile::new(m.clone(), Scale::Tiny);
         let mem = app.memory();

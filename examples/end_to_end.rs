@@ -8,13 +8,16 @@
 //! same data for the headline runtime/transfer comparison.
 //!
 //! Run with: `cargo run --release --example end_to_end`
+//! (uses HLO artifacts when `make artifacts` was run, else the
+//! artifact-free sim backend).
 //! Environment: HAPI_E2E_EPOCHS / HAPI_E2E_SAMPLES override the defaults.
 
-use hapi::config::HapiConfig;
+use hapi::config::{BackendKind, HapiConfig};
 use hapi::harness::Testbed;
 use hapi::metrics::Table;
 use hapi::runtime::DeviceKind;
 use hapi::util::{fmt_bytes, fmt_duration};
+use hapi::workload::tenant_model_for;
 
 fn env_or(name: &str, default: usize) -> usize {
     std::env::var(name)
@@ -27,16 +30,20 @@ fn main() -> hapi::Result<()> {
     let epochs = env_or("HAPI_E2E_EPOCHS", 20);
     let samples = env_or("HAPI_E2E_SAMPLES", 500);
 
-    let mut cfg = HapiConfig::default();
-    cfg.artifacts_dir = HapiConfig::discover_artifacts()
-        .expect("run `make artifacts` first");
+    let mut cfg = HapiConfig::discovered_or_sim();
     cfg.train_batch = 100; // 5 steps/epoch at 500 samples
+    let model = tenant_model_for(&cfg, 0); // alexnet, or simnet on sim
+    if cfg.backend == BackendKind::Sim {
+        // The tiny sim profiles train at a higher rate (matches the
+        // sim e2e tests) so the loss curve visibly falls.
+        cfg.learning_rate = 0.3;
+    }
     let bed = Testbed::launch(cfg)?;
-    let (ds, labels) = bed.dataset("e2e", "alexnet", samples)?;
+    let (ds, labels) = bed.dataset("e2e", model, samples)?;
 
-    let client = bed.hapi_client("alexnet", DeviceKind::Gpu)?;
+    let client = bed.hapi_client(model, DeviceKind::Gpu)?;
     println!(
-        "== Hapi end-to-end: alexnet, {samples} samples, batch {}, \
+        "== Hapi end-to-end: {model}, {samples} samples, batch {}, \
          split {} / freeze {} ==",
         bed.cfg.train_batch,
         client.split.split_idx,
@@ -80,7 +87,7 @@ fn main() -> hapi::Result<()> {
 
     // BASELINE comparison on the same dataset (one epoch each way).
     bed.link.stats().reset();
-    let base = bed.baseline_client("alexnet", DeviceKind::Gpu)?;
+    let base = bed.baseline_client(model, DeviceKind::Gpu)?;
     let t0 = std::time::Instant::now();
     let bstats = base.train_epoch(&ds, &labels)?;
     let base_time = t0.elapsed() * epochs as u32;

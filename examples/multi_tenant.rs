@@ -1,34 +1,40 @@
 //! Multi-tenant COS sharing (the §7.5 scenario, scaled down).
 //!
 //! Several tenants submit TL jobs at t=0 (models round-robin from
-//! Table 1); the Hapi server shares its two simulated devices among them
-//! with batch adaptation.  Compares against ALL_IN_COS, which pushes the
-//! whole computation down and scales poorly.
+//! Table 1, or the built-in sim profiles on a fresh clone); the Hapi
+//! server shares its two simulated devices among them with batch
+//! adaptation.  Compares against ALL_IN_COS, which pushes the whole
+//! computation down and scales poorly.
+//!
+//! Each tenant reports a stable `client_id`, so the planner gathers
+//! every tenant's request burst in its own lane — the per-lane gather
+//! windows printed at the end show that a shallow tenant's window stays
+//! ~zero regardless of how deep its co-tenants pipeline.
 //!
 //! Run with: `cargo run --release --example multi_tenant [-- tenants]`
+//! (uses HLO artifacts when `make artifacts` was run, else the
+//! artifact-free sim backend).
 
 use hapi::config::HapiConfig;
 use hapi::harness::Testbed;
 use hapi::metrics::Table;
 use hapi::runtime::DeviceKind;
 use hapi::util::fmt_duration;
-use hapi::workload::run_tenants;
+use hapi::workload::{run_tenants_with, tenant_model_for};
 
 fn main() -> hapi::Result<()> {
     let tenants: usize = std::env::args()
         .nth(1)
         .and_then(|v| v.parse().ok())
         .unwrap_or(4);
-    let mut cfg = HapiConfig::default();
-    cfg.artifacts_dir = HapiConfig::discover_artifacts()
-        .expect("run `make artifacts` first");
+    let mut cfg = HapiConfig::discovered_or_sim();
     cfg.bandwidth = None; // stress the COS, not the network (§7.5)
     cfg.train_batch = 100;
 
     let bed = Testbed::launch(cfg)?;
     // One dataset per tenant model (duplicates are cheap).
     for t in 0..tenants {
-        let model = hapi::workload::tenant_model(t);
+        let model = tenant_model_for(&bed.cfg, t);
         bed.dataset(&format!("mt-{t}"), model, 100)?;
     }
 
@@ -38,9 +44,11 @@ fn main() -> hapi::Result<()> {
     );
 
     for (label, all_in_cos) in [("Hapi", false), ("ALL_IN_COS", true)] {
-        let report = run_tenants(tenants, |t, model| {
-            let (ds, labels) = (
-                {
+        let report = run_tenants_with(
+            tenants,
+            |t| tenant_model_for(&bed.cfg, t),
+            |t, model| {
+                let (ds, labels) = {
                     let app = bed.app(model)?;
                     let spec = hapi::client::DatasetSpec {
                         name: format!("mt-{t}"),
@@ -50,17 +58,22 @@ fn main() -> hapi::Result<()> {
                         shard_samples: bed.cfg.object_samples,
                         seed: bed.cfg.seed,
                     };
-                    (spec.to_ref(), spec.shards().flat_map(|(_, l)| l).collect::<Vec<i32>>())
+                    (
+                        spec.to_ref(),
+                        spec.shards()
+                            .flat_map(|(_, l)| l)
+                            .collect::<Vec<i32>>(),
+                    )
+                };
+                if all_in_cos {
+                    bed.all_in_cos_client(model)?.train_epoch(&ds)?;
+                } else {
+                    bed.hapi_client(model, DeviceKind::Gpu)?
+                        .train_epoch(&ds, &labels)?;
                 }
-            );
-            if all_in_cos {
-                bed.all_in_cos_client(model)?.train_epoch(&ds)?;
-            } else {
-                bed.hapi_client(model, DeviceKind::Gpu)?
-                    .train_epoch(&ds, &labels)?;
-            }
-            Ok(())
-        });
+                Ok(())
+            },
+        );
         for r in &report.results {
             println!(
                 "  [{label}] tenant {} ({:12}) jct {}  {}",
@@ -84,6 +97,24 @@ fn main() -> hapi::Result<()> {
         "batch adaptation: {total} requests, {reduced} reduced, \
          avg reduction {avg_pct:.1}% (p95 {p95:.1}%)"
     );
+    // Per-client gather lanes: every tenant's burst gathered in its own
+    // window (lane ids are the clients' auto-allocated `client_id`s).
+    let snap = bed.registry.snapshot();
+    if let Ok(hists) = snap.get("histograms").and_then(|h| h.as_obj()) {
+        println!("per-lane gather windows (head-of-line isolation):");
+        for (name, h) in hists {
+            if let Some(lane) = name
+                .strip_prefix("ba.lane.")
+                .and_then(|s| s.strip_suffix(".gather_window_ns"))
+            {
+                println!(
+                    "  lane {lane}: {} gathers, p95 {:.3} ms",
+                    h.get("count")?.as_u64()?,
+                    h.get("p95")?.as_f64()? / 1e6,
+                );
+            }
+        }
+    }
     bed.stop();
     Ok(())
 }

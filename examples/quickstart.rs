@@ -5,25 +5,26 @@
 //! the feature-extraction prefix pushed down to the COS.
 //!
 //! Run with: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first).
+//! (uses HLO artifacts when `make artifacts` was run, else the
+//! artifact-free sim backend).
 
 use hapi::config::HapiConfig;
 use hapi::harness::Testbed;
 use hapi::runtime::DeviceKind;
 use hapi::util::{fmt_bytes, fmt_duration};
+use hapi::workload::tenant_model_for;
 
 fn main() -> hapi::Result<()> {
-    let mut cfg = HapiConfig::default();
-    cfg.artifacts_dir = HapiConfig::discover_artifacts()
-        .expect("run `make artifacts` first");
+    let mut cfg = HapiConfig::discovered_or_sim();
     cfg.train_batch = 100;
+    let model = tenant_model_for(&cfg, 0); // alexnet, or simnet on sim
 
     // COS + proxy + Hapi server on a real TCP port.
     let bed = Testbed::launch(cfg)?;
-    // 300 synthetic samples, sharded into 100-sample objects.
-    let (ds, labels) = bed.dataset("quickstart", "alexnet", 300)?;
+    // 300 synthetic samples, sharded into object-sized shards.
+    let (ds, labels) = bed.dataset("quickstart", model, 300)?;
 
-    let client = bed.hapi_client("alexnet", DeviceKind::Gpu)?;
+    let client = bed.hapi_client(model, DeviceKind::Gpu)?;
     println!(
         "Algorithm 1 chose split index {} (freeze index {}): \
          {}/sample leaves the COS instead of {}/sample of raw pixels",

@@ -5,6 +5,8 @@
 //! cheap epilogue units (Fig 3's insight).
 //!
 //! Run with: `cargo run --release --example weak_client`
+//! (uses HLO artifacts when `make artifacts` was run, else the
+//! artifact-free sim backend).
 
 use hapi::config::HapiConfig;
 use hapi::harness::Testbed;
@@ -12,18 +14,22 @@ use hapi::metrics::Table;
 use hapi::netsim;
 use hapi::runtime::DeviceKind;
 use hapi::util::fmt_duration;
+use hapi::workload::tenant_model_for;
 
 fn main() -> hapi::Result<()> {
-    let mut cfg = HapiConfig::default();
-    cfg.artifacts_dir = HapiConfig::discover_artifacts()
-        .expect("run `make artifacts` first");
+    let mut cfg = HapiConfig::discovered_or_sim();
     cfg.bandwidth = Some(netsim::mbps(100.0));
     cfg.train_batch = 100;
+    // resnet18, or simdeep on the sim fallback.
+    let model = tenant_model_for(&cfg, 1);
     let bed = Testbed::launch(cfg)?;
-    let (ds, labels) = bed.dataset("weak", "resnet18", 200)?;
+    let (ds, labels) = bed.dataset("weak", model, 200)?;
 
     let mut table = Table::new(
-        "weak CPU client + Hapi vs strong GPU client + BASELINE (resnet18)",
+        &format!(
+            "weak CPU client + Hapi vs strong GPU client + BASELINE \
+             ({model})"
+        ),
         &["client device", "system", "epoch time"],
     );
     let cases: [(&str, DeviceKind, bool); 3] = [
@@ -33,9 +39,9 @@ fn main() -> hapi::Result<()> {
     ];
     for (dev_label, device, baseline) in cases {
         let client = if baseline {
-            bed.baseline_client("resnet18", device)?
+            bed.baseline_client(model, device)?
         } else {
-            bed.hapi_client("resnet18", device)?
+            bed.hapi_client(model, device)?
         };
         let t0 = std::time::Instant::now();
         client.train_epoch(&ds, &labels)?;

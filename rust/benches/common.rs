@@ -9,11 +9,19 @@
 use hapi::config::HapiConfig;
 
 /// Default bench config: discovered artifacts + paper-mapped knobs.
+#[allow(dead_code)] // each bench uses the variant it needs
 pub fn bench_config() -> HapiConfig {
     let mut cfg = HapiConfig::default();
     cfg.artifacts_dir = HapiConfig::discover_artifacts()
         .expect("run `make artifacts` before cargo bench");
     cfg
+}
+
+/// Bench config that degrades to the artifact-free sim backend on a
+/// fresh clone — for benches that double as CI smokes (fig12).
+#[allow(dead_code)] // each bench uses the variant it needs
+pub fn bench_config_or_sim() -> HapiConfig {
+    HapiConfig::discovered_or_sim()
 }
 
 /// The four models of the §3 measurement study.

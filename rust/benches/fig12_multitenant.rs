@@ -1,24 +1,33 @@
 //! Fig 12 — scalability with multiple tenants vs ALL_IN_COS.
 //!
 //! N tenants (2, 6, 10) submit one job each at t=0, models round-robin
-//! over Table 1 (§7.5), training batch 100 (paper: 1000).  Reports
-//! makespan and average JCT for Hapi and ALL_IN_COS.
+//! over Table 1 (§7.5) — or over the built-in sim profiles on a fresh
+//! clone — training batch 100 (paper: 1000).  Reports makespan and
+//! average JCT for Hapi and ALL_IN_COS.
 //!
 //! Expected shape: comparable at few tenants; ALL_IN_COS falls behind as
 //! tenants grow (no batch decoupling: each job occupies the COS at the
 //! training batch size and jobs serialise).
+//!
+//! A second section exercises the planner's per-client gather lanes: a
+//! burst-1 tenant's time-to-grant (its lane's gather window) must stay
+//! ~zero no matter how deep a co-tenant pipelines (`depth × shards`),
+//! because each client gathers in its own lane — the cross-tenant
+//! head-of-line-blocking fix.
 
 #[path = "common.rs"]
 mod common;
 
+use hapi::config::BackendKind;
 use hapi::harness::Testbed;
 use hapi::metrics::Table;
 use hapi::runtime::DeviceKind;
 use hapi::util::fmt_duration;
-use hapi::workload::{run_tenants, tenant_model};
+use hapi::workload::{run_tenants_with, tenant_model_for};
 
 fn main() {
     println!("== Fig 12: multi-tenant scalability ==\n");
+    let hlo = common::bench_config_or_sim().backend == BackendKind::Hlo;
     let mut t = Table::new(
         "Hapi vs ALL_IN_COS",
         &[
@@ -35,42 +44,46 @@ fn main() {
         let mut cells = vec![tenants.to_string()];
         let mut jcts = [0.0f64; 2];
         for (i, all_in_cos) in [false, true].into_iter().enumerate() {
-            let mut cfg = common::bench_config();
+            let mut cfg = common::bench_config_or_sim();
             cfg.bandwidth = None; // overload the COS, not the network
             cfg.train_batch = 100;
             let bed = Testbed::launch(cfg).unwrap();
             // Pre-materialise one dataset per distinct model + warm.
             let mut seen = std::collections::BTreeSet::new();
             for tnt in 0..tenants {
-                let model = tenant_model(tnt);
+                let model = tenant_model_for(&bed.cfg, tnt);
                 if seen.insert(model) {
                     bed.dataset(&format!("f12-{model}"), model, 100).unwrap();
                     bed.server.warm(model).unwrap();
                 }
             }
-            let report = run_tenants(tenants, |_t, model| {
-                let (ds, labels) = {
-                    let app = bed.app(model)?;
-                    let spec = hapi::client::DatasetSpec {
-                        name: format!("f12-{model}"),
-                        input_shape: app.meta().input_shape.clone(),
-                        num_classes: app.meta().num_classes,
-                        num_samples: 100,
-                        shard_samples: bed.cfg.object_samples,
-                        seed: bed.cfg.seed,
+            let report = run_tenants_with(
+                tenants,
+                |tnt| tenant_model_for(&bed.cfg, tnt),
+                |_tnt, model| {
+                    let (ds, labels) = {
+                        let app = bed.app(model)?;
+                        let spec = hapi::client::DatasetSpec {
+                            name: format!("f12-{model}"),
+                            input_shape: app.meta().input_shape.clone(),
+                            num_classes: app.meta().num_classes,
+                            num_samples: 100,
+                            shard_samples: bed.cfg.object_samples,
+                            seed: bed.cfg.seed,
+                        };
+                        let labels: Vec<i32> =
+                            spec.shards().flat_map(|(_, l)| l).collect();
+                        (spec.to_ref(), labels)
                     };
-                    let labels: Vec<i32> =
-                        spec.shards().flat_map(|(_, l)| l).collect();
-                    (spec.to_ref(), labels)
-                };
-                if all_in_cos {
-                    bed.all_in_cos_client(model)?.train_epoch(&ds)?;
-                } else {
-                    bed.hapi_client(model, DeviceKind::Gpu)?
-                        .train_epoch(&ds, &labels)?;
-                }
-                Ok(())
-            });
+                    if all_in_cos {
+                        bed.all_in_cos_client(model)?.train_epoch(&ds)?;
+                    } else {
+                        bed.hapi_client(model, DeviceKind::Gpu)?
+                            .train_epoch(&ds, &labels)?;
+                    }
+                    Ok(())
+                },
+            );
             assert_eq!(
                 report.failures(),
                 0,
@@ -103,12 +116,101 @@ fn main() {
          as in the paper — the ratio trend survives, its magnitude is \
          muted (EXPERIMENTS.md)."
     );
-    assert!(
-        ratios.last().unwrap() + 0.05 >= *ratios.first().unwrap(),
-        "ALL_IN_COS should degrade (or at least not improve) with tenants"
+    if hlo {
+        assert!(
+            ratios.last().unwrap() + 0.05 >= *ratios.first().unwrap(),
+            "ALL_IN_COS should degrade (or at least not improve) with \
+             tenants"
+        );
+        assert!(
+            *ratios.last().unwrap() >= 0.95,
+            "at 10 tenants ALL_IN_COS must not meaningfully beat Hapi"
+        );
+    } else {
+        // Instantaneous sim compute leaves both systems overhead-bound:
+        // the JCT-ratio *shape* is only meaningful on the HLO backend,
+        // so the sim smoke checks completion (0 failures above), not
+        // the ratio.
+        println!("(sim backend: JCT-ratio shape assertions skipped)");
+    }
+
+    lane_isolation();
+}
+
+/// Per-client gather lanes: a burst-1 tenant trains next to a co-tenant
+/// of growing pipeline depth; the shallow tenant's lane gather window
+/// (its time-to-grant overhead) must not grow with the co-tenant's
+/// `depth × shards` burst.
+fn lane_isolation() {
+    println!("\n== Fig 12b: lane isolation vs co-tenant depth ==\n");
+    let mut t = Table::new(
+        "burst-1 tenant's lane gather vs co-tenant depth",
+        &["co-tenant depth", "co burst", "shallow lane p95 gather"],
     );
-    assert!(
-        *ratios.last().unwrap() >= 0.95,
-        "at 10 tenants ALL_IN_COS must not meaningfully beat Hapi"
+    let mut shallow_p95 = Vec::new();
+    for co_depth in [1usize, 4, 8] {
+        let mut cfg = common::bench_config_or_sim();
+        cfg.bandwidth = None;
+        // Shallow tenant: one shard per iteration, depth 1 → burst 1.
+        cfg.train_batch = cfg.object_samples;
+        let bed = Testbed::launch(cfg).unwrap();
+        let model = tenant_model_for(&bed.cfg, 0);
+        let samples = 10 * bed.cfg.object_samples;
+        let (ds, labels) = bed.dataset("f12b", model, samples).unwrap();
+        bed.server.warm(model).unwrap();
+
+        let shallow = bed.hapi_client(model, DeviceKind::Gpu).unwrap();
+        let mut deep_cfg = bed.cfg.clone();
+        deep_cfg.pipeline_depth = co_depth;
+        let co_burst = co_depth; // × 1 shard/iter at this train_batch
+        let mut deep = hapi::client::HapiClient::from_backend(
+            bed.app(model).unwrap(),
+            bed.backend(model).unwrap(),
+            deep_cfg,
+            bed.addr(),
+            bed.link.clone(),
+            DeviceKind::Gpu,
+            None,
+        );
+        deep.set_registry(bed.registry.clone());
+        let shallow_lane = shallow.client_id();
+
+        std::thread::scope(|scope| {
+            let h1 = scope.spawn(|| shallow.train_epoch(&ds, &labels));
+            let h2 = scope.spawn(|| deep.train_epoch(&ds, &labels));
+            h1.join().unwrap().unwrap();
+            h2.join().unwrap().unwrap();
+        });
+
+        let h = bed.registry.histogram(&format!(
+            "ba.lane.{shallow_lane}.gather_window_ns"
+        ));
+        assert!(h.count() > 0, "shallow tenant never gathered");
+        let p95 = h.p95();
+        shallow_p95.push(p95);
+        t.row(vec![
+            co_depth.to_string(),
+            co_burst.to_string(),
+            format!("{:.3} ms", p95 as f64 / 1e6),
+        ]);
+        bed.stop();
+    }
+    t.print();
+    // Independence: the shallow tenant's gather overhead must not scale
+    // with the co-tenant's burst.  3 ms (the planner's idle-exit bound)
+    // is far below the 12 ms window a shared gather would impose at
+    // depth 8 — and well above scheduler noise.
+    for (i, &p95) in shallow_p95.iter().enumerate() {
+        assert!(
+            p95 < 3_000_000,
+            "shallow lane gathered {p95} ns with co-tenant depth \
+             {} — its window scaled with a co-tenant's burst",
+            [1, 4, 8][i]
+        );
+    }
+    println!(
+        "burst-1 tenant's lane gather stays flat as the co-tenant's \
+         burst grows: {shallow_p95:?} ns — grants are independent of \
+         co-tenant depth × shards."
     );
 }

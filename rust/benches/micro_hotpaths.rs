@@ -51,6 +51,7 @@ fn main() {
         mem_data_per_sample: 47_520,
         mem_model_bytes: 1_234_567,
         burst_width: 8,
+        client_id: 3,
         mode: hapi::server::request::RequestMode::FeatureExtract,
     };
     Bench::new("post_header_roundtrip")

@@ -35,6 +35,9 @@ pub struct AllInCosClient {
     addr: String,
     link: Link,
     next_id: std::sync::atomic::AtomicU64,
+    /// Stable identity reported in every POST header so the planner
+    /// gathers this tenant's burst in its own lane.
+    client_id: u64,
     registry: Registry,
 }
 
@@ -45,14 +48,21 @@ impl AllInCosClient {
         addr: String,
         link: Link,
     ) -> AllInCosClient {
+        let client_id = crate::client::resolve_client_id(&cfg);
         AllInCosClient {
             app,
             cfg,
             addr,
             link,
             next_id: std::sync::atomic::AtomicU64::new(1),
+            client_id,
             registry: Registry::new(),
         }
+    }
+
+    /// The identity this client reports to the planner's gather lanes.
+    pub fn client_id(&self) -> u64 {
+        self.client_id
     }
 
     /// Route pipeline metrics into a shared registry.
@@ -73,12 +83,11 @@ impl AllInCosClient {
         let rx0 = self.link.stats().rx_bytes();
         let tx0 = self.link.stats().tx_bytes();
         let jobs = pipeline::jobs_for(ds.num_shards, 1);
-        // One POST per iteration: one shard per job, so the burst the
-        // planner should gather is the pipeline depth — capped by the
-        // connection pool, which bounds how many POSTs can actually be
-        // outstanding at once.
+        // One POST per iteration (one shard per job): the lane burst is
+        // the pipeline depth, capped by the connection pool.
         let fanout = self.cfg.resolved_fanout(1);
-        let burst_width = self.cfg.pipeline_depth.min(fanout);
+        let burst_width =
+            pipeline::planner_burst_width(self.cfg.pipeline_depth, 1, fanout);
         // Connection pool: `fanout` lazily-connected slots, reused
         // across requests; a connection that errored is dropped so its
         // slot reconnects (the engine retries on another slot).
@@ -119,21 +128,15 @@ impl AllInCosClient {
                         .max(mem.all_in_cos_bytes(samples) / samples as u64),
                     mem_model_bytes: mem.fe_model_bytes(freeze),
                     burst_width,
+                    client_id: self.client_id,
                     mode: RequestMode::AllInCos,
                 };
-                let mut guard = pool[ctx.conn].lock().unwrap();
-                let mut conn = match guard.take() {
-                    Some(c) => c,
-                    None => CosConnection::connect(
-                        &self.addr,
-                        self.link.clone(),
-                    )?,
-                };
-                let result = conn.post(req.to_json(), Vec::new());
-                if result.is_ok() {
-                    *guard = Some(conn);
-                }
-                let (header, _body) = result?;
+                let (header, _body) = CosConnection::with_pooled(
+                    &pool[ctx.conn],
+                    &self.addr,
+                    &self.link,
+                    |conn| conn.post(req.to_json(), Vec::new()),
+                )?;
                 let loss = header.get("loss")?.as_f64()? as f32;
                 Ok(pipeline::ShardFetched {
                     payload: loss,

@@ -84,6 +84,21 @@ impl EpochStats {
     }
 }
 
+/// Allocator for process-unique client identities (the planner's gather
+/// lanes are keyed by them).  Ids start at 1: 0 means "unreported" on
+/// the wire and maps to the planner's shared legacy lane.
+static NEXT_CLIENT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// The stable identity a client reports to the storage-side planner:
+/// the configured `client_id` when set, else a fresh process-unique id
+/// (each constructed client is its own tenant).
+pub(crate) fn resolve_client_id(cfg: &HapiConfig) -> u64 {
+    match cfg.client_id {
+        0 => NEXT_CLIENT_ID.fetch_add(1, Ordering::Relaxed),
+        id => id,
+    }
+}
+
 pub struct HapiClient {
     pub app: AppProfile,
     /// The initial (Algorithm 1) decision; `adaptive_split` re-decides
@@ -97,6 +112,9 @@ pub struct HapiClient {
     device: Arc<DeviceSim>,
     tail_params: Mutex<Vec<Tensor>>,
     next_req_id: AtomicU64,
+    /// Stable identity reported in every POST header so the planner
+    /// gathers this client's burst in its own lane.
+    client_id: u64,
     registry: Registry,
 }
 
@@ -166,6 +184,7 @@ impl HapiClient {
         let device =
             DeviceSim::new("client-dev", device_kind, cfg.client_gpu_mem, 0);
         let tail_params = Mutex::new(backend.initial_tail_params());
+        let client_id = resolve_client_id(&cfg);
         HapiClient {
             app,
             split,
@@ -177,8 +196,15 @@ impl HapiClient {
             device,
             tail_params,
             next_req_id: AtomicU64::new(1),
+            client_id,
             registry: Registry::new(),
         }
+    }
+
+    /// The identity this client reports to the planner's gather lanes
+    /// (keys the `ba.lane.<id>.*` metrics on the server side).
+    pub fn client_id(&self) -> u64 {
+        self.client_id
     }
 
     /// Route the client's pipeline metrics into a shared registry (the
@@ -206,8 +232,9 @@ impl HapiClient {
     /// POSTs a feature-extraction request; BASELINE (split 0) GETs the
     /// raw image object.  `burst_width` tells the storage-side planner
     /// how many requests this client keeps in flight
-    /// (`pipeline_depth × shards_per_iter`) so its gather window can
-    /// adapt to the whole burst.
+    /// (`pipeline_depth × shards_per_iter`) and `client_id` which
+    /// gather lane they belong to, so the planner adapts this client's
+    /// window to its burst without holding up co-tenants.
     fn fetch_shard_on(
         &self,
         ds: &DatasetRef,
@@ -222,14 +249,7 @@ impl HapiClient {
         let mut dims = vec![samples];
         dims.extend(&ds.input_shape);
         let key = crate::cos::ObjectKey::shard(&ds.name, shard);
-        // Holding the slot for the whole exchange serialises use of one
-        // connection, exactly like a real multiplexed link pool.
-        let mut guard = slot.lock().unwrap();
-        let mut conn = match guard.take() {
-            Some(c) => c,
-            None => CosConnection::connect(&self.addr, self.link.clone())?,
-        };
-        let result = (|| -> Result<Tensor> {
+        CosConnection::with_pooled(slot, &self.addr, &self.link, |conn| {
             if split == 0 {
                 let body = conn.get(&key)?;
                 return Tensor::from_raw(
@@ -250,16 +270,13 @@ impl HapiClient {
                 mem_data_per_sample: mem.fe_data_bytes_per_sample(split),
                 mem_model_bytes: mem.fe_model_bytes(split),
                 burst_width,
+                client_id: self.client_id,
                 mode: RequestMode::FeatureExtract,
             };
             let (header, body) = conn.post(req.to_json(), Vec::new())?;
             let out_dims = header.get("out_dims")?.as_usize_vec()?;
             Tensor::from_raw(crate::runtime::DType::F32, out_dims, body)
-        })();
-        if result.is_ok() {
-            *guard = Some(conn);
-        }
-        result
+        })
     }
 
     /// Compute phase for one iteration: leftover frozen units at the
@@ -366,14 +383,11 @@ impl HapiClient {
             (self.cfg.train_batch / ds.shard_samples).max(1);
         let jobs = pipeline::jobs_for(ds.num_shards, shards_per_iter);
         let fanout = self.cfg.resolved_fanout(shards_per_iter);
-        // The burst the storage-side planner should expect from this
-        // client: every in-flight iteration contributes its shard
-        // count, but never more requests than the connection pool can
-        // actually keep outstanding (each fetch holds a pool slot for
-        // the whole exchange) — overstating it would make the planner's
-        // early-exit unreachable and tax every pass with the full wait.
-        let burst_width =
-            (self.cfg.pipeline_depth * shards_per_iter).min(fanout);
+        let burst_width = pipeline::planner_burst_width(
+            self.cfg.pipeline_depth,
+            shards_per_iter,
+            fanout,
+        );
 
         let mut stats = EpochStats::default();
         let tx0 = self.link.stats().tx_bytes();

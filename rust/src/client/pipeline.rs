@@ -794,6 +794,20 @@ fn finish_shard<J, S, T, A>(
     }
 }
 
+/// The burst width a client should report to the storage-side planner's
+/// per-client gather lane: every in-flight iteration contributes its
+/// shard count, but never more requests than the connection pool can
+/// actually keep outstanding (each fetch holds a pool slot for the
+/// whole exchange) — overstating it would make the lane's early-exit
+/// unreachable and tax every pass with the full window.
+pub fn planner_burst_width(
+    depth: usize,
+    shards_per_iter: usize,
+    fanout: usize,
+) -> usize {
+    (depth * shards_per_iter.max(1)).min(fanout.max(1))
+}
+
 /// Build per-iteration jobs from a shard count and group size (the
 /// client's `train_batch / object_samples` fan-out).
 pub fn jobs_for(num_shards: usize, shards_per_iter: usize) -> Vec<Job> {

@@ -98,6 +98,13 @@ pub struct HapiConfig {
     /// re-measurement (Table 4 dynamics).  Off by default: the paper's
     /// client decides once per application.
     pub adaptive_split: bool,
+    /// Stable client identity reported in every POST header
+    /// (`--client-id`): the storage-side planner gathers each client's
+    /// burst in its own lane, keyed by this id.  0 = auto (default):
+    /// every constructed client allocates a fresh process-unique id, so
+    /// in-process tenants land in distinct lanes.  Set it explicitly
+    /// when one logical tenant spans processes.
+    pub client_id: u64,
 
     // --- execution backend ---------------------------------------------
     /// HLO artifacts through PJRT, or the artifact-free SimBackend.
@@ -192,6 +199,7 @@ impl Default for HapiConfig {
             pipeline_depth: 1,
             fetch_fanout: 0,
             adaptive_split: false,
+            client_id: 0,
             backend: BackendKind::Hlo,
             sim_compute_gflops: 0.0,
             learning_rate: 0.02,
@@ -270,6 +278,7 @@ impl HapiConfig {
                 "pipeline_depth" => self.pipeline_depth = v.as_usize()?,
                 "fetch_fanout" => self.fetch_fanout = v.as_usize()?,
                 "adaptive_split" => self.adaptive_split = v.as_bool()?,
+                "client_id" => self.client_id = v.as_u64()?,
                 "backend" => {
                     self.backend = BackendKind::parse(v.as_str()?)?
                 }
@@ -319,6 +328,7 @@ impl HapiConfig {
         if args.flag("adaptive-split") {
             self.adaptive_split = true;
         }
+        self.client_id = args.parse_or("client-id", self.client_id)?;
         if let Some(v) = args.get("backend") {
             self.backend = BackendKind::parse(v)?;
         }
@@ -364,6 +374,14 @@ impl HapiConfig {
                 "pipeline depth must be ≥ 1 (1 = double buffering)".into(),
             ));
         }
+        // Ids ride the JSON header (and config files) as f64: above
+        // 2^53 they would silently round, which could merge two pinned
+        // tenants into one gather lane.
+        if self.client_id > (1 << 53) {
+            return Err(Error::Config(
+                "client_id must fit in 53 bits (JSON number)".into(),
+            ));
+        }
         if self.sim_compute_gflops < 0.0 {
             return Err(Error::Config(
                 "sim compute rate must be ≥ 0".into(),
@@ -407,6 +425,21 @@ impl HapiConfig {
             cfg.artifacts_dir = dir;
         }
         cfg
+    }
+
+    /// Discovered HLO artifacts when present, else the artifact-free
+    /// [`HapiConfig::sim`] preset.  Examples and smoke runs use this so
+    /// a fresh clone (no `make artifacts`) runs to completion instead
+    /// of panicking; an artifacts dir, when built, is still preferred.
+    pub fn discovered_or_sim() -> HapiConfig {
+        match Self::discover_artifacts() {
+            Some(dir) => {
+                let mut cfg = HapiConfig::default();
+                cfg.artifacts_dir = dir;
+                cfg
+            }
+            None => HapiConfig::sim(),
+        }
     }
 
     /// Config for the artifact-free SimBackend: runs the full stack on a
@@ -456,6 +489,7 @@ impl HapiConfig {
             ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
             ("fetch_fanout", Json::num(self.fetch_fanout as f64)),
             ("adaptive_split", Json::Bool(self.adaptive_split)),
+            ("client_id", Json::num(self.client_id as f64)),
             ("backend", Json::str(self.backend.as_str())),
             (
                 "sim_compute_gflops",
@@ -524,6 +558,9 @@ mod tests {
         cfg.replicas = 10;
         assert!(cfg.validate().is_err());
         let mut cfg = HapiConfig::default();
+        cfg.client_id = (1 << 53) + 1; // would round in JSON (f64)
+        assert!(cfg.validate().is_err());
+        let mut cfg = HapiConfig::default();
         cfg.min_cos_batch = 1000;
         assert!(cfg.validate().is_err());
         let mut cfg = HapiConfig::default();
@@ -556,6 +593,8 @@ mod tests {
             "sim",
             "--sim-gflops",
             "1.5",
+            "--client-id",
+            "17",
             "--adaptive-split",
         ]))
         .unwrap();
@@ -564,6 +603,11 @@ mod tests {
         assert_eq!(cfg.backend, BackendKind::Sim);
         assert_eq!(cfg.sim_compute_gflops, 1.5);
         assert!(cfg.adaptive_split);
+        assert_eq!(cfg.client_id, 17);
+        // …and the knob survives a JSON roundtrip.
+        let mut cfg2 = HapiConfig::default();
+        cfg2.merge_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.client_id, 17);
 
         let mut bad = HapiConfig::default();
         bad.pipeline_depth = 0;

@@ -10,8 +10,9 @@
 //! Verbs mirror the paper's request flow (§5.2): `GET`/`PUT` move raw
 //! objects (the BASELINE streams training data with GETs), `POST` carries
 //! a Hapi feature-extraction request — a JSON header (split index, model,
-//! batch bounds, memory estimates) plus an opaque binary body — and
-//! `STAT` exposes server metrics.  Every frame that crosses the link is
+//! batch bounds, memory estimates, and the client's `burst_width` +
+//! `client_id` for the planner's per-client gather lanes) plus an opaque
+//! binary body — and `STAT` exposes server metrics.  Every frame that crosses the link is
 //! charged to the connection's [`Link`], which is where the §7.4
 //! bandwidth limits bite.
 
@@ -197,6 +198,33 @@ impl CosConnection {
         Ok(CosConnection::new(TcpStream::connect(addr)?, link))
     }
 
+    /// Run one exchange on a pooled connection `slot` (lazily connected
+    /// to `addr`).  Holding the slot for the whole exchange serialises
+    /// use of one connection, like a real multiplexed link pool; the
+    /// connection is returned to the slot **only on success** — an
+    /// errored connection is dropped so the slot reconnects on its next
+    /// use, which is what makes the sharded engine's retry land on a
+    /// *healthy* link.  Every client-side pool (Hapi, BASELINE,
+    /// ALL_IN_COS) goes through this helper so the invariant lives in
+    /// one place.
+    pub fn with_pooled<T>(
+        slot: &std::sync::Mutex<Option<CosConnection>>,
+        addr: &str,
+        link: &Link,
+        f: impl FnOnce(&mut CosConnection) -> Result<T>,
+    ) -> Result<T> {
+        let mut guard = slot.lock().unwrap();
+        let mut conn = match guard.take() {
+            Some(c) => c,
+            None => CosConnection::connect(addr, link.clone())?,
+        };
+        let result = f(&mut conn);
+        if result.is_ok() {
+            *guard = Some(conn);
+        }
+        result
+    }
+
     pub fn link(&self) -> &Link {
         &self.link
     }
@@ -304,6 +332,33 @@ mod tests {
             vec![9; 100],
         ));
         roundtrip_req(Request::Stat);
+    }
+
+    /// The gather-lane fields cross the wire intact: a POST header with
+    /// `burst_width` and `client_id` decodes bit-for-bit, and one
+    /// without them (a legacy client) is equally well-formed.
+    #[test]
+    fn post_lane_fields_roundtrip() {
+        let header = Json::parse(
+            r#"{"split": 5, "burst_width": 8, "client_id": 42}"#,
+        )
+        .unwrap();
+        let (op, p) = Request::Post(header, vec![1, 2]).encode();
+        let Request::Post(back, body) = Request::decode(op, p).unwrap()
+        else {
+            panic!("wrong verb")
+        };
+        assert_eq!(back.get("client_id").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(back.get("burst_width").unwrap().as_u64().unwrap(), 8);
+        assert_eq!(body, vec![1, 2]);
+
+        let legacy = Json::parse(r#"{"split": 5}"#).unwrap();
+        let (op, p) = Request::Post(legacy, Vec::new()).encode();
+        let Request::Post(back, _) = Request::decode(op, p).unwrap()
+        else {
+            panic!("wrong verb")
+        };
+        assert!(back.opt("client_id").is_none());
     }
 
     #[test]

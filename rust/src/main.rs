@@ -79,6 +79,7 @@ fn usage() {
          \x20 --fetch-fanout N       COS connections in the sharded fetch pool\n\
          \x20                        (default 0 = one per in-flight shard)\n\
          \x20 --adaptive-split       re-run Algorithm 1 per bandwidth window\n\
+         \x20 --client-id N          stable planner gather-lane id (0 = auto)\n\
          \x20 --sim-gflops G         sim backend modeled compute rate (0 = instant)\n\
          \x20 --baseline             (train) run the BASELINE competitor\n\
          \x20 --weak-client          (train) CPU-only client device model\n\

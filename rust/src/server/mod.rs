@@ -148,13 +148,13 @@ impl HapiServer {
         let device_idx =
             self.next_device.fetch_add(1, Ordering::Relaxed) % self.devices.len();
         let grant = self.planner.admit(
-            req.id,
             device_idx,
             req.mem_data_per_sample,
             req.mem_model_bytes,
             req.b_max.min(samples),
             self.cfg.default_cos_batch,
             req.burst_width,
+            req.client_id,
         )?;
         let device = &self.devices[device_idx];
 

@@ -10,21 +10,42 @@
 //! queued and are re-planned as running leases release (the paper's
 //! retry-after-removal loop).
 //!
-//! Two scheduling refinements over the paper's constant-window design:
+//! Scheduling refinements over the paper's constant-window design:
 //!
-//! - **Adaptive gather window** — clients report their burst width
-//!   (`pipeline_depth × shards_per_iter`) in the POST header; the
-//!   window scales with the widest reported burst and exits early the
-//!   moment the whole burst is queued.  A depth-1 client pays no
-//!   gather penalty; a deep sharded client gets its entire burst into
-//!   one Eq. 4 solve.  The old `GATHER_WINDOW` constant is retired.
+//! - **Per-client gather lanes** — clients report a stable `client_id`
+//!   and their burst width (`pipeline_depth × shards_per_iter`) in the
+//!   POST header; the planner keeps one gather lane per client.  Each
+//!   lane's window scales with *that client's* burst and exits early the
+//!   moment that client's whole burst is queued, so a burst-1 tenant is
+//!   planned immediately even while a deep-pipeline co-tenant is still
+//!   gathering (the cross-tenant head-of-line-blocking fix).  Requests
+//!   without a `client_id` (old clients) share the legacy lane `0`.
+//! - **Joint solve across ready lanes** — a lane going ready triggers a
+//!   planning pass that offers *every* ready lane's requests to one
+//!   Eq. 4 solve, so batch adaptation still packs memory across
+//!   tenants.  Lanes are offered oldest-ready first: the solver drops
+//!   infeasible requests from the *tail* of its input, so the lane that
+//!   has waited longest is the last to be deferred — a ready lane is
+//!   never starved by later-ready co-tenants.
 //! - **Event-driven retries** — a request that does not fit blocks the
 //!   planner on its condvar until a lease release (notified from
 //!   [`Grant`] drop) or a new arrival, instead of polling at a fixed
-//!   interval (the old loop busy-spun at `GATHER_WINDOW` granularity
-//!   while memory was full).
+//!   interval.
+//!
+//! Observability: every completed lane gather lands in the global
+//! `ba.gather_window_ns` histogram and the per-lane
+//! `ba.lane.<client_id>.gather_window_ns` histogram; `ba.lanes_active`
+//! tracks how many lanes currently hold un-granted requests, and
+//! `ba.burst_clamped` counts gathers whose reported burst exceeded
+//! [`MAX_GATHER_BURST`].  Per-lane histograms live for the registry's
+//! lifetime: with the default auto-allocated (process-unique) client
+//! ids their count grows with distinct clients ever seen — fine for
+//! this in-process testbed, but a long-lived deployment serving client
+//! churn should pin `client_id`s or add registry eviction first (open
+//! item in ROADMAP.md).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
@@ -34,14 +55,23 @@ use crate::metrics::Registry;
 use crate::runtime::{DeviceSim, Lease};
 
 /// Gather budget per expected request in a burst (≪ one request's
-/// service time); the adaptive window is this times the burst width.
+/// service time); a lane's adaptive window is this times its client's
+/// reported burst width.
 const GATHER_PER_REQUEST: Duration = Duration::from_micros(750);
-/// Hard cap on the adaptive gather window.
+/// Burst widths above this stop growing the window (a client reporting
+/// a thousand-wide burst must not buy a thousand-request wait).  The
+/// clamp engaging is visible as the `ba.burst_clamped` counter; with
+/// [`MAX_GATHER_WINDOW`] at 12 ms the wall-clock cap binds first, but
+/// the counter still flags clients whose reported burst is implausibly
+/// wide for any gather to collect.
+const MAX_GATHER_BURST: usize = 64;
+/// Hard wall-clock cap on any lane's adaptive gather window.
 const MAX_GATHER_WINDOW: Duration = Duration::from_millis(12);
-/// Quiet period that ends a gather early: once no new request has
-/// arrived for this long the burst is over — mid-epoch, a client only
-/// refills one iteration's shards at a time, so waiting out the full
-/// `depth × shards_per_iter` deadline would just add latency.
+/// Quiet period that ends a lane's gather early: once no new request
+/// from that client has arrived for this long its burst is over —
+/// mid-epoch, a client only refills one iteration's shards at a time,
+/// so waiting out the full `depth × shards_per_iter` deadline would
+/// just add latency.
 const GATHER_IDLE: Duration = Duration::from_millis(3);
 /// Safety-net poll while blocked.  Every real wakeup — arrival, lease
 /// release, shutdown — is condvar-notified; the timeout only guards
@@ -87,7 +117,12 @@ impl Drop for ReleaseNotify {
 }
 
 struct Pending {
-    id: u64,
+    /// Planner-internal ticket: unique across clients (request ids come
+    /// from per-client counters and collide between tenants).
+    ticket: u64,
+    /// Lane key: the client-reported stable id; 0 = unreported (legacy
+    /// clients share one lane).
+    client: u64,
     device: usize,
     per_sample: u64,
     model_bytes: u64,
@@ -97,8 +132,40 @@ struct Pending {
     grant: Option<Result<Grant>>,
 }
 
+/// Gather state for one client's lane.
+struct Lane {
+    /// When the current gather began: at lane creation, and again each
+    /// time a fresh arrival re-opens a ready lane's window (so later
+    /// bursts from the same client coalesce into one solve too).
+    gather_started: Instant,
+    /// Last time a new request from this client arrived (the idle-exit
+    /// clock).
+    last_arrival: Instant,
+    /// Highest ticket ever seen from this client: arrivals are detected
+    /// as ticket-high-water growth, which is race-free even when a
+    /// grant drains the lane in the same pass as a new arrival (a
+    /// waiting-count delta would cancel out).
+    last_ticket: u64,
+    /// The current gather is complete: this lane's requests may be
+    /// offered to a planning pass.
+    ready: bool,
+    /// When the lane FIRST went ready — the fairness key (older
+    /// `ready_since` is offered to the solver first).  Kept across
+    /// re-opened gathers so a deferred tenant never loses seniority,
+    /// and cleared only when the lane drains.
+    ready_since: Option<Instant>,
+    /// The current ready state has been offered to a planning pass; a
+    /// pass is not re-run for this lane until an event arrives.
+    planned_ready: bool,
+    /// `ba.burst_clamped` was already counted for the current gather
+    /// (re-armed when a fresh burst re-opens the window).
+    clamp_counted: bool,
+}
+
 struct State {
     queue: Vec<Pending>,
+    /// One gather lane per client with un-granted requests.
+    lanes: BTreeMap<u64, Lane>,
     closed: bool,
     /// Bumped on every event that can change a planning pass's outcome:
     /// request arrival, lease release, shutdown.  The planner loop
@@ -112,6 +179,7 @@ pub struct Planner {
     devices: Vec<Arc<DeviceSim>>,
     enabled: bool,
     registry: Registry,
+    next_ticket: AtomicU64,
     thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     shutdown: Arc<AtomicBool>,
 }
@@ -126,6 +194,7 @@ impl Planner {
         let state = Arc::new((
             Mutex::new(State {
                 queue: Vec::new(),
+                lanes: BTreeMap::new(),
                 closed: false,
                 wakeups: 0,
             }),
@@ -151,6 +220,7 @@ impl Planner {
             devices,
             enabled,
             registry,
+            next_ticket: AtomicU64::new(1),
             thread: Mutex::new(thread),
             shutdown,
         }
@@ -164,18 +234,22 @@ impl Planner {
     /// the device is full — the Fig 14 "w/o BA" behaviour.
     ///
     /// `burst_width` is the client-reported `depth × shards_per_iter`
-    /// (0 = unreported): how many sibling requests the adaptive gather
-    /// window should expect before solving.
+    /// (0 = unreported) and `client_id` its stable identity (0 =
+    /// unreported → the shared legacy lane): together they select and
+    /// size the gather lane this request waits in.  Requests are
+    /// tracked by a planner-internal ticket — the wire-level request id
+    /// is per-client and collides across tenants, so it plays no role
+    /// here.
     #[allow(clippy::too_many_arguments)]
     pub fn admit(
         &self,
-        id: u64,
         device: usize,
         per_sample: u64,
         model_bytes: u64,
         b_max: usize,
         default_batch: usize,
         burst_width: usize,
+        client_id: u64,
     ) -> Result<Grant> {
         self.registry.counter("ba.requests").inc();
         if !self.enabled {
@@ -189,6 +263,7 @@ impl Planner {
             });
         }
 
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let (lock, cv) = &*self.state;
         {
             let mut st = lock.lock().unwrap();
@@ -196,7 +271,8 @@ impl Planner {
                 return Err(Error::other("planner shut down"));
             }
             st.queue.push(Pending {
-                id,
+                ticket,
+                client: client_id,
                 device,
                 per_sample,
                 model_bytes,
@@ -213,7 +289,7 @@ impl Planner {
             if let Some(pos) = st
                 .queue
                 .iter()
-                .position(|p| p.id == id && p.grant.is_some())
+                .position(|p| p.ticket == ticket && p.grant.is_some())
             {
                 let p = st.queue.remove(pos);
                 return p.grant.unwrap();
@@ -270,22 +346,116 @@ impl Drop for Planner {
     }
 }
 
-/// The widest client-reported burst (`depth × shards_per_iter`) among
-/// un-granted requests; 1 when none report (shallow or old clients).
-fn burst_width(queue: &[Pending]) -> usize {
-    queue
-        .iter()
-        .filter(|p| p.grant.is_none())
-        .map(|p| p.burst.max(1))
-        .max()
-        .unwrap_or(1)
-}
-
 /// Adaptive gather window for an expected burst: a small per-request
 /// budget scaled by the burst width, capped well below service time.
-fn gather_window(burst: usize) -> Duration {
-    let w = GATHER_PER_REQUEST * burst.min(64) as u32;
-    w.min(MAX_GATHER_WINDOW)
+/// Returns the window and whether the [`MAX_GATHER_BURST`] clamp
+/// engaged.
+fn gather_window(burst: usize) -> (Duration, bool) {
+    let clamped = burst > MAX_GATHER_BURST;
+    let w = GATHER_PER_REQUEST * burst.min(MAX_GATHER_BURST) as u32;
+    (w.min(MAX_GATHER_WINDOW), clamped)
+}
+
+/// Refresh the per-client lanes against the queue: open lanes for
+/// clients whose first request just arrived, advance each lane's
+/// arrival bookkeeping, mark lanes ready (their client's whole burst is
+/// queued, their window expired, or the burst went quiet), and drop
+/// lanes that drained.  Returns the earliest deadline among not-ready
+/// lanes, for the caller's sleep.
+fn sync_lanes(
+    st: &mut State,
+    registry: &Registry,
+    now: Instant,
+) -> Option<Instant> {
+    // (waiting count, widest reported burst, highest ticket) per client.
+    let mut per_client: BTreeMap<u64, (usize, usize, u64)> =
+        BTreeMap::new();
+    for p in st.queue.iter().filter(|p| p.grant.is_none()) {
+        let e = per_client.entry(p.client).or_insert((0, 1, 0));
+        e.0 += 1;
+        e.1 = e.1.max(p.burst.max(1));
+        e.2 = e.2.max(p.ticket);
+    }
+    st.lanes.retain(|c, _| per_client.contains_key(c));
+    let mut next_deadline: Option<Instant> = None;
+    for (&client, &(waiting, burst, max_ticket)) in &per_client {
+        let lane = st.lanes.entry(client).or_insert(Lane {
+            gather_started: now,
+            last_arrival: now,
+            last_ticket: 0,
+            ready: false,
+            ready_since: None,
+            planned_ready: false,
+            clamp_counted: false,
+        });
+        if max_ticket > lane.last_ticket {
+            lane.last_ticket = max_ticket;
+            lane.last_arrival = now;
+            if lane.ready {
+                // A fresh burst from this client: re-open the window so
+                // its requests coalesce into one solve (instead of one
+                // pass per straggler), keeping the lane's first-ready
+                // seniority for grant ordering.  The clamp counter
+                // re-arms: every clamped gather counts, not just the
+                // lane's first.
+                lane.ready = false;
+                lane.planned_ready = false;
+                lane.gather_started = now;
+                lane.clamp_counted = false;
+            }
+        }
+        if lane.ready {
+            continue;
+        }
+        let (window, clamped) = gather_window(burst);
+        if clamped && !lane.clamp_counted {
+            lane.clamp_counted = true;
+            registry.counter("ba.burst_clamped").inc();
+        }
+        let deadline = (lane.gather_started + window)
+            .min(lane.last_arrival + GATHER_IDLE);
+        // This lane's whole burst queued (a burst-1 client never waits
+        // at all), its window spent, or its burst went quiet before
+        // filling out (steady state refills one iteration's shards at a
+        // time): the lane is ready to plan.
+        if waiting >= burst || now >= deadline {
+            lane.ready = true;
+            lane.ready_since.get_or_insert(now);
+            let gathered = now.duration_since(lane.gather_started);
+            registry
+                .histogram("ba.gather_window_ns")
+                .record(gathered.as_nanos() as u64);
+            registry
+                .histogram(&format!("ba.lane.{client}.gather_window_ns"))
+                .record(gathered.as_nanos() as u64);
+        } else {
+            next_deadline = Some(match next_deadline {
+                Some(d) => d.min(deadline),
+                None => deadline,
+            });
+        }
+    }
+    registry
+        .gauge("ba.lanes_active")
+        .set(st.lanes.len() as i64);
+    next_deadline
+}
+
+/// The ready lanes in grant-scheduling order: **oldest-ready first**
+/// (ties broken by client id for determinism).  The Eq. 4 solver defers
+/// infeasible requests from the tail of its input, so this ordering is
+/// the starvation bound — the longest-ready lane is always the last one
+/// deferred, and with each pass it can only move toward the front.
+fn ready_lane_order(lanes: &BTreeMap<u64, Lane>) -> Vec<u64> {
+    let mut ready: Vec<(Instant, u64)> = lanes
+        .iter()
+        .filter(|(_, l)| l.ready)
+        .map(|(&c, l)| {
+            (l.ready_since.expect("ready lanes have ready_since"), c)
+        })
+        .collect();
+    ready.sort();
+    ready.into_iter().map(|(_, c)| c).collect()
 }
 
 fn planner_loop(
@@ -298,78 +468,44 @@ fn planner_loop(
     let (lock, cv) = &*state;
     // Wakeup epoch consumed by the last planning pass: the loop only
     // re-solves once something actually changed (arrival, release,
-    // shutdown) — a pass over an unchanged queue and ledger cannot
-    // grant anything the previous one could not.
+    // shutdown) or another lane went ready — a pass over an unchanged
+    // queue and ledger cannot grant anything the previous one could
+    // not.
     let mut planned_wakeups = 0u64;
     loop {
-        // --- wait for actionable work --------------------------------
+        // --- wait for a lane to go ready -----------------------------
+        // Each client's lane gathers independently; the planner sleeps
+        // until the earliest lane deadline (or an event) instead of
+        // holding every tenant to the widest burst's window.
         {
             let mut st = lock.lock().unwrap();
             loop {
                 if st.closed || shutdown.load(Ordering::Relaxed) {
                     return;
                 }
-                let has_work =
-                    st.queue.iter().any(|p| p.grant.is_none());
-                if has_work && st.wakeups != planned_wakeups {
+                let now = Instant::now();
+                let next_deadline = sync_lanes(&mut st, &registry, now);
+                let any_ready = st.lanes.values().any(|l| l.ready);
+                let newly_ready = st
+                    .lanes
+                    .values()
+                    .any(|l| l.ready && !l.planned_ready);
+                if any_ready
+                    && (newly_ready || st.wakeups != planned_wakeups)
+                {
                     break;
                 }
-                let (g, _t) =
-                    cv.wait_timeout(st, WAIT_TIMEOUT).unwrap();
+                let timeout = next_deadline
+                    .map(|d| d.saturating_duration_since(now))
+                    .unwrap_or(WAIT_TIMEOUT)
+                    .min(WAIT_TIMEOUT)
+                    .max(Duration::from_micros(50));
+                let (g, _t) = cv.wait_timeout(st, timeout).unwrap();
                 st = g;
             }
         }
 
-        // --- adaptive gather window ----------------------------------
-        // Let the burst arrive: wait up to `gather_window(burst)` from
-        // the widest reported burst among waiting requests, exiting
-        // early the moment that many are queued.  Shutdown is observed
-        // across (and immediately after) the gather wait.
-        let gather0 = Instant::now();
-        let mut last_waiting = 0usize;
-        let mut last_arrival = gather0;
-        let burst = {
-            let mut st = lock.lock().unwrap();
-            loop {
-                if st.closed || shutdown.load(Ordering::Relaxed) {
-                    return;
-                }
-                let burst = burst_width(&st.queue);
-                let waiting = st
-                    .queue
-                    .iter()
-                    .filter(|p| p.grant.is_none())
-                    .count();
-                // Whole burst queued: plan immediately (a burst-1
-                // client never waits at all).
-                if waiting >= burst {
-                    break burst;
-                }
-                if waiting != last_waiting {
-                    last_waiting = waiting;
-                    last_arrival = Instant::now();
-                }
-                let deadline = gather_window(burst);
-                let elapsed = gather0.elapsed();
-                let idle = last_arrival.elapsed();
-                // Deadline reached, or the burst went quiet before
-                // filling out (steady state refills one iteration's
-                // shards at a time): plan what arrived.
-                if elapsed >= deadline || idle >= GATHER_IDLE {
-                    break burst;
-                }
-                let timeout =
-                    (deadline - elapsed).min(GATHER_IDLE - idle);
-                let (g, _t) = cv.wait_timeout(st, timeout).unwrap();
-                st = g;
-            }
-        };
-        registry
-            .histogram("ba.gather_window_ns")
-            .record(gather0.elapsed().as_nanos() as u64);
-        registry.gauge("ba.burst_width").set(burst as i64);
-
-        // --- planning pass -------------------------------------------
+        // --- planning pass over every ready lane ---------------------
         let t0 = Instant::now();
         let mut made_progress = false;
         {
@@ -383,18 +519,40 @@ fn planner_loop(
             // Events landing while we hold the lock and solve will bump
             // `wakeups` past this and trigger another pass immediately.
             planned_wakeups = st.wakeups;
+            let lane_order = ready_lane_order(&st.lanes);
+            for c in &lane_order {
+                st.lanes.get_mut(c).unwrap().planned_ready = true;
+            }
+            let lane_rank = |client: u64| {
+                lane_order.iter().position(|&c| c == client)
+            };
+            registry.gauge("ba.burst_width").set(
+                st.queue
+                    .iter()
+                    .filter(|p| {
+                        p.grant.is_none()
+                            && lane_rank(p.client).is_some()
+                    })
+                    .map(|p| p.burst.max(1))
+                    .max()
+                    .unwrap_or(1) as i64,
+            );
             for (dev_idx, device) in devices.iter().enumerate() {
+                // Anything that can never fit alone fails fast with OOM.
                 let waiting: Vec<usize> = st
                     .queue
                     .iter()
                     .enumerate()
-                    .filter(|(_, p)| p.device == dev_idx && p.grant.is_none())
+                    .filter(|(_, p)| {
+                        p.device == dev_idx
+                            && p.grant.is_none()
+                            && lane_rank(p.client).is_some()
+                    })
                     .map(|(i, _)| i)
                     .collect();
                 if waiting.is_empty() {
                     continue;
                 }
-                // Anything that can never fit alone fails fast with OOM.
                 for &i in &waiting {
                     let p = &st.queue[i];
                     let floor = p.model_bytes
@@ -409,22 +567,33 @@ fn planner_loop(
                         made_progress = true;
                     }
                 }
-                let waiting: Vec<usize> = st
+                let mut waiting: Vec<usize> = st
                     .queue
                     .iter()
                     .enumerate()
-                    .filter(|(_, p)| p.device == dev_idx && p.grant.is_none())
+                    .filter(|(_, p)| {
+                        p.device == dev_idx
+                            && p.grant.is_none()
+                            && lane_rank(p.client).is_some()
+                    })
                     .map(|(i, _)| i)
                     .collect();
                 if waiting.is_empty() {
                     continue;
                 }
+                // Fairness across tenants: requests reach the solver in
+                // lane-readiness order (oldest-ready lane first), not
+                // queue order.  The sort is stable, so within one lane
+                // arrival order is preserved.
+                waiting.sort_by_key(|&i| {
+                    lane_rank(st.queue[i].client).unwrap()
+                });
                 let reqs: Vec<BatchRequest> = waiting
                     .iter()
                     .map(|&i| {
                         let p = &st.queue[i];
                         BatchRequest {
-                            id: p.id,
+                            id: p.ticket,
                             data_bytes_per_sample: p.per_sample,
                             model_bytes: p.model_bytes,
                             b_max: p.b_max,
@@ -443,7 +612,7 @@ fn planner_loop(
                 for a in &sol.assignments {
                     let &i = waiting
                         .iter()
-                        .find(|&&i| st.queue[i].id == a.id)
+                        .find(|&&i| st.queue[i].ticket == a.id)
                         .unwrap();
                     let p = &st.queue[i];
                     let bytes =
@@ -503,10 +672,10 @@ mod tests {
             Planner::new(devs.clone(), 20, false, Registry::new());
         // 20 samples × 100 B = 2000 B per grant; five fit, the sixth OOMs.
         let grants: Vec<Grant> = (0..5)
-            .map(|i| planner.admit(i, 0, 100, 0, 100, 20, 1).unwrap())
+            .map(|_| planner.admit(0, 100, 0, 100, 20, 1, 1).unwrap())
             .collect();
         assert!(planner
-            .admit(9, 0, 100, 0, 100, 20, 1)
+            .admit(0, 100, 0, 100, 20, 1, 1)
             .unwrap_err()
             .is_oom());
         drop(grants);
@@ -516,15 +685,16 @@ mod tests {
     #[test]
     fn ba_on_reduces_to_fit() {
         let planner = Planner::new(devices(6_000), 20, true, Registry::new());
-        // Two concurrent requests, each wanting 100 samples × 100 B;
-        // only 60 samples total fit: both get reduced.  Report a wide
-        // burst so the gather window holds until both are queued.
+        // Two concurrent requests from one client, each wanting 100
+        // samples × 100 B; only 60 samples total fit: both get reduced.
+        // Report a wide burst so the client's lane holds its gather
+        // until both are queued.
         let p = Arc::new(planner);
         let handles: Vec<_> = (0..2)
-            .map(|i| {
+            .map(|_| {
                 let p = p.clone();
                 std::thread::spawn(move || {
-                    p.admit(i, 0, 100, 0, 100, 100, 8).unwrap().batch
+                    p.admit(0, 100, 0, 100, 100, 8, 1).unwrap().batch
                 })
             })
             .collect();
@@ -548,12 +718,12 @@ mod tests {
         let devs = devices(2_100);
         let planner =
             Arc::new(Planner::new(devs.clone(), 20, true, Registry::new()));
-        let first = planner.admit(1, 0, 100, 0, 20, 20, 1).unwrap();
+        let first = planner.admit(0, 100, 0, 20, 20, 1, 1).unwrap();
         assert_eq!(first.batch, 20);
         // Second cannot fit while the first holds the lease.
         let p2 = planner.clone();
         let h = std::thread::spawn(move || {
-            p2.admit(2, 0, 100, 0, 20, 20, 1).unwrap().batch
+            p2.admit(0, 100, 0, 20, 20, 1, 2).unwrap().batch
         });
         std::thread::sleep(Duration::from_millis(30));
         drop(first);
@@ -563,7 +733,7 @@ mod tests {
     #[test]
     fn impossible_request_fails_fast_with_oom() {
         let planner = Planner::new(devices(1_000), 20, true, Registry::new());
-        let err = planner.admit(1, 0, 100, 0, 100, 20, 1).unwrap_err();
+        let err = planner.admit(0, 100, 0, 100, 20, 1, 1).unwrap_err();
         assert!(err.is_oom());
     }
 
@@ -578,10 +748,10 @@ mod tests {
         let devs = devices(2_100);
         let planner =
             Arc::new(Planner::new(devs.clone(), 20, true, reg.clone()));
-        let first = planner.admit(1, 0, 100, 0, 20, 20, 1).unwrap();
+        let first = planner.admit(0, 100, 0, 20, 20, 1, 1).unwrap();
         let p2 = planner.clone();
         let h = std::thread::spawn(move || {
-            p2.admit(2, 0, 100, 0, 20, 20, 1).unwrap().batch
+            p2.admit(0, 100, 0, 20, 20, 1, 2).unwrap().batch
         });
         // Hold the memory: the queued request fails one pass, then the
         // planner must sleep.  A poll-granularity spinner records a
@@ -614,12 +784,12 @@ mod tests {
         let reg = Registry::new();
         let planner =
             Arc::new(Planner::new(devices(2_100), 20, true, reg.clone()));
-        let hold = planner.admit(1, 0, 100, 0, 20, 20, 1).unwrap();
+        let hold = planner.admit(0, 100, 0, 20, 20, 1, 1).unwrap();
         // This request cannot be granted while `hold` is live: it sits
         // un-granted in the queue.
         let p2 = planner.clone();
         let waiter = std::thread::spawn(move || {
-            p2.admit(2, 0, 100, 0, 20, 20, 1)
+            p2.admit(0, 100, 0, 20, 20, 1, 2)
         });
         std::thread::sleep(Duration::from_millis(60));
         let t0 = Instant::now();
@@ -651,7 +821,7 @@ mod tests {
             reg.clone(),
         ));
         let t0 = Instant::now();
-        let g = planner.admit(1, 0, 100, 0, 20, 20, 1).unwrap();
+        let g = planner.admit(0, 100, 0, 20, 20, 1, 7).unwrap();
         assert!(
             t0.elapsed() < Duration::from_millis(100),
             "burst-1 request was penalised by the gather window: {:?}",
@@ -659,12 +829,18 @@ mod tests {
         );
         drop(g);
         assert!(reg.histogram("ba.gather_window_ns").count() >= 1);
+        assert!(
+            reg.histogram("ba.lane.7.gather_window_ns").count() >= 1,
+            "the lane's gather must land in its per-lane histogram"
+        );
 
         let handles: Vec<_> = (0..4)
-            .map(|i| {
+            .map(|_| {
                 let p = planner.clone();
                 std::thread::spawn(move || {
-                    p.admit(10 + i, 0, 100, 0, 20, 20, 4).unwrap().batch
+                    p.admit(0, 100, 0, 20, 20, 4, 8)
+                        .unwrap()
+                        .batch
                 })
             })
             .collect();
@@ -673,5 +849,295 @@ mod tests {
         }
         // At most one pass per arrival, typically one for the burst.
         assert!(reg.counter("ba.runs").get() <= 5);
+    }
+
+    /// Regression (cross-tenant head-of-line blocking): a burst-1
+    /// tenant must be granted without waiting out a co-tenant's deep
+    /// gather window.  Pre-fix, one *global* burst width stretched the
+    /// window for everyone: the burst-1 arrival below would have waited
+    /// behind the co-tenant's 64-wide gather.  Post-fix, lanes gather
+    /// independently — the burst-1 lane's own recorded gather window is
+    /// ~zero even while the deep lane is still collecting.
+    #[test]
+    fn burst1_tenant_unaffected_by_cotenant_deep_gather() {
+        let reg = Registry::new();
+        let planner = Arc::new(Planner::new(
+            devices(1 << 30),
+            20,
+            true,
+            reg.clone(),
+        ));
+        // Co-tenant (client 1): reports a 64-wide burst but only two
+        // requests ever arrive — its lane gathers until idle/window
+        // exit.
+        let deep: Vec<_> = (0..2)
+            .map(|_| {
+                let p = planner.clone();
+                std::thread::spawn(move || {
+                    p.admit(0, 100, 0, 20, 20, 64, 1)
+                        .unwrap()
+                        .batch
+                })
+            })
+            .collect();
+        // Give the deep lane time to open its gather.
+        std::thread::sleep(Duration::from_millis(1));
+        // Tenant under test (client 2): burst 1, must be granted
+        // promptly regardless of client 1's open window.
+        let t0 = Instant::now();
+        let g = planner.admit(0, 100, 0, 20, 20, 1, 2).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(g.batch, 20);
+        assert!(
+            waited < Duration::from_millis(100),
+            "burst-1 tenant waited {waited:?}"
+        );
+        for h in deep {
+            assert_eq!(h.join().unwrap(), 20);
+        }
+        // The lane histograms pin the mechanism: client 2's gather
+        // ended immediately (its burst of 1 was queued on arrival),
+        // bounded by its own window — far below the co-tenant's
+        // 12 ms deep-burst window.
+        let lane2 = reg.histogram("ba.lane.2.gather_window_ns");
+        assert!(lane2.count() >= 1, "client 2 never got a lane");
+        assert!(
+            lane2.max() < GATHER_IDLE.as_nanos() as u64,
+            "burst-1 lane gathered {} ns — it waited on a co-tenant",
+            lane2.max()
+        );
+        // The co-tenant's lane did hold a real window (idle exit at the
+        // earliest), proving the two gathers were independent.
+        let lane1 = reg.histogram("ba.lane.1.gather_window_ns");
+        assert!(lane1.count() >= 1);
+        assert!(
+            lane1.max() >= (GATHER_IDLE.as_nanos() as u64) / 2,
+            "deep lane exited after {} ns — expected a held window",
+            lane1.max()
+        );
+    }
+
+    /// Fairness rule, pinned deterministically: ready lanes are
+    /// scheduled oldest-`ready_since` first, regardless of client id or
+    /// map order; lanes still gathering are not scheduled at all.
+    #[test]
+    fn ready_lane_order_is_oldest_first() {
+        let t0 = Instant::now();
+        let lane = |ready: Option<Duration>| Lane {
+            gather_started: t0,
+            last_arrival: t0,
+            last_ticket: 1,
+            ready: ready.is_some(),
+            ready_since: ready.map(|d| t0 + d),
+            planned_ready: false,
+            clamp_counted: false,
+        };
+        let mut lanes = BTreeMap::new();
+        lanes.insert(2, lane(Some(Duration::from_millis(5))));
+        lanes.insert(3, lane(Some(Duration::from_millis(1))));
+        lanes.insert(7, lane(None)); // still gathering: excluded
+        lanes.insert(9, lane(Some(Duration::from_millis(9))));
+        assert_eq!(ready_lane_order(&lanes), vec![3, 2, 9]);
+        // Tie on ready time: deterministic by client id.
+        lanes.insert(1, lane(Some(Duration::from_millis(1))));
+        assert_eq!(ready_lane_order(&lanes), vec![1, 3, 2, 9]);
+        // A re-gathering lane (ready cleared, seniority kept) is not
+        // offered until its new burst's window completes.
+        lanes.get_mut(&3).unwrap().ready = false;
+        assert_eq!(ready_lane_order(&lanes), vec![1, 2, 9]);
+    }
+
+    /// Regression (pass-per-straggler): a fresh burst arriving at an
+    /// already-ready lane re-opens its gather — later arrivals coalesce
+    /// into one Eq. 4 solve exactly like the first burst — while the
+    /// lane's first-ready time (its grant-ordering seniority) survives.
+    /// `sync_lanes` is pure in `now`, so this pins the state machine
+    /// deterministically.
+    #[test]
+    fn arrival_to_ready_lane_reopens_gather_but_keeps_seniority() {
+        let reg = Registry::new();
+        let mut st = State {
+            queue: Vec::new(),
+            lanes: BTreeMap::new(),
+            closed: false,
+            wakeups: 0,
+        };
+        let pend = |ticket: u64, burst: usize| Pending {
+            ticket,
+            client: 5,
+            device: 0,
+            per_sample: 1,
+            model_bytes: 0,
+            b_max: 20,
+            burst,
+            grant: None,
+        };
+        let t0 = Instant::now();
+        // One request of a reported 4-wide burst: gathering, not ready.
+        st.queue.push(pend(1, 4));
+        sync_lanes(&mut st, &reg, t0);
+        assert!(!st.lanes[&5].ready);
+        // Idle-exit passes: the lane goes ready.
+        let t1 = t0 + GATHER_IDLE + GATHER_IDLE;
+        sync_lanes(&mut st, &reg, t1);
+        assert!(st.lanes[&5].ready);
+        let first_ready = st.lanes[&5].ready_since.unwrap();
+        // A fresh burst starts arriving: the gather re-opens…
+        st.queue.push(pend(2, 4));
+        let t2 = t1 + Duration::from_micros(200);
+        sync_lanes(&mut st, &reg, t2);
+        assert!(
+            !st.lanes[&5].ready,
+            "new arrival must re-open the lane's gather"
+        );
+        // …without losing the lane's first-ready seniority.
+        assert_eq!(st.lanes[&5].ready_since, Some(first_ready));
+        // The whole burst queued → gather completes early.
+        st.queue.push(pend(3, 4));
+        st.queue.push(pend(4, 4));
+        let t3 = t2 + Duration::from_micros(200);
+        sync_lanes(&mut st, &reg, t3);
+        assert!(
+            st.lanes[&5].ready,
+            "whole burst queued: re-opened gather must complete"
+        );
+        assert_eq!(st.lanes[&5].ready_since, Some(first_ready));
+        // Race regression: grants drain part of the lane in the same
+        // breath as a new arrival — the waiting count shrinks (4 → 2)
+        // but the ticket high-water grows, and that alone must re-open
+        // the gather (a waiting-count delta would cancel out and solve
+        // the straggler solo).
+        st.queue.retain(|p| p.ticket == 4); // 1-3 granted + collected
+        st.queue.push(pend(5, 4));
+        let t4 = t3 + Duration::from_micros(200);
+        sync_lanes(&mut st, &reg, t4);
+        assert!(
+            !st.lanes[&5].ready,
+            "arrival masked by simultaneous grants must still re-open"
+        );
+        assert_eq!(st.lanes[&5].ready_since, Some(first_ready));
+    }
+
+    /// Fairness end to end: grants go to the oldest-*ready* lane, not
+    /// queue order.  A deep tenant arrives first but its lane is held
+    /// open by a steady trickle of arrivals (it never fills its
+    /// reported burst); a burst-1 tenant arriving mid-trickle goes
+    /// ready immediately, so when memory frees it is granted first —
+    /// and the deep tenant is granted afterwards (no starvation).
+    #[test]
+    fn oldest_ready_lane_granted_first() {
+        let devs = devices(2_100); // exactly one 2000 B grant fits
+        let planner =
+            Arc::new(Planner::new(devs.clone(), 20, true, Registry::new()));
+        // Fill the device so every contender queues.
+        let hold = planner.admit(0, 100, 0, 20, 20, 1, 9).unwrap();
+        // Deep tenant (client 3): first request at t=0, then a trickle
+        // of arrivals ~1.5 ms apart.  Each arrival resets the lane's
+        // idle clock, so the lane stays in gather until its 12 ms
+        // window cap — long after the burst-1 tenant below went ready.
+        let p3 = planner.clone();
+        let t3 = std::thread::spawn(move || {
+            let g = p3.admit(0, 100, 0, 20, 20, 64, 3).unwrap();
+            (g, Instant::now())
+        });
+        let feeders: Vec<_> = (1..=6u64)
+            .map(|i| {
+                let p = planner.clone();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_micros(1500 * i));
+                    drop(p.admit(0, 100, 0, 20, 20, 64, 3));
+                })
+            })
+            .collect();
+        // Burst-1 tenant (client 2) arrives mid-trickle: its lane goes
+        // ready on arrival, well inside client 3's held-open window.
+        std::thread::sleep(Duration::from_millis(2));
+        let p2 = planner.clone();
+        let t2 = std::thread::spawn(move || {
+            let g = p2.admit(0, 100, 0, 20, 20, 1, 2).unwrap();
+            (g, Instant::now())
+        });
+        // Let the trickle finish and both lanes go ready.
+        std::thread::sleep(Duration::from_millis(40));
+        drop(hold);
+        // Client 2 (oldest-ready) gets the freed memory first…
+        let (g2, when2) = t2.join().unwrap();
+        // …and client 3's lane only once client 2 releases.
+        std::thread::sleep(Duration::from_millis(20));
+        drop(g2);
+        let (g3, when3) = t3.join().unwrap();
+        assert!(
+            when2 < when3,
+            "queue-order scheduling: the deep lane jumped the ready queue"
+        );
+        assert!(
+            when3.duration_since(when2) >= Duration::from_millis(10),
+            "client 3 was granted while client 2 held the memory"
+        );
+        drop(g3);
+        for f in feeders {
+            f.join().unwrap();
+        }
+        assert_eq!(devs[0].used(), 0);
+    }
+
+    /// The [`MAX_GATHER_BURST`] clamp: window growth stops at the cap
+    /// and the clamp is observable.
+    #[test]
+    fn gather_window_caps_and_reports_clamp() {
+        let (w1, c1) = gather_window(1);
+        assert_eq!(w1, GATHER_PER_REQUEST);
+        assert!(!c1);
+        let (w64, c64) = gather_window(MAX_GATHER_BURST);
+        assert!(!c64);
+        let (w65, c65) = gather_window(MAX_GATHER_BURST + 1);
+        assert!(c65, "burst above the cap must report the clamp");
+        assert_eq!(w64, w65, "window must stop growing at the cap");
+        assert!(w65 <= MAX_GATHER_WINDOW);
+    }
+
+    /// A client overstating its burst engages the clamp exactly once
+    /// per gather, counted in `ba.burst_clamped`.
+    #[test]
+    fn overstated_burst_is_clamped_and_counted() {
+        let reg = Registry::new();
+        let planner =
+            Planner::new(devices(1 << 30), 20, true, reg.clone());
+        let g = planner
+            .admit(0, 100, 0, 20, 20, 1000, 4)
+            .unwrap();
+        drop(g);
+        assert_eq!(reg.counter("ba.burst_clamped").get(), 1);
+    }
+
+    /// Backward compatibility: requests without a client id (0) share
+    /// the legacy lane — they gather together, plan, and grant exactly
+    /// like an identified client's.
+    #[test]
+    fn legacy_requests_share_lane_zero() {
+        let reg = Registry::new();
+        let planner = Arc::new(Planner::new(
+            devices(1 << 30),
+            20,
+            true,
+            reg.clone(),
+        ));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let p = planner.clone();
+                std::thread::spawn(move || {
+                    p.admit(0, 100, 0, 20, 20, 2, 0)
+                        .unwrap()
+                        .batch
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 20);
+        }
+        assert!(
+            reg.histogram("ba.lane.0.gather_window_ns").count() >= 1,
+            "unidentified clients must ride the shared legacy lane"
+        );
     }
 }

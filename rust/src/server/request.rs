@@ -36,6 +36,11 @@ pub struct PostRequest {
     /// adaptive gather window should wait for.  0 = unreported (old
     /// clients); the planner treats it as 1.
     pub burst_width: usize,
+    /// Stable client identity: the planner gathers each client's burst
+    /// in its own lane, so one tenant's deep window never delays a
+    /// co-tenant's grant.  0 = unreported (old clients); such requests
+    /// share the legacy lane and the field is omitted on the wire.
+    pub client_id: u64,
     pub mode: RequestMode,
 }
 
@@ -68,6 +73,11 @@ impl PostRequest {
             burst_width: j
                 .opt("burst_width")
                 .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            client_id: j
+                .opt("client_id")
+                .map(|v| v.as_u64())
                 .transpose()?
                 .unwrap_or(0),
             mode,
@@ -113,6 +123,11 @@ impl PostRequest {
                 ]),
             ),
         ];
+        if self.client_id != 0 {
+            // Omitted when unreported: headers from new clients that
+            // never set an id stay byte-identical to legacy ones.
+            fields.push(("client_id", Json::num(self.client_id as f64)));
+        }
         if self.mode == RequestMode::AllInCos {
             fields.push(("mode", Json::str("all_in_cos")));
             fields.push((
@@ -140,6 +155,7 @@ mod tests {
             mem_data_per_sample: 65536,
             mem_model_bytes: 123456,
             burst_width: 8,
+            client_id: 11,
             mode: RequestMode::FeatureExtract,
         }
     }
@@ -155,19 +171,33 @@ mod tests {
         assert_eq!(back.input_dims, vec![100, 3, 32, 32]);
         assert_eq!(back.mem_data_per_sample, 65536);
         assert_eq!(back.burst_width, 8);
+        assert_eq!(back.client_id, 11);
         assert_eq!(back.mode, RequestMode::FeatureExtract);
     }
 
     #[test]
-    fn burst_width_defaults_to_unreported() {
-        // Headers from clients that predate the sharded engine carry no
-        // burst_width; parsing must not reject them.
+    fn burst_width_and_client_id_default_to_unreported() {
+        // Headers from clients that predate the sharded engine and the
+        // per-client gather lanes carry neither burst_width nor
+        // client_id; parsing must not reject them — such requests share
+        // the planner's legacy lane.
         let mut j = sample().to_json();
         if let crate::util::json::Json::Obj(fields) = &mut j {
             fields.remove("burst_width");
+            fields.remove("client_id");
         }
         let back = PostRequest::parse(&j).unwrap();
         assert_eq!(back.burst_width, 0);
+        assert_eq!(back.client_id, 0);
+    }
+
+    #[test]
+    fn unreported_client_id_is_omitted_on_the_wire() {
+        let mut r = sample();
+        r.client_id = 0;
+        let j = r.to_json();
+        assert!(j.opt("client_id").is_none());
+        assert_eq!(PostRequest::parse(&j).unwrap().client_id, 0);
     }
 
     #[test]

@@ -60,20 +60,57 @@ pub fn tenant_model(tenant: usize) -> &'static str {
     TABLE1_MODELS[tenant % TABLE1_MODELS.len()]
 }
 
+/// Sim-backend counterpart of [`tenant_model`]: round-robin over the
+/// built-in synthetic profiles, so multi-tenant examples and smokes run
+/// artifact-free.
+pub fn sim_tenant_model(tenant: usize) -> &'static str {
+    let models = crate::model::SIM_MODELS;
+    models[tenant % models.len()]
+}
+
+/// The tenant's model for a config's backend: the Table 1 set on HLO
+/// artifacts, the built-in synthetic set on the SimBackend.
+pub fn tenant_model_for(
+    cfg: &crate::config::HapiConfig,
+    tenant: usize,
+) -> &'static str {
+    match cfg.backend {
+        crate::config::BackendKind::Hlo => tenant_model(tenant),
+        crate::config::BackendKind::Sim => sim_tenant_model(tenant),
+    }
+}
+
 /// Run `tenants` concurrent jobs; `job(tenant, model)` blocks until that
-/// tenant's work completes.  All jobs start at t=0.
+/// tenant's work completes.  All jobs start at t=0, models round-robin
+/// over Table 1 — see [`run_tenants_with`] for a custom mapping.
 pub fn run_tenants<F>(tenants: usize, job: F) -> WorkloadReport
 where
     F: Fn(usize, &str) -> Result<()> + Send + Sync,
 {
+    run_tenants_with(tenants, tenant_model, job)
+}
+
+/// [`run_tenants`] with an explicit tenant → model mapping (e.g.
+/// [`tenant_model_for`] when the testbed may be on the sim backend), so
+/// the report's per-tenant model names match what actually trained.
+pub fn run_tenants_with<F, M>(
+    tenants: usize,
+    model_of: M,
+    job: F,
+) -> WorkloadReport
+where
+    F: Fn(usize, &str) -> Result<()> + Send + Sync,
+    M: Fn(usize) -> &'static str + Send + Sync,
+{
     let job = Arc::new(job);
+    let model_of = &model_of;
     let start = Instant::now();
     let results: Vec<TenantResult> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..tenants)
             .map(|t| {
                 let job = job.clone();
                 scope.spawn(move || {
-                    let model = tenant_model(t);
+                    let model = model_of(t);
                     let t0 = Instant::now();
                     let out = job(t, model);
                     TenantResult {
@@ -103,6 +140,17 @@ mod tests {
         assert_eq!(tenant_model(0), "alexnet");
         assert_eq!(tenant_model(7), "alexnet");
         assert_eq!(tenant_model(8), tenant_model(1));
+    }
+
+    #[test]
+    fn sim_round_robin_follows_backend() {
+        assert_eq!(sim_tenant_model(0), "simnet");
+        assert_eq!(sim_tenant_model(1), "simdeep");
+        assert_eq!(sim_tenant_model(2), sim_tenant_model(0));
+        let sim = crate::config::HapiConfig::sim();
+        assert_eq!(tenant_model_for(&sim, 1), "simdeep");
+        let hlo = crate::config::HapiConfig::default();
+        assert_eq!(tenant_model_for(&hlo, 0), "alexnet");
     }
 
     #[test]

@@ -237,6 +237,132 @@ fn bed_redecisions(stats: &hapi::client::EpochStats) -> usize {
         .count()
 }
 
+/// Multi-tenant isolation, end to end: a tenant's loss trajectory is
+/// **bitwise** identical whether it trains alone or next to co-tenants
+/// — the planner's per-client gather lanes and batch adaptation change
+/// timing and COS batching, never the values a tenant computes.
+#[test]
+fn tenant_loss_trajectory_independent_of_cotenants() {
+    let run_with_cotenants = |cotenants: usize| -> Vec<u32> {
+        let bed = Testbed::launch(sim_cfg()).unwrap();
+        let (ds, labels) = bed.dataset("iso-ds", "simnet", 200).unwrap();
+        let (co_ds, co_labels) =
+            bed.dataset("iso-co", "simdeep", 120).unwrap();
+        let tenant = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+        let cos: Vec<_> = (0..cotenants)
+            .map(|i| {
+                let mut cfg = bed.cfg.clone();
+                // Deep co-tenants: wide reported bursts, so the old
+                // global gather would have stretched everyone's window.
+                cfg.pipeline_depth = 2 + i;
+                let mut c = hapi::client::HapiClient::from_backend(
+                    bed.app("simdeep").unwrap(),
+                    bed.backend("simdeep").unwrap(),
+                    cfg,
+                    bed.addr(),
+                    bed.link.clone(),
+                    DeviceKind::Gpu,
+                    None,
+                );
+                c.set_registry(bed.registry.clone());
+                c
+            })
+            .collect();
+        let losses = std::thread::scope(|scope| {
+            let co_handles: Vec<_> = cos
+                .iter()
+                .map(|c| scope.spawn(|| c.train_epoch(&co_ds, &co_labels)))
+                .collect();
+            let stats = tenant.train_epoch(&ds, &labels).unwrap();
+            for h in co_handles {
+                h.join().unwrap().unwrap();
+            }
+            stats.loss
+        });
+        // With co-tenants present, each one gathered in its own lane.
+        if cotenants > 0 {
+            assert!(
+                bed.registry
+                    .histogram(&format!(
+                        "ba.lane.{}.gather_window_ns",
+                        tenant.client_id()
+                    ))
+                    .count()
+                    > 0,
+                "tenant's requests never hit its own lane"
+            );
+        }
+        bed.stop();
+        losses.iter().map(|l| l.to_bits()).collect()
+    };
+
+    let alone = run_with_cotenants(0);
+    assert_eq!(
+        alone,
+        run_with_cotenants(1),
+        "one co-tenant changed the tenant's loss trajectory"
+    );
+    assert_eq!(
+        alone,
+        run_with_cotenants(3),
+        "three co-tenants changed the tenant's loss trajectory"
+    );
+}
+
+/// Backward compatibility on the wire: a POST whose header carries no
+/// `client_id` (and no `burst_width`) — a legacy client — still parses,
+/// is planned on the shared legacy lane, and returns features.
+#[test]
+fn legacy_post_without_client_id_still_served() {
+    use hapi::cos::protocol::CosConnection;
+    use hapi::netsim::Link;
+    use hapi::server::request::{PostRequest, RequestMode};
+
+    let bed = Testbed::launch(sim_cfg()).unwrap();
+    let (ds, _labels) = bed.dataset("legacy-ds", "simnet", 40).unwrap();
+    let app = bed.app("simnet").unwrap();
+    let mem = app.memory();
+    let split = app.freeze_idx();
+    let req = PostRequest {
+        id: 1,
+        model: "simnet".into(),
+        split_idx: split,
+        object: hapi::cos::ObjectKey::shard(&ds.name, 0),
+        labels_object: String::new(),
+        input_dims: {
+            let mut d = vec![ds.shard_samples];
+            d.extend(&ds.input_shape);
+            d
+        },
+        b_max: ds.shard_samples,
+        mem_data_per_sample: mem.fe_data_bytes_per_sample(split),
+        mem_model_bytes: mem.fe_model_bytes(split),
+        burst_width: 0, // unreported, like a pre-lane client
+        client_id: 0,   // unreported → omitted from the header
+        mode: RequestMode::FeatureExtract,
+    };
+    let header = req.to_json();
+    assert!(
+        header.opt("client_id").is_none(),
+        "legacy header must not carry client_id"
+    );
+    let mut conn =
+        CosConnection::connect(&bed.addr(), Link::unshaped()).unwrap();
+    let (resp, body) = conn.post(header, Vec::new()).unwrap();
+    let out_dims = resp.get("out_dims").unwrap().as_usize_vec().unwrap();
+    assert_eq!(out_dims[0], ds.shard_samples);
+    assert!(!body.is_empty(), "no features returned");
+    // The request rode the planner's shared legacy lane (id 0).
+    assert!(
+        bed.registry
+            .histogram("ba.lane.0.gather_window_ns")
+            .count()
+            > 0,
+        "legacy request must be gathered on lane 0"
+    );
+    bed.stop();
+}
+
 /// The weak-client story holds on the sim backend with modeled time:
 /// the pipeline hides COS latency for a compute-bound CPU client too.
 #[test]
