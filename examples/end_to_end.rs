@@ -68,7 +68,7 @@ fn main() -> hapi::Result<()> {
         );
     }
     let hapi_time = t0.elapsed();
-    let hapi_rx = bed.link.stats().rx_bytes();
+    let hapi_rx = bed.net.stats().rx_bytes();
 
     // Loss-curve summary (the validation signal).
     let first = curve.first().unwrap();
@@ -86,7 +86,7 @@ fn main() -> hapi::Result<()> {
     );
 
     // BASELINE comparison on the same dataset (one epoch each way).
-    bed.link.stats().reset();
+    bed.net.stats().reset();
     let base = bed.baseline_client(model, DeviceKind::Gpu)?;
     let t0 = std::time::Instant::now();
     let bstats = base.train_epoch(&ds, &labels)?;

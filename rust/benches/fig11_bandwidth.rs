@@ -10,17 +10,83 @@
 //! Expected shape: Hapi's curve is nearly flat (the split index walks
 //! from the freeze layer toward early units as bandwidth grows) while
 //! BASELINE degrades sharply at low bandwidth.
+//!
+//! §fig11b (sim backend, artifact-free) degrades a *single path* of a
+//! two-path topology mid-run: the tenant pinned to the starved path
+//! re-decides its split toward the freeze layer through the per-window
+//! re-measurement — the Table 4 dynamic, per path.
 
 #[path = "common.rs"]
 mod common;
 
+use hapi::config::HapiConfig;
 use hapi::harness::Testbed;
 use hapi::metrics::Table;
 use hapi::netsim;
 use hapi::runtime::DeviceKind;
 use hapi::util::fmt_bytes;
 
+/// §fig11b: adaptive split vs a single degraded path (sim backend).
+fn per_path_degradation_section() {
+    println!("== Fig 11b: adaptive split vs one degraded path (sim) ==\n");
+    let mut cfg = HapiConfig::sim();
+    cfg.net_paths = 2;
+    cfg.bandwidth = Some(netsim::mbps(100.0));
+    cfg.adaptive_split = true;
+    cfg.pipeline_depth = 2;
+    cfg.split_window_secs = 0.1;
+    // One connection slot pins the tenant to one path: slot 0 of an
+    // even client id lands on path 0 — the path we will degrade.
+    cfg.fetch_fanout = 1;
+    cfg.client_id = 2;
+    let bed = Testbed::launch(cfg).unwrap();
+    let (ds, labels) = bed.dataset("f11b", "simnet", 240).unwrap();
+    let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+    let initial = client.split.split_idx;
+    let freeze = client.app.freeze_idx();
+    // Path 0's front end collapses to 50 KB/s; path 1 stays at 100 Mbps.
+    bed.net.set_path_rate(0, 50_000);
+    let stats = client.train_epoch(&ds, &labels).unwrap();
+    bed.stop();
+
+    let mut t = Table::new(
+        "Hapi simnet, 2 paths, path 0 degraded to 50 KB/s mid-run",
+        &["iteration", "split idx"],
+    );
+    for (i, s) in stats.splits.iter().enumerate() {
+        t.row(vec![i.to_string(), s.to_string()]);
+    }
+    t.print();
+
+    assert!(
+        *stats.splits.last().unwrap() > initial,
+        "split never moved off the degraded path: {:?}",
+        stats.splits
+    );
+    assert!(
+        stats.splits.iter().all(|&s| s >= initial && s <= freeze),
+        "split left [initial, freeze]: {:?}",
+        stats.splits
+    );
+    println!(
+        "\nPASS: one degraded path moved the split {} -> {} \
+         (freeze {})\n",
+        initial,
+        stats.splits.last().unwrap(),
+        freeze
+    );
+}
+
 fn main() {
+    per_path_degradation_section();
+
+    if HapiConfig::discover_artifacts().is_none() {
+        println!(
+            "(artifacts not built: skipping the HLO bandwidth sweep — \
+             run `make artifacts`)"
+        );
+        return;
+    }
     let batch = common::scaled(2000);
     println!("== Fig 11 / Table 4: bandwidth sweep (alexnet, batch {batch}) ==\n");
     let mut t = Table::new(

@@ -167,8 +167,8 @@ fn lane_isolation() {
             bed.app(model).unwrap(),
             bed.backend(model).unwrap(),
             deep_cfg,
-            bed.addr(),
-            bed.link.clone(),
+            bed.addrs(),
+            bed.net.clone(),
             DeviceKind::Gpu,
             None,
         );

@@ -87,7 +87,7 @@ fn main() {
     );
     for static_freeze in [false, true] {
         let (ds, labels) = bed.dataset("s73", "densenet121", 100).unwrap();
-        bed.link.stats().reset();
+        bed.net.stats().reset();
         let t0 = std::time::Instant::now();
         std::thread::scope(|s| {
             for _ in 0..4 {
@@ -113,7 +113,7 @@ fn main() {
                 .into(),
             split.to_string(),
             format!("{:.1}s", makespan.as_secs_f64()),
-            fmt_bytes(bed.link.stats().rx_bytes()),
+            fmt_bytes(bed.net.stats().rx_bytes()),
             format!(
                 "{:.1}s (COS {:.1} + client {:.1} + net {:.1})",
                 modelled.total(),

@@ -24,7 +24,7 @@ use crate::config::HapiConfig;
 use crate::cos::protocol::CosConnection;
 use crate::error::Result;
 use crate::metrics::Registry;
-use crate::netsim::Link;
+use crate::netsim::Topology;
 use crate::profiler::AppProfile;
 use crate::server::request::{PostRequest, RequestMode};
 
@@ -32,8 +32,9 @@ use crate::server::request::{PostRequest, RequestMode};
 pub struct AllInCosClient {
     app: AppProfile,
     cfg: HapiConfig,
-    addr: String,
-    link: Link,
+    /// One proxy address per network path, index-aligned with `net`.
+    addrs: Vec<String>,
+    net: Topology,
     next_id: std::sync::atomic::AtomicU64,
     /// Stable identity reported in every POST header so the planner
     /// gathers this tenant's burst in its own lane.
@@ -45,15 +46,19 @@ impl AllInCosClient {
     pub fn new(
         app: AppProfile,
         cfg: HapiConfig,
-        addr: String,
-        link: Link,
+        addrs: Vec<String>,
+        net: Topology,
     ) -> AllInCosClient {
+        assert!(
+            !addrs.is_empty(),
+            "client needs at least one proxy address"
+        );
         let client_id = crate::client::resolve_client_id(&cfg);
         AllInCosClient {
             app,
             cfg,
-            addr,
-            link,
+            addrs,
+            net,
             next_id: std::sync::atomic::AtomicU64::new(1),
             client_id,
             registry: Registry::new(),
@@ -80,8 +85,8 @@ impl AllInCosClient {
         let mem = self.app.memory();
         let freeze = self.app.freeze_idx();
         let mut stats = EpochStats::default();
-        let rx0 = self.link.stats().rx_bytes();
-        let tx0 = self.link.stats().tx_bytes();
+        let rx0 = self.net.stats().rx_bytes();
+        let tx0 = self.net.stats().tx_bytes();
         let jobs = pipeline::jobs_for(ds.num_shards, 1);
         // One POST per iteration (one shard per job): the lane burst is
         // the pipeline depth, capped by the connection pool.
@@ -90,9 +95,17 @@ impl AllInCosClient {
             pipeline::planner_burst_width(self.cfg.pipeline_depth, 1, fanout);
         // Connection pool: `fanout` lazily-connected slots, reused
         // across requests; a connection that errored is dropped so its
-        // slot reconnects (the engine retries on another slot).
+        // slot reconnects (the engine retries on another slot).  Like
+        // the Hapi client's pool, each slot pins to one network path
+        // and that path's proxy front end.
         let pool: Vec<Mutex<Option<CosConnection>>> =
             (0..fanout).map(|_| Mutex::new(None)).collect();
+        let num_paths = self.net.num_paths();
+        // Shared per-path accounting (`pipeline.pathN.*`): bytes here
+        // are payload bytes, ~0 for ALL_IN_COS (only the loss returns),
+        // so the per-path sum still merges into `pipeline.bytes`.
+        let path_metrics =
+            crate::client::PathMetrics::new(&self.registry, num_paths);
         let report = pipeline::run_sharded(
             self.cfg.pipeline_depth,
             fanout,
@@ -131,12 +144,19 @@ impl AllInCosClient {
                     client_id: self.client_id,
                     mode: RequestMode::AllInCos,
                 };
+                let path = crate::client::path_for_slot(
+                    self.client_id,
+                    num_paths,
+                    ctx.conn,
+                );
+                let t0 = std::time::Instant::now();
                 let (header, _body) = CosConnection::with_pooled(
                     &pool[ctx.conn],
-                    &self.addr,
-                    &self.link,
+                    &self.addrs[path % self.addrs.len()],
+                    self.net.path(path),
                     |conn| conn.post(req.to_json(), Vec::new()),
                 )?;
+                path_metrics.record(path, 0, t0.elapsed());
                 let loss = header.get("loss")?.as_f64()? as f32;
                 Ok(pipeline::ShardFetched {
                     payload: loss,
@@ -155,8 +175,8 @@ impl AllInCosClient {
             },
         )?;
         stats.max_inflight = report.inflight_max;
-        stats.bytes_from_cos = self.link.stats().rx_bytes() - rx0;
-        stats.bytes_to_cos = self.link.stats().tx_bytes() - tx0;
+        stats.bytes_from_cos = self.net.stats().rx_bytes() - rx0;
+        stats.bytes_to_cos = self.net.stats().tx_bytes() - tx0;
         Ok(stats)
     }
 }

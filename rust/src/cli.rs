@@ -87,6 +87,28 @@ impl Args {
             None => default.iter().map(|s| s.to_string()).collect(),
         }
     }
+
+    /// Comma-separated *typed* list option (e.g. `--path-rates-mbps
+    /// 100,50,0`); `None` when the option is absent, an error when any
+    /// element fails to parse.
+    pub fn parse_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<Vec<T>>> {
+        let Some(v) = self.get(name) else {
+            return Ok(None);
+        };
+        v.split(',')
+            .map(|s| {
+                s.trim().parse::<T>().map_err(|_| {
+                    Error::Config(format!(
+                        "--{name}: cannot parse element {s:?}"
+                    ))
+                })
+            })
+            .collect::<Result<Vec<T>>>()
+            .map(Some)
+    }
 }
 
 #[cfg(test)]
@@ -133,5 +155,16 @@ mod tests {
         let a = args(&["--models", "a, b,c"]);
         assert_eq!(a.list_or("models", &[]), vec!["a", "b", "c"]);
         assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn typed_lists() {
+        let a = args(&["--rates", "100, 50,0", "--bad", "1,x"]);
+        assert_eq!(
+            a.parse_list::<f64>("rates").unwrap(),
+            Some(vec![100.0, 50.0, 0.0])
+        );
+        assert_eq!(a.parse_list::<f64>("absent").unwrap(), None);
+        assert!(a.parse_list::<f64>("bad").is_err());
     }
 }

@@ -39,7 +39,7 @@ use crate::config::HapiConfig;
 use crate::cos::protocol::CosConnection;
 use crate::error::{Error, Result};
 use crate::metrics::Registry;
-use crate::netsim::Link;
+use crate::netsim::Topology;
 use crate::profiler::AppProfile;
 use crate::runtime::{DeviceKind, DeviceSim, ExecBackend, Tensor};
 use crate::server::request::{PostRequest, RequestMode};
@@ -99,6 +99,60 @@ pub(crate) fn resolve_client_id(cfg: &HapiConfig) -> u64 {
     }
 }
 
+/// The network path a pooled connection slot pins to: slots round-robin
+/// over the topology's paths, rotated by the client's id so
+/// single-connection tenants spread across front ends instead of all
+/// hammering path 0.  Deterministic per (client, slot) — pin
+/// `client_id` to pin a tenant's path.
+pub(crate) fn path_for_slot(
+    client_id: u64,
+    num_paths: usize,
+    slot: usize,
+) -> usize {
+    (client_id as usize).wrapping_add(slot) % num_paths.max(1)
+}
+
+/// The `pipeline.path<i>.*` instrument families, resolved once per
+/// epoch and shared by every client that pins pooled connection slots
+/// to topology paths (Hapi/BASELINE and ALL_IN_COS) — one copy of the
+/// per-path accounting, so the metric contract cannot drift between
+/// clients.
+pub(crate) struct PathMetrics {
+    bytes: Vec<Arc<crate::metrics::Counter>>,
+    fetch_ns: Vec<Arc<crate::metrics::Histogram>>,
+}
+
+impl PathMetrics {
+    pub(crate) fn new(registry: &Registry, num_paths: usize) -> PathMetrics {
+        PathMetrics {
+            bytes: (0..num_paths)
+                .map(|p| {
+                    registry.counter(&format!("pipeline.path{p}.bytes"))
+                })
+                .collect(),
+            fetch_ns: (0..num_paths)
+                .map(|p| {
+                    registry
+                        .histogram(&format!("pipeline.path{p}.fetch_ns"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Account one fetch against its path: payload bytes (the same
+    /// quantity `pipeline.bytes` sums, so per-path values merge into
+    /// the pipeline total) and wall latency.
+    pub(crate) fn record(
+        &self,
+        path: usize,
+        bytes: u64,
+        elapsed: Duration,
+    ) {
+        self.fetch_ns[path].record(elapsed.as_nanos() as u64);
+        self.bytes[path].add(bytes);
+    }
+}
+
 pub struct HapiClient {
     pub app: AppProfile,
     /// The initial (Algorithm 1) decision; `adaptive_split` re-decides
@@ -106,8 +160,9 @@ pub struct HapiClient {
     pub split: SplitDecision,
     backend: ExecBackend,
     cfg: HapiConfig,
-    addr: String,
-    link: Link,
+    /// One proxy address per network path, index-aligned with `net`.
+    addrs: Vec<String>,
+    net: Topology,
     device_kind: DeviceKind,
     device: Arc<DeviceSim>,
     tail_params: Mutex<Vec<Tensor>>,
@@ -126,8 +181,8 @@ impl HapiClient {
         app: AppProfile,
         backend: ExecBackend,
         cfg: HapiConfig,
-        addr: String,
-        link: Link,
+        addrs: Vec<String>,
+        net: Topology,
         device_kind: DeviceKind,
         split_override: Option<usize>,
     ) -> HapiClient {
@@ -141,12 +196,14 @@ impl HapiClient {
             },
             None => choose_split_idx(
                 &app,
-                link.rate(),
+                // Algorithm 1 sees the whole storage network: summed
+                // path rates, clamped by the client-NIC cap.
+                net.total_rate(),
                 cfg.split_window_secs,
                 cfg.train_batch,
             ),
         };
-        Self::assemble(app, backend, cfg, addr, link, device_kind, split)
+        Self::assemble(app, backend, cfg, addrs, net, device_kind, split)
     }
 
     /// The §7 BASELINE over any backend: stream raw images with GETs and
@@ -159,8 +216,8 @@ impl HapiClient {
         app: AppProfile,
         backend: ExecBackend,
         cfg: HapiConfig,
-        addr: String,
-        link: Link,
+        addrs: Vec<String>,
+        net: Topology,
         device_kind: DeviceKind,
     ) -> HapiClient {
         let split = SplitDecision {
@@ -169,18 +226,22 @@ impl HapiClient {
             bytes_per_iteration: app.input_bytes() * cfg.train_batch as u64,
             candidates: vec![],
         };
-        Self::assemble(app, backend, cfg, addr, link, device_kind, split)
+        Self::assemble(app, backend, cfg, addrs, net, device_kind, split)
     }
 
     fn assemble(
         app: AppProfile,
         backend: ExecBackend,
         cfg: HapiConfig,
-        addr: String,
-        link: Link,
+        addrs: Vec<String>,
+        net: Topology,
         device_kind: DeviceKind,
         split: SplitDecision,
     ) -> HapiClient {
+        assert!(
+            !addrs.is_empty(),
+            "client needs at least one proxy address"
+        );
         let device =
             DeviceSim::new("client-dev", device_kind, cfg.client_gpu_mem, 0);
         let tail_params = Mutex::new(backend.initial_tail_params());
@@ -190,8 +251,8 @@ impl HapiClient {
             split,
             backend,
             cfg,
-            addr,
-            link,
+            addrs,
+            net,
             device_kind,
             device,
             tail_params,
@@ -225,9 +286,10 @@ impl HapiClient {
         self.next_req_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Fetch one shard at `split` over the pooled connection in `slot`
-    /// (lazily connected; a connection that errored is dropped so the
-    /// slot reconnects on its next use — this is what makes the
+    /// Fetch one shard at `split` over the pooled connection in `slot`,
+    /// pinned to network `path` (its link and its proxy front end; the
+    /// connection is lazily connected, and one that errored is dropped
+    /// so the slot reconnects on its next use — this is what makes the
     /// engine's retry land on a *healthy* link).  Hapi mode (split ≥ 1)
     /// POSTs a feature-extraction request; BASELINE (split 0) GETs the
     /// raw image object.  `burst_width` tells the storage-side planner
@@ -235,6 +297,7 @@ impl HapiClient {
     /// (`pipeline_depth × shards_per_iter`) and `client_id` which
     /// gather lane they belong to, so the planner adapts this client's
     /// window to its burst without holding up co-tenants.
+    #[allow(clippy::too_many_arguments)]
     fn fetch_shard_on(
         &self,
         ds: &DatasetRef,
@@ -242,6 +305,7 @@ impl HapiClient {
         split: usize,
         burst_width: usize,
         slot: &Mutex<Option<CosConnection>>,
+        path: usize,
     ) -> Result<Tensor> {
         let samples = ds
             .shard_samples
@@ -249,7 +313,9 @@ impl HapiClient {
         let mut dims = vec![samples];
         dims.extend(&ds.input_shape);
         let key = crate::cos::ObjectKey::shard(&ds.name, shard);
-        CosConnection::with_pooled(slot, &self.addr, &self.link, |conn| {
+        let addr = &self.addrs[path % self.addrs.len()];
+        let link = self.net.path(path);
+        CosConnection::with_pooled(slot, addr, link, |conn| {
             if split == 0 {
                 let body = conn.get(&key)?;
                 return Tensor::from_raw(
@@ -390,8 +456,8 @@ impl HapiClient {
         );
 
         let mut stats = EpochStats::default();
-        let tx0 = self.link.stats().tx_bytes();
-        let rx0 = self.link.stats().rx_bytes();
+        let tx0 = self.net.stats().tx_bytes();
+        let rx0 = self.net.stats().rx_bytes();
 
         // Split shared between the trainer (re-decides) and the fetch
         // workers (sampled once per iteration when it enters the window,
@@ -401,13 +467,20 @@ impl HapiClient {
             self.cfg.adaptive_split && self.split.split_idx >= 1;
         // Connection pool: `fanout` lazily-connected slots, reused
         // across shards and iterations (multi-link fetch); a connection
-        // that errored is dropped and its slot reconnects.
+        // that errored is dropped and its slot reconnects.  Each slot
+        // pins to one network path (and that path's proxy front end),
+        // round-robin at pool build — with several paths the shard
+        // fanout turns into genuine multi-NIC parallelism.
         let pool: Vec<Mutex<Option<CosConnection>>> =
             (0..fanout).map(|_| Mutex::new(None)).collect();
-        // Per-connection received-byte samples; their merged sum drives
-        // the per-window bandwidth re-measurement below.
-        let conn_rx: Vec<AtomicU64> =
-            (0..fanout).map(|_| AtomicU64::new(0)).collect();
+        let num_paths = self.net.num_paths();
+        // Per-path received-byte samples; their merged sum drives the
+        // per-window bandwidth re-measurement below (exactly as the
+        // per-connection samples did pre-topology), and per-path
+        // bytes/latency land in `pipeline.pathN.*`.
+        let path_rx: Vec<AtomicU64> =
+            (0..num_paths).map(|_| AtomicU64::new(0)).collect();
+        let path_metrics = PathMetrics::new(&self.registry, num_paths);
         // Per-window bandwidth re-measurement state (trainer-side).
         let mut win_rx = 0u64;
         let mut win_t = Instant::now();
@@ -420,15 +493,20 @@ impl HapiClient {
             true,
             |_job| cur_split.load(Ordering::Relaxed),
             |ctx, &split, job, shard_pos| {
+                let path =
+                    path_for_slot(self.client_id, num_paths, ctx.conn);
+                let t0 = Instant::now();
                 let tensor = self.fetch_shard_on(
                     ds,
                     job.shards[shard_pos],
                     split,
                     burst_width,
                     &pool[ctx.conn],
+                    path,
                 )?;
                 let bytes = tensor.byte_len() as u64;
-                conn_rx[ctx.conn].fetch_add(bytes, Ordering::Relaxed);
+                path_metrics.record(path, bytes, t0.elapsed());
+                path_rx[path].fetch_add(bytes, Ordering::Relaxed);
                 Ok(pipeline::ShardFetched {
                     payload: tensor,
                     bytes,
@@ -471,11 +549,12 @@ impl HapiClient {
                 if adaptive {
                     // Re-measure the link over the delivery window and
                     // re-run Algorithm 1 (Table 4 dynamics).  The
-                    // per-connection samples are merged (summed) into
-                    // one window measurement — it observes link
-                    // goodput across every live connection, not
-                    // per-connection shares.  Two guards keep the
-                    // estimate honest:
+                    // per-path samples are merged (summed) into one
+                    // window measurement — it observes goodput across
+                    // every live path, not per-path shares, so a
+                    // single degraded path shows up as a proportional
+                    // aggregate drop.  Two guards keep the estimate
+                    // honest:
                     //
                     // - only *stalled* windows re-decide: when the
                     //   trainer never waited on the network, the link
@@ -489,7 +568,7 @@ impl HapiClient {
                     //   every later split needs *less* client memory.
                     let now = Instant::now();
                     let dt = now.duration_since(win_t).as_secs_f64();
-                    let rx: u64 = conn_rx
+                    let rx: u64 = path_rx
                         .iter()
                         .map(|c| c.load(Ordering::Relaxed))
                         .sum();
@@ -523,8 +602,8 @@ impl HapiClient {
             },
         )?;
         stats.max_inflight = report.inflight_max;
-        stats.bytes_to_cos = self.link.stats().tx_bytes() - tx0;
-        stats.bytes_from_cos = self.link.stats().rx_bytes() - rx0;
+        stats.bytes_to_cos = self.net.stats().tx_bytes() - tx0;
+        stats.bytes_from_cos = self.net.stats().rx_bytes() - rx0;
         Ok(stats)
     }
 

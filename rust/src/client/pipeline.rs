@@ -28,14 +28,18 @@
 //! trainer computes iteration `k` (already delivered), iteration `k+1`
 //! is the one submission the window admits.
 //!
-//! [`run`] fetches whole iterations; [`run_sharded`] is the sharded,
-//! multi-connection generalisation: each in-flight iteration's shards
+//! [`run_sharded`] is the engine: each in-flight iteration's shards
 //! are fanned out over a pool of `fanout` connection slots (the
 //! `fetch_fanout` knob), with per-shard retry on another connection,
 //! shard-order reassembly per iteration and the same strict in-order
 //! iteration delivery — so the learning trajectory is bitwise identical
 //! at any `fanout × depth`, only timing changes.  Per-connection byte
-//! and latency metrics land in the registry (`pipeline.connN.*`).
+//! and latency metrics land in the registry (`pipeline.connN.*`);
+//! clients additionally pin connection slots to network paths and
+//! account `pipeline.pathN.*`.  [`run`], the original whole-iteration
+//! interface, is a thin shim over it (one synthetic shard per job,
+//! `fanout = depth`, retry off) — there is exactly one
+//! window/backpressure/panic-guard protocol in the crate.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -87,60 +91,6 @@ pub struct PipelineReport {
     pub stall: Duration,
 }
 
-struct State<T> {
-    next_job: usize,
-    delivered: usize,
-    results: BTreeMap<usize, Result<Fetched<T>>>,
-    aborted: bool,
-    inflight_max: usize,
-}
-
-struct Shared<T> {
-    state: Mutex<State<T>>,
-    /// Workers wait here for window space.
-    submit: Condvar,
-    /// The consumer waits here for the next in-order result.
-    ready: Condvar,
-}
-
-/// Panic guard for a worker's claimed job: if the fetch closure unwinds,
-/// deliver an `Err` sentinel for its seq so the consumer fails fast
-/// instead of waiting forever on a result that will never arrive (the
-/// worker's panic then resurfaces when the scope joins it).
-struct FetchPanicGuard<'a, T> {
-    shared: &'a Shared<T>,
-    seq: usize,
-    armed: bool,
-}
-
-impl<T> Drop for FetchPanicGuard<'_, T> {
-    fn drop(&mut self) {
-        if !self.armed {
-            return;
-        }
-        let mut st = self.shared.state.lock().unwrap();
-        st.results.insert(
-            self.seq,
-            Err(crate::error::Error::other("pipeline fetch panicked")),
-        );
-        self.shared.ready.notify_all();
-    }
-}
-
-/// Abort guard for the consumer side: runs unconditionally when the
-/// scope closure exits — including by panic in `consume` — so workers
-/// parked on the window condvar always wake and drain instead of
-/// deadlocking the scope join.  Redundant (harmless) on clean exits.
-struct AbortOnExit<'a, T> {
-    shared: &'a Shared<T>,
-}
-
-impl<T> Drop for AbortOnExit<'_, T> {
-    fn drop(&mut self) {
-        abort(self.shared);
-    }
-}
-
 /// Run `jobs` through a `depth`-deep fetch window, delivering to
 /// `consume` strictly in `seq` order.  `fetch` runs on `depth` worker
 /// threads; `consume` runs on the calling thread (it is the trainer).
@@ -148,12 +98,20 @@ impl<T> Drop for AbortOnExit<'_, T> {
 /// The first fetch error or `consume` error aborts the pipeline and is
 /// returned (in delivery order for fetch errors, immediately for
 /// consume errors); workers finish their current fetch and exit.
+///
+/// This is a thin shim over [`run_sharded`]: each job becomes one
+/// synthetic single-shard iteration, the connection fanout equals the
+/// depth (one worker per in-flight iteration, exactly the old unsharded
+/// engine's thread model) and retry is off — an unsharded fetch closure
+/// owns its own transport, so there is no "other connection" to retry
+/// on.  The window/backpressure/panic-guard protocol therefore lives in
+/// one engine only.
 pub fn run<T, F, C>(
     depth: usize,
     jobs: &[Job],
     registry: &Registry,
     fetch: F,
-    mut consume: C,
+    consume: C,
 ) -> Result<PipelineReport>
 where
     T: Send,
@@ -165,134 +123,31 @@ where
         jobs.iter().enumerate().all(|(i, j)| j.seq == i),
         "job seqs must be dense and position-ordered (use jobs_for)"
     );
-    registry.gauge("pipeline.depth").set(depth as i64);
-    let mut report = PipelineReport::default();
-    if jobs.is_empty() {
-        return Ok(report);
-    }
-    let shared = Shared {
-        state: Mutex::new(State {
-            next_job: 0,
-            delivered: 0,
-            results: BTreeMap::new(),
-            aborted: false,
-            inflight_max: 0,
-        }),
-        submit: Condvar::new(),
-        ready: Condvar::new(),
-    };
-    let fetch = &fetch;
-    let shared = &shared;
-
-    let out: Result<()> = std::thread::scope(|scope| {
-        let _abort_on_exit = AbortOnExit { shared };
-        for _ in 0..depth.min(jobs.len()) {
-            scope.spawn(move || {
-                loop {
-                    // Claim the next job once the window has room.
-                    let idx = {
-                        let mut st = shared.state.lock().unwrap();
-                        loop {
-                            if st.aborted || st.next_job >= jobs.len() {
-                                return;
-                            }
-                            if st.next_job < st.delivered + depth {
-                                break;
-                            }
-                            st = shared.submit.wait(st).unwrap();
-                        }
-                        let idx = st.next_job;
-                        st.next_job += 1;
-                        st.inflight_max = st
-                            .inflight_max
-                            .max(st.next_job - st.delivered);
-                        idx
-                    };
-                    let mut guard = FetchPanicGuard {
-                        shared,
-                        seq: jobs[idx].seq,
-                        armed: true,
-                    };
-                    let t0 = Instant::now();
-                    let mut res = fetch(&jobs[idx]);
-                    guard.armed = false;
-                    if let Ok(f) = res.as_mut() {
-                        f.fetch_time = t0.elapsed();
-                        registry
-                            .histogram("pipeline.fetch_ns")
-                            .record(f.fetch_time.as_nanos() as u64);
-                        registry.counter("pipeline.bytes").add(f.bytes);
-                    }
-                    let mut st = shared.state.lock().unwrap();
-                    st.results.insert(jobs[idx].seq, res);
-                    shared.ready.notify_all();
-                }
-            });
-        }
-
-        // The consumer: this thread is the trainer.
-        for seq in 0..jobs.len() {
-            let wait0 = Instant::now();
-            let fetched = {
-                let mut st = shared.state.lock().unwrap();
-                loop {
-                    if let Some(r) = st.results.remove(&seq) {
-                        break r;
-                    }
-                    st = shared.ready.wait(st).unwrap();
-                }
-            };
-            let stall = wait0.elapsed();
-            registry
-                .histogram("pipeline.stall_ns")
-                .record(stall.as_nanos() as u64);
-            let fetched = match fetched {
-                Ok(f) => f,
-                Err(e) => {
-                    abort(shared);
-                    return Err(e);
-                }
-            };
-            // Open the window *before* computing so the freed slot's
-            // fetch overlaps this iteration's compute.
-            {
-                let mut st = shared.state.lock().unwrap();
-                st.delivered += 1;
-                shared.submit.notify_all();
-            }
-            report.iterations += 1;
-            report.bytes += fetched.bytes;
-            report.stall += stall;
-            registry.counter("pipeline.iterations").inc();
-            let delivery = Delivery {
-                seq,
-                payload: fetched.payload,
-                bytes: fetched.bytes,
-                fetch_time: fetched.fetch_time,
-                stall,
-            };
-            if let Err(e) = consume(delivery) {
-                abort(shared);
-                return Err(e);
-            }
-        }
-        Ok(())
-    });
-    out?;
-
-    let st = shared.state.lock().unwrap();
-    report.inflight_max = st.inflight_max;
-    registry
-        .gauge("pipeline.inflight_max")
-        .set(st.inflight_max as i64);
-    Ok(report)
-}
-
-fn abort<T>(shared: &Shared<T>) {
-    let mut st = shared.state.lock().unwrap();
-    st.aborted = true;
-    shared.submit.notify_all();
-    shared.ready.notify_all();
+    // One synthetic shard per job; the shard fetch looks the original
+    // job up by seq so the user closure still sees its real shard list.
+    let synthetic: Vec<Job> = (0..jobs.len())
+        .map(|seq| Job {
+            seq,
+            shards: vec![seq],
+        })
+        .collect();
+    run_sharded(
+        depth,
+        depth,
+        &synthetic,
+        registry,
+        false,
+        |_job| (),
+        |_ctx, _: &(), sjob, _shard_pos| {
+            let f = fetch(&jobs[sjob.seq])?;
+            let bytes = f.bytes;
+            Ok(ShardFetched { payload: f, bytes })
+        },
+        |_sjob, _: &(), mut parts| {
+            Ok(parts.pop().expect("one synthetic shard per job").payload)
+        },
+        consume,
+    )
 }
 
 // ---------------------------------------------------------------------
@@ -404,7 +259,10 @@ impl<J, S, T> Drop for ShardedPanicGuard<'_, J, S, T> {
     }
 }
 
-/// Abort guard mirroring [`AbortOnExit`] for the sharded engine.
+/// Abort guard for the consumer side: runs unconditionally when the
+/// scope closure exits — including by panic in `consume` — so workers
+/// parked on the condvars always wake and drain instead of deadlocking
+/// the scope join.  Redundant (harmless) on clean exits.
 struct ShardedAbortOnExit<'a, J, S, T> {
     shared: &'a ShardedShared<J, S, T>,
 }

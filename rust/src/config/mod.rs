@@ -27,6 +27,13 @@
 //!   ([`HapiConfig::sim`] is the ready-made sim preset).
 //! - `sim_compute_gflops` (`--sim-gflops`, default 0) — modeled compute
 //!   rate for the SimBackend; 0 keeps execution instantaneous.
+//! - network topology (`net_paths`/`--net-paths`, default 1;
+//!   `path_rates_mbps`/`--path-rates-mbps` per-path overrides, 0 =
+//!   unshaped; `aggregate_bandwidth_mbps`/`--aggregate-bandwidth-mbps`
+//!   client-NIC cap, 0 = uncapped; `path_latency_us`/
+//!   `--path-latency-us`) — the multi-NIC/multi-proxy path model
+//!   ([`HapiConfig::topology_spec`]); each path gets `bandwidth` unless
+//!   overridden, and one path is exactly the classic single link.
 
 use std::path::{Path, PathBuf};
 
@@ -42,10 +49,29 @@ pub struct HapiConfig {
     /// Profile scale used for *analytic* size/memory figures.
     pub scale: Scale,
 
-    // --- network (client ↔ COS link) --------------------------------
-    /// Bandwidth in bytes/sec; `None` = unshaped (the paper's 12 Gbps
-    /// "unrestricted" case).
+    // --- network (client ↔ COS paths) -------------------------------
+    /// Per-path bandwidth in bytes/sec; `None` = unshaped (the paper's
+    /// 12 Gbps "unrestricted" case).  With one path (the default) this
+    /// is the classic single client↔COS link.
     pub bandwidth: Option<u64>,
+    /// Number of client-NIC → proxy paths (multi-NIC / multi-proxy
+    /// front end).  Each path gets its own token bucket at `bandwidth`
+    /// (or its `path_rates` override) and its own proxy instance; the
+    /// client's connection pool round-robins slots over paths.  1 ≡
+    /// the pre-topology single-link model.
+    pub net_paths: usize,
+    /// Optional per-path rate overrides (bytes/sec; `None` = unshaped).
+    /// Empty = every path runs at `bandwidth`.  When non-empty its
+    /// length must equal `net_paths`.
+    pub path_rates: Vec<Option<u64>>,
+    /// Optional shared client-NIC aggregate cap (bytes/sec) across all
+    /// paths; `None` = the NIC never binds.  This is what stops the
+    /// fig16 multi-path scaling once `net_paths × bandwidth` exceeds
+    /// the NIC.
+    pub aggregate_bandwidth: Option<u64>,
+    /// Fixed one-way per-frame propagation delay on every path, in µs
+    /// (0 = none) — models a longer route to a remote COS front end.
+    pub path_latency_us: u64,
 
     // --- COS ----------------------------------------------------------
     pub storage_nodes: usize,
@@ -178,6 +204,10 @@ impl Default for HapiConfig {
             // 1 Gbps in the paper ≙ 100 Mbps at tiny scale (data per
             // iteration shrinks ~10x; see DESIGN.md §2 scale mapping).
             bandwidth: Some(netsim::mbps(100.0)),
+            net_paths: 1,
+            path_rates: Vec::new(),
+            aggregate_bandwidth: None,
+            path_latency_us: 0,
             storage_nodes: 3,
             replicas: 2,
             storage_read_rate: None,
@@ -225,6 +255,36 @@ impl HapiConfig {
         }
     }
 
+    /// The network topology these knobs describe: `net_paths` paths at
+    /// `bandwidth` each (or their `path_rates` override), a shared
+    /// per-frame latency, and the optional client-NIC aggregate cap.
+    /// The default config yields one uncapped, zero-latency path —
+    /// byte-identical to the pre-topology single link.
+    pub fn topology_spec(&self) -> crate::netsim::TopologySpec {
+        let n = self.net_paths.max(1);
+        let latency =
+            std::time::Duration::from_micros(self.path_latency_us);
+        let paths = (0..n)
+            .map(|i| crate::netsim::PathSpec {
+                rate: self
+                    .path_rates
+                    .get(i)
+                    .copied()
+                    .unwrap_or(self.bandwidth),
+                latency,
+            })
+            .collect();
+        crate::netsim::TopologySpec {
+            paths,
+            aggregate_rate: self.aggregate_bandwidth,
+        }
+    }
+
+    /// Build the live [`crate::netsim::Topology`] for this config.
+    pub fn topology(&self) -> crate::netsim::Topology {
+        crate::netsim::Topology::new(&self.topology_spec())
+    }
+
     /// defaults <- optional `--config <file>` <- individual flags.
     pub fn from_args(args: &Args) -> Result<HapiConfig> {
         let mut cfg = HapiConfig::default();
@@ -248,6 +308,29 @@ impl HapiConfig {
                     let m = v.as_f64()?;
                     self.bandwidth =
                         if m <= 0.0 { None } else { Some(netsim::mbps(m)) };
+                }
+                "net_paths" => self.net_paths = v.as_usize()?,
+                "path_rates_mbps" => {
+                    self.path_rates = v
+                        .as_arr()?
+                        .iter()
+                        .map(|e| {
+                            let m = e.as_f64()?;
+                            Ok(if m <= 0.0 {
+                                None
+                            } else {
+                                Some(netsim::mbps(m))
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                "aggregate_bandwidth_mbps" => {
+                    let m = v.as_f64()?;
+                    self.aggregate_bandwidth =
+                        if m <= 0.0 { None } else { Some(netsim::mbps(m)) };
+                }
+                "path_latency_us" => {
+                    self.path_latency_us = v.as_u64()?
                 }
                 "storage_nodes" => self.storage_nodes = v.as_usize()?,
                 "storage_read_rate_mbps" => {
@@ -310,6 +393,22 @@ impl HapiConfig {
                 .map_err(|_| Error::Config(format!("bad bandwidth {v:?}")))?;
             self.bandwidth = if m <= 0.0 { None } else { Some(netsim::mbps(m)) };
         }
+        self.net_paths = args.parse_or("net-paths", self.net_paths)?;
+        if let Some(rates) = args.parse_list::<f64>("path-rates-mbps")? {
+            self.path_rates = rates
+                .into_iter()
+                .map(|m| if m <= 0.0 { None } else { Some(netsim::mbps(m)) })
+                .collect();
+        }
+        if let Some(v) = args.get("aggregate-bandwidth-mbps") {
+            let m: f64 = v.parse().map_err(|_| {
+                Error::Config(format!("bad aggregate bandwidth {v:?}"))
+            })?;
+            self.aggregate_bandwidth =
+                if m <= 0.0 { None } else { Some(netsim::mbps(m)) };
+        }
+        self.path_latency_us =
+            args.parse_or("path-latency-us", self.path_latency_us)?;
         self.storage_nodes = args.parse_or("storage-nodes", self.storage_nodes)?;
         self.replicas = args.parse_or("replicas", self.replicas)?;
         self.object_samples =
@@ -373,6 +472,21 @@ impl HapiConfig {
             return Err(Error::Config(
                 "pipeline depth must be ≥ 1 (1 = double buffering)".into(),
             ));
+        }
+        if self.net_paths == 0 {
+            return Err(Error::Config(
+                "need ≥ 1 network path (1 = the classic single link)"
+                    .into(),
+            ));
+        }
+        if !self.path_rates.is_empty()
+            && self.path_rates.len() != self.net_paths
+        {
+            return Err(Error::Config(format!(
+                "path_rates has {} entries for {} paths",
+                self.path_rates.len(),
+                self.net_paths
+            )));
         }
         // Ids ride the JSON header (and config files) as f64: above
         // 2^53 they would silently round, which could merge two pinned
@@ -470,6 +584,33 @@ impl HapiConfig {
                         .map(|b| b as f64 * 8.0 / 1e6)
                         .unwrap_or(0.0),
                 ),
+            ),
+            ("net_paths", Json::num(self.net_paths as f64)),
+            (
+                "path_rates_mbps",
+                Json::Arr(
+                    self.path_rates
+                        .iter()
+                        .map(|r| {
+                            Json::num(
+                                r.map(|b| b as f64 * 8.0 / 1e6)
+                                    .unwrap_or(0.0),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "aggregate_bandwidth_mbps",
+                Json::num(
+                    self.aggregate_bandwidth
+                        .map(|b| b as f64 * 8.0 / 1e6)
+                        .unwrap_or(0.0),
+                ),
+            ),
+            (
+                "path_latency_us",
+                Json::num(self.path_latency_us as f64),
             ),
             ("storage_nodes", Json::num(self.storage_nodes as f64)),
             ("replicas", Json::num(self.replicas as f64)),
@@ -634,6 +775,74 @@ mod tests {
         let mut cfg2 = HapiConfig::default();
         cfg2.merge_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg2.fetch_fanout, 3);
+    }
+
+    #[test]
+    fn topology_knobs_parse_roundtrip_and_validate() {
+        let cfg = HapiConfig::from_args(&args(&[
+            "--net-paths",
+            "3",
+            "--path-rates-mbps",
+            "100,50,0",
+            "--aggregate-bandwidth-mbps",
+            "120",
+            "--path-latency-us",
+            "250",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.net_paths, 3);
+        assert_eq!(
+            cfg.path_rates,
+            vec![
+                Some(netsim::mbps(100.0)),
+                Some(netsim::mbps(50.0)),
+                None, // 0 = unshaped, like bandwidth_mbps
+            ]
+        );
+        assert_eq!(cfg.aggregate_bandwidth, Some(netsim::mbps(120.0)));
+        assert_eq!(cfg.path_latency_us, 250);
+        let spec = cfg.topology_spec();
+        assert_eq!(spec.paths.len(), 3);
+        assert_eq!(spec.paths[0].rate, Some(netsim::mbps(100.0)));
+        assert_eq!(spec.paths[2].rate, None);
+        assert_eq!(spec.aggregate_rate, Some(netsim::mbps(120.0)));
+        assert_eq!(
+            spec.paths[1].latency,
+            std::time::Duration::from_micros(250)
+        );
+
+        // …and the knobs survive a JSON roundtrip.
+        let mut cfg2 = HapiConfig::default();
+        cfg2.merge_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.net_paths, 3);
+        assert_eq!(cfg2.path_rates, cfg.path_rates);
+        assert_eq!(cfg2.aggregate_bandwidth, cfg.aggregate_bandwidth);
+        assert_eq!(cfg2.path_latency_us, 250);
+
+        let mut bad = HapiConfig::default();
+        bad.net_paths = 2;
+        bad.path_rates = vec![Some(1)]; // length mismatch
+        assert!(bad.validate().is_err());
+        let mut bad = HapiConfig::default();
+        bad.net_paths = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn default_topology_is_the_single_link() {
+        let cfg = HapiConfig::default();
+        assert_eq!(
+            cfg.topology_spec(),
+            netsim::TopologySpec::single(cfg.bandwidth)
+        );
+        // Without overrides every path inherits `bandwidth`.
+        let mut cfg = HapiConfig::default();
+        cfg.net_paths = 2;
+        let spec = cfg.topology_spec();
+        assert_eq!(spec.paths.len(), 2);
+        assert_eq!(spec.paths[0].rate, cfg.bandwidth);
+        assert_eq!(spec.paths[1].rate, cfg.bandwidth);
+        assert_eq!(spec.aggregate_rate, None);
     }
 
     #[test]

@@ -54,6 +54,12 @@ pub struct ProxyConfig {
     pub compute_workers: usize,
     /// Threads serving connection I/O (and POSTs in InProxy mode).
     pub io_workers: usize,
+    /// Which network path this proxy instance terminates: the testbed
+    /// starts one proxy per [`crate::netsim::Topology`] path, and the
+    /// clients' pooled connections pin to (path, proxy) pairs.  Labels
+    /// the per-front-end `cos.path<id>.requests` counter; 0 for the
+    /// classic single-proxy setup.
+    pub path_id: usize,
 }
 
 impl Default for ProxyConfig {
@@ -62,6 +68,7 @@ impl Default for ProxyConfig {
             mode: ProxyMode::Decoupled,
             compute_workers: 2,
             io_workers: 8,
+            path_id: 0,
         }
     }
 }
@@ -81,6 +88,9 @@ struct Shared {
     /// handling — modeled by serialising the dispatch+response path.
     green_thread: Option<std::sync::Mutex<()>>,
     registry: Registry,
+    /// Requests served by this front end (`cos.path<id>.requests`) —
+    /// the per-path load split of a multi-proxy testbed.
+    path_requests: Arc<crate::metrics::Counter>,
 }
 
 impl Proxy {
@@ -103,6 +113,8 @@ impl Proxy {
             ))),
             ProxyMode::InProxy => None,
         };
+        let path_requests = registry
+            .counter(&format!("cos.path{}.requests", config.path_id));
         let shared = Arc::new(Shared {
             cluster,
             handler,
@@ -112,6 +124,7 @@ impl Proxy {
                 ProxyMode::Decoupled => None,
             },
             registry,
+            path_requests,
         });
 
         let sd = shutdown.clone();
@@ -200,6 +213,7 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
 }
 
 fn handle(shared: &Arc<Shared>, req: Request) -> Response {
+    shared.path_requests.inc();
     match req {
         Request::Get(key) => {
             shared.registry.counter("cos.get").inc();
@@ -368,6 +382,7 @@ mod tests {
                 mode: ProxyMode::InProxy,
                 compute_workers: 0,
                 io_workers: 2,
+                path_id: 0,
             },
             Registry::new(),
         )
@@ -377,6 +392,40 @@ mod tests {
         let (_, b) = conn.post(Json::parse("{}").unwrap(), vec![9, 8]).unwrap();
         assert_eq!(b, vec![8, 9]);
         proxy.stop();
+    }
+
+    /// Two proxies over one cluster and registry — the multi-path COS
+    /// front end: writes through either are visible through both, and
+    /// each front end counts its own `cos.path<id>.requests`.
+    #[test]
+    fn two_proxies_share_cluster_and_count_per_path() {
+        let cluster = Arc::new(StorageCluster::new(3, 2));
+        let reg = Registry::new();
+        let start = |path_id: usize| {
+            Proxy::start(
+                cluster.clone(),
+                Arc::new(NoPost) as Arc<dyn PostHandler>,
+                ProxyConfig {
+                    path_id,
+                    ..ProxyConfig::default()
+                },
+                reg.clone(),
+            )
+            .unwrap()
+        };
+        let p0 = start(0);
+        let p1 = start(1);
+        let mut c0 =
+            CosConnection::connect(p0.addr(), Link::unshaped()).unwrap();
+        let mut c1 =
+            CosConnection::connect(p1.addr(), Link::unshaped()).unwrap();
+        c0.put(&"shared".into(), vec![7; 16]).unwrap();
+        assert_eq!(c1.get(&"shared".into()).unwrap(), vec![7; 16]);
+        c1.get(&"shared".into()).unwrap();
+        assert_eq!(reg.counter("cos.path0.requests").get(), 1);
+        assert_eq!(reg.counter("cos.path1.requests").get(), 2);
+        p0.stop();
+        p1.stop();
     }
 
     #[test]

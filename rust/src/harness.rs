@@ -22,7 +22,7 @@ use crate::cos::storage::StorageCluster;
 use crate::error::Result;
 use crate::metrics::Registry;
 use crate::model::ModelRegistry;
-use crate::netsim::Link;
+use crate::netsim::Topology;
 use crate::profiler::AppProfile;
 use crate::runtime::{DeviceKind, Engine, ExecBackend, ModelArtifacts};
 use crate::server::HapiServer;
@@ -34,10 +34,13 @@ pub struct Testbed {
     pub cluster: Arc<StorageCluster>,
     pub server: Arc<HapiServer>,
     pub registry: Registry,
-    proxy: Proxy,
-    /// The constrained compute-tier ↔ COS link (shared by all tenants,
-    /// like the single NIC of the paper's client machine).
-    pub link: Link,
+    /// One proxy front end per network path (`cfg.net_paths`); all
+    /// share the cluster, the embedded Hapi server, and the registry.
+    proxies: Vec<Proxy>,
+    /// The constrained compute-tier ↔ COS network (shared by all
+    /// tenants): per-path token buckets under the optional client-NIC
+    /// aggregate cap.  One path ≡ the paper's single shaped link.
+    pub net: Topology,
 }
 
 impl Testbed {
@@ -81,20 +84,26 @@ impl Testbed {
             (cfg.train_batch / cfg.object_samples).max(1);
         let compute_workers =
             16.max(cfg.resolved_fanout(shards_per_iter));
-        let proxy = Proxy::start(
-            cluster.clone(),
-            server.clone(),
-            ProxyConfig {
-                mode,
-                compute_workers,
-                io_workers: 8,
-            },
-            registry.clone(),
-        )?;
-        let link = match cfg.bandwidth {
-            Some(rate) => Link::shaped(rate),
-            None => Link::unshaped(),
-        };
+        let net = cfg.topology();
+        // One proxy front end per path — the multi-proxy COS face the
+        // paper's S3-style testbed reads through.  All instances share
+        // the cluster and the embedded server, so planner/devices stay
+        // global while transport parallelises.
+        let proxies = (0..net.num_paths())
+            .map(|path_id| {
+                Proxy::start(
+                    cluster.clone(),
+                    server.clone(),
+                    ProxyConfig {
+                        mode,
+                        compute_workers,
+                        io_workers: 8,
+                        path_id,
+                    },
+                    registry.clone(),
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
         Ok(Testbed {
             cfg,
             engine,
@@ -102,13 +111,19 @@ impl Testbed {
             cluster,
             server,
             registry,
-            proxy,
-            link,
+            proxies,
+            net,
         })
     }
 
+    /// Path-0 front end (the classic single-proxy address).
     pub fn addr(&self) -> String {
-        self.proxy.addr().to_string()
+        self.proxies[0].addr().to_string()
+    }
+
+    /// Every front end's address, index-aligned with `net`'s paths.
+    pub fn addrs(&self) -> Vec<String> {
+        self.proxies.iter().map(|p| p.addr().to_string()).collect()
     }
 
     pub fn app(&self, model: &str) -> Result<AppProfile> {
@@ -163,8 +178,8 @@ impl Testbed {
             self.app(model)?,
             self.backend(model)?,
             self.cfg.clone(),
-            self.addr(),
-            self.link.clone(),
+            self.addrs(),
+            self.net.clone(),
             device,
             None,
         );
@@ -181,8 +196,8 @@ impl Testbed {
             self.app(model)?,
             self.backend(model)?,
             self.cfg.clone(),
-            self.addr(),
-            self.link.clone(),
+            self.addrs(),
+            self.net.clone(),
             device,
         );
         client.set_registry(self.registry.clone());
@@ -200,8 +215,8 @@ impl Testbed {
             app,
             self.backend(model)?,
             self.cfg.clone(),
-            self.addr(),
-            self.link.clone(),
+            self.addrs(),
+            self.net.clone(),
             device,
             Some(freeze),
         );
@@ -213,14 +228,16 @@ impl Testbed {
         let mut client = AllInCosClient::new(
             self.app(model)?,
             self.cfg.clone(),
-            self.addr(),
-            self.link.clone(),
+            self.addrs(),
+            self.net.clone(),
         );
         client.set_registry(self.registry.clone());
         Ok(client)
     }
 
     pub fn stop(self) {
-        self.proxy.stop();
+        for proxy in self.proxies {
+            proxy.stop();
+        }
     }
 }

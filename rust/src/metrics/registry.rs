@@ -89,6 +89,23 @@ impl Registry {
             .clone()
     }
 
+    /// Drop every counter/gauge/histogram whose name starts with
+    /// `prefix`; returns how many instruments were evicted.  This is
+    /// the cardinality relief valve for per-entity metric families
+    /// (e.g. the planner's `ba.lane.<id>.*`): without it a long-lived
+    /// process accumulates one instrument per entity ever seen.
+    /// Handles already held by callers keep recording into the detached
+    /// instrument; the registry re-creates a fresh one on next lookup.
+    pub fn evict_prefix(&self, prefix: &str) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let before =
+            g.counters.len() + g.gauges.len() + g.histograms.len();
+        g.counters.retain(|k, _| !k.starts_with(prefix));
+        g.gauges.retain(|k, _| !k.starts_with(prefix));
+        g.histograms.retain(|k, _| !k.starts_with(prefix));
+        before - (g.counters.len() + g.gauges.len() + g.histograms.len())
+    }
+
     /// JSON snapshot: counters/gauges verbatim, histograms as summary.
     pub fn snapshot(&self) -> Json {
         let g = self.inner.lock().unwrap();
@@ -143,6 +160,28 @@ mod tests {
         assert_eq!(r.counter("x").get(), 3);
         r.gauge("g").set(-5);
         assert_eq!(r.gauge("g").get(), -5);
+    }
+
+    #[test]
+    fn evict_prefix_drops_matching_instruments_only() {
+        let r = Registry::new();
+        r.counter("ba.lane.1.hits").add(3);
+        r.histogram("ba.lane.1.gather_window_ns").record(9);
+        r.gauge("ba.lane.1.depth").set(2);
+        r.histogram("ba.lane.12.gather_window_ns").record(7);
+        r.counter("ba.requests").add(1);
+        assert_eq!(r.evict_prefix("ba.lane.1."), 3);
+        let snap = r.snapshot();
+        let hists = snap.get("histograms").unwrap().as_obj().unwrap();
+        assert!(!hists.contains_key("ba.lane.1.gather_window_ns"));
+        // Prefix match is exact: lane 12 and non-lane metrics survive.
+        assert!(hists.contains_key("ba.lane.12.gather_window_ns"));
+        assert_eq!(r.counter("ba.requests").get(), 1);
+        // A fresh lookup re-creates an empty instrument.
+        assert_eq!(
+            r.histogram("ba.lane.1.gather_window_ns").count(),
+            0
+        );
     }
 
     #[test]

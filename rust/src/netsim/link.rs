@@ -1,16 +1,35 @@
 //! A metered, optionally shaped, bidirectional link.
 //!
-//! One [`Link`] models the compute-tier ↔ COS network: a shared token
-//! bucket (both directions contend for the same capacity, like a `tc`
-//! limited NIC) plus per-direction byte counters.  The COS wire protocol
-//! calls [`Link::send`]/[`Link::recv`] around every frame.
+//! One [`Link`] models a single network *path* between the compute tier
+//! and a COS front end: a shared token bucket (both directions contend
+//! for the same capacity, like a `tc` limited NIC) plus per-direction
+//! byte counters.  The COS wire protocol calls
+//! [`Link::send`]/[`Link::recv`] around every frame.
+//!
+//! A path link built by [`crate::netsim::Topology`] additionally
+//! carries:
+//!
+//! - an optional **aggregate bucket** shared with every sibling path —
+//!   the client-NIC cap: a byte must clear *both* its path's bucket and
+//!   the aggregate before it counts as delivered;
+//! - a shared **NIC meter** ([`LinkStats`]) that every path also
+//!   charges, so the client can read total bytes moved without summing
+//!   paths;
+//! - an optional fixed per-frame **latency** (one-way propagation per
+//!   direction), modeling a longer route to a remote proxy.
+//!
+//! The plain [`Link::shaped`]/[`Link::unshaped`] constructors carry
+//! none of these — they behave exactly as the single-link model always
+//! did.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::bucket::TokenBucket;
 
-/// Shape bytes in chunks so concurrent streams interleave fairly.
+/// Shape bytes in chunks so concurrent streams interleave fairly (both
+/// across connections on one path and across paths on the aggregate).
 const CHUNK: u64 = 64 * 1024;
 
 #[derive(Debug, Default)]
@@ -43,7 +62,13 @@ impl LinkStats {
 #[derive(Clone)]
 pub struct Link {
     bucket: Option<Arc<TokenBucket>>,
+    /// Client-NIC cap shared with sibling paths (topology links only).
+    aggregate: Option<Arc<TokenBucket>>,
     stats: Arc<LinkStats>,
+    /// Shared NIC meter additionally charged by topology path links.
+    nic_stats: Option<Arc<LinkStats>>,
+    /// Fixed one-way propagation delay charged per frame per direction.
+    latency: Duration,
 }
 
 impl Link {
@@ -52,7 +77,10 @@ impl Link {
     pub fn unshaped() -> Self {
         Link {
             bucket: None,
+            aggregate: None,
             stats: Arc::new(LinkStats::default()),
+            nic_stats: None,
+            latency: Duration::ZERO,
         }
     }
 
@@ -60,30 +88,72 @@ impl Link {
     pub fn shaped(rate: u64) -> Self {
         Link {
             bucket: Some(Arc::new(TokenBucket::with_default_burst(rate))),
+            aggregate: None,
             stats: Arc::new(LinkStats::default()),
+            nic_stats: None,
+            latency: Duration::ZERO,
+        }
+    }
+
+    /// One path of a multi-path topology: its own optional bucket, an
+    /// optional aggregate (client-NIC) bucket shared with sibling
+    /// paths, the shared NIC meter, and a fixed per-frame latency.
+    pub(crate) fn path(
+        rate: Option<u64>,
+        latency: Duration,
+        aggregate: Option<Arc<TokenBucket>>,
+        nic_stats: Arc<LinkStats>,
+    ) -> Self {
+        Link {
+            bucket: rate
+                .map(|r| Arc::new(TokenBucket::with_default_burst(r))),
+            aggregate,
+            stats: Arc::new(LinkStats::default()),
+            nic_stats: Some(nic_stats),
+            latency,
         }
     }
 
     /// Account + shape `n` bytes moving client → COS.
     pub fn send(&self, n: u64) {
         self.stats.tx.fetch_add(n, Ordering::Relaxed);
+        if let Some(nic) = &self.nic_stats {
+            nic.tx.fetch_add(n, Ordering::Relaxed);
+        }
+        self.delay();
         self.shape(n);
     }
 
     /// Account + shape `n` bytes moving COS → client.
     pub fn recv(&self, n: u64) {
         self.stats.rx.fetch_add(n, Ordering::Relaxed);
+        if let Some(nic) = &self.nic_stats {
+            nic.rx.fetch_add(n, Ordering::Relaxed);
+        }
+        self.delay();
         self.shape(n);
     }
 
+    fn delay(&self) {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+    }
+
     fn shape(&self, n: u64) {
-        if let Some(bucket) = &self.bucket {
-            let mut left = n;
-            while left > 0 {
-                let take = left.min(CHUNK);
+        if self.bucket.is_none() && self.aggregate.is_none() {
+            return;
+        }
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(CHUNK);
+            if let Some(bucket) = &self.bucket {
                 bucket.take(take);
-                left -= take;
             }
+            if let Some(agg) = &self.aggregate {
+                agg.take(take);
+            }
+            left -= take;
         }
     }
 
@@ -98,6 +168,8 @@ impl Link {
     /// Re-shape a shaped link mid-run (Table 4's bandwidth changes); a
     /// no-op on unshaped links.  All clones of this link see the new
     /// rate — they share the bucket, like flows behind one `tc` qdisc.
+    /// On a topology path link this reshapes *only this path*; the
+    /// shared aggregate cap is untouched.
     pub fn set_rate(&self, rate: u64) {
         if let Some(bucket) = &self.bucket {
             bucket.set_rate(rate);
@@ -151,5 +223,39 @@ mod tests {
         let start = Instant::now();
         link.recv(1 << 30);
         assert!(start.elapsed().as_millis() < 50);
+    }
+
+    #[test]
+    fn path_link_charges_nic_meter_and_aggregate() {
+        let nic = Arc::new(LinkStats::default());
+        // Path unshaped, aggregate capped: the aggregate is the only
+        // thing slowing the transfer.
+        let agg =
+            Arc::new(TokenBucket::new(4 * 1024 * 1024, 64 * 1024));
+        let link =
+            Link::path(None, Duration::ZERO, Some(agg), nic.clone());
+        let start = Instant::now();
+        link.recv(1024 * 1024);
+        assert!(
+            start.elapsed().as_secs_f64() > 0.1,
+            "aggregate cap must bind on an unshaped path"
+        );
+        assert_eq!(link.stats().rx_bytes(), 1024 * 1024);
+        assert_eq!(nic.rx_bytes(), 1024 * 1024);
+    }
+
+    #[test]
+    fn path_latency_is_charged_per_frame() {
+        let nic = Arc::new(LinkStats::default());
+        let link =
+            Link::path(None, Duration::from_millis(20), None, nic);
+        let start = Instant::now();
+        link.send(10);
+        link.recv(10);
+        assert!(
+            start.elapsed() >= Duration::from_millis(35),
+            "two frames must pay two propagation delays: {:?}",
+            start.elapsed()
+        );
     }
 }

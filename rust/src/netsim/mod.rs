@@ -4,12 +4,19 @@
 //! 12 Gbps, §7.4).  We reproduce that with a token bucket applied to every
 //! byte crossing the link, plus exact per-direction byte meters that back
 //! the "data transferred" axes of Figs 11b and 13.
+//!
+//! [`Topology`] generalises the single link to a set of per-path token
+//! buckets (multi-NIC / multi-proxy) under an optional shared client-NIC
+//! aggregate cap — the model behind the fig16 multi-path
+//! aggregate-bandwidth scaling.
 
 pub mod bucket;
 pub mod link;
+pub mod topology;
 
 pub use bucket::TokenBucket;
 pub use link::{Link, LinkStats};
+pub use topology::{PathSpec, Topology, TopologySpec};
 
 /// Convenience: Gbps → bytes/second.
 pub fn gbps(g: f64) -> u64 {

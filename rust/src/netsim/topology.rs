@@ -1,0 +1,254 @@
+//! Path-aware network topology: the multi-NIC / multi-proxy model.
+//!
+//! The paper's testbed reads from S3-style object stores through many
+//! parallel front-end servers; the storage network is a *parallel*
+//! resource, not one pipe.  A [`Topology`] models that: `N` named paths
+//! (client-NIC → proxy-`i`), each shaped by its own [`TokenBucket`] and
+//! charged a per-path propagation latency, plus an optional **aggregate
+//! client-NIC cap** that every byte must clear too — so fanning
+//! connections over paths scales throughput with the path count until
+//! the NIC cap binds, exactly the fig16 multi-path claim.
+//!
+//! ```text
+//!              ┌─ path 0 (rate r0, lat l0) ── proxy 0 ─┐
+//!  client NIC ─┼─ path 1 (rate r1, lat l1) ── proxy 1 ─┼─ COS cluster
+//!   (agg cap)  └─ path N-1 ( … )           ── proxy N-1┘
+//! ```
+//!
+//! A one-path topology with no aggregate cap and zero latency is
+//! byte-for-byte the old single-`Link` model — the default config
+//! reproduces every pre-topology result unchanged.
+//!
+//! Cheap to clone; clones share every bucket and meter.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::bucket::TokenBucket;
+use super::link::{Link, LinkStats};
+
+/// One path's shape: its dedicated rate (`None` = unshaped) and a fixed
+/// one-way propagation delay charged per frame per direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PathSpec {
+    pub rate: Option<u64>,
+    pub latency: Duration,
+}
+
+impl PathSpec {
+    pub fn shaped(rate: u64) -> PathSpec {
+        PathSpec {
+            rate: Some(rate),
+            latency: Duration::ZERO,
+        }
+    }
+
+    pub fn unshaped() -> PathSpec {
+        PathSpec {
+            rate: None,
+            latency: Duration::ZERO,
+        }
+    }
+}
+
+/// Full topology shape: the per-path specs plus the optional shared
+/// client-NIC aggregate cap (bytes/sec across *all* paths).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologySpec {
+    pub paths: Vec<PathSpec>,
+    pub aggregate_rate: Option<u64>,
+}
+
+impl TopologySpec {
+    /// The classic single-link model: one path, no NIC cap.
+    pub fn single(rate: Option<u64>) -> TopologySpec {
+        TopologySpec {
+            paths: vec![PathSpec {
+                rate,
+                latency: Duration::ZERO,
+            }],
+            aggregate_rate: None,
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Topology {
+    paths: Arc<Vec<Link>>,
+    /// Shared NIC meter: every path's bytes also land here.
+    nic_stats: Arc<LinkStats>,
+    aggregate: Option<Arc<TokenBucket>>,
+}
+
+impl Topology {
+    pub fn new(spec: &TopologySpec) -> Topology {
+        assert!(!spec.paths.is_empty(), "topology needs >= 1 path");
+        let aggregate = spec
+            .aggregate_rate
+            .map(|r| Arc::new(TokenBucket::with_default_burst(r)));
+        let nic_stats = Arc::new(LinkStats::default());
+        let paths = spec
+            .paths
+            .iter()
+            .map(|p| {
+                Link::path(
+                    p.rate,
+                    p.latency,
+                    aggregate.clone(),
+                    nic_stats.clone(),
+                )
+            })
+            .collect();
+        Topology {
+            paths: Arc::new(paths),
+            nic_stats,
+            aggregate,
+        }
+    }
+
+    /// One path at `rate` (`None` = unshaped), no cap, zero latency —
+    /// the drop-in replacement for the old single `Link`.
+    pub fn single(rate: Option<u64>) -> Topology {
+        Topology::new(&TopologySpec::single(rate))
+    }
+
+    pub fn num_paths(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// The `i`-th path's link (connection pools pin one slot to one
+    /// path and charge exactly this link).
+    pub fn path(&self, i: usize) -> &Link {
+        &self.paths[i]
+    }
+
+    /// Aggregate NIC meter: total bytes moved across every path.
+    pub fn stats(&self) -> &LinkStats {
+        &self.nic_stats
+    }
+
+    /// The capacity a split decision should assume: the sum of shaped
+    /// path rates, clamped by the aggregate cap.  `None` when the
+    /// effective capacity is unbounded (an unshaped path and no cap).
+    pub fn total_rate(&self) -> Option<u64> {
+        let agg = self.aggregate.as_ref().map(|b| b.rate());
+        let mut sum: u64 = 0;
+        for p in self.paths.iter() {
+            match p.rate() {
+                Some(r) => sum = sum.saturating_add(r),
+                None => return agg,
+            }
+        }
+        Some(match agg {
+            Some(a) => a.min(sum),
+            None => sum,
+        })
+    }
+
+    /// The shared client-NIC cap, if one is configured.
+    pub fn aggregate_rate(&self) -> Option<u64> {
+        self.aggregate.as_ref().map(|b| b.rate())
+    }
+
+    /// Re-shape one path mid-run (the per-path `tc` change: one COS
+    /// front end degrades while its siblings stay healthy).  Sibling
+    /// paths and the aggregate cap are untouched.
+    ///
+    /// Like [`Link::set_rate`], this is a **no-op on an unshaped
+    /// path** (`rate: None` / `path_rates_mbps: 0`): an unshaped path
+    /// has no bucket to reshape, so a degradation experiment must
+    /// start from a shaped one — check [`Topology::path`]`.rate()` is
+    /// `Some` if in doubt.
+    pub fn set_path_rate(&self, path: usize, rate: u64) {
+        self.paths[path].set_rate(rate);
+    }
+
+    /// Re-shape *every* path to `rate` — on a one-path topology this is
+    /// exactly the old `Link::set_rate` whole-link change.  Unshaped
+    /// paths are skipped (no bucket to reshape), same as
+    /// [`Link::set_rate`]; the aggregate cap is untouched.
+    pub fn set_rate(&self, rate: u64) {
+        for p in self.paths.iter() {
+            p.set_rate(rate);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn single_path_behaves_like_the_old_link() {
+        let t = Topology::single(Some(4 * 1024 * 1024));
+        assert_eq!(t.num_paths(), 1);
+        assert_eq!(t.total_rate(), Some(4 * 1024 * 1024));
+        assert_eq!(t.aggregate_rate(), None);
+        let start = Instant::now();
+        t.path(0).recv(1024 * 1024);
+        assert!(start.elapsed().as_secs_f64() > 0.1);
+        // Whole-topology set_rate == the old whole-link set_rate.
+        t.set_rate(1111);
+        assert_eq!(t.path(0).rate(), Some(1111));
+        assert_eq!(t.total_rate(), Some(1111));
+        // The NIC meter saw the path's bytes.
+        assert_eq!(t.stats().rx_bytes(), 1024 * 1024);
+    }
+
+    #[test]
+    fn total_rate_sums_paths_and_clamps_to_aggregate() {
+        let spec = TopologySpec {
+            paths: vec![PathSpec::shaped(100), PathSpec::shaped(50)],
+            aggregate_rate: None,
+        };
+        assert_eq!(Topology::new(&spec).total_rate(), Some(150));
+
+        let spec = TopologySpec {
+            paths: vec![PathSpec::shaped(100), PathSpec::shaped(50)],
+            aggregate_rate: Some(120),
+        };
+        assert_eq!(Topology::new(&spec).total_rate(), Some(120));
+
+        // An unshaped path falls through to the cap (or unbounded).
+        let spec = TopologySpec {
+            paths: vec![PathSpec::unshaped(), PathSpec::shaped(50)],
+            aggregate_rate: Some(99),
+        };
+        assert_eq!(Topology::new(&spec).total_rate(), Some(99));
+        let spec = TopologySpec {
+            paths: vec![PathSpec::unshaped()],
+            aggregate_rate: None,
+        };
+        assert_eq!(Topology::new(&spec).total_rate(), None);
+    }
+
+    #[test]
+    fn per_path_reshape_leaves_siblings_alone() {
+        let spec = TopologySpec {
+            paths: vec![PathSpec::shaped(1000), PathSpec::shaped(1000)],
+            aggregate_rate: None,
+        };
+        let t = Topology::new(&spec);
+        t.set_path_rate(0, 10);
+        assert_eq!(t.path(0).rate(), Some(10));
+        assert_eq!(t.path(1).rate(), Some(1000));
+        assert_eq!(t.total_rate(), Some(1010));
+    }
+
+    #[test]
+    fn nic_meter_aggregates_all_paths() {
+        let spec = TopologySpec {
+            paths: vec![PathSpec::unshaped(), PathSpec::unshaped()],
+            aggregate_rate: None,
+        };
+        let t = Topology::new(&spec);
+        t.path(0).send(10);
+        t.path(1).send(5);
+        t.path(1).recv(70);
+        assert_eq!(t.path(0).stats().tx_bytes(), 10);
+        assert_eq!(t.path(1).stats().tx_bytes(), 5);
+        assert_eq!(t.stats().tx_bytes(), 15);
+        assert_eq!(t.stats().rx_bytes(), 70);
+    }
+}

@@ -37,12 +37,14 @@
 //! `ba.lane.<client_id>.gather_window_ns` histogram; `ba.lanes_active`
 //! tracks how many lanes currently hold un-granted requests, and
 //! `ba.burst_clamped` counts gathers whose reported burst exceeded
-//! [`MAX_GATHER_BURST`].  Per-lane histograms live for the registry's
-//! lifetime: with the default auto-allocated (process-unique) client
-//! ids their count grows with distinct clients ever seen — fine for
-//! this in-process testbed, but a long-lived deployment serving client
-//! churn should pin `client_id`s or add registry eviction first (open
-//! item in ROADMAP.md).
+//! [`MAX_GATHER_BURST`].  Per-lane metric cardinality is bounded: once
+//! a client's lane has drained and stayed idle past
+//! [`LANE_METRICS_TTL`], its `ba.lane.<id>.*` instruments are evicted
+//! from the registry ([`Registry::evict_prefix`]) — with the default
+//! auto-allocated (process-unique) client ids a long-lived planner no
+//! longer accumulates one histogram per client ever seen.  A client
+//! that returns after eviction simply re-creates its instruments
+//! (counts restart from zero).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -77,6 +79,13 @@ const GATHER_IDLE: Duration = Duration::from_millis(3);
 /// release, shutdown — is condvar-notified; the timeout only guards
 /// against lost wakeups.
 const WAIT_TIMEOUT: Duration = Duration::from_millis(50);
+/// How long a drained lane's client may stay idle before its
+/// `ba.lane.<id>.*` instruments are evicted from the registry.  Long
+/// enough that a tenant pausing between epochs keeps its metrics;
+/// short enough that auto-allocated one-shot client ids cannot grow
+/// the registry without bound.  Idle lanes are scanned at least every
+/// [`WAIT_TIMEOUT`], so eviction lands within `TTL + 50 ms`.
+const LANE_METRICS_TTL: Duration = Duration::from_secs(10);
 
 type PlannerShared = (Mutex<State>, Condvar);
 
@@ -166,6 +175,10 @@ struct State {
     queue: Vec<Pending>,
     /// One gather lane per client with un-granted requests.
     lanes: BTreeMap<u64, Lane>,
+    /// Clients whose lane has drained, keyed to when it drained: after
+    /// [`LANE_METRICS_TTL`] of continued silence their `ba.lane.<id>.*`
+    /// instruments are evicted from the registry.
+    lane_idle: BTreeMap<u64, Instant>,
     closed: bool,
     /// Bumped on every event that can change a planning pass's outcome:
     /// request arrival, lease release, shutdown.  The planner loop
@@ -195,6 +208,7 @@ impl Planner {
             Mutex::new(State {
                 queue: Vec::new(),
                 lanes: BTreeMap::new(),
+                lane_idle: BTreeMap::new(),
                 closed: false,
                 wakeups: 0,
             }),
@@ -376,7 +390,31 @@ fn sync_lanes(
         e.1 = e.1.max(p.burst.max(1));
         e.2 = e.2.max(p.ticket);
     }
+    // Lanes that just drained start their metrics-idle clock; clients
+    // with live work are never idle.  Past the TTL, the drained lane's
+    // per-lane instruments leave the registry — the cardinality bound
+    // for auto-allocated (one-per-client-ever) ids.
+    let drained: Vec<u64> = st
+        .lanes
+        .keys()
+        .filter(|&c| !per_client.contains_key(c))
+        .copied()
+        .collect();
     st.lanes.retain(|c, _| per_client.contains_key(c));
+    for c in drained {
+        st.lane_idle.entry(c).or_insert(now);
+    }
+    for c in per_client.keys() {
+        st.lane_idle.remove(c);
+    }
+    st.lane_idle.retain(|client, since| {
+        if now.duration_since(*since) >= LANE_METRICS_TTL {
+            registry.evict_prefix(&format!("ba.lane.{client}."));
+            false
+        } else {
+            true
+        }
+    });
     let mut next_deadline: Option<Instant> = None;
     for (&client, &(waiting, burst, max_ticket)) in &per_client {
         let lane = st.lanes.entry(client).or_insert(Lane {
@@ -959,6 +997,7 @@ mod tests {
         let mut st = State {
             queue: Vec::new(),
             lanes: BTreeMap::new(),
+            lane_idle: BTreeMap::new(),
             closed: false,
             wakeups: 0,
         };
@@ -1108,6 +1147,129 @@ mod tests {
             .unwrap();
         drop(g);
         assert_eq!(reg.counter("ba.burst_clamped").get(), 1);
+    }
+
+    /// Regression (unbounded per-lane metric cardinality): a lane that
+    /// drains and stays idle past [`LANE_METRICS_TTL`] has its
+    /// `ba.lane.<id>.*` instruments evicted, so a long-lived planner
+    /// serving auto-allocated (process-unique) client ids no longer
+    /// accumulates one histogram per client ever seen.  `sync_lanes`
+    /// is pure in `now`, so the TTL is exercised deterministically.
+    #[test]
+    fn idle_lane_metrics_evicted_after_ttl() {
+        let reg = Registry::new();
+        let mut st = State {
+            queue: Vec::new(),
+            lanes: BTreeMap::new(),
+            lane_idle: BTreeMap::new(),
+            closed: false,
+            wakeups: 0,
+        };
+        let t0 = Instant::now();
+        // Client 41's burst-1 request arrives and is gathered (lane
+        // ready on arrival → per-lane histogram recorded)…
+        st.queue.push(Pending {
+            ticket: 1,
+            client: 41,
+            device: 0,
+            per_sample: 1,
+            model_bytes: 0,
+            b_max: 20,
+            burst: 1,
+            grant: None,
+        });
+        sync_lanes(&mut st, &reg, t0);
+        assert!(
+            reg.histogram("ba.lane.41.gather_window_ns").count() >= 1
+        );
+        // …is granted + collected, and the lane drains.
+        st.queue.clear();
+        let t1 = t0 + GATHER_IDLE;
+        sync_lanes(&mut st, &reg, t1);
+        assert!(st.lanes.is_empty());
+        // Inside the TTL the metrics survive (a tenant pausing between
+        // epochs keeps its history).
+        let t2 = t1 + LANE_METRICS_TTL / 2;
+        sync_lanes(&mut st, &reg, t2);
+        let hists = |reg: &Registry| {
+            reg.snapshot()
+                .get("histograms")
+                .unwrap()
+                .as_obj()
+                .unwrap()
+                .keys()
+                .filter(|k| k.starts_with("ba.lane.41."))
+                .count()
+        };
+        assert_eq!(hists(&reg), 1, "metrics evicted before the TTL");
+        // Past the TTL they are evicted.
+        let t3 = t1 + LANE_METRICS_TTL + Duration::from_millis(1);
+        sync_lanes(&mut st, &reg, t3);
+        assert_eq!(hists(&reg), 0, "idle lane metrics must be evicted");
+        // A returning client re-opens a lane and fresh instruments.
+        st.queue.push(Pending {
+            ticket: 2,
+            client: 41,
+            device: 0,
+            per_sample: 1,
+            model_bytes: 0,
+            b_max: 20,
+            burst: 1,
+            grant: None,
+        });
+        sync_lanes(&mut st, &reg, t3 + GATHER_IDLE);
+        assert_eq!(hists(&reg), 1, "returning client re-creates metrics");
+    }
+
+    /// An arrival inside the TTL cancels the idle clock: the metrics of
+    /// a client that keeps coming back are never evicted.
+    #[test]
+    fn returning_client_resets_idle_clock() {
+        let reg = Registry::new();
+        let mut st = State {
+            queue: Vec::new(),
+            lanes: BTreeMap::new(),
+            lane_idle: BTreeMap::new(),
+            closed: false,
+            wakeups: 0,
+        };
+        let t0 = Instant::now();
+        let pend = |ticket: u64| Pending {
+            ticket,
+            client: 6,
+            device: 0,
+            per_sample: 1,
+            model_bytes: 0,
+            b_max: 20,
+            burst: 1,
+            grant: None,
+        };
+        st.queue.push(pend(1));
+        sync_lanes(&mut st, &reg, t0);
+        st.queue.clear();
+        sync_lanes(&mut st, &reg, t0 + GATHER_IDLE); // drained: idle starts
+        // Returns just inside the TTL…
+        let t_back = t0 + LANE_METRICS_TTL - Duration::from_millis(1);
+        st.queue.push(pend(2));
+        sync_lanes(&mut st, &reg, t_back);
+        assert!(!st.lane_idle.contains_key(&6));
+        // …then drains again; only a *full* fresh TTL evicts.
+        st.queue.clear();
+        sync_lanes(&mut st, &reg, t_back + GATHER_IDLE);
+        sync_lanes(
+            &mut st,
+            &reg,
+            t_back + GATHER_IDLE + LANE_METRICS_TTL / 2,
+        );
+        let live = reg
+            .snapshot()
+            .get("histograms")
+            .unwrap()
+            .as_obj()
+            .unwrap()
+            .keys()
+            .any(|k| k.starts_with("ba.lane.6."));
+        assert!(live, "idle clock must restart from the latest drain");
     }
 
     /// Backward compatibility: requests without a client id (0) share

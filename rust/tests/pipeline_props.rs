@@ -3,6 +3,12 @@
 //! seed printed on failure).  No network, no artifacts — the fetch stage
 //! is a synthetic closure with randomized latencies.
 //!
+//! Since `run` was re-expressed as a thin `run_sharded` shim (one
+//! synthetic shard per job, `fanout = depth`, retry off), the `run`
+//! cases below double as the PR 1 regression suite *for the shim*:
+//! every invariant the original unsharded engine guaranteed must hold
+//! through the wrapper unchanged.
+//!
 //! Invariants:
 //! 1. delivered order == submission order, for any depth / chunking /
 //!    completion-order scramble;
@@ -317,6 +323,52 @@ fn sharded_flaky_shards_recover_via_retry() {
             expected_retries as u64,
             "seed {seed}"
         );
+    }
+}
+
+/// The `run` shim preserves the unsharded engine's metric contract:
+/// one `pipeline.fetch_ns` sample and one `pipeline.iterations` tick
+/// per job, bytes summed — for any depth and job count.
+#[test]
+fn run_wrapper_metric_parity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x3E7A);
+        let depth = rng.range(1, 6) as usize;
+        let n_jobs = rng.range(1, 20) as usize;
+        let jobs = pipeline::jobs_for(n_jobs, 1);
+        let reg = Registry::new();
+        let report = pipeline::run(
+            depth,
+            &jobs,
+            &reg,
+            |job| {
+                Ok(Fetched {
+                    payload: job.seq,
+                    bytes: 3,
+                    fetch_time: Duration::ZERO,
+                })
+            },
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(report.iterations, n_jobs, "seed {seed}");
+        assert_eq!(report.bytes, 3 * n_jobs as u64, "seed {seed}");
+        assert_eq!(
+            reg.counter("pipeline.iterations").get(),
+            n_jobs as u64,
+            "seed {seed}"
+        );
+        assert_eq!(
+            reg.counter("pipeline.bytes").get(),
+            3 * n_jobs as u64,
+            "seed {seed}"
+        );
+        assert_eq!(
+            reg.histogram("pipeline.fetch_ns").count(),
+            n_jobs as u64,
+            "seed {seed}"
+        );
+        assert_eq!(reg.gauge("pipeline.depth").get(), depth as i64);
     }
 }
 

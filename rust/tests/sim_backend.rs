@@ -193,7 +193,7 @@ fn adaptive_split_moves_toward_freeze_when_bandwidth_shrinks() {
     // measurement rides slightly above line rate on burst credit):
     // unit 3's 15.4 KB/iteration and unit 4's 7.7 KB no longer fit, so
     // the re-decision walks to the freeze layer's 5.1 KB.
-    bed.link.set_rate(50_000);
+    bed.net.set_rate(50_000);
     let stats = client.train_epoch(&ds, &labels).unwrap();
     bed.stop();
 
@@ -259,8 +259,8 @@ fn tenant_loss_trajectory_independent_of_cotenants() {
                     bed.app("simdeep").unwrap(),
                     bed.backend("simdeep").unwrap(),
                     cfg,
-                    bed.addr(),
-                    bed.link.clone(),
+                    bed.addrs(),
+                    bed.net.clone(),
                     DeviceKind::Gpu,
                     None,
                 );
@@ -361,6 +361,154 @@ fn legacy_post_without_client_id_still_served() {
         "legacy request must be gathered on lane 0"
     );
     bed.stop();
+}
+
+/// The multi-path invariant, end to end: splitting the same total
+/// bandwidth over 1, 2 or 3 paths (each with its own proxy front end)
+/// only changes timing — the loss trajectory stays **bitwise**
+/// identical, and per-path byte accounting covers the pipeline total.
+#[test]
+fn multipath_loss_bitwise_identical_at_equal_total_bandwidth() {
+    let run_paths = |paths: usize| -> Vec<u32> {
+        let mut cfg = sim_cfg();
+        cfg.net_paths = paths;
+        // Equal *total* capacity: each path gets a 1/paths share.
+        cfg.bandwidth = Some(2_000_000 / paths as u64);
+        cfg.pipeline_depth = 2; // auto fanout 4 slots ≥ any path count
+        let bed = Testbed::launch(cfg).unwrap();
+        let (ds, labels) = bed.dataset("mp-ds", "simnet", 800).unwrap();
+        let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+        let stats = client.train_epoch(&ds, &labels).unwrap();
+        assert_eq!(stats.iterations, 20);
+        assert!(stats.max_inflight <= 2);
+        // Per-path byte accounting covers the pipeline total, and in
+        // steady state (payload ≫ burst) every path moved data.
+        let total = bed.registry.counter("pipeline.bytes").get();
+        let per_path: Vec<u64> = (0..paths)
+            .map(|p| {
+                bed.registry
+                    .counter(&format!("pipeline.path{p}.bytes"))
+                    .get()
+            })
+            .collect();
+        assert_eq!(
+            per_path.iter().sum::<u64>(),
+            total,
+            "per-path bytes must merge into the pipeline total"
+        );
+        assert!(
+            per_path.iter().all(|&b| b > 0),
+            "an idle path at {paths} paths: {per_path:?}"
+        );
+        // The NIC meter aggregates every path (payload + framing).
+        assert!(bed.net.stats().rx_bytes() >= total);
+        bed.stop();
+        stats.loss.iter().map(|l| l.to_bits()).collect()
+    };
+
+    let base = run_paths(1);
+    for paths in [2usize, 3] {
+        assert_eq!(
+            base,
+            run_paths(paths),
+            "{paths}-path run changed the loss trajectory"
+        );
+    }
+}
+
+/// Per-path degradation, end to end: one COS front end's path being
+/// throttled mid-run makes the tenant pinned to it re-decide its split
+/// toward the freeze layer (fewer bytes over the starved path), while a
+/// co-tenant pinned to the healthy sibling path never re-decides and
+/// keeps a bitwise-identical trajectory to running alone.
+#[test]
+fn single_path_degradation_redecides_split_and_spares_copath_tenant() {
+    let mk_cfg = |client_id: u64| {
+        let mut cfg = sim_cfg();
+        cfg.net_paths = 2;
+        cfg.bandwidth = Some(netsim::mbps(100.0));
+        cfg.adaptive_split = true;
+        cfg.pipeline_depth = 2;
+        cfg.split_window_secs = 0.1;
+        // One connection slot → the client pins to exactly one path:
+        // slot 0 maps to path (client_id + 0) % 2.
+        cfg.fetch_fanout = 1;
+        cfg.client_id = client_id;
+        cfg
+    };
+
+    // Reference: the healthy-path tenant alone on an undegraded net.
+    let solo: Vec<u32> = {
+        let bed = Testbed::launch(mk_cfg(1)).unwrap();
+        let (ds, labels) =
+            bed.dataset("deg-ds", "simnet", 240).unwrap();
+        let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+        let stats = client.train_epoch(&ds, &labels).unwrap();
+        bed.stop();
+        stats.loss.iter().map(|l| l.to_bits()).collect()
+    };
+
+    let bed = Testbed::launch(mk_cfg(0)).unwrap();
+    let (ds, labels) = bed.dataset("deg-ds", "simnet", 240).unwrap();
+    let mk_client = |id: u64| {
+        let mut c = hapi::client::HapiClient::from_backend(
+            bed.app("simnet").unwrap(),
+            bed.backend("simnet").unwrap(),
+            mk_cfg(id),
+            bed.addrs(),
+            bed.net.clone(),
+            DeviceKind::Gpu,
+            None,
+        );
+        c.set_registry(bed.registry.clone());
+        c
+    };
+    let degraded = mk_client(2); // even id → slot 0 → path 0
+    let healthy = mk_client(1); // odd id → slot 0 → path 1
+    let freeze = degraded.app.freeze_idx();
+    let initial = degraded.split.split_idx;
+    assert_eq!(initial, 3, "fast-net split should be the earliest candidate");
+    assert_eq!(healthy.split.split_idx, initial);
+
+    // One front end's path collapses (the paper's `tc` change, per
+    // path); its sibling stays at full rate.
+    bed.net.set_path_rate(0, 50_000);
+    let (d_stats, h_stats) = std::thread::scope(|scope| {
+        let hd =
+            scope.spawn(|| degraded.train_epoch(&ds, &labels).unwrap());
+        let hh =
+            scope.spawn(|| healthy.train_epoch(&ds, &labels).unwrap());
+        (hd.join().unwrap(), hh.join().unwrap())
+    });
+    bed.stop();
+
+    // The pinned tenant re-decides toward the freeze layer…
+    assert!(
+        *d_stats.splits.last().unwrap() > initial,
+        "degraded-path tenant never re-decided: {:?}",
+        d_stats.splits
+    );
+    assert!(
+        d_stats
+            .splits
+            .iter()
+            .all(|&s| s >= initial && s <= freeze),
+        "split left its legal range: {:?}",
+        d_stats.splits
+    );
+    // …while the co-path tenant is untouched: no re-decision, and its
+    // loss trajectory is bitwise what it computes alone.
+    assert!(
+        h_stats.splits.iter().all(|&s| s == initial),
+        "healthy-path tenant re-decided: {:?}",
+        h_stats.splits
+    );
+    let h_loss: Vec<u32> =
+        h_stats.loss.iter().map(|l| l.to_bits()).collect();
+    assert_eq!(
+        h_loss, solo,
+        "co-path tenant's trajectory changed under sibling degradation"
+    );
 }
 
 /// The weak-client story holds on the sim backend with modeled time:

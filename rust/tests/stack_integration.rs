@@ -174,7 +174,7 @@ fn shaped_link_meters_and_slows() {
     // Bytes metered on the link equal the epoch accounting.
     assert_eq!(
         stats.bytes_from_cos + stats.bytes_to_cos,
-        bed.link.stats().total()
+        bed.net.stats().total()
     );
     bed.stop();
 }
