@@ -14,7 +14,12 @@
 //! §fig11b (sim backend, artifact-free) degrades a *single path* of a
 //! two-path topology mid-run: the tenant pinned to the starved path
 //! re-decides its split toward the freeze layer through the per-window
-//! re-measurement — the Table 4 dynamic, per path.
+//! re-measurement — the Table 4 dynamic, per path.  This is the
+//! *algorithmic* answer to a degraded front end (push more work down);
+//! the *transport* answer — re-pin connection slots to healthy paths
+//! instead, keeping the split — is fig16's §fig16d
+//! (`repin_threshold_pct`, off here so the split dynamic stays
+//! isolated).
 
 #[path = "common.rs"]
 mod common;

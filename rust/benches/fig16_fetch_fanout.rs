@@ -20,6 +20,15 @@
 //! until the client-NIC aggregate cap binds; the learning trajectory
 //! stays bitwise identical throughout.
 //!
+//! §fig16d is the degraded-path recovery demo: one of two paths drops
+//! to 25% of its rate mid-run.  Static pinning leaves half the slots
+//! straggling on the slow front end for the rest of the epoch; the
+//! goodput-aware transport scheduler (`repin_threshold_pct`) migrates
+//! them to the healthy path (with hedged fetches bridging the
+//! transition under a hard byte cap) and must recover ≥ 30% of the
+//! throughput static pinning lost vs the never-degraded run — with a
+//! bitwise-identical loss trajectory throughout.
+//!
 //! Artifact-free by construction (SimBackend): runs on a fresh clone.
 
 use hapi::config::HapiConfig;
@@ -167,6 +176,177 @@ fn multipath_section() {
     );
 }
 
+/// One run of the §fig16d degraded-path experiment.
+struct DegRow {
+    label: &'static str,
+    epoch_secs: f64,
+    throughput_mb_s: f64,
+    path_bytes: [u64; 2],
+    repins: u64,
+    hedges: u64,
+    hedge_bytes: u64,
+    loss_bits: Vec<u32>,
+}
+
+/// Hard cap on duplicated bytes for the §fig16d scheduler run.
+const HEDGE_CAP: u64 = 512 * 1024;
+
+/// Run one BASELINE epoch over a 2-path/NIC-capped topology.  With
+/// `degrade`, path 0 drops to 25% of its rate ~300 ms in (mid-run);
+/// with `repin`, the goodput-aware scheduler may migrate slots and
+/// hedge stragglers.
+fn run_degraded(
+    label: &'static str,
+    degrade: bool,
+    repin: bool,
+) -> DegRow {
+    let mut cfg = HapiConfig::sim();
+    cfg.net_paths = 2;
+    cfg.bandwidth = Some(PER_PATH_RATE);
+    // A client-NIC cap keeps the healthy baseline honest: 2 paths
+    // cannot outrun the NIC, so the recovery target is bounded.
+    cfg.aggregate_bandwidth = Some(PER_PATH_RATE * 5 / 4);
+    // Two 100-sample shards (~77 KB raw each, bigger than any bucket
+    // burst, so a degraded path is visible per fetch) per iteration
+    // over two slots at depth 1: every iteration fetches exactly one
+    // shard on each path, so under static pinning every iteration
+    // waits on the slow front end — the engine cannot rebalance by
+    // claim order, and only the pinning policy decides throughput.
+    cfg.pipeline_depth = 1;
+    cfg.fetch_fanout = 2;
+    cfg.object_samples = 100;
+    cfg.train_batch = 200;
+    cfg.client_id = 2; // even id: slot i → path i
+    if repin {
+        cfg.repin_threshold_pct = 70;
+        cfg.repin_interval_ms = 50;
+        cfg.hedge_factor_pct = 50;
+        cfg.hedge_max_bytes = HEDGE_CAP;
+    }
+    let bed = Testbed::launch(cfg).expect("launch");
+    let (ds, labels) =
+        bed.dataset("f16d", "simnet", 4000).expect("dataset");
+    let client = bed
+        .baseline_client("simnet", DeviceKind::Gpu)
+        .expect("client");
+    let killer = degrade.then(|| {
+        let net = bed.net.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(300));
+            net.set_path_rate(0, PER_PATH_RATE / 4);
+        })
+    });
+    let t0 = std::time::Instant::now();
+    let stats = client.train_epoch(&ds, &labels).expect("epoch");
+    let epoch_secs = t0.elapsed().as_secs_f64();
+    if let Some(k) = killer {
+        k.join().unwrap();
+    }
+    let row = DegRow {
+        label,
+        epoch_secs,
+        throughput_mb_s: stats.bytes_from_cos as f64 / epoch_secs / 1e6,
+        path_bytes: [
+            bed.registry.counter("pipeline.path0.bytes").get(),
+            bed.registry.counter("pipeline.path1.bytes").get(),
+        ],
+        repins: bed.registry.counter("pipeline.repins").get(),
+        hedges: bed.registry.counter("pipeline.hedges").get(),
+        hedge_bytes: bed.registry.counter("pipeline.hedge_bytes").get(),
+        loss_bits: stats.loss.iter().map(|l| l.to_bits()).collect(),
+    };
+    bed.stop();
+    row
+}
+
+fn repin_section() {
+    println!(
+        "\n== Fig 16d: degraded-path recovery, re-pinning on vs off ==\n"
+    );
+    let healthy = run_degraded("healthy", false, false);
+    let fixed = run_degraded("static pinning", true, false);
+    let moved = run_degraded("goodput re-pinning", true, true);
+    let rows = [&healthy, &fixed, &moved];
+
+    let mut t = Table::new(
+        "BASELINE, simnet, 2 paths @ 2 MB/s under a 2.5 MB/s NIC cap, \
+         path 0 → 25% rate at t=300 ms",
+        &[
+            "policy",
+            "epoch (s)",
+            "throughput (MB/s)",
+            "path bytes (0 / 1)",
+            "repins",
+            "hedges",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.label.to_string(),
+            format!("{:.2}", r.epoch_secs),
+            format!("{:.2}", r.throughput_mb_s),
+            format!("{} / {}", r.path_bytes[0], r.path_bytes[1]),
+            r.repins.to_string(),
+            r.hedges.to_string(),
+        ]);
+    }
+    t.print();
+
+    // The trajectory is bitwise identical however the bytes were
+    // routed — degradation, migration and hedging change timing only.
+    for r in &rows[1..] {
+        assert_eq!(
+            r.loss_bits, healthy.loss_bits,
+            "{}: transport policy changed the loss trajectory",
+            r.label
+        );
+    }
+    // Static pinning kept feeding the slow path; the scheduler
+    // migrated off it (pre-migration samples aside).
+    assert_eq!(fixed.repins, 0);
+    assert!(moved.repins >= 1, "no slot migrated off the slow path");
+    assert!(
+        moved.path_bytes[1] > fixed.path_bytes[1],
+        "migration must shift bytes to the healthy path"
+    );
+    // Duplicated bytes respect the hard cap.
+    assert!(
+        moved.hedge_bytes <= HEDGE_CAP,
+        "hedged bytes {} exceed the {HEDGE_CAP}-byte cap",
+        moved.hedge_bytes
+    );
+    // The headline: re-pinning recovers ≥ 30% of the throughput the
+    // degradation cost under static pinning.
+    let lost = healthy.throughput_mb_s - fixed.throughput_mb_s;
+    let recovered = moved.throughput_mb_s - fixed.throughput_mb_s;
+    let frac = recovered / lost.max(1e-9);
+    println!(
+        "\nthroughput: healthy {:.2}, static {:.2}, re-pinned {:.2} \
+         MB/s -> recovered {:.0}% of the degradation loss \
+         (hedged {} B of {} B cap)",
+        healthy.throughput_mb_s,
+        fixed.throughput_mb_s,
+        moved.throughput_mb_s,
+        frac * 100.0,
+        moved.hedge_bytes,
+        HEDGE_CAP,
+    );
+    assert!(
+        lost > 0.0,
+        "degradation did not hurt static pinning — experiment broken"
+    );
+    assert!(
+        frac >= 0.30,
+        "re-pinning recovered only {:.0}% (< 30%) of the lost \
+         throughput",
+        frac * 100.0
+    );
+    println!(
+        "\nPASS: re-pinning recovers >= 30% of the degradation loss; \
+         hedged bytes capped; loss bitwise stable"
+    );
+}
+
 fn main() {
     println!("== Fig 16b: fetch-fanout sweep (sim backend) ==\n");
     let rows: Vec<Row> =
@@ -214,4 +394,5 @@ fn main() {
     println!("PASS: fanout >= 2 strictly reduces per-iteration stall");
 
     multipath_section();
+    repin_section();
 }

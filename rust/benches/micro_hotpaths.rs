@@ -5,7 +5,10 @@
 //!   per run;
 //! - the proxy frame path and feature-tensor (de)serialisation must not
 //!   bottleneck a multi-MB/s request stream;
-//! - micro-batch chunk/pad/concat is on the per-request path.
+//! - micro-batch chunk/pad/concat is on the per-request path;
+//! - the transport scheduler's goodput-estimator update runs on
+//!   **every shard completion** — it must stay lock-free/amortised
+//!   (sub-microsecond scale, a rounding error next to any fetch).
 
 #[path = "common.rs"]
 mod common;
@@ -98,7 +101,49 @@ fn main() {
             Tensor::concat_batch(&parts).unwrap()
         });
 
-    // 6. Gradient accumulation over a 1 M-element tail.
+    // 6. Transport-scheduler estimator update (per shard completion:
+    // EWMA fold + winner accounting + amortised re-pin check).  The
+    // 100 µs p50 budget is ~100× headroom over the expected cost and
+    // ~1000× under the cheapest sim fetch it rides on.
+    {
+        use hapi::client::pipeline::Transport;
+        use hapi::client::{ShardCtx, TransportScheduler};
+        use hapi::metrics::Registry;
+        use hapi::netsim::Topology;
+
+        let mut cfg = hapi::config::HapiConfig::sim();
+        cfg.net_paths = 2;
+        cfg.repin_threshold_pct = 60;
+        cfg.repin_interval_ms = 50;
+        cfg.hedge_factor_pct = 100;
+        let reg = Registry::new();
+        let net = Topology::new(&cfg.topology_spec());
+        let sched = TransportScheduler::new(&cfg, 1, &net, 8, &reg);
+        let ctx = ShardCtx {
+            conn: 3,
+            attempt: 0,
+            path: 1,
+            hedge: false,
+        };
+        let stats = Bench::new("transport_estimator_update")
+            .samples(50, 20_000)
+            .budget(std::time::Duration::from_secs(2))
+            .run(|| {
+                sched.on_fetch(
+                    ctx,
+                    50_000,
+                    std::time::Duration::from_millis(2),
+                    true,
+                );
+            });
+        assert!(
+            stats.p50 < std::time::Duration::from_micros(100),
+            "estimator update too slow for the shard hot path: {:?}",
+            stats.p50
+        );
+    }
+
+    // 7. Gradient accumulation over a 1 M-element tail.
     let grads: Vec<Tensor> =
         vec![Tensor::from_f32(vec![1 << 20], &vec![0.5; 1 << 20])];
     Bench::new("grad_accumulate_1M")

@@ -96,22 +96,39 @@ impl AllInCosClient {
         // Connection pool: `fanout` lazily-connected slots, reused
         // across requests; a connection that errored is dropped so its
         // slot reconnects (the engine retries on another slot).  Like
-        // the Hapi client's pool, each slot pins to one network path
-        // and that path's proxy front end.
-        let pool: Vec<Mutex<Option<CosConnection>>> =
+        // the Hapi client's pool, each slot is routed to a network
+        // path (and that path's proxy front end) by the transport
+        // scheduler.
+        let pool: Vec<Mutex<Option<(usize, CosConnection)>>> =
             (0..fanout).map(|_| Mutex::new(None)).collect();
-        let num_paths = self.net.num_paths();
-        // Shared per-path accounting (`pipeline.pathN.*`): bytes here
-        // are payload bytes, ~0 for ALL_IN_COS (only the loss returns),
-        // so the per-path sum still merges into `pipeline.bytes`.
-        let path_metrics =
-            crate::client::PathMetrics::new(&self.registry, num_paths);
-        let report = pipeline::run_sharded(
+        // ALL_IN_COS rides the scheduler for routing and the
+        // `pipeline.pathN.*` accounting, with caveats: hedging is
+        // forced off (an `all_in_cos` POST *trains* on the server —
+        // one SGD step per request — so a duplicated request would
+        // double-apply an update; only idempotent fetches may race),
+        // and goodput-driven re-pinning cannot fire because these
+        // responses carry zero payload bytes (only the loss returns),
+        // leaving the estimates at the topology seeds.  Fetch
+        // *errors* still decay a path's estimate, so a fail-stop
+        // front end is routed around; a latency-driven signal for
+        // merely-slow paths on zero-byte workloads is recorded as
+        // future work in ROADMAP.md.  The ~0 per-path byte sums
+        // still merge into `pipeline.bytes`.
+        let scheduler = crate::client::TransportScheduler::new(
+            &self.cfg,
+            self.client_id,
+            &self.net,
+            fanout,
+            &self.registry,
+        )
+        .without_hedging();
+        let report = pipeline::run_sharded_with(
             self.cfg.pipeline_depth,
             fanout,
             &jobs,
             &self.registry,
             true,
+            &scheduler,
             |_job| (),
             |ctx, _: &(), job, shard_pos| {
                 let shard = job.shards[shard_pos];
@@ -144,19 +161,14 @@ impl AllInCosClient {
                     client_id: self.client_id,
                     mode: RequestMode::AllInCos,
                 };
-                let path = crate::client::path_for_slot(
-                    self.client_id,
-                    num_paths,
-                    ctx.conn,
-                );
-                let t0 = std::time::Instant::now();
+                let path = ctx.path;
                 let (header, _body) = CosConnection::with_pooled(
                     &pool[ctx.conn],
+                    path,
                     &self.addrs[path % self.addrs.len()],
                     self.net.path(path),
                     |conn| conn.post(req.to_json(), Vec::new()),
                 )?;
-                path_metrics.record(path, 0, t0.elapsed());
                 let loss = header.get("loss")?.as_f64()? as f32;
                 Ok(pipeline::ShardFetched {
                     payload: loss,

@@ -30,6 +30,7 @@
 
 pub mod dataset;
 pub mod pipeline;
+pub mod transport;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -48,7 +49,9 @@ use crate::split::{choose_split_idx, SplitDecision};
 pub use dataset::{DatasetRef, DatasetSpec};
 pub use pipeline::{
     Delivery, Fetched, Job, PipelineReport, ShardCtx, ShardFetched,
+    StaticTransport, Transport,
 };
+pub use transport::TransportScheduler;
 
 /// Outcome of one epoch.
 #[derive(Debug, Clone, Default)]
@@ -99,58 +102,22 @@ pub(crate) fn resolve_client_id(cfg: &HapiConfig) -> u64 {
     }
 }
 
-/// The network path a pooled connection slot pins to: slots round-robin
-/// over the topology's paths, rotated by the client's id so
+/// The *static* network path a pooled connection slot pins to: slots
+/// round-robin over the topology's paths, rotated by the client's id so
 /// single-connection tenants spread across front ends instead of all
 /// hammering path 0.  Deterministic per (client, slot) — pin
 /// `client_id` to pin a tenant's path.
+///
+/// This is the seed (and, with `repin_threshold_pct = 0`, the entire
+/// behaviour) of the goodput-aware [`TransportScheduler`]'s dynamic
+/// slot→path map; the per-path accounting (`pipeline.path<i>.*`) lives
+/// in the scheduler too, shared by every client.
 pub(crate) fn path_for_slot(
     client_id: u64,
     num_paths: usize,
     slot: usize,
 ) -> usize {
     (client_id as usize).wrapping_add(slot) % num_paths.max(1)
-}
-
-/// The `pipeline.path<i>.*` instrument families, resolved once per
-/// epoch and shared by every client that pins pooled connection slots
-/// to topology paths (Hapi/BASELINE and ALL_IN_COS) — one copy of the
-/// per-path accounting, so the metric contract cannot drift between
-/// clients.
-pub(crate) struct PathMetrics {
-    bytes: Vec<Arc<crate::metrics::Counter>>,
-    fetch_ns: Vec<Arc<crate::metrics::Histogram>>,
-}
-
-impl PathMetrics {
-    pub(crate) fn new(registry: &Registry, num_paths: usize) -> PathMetrics {
-        PathMetrics {
-            bytes: (0..num_paths)
-                .map(|p| {
-                    registry.counter(&format!("pipeline.path{p}.bytes"))
-                })
-                .collect(),
-            fetch_ns: (0..num_paths)
-                .map(|p| {
-                    registry
-                        .histogram(&format!("pipeline.path{p}.fetch_ns"))
-                })
-                .collect(),
-        }
-    }
-
-    /// Account one fetch against its path: payload bytes (the same
-    /// quantity `pipeline.bytes` sums, so per-path values merge into
-    /// the pipeline total) and wall latency.
-    pub(crate) fn record(
-        &self,
-        path: usize,
-        bytes: u64,
-        elapsed: Duration,
-    ) {
-        self.fetch_ns[path].record(elapsed.as_nanos() as u64);
-        self.bytes[path].add(bytes);
-    }
 }
 
 pub struct HapiClient {
@@ -287,16 +254,18 @@ impl HapiClient {
     }
 
     /// Fetch one shard at `split` over the pooled connection in `slot`,
-    /// pinned to network `path` (its link and its proxy front end; the
-    /// connection is lazily connected, and one that errored is dropped
-    /// so the slot reconnects on its next use — this is what makes the
-    /// engine's retry land on a *healthy* link).  Hapi mode (split ≥ 1)
-    /// POSTs a feature-extraction request; BASELINE (split 0) GETs the
-    /// raw image object.  `burst_width` tells the storage-side planner
-    /// how many requests this client keeps in flight
-    /// (`pipeline_depth × shards_per_iter`) and `client_id` which
-    /// gather lane they belong to, so the planner adapts this client's
-    /// window to its burst without holding up co-tenants.
+    /// routed to network `path` (its link and its proxy front end; the
+    /// connection is lazily connected, one that errored is dropped so
+    /// the slot reconnects on its next use — this is what makes the
+    /// engine's retry land on a *healthy* link — and a slot the
+    /// scheduler re-pinned to another path reconnects to the new
+    /// front end).  Hapi mode (split ≥ 1) POSTs a feature-extraction
+    /// request; BASELINE (split 0) GETs the raw image object.
+    /// `burst_width` tells the storage-side planner how many requests
+    /// this client keeps in flight (`pipeline_depth × shards_per_iter`)
+    /// and `client_id` which gather lane they belong to, so the
+    /// planner adapts this client's window to its burst without
+    /// holding up co-tenants.
     #[allow(clippy::too_many_arguments)]
     fn fetch_shard_on(
         &self,
@@ -304,7 +273,7 @@ impl HapiClient {
         shard: usize,
         split: usize,
         burst_width: usize,
-        slot: &Mutex<Option<CosConnection>>,
+        slot: &Mutex<Option<(usize, CosConnection)>>,
         path: usize,
     ) -> Result<Tensor> {
         let samples = ds
@@ -315,7 +284,7 @@ impl HapiClient {
         let key = crate::cos::ObjectKey::shard(&ds.name, shard);
         let addr = &self.addrs[path % self.addrs.len()];
         let link = self.net.path(path);
-        CosConnection::with_pooled(slot, addr, link, |conn| {
+        CosConnection::with_pooled(slot, path, addr, link, |conn| {
             if split == 0 {
                 let body = conn.get(&key)?;
                 return Tensor::from_raw(
@@ -468,45 +437,48 @@ impl HapiClient {
         // Connection pool: `fanout` lazily-connected slots, reused
         // across shards and iterations (multi-link fetch); a connection
         // that errored is dropped and its slot reconnects.  Each slot
-        // pins to one network path (and that path's proxy front end),
-        // round-robin at pool build — with several paths the shard
+        // is routed to one network path (and that path's proxy front
+        // end) by the transport scheduler — statically pre-pinned
+        // round-robin, re-pinned away from low-goodput paths when
+        // `repin_threshold_pct` is set; with several paths the shard
         // fanout turns into genuine multi-NIC parallelism.
-        let pool: Vec<Mutex<Option<CosConnection>>> =
+        let pool: Vec<Mutex<Option<(usize, CosConnection)>>> =
             (0..fanout).map(|_| Mutex::new(None)).collect();
-        let num_paths = self.net.num_paths();
-        // Per-path received-byte samples; their merged sum drives the
+        // The goodput-aware transport policy for this epoch: per-path
+        // goodput/latency estimators fed by every shard completion,
+        // the dynamic slot→path map, the hedge budget, and the
+        // `pipeline.pathN.*` accounting whose merged sum drives the
         // per-window bandwidth re-measurement below (exactly as the
-        // per-connection samples did pre-topology), and per-path
-        // bytes/latency land in `pipeline.pathN.*`.
-        let path_rx: Vec<AtomicU64> =
-            (0..num_paths).map(|_| AtomicU64::new(0)).collect();
-        let path_metrics = PathMetrics::new(&self.registry, num_paths);
+        // per-connection samples did pre-topology).
+        let scheduler = TransportScheduler::new(
+            &self.cfg,
+            self.client_id,
+            &self.net,
+            fanout,
+            &self.registry,
+        );
         // Per-window bandwidth re-measurement state (trainer-side).
         let mut win_rx = 0u64;
         let mut win_t = Instant::now();
 
-        let report = pipeline::run_sharded(
+        let report = pipeline::run_sharded_with(
             self.cfg.pipeline_depth,
             fanout,
             &jobs,
             &self.registry,
             true,
+            &scheduler,
             |_job| cur_split.load(Ordering::Relaxed),
             |ctx, &split, job, shard_pos| {
-                let path =
-                    path_for_slot(self.client_id, num_paths, ctx.conn);
-                let t0 = Instant::now();
                 let tensor = self.fetch_shard_on(
                     ds,
                     job.shards[shard_pos],
                     split,
                     burst_width,
                     &pool[ctx.conn],
-                    path,
+                    ctx.path,
                 )?;
                 let bytes = tensor.byte_len() as u64;
-                path_metrics.record(path, bytes, t0.elapsed());
-                path_rx[path].fetch_add(bytes, Ordering::Relaxed);
                 Ok(pipeline::ShardFetched {
                     payload: tensor,
                     bytes,
@@ -568,10 +540,7 @@ impl HapiClient {
                     //   every later split needs *less* client memory.
                     let now = Instant::now();
                     let dt = now.duration_since(win_t).as_secs_f64();
-                    let rx: u64 = path_rx
-                        .iter()
-                        .map(|c| c.load(Ordering::Relaxed))
-                        .sum();
+                    let rx: u64 = scheduler.rx_bytes();
                     if dt >= 0.01 && rx > win_rx {
                         let stalled =
                             delivery.stall.as_secs_f64() >= 0.1 * dt;

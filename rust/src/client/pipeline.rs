@@ -40,8 +40,22 @@
 //! interface, is a thin shim over it (one synthetic shard per job,
 //! `fanout = depth`, retry off) — there is exactly one
 //! window/backpressure/panic-guard protocol in the crate.
+//!
+//! **Routing is separated from delivery.**  [`run_sharded_with`] takes
+//! a [`Transport`]: the policy that decides *where* each attempt runs
+//! (which network path a connection slot uses) and *whether* a slow
+//! in-flight fetch should be duplicated (a **hedged fetch**,
+//! first-response-wins, loser discarded).  The reassembly/delivery
+//! protocol above never consults it — re-pinning a slot to another
+//! path or winning a shard through a hedge changes timing only, so the
+//! in-order-delivery and bitwise-trajectory invariants hold for *any*
+//! transport policy.  The goodput-aware implementation lives in
+//! [`crate::client::transport::TransportScheduler`];
+//! [`StaticTransport`] (everything on path 0, no hedging) is the
+//! default behind [`run_sharded`].
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -163,8 +177,10 @@ pub struct ShardFetched<S> {
     pub bytes: u64,
 }
 
-/// Where a shard fetch runs: the connection-slot id it should use and
-/// which attempt this is (0 = first try, 1 = retry on another slot).
+/// Where a shard fetch runs: the connection-slot id it should use,
+/// which attempt this is (0 = first try, 1 = retry on another slot),
+/// the network path the [`Transport`] routed the attempt to, and
+/// whether the attempt is a hedged duplicate.
 #[derive(Debug, Clone, Copy)]
 pub struct ShardCtx {
     /// Connection-slot index in `0..fanout`.  The transport closure maps
@@ -173,7 +189,96 @@ pub struct ShardCtx {
     pub conn: usize,
     /// 0 on the first try, 1 on the retry-on-other-connection.
     pub attempt: usize,
+    /// Network path this attempt should use, as decided by the
+    /// [`Transport`] (the classic static pinning, a re-pinned slot, or
+    /// a hedge's best-path choice).  [`run_sharded`] routes everything
+    /// to path 0.
+    pub path: usize,
+    /// True when this attempt is a hedged duplicate of a fetch that is
+    /// still in flight elsewhere (first response wins).
+    pub hedge: bool,
 }
+
+/// Routing + hedging policy for [`run_sharded_with`].
+///
+/// The engine consults a `Transport` for *where* to run each attempt
+/// and *when* to duplicate a straggling one; it never lets the answers
+/// influence reassembly or delivery order.  For that separation to
+/// preserve the learning trajectory, the fetch closure must produce a
+/// payload that is a pure function of `(job_ctx, job, shard)` — the
+/// [`ShardCtx`] may only select transport (which pooled connection,
+/// which proxy address), never change the bytes fetched.
+///
+/// All methods have static-pinning defaults, so a policy can override
+/// only what it needs; every method must be cheap and lock-free — they
+/// run on the shard hot path.
+pub trait Transport: Sync {
+    /// Network path a normal attempt on connection slot `conn` should
+    /// use.  Default: everything on path 0 (the single-link model).
+    fn route(&self, conn: usize) -> usize {
+        let _ = conn;
+        0
+    }
+
+    /// Whether this policy can ever hedge (stable for the whole run).
+    /// `false` (the default) lets the engine skip all hedge
+    /// bookkeeping — no in-flight watch list, no race flags to settle,
+    /// no extra wakeups — so a non-hedging run pays nothing on the
+    /// shard hot path.
+    fn hedging_enabled(&self) -> bool {
+        false
+    }
+
+    /// How long a fetch on `path` may stay in flight before the engine
+    /// issues a hedged duplicate; `None` = never hedge (default, and
+    /// the right answer until the policy has latency samples).
+    fn hedge_after(&self, path: usize) -> Option<Duration> {
+        let _ = path;
+        None
+    }
+
+    /// Reserve one hedge for a fetch currently running on `orig_path`:
+    /// returns the path the duplicate should use, or `None` when
+    /// hedging is off / the hedge-byte budget is exhausted.  Called
+    /// under the engine lock, so reservations are serialised; a `None`
+    /// is permanent for that shard (the engine will not re-ask).
+    fn claim_hedge(&self, orig_path: usize) -> Option<usize> {
+        let _ = orig_path;
+        None
+    }
+
+    /// One attempt finished moving bytes: `ctx` is exactly what the
+    /// fetch closure saw, `winner` says whether this attempt's payload
+    /// is the one delivered (losers of a hedge race moved wire bytes
+    /// that are discarded).  Only *successful* attempts are reported
+    /// here; failures go through [`Transport::on_fetch_error`].
+    fn on_fetch(
+        &self,
+        ctx: ShardCtx,
+        bytes: u64,
+        latency: Duration,
+        winner: bool,
+    ) {
+        let _ = (ctx, bytes, latency, winner);
+    }
+
+    /// One attempt failed on `ctx.path` (a first try about to be
+    /// retried, a final failure, or a failed hedge).  No bytes moved
+    /// and the elapsed time is an error latency, so it must feed
+    /// neither goodput nor p95 estimators — but it *is* a
+    /// path-quality signal: a fail-stop front end produces only
+    /// errors, which a successful-samples-only estimator would never
+    /// see, leaving its estimate frozen at a healthy value.
+    fn on_fetch_error(&self, ctx: ShardCtx) {
+        let _ = ctx;
+    }
+}
+
+/// The default policy behind [`run_sharded`]: every slot on path 0,
+/// no hedging — byte-identical to the pre-scheduler engine.
+pub struct StaticTransport;
+
+impl Transport for StaticTransport {}
 
 /// In-flight bookkeeping for one iteration whose shards are being
 /// fetched by the sharded engine.
@@ -195,6 +300,23 @@ struct JobSlot<J, S> {
     failed: bool,
 }
 
+/// One in-flight shard *fetch* (not claim accounting — that lives in
+/// [`JobSlot::outstanding`]): what the hedger needs to spot a
+/// straggler and to hand its duplicate the same job context and race
+/// flag.  Removed by whichever attempt settles the race.
+struct FetchTrack<J> {
+    started: Instant,
+    /// Path the original attempt was routed to (hedge thresholds and
+    /// the duplicate's path choice key off it).
+    path: usize,
+    /// A hedge was already issued (or permanently declined) for this
+    /// fetch; at most one duplicate per shard.
+    hedged: bool,
+    /// First-response-wins flag shared by the original and its hedge.
+    settled: Arc<AtomicBool>,
+    ctx: Arc<J>,
+}
+
 struct ShardedState<J, S, T> {
     /// Jobs begun (entered the window); window invariant:
     /// `next_job - delivered <= depth`.
@@ -204,6 +326,10 @@ struct ShardedState<J, S, T> {
     begins_pending: usize,
     delivered: usize,
     inflight: BTreeMap<usize, JobSlot<J, S>>,
+    /// In-flight shard fetches by `(seq, shard)` — the hedger's watch
+    /// list.  Bounded by `fanout` (each worker fetches one shard at a
+    /// time), so the idle-worker scan below is O(fanout).
+    tracks: BTreeMap<(usize, usize), FetchTrack<J>>,
     results: BTreeMap<usize, Result<Fetched<T>>>,
     aborted: bool,
     inflight_max: usize,
@@ -217,6 +343,17 @@ struct ShardedShared<J, S, T> {
     ready: Condvar,
 }
 
+/// What kind of claimed work a [`ShardedPanicGuard`] protects — each
+/// kind owns different accounting to repair on unwind.
+enum GuardKind {
+    PendingBegin,
+    Fetch,
+    /// A hedged duplicate: it holds no claim in
+    /// [`JobSlot::outstanding`] (the original attempt does), so a
+    /// panicking hedge must not repair slot accounting.
+    Hedge,
+}
+
 /// Panic guard for a claimed unit of sharded work: if `begin`, the shard
 /// fetch or `assemble` unwinds, deliver an `Err` sentinel for the job so
 /// the consumer fails fast, and repair the claim accounting so sibling
@@ -224,7 +361,15 @@ struct ShardedShared<J, S, T> {
 struct ShardedPanicGuard<'a, J, S, T> {
     shared: &'a ShardedShared<J, S, T>,
     seq: usize,
-    pending_begin: bool,
+    /// Shard position (fetch/hedge guards; unused for begins).
+    shard: usize,
+    kind: GuardKind,
+    /// Race flag of the protected fetch: a panicking *original* settles
+    /// it so a hedge still in flight can never "win" a claim whose
+    /// accounting this guard just repaired (it would double-decrement
+    /// `outstanding`).  A panicking hedge leaves it alone — the
+    /// original still owns the shard.
+    settled: Option<Arc<AtomicBool>>,
     armed: bool,
 }
 
@@ -233,19 +378,38 @@ impl<J, S, T> Drop for ShardedPanicGuard<'_, J, S, T> {
         if !self.armed {
             return;
         }
+        // Settle the race on behalf of a panicking *original* so a
+        // hedge still in flight can never "win" the claim this guard
+        // repairs.  If the swap says the race was ALREADY settled, a
+        // hedge won earlier and its finish_shard already released the
+        // claim (decremented `outstanding`) — repairing it again here
+        // would double-release and underflow.
+        let claim_already_released = matches!(self.kind, GuardKind::Fetch)
+            && self
+                .settled
+                .as_ref()
+                .is_some_and(|s| s.swap(true, Ordering::AcqRel));
         let mut st = self.shared.state.lock().unwrap();
-        if self.pending_begin {
-            st.begins_pending -= 1;
-        } else if let Some(slot) = st.inflight.get_mut(&self.seq) {
-            // A claimed shard fetch unwound: give its claim back and
-            // poison the job so siblings stop fetching shards that can
-            // never assemble (mirrors finish_shard's error path).  If
-            // the slot is already gone, the panic came from `assemble`
-            // — nothing left to account.
-            slot.outstanding -= 1;
-            slot.failed = true;
-            if slot.outstanding == 0 {
-                st.inflight.remove(&self.seq);
+        st.tracks.remove(&(self.seq, self.shard));
+        match self.kind {
+            GuardKind::PendingBegin => st.begins_pending -= 1,
+            GuardKind::Hedge => {}
+            GuardKind::Fetch => {
+                if !claim_already_released {
+                    if let Some(slot) = st.inflight.get_mut(&self.seq) {
+                        // A claimed shard fetch unwound: give its claim
+                        // back and poison the job so siblings stop
+                        // fetching shards that can never assemble
+                        // (mirrors finish_shard's error path).  If the
+                        // slot is already gone, the panic came from
+                        // `assemble` — nothing left to account.
+                        slot.outstanding -= 1;
+                        slot.failed = true;
+                        if slot.outstanding == 0 {
+                            st.inflight.remove(&self.seq);
+                        }
+                    }
+                }
             }
         }
         st.results.entry(self.seq).or_insert_with(|| {
@@ -285,8 +449,24 @@ fn abort_sharded<J, S, T>(shared: &ShardedShared<J, S, T>) {
 enum ShardWork<J> {
     /// Enter job `seq` into the window (calls `begin` outside the lock).
     Begin(usize),
-    /// Fetch shard position `.1` of job `.0` with the job context `.2`.
-    Fetch(usize, usize, Arc<J>),
+    /// Fetch shard `shard` of job `seq`; `settled` is the
+    /// first-response-wins flag shared with a potential hedge, `path`
+    /// the route the transport chose for the attempt.
+    Fetch {
+        seq: usize,
+        shard: usize,
+        ctx: Arc<J>,
+        settled: Arc<AtomicBool>,
+        path: usize,
+    },
+    /// Hedged duplicate of an in-flight fetch, racing it on `path`.
+    Hedge {
+        seq: usize,
+        shard: usize,
+        ctx: Arc<J>,
+        settled: Arc<AtomicBool>,
+        path: usize,
+    },
 }
 
 /// Run `jobs` through a `depth`-deep iteration window whose shards are
@@ -311,6 +491,10 @@ enum ShardWork<J> {
 /// `fanout` shard fetches run concurrently.  Delivery order, shard
 /// reassembly order and therefore the learning trajectory are identical
 /// for every `fanout × depth` combination.
+///
+/// Routing is static ([`StaticTransport`]: every attempt on path 0, no
+/// hedging); [`run_sharded_with`] is the same engine under a caller
+/// transport policy.
 #[allow(clippy::too_many_arguments)]
 pub fn run_sharded<J, S, T, B, F, A, C>(
     depth: usize,
@@ -318,6 +502,60 @@ pub fn run_sharded<J, S, T, B, F, A, C>(
     jobs: &[Job],
     registry: &Registry,
     retry: bool,
+    begin: B,
+    fetch_shard: F,
+    assemble: A,
+    consume: C,
+) -> Result<PipelineReport>
+where
+    J: Send + Sync,
+    S: Send,
+    T: Send,
+    B: Fn(&Job) -> J + Sync,
+    F: Fn(ShardCtx, &J, &Job, usize) -> Result<ShardFetched<S>> + Sync,
+    A: Fn(&Job, &J, Vec<S>) -> Result<T> + Sync,
+    C: FnMut(Delivery<T>) -> Result<()>,
+{
+    run_sharded_with(
+        depth,
+        fanout,
+        jobs,
+        registry,
+        retry,
+        &StaticTransport,
+        begin,
+        fetch_shard,
+        assemble,
+        consume,
+    )
+}
+
+/// [`run_sharded`] under a caller-supplied [`Transport`] policy: the
+/// transport routes every attempt to a network path (`ShardCtx::path`)
+/// and may duplicate a straggling in-flight fetch on a better path
+/// (hedging, first-response-wins).  Idle workers double as the hedge
+/// monitor: a worker with nothing to claim watches the in-flight watch
+/// list with a timed wait and claims a `Hedge` work item the moment a
+/// fetch overstays `Transport::hedge_after` — so hedging costs nothing
+/// when every worker is busy (the pool is the bottleneck, a duplicate
+/// could not run anyway) and reacts within the straggler's own
+/// overstay when workers are idle (exactly the window where a
+/// duplicate helps).
+///
+/// Hedge accounting: `pipeline.hedges` counts issued duplicates,
+/// `pipeline.hedge_wins` the ones whose response arrived first, and
+/// `pipeline.hedge_wasted_bytes` the loser's payload bytes (whichever
+/// attempt lost; the bytes crossed the wire but are discarded).  Only
+/// the winning attempt lands in `pipeline.connN.*` / `pipeline.bytes`,
+/// so per-connection sums still merge into the pipeline total.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded_with<J, S, T, B, F, A, C>(
+    depth: usize,
+    fanout: usize,
+    jobs: &[Job],
+    registry: &Registry,
+    retry: bool,
+    transport: &dyn Transport,
     begin: B,
     fetch_shard: F,
     assemble: A,
@@ -357,6 +595,9 @@ where
         .collect();
     let shard_lat = registry.histogram("pipeline.shard_fetch_ns");
     let retries = registry.counter("pipeline.shard_retries");
+    let hedges = registry.counter("pipeline.hedges");
+    let hedge_wins = registry.counter("pipeline.hedge_wins");
+    let hedge_wasted = registry.counter("pipeline.hedge_wasted_bytes");
 
     let shared = ShardedShared {
         state: Mutex::new(ShardedState {
@@ -364,6 +605,7 @@ where
             begins_pending: 0,
             delivered: 0,
             inflight: BTreeMap::new(),
+            tracks: BTreeMap::new(),
             results: BTreeMap::new(),
             aborted: false,
             inflight_max: 0,
@@ -379,6 +621,27 @@ where
     let conn_lat = &conn_lat;
     let shard_lat = &shard_lat;
     let retries = &retries;
+    let hedges = &hedges;
+    let hedge_wins = &hedge_wins;
+    let hedge_wasted = &hedge_wasted;
+
+    // Winner-side metric contract, shared by original and hedged
+    // attempts: one `shard_fetch_ns`/`connN.fetch_ns` sample plus the
+    // payload bytes land against the slot that actually served the
+    // shard — and only against it (losers and failed attempts record
+    // nothing here, keeping per-conn sums equal to `pipeline.bytes`).
+    let record_winner = move |conn: usize, bytes: u64, elapsed: Duration| {
+        shard_lat.record(elapsed.as_nanos() as u64);
+        conn_lat[conn].record(elapsed.as_nanos() as u64);
+        conn_bytes[conn].add(bytes);
+    };
+    let record_winner = &record_winner;
+
+    // Resolved once: when the policy can never hedge, the engine
+    // skips the in-flight watch list entirely (no per-shard track
+    // insert/remove, no extra wakeups) — the non-hedging hot path
+    // stays as cheap as the pre-scheduler engine.
+    let hedging = transport.hedging_enabled();
 
     let out: Result<()> = std::thread::scope(|scope| {
         let _abort_on_exit = ShardedAbortOnExit { shared };
@@ -403,11 +666,33 @@ where
                             let shard = slot.next_shard;
                             slot.next_shard += 1;
                             slot.outstanding += 1;
-                            break ShardWork::Fetch(
+                            let ctx = slot.ctx.clone();
+                            // Routed at claim time: a re-pinned slot
+                            // takes its *current* path, and (when the
+                            // policy hedges) the track lets idle
+                            // workers hedge this fetch.
+                            let path = transport.route(w);
+                            let settled =
+                                Arc::new(AtomicBool::new(false));
+                            if hedging {
+                                st.tracks.insert(
+                                    (seq, shard),
+                                    FetchTrack {
+                                        started: Instant::now(),
+                                        path,
+                                        hedged: false,
+                                        settled: settled.clone(),
+                                        ctx: ctx.clone(),
+                                    },
+                                );
+                            }
+                            break ShardWork::Fetch {
                                 seq,
                                 shard,
-                                slot.ctx.clone(),
-                            );
+                                ctx,
+                                settled,
+                                path,
+                            };
                         }
                         if st.next_job < jobs.len()
                             && st.next_job < st.delivered + depth
@@ -420,15 +705,79 @@ where
                                 .max(st.next_job - st.delivered);
                             break ShardWork::Begin(seq);
                         }
+                        // Nothing startable: scan the in-flight watch
+                        // list for a straggler to hedge, and for the
+                        // earliest future hedge deadline to sleep
+                        // toward.  O(fanout), and skipped entirely in
+                        // effect when the transport never hedges.
+                        let now = Instant::now();
+                        let mut next_deadline: Option<Instant> = None;
+                        let mut hedge_work = None;
+                        for (&(seq, shard), t) in st.tracks.iter_mut() {
+                            if t.hedged
+                                || t.settled.load(Ordering::Acquire)
+                            {
+                                continue;
+                            }
+                            let Some(after) =
+                                transport.hedge_after(t.path)
+                            else {
+                                continue;
+                            };
+                            let deadline = t.started + after;
+                            if now < deadline {
+                                next_deadline =
+                                    Some(next_deadline.map_or(
+                                        deadline,
+                                        |d| d.min(deadline),
+                                    ));
+                                continue;
+                            }
+                            // Overstayed.  At most one duplicate per
+                            // fetch, and a declined claim (budget
+                            // exhausted) is permanent for it.
+                            t.hedged = true;
+                            if let Some(path) =
+                                transport.claim_hedge(t.path)
+                            {
+                                hedges.inc();
+                                hedge_work = Some(ShardWork::Hedge {
+                                    seq,
+                                    shard,
+                                    ctx: t.ctx.clone(),
+                                    settled: t.settled.clone(),
+                                    path,
+                                });
+                                break;
+                            }
+                        }
+                        if let Some(work) = hedge_work {
+                            break work;
+                        }
                         if st.next_job >= jobs.len()
                             && st.begins_pending == 0
+                            && st.tracks.is_empty()
                         {
-                            // Every job is begun and every startable
-                            // shard is claimed: no new work can appear
-                            // for this worker.
+                            // Every job is begun, every startable shard
+                            // is claimed and every in-flight fetch has
+                            // settled: no new work — not even a hedge —
+                            // can appear for this worker.
                             return;
                         }
-                        st = shared.submit.wait(st).unwrap();
+                        st = match next_deadline {
+                            Some(dl) => {
+                                let timeout = dl
+                                    .saturating_duration_since(
+                                        Instant::now(),
+                                    );
+                                shared
+                                    .submit
+                                    .wait_timeout(st, timeout)
+                                    .unwrap()
+                                    .0
+                            }
+                            None => shared.submit.wait(st).unwrap(),
+                        };
                     }
                 };
                 match work {
@@ -436,7 +785,9 @@ where
                         let mut guard = ShardedPanicGuard {
                             shared,
                             seq,
-                            pending_begin: true,
+                            shard: 0,
+                            kind: GuardKind::PendingBegin,
+                            settled: None,
                             armed: true,
                         };
                         let ctx = Arc::new(begin(&jobs[seq]));
@@ -461,50 +812,167 @@ where
                         // Siblings can now claim this job's shards.
                         shared.submit.notify_all();
                     }
-                    ShardWork::Fetch(seq, shard, ctx) => {
+                    ShardWork::Fetch {
+                        seq,
+                        shard,
+                        ctx,
+                        settled,
+                        path,
+                    } => {
                         let mut guard = ShardedPanicGuard {
                             shared,
                             seq,
-                            pending_begin: false,
+                            shard,
+                            kind: GuardKind::Fetch,
+                            settled: Some(settled.clone()),
                             armed: true,
                         };
-                        let t0 = Instant::now();
-                        let mut used_conn = w;
-                        let mut res = fetch_shard(
-                            ShardCtx {
-                                conn: used_conn,
-                                attempt: 0,
-                            },
-                            &ctx,
-                            &jobs[seq],
-                            shard,
-                        );
-                        if res.is_err() && retry {
-                            // Retry once on another connection slot (the
-                            // same, reconnected, slot when fanout == 1).
-                            used_conn = (w + 1) % fanout;
+                        let mut used = ShardCtx {
+                            conn: w,
+                            attempt: 0,
+                            path,
+                            hedge: false,
+                        };
+                        let mut t0 = Instant::now();
+                        let mut res =
+                            fetch_shard(used, &ctx, &jobs[seq], shard);
+                        if res.is_err()
+                            && retry
+                            && !settled.load(Ordering::Acquire)
+                        {
+                            // Retry once on another connection slot
+                            // (the same, reconnected, slot when
+                            // fanout == 1), routed afresh so a
+                            // re-pinned slot lands on its current
+                            // path.  Skipped when a hedge already won
+                            // the shard.  The failed attempt is a
+                            // path-quality signal first.
+                            transport.on_fetch_error(used);
+                            used = ShardCtx {
+                                conn: (w + 1) % fanout,
+                                attempt: 1,
+                                path: transport.route((w + 1) % fanout),
+                                hedge: false,
+                            };
                             retries.inc();
+                            t0 = Instant::now();
                             res = fetch_shard(
-                                ShardCtx {
-                                    conn: used_conn,
-                                    attempt: 1,
-                                },
-                                &ctx,
-                                &jobs[seq],
-                                shard,
+                                used, &ctx, &jobs[seq], shard,
                             );
                         }
+                        // Per-attempt timing: a failed first try is
+                        // never charged to the slot/path that actually
+                        // served the shard.
                         let elapsed = t0.elapsed();
-                        if let Ok(sf) = &res {
-                            shard_lat.record(elapsed.as_nanos() as u64);
-                            conn_lat[used_conn]
-                                .record(elapsed.as_nanos() as u64);
-                            conn_bytes[used_conn].add(sf.bytes);
+                        let won = !settled.swap(true, Ordering::AcqRel);
+                        if hedging {
+                            remove_track(shared, seq, shard);
                         }
-                        finish_shard(
-                            shared, registry, jobs, assemble, seq, shard,
-                            res,
-                        );
+                        match res {
+                            Ok(sf) => {
+                                transport.on_fetch(
+                                    used, sf.bytes, elapsed, won,
+                                );
+                                if won {
+                                    record_winner(
+                                        used.conn, sf.bytes, elapsed,
+                                    );
+                                    finish_shard(
+                                        shared,
+                                        registry,
+                                        jobs,
+                                        assemble,
+                                        seq,
+                                        shard,
+                                        Ok(sf),
+                                    );
+                                } else {
+                                    // A hedge beat this attempt: its
+                                    // payload was already delivered,
+                                    // ours is discarded.
+                                    hedge_wasted.add(sf.bytes);
+                                }
+                            }
+                            Err(e) => {
+                                transport.on_fetch_error(used);
+                                // An original that settles with an
+                                // error fails the job exactly as
+                                // before hedging existed; if a hedge
+                                // settled first, the shard was served
+                                // and the error is moot.
+                                if won {
+                                    finish_shard(
+                                        shared,
+                                        registry,
+                                        jobs,
+                                        assemble,
+                                        seq,
+                                        shard,
+                                        Err(e),
+                                    );
+                                }
+                            }
+                        }
+                        guard.armed = false;
+                    }
+                    ShardWork::Hedge {
+                        seq,
+                        shard,
+                        ctx,
+                        settled,
+                        path,
+                    } => {
+                        let mut guard = ShardedPanicGuard {
+                            shared,
+                            seq,
+                            shard,
+                            kind: GuardKind::Hedge,
+                            settled: None,
+                            armed: true,
+                        };
+                        let hctx = ShardCtx {
+                            conn: w,
+                            attempt: 0,
+                            path,
+                            hedge: true,
+                        };
+                        let t0 = Instant::now();
+                        let res =
+                            fetch_shard(hctx, &ctx, &jobs[seq], shard);
+                        let elapsed = t0.elapsed();
+                        match res {
+                            Ok(sf) => {
+                                let won = !settled
+                                    .swap(true, Ordering::AcqRel);
+                                remove_track(shared, seq, shard);
+                                transport.on_fetch(
+                                    hctx, sf.bytes, elapsed, won,
+                                );
+                                if won {
+                                    hedge_wins.inc();
+                                    record_winner(w, sf.bytes, elapsed);
+                                    finish_shard(
+                                        shared,
+                                        registry,
+                                        jobs,
+                                        assemble,
+                                        seq,
+                                        shard,
+                                        Ok(sf),
+                                    );
+                                } else {
+                                    hedge_wasted.add(sf.bytes);
+                                }
+                            }
+                            Err(_) => {
+                                // A failed hedge never settles the
+                                // race: the original attempt (and its
+                                // retry) still owns the shard; its
+                                // budget reservation simply burns
+                                // (never refunded, by design).
+                                transport.on_fetch_error(hctx);
+                            }
+                        }
                         guard.armed = false;
                     }
                 }
@@ -568,6 +1036,21 @@ where
         .gauge("pipeline.inflight_max")
         .set(st.inflight_max as i64);
     Ok(report)
+}
+
+/// Drop a settled fetch from the hedger's watch list and wake parked
+/// workers: a shrinking watch list may satisfy their exit condition,
+/// and a settled straggler should stop being a hedge candidate.
+/// Idempotent — the race loser finds the entry already gone.
+fn remove_track<J, S, T>(
+    shared: &ShardedShared<J, S, T>,
+    seq: usize,
+    shard: usize,
+) {
+    let mut st = shared.state.lock().unwrap();
+    st.tracks.remove(&(seq, shard));
+    drop(st);
+    shared.submit.notify_all();
 }
 
 /// Fold one finished shard fetch into its job slot: record the part,
@@ -1129,6 +1612,308 @@ mod tests {
             }),
         );
         assert!(outcome.is_err(), "worker panic must propagate");
+    }
+
+    // --- transport routing + hedging -----------------------------------
+
+    /// Deterministic test policy: routes slot `conn` to path `conn`,
+    /// hedges any fetch in flight longer than `after` (up to
+    /// `max_claims` duplicates) onto `hedge_path`.
+    struct TestTransport {
+        after: Duration,
+        hedge_path: usize,
+        claims: AtomicUsize,
+        max_claims: usize,
+    }
+
+    impl TestTransport {
+        fn new(after: Duration, hedge_path: usize, max_claims: usize) -> Self {
+            TestTransport {
+                after,
+                hedge_path,
+                claims: AtomicUsize::new(0),
+                max_claims,
+            }
+        }
+    }
+
+    impl Transport for TestTransport {
+        fn route(&self, conn: usize) -> usize {
+            conn
+        }
+
+        fn hedging_enabled(&self) -> bool {
+            true
+        }
+
+        fn hedge_after(&self, _path: usize) -> Option<Duration> {
+            Some(self.after)
+        }
+
+        fn claim_hedge(&self, _orig_path: usize) -> Option<usize> {
+            if self.claims.fetch_add(1, Ordering::SeqCst)
+                < self.max_claims
+            {
+                Some(self.hedge_path)
+            } else {
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn hedge_rescues_a_straggler_first_response_wins() {
+        let jobs = jobs_for(4, 1);
+        let reg = Registry::new();
+        let transport =
+            TestTransport::new(Duration::from_millis(30), 9, 8);
+        let mut seen = Vec::new();
+        run_sharded_with(
+            2,
+            2,
+            &jobs,
+            &reg,
+            false,
+            &transport,
+            |_| (),
+            |ctx, _: &(), job, _| {
+                if ctx.hedge {
+                    // The duplicate rides the transport's chosen path.
+                    assert_eq!(ctx.path, 9, "hedge must use claim path");
+                } else {
+                    // Normal attempts ride their slot's route.
+                    assert_eq!(ctx.path, ctx.conn, "route ignored");
+                    if job.seq == 1 {
+                        // The straggler: far beyond the hedge deadline.
+                        std::thread::sleep(Duration::from_millis(300));
+                    }
+                }
+                Ok(ShardFetched {
+                    payload: job.seq,
+                    bytes: 10,
+                })
+            },
+            |job, _, _| Ok(job.seq),
+            |d| {
+                seen.push(d.payload);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert_eq!(reg.counter("pipeline.hedges").get(), 1);
+        assert_eq!(reg.counter("pipeline.hedge_wins").get(), 1);
+        // The straggler completed after losing: its payload bytes are
+        // wasted, not delivered — `pipeline.bytes` counts winners only.
+        assert_eq!(reg.counter("pipeline.hedge_wasted_bytes").get(), 10);
+        assert_eq!(reg.counter("pipeline.bytes").get(), 40);
+        let per_conn: u64 = (0..2)
+            .map(|c| reg.counter(&format!("pipeline.conn{c}.bytes")).get())
+            .sum();
+        assert_eq!(per_conn, 40, "losers must not land in conn bytes");
+    }
+
+    #[test]
+    fn hedge_that_loses_counts_as_waste() {
+        let jobs = jobs_for(3, 1);
+        let reg = Registry::new();
+        let transport =
+            TestTransport::new(Duration::from_millis(20), 0, 8);
+        run_sharded_with(
+            2,
+            2,
+            &jobs,
+            &reg,
+            false,
+            &transport,
+            |_| (),
+            |ctx, _: &(), job, _| {
+                if ctx.hedge {
+                    // The duplicate is even slower than the straggler.
+                    std::thread::sleep(Duration::from_millis(300));
+                } else if job.seq == 1 {
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+                Ok(ShardFetched {
+                    payload: job.seq,
+                    bytes: 7,
+                })
+            },
+            |job, _, _| Ok(job.seq),
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(reg.counter("pipeline.hedges").get(), 1);
+        assert_eq!(reg.counter("pipeline.hedge_wins").get(), 0);
+        assert_eq!(reg.counter("pipeline.hedge_wasted_bytes").get(), 7);
+        assert_eq!(reg.counter("pipeline.bytes").get(), 21);
+    }
+
+    #[test]
+    fn failed_hedge_leaves_the_original_in_charge() {
+        let jobs = jobs_for(3, 1);
+        let reg = Registry::new();
+        let transport =
+            TestTransport::new(Duration::from_millis(20), 0, 8);
+        let mut seen = Vec::new();
+        run_sharded_with(
+            2,
+            2,
+            &jobs,
+            &reg,
+            false,
+            &transport,
+            |_| (),
+            |ctx, _: &(), job, _| {
+                if ctx.hedge {
+                    return Err(Error::other("hedge path down"));
+                }
+                if job.seq == 1 {
+                    std::thread::sleep(Duration::from_millis(120));
+                }
+                Ok(ShardFetched {
+                    payload: job.seq,
+                    bytes: 4,
+                })
+            },
+            |job, _, _| Ok(job.seq),
+            |d| {
+                seen.push(d.payload);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(reg.counter("pipeline.hedges").get(), 1);
+        assert_eq!(reg.counter("pipeline.hedge_wins").get(), 0);
+        assert_eq!(reg.counter("pipeline.hedge_wasted_bytes").get(), 0);
+    }
+
+    #[test]
+    fn declined_hedge_claims_never_duplicate() {
+        let jobs = jobs_for(4, 1);
+        let reg = Registry::new();
+        // Budget for zero hedges: the straggler must finish on its own.
+        let transport =
+            TestTransport::new(Duration::from_millis(10), 0, 0);
+        run_sharded_with(
+            2,
+            2,
+            &jobs,
+            &reg,
+            false,
+            &transport,
+            |_| (),
+            |_ctx, _: &(), job, _| {
+                if job.seq == 1 {
+                    std::thread::sleep(Duration::from_millis(80));
+                }
+                Ok(ShardFetched {
+                    payload: job.seq,
+                    bytes: 1,
+                })
+            },
+            |job, _, _| Ok(job.seq),
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(reg.counter("pipeline.hedges").get(), 0);
+        assert_eq!(reg.counter("pipeline.bytes").get(), 4);
+    }
+
+    /// Panic-guard vs hedge-win race: when a hedge wins a shard and
+    /// *then* the original attempt panics, the guard must notice the
+    /// race is already settled — the hedge's `finish_shard` released
+    /// the claim, so repairing it again would double-release the
+    /// slot's `outstanding` accounting and poison a still-healthy job.
+    /// The run must end in a cleanly propagated panic either way.
+    #[test]
+    fn fetch_panic_after_hedge_win_does_not_double_release() {
+        let jobs = jobs_for(2, 2); // one job, two shards
+        let reg = Registry::new();
+        // Budget for exactly one hedge: the straggler's duplicate.
+        let transport =
+            TestTransport::new(Duration::from_millis(20), 0, 1);
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                run_sharded_with(
+                    1,
+                    3,
+                    &jobs,
+                    &reg,
+                    false,
+                    &transport,
+                    |_| (),
+                    |ctx, _: &(), _job, shard| {
+                        if !ctx.hedge && shard == 0 {
+                            // Overstay long enough for the hedge to
+                            // win, then unwind while the sibling
+                            // shard's claim is still in flight.
+                            std::thread::sleep(Duration::from_millis(
+                                150,
+                            ));
+                            panic!("boom after losing the race");
+                        }
+                        if !ctx.hedge && shard == 1 {
+                            std::thread::sleep(Duration::from_millis(
+                                300,
+                            ));
+                        }
+                        Ok(ShardFetched {
+                            payload: shard,
+                            bytes: 1,
+                        })
+                    },
+                    |job, _, _| Ok(job.seq),
+                    |_| Ok(()),
+                )
+            }),
+        );
+        assert!(outcome.is_err(), "worker panic must propagate");
+        assert_eq!(reg.counter("pipeline.hedge_wins").get(), 1);
+    }
+
+    /// The satellite metric-parity fix: a failed first attempt's
+    /// latency is never charged to the slot that served the retry.
+    #[test]
+    fn retry_latency_lands_on_the_serving_conn_only() {
+        let jobs = jobs_for(6, 1);
+        let reg = Registry::new();
+        run_sharded(
+            2,
+            2,
+            &jobs,
+            &reg,
+            true,
+            |_| (),
+            |ctx, _: &(), job, _| {
+                if ctx.attempt == 0 {
+                    // A slow failure: 80 ms of latency that belongs to
+                    // the *failing* attempt, not the serving slot.
+                    std::thread::sleep(Duration::from_millis(80));
+                    return Err(Error::other("flaky"));
+                }
+                Ok(ShardFetched {
+                    payload: job.seq,
+                    bytes: 5,
+                })
+            },
+            |job, _, _| Ok(job.seq),
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(reg.counter("pipeline.shard_retries").get(), 6);
+        let mut served = 0;
+        for c in 0..2 {
+            let h = reg.histogram(&format!("pipeline.conn{c}.fetch_ns"));
+            served += h.count();
+            assert!(
+                h.max() < 40_000_000,
+                "conn {c} charged the failed attempt's 80 ms: {} ns",
+                h.max()
+            );
+        }
+        assert_eq!(served, 6, "every shard charged to exactly one conn");
     }
 
     #[test]

@@ -1,0 +1,732 @@
+//! Goodput-aware transport scheduler: dynamic slot→path re-pinning +
+//! hedged shard fetches.
+//!
+//! PR 4's multi-path topology pinned each pooled connection slot to a
+//! path *statically* (`(client_id + slot) % paths`), so one degraded
+//! COS front end permanently taxed every slot pinned to it — the
+//! client could shrink its split, but never route around the slow
+//! path.  The [`TransportScheduler`] closes that gap: every shard
+//! completion feeds a **per-path goodput EWMA** (payload bytes /
+//! fetch latency, seeded from the topology's configured rates), and
+//! two policies act on the estimate through the engine's
+//! [`Transport`] hooks:
+//!
+//! - **Re-pinning** (`repin_threshold_pct` > 0): every
+//!   `repin_interval_ms`, slots pinned to a *degraded* path are
+//!   remapped round-robin over the healthy paths (`pipeline.repins`
+//!   counts migrations).  Degraded means the goodput estimate fell
+//!   below `repin_threshold_pct`% of **both** the per-path mean and
+//!   the path's own configured baseline rate — the second leg keeps a
+//!   legitimately slower configured path (heterogeneous
+//!   `path_rates_mbps`) pinned where it belongs.  Fetch *errors*
+//!   halve a path's estimate (a fail-stop front end produces no
+//!   successful samples, so only the error signal can reveal it).
+//!   The static `path_for_slot` mapping is the seed — with the knob
+//!   at its default 0 the scheduler *is* static pinning,
+//!   byte-identical.
+//! - **Hedging** (`hedge_factor_pct` > 0): once a path has enough
+//!   latency samples, a fetch in flight longer than the path's p95
+//!   estimate (EWMA mean + 2·deviation, TCP-RTO style) scaled by
+//!   `1 + hedge_factor_pct/100` is duplicated on the current
+//!   best-goodput path, first-response-wins.  Duplicated bytes are
+//!   hard-capped by `hedge_max_bytes`: a hedge is only claimed while
+//!   `spent + largest-shard-estimate ≤ cap` (`pipeline.hedge_bytes`
+//!   is the ledger), so uniform-shard workloads can never exceed the
+//!   cap.
+//!
+//! Neither policy can change training values: routing and hedging
+//! select *transport* only, and the engine's reassembly/delivery
+//! protocol ignores them — trajectories stay bitwise identical with
+//! the scheduler on or off (pinned e2e in `tests/sim_backend.rs`).
+//!
+//! Every estimator update is lock-free (atomics only; a racing update
+//! may drop one EWMA sample, which an estimator tolerates by design)
+//! and the re-pin pass is amortised behind an interval check —
+//! `micro_hotpaths.rs` pins the update's cost, since it runs on every
+//! shard completion.
+//!
+//! Known limitation: a fully-drained path stops producing samples, so
+//! its estimate goes stale and slots do not migrate *back* after a
+//! recovery; probing a drained path is future work.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::pipeline::{ShardCtx, Transport};
+use crate::config::HapiConfig;
+use crate::metrics::{Counter, Histogram, Registry};
+use crate::netsim::Topology;
+
+/// EWMA smoothing for the goodput estimate: new samples carry 1/4.
+const GOODPUT_ALPHA: f64 = 0.25;
+/// EWMA smoothing for latency mean/deviation (TCP RTT style: 1/8).
+const LAT_ALPHA: f64 = 0.125;
+/// Latency samples a path needs before its p95 estimate is trusted
+/// enough to hedge against.
+const MIN_HEDGE_SAMPLES: u64 = 8;
+
+/// Per-path estimator state.  All fields are plain atomics — updates
+/// are load/compute/store without CAS loops, so a concurrent update
+/// can drop a sample; that lossiness is fine for an EWMA and keeps
+/// the completion hot path wait-free.
+struct PathState {
+    /// The construction-time goodput seed (bytes/sec; 0 = unknown):
+    /// the path's configured rate, or an even share of the total.
+    /// Re-pinning treats it as the path's healthy baseline — a path
+    /// is only "degraded" when its estimate falls below the threshold
+    /// fraction of *both* the per-path mean and this baseline, so a
+    /// legitimately slower configured path (heterogeneous
+    /// `path_rates_mbps`) is never evacuated just for being slower
+    /// than its siblings.
+    seed: f64,
+    /// Goodput EWMA in bytes/sec (`f64` bits).  Seeded from `seed` so
+    /// re-pin decisions have a basis before the first samples land.
+    goodput: AtomicU64,
+    /// Fetch-latency EWMA in ns.
+    lat_mean_ns: AtomicU64,
+    /// EWMA of |latency − mean| in ns; p95 ≈ mean + 2·dev.
+    lat_dev_ns: AtomicU64,
+    samples: AtomicU64,
+    /// Delivered (winner) payload bytes — the client's per-window
+    /// bandwidth re-measurement reads their sum.
+    rx: AtomicU64,
+    /// `pipeline.path<i>.bytes` / `pipeline.path<i>.fetch_ns`:
+    /// winner-only, so per-path sums merge into `pipeline.bytes`.
+    bytes: Arc<Counter>,
+    fetch_ns: Arc<Histogram>,
+}
+
+impl PathState {
+    fn goodput_est(&self) -> f64 {
+        f64::from_bits(self.goodput.load(Ordering::Relaxed))
+    }
+}
+
+/// The goodput-aware [`Transport`] policy one client epoch runs under.
+/// Constructed per `train_epoch` next to the connection pool; with the
+/// `repin_threshold_pct` and `hedge_factor_pct` knobs at their default
+/// 0 it reproduces static pinning exactly.
+pub struct TransportScheduler {
+    paths: Vec<PathState>,
+    /// Dynamic slot→path map, seeded with the static
+    /// [`super::path_for_slot`] pinning.
+    slots: Vec<AtomicUsize>,
+    repin_threshold_pct: u64,
+    repin_interval: Duration,
+    /// Epoch clock for the amortised re-pin interval check.
+    started: Instant,
+    last_repin_ns: AtomicU64,
+    hedge_factor_pct: u64,
+    /// Hard cap on duplicated (hedge-attempt) bytes.
+    hedge_cap: u64,
+    /// Budget already committed: actual bytes of finished hedges plus
+    /// the conservative estimate reserved at claim time for in-flight
+    /// ones (never refunded downward below actuals).
+    hedge_committed: AtomicU64,
+    /// Largest winner shard seen — the conservative per-hedge reserve.
+    max_shard_bytes: AtomicU64,
+    repins: Arc<Counter>,
+    hedge_bytes: Arc<Counter>,
+}
+
+impl TransportScheduler {
+    /// Build the scheduler for one epoch: `fanout` connection slots
+    /// over `net`'s paths, statically pre-pinned for `client_id`,
+    /// goodput seeded from the topology's configured rates
+    /// (`Topology::total_rate` split evenly when a path is unshaped).
+    pub fn new(
+        cfg: &HapiConfig,
+        client_id: u64,
+        net: &Topology,
+        fanout: usize,
+        registry: &Registry,
+    ) -> TransportScheduler {
+        let num_paths = net.num_paths().max(1);
+        let even_share = net
+            .total_rate()
+            .map(|r| r as f64 / num_paths as f64)
+            .unwrap_or(0.0);
+        let paths = (0..num_paths)
+            .map(|p| {
+                let seed = net
+                    .path(p)
+                    .rate()
+                    .map(|r| r as f64)
+                    .unwrap_or(even_share);
+                PathState {
+                    seed,
+                    goodput: AtomicU64::new(seed.to_bits()),
+                    lat_mean_ns: AtomicU64::new(0),
+                    lat_dev_ns: AtomicU64::new(0),
+                    samples: AtomicU64::new(0),
+                    rx: AtomicU64::new(0),
+                    bytes: registry
+                        .counter(&format!("pipeline.path{p}.bytes")),
+                    fetch_ns: registry.histogram(&format!(
+                        "pipeline.path{p}.fetch_ns"
+                    )),
+                }
+            })
+            .collect();
+        let slots = (0..fanout.max(1))
+            .map(|s| {
+                AtomicUsize::new(super::path_for_slot(
+                    client_id, num_paths, s,
+                ))
+            })
+            .collect();
+        TransportScheduler {
+            paths,
+            slots,
+            repin_threshold_pct: cfg.repin_threshold_pct.min(100),
+            repin_interval: Duration::from_millis(cfg.repin_interval_ms),
+            started: Instant::now(),
+            last_repin_ns: AtomicU64::new(0),
+            hedge_factor_pct: cfg.hedge_factor_pct,
+            hedge_cap: cfg.hedge_max_bytes,
+            hedge_committed: AtomicU64::new(0),
+            max_shard_bytes: AtomicU64::new(0),
+            repins: registry.counter("pipeline.repins"),
+            hedge_bytes: registry.counter("pipeline.hedge_bytes"),
+        }
+    }
+
+    /// Disable hedging regardless of the config knob.  ALL_IN_COS uses
+    /// this: its POSTs *train* on the server (one SGD step per
+    /// request), so a duplicated request would double-apply an update
+    /// — only idempotent fetches (feature extraction, raw GETs) may be
+    /// hedged.
+    pub fn without_hedging(mut self) -> TransportScheduler {
+        self.hedge_factor_pct = 0;
+        self
+    }
+
+    pub fn num_paths(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// Delivered payload bytes summed over every path (winners only) —
+    /// the same quantity `pipeline.bytes` tracks, split per path.  The
+    /// client's adaptive-split window re-measurement reads this.
+    pub fn rx_bytes(&self) -> u64 {
+        self.paths
+            .iter()
+            .map(|p| p.rx.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Current goodput estimate for `path`, bytes/sec (for tests and
+    /// diagnostics).
+    pub fn goodput_estimate(&self, path: usize) -> f64 {
+        self.paths[path].goodput_est()
+    }
+
+    /// Current path pinned to connection slot `slot`.
+    pub fn slot_path(&self, slot: usize) -> usize {
+        self.slots[slot % self.slots.len()].load(Ordering::Relaxed)
+    }
+
+    /// The best-goodput path right now (hedges run here).
+    fn best_path(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_g = f64::MIN;
+        for (i, p) in self.paths.iter().enumerate() {
+            let g = p.goodput_est();
+            if g > best_g {
+                best_g = g;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Amortised re-pin pass: at most once per `repin_interval`, move
+    /// every slot pinned to a below-threshold path round-robin over
+    /// the healthy paths.  The interval CAS elects one completing
+    /// fetch per window to pay the O(paths + slots) scan; every other
+    /// completion returns after two atomic loads.
+    fn maybe_repin(&self) {
+        if self.repin_threshold_pct == 0 || self.paths.len() < 2 {
+            return;
+        }
+        let now_ns = self.started.elapsed().as_nanos() as u64;
+        let last = self.last_repin_ns.load(Ordering::Relaxed);
+        if now_ns.saturating_sub(last)
+            < self.repin_interval.as_nanos() as u64
+        {
+            return;
+        }
+        if self
+            .last_repin_ns
+            .compare_exchange(
+                last,
+                now_ns,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            )
+            .is_err()
+        {
+            return;
+        }
+        let est: Vec<f64> =
+            self.paths.iter().map(|p| p.goodput_est()).collect();
+        // A path with no estimate at all (unshaped, no samples yet)
+        // gives the mean no meaning — wait for data.
+        if est.iter().any(|&e| !(e.is_finite() && e > 0.0)) {
+            return;
+        }
+        let mean = est.iter().sum::<f64>() / est.len() as f64;
+        let pct = self.repin_threshold_pct as f64 / 100.0;
+        let cutoff = mean * pct;
+        // Degraded = below the threshold fraction of the per-path
+        // mean AND of the path's own configured baseline (when
+        // known).  The second leg keeps a legitimately slower
+        // configured path (heterogeneous rates) from being evacuated
+        // for merely being below the mean while running exactly at
+        // its own healthy rate.
+        let degraded = |i: usize| {
+            est[i] < cutoff
+                && (self.paths[i].seed <= 0.0
+                    || est[i] < self.paths[i].seed * pct)
+        };
+        let healthy: Vec<usize> =
+            (0..est.len()).filter(|&i| !degraded(i)).collect();
+        if healthy.is_empty() || healthy.len() == est.len() {
+            return;
+        }
+        let mut next = 0usize;
+        for slot in &self.slots {
+            let cur = slot.load(Ordering::Relaxed);
+            if cur < est.len() && degraded(cur) {
+                slot.store(
+                    healthy[next % healthy.len()],
+                    Ordering::Relaxed,
+                );
+                next += 1;
+                self.repins.inc();
+            }
+        }
+    }
+
+    /// Lock-free EWMA fold of one completed attempt into `path`'s
+    /// estimator (goodput skipped for zero-byte payloads — ALL_IN_COS
+    /// responses carry only a loss scalar).
+    fn observe(&self, path: usize, bytes: u64, latency: Duration) {
+        let Some(p) = self.paths.get(path) else { return };
+        let lat_ns = (latency.as_nanos() as u64).max(1);
+        let mean = p.lat_mean_ns.load(Ordering::Relaxed);
+        if mean == 0 {
+            p.lat_mean_ns.store(lat_ns, Ordering::Relaxed);
+        } else {
+            let new_mean = (mean as f64
+                + LAT_ALPHA * (lat_ns as f64 - mean as f64))
+                as u64;
+            p.lat_mean_ns.store(new_mean.max(1), Ordering::Relaxed);
+            let dev = p.lat_dev_ns.load(Ordering::Relaxed);
+            let err = (lat_ns as f64 - new_mean as f64).abs();
+            let new_dev =
+                (dev as f64 + LAT_ALPHA * (err - dev as f64)) as u64;
+            p.lat_dev_ns.store(new_dev, Ordering::Relaxed);
+        }
+        if bytes > 0 {
+            self.max_shard_bytes.fetch_max(bytes, Ordering::Relaxed);
+            let sample = bytes as f64 / latency.as_secs_f64().max(1e-9);
+            let cur = p.goodput_est();
+            let new = if cur > 0.0 {
+                cur + GOODPUT_ALPHA * (sample - cur)
+            } else {
+                sample
+            };
+            p.goodput.store(new.to_bits(), Ordering::Relaxed);
+        }
+        p.samples.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl Transport for TransportScheduler {
+    fn route(&self, conn: usize) -> usize {
+        self.slot_path(conn)
+    }
+
+    fn hedging_enabled(&self) -> bool {
+        self.hedge_factor_pct > 0
+    }
+
+    fn hedge_after(&self, path: usize) -> Option<Duration> {
+        if self.hedge_factor_pct == 0 {
+            return None;
+        }
+        let p = self.paths.get(path)?;
+        if p.samples.load(Ordering::Relaxed) < MIN_HEDGE_SAMPLES {
+            return None;
+        }
+        let p95 = p
+            .lat_mean_ns
+            .load(Ordering::Relaxed)
+            .saturating_add(2 * p.lat_dev_ns.load(Ordering::Relaxed));
+        Some(Duration::from_nanos(
+            p95.saturating_mul(100 + self.hedge_factor_pct) / 100,
+        ))
+    }
+
+    fn claim_hedge(&self, _orig_path: usize) -> Option<usize> {
+        if self.hedge_factor_pct == 0 {
+            return None;
+        }
+        // Conservative reservation: assume the duplicate moves as many
+        // bytes as the largest shard seen so far.  Committed budget is
+        // never refunded, so the actual duplicated bytes stay under
+        // `hedge_cap` whenever shards are uniformly sized.
+        let reserve = self.max_shard_bytes.load(Ordering::Relaxed).max(1);
+        let mut committed = self.hedge_committed.load(Ordering::Relaxed);
+        loop {
+            if committed.saturating_add(reserve) > self.hedge_cap {
+                return None;
+            }
+            match self.hedge_committed.compare_exchange_weak(
+                committed,
+                committed + reserve,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(cur) => committed = cur,
+            }
+        }
+        Some(self.best_path())
+    }
+
+    fn on_fetch(
+        &self,
+        ctx: ShardCtx,
+        bytes: u64,
+        latency: Duration,
+        winner: bool,
+    ) {
+        // Every completion is an estimator sample — losers and hedges
+        // measured real path behaviour too.
+        self.observe(ctx.path, bytes, latency);
+        if ctx.hedge {
+            self.hedge_bytes.add(bytes);
+        }
+        if winner {
+            if let Some(p) = self.paths.get(ctx.path) {
+                p.bytes.add(bytes);
+                p.fetch_ns.record(latency.as_nanos() as u64);
+                p.rx.fetch_add(bytes, Ordering::Relaxed);
+            }
+        }
+        self.maybe_repin();
+    }
+
+    fn on_fetch_error(&self, ctx: ShardCtx) {
+        let Some(p) = self.paths.get(ctx.path) else { return };
+        // Multiplicative decay: a fail-stop front end produces only
+        // errors, which the sample-driven EWMA would never see — its
+        // estimate would stay frozen at a healthy value, keeping it
+        // the "best" hedge target and above the re-pin cutoff
+        // forever.  Halving per failure makes a dead path lose both
+        // roles within a few errors, while an isolated flake is
+        // quickly forgiven by the next good samples.  The latency
+        // estimator is untouched: error latencies are fast-fail
+        // noise, not service times.
+        let cur = p.goodput_est();
+        if cur > 0.0 {
+            p.goodput.store((cur * 0.5).to_bits(), Ordering::Relaxed);
+        }
+        self.maybe_repin();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::{PathSpec, TopologySpec};
+
+    fn net(rates: &[u64]) -> Topology {
+        Topology::new(&TopologySpec {
+            paths: rates.iter().map(|&r| PathSpec::shaped(r)).collect(),
+            aggregate_rate: None,
+        })
+    }
+
+    fn sched_cfg(
+        repin_pct: u64,
+        interval_ms: u64,
+        hedge_pct: u64,
+    ) -> HapiConfig {
+        let mut cfg = HapiConfig::sim();
+        cfg.repin_threshold_pct = repin_pct;
+        cfg.repin_interval_ms = interval_ms;
+        cfg.hedge_factor_pct = hedge_pct;
+        cfg.hedge_max_bytes = 1 << 20;
+        cfg
+    }
+
+    fn ctx(conn: usize, path: usize, hedge: bool) -> ShardCtx {
+        ShardCtx {
+            conn,
+            attempt: 0,
+            path,
+            hedge,
+        }
+    }
+
+    #[test]
+    fn seeds_static_pinning_and_topology_rates() {
+        let reg = Registry::new();
+        let net = net(&[1000, 2000]);
+        let s = TransportScheduler::new(
+            &sched_cfg(0, 100, 0),
+            3, // odd id rotates the static pinning
+            &net,
+            4,
+            &reg,
+        );
+        for slot in 0..4 {
+            assert_eq!(
+                s.route(slot),
+                crate::client::path_for_slot(3, 2, slot),
+                "default must be the static pinning"
+            );
+        }
+        assert_eq!(s.goodput_estimate(0), 1000.0);
+        assert_eq!(s.goodput_estimate(1), 2000.0);
+        // With re-pinning off the map never moves, whatever the data.
+        for _ in 0..50 {
+            s.on_fetch(
+                ctx(0, 0, false),
+                10,
+                Duration::from_millis(100),
+                true,
+            );
+        }
+        assert_eq!(s.route(0), crate::client::path_for_slot(3, 2, 0));
+        assert_eq!(reg.counter("pipeline.repins").get(), 0);
+    }
+
+    #[test]
+    fn repins_slots_off_a_degraded_path() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000, 1_000_000]);
+        // Interval 0: every completion may re-pin (test determinism).
+        let s = TransportScheduler::new(
+            &sched_cfg(60, 0, 0),
+            2, // even id: slot i → path i % 2
+            &net,
+            4,
+            &reg,
+        );
+        assert_eq!(s.route(0), 0);
+        assert_eq!(s.route(1), 1);
+        // Path 0 collapses: samples show ~1/20th of path 1's goodput.
+        for _ in 0..24 {
+            s.on_fetch(
+                ctx(0, 0, false),
+                50_000,
+                Duration::from_millis(1000),
+                true,
+            );
+            s.on_fetch(
+                ctx(1, 1, false),
+                1_000_000,
+                Duration::from_millis(1000),
+                true,
+            );
+        }
+        assert!(
+            s.goodput_estimate(0) < s.goodput_estimate(1) * 0.2,
+            "estimator never tracked the collapse: {} vs {}",
+            s.goodput_estimate(0),
+            s.goodput_estimate(1)
+        );
+        // Every slot now routes to the healthy path.
+        for slot in 0..4 {
+            assert_eq!(
+                s.route(slot),
+                1,
+                "slot {slot} still pinned to the degraded path"
+            );
+        }
+        assert_eq!(reg.counter("pipeline.repins").get(), 2);
+        // Winner bytes landed per path.
+        assert!(reg.counter("pipeline.path0.bytes").get() > 0);
+        assert_eq!(
+            s.rx_bytes(),
+            reg.counter("pipeline.path0.bytes").get()
+                + reg.counter("pipeline.path1.bytes").get()
+        );
+    }
+
+    #[test]
+    fn heterogeneous_path_rates_are_not_migrated_off() {
+        // Configured [2, 8] MB/s: path 0 is below the mean *by
+        // design*.  Running exactly at its own rate it must keep its
+        // slots; only a drop below its own baseline is degradation.
+        let reg = Registry::new();
+        let net = net(&[2_000_000, 8_000_000]);
+        let s = TransportScheduler::new(
+            &sched_cfg(60, 0, 0),
+            2,
+            &net,
+            4,
+            &reg,
+        );
+        for _ in 0..32 {
+            s.on_fetch(
+                ctx(0, 0, false),
+                200_000,
+                Duration::from_millis(100),
+                true,
+            );
+            s.on_fetch(
+                ctx(1, 1, false),
+                800_000,
+                Duration::from_millis(100),
+                true,
+            );
+        }
+        assert_eq!(s.route(0), 0, "healthy slow path lost its slots");
+        assert_eq!(reg.counter("pipeline.repins").get(), 0);
+        // A real degradation of the slow path still migrates.
+        for _ in 0..32 {
+            s.on_fetch(
+                ctx(0, 0, false),
+                20_000,
+                Duration::from_millis(100),
+                true,
+            );
+        }
+        assert_eq!(s.route(0), 1, "true degradation must migrate");
+        assert!(reg.counter("pipeline.repins").get() >= 1);
+    }
+
+    #[test]
+    fn fetch_errors_decay_a_fail_stop_paths_estimate() {
+        // A fail-stop front end produces no successful samples — only
+        // the error signal can move its estimate off the healthy
+        // seed.
+        let reg = Registry::new();
+        let net = net(&[1_000_000, 1_000_000]);
+        let s = TransportScheduler::new(
+            &sched_cfg(60, 0, 0),
+            2,
+            &net,
+            2,
+            &reg,
+        );
+        // Keep path 1's estimate honest with real samples…
+        s.on_fetch(
+            ctx(1, 1, false),
+            100_000,
+            Duration::from_millis(100),
+            true,
+        );
+        // …while path 0 only errors.
+        for _ in 0..6 {
+            s.on_fetch_error(ctx(0, 0, false));
+        }
+        assert!(
+            s.goodput_estimate(0) < s.goodput_estimate(1) * 0.2,
+            "errors never decayed the dead path: {} vs {}",
+            s.goodput_estimate(0),
+            s.goodput_estimate(1)
+        );
+        assert_eq!(s.route(0), 1, "slot stayed on the fail-stop path");
+        assert!(reg.counter("pipeline.repins").get() >= 1);
+    }
+
+    #[test]
+    fn hedge_threshold_needs_samples_then_scales_with_factor() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000]);
+        let s = TransportScheduler::new(
+            &sched_cfg(0, 100, 100),
+            1,
+            &net,
+            2,
+            &reg,
+        );
+        assert_eq!(
+            s.hedge_after(0),
+            None,
+            "no samples: no p95 to hedge against"
+        );
+        for _ in 0..MIN_HEDGE_SAMPLES {
+            s.on_fetch(
+                ctx(0, 0, false),
+                1000,
+                Duration::from_millis(10),
+                true,
+            );
+        }
+        let after = s.hedge_after(0).expect("samples present");
+        // Steady 10 ms latency: dev ~0, p95 ≈ 10 ms, factor 100% ≈
+        // 20 ms — allow EWMA warm-up slack.
+        assert!(
+            after >= Duration::from_millis(15)
+                && after <= Duration::from_millis(40),
+            "hedge threshold off: {after:?}"
+        );
+        // A disabled scheduler never hedges.
+        let off = TransportScheduler::new(
+            &sched_cfg(0, 100, 0),
+            1,
+            &net,
+            2,
+            &reg,
+        );
+        assert_eq!(off.hedge_after(0), None);
+        assert_eq!(off.claim_hedge(0), None);
+    }
+
+    #[test]
+    fn hedge_budget_is_a_hard_cap() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000, 2_000_000]);
+        let mut cfg = sched_cfg(0, 100, 50);
+        cfg.hedge_max_bytes = 2500;
+        let s = TransportScheduler::new(&cfg, 1, &net, 2, &reg);
+        // Largest shard observed: 1000 bytes.
+        s.on_fetch(ctx(0, 0, false), 1000, Duration::from_millis(5), true);
+        // 2500-byte cap at a 1000-byte reserve: two claims fit, the
+        // third would overcommit.
+        assert_eq!(s.claim_hedge(0), Some(1), "best path hosts hedges");
+        assert!(s.claim_hedge(0).is_some());
+        assert_eq!(s.claim_hedge(0), None, "cap must bind");
+        // Finished hedges land in the ledger.
+        s.on_fetch(ctx(1, 1, true), 1000, Duration::from_millis(5), true);
+        s.on_fetch(ctx(1, 1, true), 900, Duration::from_millis(5), false);
+        assert_eq!(reg.counter("pipeline.hedge_bytes").get(), 1900);
+        assert!(
+            reg.counter("pipeline.hedge_bytes").get()
+                <= cfg.hedge_max_bytes,
+            "duplicated bytes exceeded the configured cap"
+        );
+    }
+
+    #[test]
+    fn without_hedging_forces_the_knob_off() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000]);
+        let s = TransportScheduler::new(
+            &sched_cfg(0, 100, 200),
+            1,
+            &net,
+            1,
+            &reg,
+        )
+        .without_hedging();
+        for _ in 0..20 {
+            s.on_fetch(
+                ctx(0, 0, false),
+                1000,
+                Duration::from_millis(10),
+                true,
+            );
+        }
+        assert_eq!(s.hedge_after(0), None);
+        assert_eq!(s.claim_hedge(0), None);
+    }
+}

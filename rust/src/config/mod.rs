@@ -34,6 +34,17 @@
 //!   `--path-latency-us`) — the multi-NIC/multi-proxy path model
 //!   ([`HapiConfig::topology_spec`]); each path gets `bandwidth` unless
 //!   overridden, and one path is exactly the classic single link.
+//! - `path_queue_model` (`--path-queue-model`, default off) — per-path
+//!   frame latency grows with utilisation (M/M/1-style queueing on top
+//!   of the constant `path_latency_us` service time); needs a shaped
+//!   rate and a nonzero latency to bite.
+//! - transport scheduler (`repin_threshold_pct`/`--repin-threshold-pct`,
+//!   default 0 = static pinning; `repin_interval_ms`/
+//!   `--repin-interval-ms`; `hedge_factor_pct`/`--hedge-factor-pct`,
+//!   default 0 = no hedging; `hedge_max_bytes`/`--hedge-max-bytes`) —
+//!   the goodput-aware slot→path re-pinner and hedged shard fetches
+//!   ([`crate::client::TransportScheduler`]).  Both default off: the
+//!   default config reproduces static pinning byte-identically.
 
 use std::path::{Path, PathBuf};
 
@@ -72,6 +83,26 @@ pub struct HapiConfig {
     /// Fixed one-way per-frame propagation delay on every path, in µs
     /// (0 = none) — models a longer route to a remote COS front end.
     pub path_latency_us: u64,
+    /// Grow each path's per-frame latency with its utilisation
+    /// (M/M/1-style queueing on the `path_latency_us` service time).
+    /// Off by default: the classic constant sleep.
+    pub path_queue_model: bool,
+
+    // --- transport scheduler (client-side slot→path policy) ----------
+    /// Re-pin connection slots away from a path whose estimated
+    /// goodput drops below this percentage of the per-path mean.
+    /// 0 (default) = static pinning, byte-identical to pre-scheduler
+    /// behaviour; must be ≤ 100.
+    pub repin_threshold_pct: u64,
+    /// Minimum interval between re-pin passes, milliseconds.
+    pub repin_interval_ms: u64,
+    /// Hedge a shard fetch whose in-flight time exceeds its path's p95
+    /// latency estimate by this percentage (duplicate on the current
+    /// best path, first response wins).  0 (default) = no hedging.
+    pub hedge_factor_pct: u64,
+    /// Hard cap on total duplicated (hedged) bytes per epoch; once the
+    /// budget is committed no further hedges are issued.
+    pub hedge_max_bytes: u64,
 
     // --- COS ----------------------------------------------------------
     pub storage_nodes: usize,
@@ -208,6 +239,11 @@ impl Default for HapiConfig {
             path_rates: Vec::new(),
             aggregate_bandwidth: None,
             path_latency_us: 0,
+            path_queue_model: false,
+            repin_threshold_pct: 0,
+            repin_interval_ms: 200,
+            hedge_factor_pct: 0,
+            hedge_max_bytes: 64 << 20,
             storage_nodes: 3,
             replicas: 2,
             storage_read_rate: None,
@@ -272,6 +308,7 @@ impl HapiConfig {
                     .copied()
                     .unwrap_or(self.bandwidth),
                 latency,
+                queue_model: self.path_queue_model,
             })
             .collect();
         crate::netsim::TopologySpec {
@@ -331,6 +368,21 @@ impl HapiConfig {
                 }
                 "path_latency_us" => {
                     self.path_latency_us = v.as_u64()?
+                }
+                "path_queue_model" => {
+                    self.path_queue_model = v.as_bool()?
+                }
+                "repin_threshold_pct" => {
+                    self.repin_threshold_pct = v.as_u64()?
+                }
+                "repin_interval_ms" => {
+                    self.repin_interval_ms = v.as_u64()?
+                }
+                "hedge_factor_pct" => {
+                    self.hedge_factor_pct = v.as_u64()?
+                }
+                "hedge_max_bytes" => {
+                    self.hedge_max_bytes = v.as_u64()?
                 }
                 "storage_nodes" => self.storage_nodes = v.as_usize()?,
                 "storage_read_rate_mbps" => {
@@ -409,6 +461,17 @@ impl HapiConfig {
         }
         self.path_latency_us =
             args.parse_or("path-latency-us", self.path_latency_us)?;
+        if args.flag("path-queue-model") {
+            self.path_queue_model = true;
+        }
+        self.repin_threshold_pct = args
+            .parse_or("repin-threshold-pct", self.repin_threshold_pct)?;
+        self.repin_interval_ms =
+            args.parse_or("repin-interval-ms", self.repin_interval_ms)?;
+        self.hedge_factor_pct =
+            args.parse_or("hedge-factor-pct", self.hedge_factor_pct)?;
+        self.hedge_max_bytes =
+            args.parse_or("hedge-max-bytes", self.hedge_max_bytes)?;
         self.storage_nodes = args.parse_or("storage-nodes", self.storage_nodes)?;
         self.replicas = args.parse_or("replicas", self.replicas)?;
         self.object_samples =
@@ -487,6 +550,13 @@ impl HapiConfig {
                 self.path_rates.len(),
                 self.net_paths
             )));
+        }
+        if self.repin_threshold_pct > 100 {
+            return Err(Error::Config(
+                "repin_threshold_pct is a percentage of the per-path \
+                 mean; must be ≤ 100"
+                    .into(),
+            ));
         }
         // Ids ride the JSON header (and config files) as f64: above
         // 2^53 they would silently round, which could merge two pinned
@@ -611,6 +681,23 @@ impl HapiConfig {
             (
                 "path_latency_us",
                 Json::num(self.path_latency_us as f64),
+            ),
+            ("path_queue_model", Json::Bool(self.path_queue_model)),
+            (
+                "repin_threshold_pct",
+                Json::num(self.repin_threshold_pct as f64),
+            ),
+            (
+                "repin_interval_ms",
+                Json::num(self.repin_interval_ms as f64),
+            ),
+            (
+                "hedge_factor_pct",
+                Json::num(self.hedge_factor_pct as f64),
+            ),
+            (
+                "hedge_max_bytes",
+                Json::num(self.hedge_max_bytes as f64),
             ),
             ("storage_nodes", Json::num(self.storage_nodes as f64)),
             ("replicas", Json::num(self.replicas as f64)),
@@ -825,6 +912,55 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = HapiConfig::default();
         bad.net_paths = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn transport_scheduler_knobs_parse_roundtrip_and_validate() {
+        let cfg = HapiConfig::from_args(&args(&[
+            "--repin-threshold-pct",
+            "60",
+            "--repin-interval-ms",
+            "50",
+            "--hedge-factor-pct",
+            "100",
+            "--hedge-max-bytes",
+            "262144",
+            "--net-paths",
+            "2",
+            "--path-latency-us",
+            "500",
+            "--path-queue-model",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.repin_threshold_pct, 60);
+        assert_eq!(cfg.repin_interval_ms, 50);
+        assert_eq!(cfg.hedge_factor_pct, 100);
+        assert_eq!(cfg.hedge_max_bytes, 262_144);
+        assert!(cfg.path_queue_model);
+        let spec = cfg.topology_spec();
+        assert!(spec.paths.iter().all(|p| p.queue_model));
+
+        // …and the knobs survive a JSON roundtrip.
+        let mut cfg2 = HapiConfig::default();
+        cfg2.merge_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.repin_threshold_pct, 60);
+        assert_eq!(cfg2.repin_interval_ms, 50);
+        assert_eq!(cfg2.hedge_factor_pct, 100);
+        assert_eq!(cfg2.hedge_max_bytes, 262_144);
+        assert!(cfg2.path_queue_model);
+
+        // Defaults: scheduler off, queue model off — static pinning,
+        // constant latency, byte-identical to PR 4 behaviour.
+        let d = HapiConfig::default();
+        assert_eq!(d.repin_threshold_pct, 0);
+        assert_eq!(d.hedge_factor_pct, 0);
+        assert!(!d.path_queue_model);
+        assert!(!d.topology_spec().paths[0].queue_model);
+
+        // The threshold is a percentage of the mean.
+        let mut bad = HapiConfig::default();
+        bad.repin_threshold_pct = 101;
         assert!(bad.validate().is_err());
     }
 

@@ -204,23 +204,27 @@ impl CosConnection {
     /// connection is returned to the slot **only on success** — an
     /// errored connection is dropped so the slot reconnects on its next
     /// use, which is what makes the sharded engine's retry land on a
-    /// *healthy* link.  Every client-side pool (Hapi, BASELINE,
-    /// ALL_IN_COS) goes through this helper so the invariant lives in
-    /// one place.
+    /// *healthy* link.  The slot caches the network `path` the
+    /// connection was opened for: when the transport scheduler re-pins
+    /// the slot to a different path, the cached connection (old proxy,
+    /// old link) is dropped and the slot reconnects to the new front
+    /// end.  Every client-side pool (Hapi, BASELINE, ALL_IN_COS) goes
+    /// through this helper so both invariants live in one place.
     pub fn with_pooled<T>(
-        slot: &std::sync::Mutex<Option<CosConnection>>,
+        slot: &std::sync::Mutex<Option<(usize, CosConnection)>>,
+        path: usize,
         addr: &str,
         link: &Link,
         f: impl FnOnce(&mut CosConnection) -> Result<T>,
     ) -> Result<T> {
         let mut guard = slot.lock().unwrap();
         let mut conn = match guard.take() {
-            Some(c) => c,
-            None => CosConnection::connect(addr, link.clone())?,
+            Some((p, c)) if p == path => c,
+            _ => CosConnection::connect(addr, link.clone())?,
         };
         let result = f(&mut conn);
         if result.is_ok() {
-            *guard = Some(conn);
+            *guard = Some((path, conn));
         }
         result
     }

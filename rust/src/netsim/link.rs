@@ -16,21 +16,49 @@
 //!   charges, so the client can read total bytes moved without summing
 //!   paths;
 //! - an optional fixed per-frame **latency** (one-way propagation per
-//!   direction), modeling a longer route to a remote proxy.
+//!   direction), modeling a longer route to a remote proxy;
+//! - an optional **queueing-delay model** (`path_queue_model` knob):
+//!   per-frame latency grows with the path's recent utilisation —
+//!   `latency × (1 + ρ/(1−ρ))`, the M/M/1 sojourn-over-service ratio
+//!   with the configured `latency` as the constant service time and
+//!   ρ the EWMA-measured offered load over the path's shaped rate
+//!   (capped at [`RHO_MAX`] so the term stays finite at saturation).
+//!   A loaded front end then *looks* loaded — fetch latency rises
+//!   before the token bucket fully starves — which is what gives the
+//!   client's hedger a realistic straggler signal and fig16c its
+//!   sharper knee.  Needs both a shaped rate (ρ is load/rate) and a
+//!   nonzero base `latency`; on an unshaped or zero-latency path the
+//!   model is inert.
 //!
 //! The plain [`Link::shaped`]/[`Link::unshaped`] constructors carry
 //! none of these — they behave exactly as the single-link model always
 //! did.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::bucket::TokenBucket;
 
 /// Shape bytes in chunks so concurrent streams interleave fairly (both
 /// across connections on one path and across paths on the aggregate).
 const CHUNK: u64 = 64 * 1024;
+
+/// Averaging window for the queue model's offered-load EWMA, seconds.
+const QUEUE_TAU: f64 = 0.25;
+
+/// Utilisation cap for the M/M/1 term: ρ/(1−ρ) at 0.95 is a 19×
+/// latency inflation — saturated, but finite and monotone.
+const RHO_MAX: f64 = 0.95;
+
+/// Exponentially-decayed byte meter behind the queueing-delay model:
+/// `acc / QUEUE_TAU` approximates the bytes/sec recently offered to
+/// the path.  A mutex is fine here — every user of this state is
+/// about to sleep for the latency it computes.
+struct QueueState {
+    acc_bytes: f64,
+    last: Instant,
+}
 
 #[derive(Debug, Default)]
 pub struct LinkStats {
@@ -69,6 +97,9 @@ pub struct Link {
     nic_stats: Option<Arc<LinkStats>>,
     /// Fixed one-way propagation delay charged per frame per direction.
     latency: Duration,
+    /// Utilisation meter for the queueing-delay model (`None` = the
+    /// classic constant-latency behaviour).
+    queue: Option<Arc<Mutex<QueueState>>>,
 }
 
 impl Link {
@@ -81,6 +112,7 @@ impl Link {
             stats: Arc::new(LinkStats::default()),
             nic_stats: None,
             latency: Duration::ZERO,
+            queue: None,
         }
     }
 
@@ -92,17 +124,20 @@ impl Link {
             stats: Arc::new(LinkStats::default()),
             nic_stats: None,
             latency: Duration::ZERO,
+            queue: None,
         }
     }
 
     /// One path of a multi-path topology: its own optional bucket, an
     /// optional aggregate (client-NIC) bucket shared with sibling
-    /// paths, the shared NIC meter, and a fixed per-frame latency.
+    /// paths, the shared NIC meter, a fixed per-frame latency, and
+    /// optionally the utilisation-dependent queueing-delay model.
     pub(crate) fn path(
         rate: Option<u64>,
         latency: Duration,
         aggregate: Option<Arc<TokenBucket>>,
         nic_stats: Arc<LinkStats>,
+        queue_model: bool,
     ) -> Self {
         Link {
             bucket: rate
@@ -111,6 +146,12 @@ impl Link {
             stats: Arc::new(LinkStats::default()),
             nic_stats: Some(nic_stats),
             latency,
+            queue: queue_model.then(|| {
+                Arc::new(Mutex::new(QueueState {
+                    acc_bytes: 0.0,
+                    last: Instant::now(),
+                }))
+            }),
         }
     }
 
@@ -120,7 +161,7 @@ impl Link {
         if let Some(nic) = &self.nic_stats {
             nic.tx.fetch_add(n, Ordering::Relaxed);
         }
-        self.delay();
+        self.delay(n);
         self.shape(n);
     }
 
@@ -130,14 +171,40 @@ impl Link {
         if let Some(nic) = &self.nic_stats {
             nic.rx.fetch_add(n, Ordering::Relaxed);
         }
-        self.delay();
+        self.delay(n);
         self.shape(n);
     }
 
-    fn delay(&self) {
-        if !self.latency.is_zero() {
-            std::thread::sleep(self.latency);
+    /// The path's current utilisation estimate ρ ∈ [0, RHO_MAX]:
+    /// recently offered bytes/sec over the shaped rate, after folding
+    /// this frame's `n` bytes in.  0 without the queue model, a shaped
+    /// rate, or recent load.
+    fn utilisation(&self, n: u64) -> f64 {
+        let (Some(q), Some(rate)) = (&self.queue, self.rate()) else {
+            return 0.0;
+        };
+        let mut s = q.lock().unwrap();
+        let now = Instant::now();
+        let dt = now.duration_since(s.last).as_secs_f64();
+        s.acc_bytes = s.acc_bytes * (-dt / QUEUE_TAU).exp() + n as f64;
+        s.last = now;
+        ((s.acc_bytes / QUEUE_TAU) / rate.max(1) as f64).min(RHO_MAX)
+    }
+
+    fn delay(&self, n: u64) {
+        if self.latency.is_zero() {
+            return;
         }
+        let mut wait = self.latency;
+        if self.queue.is_some() {
+            // M/M/1 sojourn over service: the constant `latency` is
+            // the service time, the queueing term scales it by
+            // ρ/(1−ρ) — monotone in utilisation, zero when idle
+            // (pinned in `tests/netsim_props.rs`).
+            let rho = self.utilisation(n);
+            wait += self.latency.mul_f64(rho / (1.0 - rho));
+        }
+        std::thread::sleep(wait);
     }
 
     fn shape(&self, n: u64) {
@@ -232,8 +299,13 @@ mod tests {
         // thing slowing the transfer.
         let agg =
             Arc::new(TokenBucket::new(4 * 1024 * 1024, 64 * 1024));
-        let link =
-            Link::path(None, Duration::ZERO, Some(agg), nic.clone());
+        let link = Link::path(
+            None,
+            Duration::ZERO,
+            Some(agg),
+            nic.clone(),
+            false,
+        );
         let start = Instant::now();
         link.recv(1024 * 1024);
         assert!(
@@ -248,7 +320,7 @@ mod tests {
     fn path_latency_is_charged_per_frame() {
         let nic = Arc::new(LinkStats::default());
         let link =
-            Link::path(None, Duration::from_millis(20), None, nic);
+            Link::path(None, Duration::from_millis(20), None, nic, false);
         let start = Instant::now();
         link.send(10);
         link.recv(10);

@@ -27,12 +27,16 @@ use std::time::Duration;
 use super::bucket::TokenBucket;
 use super::link::{Link, LinkStats};
 
-/// One path's shape: its dedicated rate (`None` = unshaped) and a fixed
-/// one-way propagation delay charged per frame per direction.
+/// One path's shape: its dedicated rate (`None` = unshaped), a fixed
+/// one-way propagation delay charged per frame per direction, and
+/// whether the per-frame delay grows with the path's utilisation (the
+/// M/M/1-style queueing model — see [`super::link`]; it needs both a
+/// shaped rate and a nonzero latency to have any effect).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PathSpec {
     pub rate: Option<u64>,
     pub latency: Duration,
+    pub queue_model: bool,
 }
 
 impl PathSpec {
@@ -40,6 +44,7 @@ impl PathSpec {
         PathSpec {
             rate: Some(rate),
             latency: Duration::ZERO,
+            queue_model: false,
         }
     }
 
@@ -47,6 +52,7 @@ impl PathSpec {
         PathSpec {
             rate: None,
             latency: Duration::ZERO,
+            queue_model: false,
         }
     }
 }
@@ -66,6 +72,7 @@ impl TopologySpec {
             paths: vec![PathSpec {
                 rate,
                 latency: Duration::ZERO,
+                queue_model: false,
             }],
             aggregate_rate: None,
         }
@@ -96,6 +103,7 @@ impl Topology {
                     p.latency,
                     aggregate.clone(),
                     nic_stats.clone(),
+                    p.queue_model,
                 )
             })
             .collect();

@@ -142,6 +142,133 @@ fn paths_share_the_aggregate_fairly() {
     );
 }
 
+/// Queueing-delay model: with `path_queue_model` on, a path's
+/// per-frame latency is **monotone in its utilisation** — idle frames
+/// pay ~the constant service latency, moderate load pays visibly
+/// more, and doubling the offered load raises it again (the
+/// M/M/1-style `latency × (1 + ρ/(1−ρ))` term).  This is the
+/// straggler signal the client's hedger keys off.
+#[test]
+fn queueing_delay_is_monotone_in_utilisation() {
+    let lat = Duration::from_millis(5);
+    let spec = TopologySpec {
+        paths: vec![PathSpec {
+            // Fast enough that the token bucket's own shaping stays in
+            // the background (frames ride burst credit): the measured
+            // growth is the queueing term, not token starvation.
+            rate: Some(32 * MIB),
+            latency: lat,
+            queue_model: true,
+        }],
+        aggregate_rate: None,
+    };
+    let net = Arc::new(Topology::new(&spec));
+
+    // Mean per-frame wall time under `threads` concurrent senders
+    // pushing 64 KiB frames back to back.
+    let mean_frame = |threads: usize, frames: usize| -> f64 {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let net = net.clone();
+                std::thread::spawn(move || {
+                    let mut total = Duration::ZERO;
+                    for _ in 0..frames {
+                        let t0 = Instant::now();
+                        net.path(0).recv(64 * KIB);
+                        total += t0.elapsed();
+                    }
+                    total.as_secs_f64() / frames as f64
+                })
+            })
+            .collect();
+        let sum: f64 = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .sum();
+        sum / threads as f64
+    };
+
+    // Idle: single frames with long gaps — the EWMA load meter decays
+    // between them, so each frame pays ~the base latency.
+    let idle = {
+        let mut total = Duration::ZERO;
+        for _ in 0..5 {
+            std::thread::sleep(Duration::from_millis(60));
+            let t0 = Instant::now();
+            net.path(0).recv(16 * KIB);
+            total += t0.elapsed();
+        }
+        total.as_secs_f64() / 5.0
+    };
+    assert!(
+        idle < 2.0 * lat.as_secs_f64(),
+        "idle path must pay ~the constant latency: {idle:.4}s"
+    );
+
+    // Let the meter decay between phases so each measures its own
+    // load; phases run well past the meter's 0.25 s time constant so
+    // the utilisation estimate converges.
+    std::thread::sleep(Duration::from_millis(300));
+    let two = mean_frame(2, 40);
+    std::thread::sleep(Duration::from_millis(300));
+    let four = mean_frame(4, 40);
+
+    assert!(
+        two > idle * 1.25,
+        "moderate load must inflate latency: idle {idle:.4}s vs \
+         2-thread {two:.4}s"
+    );
+    assert!(
+        four > two * 1.05,
+        "doubling the load must inflate latency further: {two:.4}s \
+         vs {four:.4}s"
+    );
+    // And the model stays finite at saturation: RHO_MAX caps the term.
+    assert!(
+        four < 40.0 * lat.as_secs_f64(),
+        "queueing term exploded: {four:.4}s"
+    );
+}
+
+/// With the knob *off* (the default spec), the same workload pays the
+/// constant latency regardless of load — the model is opt-in.
+#[test]
+fn constant_latency_without_queue_model() {
+    let lat = Duration::from_millis(5);
+    let spec = TopologySpec {
+        paths: vec![PathSpec {
+            rate: Some(32 * MIB),
+            latency: lat,
+            queue_model: false,
+        }],
+        aggregate_rate: None,
+    };
+    let net = Arc::new(Topology::new(&spec));
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let net = net.clone();
+            std::thread::spawn(move || {
+                let mut total = Duration::ZERO;
+                for _ in 0..10 {
+                    let t0 = Instant::now();
+                    net.path(0).recv(64 * KIB);
+                    total += t0.elapsed();
+                }
+                total.as_secs_f64() / 10.0
+            })
+        })
+        .collect();
+    let mean: f64 = handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .sum::<f64>()
+        / 4.0;
+    assert!(
+        mean < 3.0 * lat.as_secs_f64(),
+        "constant-latency path inflated under load: {mean:.4}s"
+    );
+}
+
 /// Mid-run `set_rate` isolation: reshaping one path never bends a
 /// sibling's trajectory.  Path 1's transfer times stay at its own
 /// line rate both before and after path 0 is throttled to a crawl,

@@ -326,6 +326,85 @@ fn sharded_flaky_shards_recover_via_retry() {
     }
 }
 
+/// Metric-parity: `pipeline.connN.*` always reflects the connection
+/// slot that **actually served** each shard — for any depth / fanout /
+/// flaky-shard pattern, the per-slot success counts and bytes the
+/// fetch closure observes match the registry exactly, and failed first
+/// attempts are charged to no slot at all.  (Before the transport
+/// scheduler landed, a retry's combined two-attempt latency was
+/// charged to the retry slot; this pins the per-attempt accounting.)
+#[test]
+fn conn_metrics_attribute_to_the_serving_slot() {
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(seed ^ 0xA77B);
+        let depth = rng.range(1, 4) as usize;
+        let fanout = rng.range(2, 6) as usize;
+        let num_shards = rng.range(2, 24) as usize;
+        let per_iter = rng.range(1, 4) as usize;
+        let flaky_every = rng.range(2, 5) as usize;
+        let jobs = pipeline::jobs_for(num_shards, per_iter);
+        let reg = Registry::new();
+        // What the closure observed per slot: (successes, bytes).
+        let served = Mutex::new(vec![(0u64, 0u64); fanout]);
+
+        pipeline::run_sharded(
+            depth,
+            fanout,
+            &jobs,
+            &reg,
+            true,
+            |_| (),
+            |ctx, _: &(), job, shard_pos| {
+                let shard = job.shards[shard_pos];
+                if ctx.attempt == 0 && shard % flaky_every == 0 {
+                    return Err(hapi::Error::other("flaky"));
+                }
+                let bytes = (shard % 7 + 1) as u64;
+                let mut s = served.lock().unwrap();
+                s[ctx.conn].0 += 1;
+                s[ctx.conn].1 += bytes;
+                Ok(ShardFetched {
+                    payload: shard,
+                    bytes,
+                })
+            },
+            |job, _, parts| {
+                assert_eq!(parts, job.shards, "seed {seed}");
+                Ok(job.seq)
+            },
+            |_| Ok(()),
+        )
+        .unwrap();
+
+        let served = served.into_inner().unwrap();
+        for (c, &(count, bytes)) in served.iter().enumerate() {
+            assert_eq!(
+                reg.histogram(&format!("pipeline.conn{c}.fetch_ns"))
+                    .count(),
+                count,
+                "seed {seed}: conn {c} latency samples ≠ serves"
+            );
+            assert_eq!(
+                reg.counter(&format!("pipeline.conn{c}.bytes")).get(),
+                bytes,
+                "seed {seed}: conn {c} bytes ≠ served bytes"
+            );
+        }
+        // And the per-slot views merge into the pipeline totals.
+        let total: u64 = served.iter().map(|&(_, b)| b).sum();
+        assert_eq!(
+            reg.counter("pipeline.bytes").get(),
+            total,
+            "seed {seed}"
+        );
+        assert_eq!(
+            reg.histogram("pipeline.shard_fetch_ns").count(),
+            num_shards as u64,
+            "seed {seed}"
+        );
+    }
+}
+
 /// The `run` shim preserves the unsharded engine's metric contract:
 /// one `pipeline.fetch_ns` sample and one `pipeline.iterations` tick
 /// per job, bytes summed — for any depth and job count.

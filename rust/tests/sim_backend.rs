@@ -511,6 +511,201 @@ fn single_path_degradation_redecides_split_and_spares_copath_tenant() {
     );
 }
 
+/// The transport-scheduler invariant, end to end: goodput-aware
+/// re-pinning and hedged fetches change *routing and timing only* —
+/// the loss trajectory is **bitwise** identical with the scheduler on
+/// or off, while the byte accounting proves slots actually migrated
+/// off a degraded path (the `pipeline.pathN.bytes` shift) and hedged
+/// bytes respect the configured hard cap.
+#[test]
+fn repin_and_hedging_keep_loss_bitwise_and_migrate_slots() {
+    struct Run {
+        loss: Vec<u32>,
+        path_bytes: [u64; 2],
+        repins: u64,
+        hedge_bytes: u64,
+        splits: Vec<usize>,
+    }
+    let run = |dynamic: bool| -> Run {
+        let mut cfg = sim_cfg();
+        cfg.net_paths = 2;
+        cfg.bandwidth = Some(2_000_000);
+        cfg.pipeline_depth = 2;
+        cfg.fetch_fanout = 2;
+        cfg.train_batch = 20; // 1 shard per iteration
+        cfg.client_id = 2; // even id: slot i → path i
+        if dynamic {
+            cfg.repin_threshold_pct = 60;
+            cfg.repin_interval_ms = 10;
+            cfg.hedge_factor_pct = 50;
+            cfg.hedge_max_bytes = 512 * 1024;
+        }
+        let hedge_cap = cfg.hedge_max_bytes;
+        let bed = Testbed::launch(cfg).unwrap();
+        let (ds, labels) = bed.dataset("rp-ds", "simnet", 400).unwrap();
+        let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+        // One COS front end collapses mid-run (after the split
+        // decision, before the epoch's fetches — the per-path `tc`
+        // change the re-pinner must route around).
+        bed.net.set_path_rate(0, 50_000);
+        let stats = client.train_epoch(&ds, &labels).unwrap();
+        let r = Run {
+            loss: stats.loss.iter().map(|l| l.to_bits()).collect(),
+            path_bytes: [
+                bed.registry.counter("pipeline.path0.bytes").get(),
+                bed.registry.counter("pipeline.path1.bytes").get(),
+            ],
+            repins: bed.registry.counter("pipeline.repins").get(),
+            hedge_bytes: bed
+                .registry
+                .counter("pipeline.hedge_bytes")
+                .get(),
+            splits: stats.splits.clone(),
+        };
+        assert!(
+            r.hedge_bytes <= hedge_cap,
+            "hedged bytes {} exceed the configured cap {hedge_cap}",
+            r.hedge_bytes
+        );
+        bed.stop();
+        r
+    };
+
+    let fixed = run(false);
+    let moved = run(true);
+    // Bitwise: re-pinning and hedging may not change training values.
+    assert_eq!(
+        fixed.loss, moved.loss,
+        "transport scheduler changed the loss trajectory"
+    );
+    // Static pinning leaves the slot on the slow path all epoch…
+    assert_eq!(fixed.repins, 0);
+    assert!(
+        fixed.path_bytes[0] > 0 && fixed.path_bytes[1] > 0,
+        "static run must keep serving both paths: {:?}",
+        fixed.path_bytes
+    );
+    // …the scheduler migrates it and the bytes shift to the healthy
+    // path (some path-0 bytes remain from the pre-migration samples).
+    assert!(
+        moved.repins >= 1,
+        "no slot migrated off the degraded path"
+    );
+    assert!(
+        moved.path_bytes[1] > 2 * moved.path_bytes[0],
+        "bytes never shifted to the healthy path: {:?}",
+        moved.path_bytes
+    );
+    // Neither run re-decided its split: routing is beneath Algorithm 1.
+    assert!(moved.splits.iter().all(|&s| s == moved.splits[0]));
+    assert_eq!(fixed.splits, moved.splits);
+}
+
+/// Re-pinning is tenant-local: a mid-run single-path degradation makes
+/// the multi-slot tenant migrate off the slow path, while a co-tenant
+/// pinned to the healthy sibling sees no split re-decision churn and
+/// keeps a bitwise-identical trajectory to running alone.
+#[test]
+fn slot_migration_spares_the_copath_tenant() {
+    let base_cfg = || {
+        let mut cfg = sim_cfg();
+        cfg.net_paths = 2;
+        cfg.bandwidth = Some(netsim::mbps(100.0));
+        cfg.pipeline_depth = 2;
+        cfg
+    };
+    // The migrating tenant: two slots over both paths, scheduler on.
+    let mover_cfg = || {
+        let mut cfg = base_cfg();
+        cfg.fetch_fanout = 2;
+        cfg.client_id = 2; // even: slot i → path i
+        cfg.repin_threshold_pct = 60;
+        cfg.repin_interval_ms = 10;
+        cfg.hedge_factor_pct = 50;
+        cfg
+    };
+    // The co-path tenant: one slot pinned to healthy path 1, adaptive
+    // split on (the churn detector), scheduler off.
+    let copath_cfg = || {
+        let mut cfg = base_cfg();
+        cfg.fetch_fanout = 1;
+        cfg.client_id = 1; // odd: slot 0 → path 1
+        cfg.adaptive_split = true;
+        cfg.split_window_secs = 0.1;
+        cfg
+    };
+
+    // Reference: the co-path tenant alone, same degraded topology.
+    let solo: Vec<u32> = {
+        let bed = Testbed::launch(copath_cfg()).unwrap();
+        let (ds, labels) =
+            bed.dataset("mig-ds", "simnet", 240).unwrap();
+        let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+        bed.net.set_path_rate(0, 50_000);
+        let stats = client.train_epoch(&ds, &labels).unwrap();
+        bed.stop();
+        stats.loss.iter().map(|l| l.to_bits()).collect()
+    };
+
+    let bed = Testbed::launch(base_cfg()).unwrap();
+    let (ds, labels) = bed.dataset("mig-ds", "simnet", 240).unwrap();
+    let (mv_ds, mv_labels) =
+        bed.dataset("mig-mv", "simnet", 400).unwrap();
+    let mk_client = |cfg: hapi::config::HapiConfig| {
+        // Private registries: each tenant's pipeline.pathN.* stays its
+        // own, so the migration is observable per tenant.
+        hapi::client::HapiClient::from_backend(
+            bed.app("simnet").unwrap(),
+            bed.backend("simnet").unwrap(),
+            cfg,
+            bed.addrs(),
+            bed.net.clone(),
+            DeviceKind::Gpu,
+            None,
+        )
+    };
+    let mover = mk_client(mover_cfg());
+    let copath = mk_client(copath_cfg());
+    let initial = copath.split.split_idx;
+
+    bed.net.set_path_rate(0, 50_000);
+    let (mv_stats, co_stats) = std::thread::scope(|scope| {
+        let hm = scope
+            .spawn(|| mover.train_epoch(&mv_ds, &mv_labels).unwrap());
+        let hc =
+            scope.spawn(|| copath.train_epoch(&ds, &labels).unwrap());
+        (hm.join().unwrap(), hc.join().unwrap())
+    });
+
+    // The mover migrated off the degraded path…
+    assert!(
+        mover.registry().counter("pipeline.repins").get() >= 1,
+        "mover never re-pinned"
+    );
+    let p0 = mover.registry().counter("pipeline.path0.bytes").get();
+    let p1 = mover.registry().counter("pipeline.path1.bytes").get();
+    assert!(
+        p1 > p0,
+        "mover's bytes never shifted off the slow path: {p0} vs {p1}"
+    );
+    assert!(mv_stats.iterations > 0);
+    // …and the co-path tenant saw zero split re-decision churn and an
+    // unchanged trajectory, despite the migrated traffic joining its
+    // path.
+    assert!(
+        co_stats.splits.iter().all(|&s| s == initial),
+        "co-path tenant re-decided: {:?}",
+        co_stats.splits
+    );
+    let co_loss: Vec<u32> =
+        co_stats.loss.iter().map(|l| l.to_bits()).collect();
+    assert_eq!(
+        co_loss, solo,
+        "co-path tenant's trajectory changed under sibling migration"
+    );
+    bed.stop();
+}
+
 /// The weak-client story holds on the sim backend with modeled time:
 /// the pipeline hides COS latency for a compute-bound CPU client too.
 #[test]
