@@ -220,6 +220,16 @@ pub trait Transport: Sync {
         0
     }
 
+    /// Network path the *retry* of a failed attempt should use.
+    /// Defaults to [`Transport::route`]; a policy that opportunistically
+    /// redirects first attempts (e.g. probe fetches onto quiet paths)
+    /// overrides this to keep the last-chance retry on the slot's
+    /// pinned path — a retry routed onto a dead path would fail the
+    /// shard outright.
+    fn route_retry(&self, conn: usize) -> usize {
+        self.route(conn)
+    }
+
     /// Whether this policy can ever hedge (stable for the whole run).
     /// `false` (the default) lets the engine skip all hedge
     /// bookkeeping — no in-flight watch list, no race flags to settle,
@@ -851,7 +861,8 @@ where
                             used = ShardCtx {
                                 conn: (w + 1) % fanout,
                                 attempt: 1,
-                                path: transport.route((w + 1) % fanout),
+                                path: transport
+                                    .route_retry((w + 1) % fanout),
                                 hedge: false,
                             };
                             retries.inc();

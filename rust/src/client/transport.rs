@@ -45,9 +45,18 @@
 //! `micro_hotpaths.rs` pins the update's cost, since it runs on every
 //! shard completion.
 //!
-//! Known limitation: a fully-drained path stops producing samples, so
-//! its estimate goes stale and slots do not migrate *back* after a
-//! recovery; probing a drained path is future work.
+//! A fully-drained path would stop producing samples, freezing its
+//! estimate at the degraded value forever.  **Probe fetches** close
+//! that loop (`probe_interval_ms`, active only while re-pinning is
+//! on): when a path has hosted no slot and produced no sample for a
+//! probe interval, the next first-attempt fetch is routed onto it as a
+//! probe (`pipeline.probes` counts them; retries are never probed —
+//! see [`Transport::route_retry`]).  A sample landing after such a
+//! quiet spell *replaces* the stale goodput estimate instead of being
+//! EWMA-folded into it, so one probe is enough to observe a recovery.
+//! The re-pin pass then migrates slots *back*: a slot living away from
+//! its static home returns as soon as the home path is healthy again
+//! (`pipeline.repins_back`, also counted in `pipeline.repins`).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -91,6 +100,13 @@ struct PathState {
     /// Delivered (winner) payload bytes — the client's per-window
     /// bandwidth re-measurement reads their sum.
     rx: AtomicU64,
+    /// Epoch-clock ns of the most recent estimator sample (0 = none
+    /// yet).  Drives both probe eligibility (no sample for a probe
+    /// interval) and the stale-estimate reset in `observe`.
+    last_sample_ns: AtomicU64,
+    /// Epoch-clock ns of the last probe claimed for this path — rate
+    /// limits probes to one per interval per path.
+    last_probe_ns: AtomicU64,
     /// `pipeline.path<i>.bytes` / `pipeline.path<i>.fetch_ns`:
     /// winner-only, so per-path sums merge into `pipeline.bytes`.
     bytes: Arc<Counter>,
@@ -112,6 +128,9 @@ pub struct TransportScheduler {
     /// Dynamic slot→path map, seeded with the static
     /// [`super::path_for_slot`] pinning.
     slots: Vec<AtomicUsize>,
+    /// Each slot's static home path — the re-pin pass migrates a
+    /// displaced slot back here once the home is healthy again.
+    static_paths: Vec<usize>,
     repin_threshold_pct: u64,
     repin_interval: Duration,
     /// Epoch clock for the amortised re-pin interval check.
@@ -126,7 +145,13 @@ pub struct TransportScheduler {
     hedge_committed: AtomicU64,
     /// Largest winner shard seen — the conservative per-hedge reserve.
     max_shard_bytes: AtomicU64,
+    /// How long a path may stay sample-quiet before a first-attempt
+    /// fetch is redirected onto it as a probe (zero = probing off;
+    /// only active while re-pinning is on).
+    probe_interval: Duration,
     repins: Arc<Counter>,
+    repins_back: Arc<Counter>,
+    probes: Arc<Counter>,
     hedge_bytes: Arc<Counter>,
 }
 
@@ -161,6 +186,8 @@ impl TransportScheduler {
                     lat_dev_ns: AtomicU64::new(0),
                     samples: AtomicU64::new(0),
                     rx: AtomicU64::new(0),
+                    last_sample_ns: AtomicU64::new(0),
+                    last_probe_ns: AtomicU64::new(0),
                     bytes: registry
                         .counter(&format!("pipeline.path{p}.bytes")),
                     fetch_ns: registry.histogram(&format!(
@@ -169,16 +196,17 @@ impl TransportScheduler {
                 }
             })
             .collect();
-        let slots = (0..fanout.max(1))
-            .map(|s| {
-                AtomicUsize::new(super::path_for_slot(
-                    client_id, num_paths, s,
-                ))
-            })
+        let static_paths: Vec<usize> = (0..fanout.max(1))
+            .map(|s| super::path_for_slot(client_id, num_paths, s))
+            .collect();
+        let slots = static_paths
+            .iter()
+            .map(|&p| AtomicUsize::new(p))
             .collect();
         TransportScheduler {
             paths,
             slots,
+            static_paths,
             repin_threshold_pct: cfg.repin_threshold_pct.min(100),
             repin_interval: Duration::from_millis(cfg.repin_interval_ms),
             started: Instant::now(),
@@ -187,7 +215,10 @@ impl TransportScheduler {
             hedge_cap: cfg.hedge_max_bytes,
             hedge_committed: AtomicU64::new(0),
             max_shard_bytes: AtomicU64::new(0),
+            probe_interval: Duration::from_millis(cfg.probe_interval_ms),
             repins: registry.counter("pipeline.repins"),
+            repins_back: registry.counter("pipeline.repins_back"),
+            probes: registry.counter("pipeline.probes"),
             hedge_bytes: registry.counter("pipeline.hedge_bytes"),
         }
     }
@@ -225,6 +256,55 @@ impl TransportScheduler {
     /// Current path pinned to connection slot `slot`.
     pub fn slot_path(&self, slot: usize) -> usize {
         self.slots[slot % self.slots.len()].load(Ordering::Relaxed)
+    }
+
+    /// If some path has gone sample-quiet for a probe interval while
+    /// hosting no slot, claim the calling fetch as a **probe** onto it
+    /// (at most one per interval per path, elected by CAS).  Without
+    /// probes a fully-evacuated path would never produce another
+    /// sample, so its estimate — and the slots that fled it — could
+    /// never recover.  Only active while re-pinning is on: with the
+    /// scheduler in static-pinning mode, routing must stay
+    /// byte-identical to the static map.
+    fn probe_target(&self) -> Option<usize> {
+        let interval_ns = self.probe_interval.as_nanos() as u64;
+        if interval_ns == 0
+            || self.repin_threshold_pct == 0
+            || self.paths.len() < 2
+        {
+            return None;
+        }
+        let now_ns = self.started.elapsed().as_nanos() as u64;
+        for (i, p) in self.paths.iter().enumerate() {
+            let last = p.last_sample_ns.load(Ordering::Relaxed);
+            if now_ns.saturating_sub(last) < interval_ns {
+                continue; // fresh sample: nothing to probe
+            }
+            if self
+                .slots
+                .iter()
+                .any(|s| s.load(Ordering::Relaxed) == i)
+            {
+                continue; // hosts slots: natural traffic samples it
+            }
+            let claimed = p.last_probe_ns.load(Ordering::Relaxed);
+            if now_ns.saturating_sub(claimed) < interval_ns {
+                continue; // a probe already ran this window
+            }
+            if p.last_probe_ns
+                .compare_exchange(
+                    claimed,
+                    now_ns,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                self.probes.inc();
+                return Some(i);
+            }
+        }
+        None
     }
 
     /// The best-goodput path right now (hedges run here).
@@ -292,28 +372,46 @@ impl TransportScheduler {
         };
         let healthy: Vec<usize> =
             (0..est.len()).filter(|&i| !degraded(i)).collect();
-        if healthy.is_empty() || healthy.len() == est.len() {
+        if healthy.is_empty() {
             return;
         }
         let mut next = 0usize;
-        for slot in &self.slots {
+        for (s, slot) in self.slots.iter().enumerate() {
             let cur = slot.load(Ordering::Relaxed);
+            let home = self.static_paths[s];
             if cur < est.len() && degraded(cur) {
+                // Evacuate: round-robin over the healthy paths.
                 slot.store(
                     healthy[next % healthy.len()],
                     Ordering::Relaxed,
                 );
                 next += 1;
                 self.repins.inc();
+            } else if cur != home && !degraded(home) {
+                // Migrate back: the slot's static home recovered
+                // (probe fetches un-staled its estimate), so undo the
+                // earlier evacuation and restore the static layout.
+                slot.store(home, Ordering::Relaxed);
+                self.repins.inc();
+                self.repins_back.inc();
             }
         }
     }
 
     /// Lock-free EWMA fold of one completed attempt into `path`'s
     /// estimator (goodput skipped for zero-byte payloads — ALL_IN_COS
-    /// responses carry only a loss scalar).
+    /// responses carry only a loss scalar).  A sample landing after a
+    /// probe interval of quiet *replaces* the goodput estimate instead
+    /// of being folded in: the stale history describes a path state
+    /// (degraded, or pre-degradation healthy) that no longer exists,
+    /// so one probe fetch is enough to re-learn the path.
     fn observe(&self, path: usize, bytes: u64, latency: Duration) {
         let Some(p) = self.paths.get(path) else { return };
+        let now_ns = self.started.elapsed().as_nanos() as u64;
+        let prev_ns = p.last_sample_ns.swap(now_ns, Ordering::Relaxed);
+        let probe_ns = self.probe_interval.as_nanos() as u64;
+        let stale = probe_ns > 0
+            && now_ns.saturating_sub(prev_ns) > probe_ns;
         let lat_ns = (latency.as_nanos() as u64).max(1);
         let mean = p.lat_mean_ns.load(Ordering::Relaxed);
         if mean == 0 {
@@ -333,7 +431,7 @@ impl TransportScheduler {
             self.max_shard_bytes.fetch_max(bytes, Ordering::Relaxed);
             let sample = bytes as f64 / latency.as_secs_f64().max(1e-9);
             let cur = p.goodput_est();
-            let new = if cur > 0.0 {
+            let new = if cur > 0.0 && !stale {
                 cur + GOODPUT_ALPHA * (sample - cur)
             } else {
                 sample
@@ -346,6 +444,15 @@ impl TransportScheduler {
 
 impl Transport for TransportScheduler {
     fn route(&self, conn: usize) -> usize {
+        match self.probe_target() {
+            Some(probe) => probe,
+            None => self.slot_path(conn),
+        }
+    }
+
+    fn route_retry(&self, conn: usize) -> usize {
+        // Never probe a retry: it is the shard's last attempt, and a
+        // quiet path may be quiet because it is dead.
         self.slot_path(conn)
     }
 
@@ -704,6 +811,70 @@ mod tests {
                 <= cfg.hedge_max_bytes,
             "duplicated bytes exceeded the configured cap"
         );
+    }
+
+    #[test]
+    fn probes_unstale_a_drained_path_and_slots_migrate_back() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000, 1_000_000]);
+        let mut cfg = sched_cfg(60, 0, 0);
+        cfg.probe_interval_ms = 5;
+        let s = TransportScheduler::new(&cfg, 2, &net, 2, &reg);
+        // Degrade path 0 via samples; its slot evacuates to path 1.
+        for _ in 0..24 {
+            s.on_fetch(
+                ctx(0, 0, false),
+                50_000,
+                Duration::from_millis(1000),
+                true,
+            );
+            s.on_fetch(
+                ctx(1, 1, false),
+                1_000_000,
+                Duration::from_millis(1000),
+                true,
+            );
+        }
+        assert_eq!(s.slot_path(0), 1, "slot must evacuate first");
+        // Path 0 hosts no slot and goes sample-quiet past the probe
+        // interval: the next first-attempt route is claimed as a
+        // probe — once per window, and never for a retry.
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(s.route(0), 0, "quiet drained path must be probed");
+        assert_eq!(reg.counter("pipeline.probes").get(), 1);
+        assert_eq!(s.route_retry(0), 1, "retries are never probed");
+        assert_eq!(s.route(0), 1, "probe rate limit must bind");
+        // The probe returns at the recovered line rate: the stale
+        // estimate is *replaced* (not EWMA-folded), and the displaced
+        // slot migrates back to its static home.
+        s.on_fetch(
+            ctx(0, 0, false),
+            1_000_000,
+            Duration::from_millis(1000),
+            true,
+        );
+        assert!(
+            s.goodput_estimate(0) > 900_000.0,
+            "stale estimate must be replaced by the probe sample: {}",
+            s.goodput_estimate(0)
+        );
+        assert_eq!(s.slot_path(0), 0, "slot must migrate back home");
+        assert_eq!(reg.counter("pipeline.repins_back").get(), 1);
+    }
+
+    #[test]
+    fn static_mode_never_probes() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000, 1_000_000]);
+        // Re-pinning off: the scheduler must stay byte-identical to
+        // static pinning, so path 1 (which hosts no slot at fanout 1)
+        // is never probed however long it stays quiet.
+        let mut cfg = sched_cfg(0, 0, 0);
+        cfg.probe_interval_ms = 1;
+        let s = TransportScheduler::new(&cfg, 2, &net, 1, &reg);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(s.route(0), 0);
+        assert_eq!(reg.counter("pipeline.probes").get(), 0);
     }
 
     #[test]

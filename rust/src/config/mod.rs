@@ -41,7 +41,9 @@
 //! - transport scheduler (`repin_threshold_pct`/`--repin-threshold-pct`,
 //!   default 0 = static pinning; `repin_interval_ms`/
 //!   `--repin-interval-ms`; `hedge_factor_pct`/`--hedge-factor-pct`,
-//!   default 0 = no hedging; `hedge_max_bytes`/`--hedge-max-bytes`) —
+//!   default 0 = no hedging; `hedge_max_bytes`/`--hedge-max-bytes`;
+//!   `probe_interval_ms`/`--probe-interval-ms`, probe fetches on
+//!   sample-quiet drained paths while re-pinning is on) —
 //!   the goodput-aware slot→path re-pinner and hedged shard fetches
 //!   ([`crate::client::TransportScheduler`]).  Both default off: the
 //!   default config reproduces static pinning byte-identically.
@@ -103,6 +105,13 @@ pub struct HapiConfig {
     /// Hard cap on total duplicated (hedged) bytes per epoch; once the
     /// budget is committed no further hedges are issued.
     pub hedge_max_bytes: u64,
+    /// Probe a path that has produced no goodput sample for this many
+    /// milliseconds while hosting no connection slot: the next
+    /// first-attempt fetch is routed onto it so its estimate can
+    /// un-stale and evacuated slots can migrate back after a recovery.
+    /// 0 = probing off.  Only active while `repin_threshold_pct` > 0 —
+    /// in static-pinning mode routing never deviates from the map.
+    pub probe_interval_ms: u64,
 
     // --- COS ----------------------------------------------------------
     pub storage_nodes: usize,
@@ -244,6 +253,7 @@ impl Default for HapiConfig {
             repin_interval_ms: 200,
             hedge_factor_pct: 0,
             hedge_max_bytes: 64 << 20,
+            probe_interval_ms: 500,
             storage_nodes: 3,
             replicas: 2,
             storage_read_rate: None,
@@ -384,6 +394,9 @@ impl HapiConfig {
                 "hedge_max_bytes" => {
                     self.hedge_max_bytes = v.as_u64()?
                 }
+                "probe_interval_ms" => {
+                    self.probe_interval_ms = v.as_u64()?
+                }
                 "storage_nodes" => self.storage_nodes = v.as_usize()?,
                 "storage_read_rate_mbps" => {
                     let m = v.as_f64()?;
@@ -472,6 +485,8 @@ impl HapiConfig {
             args.parse_or("hedge-factor-pct", self.hedge_factor_pct)?;
         self.hedge_max_bytes =
             args.parse_or("hedge-max-bytes", self.hedge_max_bytes)?;
+        self.probe_interval_ms =
+            args.parse_or("probe-interval-ms", self.probe_interval_ms)?;
         self.storage_nodes = args.parse_or("storage-nodes", self.storage_nodes)?;
         self.replicas = args.parse_or("replicas", self.replicas)?;
         self.object_samples =
@@ -698,6 +713,10 @@ impl HapiConfig {
             (
                 "hedge_max_bytes",
                 Json::num(self.hedge_max_bytes as f64),
+            ),
+            (
+                "probe_interval_ms",
+                Json::num(self.probe_interval_ms as f64),
             ),
             ("storage_nodes", Json::num(self.storage_nodes as f64)),
             ("replicas", Json::num(self.replicas as f64)),
@@ -926,6 +945,8 @@ mod tests {
             "100",
             "--hedge-max-bytes",
             "262144",
+            "--probe-interval-ms",
+            "75",
             "--net-paths",
             "2",
             "--path-latency-us",
@@ -937,6 +958,7 @@ mod tests {
         assert_eq!(cfg.repin_interval_ms, 50);
         assert_eq!(cfg.hedge_factor_pct, 100);
         assert_eq!(cfg.hedge_max_bytes, 262_144);
+        assert_eq!(cfg.probe_interval_ms, 75);
         assert!(cfg.path_queue_model);
         let spec = cfg.topology_spec();
         assert!(spec.paths.iter().all(|p| p.queue_model));
@@ -948,6 +970,7 @@ mod tests {
         assert_eq!(cfg2.repin_interval_ms, 50);
         assert_eq!(cfg2.hedge_factor_pct, 100);
         assert_eq!(cfg2.hedge_max_bytes, 262_144);
+        assert_eq!(cfg2.probe_interval_ms, 75);
         assert!(cfg2.path_queue_model);
 
         // Defaults: scheduler off, queue model off — static pinning,

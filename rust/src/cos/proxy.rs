@@ -13,7 +13,7 @@
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::error::Result;
@@ -77,6 +77,7 @@ pub struct Proxy {
     addr: String,
     accept_thread: Option<JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
+    shared: Arc<Shared>,
 }
 
 struct Shared {
@@ -91,6 +92,15 @@ struct Shared {
     /// Requests served by this front end (`cos.path<id>.requests`) —
     /// the per-path load split of a multi-proxy testbed.
     path_requests: Arc<crate::metrics::Counter>,
+    /// Fail-stop switch ([`Proxy::fail`]/[`Proxy::recover`]): while
+    /// set, established connections are torn down, new ones are
+    /// dropped at accept, and no request is served.  The listener
+    /// itself stays bound — a restarted front end comes back on the
+    /// same address, as a restarted process behind a stable VIP would.
+    crashed: AtomicBool,
+    /// Clones of every accepted stream, so [`Proxy::fail`] can
+    /// fail-stop connections that are blocked inside a read.
+    conns: Mutex<Vec<TcpStream>>,
 }
 
 impl Proxy {
@@ -125,9 +135,12 @@ impl Proxy {
             },
             registry,
             path_requests,
+            crashed: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
         });
 
         let sd = shutdown.clone();
+        let accept_shared = shared.clone();
         let accept_thread = std::thread::Builder::new()
             .name("cos-accept".into())
             .spawn(move || {
@@ -137,7 +150,24 @@ impl Proxy {
                 while !sd.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let shared = shared.clone();
+                            // A crashed front end refuses service: the
+                            // connection is dropped before a single
+                            // byte is served.
+                            if accept_shared
+                                .crashed
+                                .load(Ordering::Relaxed)
+                            {
+                                drop(stream);
+                                continue;
+                            }
+                            if let Ok(clone) = stream.try_clone() {
+                                accept_shared
+                                    .conns
+                                    .lock()
+                                    .unwrap()
+                                    .push(clone);
+                            }
+                            let shared = accept_shared.clone();
                             std::thread::Builder::new()
                                 .name("cos-conn".into())
                                 .spawn(move || serve_conn(stream, shared))
@@ -160,11 +190,39 @@ impl Proxy {
             addr,
             accept_thread: Some(accept_thread),
             shutdown,
+            shared,
         })
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// Fail-stop this front end mid-run: every established connection
+    /// is shut down (clients blocked in a read observe an error, not a
+    /// hang), new connections are dropped at accept, and no further
+    /// request is served until [`Proxy::recover`].  The listener stays
+    /// bound, so the address remains valid across the crash — clients
+    /// reconnect to the same endpoint once the proxy restarts.
+    pub fn fail(&self) {
+        self.shared.crashed.store(true, Ordering::Relaxed);
+        let mut conns = self.shared.conns.lock().unwrap();
+        for c in conns.drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Bring a [`Proxy::fail`]ed front end back: new connections are
+    /// accepted and served again.  Connections killed by the crash stay
+    /// dead — clients must reconnect (the pooled-connection layer does
+    /// this on its next fetch).
+    pub fn recover(&self) {
+        self.shared.crashed.store(false, Ordering::Relaxed);
+    }
+
+    /// Whether this front end is currently failed.
+    pub fn is_failed(&self) -> bool {
+        self.shared.crashed.load(Ordering::Relaxed)
     }
 
     pub fn stop(mut self) {
@@ -200,6 +258,12 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                 return;
             }
         };
+        // A crash that lands between the read and the dispatch still
+        // fail-stops the request: drop the connection unanswered, like
+        // a process killed mid-flight.
+        if shared.crashed.load(Ordering::Relaxed) {
+            return;
+        }
         let _green = shared
             .green_thread
             .as_ref()
@@ -426,6 +490,35 @@ mod tests {
         assert_eq!(reg.counter("cos.path1.requests").get(), 2);
         p0.stop();
         p1.stop();
+    }
+
+    #[test]
+    fn fail_recover_cycle_kills_conns_then_serves_again() {
+        let (proxy, _cluster) = start_proxy(Arc::new(NoPost));
+        let mut conn =
+            CosConnection::connect(proxy.addr(), Link::unshaped()).unwrap();
+        conn.put(&"k".into(), vec![1; 8]).unwrap();
+
+        proxy.fail();
+        assert!(proxy.is_failed());
+        // The established connection was fail-stopped: the next
+        // request errors instead of hanging.
+        assert!(conn.get(&"k".into()).is_err());
+        // A fresh connection reaches the (still bound) listener but is
+        // dropped unanswered — requests on it fail too.
+        if let Ok(mut c2) =
+            CosConnection::connect(proxy.addr(), Link::unshaped())
+        {
+            assert!(c2.get(&"k".into()).is_err());
+        }
+
+        proxy.recover();
+        assert!(!proxy.is_failed());
+        // Reconnect on the *same address* and the data is still there.
+        let mut c3 =
+            CosConnection::connect(proxy.addr(), Link::unshaped()).unwrap();
+        assert_eq!(c3.get(&"k".into()).unwrap(), vec![1; 8]);
+        proxy.stop();
     }
 
     #[test]

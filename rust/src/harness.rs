@@ -126,6 +126,25 @@ impl Testbed {
         self.proxies.iter().map(|p| p.addr().to_string()).collect()
     }
 
+    /// Fail-stop the front end serving `path` mid-run (scenario chaos:
+    /// established connections die, new ones are refused) — see
+    /// [`Proxy::fail`].  The address stays valid for the eventual
+    /// [`Testbed::restart_proxy`].
+    pub fn crash_proxy(&self, path: usize) {
+        self.proxies[path].fail();
+    }
+
+    /// Bring a crashed front end back on its original address — see
+    /// [`Proxy::recover`].
+    pub fn restart_proxy(&self, path: usize) {
+        self.proxies[path].recover();
+    }
+
+    /// Whether `path`'s front end is currently crashed.
+    pub fn proxy_failed(&self, path: usize) -> bool {
+        self.proxies[path].is_failed()
+    }
+
     pub fn app(&self, model: &str) -> Result<AppProfile> {
         Ok(AppProfile::new(self.models.get(model)?, self.cfg.scale))
     }

@@ -29,6 +29,8 @@
 //! - [`baseline`] — BASELINE / ALL_IN_COS / static-freeze-split
 //!   competitors from §7.
 //! - [`theory`] — the §4 cost model (Eqs. 1–3).
+//! - [`scenario`] — seed-replayable chaos scenarios over the testbed
+//!   (the fuzzer's script generator, executor and invariant checks).
 //! - [`util`], [`cli`], [`exec`], [`metrics`], [`benchkit`], [`workload`],
 //!   [`config`] — substrates (no serde/clap/tokio/criterion offline; we
 //!   build what we need).
@@ -48,6 +50,7 @@ pub mod model;
 pub mod netsim;
 pub mod profiler;
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod split;
 pub mod theory;

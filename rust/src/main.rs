@@ -9,7 +9,12 @@
 //!   stack (COS + proxy + Hapi server + client), reporting the loss
 //!   curve and transfer stats;
 //! - `serve`     — start the COS + Hapi server and print its address
-//!   (foreground; ^C to stop).
+//!   (foreground; ^C to stop);
+//! - `scenario`  — replay a chaos scenario through the full sim stack
+//!   (reference run + chaos run) and check the fuzzer's invariants;
+//!   `--scenario-seed <u64>` replays one randomized script (the
+//!   documented one-command replay of a failing fuzz seed), no seed
+//!   runs the canned regression scenarios.
 
 use hapi::cli::Args;
 use hapi::config::{BackendKind, HapiConfig};
@@ -54,6 +59,7 @@ fn run(args: &Args) -> hapi::Result<()> {
         Some("split") => split(&cfg, args),
         Some("train") => train(cfg, args),
         Some("serve") => serve(cfg),
+        Some("scenario") => scenario_cmd(args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
@@ -66,7 +72,7 @@ fn run(args: &Args) -> hapi::Result<()> {
 
 fn usage() {
     println!(
-        "usage: hapi <info|profile|split|train|serve> [options]\n\n\
+        "usage: hapi <info|profile|split|train|serve|scenario> [options]\n\n\
          common options:\n\
          \x20 --artifacts DIR        artifacts directory (default: discover)\n\
          \x20 --scale tiny|paper     profile scale for analytics\n\
@@ -84,7 +90,9 @@ fn usage() {
          \x20 --baseline             (train) run the BASELINE competitor\n\
          \x20 --weak-client          (train) CPU-only client device model\n\
          \x20 --samples N            (train) dataset size\n\
-         \x20 --epochs N             (train) epochs to run"
+         \x20 --epochs N             (train) epochs to run\n\
+         \x20 --scenario-seed S      (scenario) replay one randomized chaos\n\
+         \x20                        script by seed (default: canned scenarios)"
     );
 }
 
@@ -224,6 +232,87 @@ fn train(cfg: HapiConfig, args: &Args) -> hapi::Result<()> {
     }
     println!("total: {}", fmt_duration(start.elapsed()));
     bed.stop();
+    Ok(())
+}
+
+/// Replay a chaos scenario: run the script's reference (chaos-free)
+/// and chaos executions back to back and check the fuzzer's three
+/// invariants.  This is the one-command replay for a failing fuzz
+/// seed: `hapi scenario --scenario-seed <u64>`.
+fn scenario_cmd(args: &Args) -> hapi::Result<()> {
+    use hapi::scenario::{self, ScenarioScript};
+    let scripts: Vec<(String, ScenarioScript)> =
+        match args.get("scenario-seed") {
+            Some(raw) => {
+                let seed: u64 = raw.parse().map_err(|_| {
+                    hapi::Error::Config(format!(
+                        "--scenario-seed: cannot parse {raw:?} as u64"
+                    ))
+                })?;
+                vec![(format!("seed {seed}"), ScenarioScript::random(seed))]
+            }
+            None => vec![
+                (
+                    "degrade->recover (canned)".to_string(),
+                    ScenarioScript::degrade_recover_migrate_back(),
+                ),
+                (
+                    "crash->restart (canned)".to_string(),
+                    ScenarioScript::proxy_crash_restart(),
+                ),
+            ],
+        };
+    let mut failed = false;
+    for (label, script) in &scripts {
+        println!(
+            "scenario {label}: {} paths @ {} B/s, {} tenant(s), \
+             {} event(s)",
+            script.paths,
+            script.path_rate,
+            script.tenants.len(),
+            script.events.len(),
+        );
+        for e in &script.events {
+            println!("  t+{:>4} ms  {:?}", e.at.as_millis(), e.kind);
+        }
+        let reference = scenario::run(script, false)?;
+        let chaos = scenario::run(script, true)?;
+        let mut t = Table::new(
+            &format!("{label}: tenants under chaos"),
+            &["tenant", "model", "iters", "expected", "status"],
+        );
+        for tn in &chaos.tenants {
+            t.row(vec![
+                tn.tenant.to_string(),
+                script.tenants[tn.tenant].model.to_string(),
+                tn.iterations.to_string(),
+                tn.expected_iterations.to_string(),
+                tn.error.clone().unwrap_or_else(|| "ok".to_string()),
+            ]);
+        }
+        t.print();
+        println!(
+            "makespan: reference {}, chaos {}",
+            fmt_duration(reference.makespan),
+            fmt_duration(chaos.makespan),
+        );
+        let violations = scenario::verify(script, &reference, &chaos);
+        if violations.is_empty() {
+            println!("PASS: all invariants held (seed {})\n", script.seed);
+        } else {
+            failed = true;
+            println!("FAIL: invariant violations (seed {}):", script.seed);
+            for v in &violations {
+                println!("  - {v}");
+            }
+            println!();
+        }
+    }
+    if failed {
+        return Err(hapi::Error::Config(
+            "scenario invariants violated (see above)".to_string(),
+        ));
+    }
     Ok(())
 }
 

@@ -95,8 +95,11 @@ pub struct Link {
     stats: Arc<LinkStats>,
     /// Shared NIC meter additionally charged by topology path links.
     nic_stats: Option<Arc<LinkStats>>,
-    /// Fixed one-way propagation delay charged per frame per direction.
-    latency: Duration,
+    /// One-way propagation delay charged per frame per direction, in
+    /// nanoseconds.  Atomic (and shared across clones) so jitter can be
+    /// injected mid-run via [`Link::set_latency`] without tearing down
+    /// the path.
+    latency_ns: Arc<AtomicU64>,
     /// Utilisation meter for the queueing-delay model (`None` = the
     /// classic constant-latency behaviour).
     queue: Option<Arc<Mutex<QueueState>>>,
@@ -111,7 +114,7 @@ impl Link {
             aggregate: None,
             stats: Arc::new(LinkStats::default()),
             nic_stats: None,
-            latency: Duration::ZERO,
+            latency_ns: Arc::new(AtomicU64::new(0)),
             queue: None,
         }
     }
@@ -123,7 +126,7 @@ impl Link {
             aggregate: None,
             stats: Arc::new(LinkStats::default()),
             nic_stats: None,
-            latency: Duration::ZERO,
+            latency_ns: Arc::new(AtomicU64::new(0)),
             queue: None,
         }
     }
@@ -145,7 +148,9 @@ impl Link {
             aggregate,
             stats: Arc::new(LinkStats::default()),
             nic_stats: Some(nic_stats),
-            latency,
+            latency_ns: Arc::new(AtomicU64::new(
+                latency.as_nanos() as u64,
+            )),
             queue: queue_model.then(|| {
                 Arc::new(Mutex::new(QueueState {
                     acc_bytes: 0.0,
@@ -192,17 +197,18 @@ impl Link {
     }
 
     fn delay(&self, n: u64) {
-        if self.latency.is_zero() {
+        let base = self.latency();
+        if base.is_zero() {
             return;
         }
-        let mut wait = self.latency;
+        let mut wait = base;
         if self.queue.is_some() {
             // M/M/1 sojourn over service: the constant `latency` is
             // the service time, the queueing term scales it by
             // ρ/(1−ρ) — monotone in utilisation, zero when idle
             // (pinned in `tests/netsim_props.rs`).
             let rho = self.utilisation(n);
-            wait += self.latency.mul_f64(rho / (1.0 - rho));
+            wait += base.mul_f64(rho / (1.0 - rho));
         }
         std::thread::sleep(wait);
     }
@@ -241,6 +247,21 @@ impl Link {
         if let Some(bucket) = &self.bucket {
             bucket.set_rate(rate);
         }
+    }
+
+    /// The link's current per-frame propagation delay.
+    pub fn latency(&self) -> Duration {
+        Duration::from_nanos(self.latency_ns.load(Ordering::Relaxed))
+    }
+
+    /// Change the per-frame propagation delay mid-run (latency jitter
+    /// injection).  All clones see the new value — they share the
+    /// counter.  Raising the latency also scales the queue model's
+    /// service time; setting it to zero disables the delay (and the
+    /// queue model, which needs a nonzero service time) entirely.
+    pub fn set_latency(&self, latency: Duration) {
+        self.latency_ns
+            .store(latency.as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -314,6 +335,28 @@ mod tests {
         );
         assert_eq!(link.stats().rx_bytes(), 1024 * 1024);
         assert_eq!(nic.rx_bytes(), 1024 * 1024);
+    }
+
+    #[test]
+    fn set_latency_is_shared_across_clones() {
+        let nic = Arc::new(LinkStats::default());
+        let link =
+            Link::path(None, Duration::from_millis(1), None, nic, false);
+        let clone = link.clone();
+        clone.set_latency(Duration::from_millis(30));
+        assert_eq!(link.latency(), Duration::from_millis(30));
+        let start = Instant::now();
+        link.recv(10);
+        assert!(
+            start.elapsed() >= Duration::from_millis(25),
+            "frame must pay the jittered latency: {:?}",
+            start.elapsed()
+        );
+        // Zeroing the latency turns the delay off entirely.
+        link.set_latency(Duration::ZERO);
+        let start = Instant::now();
+        link.recv(10);
+        assert!(start.elapsed() < Duration::from_millis(20));
     }
 
     #[test]

@@ -171,6 +171,21 @@ impl Topology {
         self.paths[path].set_rate(rate);
     }
 
+    /// Inject latency jitter on one path mid-run: replace its per-frame
+    /// propagation delay (a longer route after a failover, a loaded
+    /// front end).  Unlike [`Topology::set_path_rate`] this works on
+    /// every path — the latency counter always exists, even when the
+    /// path was built with zero latency.  With `path_queue_model` on,
+    /// the new value also becomes the queue model's service time.
+    pub fn set_path_latency(&self, path: usize, latency: Duration) {
+        self.paths[path].set_latency(latency);
+    }
+
+    /// The `path`-th path's current per-frame propagation delay.
+    pub fn path_latency(&self, path: usize) -> Duration {
+        self.paths[path].latency()
+    }
+
     /// Re-shape *every* path to `rate` — on a one-path topology this is
     /// exactly the old `Link::set_rate` whole-link change.  Unshaped
     /// paths are skipped (no bucket to reshape), same as
@@ -242,6 +257,26 @@ mod tests {
         assert_eq!(t.path(0).rate(), Some(10));
         assert_eq!(t.path(1).rate(), Some(1000));
         assert_eq!(t.total_rate(), Some(1010));
+    }
+
+    #[test]
+    fn per_path_latency_jitter_is_injectable_mid_run() {
+        let spec = TopologySpec {
+            paths: vec![PathSpec::unshaped(), PathSpec::unshaped()],
+            aggregate_rate: None,
+        };
+        let t = Topology::new(&spec);
+        assert_eq!(t.path_latency(0), Duration::ZERO);
+        t.set_path_latency(0, Duration::from_millis(25));
+        assert_eq!(t.path_latency(0), Duration::from_millis(25));
+        // The sibling keeps its own (zero) latency.
+        assert_eq!(t.path_latency(1), Duration::ZERO);
+        let start = Instant::now();
+        t.path(0).recv(10);
+        assert!(start.elapsed() >= Duration::from_millis(20));
+        let start = Instant::now();
+        t.path(1).recv(10);
+        assert!(start.elapsed() < Duration::from_millis(20));
     }
 
     #[test]

@@ -1,0 +1,841 @@
+//! Seed-replayable chaos scenarios over the in-process testbed.
+//!
+//! A [`ScenarioScript`] is a *deterministic* description of one
+//! multi-tenant run: the topology (paths, per-path rate/latency, queue
+//! model), a set of [`TenantPlan`]s (arrival offset, model, dataset
+//! size, pipeline shape, modeled device speed) and a time-ordered list
+//! of [`ScenarioEvent`]s — the chaos.  The event taxonomy covers every
+//! fault the transport stack claims to absorb:
+//!
+//! - **`DegradePath` / `RecoverPath`** — collapse one path's token
+//!   bucket to a fraction of its rate, later restore it (exercises
+//!   re-pinning away and, via probe fetches, migration *back*).
+//! - **`JitterLatency`** — change a path's propagation delay mid-run
+//!   (exercises the latency estimator and, with `queue_model` on, the
+//!   M/M/1 queueing term on top of the new base).
+//! - **`CrashProxy` / `RestartProxy`** — fail-stop one COS front end
+//!   and bring it back on the same address (exercises connection-error
+//!   retry routing and slot evacuation).
+//!
+//! Scripts come from three places: [`ScenarioScript::random`] derives
+//! one from a `u64` seed via [`crate::util::rng::Rng`] (the fuzzer's
+//! generator — same seed, same script, forever), and the canned
+//! constructors pin known-tricky shapes as regression scenarios.
+//!
+//! [`run`] executes a script against a freshly launched
+//! [`Testbed`]: one driver thread replays the events at their offsets
+//! while each tenant sleeps to its arrival, builds a private-registry
+//! [`HapiClient`], and trains one epoch.  Running the same script with
+//! `chaos = false` yields the *reference* run — no events, no arrival
+//! stagger, same data and config — and [`verify`] checks the three
+//! global invariants between the pair:
+//!
+//! 1. **Bitwise loss identity** — chaos may move bytes and time, never
+//!    values: each tenant's loss trajectory must equal the reference's
+//!    bit for bit.
+//! 2. **No lost work** — every tenant either completes all
+//!    `samples / train_batch` iterations or its failure is explained
+//!    by a scripted proxy crash.
+//! 3. **Metrics conservation** — per tenant,
+//!    `Σ pipeline.conn*.bytes == pipeline.bytes == Σ pipeline.path*.bytes`
+//!    (winner-only accounting must agree across both decompositions),
+//!    hedge ledgers are zero when no hedge ran, and the planner's
+//!    `ba.grants` ledger matches `ba.requests` on clean OOM-free runs.
+//!
+//! Replay: every failure report carries the script seed; rerun it with
+//! `hapi scenario --scenario-seed <u64>` (or
+//! `SCENARIO_FUZZ_SEED=<u64> cargo test -q --test scenario_fuzz`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::client::{DatasetRef, HapiClient};
+use crate::config::HapiConfig;
+use crate::error::Result;
+use crate::harness::Testbed;
+use crate::metrics::Registry;
+use crate::model::SIM_MODELS;
+use crate::runtime::DeviceKind;
+use crate::util::rng::Rng;
+
+/// One chaos action, applied to the live testbed at its event time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Collapse `path`'s token bucket to `rate` bytes/sec.
+    DegradePath { path: usize, rate: u64 },
+    /// Restore `path` to the script's full `path_rate`.
+    RecoverPath { path: usize },
+    /// Set `path`'s propagation delay (base latency + jitter, or back
+    /// to base — the event carries the absolute value).
+    JitterLatency { path: usize, latency: Duration },
+    /// Fail-stop `path`'s COS front end: established connections die,
+    /// new ones are dropped.  The address stays valid.
+    CrashProxy { path: usize },
+    /// Bring a crashed front end back on its original address.
+    RestartProxy { path: usize },
+}
+
+/// An [`EventKind`] scheduled at an offset from scenario start.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioEvent {
+    pub at: Duration,
+    pub kind: EventKind,
+}
+
+/// One tenant's plan: when it arrives and what it trains.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantPlan {
+    pub tenant: usize,
+    /// Explicit planner-lane id.  Id 0 would auto-allocate from a
+    /// process-wide counter, making the static slot→path map depend on
+    /// how many clients earlier tests happened to build — scripted
+    /// tenants must be order-independent.
+    pub client_id: u64,
+    /// A built-in sim profile (`"simnet"` / `"simdeep"`).
+    pub model: &'static str,
+    /// Arrival offset from scenario start (zeroed in reference runs).
+    pub arrival: Duration,
+    /// Dataset size; a multiple of the sim config's `train_batch` (40)
+    /// so `expected_iterations` is exact.
+    pub samples: usize,
+    pub pipeline_depth: usize,
+    pub fetch_fanout: usize,
+    /// Modeled client device speed (`sim_compute_gflops`); affects
+    /// time only, never values — heterogeneous tenants stay bitwise
+    /// comparable to the reference.
+    pub gflops: f64,
+}
+
+/// A deterministic, seed-replayable scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioScript {
+    pub seed: u64,
+    pub paths: usize,
+    /// Healthy per-path rate, bytes/sec (every path starts here and
+    /// `RecoverPath` returns to it).
+    pub path_rate: u64,
+    /// Base propagation delay shared by all paths at start.
+    pub path_latency: Duration,
+    /// Model queueing delay on top of the base latency (M/M/1 term).
+    pub queue_model: bool,
+    pub tenants: Vec<TenantPlan>,
+    pub events: Vec<ScenarioEvent>,
+}
+
+impl ScenarioScript {
+    /// Derive a random-but-deterministic script from `seed`: same seed,
+    /// same script, on every machine, forever.  Generation keeps every
+    /// script *survivable*:
+    ///
+    /// - chaos comes in fault/clear pairs (degrade→recover,
+    ///   jitter→restore, crash→restart), the clear strictly after the
+    ///   fault, so each path's final scripted state is healthy;
+    /// - at most one path ever crashes per script, and when one does,
+    ///   every tenant's fanout is forced to `paths` so a shard retry
+    ///   always has a live front end to land on;
+    /// - degraded rates stay ≥ `path_rate / 7` — slow, never stuck.
+    pub fn random(seed: u64) -> ScenarioScript {
+        let mut rng = Rng::new(seed);
+        let paths = 2 + rng.usize_below(2);
+        let path_rate = 1_000_000 + 250_000 * rng.below(9);
+        let path_latency =
+            Duration::from_micros(*rng.choose(&[0u64, 200, 500, 1000]));
+        let queue_model = path_latency > Duration::ZERO && rng.bool();
+
+        let mut events: Vec<ScenarioEvent> = Vec::new();
+        let mut crash_path: Option<usize> = None;
+        for _ in 0..rng.usize_below(4) {
+            let at = Duration::from_millis(rng.range(40, 600));
+            let clear = at + Duration::from_millis(rng.range(120, 400));
+            let path = rng.usize_below(paths);
+            match rng.below(3) {
+                0 => {
+                    let rate = path_rate / rng.range(4, 7);
+                    events.push(ScenarioEvent {
+                        at,
+                        kind: EventKind::DegradePath { path, rate },
+                    });
+                    events.push(ScenarioEvent {
+                        at: clear,
+                        kind: EventKind::RecoverPath { path },
+                    });
+                }
+                1 => {
+                    let jitter =
+                        Duration::from_millis(rng.range(1, 4));
+                    events.push(ScenarioEvent {
+                        at,
+                        kind: EventKind::JitterLatency {
+                            path,
+                            latency: path_latency + jitter,
+                        },
+                    });
+                    events.push(ScenarioEvent {
+                        at: clear,
+                        kind: EventKind::JitterLatency {
+                            path,
+                            latency: path_latency,
+                        },
+                    });
+                }
+                _ => {
+                    let path = *crash_path.get_or_insert(path);
+                    events.push(ScenarioEvent {
+                        at,
+                        kind: EventKind::CrashProxy { path },
+                    });
+                    events.push(ScenarioEvent {
+                        at: clear,
+                        kind: EventKind::RestartProxy { path },
+                    });
+                }
+            }
+        }
+        // Stable sort: a pair's clear can never overtake its fault
+        // (strictly later), and equal-time cross-pair order follows
+        // push order — deterministic.
+        events.sort_by_key(|e| e.at);
+        let has_crash = crash_path.is_some();
+
+        let n_tenants = 1 + rng.usize_below(3);
+        let wave = Duration::from_millis(rng.range(80, 250));
+        let pattern = rng.below(3);
+        let tenants = (0..n_tenants)
+            .map(|t| {
+                let arrival = match pattern {
+                    // Burst: everyone at once.
+                    0 => Duration::ZERO,
+                    // Staggered ramp.
+                    1 => wave * t as u32,
+                    // Two waves.
+                    _ if t % 2 == 0 => Duration::ZERO,
+                    _ => wave,
+                };
+                TenantPlan {
+                    tenant: t,
+                    client_id: (t + 1) as u64,
+                    model: *rng.choose(&SIM_MODELS),
+                    arrival,
+                    samples: 40 * rng.range(2, 4) as usize,
+                    pipeline_depth: rng.range(1, 3) as usize,
+                    fetch_fanout: if has_crash {
+                        paths
+                    } else {
+                        rng.range(1, 3) as usize
+                    },
+                    gflops: *rng.choose(&[0.0, 4.0, 16.0]),
+                }
+            })
+            .collect();
+
+        ScenarioScript {
+            seed,
+            paths,
+            path_rate,
+            path_latency,
+            queue_model,
+            tenants,
+            events,
+        }
+    }
+
+    /// Canned regression: one tenant pinned across both paths of a
+    /// slow two-path net; path 0 degrades hard early and recovers
+    /// mid-run.  The run is sized (~300 KB over 200 KB/s) to outlive
+    /// the recovery by a wide margin, so the transport must first
+    /// re-pin slot 0 away (`pipeline.repins`), then — via a probe
+    /// fetch un-staling the drained path's estimate — migrate it
+    /// *back* (`pipeline.repins_back`).
+    pub fn degrade_recover_migrate_back() -> ScenarioScript {
+        ScenarioScript {
+            seed: 0x0d16_bacc,
+            paths: 2,
+            path_rate: 100_000,
+            path_latency: Duration::ZERO,
+            queue_model: false,
+            tenants: vec![TenantPlan {
+                tenant: 0,
+                client_id: 2,
+                model: "simnet",
+                arrival: Duration::ZERO,
+                samples: 800,
+                pipeline_depth: 2,
+                fetch_fanout: 2,
+                gflops: 0.0,
+            }],
+            events: vec![
+                ScenarioEvent {
+                    at: Duration::from_millis(60),
+                    kind: EventKind::DegradePath { path: 0, rate: 12_000 },
+                },
+                ScenarioEvent {
+                    at: Duration::from_millis(320),
+                    kind: EventKind::RecoverPath { path: 0 },
+                },
+            ],
+        }
+    }
+
+    /// Canned regression: two tenants mid-epoch when path 1's front
+    /// end fail-stops, then restarts on the same address.  With
+    /// `fanout == paths == 2` a shard retry always lands on the live
+    /// path, so both tenants must complete with reference-identical
+    /// loss despite dead connections and dropped accepts.
+    pub fn proxy_crash_restart() -> ScenarioScript {
+        ScenarioScript {
+            seed: 0x00c4_a511,
+            paths: 2,
+            path_rate: 300_000,
+            path_latency: Duration::ZERO,
+            queue_model: false,
+            tenants: vec![
+                TenantPlan {
+                    tenant: 0,
+                    client_id: 1,
+                    model: "simnet",
+                    arrival: Duration::ZERO,
+                    samples: 400,
+                    pipeline_depth: 2,
+                    fetch_fanout: 2,
+                    gflops: 0.0,
+                },
+                TenantPlan {
+                    tenant: 1,
+                    client_id: 2,
+                    model: "simdeep",
+                    arrival: Duration::from_millis(40),
+                    samples: 200,
+                    pipeline_depth: 2,
+                    fetch_fanout: 2,
+                    gflops: 4.0,
+                },
+            ],
+            events: vec![
+                ScenarioEvent {
+                    at: Duration::from_millis(100),
+                    kind: EventKind::CrashProxy { path: 1 },
+                },
+                ScenarioEvent {
+                    at: Duration::from_millis(450),
+                    kind: EventKind::RestartProxy { path: 1 },
+                },
+            ],
+        }
+    }
+
+    /// The testbed config this script runs under: sim backend, the
+    /// script's topology, and the full chaos-ready transport (re-pin,
+    /// probe, hedge) tuned for sub-second fault windows.
+    pub fn config(&self) -> HapiConfig {
+        let mut cfg = HapiConfig::sim();
+        cfg.seed = self.seed;
+        cfg.net_paths = self.paths;
+        cfg.bandwidth = Some(self.path_rate);
+        cfg.path_latency_us = self.path_latency.as_micros() as u64;
+        cfg.path_queue_model = self.queue_model;
+        cfg.repin_threshold_pct = 60;
+        cfg.repin_interval_ms = 10;
+        cfg.probe_interval_ms = 50;
+        cfg.hedge_factor_pct = 50;
+        cfg.hedge_max_bytes = 512 * 1024;
+        cfg
+    }
+
+    /// Whether any scripted event fail-stops a proxy (tenant failures
+    /// are tolerated by [`verify`] only in that case).
+    pub fn has_crash(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::CrashProxy { .. }))
+    }
+}
+
+/// What one tenant did in one run.
+#[derive(Clone, Debug)]
+pub struct TenantOutcome {
+    pub tenant: usize,
+    pub client_id: u64,
+    pub fanout: usize,
+    /// Per-iteration loss as raw bits (bitwise comparison currency).
+    pub loss_bits: Vec<u32>,
+    pub iterations: usize,
+    pub expected_iterations: usize,
+    /// `None` on success; a crash-window failure is tolerable when the
+    /// script crashes a proxy, anything else is an invariant breach.
+    pub error: Option<String>,
+    /// The tenant's *private* metrics registry — per-tenant transport
+    /// conservation needs its pipeline counters unmixed.
+    pub registry: Registry,
+}
+
+/// One full scenario execution.
+pub struct ScenarioOutcome {
+    pub tenants: Vec<TenantOutcome>,
+    /// The testbed's shared registry (planner/server instruments).
+    pub server_registry: Registry,
+    pub num_paths: usize,
+    pub makespan: Duration,
+}
+
+/// Execute `script` against a fresh testbed.  With `chaos = false`
+/// the events are not replayed and arrivals are zeroed — the
+/// *reference* run the chaos run is compared against.
+pub fn run(script: &ScenarioScript, chaos: bool) -> Result<ScenarioOutcome> {
+    let bed = Testbed::launch(script.config())?;
+    let mut data = Vec::with_capacity(script.tenants.len());
+    for plan in &script.tenants {
+        let name = format!("scn-t{}", plan.tenant);
+        data.push(bed.dataset(&name, plan.model, plan.samples)?);
+    }
+    let start = Instant::now();
+    let done = AtomicBool::new(false);
+    let tenants: Vec<TenantOutcome> = thread::scope(|s| {
+        if chaos && !script.events.is_empty() {
+            let bed = &bed;
+            let done = &done;
+            let events = &script.events;
+            let full_rate = script.path_rate;
+            s.spawn(move || {
+                for ev in events {
+                    // Sleep in slices so a finished run releases the
+                    // driver without waiting out the whole timeline.
+                    loop {
+                        if done.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let now = start.elapsed();
+                        if now >= ev.at {
+                            break;
+                        }
+                        thread::sleep(
+                            (ev.at - now).min(Duration::from_millis(20)),
+                        );
+                    }
+                    apply_event(bed, &ev.kind, full_rate);
+                }
+            });
+        }
+        let handles: Vec<_> = script
+            .tenants
+            .iter()
+            .zip(data.iter())
+            .map(|(plan, (ds, labels))| {
+                let bed = &bed;
+                s.spawn(move || {
+                    run_tenant(bed, plan, ds, labels, chaos, start)
+                })
+            })
+            .collect();
+        let out: Vec<TenantOutcome> = handles
+            .into_iter()
+            .map(|h| h.join().expect("tenant thread panicked"))
+            .collect();
+        done.store(true, Ordering::Relaxed);
+        out
+    });
+    let outcome = ScenarioOutcome {
+        tenants,
+        server_registry: bed.registry.clone(),
+        num_paths: bed.net.num_paths(),
+        makespan: start.elapsed(),
+    };
+    bed.stop();
+    Ok(outcome)
+}
+
+fn apply_event(bed: &Testbed, kind: &EventKind, full_rate: u64) {
+    match *kind {
+        EventKind::DegradePath { path, rate } => {
+            bed.net.set_path_rate(path, rate)
+        }
+        EventKind::RecoverPath { path } => {
+            bed.net.set_path_rate(path, full_rate)
+        }
+        EventKind::JitterLatency { path, latency } => {
+            bed.net.set_path_latency(path, latency)
+        }
+        EventKind::CrashProxy { path } => bed.crash_proxy(path),
+        EventKind::RestartProxy { path } => bed.restart_proxy(path),
+    }
+}
+
+fn run_tenant(
+    bed: &Testbed,
+    plan: &TenantPlan,
+    ds: &DatasetRef,
+    labels: &[i32],
+    chaos: bool,
+    start: Instant,
+) -> TenantOutcome {
+    let mut outcome = TenantOutcome {
+        tenant: plan.tenant,
+        client_id: plan.client_id,
+        fanout: plan.fetch_fanout,
+        loss_bits: Vec::new(),
+        iterations: 0,
+        expected_iterations: plan.samples / bed.cfg.train_batch,
+        error: None,
+        registry: Registry::new(),
+    };
+    if chaos && plan.arrival > Duration::ZERO {
+        let now = start.elapsed();
+        if plan.arrival > now {
+            thread::sleep(plan.arrival - now);
+        }
+    }
+    let mut cfg = bed.cfg.clone();
+    cfg.client_id = plan.client_id;
+    cfg.pipeline_depth = plan.pipeline_depth;
+    cfg.fetch_fanout = plan.fetch_fanout;
+    cfg.sim_compute_gflops = plan.gflops;
+    let client = match build_client(bed, plan.model, cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            outcome.error = Some(format!("construct: {e}"));
+            return outcome;
+        }
+    };
+    // Keep the client's default private registry (no `set_registry`):
+    // conservation checks need this tenant's counters unmixed.
+    outcome.registry = client.registry().clone();
+    match client.train_epoch(ds, labels) {
+        Ok(stats) => {
+            outcome.loss_bits =
+                stats.loss.iter().map(|l| l.to_bits()).collect();
+            outcome.iterations = stats.iterations;
+        }
+        Err(e) => outcome.error = Some(e.to_string()),
+    }
+    outcome
+}
+
+fn build_client(
+    bed: &Testbed,
+    model: &str,
+    cfg: HapiConfig,
+) -> Result<HapiClient> {
+    Ok(HapiClient::from_backend(
+        bed.app(model)?,
+        bed.backend(model)?,
+        cfg,
+        bed.addrs(),
+        bed.net.clone(),
+        DeviceKind::Gpu,
+        None,
+    ))
+}
+
+/// Check the three scenario invariants between a reference run and a
+/// chaos run of the same script.  Returns human-readable violations —
+/// empty means the script passed.  Non-panicking so both the fuzzer
+/// (which adds the replay seed to its panic message) and the
+/// `hapi scenario` replay subcommand can share it.
+pub fn verify(
+    script: &ScenarioScript,
+    reference: &ScenarioOutcome,
+    chaos: &ScenarioOutcome,
+) -> Vec<String> {
+    let mut v = Vec::new();
+    if reference.tenants.len() != chaos.tenants.len() {
+        v.push(format!(
+            "tenant count mismatch: reference {} vs chaos {}",
+            reference.tenants.len(),
+            chaos.tenants.len()
+        ));
+        return v;
+    }
+    let crash_scripted = script.has_crash();
+    for (r, c) in reference.tenants.iter().zip(&chaos.tenants) {
+        if let Some(e) = &r.error {
+            v.push(format!(
+                "tenant {}: failed even without chaos: {e}",
+                r.tenant
+            ));
+            continue;
+        }
+        match &c.error {
+            None => {
+                // Invariant 1: chaos moves bytes and time, not values.
+                if r.loss_bits != c.loss_bits {
+                    v.push(format!(
+                        "tenant {}: loss trajectory diverged under chaos \
+                         ({} vs {} iterations recorded)",
+                        c.tenant,
+                        r.loss_bits.len(),
+                        c.loss_bits.len()
+                    ));
+                }
+                // Invariant 2: no admitted work silently lost.
+                if c.iterations != c.expected_iterations {
+                    v.push(format!(
+                        "tenant {}: completed {}/{} iterations",
+                        c.tenant, c.iterations, c.expected_iterations
+                    ));
+                }
+            }
+            Some(e) if !crash_scripted => {
+                v.push(format!(
+                    "tenant {}: failed without a scripted crash: {e}",
+                    c.tenant
+                ));
+            }
+            // A scripted fail-stop may legitimately take a tenant
+            // down; losing it is not a lost grant.
+            Some(_) => {}
+        }
+    }
+    // Invariant 3: the metrics books balance — on both runs.
+    for (label, outcome) in
+        [("reference", reference), ("chaos", chaos)]
+    {
+        for t in &outcome.tenants {
+            if t.error.is_some() {
+                continue;
+            }
+            for m in conservation(&t.registry, t.fanout, outcome.num_paths)
+            {
+                v.push(format!("{label} tenant {}: {m}", t.tenant));
+            }
+        }
+        for m in planner_books(outcome) {
+            v.push(format!("{label} run: {m}"));
+        }
+    }
+    v
+}
+
+/// Per-tenant transport conservation over one private registry:
+/// winner-only byte accounting must agree whether decomposed by
+/// connection slot or by network path, and the hedge ledgers must be
+/// internally consistent.
+pub fn conservation(
+    reg: &Registry,
+    fanout: usize,
+    paths: usize,
+) -> Vec<String> {
+    let mut v = Vec::new();
+    let total = reg.counter("pipeline.bytes").get();
+    let conn_sum: u64 = (0..fanout)
+        .map(|c| reg.counter(&format!("pipeline.conn{c}.bytes")).get())
+        .sum();
+    if conn_sum != total {
+        v.push(format!(
+            "conn bytes {conn_sum} != pipeline bytes {total}"
+        ));
+    }
+    let path_sum: u64 = (0..paths)
+        .map(|p| reg.counter(&format!("pipeline.path{p}.bytes")).get())
+        .sum();
+    if path_sum != total {
+        v.push(format!(
+            "path bytes {path_sum} != pipeline bytes {total}"
+        ));
+    }
+    let hedges = reg.counter("pipeline.hedges").get();
+    if hedges == 0 {
+        for name in ["pipeline.hedge_bytes", "pipeline.hedge_wasted_bytes"]
+        {
+            let n = reg.counter(name).get();
+            if n != 0 {
+                v.push(format!("{name} = {n} with zero hedges"));
+            }
+        }
+    }
+    let wins = reg.counter("pipeline.hedge_wins").get();
+    if wins > hedges {
+        v.push(format!("hedge wins {wins} > hedges {hedges}"));
+    }
+    v
+}
+
+/// Planner-side accounting over the shared server registry.
+fn planner_books(outcome: &ScenarioOutcome) -> Vec<String> {
+    let mut v = Vec::new();
+    let reg = &outcome.server_registry;
+    let requests = reg.counter("ba.requests").get();
+    let grants = reg.counter("ba.grants").get();
+    if grants > requests {
+        v.push(format!(
+            "ba.grants {grants} > ba.requests {requests}"
+        ));
+    }
+    let clean = outcome.tenants.iter().all(|t| t.error.is_none());
+    let ooms = reg.counter("hapi.oom").get();
+    if clean && ooms == 0 && grants != requests {
+        // Every admitted request on a clean, OOM-free run must end in
+        // exactly one grant — a gap is a lost (or double) grant.
+        v.push(format!(
+            "ba.grants {grants} != ba.requests {requests} on a clean run"
+        ));
+    }
+    if clean && requests > 0 && grants == 0 {
+        v.push("requests admitted but no grants issued".into());
+    }
+    // The lane gauge can never exceed the distinct clients that ran.
+    let lanes = reg.gauge("ba.lanes_active").get();
+    if lanes > outcome.tenants.len() as i64 {
+        v.push(format!(
+            "ba.lanes_active {lanes} > {} tenants",
+            outcome.tenants.len()
+        ));
+    }
+    // When the planner gathered at all, every completed tenant's lane
+    // must have recorded its gather windows.
+    if reg.histogram("ba.gather_window_ns").count() > 0 {
+        for t in &outcome.tenants {
+            if t.error.is_some() {
+                continue;
+            }
+            let lane = reg.histogram(&format!(
+                "ba.lane.{}.gather_window_ns",
+                t.client_id
+            ));
+            if lane.count() == 0 {
+                v.push(format!(
+                    "tenant {} granted without lane gather metrics",
+                    t.tenant
+                ));
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_scripts_are_deterministic() {
+        assert_eq!(ScenarioScript::random(7), ScenarioScript::random(7));
+        assert_eq!(
+            ScenarioScript::random(u64::MAX),
+            ScenarioScript::random(u64::MAX)
+        );
+        assert_ne!(ScenarioScript::random(7), ScenarioScript::random(8));
+    }
+
+    #[test]
+    fn random_scripts_are_survivable() {
+        for seed in 0..200 {
+            let s = ScenarioScript::random(seed);
+            assert!((2..=3).contains(&s.paths), "seed {seed}");
+            assert!(s.path_rate >= 1_000_000, "seed {seed}");
+            assert!(!s.tenants.is_empty(), "seed {seed}");
+            // Events are time-ordered.
+            assert!(
+                s.events.windows(2).all(|w| w[0].at <= w[1].at),
+                "seed {seed}: events out of order"
+            );
+            let mut crashed_paths = std::collections::BTreeSet::new();
+            for e in &s.events {
+                match e.kind {
+                    EventKind::DegradePath { path, rate } => {
+                        assert!(path < s.paths, "seed {seed}");
+                        assert!(
+                            rate >= s.path_rate / 7,
+                            "seed {seed}: degrade too deep"
+                        );
+                    }
+                    EventKind::CrashProxy { path } => {
+                        crashed_paths.insert(path);
+                    }
+                    _ => {}
+                }
+            }
+            assert!(
+                crashed_paths.len() <= 1,
+                "seed {seed}: more than one path crashes"
+            );
+            // Every fault has a strictly later clearing action on the
+            // same path.
+            for (i, e) in s.events.iter().enumerate() {
+                let clears = |k: &EventKind, p: usize| match *k {
+                    EventKind::RecoverPath { path } => path == p,
+                    EventKind::RestartProxy { path } => path == p,
+                    _ => false,
+                };
+                match e.kind {
+                    EventKind::DegradePath { path, .. } => assert!(
+                        s.events[i + 1..].iter().any(|l| matches!(
+                            l.kind,
+                            EventKind::RecoverPath { path: p } if p == path
+                        )),
+                        "seed {seed}: degrade without recover"
+                    ),
+                    EventKind::CrashProxy { path } => assert!(
+                        s.events[i + 1..]
+                            .iter()
+                            .any(|l| clears(&l.kind, path)
+                                && matches!(
+                                    l.kind,
+                                    EventKind::RestartProxy { .. }
+                                )),
+                        "seed {seed}: crash without restart"
+                    ),
+                    _ => {}
+                }
+            }
+            for t in &s.tenants {
+                assert_eq!(t.samples % 40, 0, "seed {seed}");
+                assert!(t.client_id > 0, "seed {seed}");
+                assert!(t.pipeline_depth >= 1, "seed {seed}");
+                assert!(t.fetch_fanout >= 1, "seed {seed}");
+                if s.has_crash() {
+                    assert_eq!(
+                        t.fetch_fanout, s.paths,
+                        "seed {seed}: crash script needs full fanout"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn canned_scripts_have_regression_shapes() {
+        let m = ScenarioScript::degrade_recover_migrate_back();
+        assert_eq!(m.paths, 2);
+        assert!(matches!(
+            m.events[0].kind,
+            EventKind::DegradePath { path: 0, .. }
+        ));
+        assert!(matches!(
+            m.events[1].kind,
+            EventKind::RecoverPath { path: 0 }
+        ));
+        assert!(m.events[0].at < m.events[1].at);
+        assert_eq!(m.tenants[0].samples % 40, 0);
+
+        let c = ScenarioScript::proxy_crash_restart();
+        assert!(c.has_crash());
+        assert!(c
+            .tenants
+            .iter()
+            .all(|t| t.fetch_fanout == c.paths));
+        assert!(matches!(
+            c.events[0].kind,
+            EventKind::CrashProxy { path: 1 }
+        ));
+        assert!(matches!(
+            c.events[1].kind,
+            EventKind::RestartProxy { path: 1 }
+        ));
+    }
+
+    #[test]
+    fn script_config_maps_topology_and_chaos_knobs() {
+        let s = ScenarioScript::random(3);
+        let cfg = s.config();
+        assert_eq!(cfg.net_paths, s.paths);
+        assert_eq!(cfg.bandwidth, Some(s.path_rate));
+        assert_eq!(
+            cfg.path_latency_us,
+            s.path_latency.as_micros() as u64
+        );
+        assert_eq!(cfg.path_queue_model, s.queue_model);
+        assert_eq!(cfg.seed, s.seed);
+        assert!(cfg.repin_threshold_pct > 0, "re-pinning must be on");
+        assert!(cfg.probe_interval_ms > 0, "probing must be on");
+    }
+}

@@ -34,7 +34,10 @@
 //!
 //! Observability: every completed lane gather lands in the global
 //! `ba.gather_window_ns` histogram and the per-lane
-//! `ba.lane.<client_id>.gather_window_ns` histogram; `ba.lanes_active`
+//! `ba.lane.<client_id>.gather_window_ns` histogram; `ba.requests`
+//! counts admissions attempted and `ba.grants` the `Ok` grants issued
+//! (their difference is exactly the failed admissions — the
+//! conservation predicate the scenario fuzzer checks); `ba.lanes_active`
 //! tracks how many lanes currently hold un-granted requests, and
 //! `ba.burst_clamped` counts gathers whose reported burst exceeded
 //! [`MAX_GATHER_BURST`].  Per-lane metric cardinality is bounded: once
@@ -270,6 +273,7 @@ impl Planner {
             let batch = default_batch.min(b_max).max(1);
             let bytes = model_bytes + batch as u64 * per_sample;
             let lease = self.devices[device].admit(bytes)?;
+            self.registry.counter("ba.grants").inc();
             return Ok(Grant {
                 batch,
                 _lease: lease,
@@ -675,6 +679,7 @@ fn planner_loop(
                                     Arc::downgrade(&state),
                                 )),
                             }));
+                            registry.counter("ba.grants").inc();
                             made_progress = true;
                         }
                         Err(_) => {

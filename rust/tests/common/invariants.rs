@@ -1,0 +1,105 @@
+//! Shared end-to-end invariant helpers, included per test crate via
+//! `#[path = "common/invariants.rs"] mod invariants;` (the repo builds
+//! with `autotests = false`, so there is no implicit `common` crate).
+//!
+//! Three invariant families, shared by the classic e2e suite
+//! (`sim_backend.rs`) and the scenario fuzzer (`scenario_fuzz.rs`):
+//!
+//! - **Bitwise loss identity** — pipeline depth, fanout, paths,
+//!   re-pinning, hedging and chaos may change *timing*, never values.
+//! - **Metrics conservation** — winner-only byte accounting must agree
+//!   whether decomposed per connection slot or per network path, and
+//!   hedge ledgers must respect their cap.
+//! - **No lost grants** — every planner admission ends in exactly one
+//!   grant on an OOM-free run.
+
+#![allow(dead_code)]
+
+use hapi::metrics::Registry;
+
+/// Loss trajectory as raw bits: the currency of bitwise comparison.
+pub fn loss_bits(loss: &[f32]) -> Vec<u32> {
+    loss.iter().map(|l| l.to_bits()).collect()
+}
+
+/// Two runs computed the very same training values.
+pub fn assert_bitwise_loss_identity(a: &[u32], b: &[u32], ctx: &str) {
+    assert_eq!(
+        a.len(),
+        b.len(),
+        "{ctx}: iteration counts differ ({} vs {})",
+        a.len(),
+        b.len()
+    );
+    assert_eq!(a, b, "{ctx}: loss trajectory diverged");
+}
+
+/// Per-connection byte accounting covers every slot that moved data
+/// and sums to the pipeline total.  Returns the total for follow-up
+/// assertions.
+pub fn assert_conn_bytes_conserved(reg: &Registry, fanout: usize) -> u64 {
+    let total = reg.counter("pipeline.bytes").get();
+    let per_conn: u64 = (0..fanout)
+        .map(|c| reg.counter(&format!("pipeline.conn{c}.bytes")).get())
+        .sum();
+    assert_eq!(
+        per_conn, total,
+        "per-connection bytes must merge into the pipeline total"
+    );
+    total
+}
+
+/// Per-path byte accounting sums to the pipeline total.  Returns the
+/// per-path byte counts for distribution assertions.
+pub fn assert_path_bytes_conserved(
+    reg: &Registry,
+    paths: usize,
+) -> Vec<u64> {
+    let total = reg.counter("pipeline.bytes").get();
+    let per_path: Vec<u64> = (0..paths)
+        .map(|p| reg.counter(&format!("pipeline.path{p}.bytes")).get())
+        .collect();
+    assert_eq!(
+        per_path.iter().sum::<u64>(),
+        total,
+        "per-path bytes must merge into the pipeline total"
+    );
+    per_path
+}
+
+/// The hedge ledgers are internally consistent and under the cap.
+pub fn assert_hedge_books(reg: &Registry, cap: u64) {
+    let hedged = reg.counter("pipeline.hedge_bytes").get();
+    assert!(
+        hedged <= cap,
+        "hedged bytes {hedged} exceed the configured cap {cap}"
+    );
+    let hedges = reg.counter("pipeline.hedges").get();
+    let wins = reg.counter("pipeline.hedge_wins").get();
+    assert!(wins <= hedges, "hedge wins {wins} > hedges {hedges}");
+    if hedges == 0 {
+        assert_eq!(
+            reg.counter("pipeline.hedge_wasted_bytes").get(),
+            0,
+            "wasted bytes recorded with zero hedges"
+        );
+    }
+}
+
+/// Every planner admission ended in exactly one grant: `ba.grants`
+/// never exceeds `ba.requests`, and matches it exactly when no OOM
+/// forced a client resubmission.  Call after all tenants completed.
+pub fn assert_no_lost_grants(reg: &Registry) {
+    let requests = reg.counter("ba.requests").get();
+    let grants = reg.counter("ba.grants").get();
+    assert!(
+        grants <= requests,
+        "ba.grants {grants} > ba.requests {requests}"
+    );
+    if reg.counter("hapi.oom").get() == 0 {
+        assert_eq!(
+            grants, requests,
+            "an admission leaked without a grant on an OOM-free run"
+        );
+    }
+}

@@ -1,7 +1,9 @@
 //! Property tests over the path-aware network topology
 //! (`netsim::Topology`): per-path token conservation, aggregate-cap
-//! conservation, fairness across paths under NIC contention, and
-//! per-path `set_rate` isolation.
+//! conservation, fairness across paths under NIC contention, per-path
+//! `set_rate` isolation, and the queue-model edges (the ρ-cap clamp at
+//! saturation, mid-run latency jitter monotonicity, zero-latency
+//! immunity).
 //!
 //! These are wall-clock properties of token buckets, so every bound
 //! carries generous CI margins: *lower* bounds on elapsed time (token
@@ -314,4 +316,172 @@ fn reshaping_one_path_leaves_siblings_unchanged() {
     );
     assert_eq!(net.path(0).rate(), Some(32 * KIB));
     assert_eq!(net.path(1).rate(), Some(r));
+}
+
+/// Saturation edge of the queue model: the utilisation estimate is
+/// clamped at `RHO_MAX = 0.95`, so the per-frame multiplier tops out
+/// at `1 + 0.95/0.05 = 20×` the base latency — the term *saturates*
+/// instead of diverging as measured ρ → 1.  The property is the
+/// bound: however hopelessly oversubscribed the path, no frame cohort
+/// averages past the cap (an unclamped ρ ≥ 1 would sleep for
+/// arbitrary stretches or panic on a negative multiplier).
+#[test]
+fn queueing_delay_clamps_at_the_utilisation_cap() {
+    let lat = Duration::from_millis(5);
+    let spec = TopologySpec {
+        paths: vec![PathSpec {
+            rate: Some(32 * MIB),
+            latency: lat,
+            queue_model: true,
+        }],
+        aggregate_rate: None,
+    };
+    let net = Arc::new(Topology::new(&spec));
+    // 8 back-to-back senders: offered load far beyond what the meter
+    // can smooth away, pinning ρ against the clamp whenever frames
+    // drain fast and letting the delay feedback pull it back — the
+    // clamp is what keeps that loop bounded.
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let net = net.clone();
+            std::thread::spawn(move || {
+                let mut total = Duration::ZERO;
+                for _ in 0..12 {
+                    let t0 = Instant::now();
+                    net.path(0).recv(64 * KIB);
+                    total += t0.elapsed();
+                }
+                total.as_secs_f64() / 12.0
+            })
+        })
+        .collect();
+    let saturated: f64 = handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .sum::<f64>()
+        / 8.0;
+    // Sanity floor: the base propagation delay is always paid.
+    assert!(
+        saturated >= lat.as_secs_f64(),
+        "frame undercut the base latency: {saturated:.4}s"
+    );
+    // The clamp: 20× cap + token time + generous CI slack.  Without
+    // the RHO_MAX clamp this cohort mean runs away.
+    assert!(
+        saturated < 40.0 * lat.as_secs_f64(),
+        "queueing term escaped the RHO_MAX clamp: {saturated:.4}s \
+         (20x cap would be {:.4}s)",
+        20.0 * lat.as_secs_f64()
+    );
+}
+
+/// Mid-run latency jitter is monotone: raising a path's base latency
+/// via `set_path_latency` raises its per-frame delay accordingly —
+/// the scenario engine's `JitterLatency` event observed at the link.
+#[test]
+fn latency_jitter_is_monotone_mid_run() {
+    let base = Duration::from_millis(2);
+    let spec = TopologySpec {
+        paths: vec![PathSpec {
+            rate: Some(32 * MIB),
+            latency: base,
+            queue_model: true,
+        }],
+        aggregate_rate: None,
+    };
+    let net = Topology::new(&spec);
+    // Idle frames with decay gaps: each pays ~the base latency only.
+    let idle_mean = |net: &Topology| -> f64 {
+        let mut total = Duration::ZERO;
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(60));
+            let t0 = Instant::now();
+            net.path(0).recv(16 * KIB);
+            total += t0.elapsed();
+        }
+        total.as_secs_f64() / 4.0
+    };
+    let before = idle_mean(&net);
+    assert!(
+        before < 3.0 * base.as_secs_f64(),
+        "idle frame should pay ~the base latency: {before:.4}s"
+    );
+
+    let jittered = Duration::from_millis(8);
+    net.set_path_latency(0, jittered);
+    assert_eq!(net.path_latency(0), jittered);
+    let after = idle_mean(&net);
+    // The sleep floor makes this a hard bound, not a statistical one.
+    assert!(
+        after >= jittered.as_secs_f64(),
+        "jittered frame undercut the new base latency: {after:.4}s"
+    );
+    assert!(
+        after > before,
+        "latency not monotone under jitter: {before:.4}s -> {after:.4}s"
+    );
+
+    // And back down: restoring the base restores the idle cost.
+    net.set_path_latency(0, base);
+    let restored = idle_mean(&net);
+    assert!(
+        restored < jittered.as_secs_f64(),
+        "restored path still pays jittered latency: {restored:.4}s"
+    );
+}
+
+/// Zero-latency paths are immune to the queue model: the queueing
+/// term multiplies the base latency, so `0 × (1 + ρ/(1−ρ)) = 0` —
+/// turning the knob on may never slow a latency-free path, shaped or
+/// not, no matter the load.
+#[test]
+fn zero_latency_paths_ignore_queue_model() {
+    let spec = TopologySpec {
+        paths: vec![
+            PathSpec {
+                rate: None, // unshaped: no token time either
+                latency: Duration::ZERO,
+                queue_model: true,
+            },
+            PathSpec {
+                rate: Some(32 * MIB), // shaped: token time only
+                latency: Duration::ZERO,
+                queue_model: true,
+            },
+        ],
+        aggregate_rate: None,
+    };
+    let net = Arc::new(Topology::new(&spec));
+    // Expected per-frame cost: ~0 unshaped (pure accounting); ~8 ms
+    // shaped (4 × 20 × 64 KiB through 32 MiB/s is token time only).
+    // The bounds leave ~3× CI slack — far below what any latency
+    // multiplier would add if the queue model leaked in.
+    for (path, bound, label) in
+        [(0usize, 0.002, "unshaped"), (1usize, 0.025, "shaped")]
+    {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let net = net.clone();
+                std::thread::spawn(move || {
+                    let mut total = Duration::ZERO;
+                    for _ in 0..20 {
+                        let t0 = Instant::now();
+                        net.path(path).recv(64 * KIB);
+                        total += t0.elapsed();
+                    }
+                    total.as_secs_f64() / 20.0
+                })
+            })
+            .collect();
+        let mean: f64 = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .sum::<f64>()
+            / 4.0;
+        assert!(
+            mean < bound,
+            "{label} zero-latency path slowed by the queue model: \
+             {mean:.4}s per frame"
+        );
+    }
 }

@@ -1,0 +1,200 @@
+//! Scenario fuzzer: randomized chaos scripts through the full sim
+//! stack, checking the three global invariants (bitwise loss identity
+//! vs a chaos-free reference, no lost work, metrics conservation) —
+//! see `hapi::scenario`.
+//!
+//! Modes:
+//!
+//! - Default (`cargo test -q --test scenario_fuzz`): the canned
+//!   regression scenarios, a fixed seed corpus, and a handful of
+//!   randomized scripts — the CI smoke budget.
+//! - `SCENARIO_FUZZ_ITERS=200 cargo test -q --test scenario_fuzz`:
+//!   widen the randomized sweep (the dedicated CI fuzz job).
+//! - `SCENARIO_FUZZ_SEED=<u64> cargo test -q --test scenario_fuzz`:
+//!   replay exactly one failing seed (also replayable as
+//!   `cargo run --release -- scenario --scenario-seed <u64>`).
+//!
+//! Every failure panics with the script seed and the one-command
+//! replay line.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use hapi::scenario::{self, ScenarioScript};
+
+#[path = "common/invariants.rs"]
+mod invariants;
+use invariants::{assert_hedge_books, assert_no_lost_grants};
+
+/// How long one script (reference + chaos run) may take before the
+/// watchdog calls it a deadlock.  Scripts are sub-second by
+/// construction; 120 s absorbs the slowest shared-CI machine.
+const WATCHDOG: Duration = Duration::from_secs(120);
+
+fn replay_cmd(seed: u64) -> String {
+    format!(
+        "replay: cargo run --release -- scenario --scenario-seed {seed} \
+         (or: SCENARIO_FUZZ_SEED={seed} cargo test -q --test scenario_fuzz)"
+    )
+}
+
+/// Run `script` under a deadlock watchdog and panic (with the replay
+/// command) on any invariant violation, run error, or timeout.
+fn run_script_checked(script: &ScenarioScript, ctx: &str) {
+    let seed = script.seed;
+    let (tx, rx) = mpsc::channel();
+    let s = script.clone();
+    // A plain (non-scoped) thread: on watchdog timeout it is left
+    // behind and the panic aborts the test binary anyway.
+    thread::spawn(move || {
+        let result = (|| -> hapi::Result<Vec<String>> {
+            let reference = scenario::run(&s, false)?;
+            let chaos = scenario::run(&s, true)?;
+            Ok(scenario::verify(&s, &reference, &chaos))
+        })();
+        let _ = tx.send(result);
+    });
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(Ok(v)) if v.is_empty() => {}
+        Ok(Ok(v)) => panic!(
+            "{ctx}: invariant violations:\n  {}\n{}",
+            v.join("\n  "),
+            replay_cmd(seed)
+        ),
+        Ok(Err(e)) => {
+            panic!("{ctx}: scenario failed to run: {e}\n{}", replay_cmd(seed))
+        }
+        Err(_) => panic!(
+            "{ctx}: no result within {WATCHDOG:?} — deadlock or lost \
+             grant suspected\n{}",
+            replay_cmd(seed)
+        ),
+    }
+}
+
+/// Satellite regression (PR 5 carry-over closed): a drained path's
+/// goodput estimate un-stales via probe fetches after recovery, and
+/// the evacuated slot migrates *back* — observable end to end through
+/// the tenant's private transport counters.
+#[test]
+fn canned_degrade_recover_migrates_back() {
+    let script = ScenarioScript::degrade_recover_migrate_back();
+    let reference = scenario::run(&script, false).unwrap();
+    let chaos = scenario::run(&script, true).unwrap();
+    let v = scenario::verify(&script, &reference, &chaos);
+    assert!(
+        v.is_empty(),
+        "invariant violations: {v:#?}\n{}",
+        replay_cmd(script.seed)
+    );
+    let t = &chaos.tenants[0];
+    assert!(t.error.is_none(), "tenant failed: {:?}", t.error);
+    let reg = &t.registry;
+    assert!(
+        reg.counter("pipeline.repins").get() >= 1,
+        "slot never migrated off the degraded path"
+    );
+    assert!(
+        reg.counter("pipeline.probes").get() >= 1,
+        "no probe fetch ever un-staled the drained path"
+    );
+    assert!(
+        reg.counter("pipeline.repins_back").get() >= 1,
+        "slot never migrated back after the path recovered"
+    );
+    assert_hedge_books(reg, script.config().hedge_max_bytes);
+    assert_no_lost_grants(&chaos.server_registry);
+}
+
+/// Canned crash scenario (the CI smoke scenario): a proxy fail-stops
+/// mid-epoch and restarts on the same address; with fanout == paths
+/// every shard retry lands on the live front end, so both tenants
+/// must complete with reference-identical loss — a crash here may
+/// slow the run, never sink it.
+#[test]
+fn canned_proxy_crash_restart_completes_all_tenants() {
+    let script = ScenarioScript::proxy_crash_restart();
+    let reference = scenario::run(&script, false).unwrap();
+    let chaos = scenario::run(&script, true).unwrap();
+    // verify() tolerates tenant failure under a scripted crash; this
+    // canned timeline is engineered so nobody actually fails.
+    for t in &chaos.tenants {
+        assert!(
+            t.error.is_none(),
+            "tenant {} failed despite retry routing: {:?}\n{}",
+            t.tenant,
+            t.error,
+            replay_cmd(script.seed)
+        );
+        assert_eq!(
+            t.iterations, t.expected_iterations,
+            "tenant {} lost iterations",
+            t.tenant
+        );
+    }
+    let v = scenario::verify(&script, &reference, &chaos);
+    assert!(
+        v.is_empty(),
+        "invariant violations: {v:#?}\n{}",
+        replay_cmd(script.seed)
+    );
+}
+
+/// Fixed seed corpus: shapes that stay pinned forever, independent of
+/// the randomized sweep.  If one regresses, its seed replays it.
+#[test]
+fn fixed_seed_corpus_holds_invariants() {
+    const CORPUS: [u64; 8] = [
+        1,
+        7,
+        42,
+        1337,
+        0xDEAD_BEEF,
+        0xBAD_C0FFEE,
+        0x5EED_CAFE,
+        u64::MAX,
+    ];
+    for seed in CORPUS {
+        run_script_checked(
+            &ScenarioScript::random(seed),
+            &format!("corpus seed {seed}"),
+        );
+    }
+}
+
+/// Randomized sweep.  Default is a smoke-sized handful; the CI fuzz
+/// job sets `SCENARIO_FUZZ_ITERS=200`.  Seeds derive from a fixed
+/// base by golden-ratio stride, so iteration N is the same script on
+/// every machine — a failure report names the exact seed to replay.
+#[test]
+fn randomized_scripts_hold_invariants() {
+    let iters: u64 = std::env::var("SCENARIO_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    const BASE: u64 = 0x5eed_f0dd_0000_0000;
+    for i in 0..iters {
+        let seed = BASE.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        run_script_checked(
+            &ScenarioScript::random(seed),
+            &format!("random script {i}/{iters} (seed {seed})"),
+        );
+    }
+}
+
+/// One-command replay of a failing seed:
+/// `SCENARIO_FUZZ_SEED=<u64> cargo test -q --test scenario_fuzz`.
+#[test]
+fn replay_seed_from_env() {
+    let Ok(raw) = std::env::var("SCENARIO_FUZZ_SEED") else {
+        return;
+    };
+    let seed: u64 = raw
+        .parse()
+        .expect("SCENARIO_FUZZ_SEED must be a u64 seed");
+    run_script_checked(
+        &ScenarioScript::random(seed),
+        &format!("replayed seed {seed}"),
+    );
+}

@@ -11,6 +11,14 @@ use hapi::harness::Testbed;
 use hapi::netsim;
 use hapi::runtime::DeviceKind;
 
+#[path = "common/invariants.rs"]
+mod invariants;
+use invariants::{
+    assert_bitwise_loss_identity, assert_conn_bytes_conserved,
+    assert_hedge_books, assert_no_lost_grants,
+    assert_path_bytes_conserved, loss_bits,
+};
+
 fn sim_cfg() -> HapiConfig {
     let mut cfg = HapiConfig::sim();
     cfg.bandwidth = None; // unshaped unless a test shapes it
@@ -42,6 +50,7 @@ fn sim_stack_trains_and_loss_falls() {
         last < first,
         "training should reduce loss: {first} -> {last}"
     );
+    assert_no_lost_grants(&bed.registry);
     bed.stop();
 }
 
@@ -76,14 +85,14 @@ fn loss_trajectory_bitwise_stable_across_depths() {
             6
         );
         bed.stop();
-        stats.loss.iter().map(|l| l.to_bits()).collect()
+        loss_bits(&stats.loss)
     };
 
     let d1 = run_depth(1);
     let d2 = run_depth(2);
     let d4 = run_depth(4);
-    assert_eq!(d1, d2, "depth 2 changed the loss trajectory");
-    assert_eq!(d1, d4, "depth 4 changed the loss trajectory");
+    assert_bitwise_loss_identity(&d1, &d2, "depth 2");
+    assert_bitwise_loss_identity(&d1, &d4, "depth 4");
 }
 
 /// The sharded-fetch invariant, end to end: fanning an iteration's
@@ -105,26 +114,18 @@ fn loss_trajectory_bitwise_stable_across_fanout_and_depth() {
         assert!(stats.max_inflight <= depth);
         // Per-connection byte accounting covers every connection slot
         // that moved data, and sums to the pipeline total.
-        let total = bed.registry.counter("pipeline.bytes").get();
-        let per_conn: u64 = (0..fanout)
-            .map(|c| {
-                bed.registry
-                    .counter(&format!("pipeline.conn{c}.bytes"))
-                    .get()
-            })
-            .sum();
-        assert_eq!(per_conn, total, "per-connection bytes must merge");
+        let total = assert_conn_bytes_conserved(&bed.registry, fanout);
         assert!(total > 0);
         bed.stop();
-        stats.loss.iter().map(|l| l.to_bits()).collect()
+        loss_bits(&stats.loss)
     };
 
     let base = run_cfg(1, 1);
     for (depth, fanout) in [(1, 2), (1, 4), (2, 1), (2, 2), (2, 4)] {
-        assert_eq!(
-            base,
-            run_cfg(depth, fanout),
-            "depth {depth} × fanout {fanout} changed the trajectory"
+        assert_bitwise_loss_identity(
+            &base,
+            &run_cfg(depth, fanout),
+            &format!("depth {depth} × fanout {fanout}"),
         );
     }
 }
@@ -139,10 +140,11 @@ fn hapi_matches_baseline_bitwise() {
     let base = bed.baseline_client("simnet", DeviceKind::Gpu).unwrap();
     let s1 = hapi.train_epoch(&ds, &labels).unwrap();
     let s2 = base.train_epoch(&ds, &labels).unwrap();
-    assert_eq!(s1.loss.len(), s2.loss.len());
-    for (a, b) in s1.loss.iter().zip(&s2.loss) {
-        assert_eq!(a.to_bits(), b.to_bits(), "loss diverged: {a} vs {b}");
-    }
+    assert_bitwise_loss_identity(
+        &loss_bits(&s1.loss),
+        &loss_bits(&s2.loss),
+        "hapi vs baseline",
+    );
     // And Hapi moved fewer bytes (split output < raw input).
     assert!(s1.bytes_from_cos < s2.bytes_from_cos);
     bed.stop();
@@ -292,20 +294,21 @@ fn tenant_loss_trajectory_independent_of_cotenants() {
                 "tenant's requests never hit its own lane"
             );
         }
+        assert_no_lost_grants(&bed.registry);
         bed.stop();
-        losses.iter().map(|l| l.to_bits()).collect()
+        loss_bits(&losses)
     };
 
     let alone = run_with_cotenants(0);
-    assert_eq!(
-        alone,
-        run_with_cotenants(1),
-        "one co-tenant changed the tenant's loss trajectory"
+    assert_bitwise_loss_identity(
+        &alone,
+        &run_with_cotenants(1),
+        "one co-tenant",
     );
-    assert_eq!(
-        alone,
-        run_with_cotenants(3),
-        "three co-tenants changed the tenant's loss trajectory"
+    assert_bitwise_loss_identity(
+        &alone,
+        &run_with_cotenants(3),
+        "three co-tenants",
     );
 }
 
@@ -383,19 +386,8 @@ fn multipath_loss_bitwise_identical_at_equal_total_bandwidth() {
         assert!(stats.max_inflight <= 2);
         // Per-path byte accounting covers the pipeline total, and in
         // steady state (payload ≫ burst) every path moved data.
-        let total = bed.registry.counter("pipeline.bytes").get();
-        let per_path: Vec<u64> = (0..paths)
-            .map(|p| {
-                bed.registry
-                    .counter(&format!("pipeline.path{p}.bytes"))
-                    .get()
-            })
-            .collect();
-        assert_eq!(
-            per_path.iter().sum::<u64>(),
-            total,
-            "per-path bytes must merge into the pipeline total"
-        );
+        let per_path = assert_path_bytes_conserved(&bed.registry, paths);
+        let total: u64 = per_path.iter().sum();
         assert!(
             per_path.iter().all(|&b| b > 0),
             "an idle path at {paths} paths: {per_path:?}"
@@ -403,15 +395,15 @@ fn multipath_loss_bitwise_identical_at_equal_total_bandwidth() {
         // The NIC meter aggregates every path (payload + framing).
         assert!(bed.net.stats().rx_bytes() >= total);
         bed.stop();
-        stats.loss.iter().map(|l| l.to_bits()).collect()
+        loss_bits(&stats.loss)
     };
 
     let base = run_paths(1);
     for paths in [2usize, 3] {
-        assert_eq!(
-            base,
-            run_paths(paths),
-            "{paths}-path run changed the loss trajectory"
+        assert_bitwise_loss_identity(
+            &base,
+            &run_paths(paths),
+            &format!("{paths}-path run"),
         );
     }
 }
@@ -445,7 +437,7 @@ fn single_path_degradation_redecides_split_and_spares_copath_tenant() {
         let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
         let stats = client.train_epoch(&ds, &labels).unwrap();
         bed.stop();
-        stats.loss.iter().map(|l| l.to_bits()).collect()
+        loss_bits(&stats.loss)
     };
 
     let bed = Testbed::launch(mk_cfg(0)).unwrap();
@@ -503,8 +495,7 @@ fn single_path_degradation_redecides_split_and_spares_copath_tenant() {
         "healthy-path tenant re-decided: {:?}",
         h_stats.splits
     );
-    let h_loss: Vec<u32> =
-        h_stats.loss.iter().map(|l| l.to_bits()).collect();
+    let h_loss = loss_bits(&h_stats.loss);
     assert_eq!(
         h_loss, solo,
         "co-path tenant's trajectory changed under sibling degradation"
@@ -523,7 +514,6 @@ fn repin_and_hedging_keep_loss_bitwise_and_migrate_slots() {
         loss: Vec<u32>,
         path_bytes: [u64; 2],
         repins: u64,
-        hedge_bytes: u64,
         splits: Vec<usize>,
     }
     let run = |dynamic: bool| -> Run {
@@ -550,23 +540,15 @@ fn repin_and_hedging_keep_loss_bitwise_and_migrate_slots() {
         bed.net.set_path_rate(0, 50_000);
         let stats = client.train_epoch(&ds, &labels).unwrap();
         let r = Run {
-            loss: stats.loss.iter().map(|l| l.to_bits()).collect(),
+            loss: loss_bits(&stats.loss),
             path_bytes: [
                 bed.registry.counter("pipeline.path0.bytes").get(),
                 bed.registry.counter("pipeline.path1.bytes").get(),
             ],
             repins: bed.registry.counter("pipeline.repins").get(),
-            hedge_bytes: bed
-                .registry
-                .counter("pipeline.hedge_bytes")
-                .get(),
             splits: stats.splits.clone(),
         };
-        assert!(
-            r.hedge_bytes <= hedge_cap,
-            "hedged bytes {} exceed the configured cap {hedge_cap}",
-            r.hedge_bytes
-        );
+        assert_hedge_books(&bed.registry, hedge_cap);
         bed.stop();
         r
     };
@@ -574,9 +556,10 @@ fn repin_and_hedging_keep_loss_bitwise_and_migrate_slots() {
     let fixed = run(false);
     let moved = run(true);
     // Bitwise: re-pinning and hedging may not change training values.
-    assert_eq!(
-        fixed.loss, moved.loss,
-        "transport scheduler changed the loss trajectory"
+    assert_bitwise_loss_identity(
+        &fixed.loss,
+        &moved.loss,
+        "transport scheduler on vs off",
     );
     // Static pinning leaves the slot on the slow path all epoch…
     assert_eq!(fixed.repins, 0);
@@ -644,7 +627,7 @@ fn slot_migration_spares_the_copath_tenant() {
         bed.net.set_path_rate(0, 50_000);
         let stats = client.train_epoch(&ds, &labels).unwrap();
         bed.stop();
-        stats.loss.iter().map(|l| l.to_bits()).collect()
+        loss_bits(&stats.loss)
     };
 
     let bed = Testbed::launch(base_cfg()).unwrap();
@@ -697,8 +680,7 @@ fn slot_migration_spares_the_copath_tenant() {
         "co-path tenant re-decided: {:?}",
         co_stats.splits
     );
-    let co_loss: Vec<u32> =
-        co_stats.loss.iter().map(|l| l.to_bits()).collect();
+    let co_loss = loss_bits(&co_stats.loss);
     assert_eq!(
         co_loss, solo,
         "co-path tenant's trajectory changed under sibling migration"
