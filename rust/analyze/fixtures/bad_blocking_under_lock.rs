@@ -1,0 +1,24 @@
+//! Fixture: blocking while holding a guard, plus same-lock re-entry.
+//! The `lock-order` pass must report exactly two findings here: the
+//! socket read under `state`'s guard and the self-deadlocking
+//! re-lock of `m`.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+pub fn pump(sock: &mut TcpStream, state: &Mutex<Vec<u8>>) {
+    let mut buf = [0u8; 4];
+    let g = state.lock().unwrap();
+    let _ = sock.read_exact(&mut buf);
+    drop(g);
+}
+
+pub fn relock(m: &Mutex<u32>) -> u32 {
+    let a = m.lock().unwrap();
+    let b = m.lock().unwrap();
+    let out = *a + *b;
+    drop(b);
+    drop(a);
+    out
+}

@@ -1,0 +1,15 @@
+//! Fixture: `Condvar::wait` guarded by `if` instead of a
+//! `while`/`loop` predicate re-check — a spurious wakeup sails
+//! straight through.  The `condvar` pass must report exactly one
+//! finding.
+
+use std::sync::{Condvar, Mutex};
+
+pub fn wait_started(pair: &(Mutex<bool>, Condvar)) {
+    let (lock, cv) = pair;
+    let mut started = lock.lock().unwrap();
+    if !*started {
+        started = cv.wait(started).unwrap();
+    }
+    let _ = &started;
+}

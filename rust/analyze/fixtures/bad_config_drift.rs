@@ -1,0 +1,28 @@
+//! Fixture: a config struct whose `beta` knob drifted — it has no
+//! JSON key in `merge_json`, no CLI flag in `apply_args`, and is
+//! dropped by `to_json`.  The `config-drift` pass must report exactly
+//! those three findings (`alpha` is fully wired).
+
+pub struct HapiConfig {
+    pub alpha: u32,
+    pub beta: u32,
+}
+
+impl HapiConfig {
+    pub fn merge_json(&mut self, key: &str, v: u32) {
+        match key {
+            "alpha" => self.alpha = v,
+            _ => {}
+        }
+    }
+
+    pub fn apply_args(&mut self) {
+        self.alpha = std::env::var("alpha")
+            .map(|s| s.len() as u32)
+            .unwrap_or(0);
+    }
+
+    pub fn to_json(&self) -> u32 {
+        self.alpha
+    }
+}

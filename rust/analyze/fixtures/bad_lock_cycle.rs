@@ -1,0 +1,30 @@
+//! Fixture: classic AB/BA lock-order cycle.  The `lock-order` pass
+//! must report exactly one cycle (`a -> b -> a`) and nothing else.
+//! Fixtures are lexed by the analyzer, never compiled.
+
+use std::sync::Mutex;
+
+pub struct Two {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl Two {
+    pub fn ab(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        let out = *ga + *gb;
+        drop(gb);
+        drop(ga);
+        out
+    }
+
+    pub fn ba(&self) -> u32 {
+        let gb = self.b.lock().unwrap();
+        let ga = self.a.lock().unwrap();
+        let out = *ga + *gb;
+        drop(ga);
+        drop(gb);
+        out
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture: metric names passed as raw string / `format!` literals
+//! instead of going through `metrics::names`.  The `metric-names`
+//! pass must report exactly two bypass findings.
+
+pub fn record(reg: &hapi::metrics::Registry) {
+    reg.counter("pipeline.iterations").incr(1);
+    reg.histogram(&format!("pipeline.path{}.bytes", 3)).observe(10.0);
+}

@@ -1,0 +1,11 @@
+//! Fixture: `unwrap()`/`expect()` on fallible calls in library code,
+//! matching none of the safe idioms (lock poisoning, condvar waits,
+//! thread join).  The `panics` pass must report exactly two findings.
+
+pub fn parse_port(s: &str) -> u16 {
+    s.parse().unwrap()
+}
+
+pub fn head(v: &[u32]) -> u32 {
+    *v.first().expect("nonempty input")
+}

@@ -1,0 +1,17 @@
+//! Fixture: `wait_timeout` re-armed with a constant timeout inside
+//! its retry loop — under repeated spurious wakeups the total wait is
+//! unbounded because the deadline is never recomputed.  The `condvar`
+//! pass must report exactly one finding.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub fn drain(pair: &(Mutex<usize>, Condvar)) {
+    let (lock, cv) = pair;
+    let timeout = Duration::from_millis(50);
+    let mut left = lock.lock().unwrap();
+    while *left > 0 {
+        let (next, _beat) = cv.wait_timeout(left, timeout).unwrap();
+        left = next;
+    }
+}

@@ -1,0 +1,35 @@
+//! Fixture: the same concurrency patterns written the *right* way —
+//! guard dropped before notification, timed wait in a while loop
+//! recomputing its deadline, panics confined to the exempt
+//! lock-poisoning idioms.  Every pass must come back empty.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct Gate {
+    state: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    pub fn add(&self, n: usize) {
+        let mut g = self.state.lock().unwrap();
+        *g += n;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    pub fn wait_zero(&self, limit: Duration) -> bool {
+        let deadline = Instant::now() + limit;
+        let mut g = self.state.lock().unwrap();
+        while *g > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (next, _beat) = self.cv.wait_timeout(g, left).unwrap();
+            g = next;
+        }
+        true
+    }
+}

@@ -20,7 +20,7 @@ mod common;
 
 use hapi::config::BackendKind;
 use hapi::harness::Testbed;
-use hapi::metrics::Table;
+use hapi::metrics::{names, Table};
 use hapi::runtime::DeviceKind;
 use hapi::util::fmt_duration;
 use hapi::workload::{run_tenants_with, tenant_model_for};
@@ -182,9 +182,7 @@ fn lane_isolation() {
             h2.join().unwrap().unwrap();
         });
 
-        let h = bed.registry.histogram(&format!(
-            "ba.lane.{shallow_lane}.gather_window_ns"
-        ));
+        let h = bed.registry.histogram(&names::lane_gather_window_ns(shallow_lane));
         assert!(h.count() > 0, "shallow tenant never gathered");
         let p95 = h.p95();
         shallow_p95.push(p95);

@@ -30,10 +30,15 @@
 //! bitwise-identical loss trajectory throughout.
 //!
 //! Artifact-free by construction (SimBackend): runs on a fresh clone.
+//!
+//! `--json [PATH]` additionally writes every section's headline
+//! numbers as a machine-readable report (default `BENCH_7.json`).
 
+use hapi::benchkit::{json_path, BenchReport};
+use hapi::cli::Args;
 use hapi::config::HapiConfig;
 use hapi::harness::Testbed;
-use hapi::metrics::Table;
+use hapi::metrics::{names, Table};
 use hapi::runtime::DeviceKind;
 
 struct Row {
@@ -116,7 +121,7 @@ fn run_paths(paths: usize, aggregate_cap: Option<u64>) -> PathRow {
     }
 }
 
-fn multipath_section() {
+fn multipath_section(report: &mut BenchReport) {
     println!("\n== Fig 16c: multi-path aggregate-bandwidth sweep ==\n");
     let mut rows: Vec<PathRow> =
         [1usize, 2, 4].iter().map(|&p| run_paths(p, None)).collect();
@@ -140,6 +145,16 @@ fn multipath_section() {
 
     let (one, two, four, capped) =
         (&rows[0], &rows[1], &rows[2], &rows[3]);
+    for r in &rows {
+        let tag = if r.capped {
+            format!("fig16c.paths{}_capped", r.paths)
+        } else {
+            format!("fig16c.paths{}", r.paths)
+        };
+        report.value(&format!("{tag}.epoch_secs"), r.epoch_secs);
+        report
+            .value(&format!("{tag}.throughput_mb_s"), r.throughput_mb_s);
+    }
     // Loss trajectories are bitwise identical however many paths (and
     // whatever cap) carried the bytes.
     for r in &rows[1..] {
@@ -247,19 +262,19 @@ fn run_degraded(
         epoch_secs,
         throughput_mb_s: stats.bytes_from_cos as f64 / epoch_secs / 1e6,
         path_bytes: [
-            bed.registry.counter("pipeline.path0.bytes").get(),
-            bed.registry.counter("pipeline.path1.bytes").get(),
+            bed.registry.counter(&names::path_bytes(0)).get(),
+            bed.registry.counter(&names::path_bytes(1)).get(),
         ],
-        repins: bed.registry.counter("pipeline.repins").get(),
-        hedges: bed.registry.counter("pipeline.hedges").get(),
-        hedge_bytes: bed.registry.counter("pipeline.hedge_bytes").get(),
+        repins: bed.registry.counter(names::PIPELINE_REPINS).get(),
+        hedges: bed.registry.counter(names::PIPELINE_HEDGES).get(),
+        hedge_bytes: bed.registry.counter(names::PIPELINE_HEDGE_BYTES).get(),
         loss_bits: stats.loss.iter().map(|l| l.to_bits()).collect(),
     };
     bed.stop();
     row
 }
 
-fn repin_section() {
+fn repin_section(report: &mut BenchReport) {
     println!(
         "\n== Fig 16d: degraded-path recovery, re-pinning on vs off ==\n"
     );
@@ -320,6 +335,22 @@ fn repin_section() {
     let lost = healthy.throughput_mb_s - fixed.throughput_mb_s;
     let recovered = moved.throughput_mb_s - fixed.throughput_mb_s;
     let frac = recovered / lost.max(1e-9);
+    for (slug, r) in
+        [("healthy", &healthy), ("static", &fixed), ("repin", &moved)]
+    {
+        report.value(&format!("fig16d.{slug}.epoch_secs"), r.epoch_secs);
+        report.value(
+            &format!("fig16d.{slug}.throughput_mb_s"),
+            r.throughput_mb_s,
+        );
+        report.value(&format!("fig16d.{slug}.repins"), r.repins as f64);
+        report.value(&format!("fig16d.{slug}.hedges"), r.hedges as f64);
+        report.value(
+            &format!("fig16d.{slug}.hedge_bytes"),
+            r.hedge_bytes as f64,
+        );
+    }
+    report.value("fig16d.recovered_frac", frac);
     println!(
         "\nthroughput: healthy {:.2}, static {:.2}, re-pinned {:.2} \
          MB/s -> recovered {:.0}% of the degradation loss \
@@ -348,9 +379,19 @@ fn repin_section() {
 }
 
 fn main() {
+    let args = Args::from_env().expect("args");
+    let mut report = BenchReport::new("fig16_fetch_fanout");
     println!("== Fig 16b: fetch-fanout sweep (sim backend) ==\n");
     let rows: Vec<Row> =
         [1usize, 2, 4].iter().map(|&f| run_fanout(f)).collect();
+    for r in &rows {
+        let tag = format!("fig16b.fanout{}", r.fanout);
+        report.value(&format!("{tag}.epoch_secs"), r.epoch_secs);
+        report.value(
+            &format!("{tag}.stall_ms_per_iter"),
+            r.stall_ms_per_iter,
+        );
+    }
 
     let mut t = Table::new(
         "Hapi, simnet, depth 1, 5 shards/iter, shaped 4 MB/s link",
@@ -393,6 +434,11 @@ fn main() {
     );
     println!("PASS: fanout >= 2 strictly reduces per-iteration stall");
 
-    multipath_section();
-    repin_section();
+    multipath_section(&mut report);
+    repin_section(&mut report);
+
+    if let Some(path) = json_path(&args) {
+        report.write(&path).expect("write bench report");
+        println!("\nwrote {path}");
+    }
 }

@@ -9,12 +9,17 @@
 //! - the transport scheduler's goodput-estimator update runs on
 //!   **every shard completion** — it must stay lock-free/amortised
 //!   (sub-microsecond scale, a rounding error next to any fetch).
+//!
+//! `--json [PATH]` additionally writes every bench's stats as a
+//! machine-readable report (default `BENCH_7.json`), e.g.
+//! `cargo bench --bench micro_hotpaths -- --json`.
 
 #[path = "common.rs"]
 mod common;
 
 use hapi::batch::{solve, BatchRequest};
-use hapi::benchkit::Bench;
+use hapi::benchkit::{json_path, Bench, BenchReport};
+use hapi::cli::Args;
 use hapi::cos::protocol::{Request, Response};
 use hapi::runtime::Tensor;
 use hapi::server::request::PostRequest;
@@ -22,6 +27,8 @@ use hapi::util::json::Json;
 use hapi::util::rng::Rng;
 
 fn main() {
+    let args = Args::from_env().expect("args");
+    let mut report = BenchReport::new("micro_hotpaths");
     println!("== L3 hot-path microbenches ==\n");
 
     // 1. Eq. 4 solve: 10 queued requests (the paper's max tenancy).
@@ -41,6 +48,7 @@ fn main() {
         stats.p50 < std::time::Duration::from_millis(25),
         "BA solve exceeds the paper's 25 ms budget"
     );
+    report.stats("ba_solve_10_requests", &stats);
 
     // 2. POST header build + parse (JSON on the request path).
     let post = PostRequest {
@@ -57,19 +65,20 @@ fn main() {
         client_id: 3,
         mode: hapi::server::request::RequestMode::FeatureExtract,
     };
-    Bench::new("post_header_roundtrip")
+    let stats = Bench::new("post_header_roundtrip")
         .samples(50, 5000)
         .budget(std::time::Duration::from_secs(2))
         .run(|| {
             let j = post.to_json();
             PostRequest::parse(&j).unwrap()
         });
+    report.stats("post_header_roundtrip", &stats);
 
     // 3. Wire frame encode/decode of a 1 MiB feature tensor response.
     let body = vec![7u8; 1 << 20];
     let header = Json::parse(r#"{"req_id": 1, "out_dims": [100, 8, 16, 16]}"#)
         .unwrap();
-    Bench::new("response_encode_1MiB")
+    let stats = Bench::new("response_encode_1MiB")
         .samples(20, 500)
         .budget(std::time::Duration::from_secs(2))
         .run(|| {
@@ -77,21 +86,23 @@ fn main() {
             let (op, payload) = r.encode();
             Response::decode(op, payload).unwrap()
         });
+    report.stats("response_encode_1MiB", &stats);
 
     // 4. GET request frame (tiny, latency-bound).
-    Bench::new("get_request_encode")
+    let stats = Bench::new("get_request_encode")
         .samples(50, 10_000)
         .budget(std::time::Duration::from_secs(1))
         .run(|| {
             let (op, p) = Request::Get("ds/shard_00001".into()).encode();
             Request::decode(op, p).unwrap()
         });
+    report.stats("get_request_encode", &stats);
 
     // 5. Micro-batch chunk/pad/concat of a 100×(3·32·32) batch.
     let mut rng = Rng::new(1);
     let vals: Vec<f32> = (0..100 * 3072).map(|_| rng.normal()).collect();
     let tensor = Tensor::from_f32(vec![100, 3, 32, 32], &vals);
-    Bench::new("chunk_pad_concat_100x3072")
+    let stats = Bench::new("chunk_pad_concat_100x3072")
         .samples(50, 2000)
         .budget(std::time::Duration::from_secs(2))
         .run(|| {
@@ -100,6 +111,7 @@ fn main() {
                 .collect();
             Tensor::concat_batch(&parts).unwrap()
         });
+    report.stats("chunk_pad_concat_100x3072", &stats);
 
     // 6. Transport-scheduler estimator update (per shard completion:
     // EWMA fold + winner accounting + amortised re-pin check).  The
@@ -141,12 +153,13 @@ fn main() {
             "estimator update too slow for the shard hot path: {:?}",
             stats.p50
         );
+        report.stats("transport_estimator_update", &stats);
     }
 
     // 7. Gradient accumulation over a 1 M-element tail.
     let grads: Vec<Tensor> =
         vec![Tensor::from_f32(vec![1 << 20], &vec![0.5; 1 << 20])];
-    Bench::new("grad_accumulate_1M")
+    let stats = Bench::new("grad_accumulate_1M")
         .samples(20, 200)
         .budget(std::time::Duration::from_secs(2))
         .run(|| {
@@ -156,4 +169,10 @@ fn main() {
                 .unwrap();
             acc
         });
+    report.stats("grad_accumulate_1M", &stats);
+
+    if let Some(path) = json_path(&args) {
+        report.write(&path).expect("write bench report");
+        println!("\nwrote {path}");
+    }
 }

@@ -1,0 +1,114 @@
+//! Pass: condvar wait discipline.
+//!
+//! `Condvar::wait`/`wait_timeout` wake spuriously and race with the
+//! predicate, so every call must sit inside a `while`/`loop` that
+//! re-checks its predicate, and a timed wait must recompute its
+//! remaining deadline on every iteration (a constant timeout re-armed
+//! in a loop waits forever in the worst case).
+//!
+//! A call counts as a condvar wait only when it takes at least one
+//! argument (the guard) — this keeps `WaitGroup::wait()`-style no-arg
+//! blocking helpers out of the pass.
+
+use super::lexer::{Tok, TokKind};
+use super::{Finding, SourceFile};
+
+/// Idents that indicate the loop body recomputes time/deadline state.
+const DEADLINE_IDENTS: &[&str] = &[
+    "saturating_duration_since",
+    "checked_duration_since",
+    "now",
+    "elapsed",
+];
+
+const LOOP_KINDS: &[&str] = &["loop", "while", "for"];
+
+fn opener_kind(t: &Tok) -> Option<&'static str> {
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    match t.text.as_str() {
+        "loop" => Some("loop"),
+        "while" => Some("while"),
+        "for" => Some("for"),
+        "if" => Some("if"),
+        "match" => Some("match"),
+        "fn" => Some("fn"),
+        _ => None,
+    }
+}
+
+pub fn run_file(sf: &SourceFile) -> Vec<Finding> {
+    let toks = &sf.toks;
+    let mut findings = Vec::new();
+    // (block kind, index of its '{')
+    let mut stack: Vec<(&'static str, usize)> = Vec::new();
+    let mut pending: Option<&'static str> = None;
+    let mut i = 0;
+    while i < toks.len() {
+        if sf.mask[i] {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        if let Some(kind) = opener_kind(t) {
+            pending = Some(kind);
+        } else if t.is_punct('{') {
+            stack.push((pending.unwrap_or("block"), i));
+            pending = None;
+        } else if t.is_punct('}') {
+            stack.pop();
+        } else if (t.is_ident("wait") || t.is_ident("wait_timeout"))
+            && i >= 1
+            && toks[i - 1].is_punct('.')
+            && i + 2 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && !toks[i + 2].is_punct(')')
+        {
+            // Innermost loop between here and the enclosing fn.
+            let mut loop_idx = None;
+            for (kind, open_idx) in stack.iter().rev() {
+                if *kind == "fn" {
+                    break;
+                }
+                if LOOP_KINDS.contains(kind) {
+                    loop_idx = Some(*open_idx);
+                    break;
+                }
+            }
+            match loop_idx {
+                None => findings.push(Finding {
+                    pass: "condvar",
+                    file: sf.rel.clone(),
+                    line: t.line,
+                    func: "<fn>".to_string(),
+                    msg: format!(
+                        "Condvar::{} is not guarded by a while/loop \
+                         predicate re-check",
+                        t.text
+                    ),
+                }),
+                Some(open_idx) if t.is_ident("wait_timeout") => {
+                    let recomputes = toks[open_idx..i].iter().any(|w| {
+                        w.kind == TokKind::Ident
+                            && DEADLINE_IDENTS.contains(&w.text.as_str())
+                    });
+                    if !recomputes {
+                        findings.push(Finding {
+                            pass: "condvar",
+                            file: sf.rel.clone(),
+                            line: t.line,
+                            func: "<fn>".to_string(),
+                            msg: "wait_timeout never recomputes its \
+                                  deadline inside the retry loop"
+                                .to_string(),
+                        });
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+        i += 1;
+    }
+    findings
+}

@@ -1,0 +1,278 @@
+//! Pass: config-knob drift.
+//!
+//! Every public `HapiConfig` field must be reachable through all four
+//! surfaces, or the knob silently rots:
+//!
+//! - a JSON key in `merge_json` (config files can set it);
+//! - a CLI flag in `apply_args` (the statement assigning the field
+//!   must mention a string literal — the flag name);
+//! - a `self.field` reference in `to_json` (saved configs round-trip
+//!   without dropping it);
+//! - a `\bfield\b` mention in `rust/src/README.md` (users can find
+//!   it).
+//!
+//! This pass found real drift when introduced: `storage_read_rate`
+//! had no CLI flag *and* was dropped by `to_json`, and
+//! `reserved_bytes`/`client_gpu_mem`/`split_window_secs` were
+//! JSON-only.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{match_brace, Tok, TokKind};
+use super::{Finding, SourceFile};
+
+const README: &str = "rust/src/README.md";
+
+/// Body tokens (including outer braces) of `fn name` in `toks`.
+fn body_of_fn<'a>(toks: &'a [Tok], name: &str) -> &'a [Tok] {
+    for i in 0..toks.len().saturating_sub(1) {
+        if toks[i].is_ident("fn") && toks[i + 1].is_ident(name) {
+            let mut k = i + 2;
+            while k < toks.len() && !toks[k].is_punct('{') {
+                k += 1;
+            }
+            if k < toks.len() {
+                return &toks[k..match_brace(toks, k) + 1];
+            }
+        }
+    }
+    &[]
+}
+
+/// Depth-1 `pub field: …` declarations of `struct name`, with lines.
+fn struct_fields(toks: &[Tok], name: &str) -> Vec<(String, u32)> {
+    let mut fields = Vec::new();
+    for i in 0..toks.len().saturating_sub(2) {
+        if !toks[i].is_ident("struct") || !toks[i + 1].is_ident(name) {
+            continue;
+        }
+        let mut k = i + 2;
+        while k < toks.len() && !toks[k].is_punct('{') {
+            k += 1;
+        }
+        if k >= toks.len() {
+            return fields;
+        }
+        let end = match_brace(toks, k);
+        let mut depth = 0i64;
+        let mut j = k;
+        while j <= end {
+            let t = &toks[j];
+            if t.is_punct('{') {
+                depth += 1;
+            } else if t.is_punct('}') {
+                depth -= 1;
+            } else if depth == 1
+                && t.is_ident("pub")
+                && j + 2 <= end
+                && toks[j + 1].kind == TokKind::Ident
+                && toks[j + 2].is_punct(':')
+            {
+                fields.push((toks[j + 1].text.clone(), toks[j + 1].line));
+            }
+            j += 1;
+        }
+        return fields;
+    }
+    fields
+}
+
+/// All `self.field` references in a token slice.
+fn self_fields_in(toks: &[Tok]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for i in 0..toks.len().saturating_sub(2) {
+        if toks[i].is_ident("self")
+            && toks[i + 1].is_punct('.')
+            && toks[i + 2].kind == TokKind::Ident
+        {
+            out.insert(toks[i + 2].text.clone());
+        }
+    }
+    out
+}
+
+fn open_punct(t: &Tok) -> bool {
+    t.is_punct('(') || t.is_punct('{') || t.is_punct('[')
+}
+
+fn close_punct(t: &Tok) -> bool {
+    t.is_punct(')') || t.is_punct('}') || t.is_punct(']')
+}
+
+/// `field -> json key` mapping from the `"key" => { self.field = … }`
+/// arms of `merge_json`.
+fn merge_json_arms(body: &[Tok]) -> BTreeMap<String, String> {
+    let mut mapping = BTreeMap::new();
+    let mut i = 0;
+    while i + 2 < body.len() {
+        if !(body[i].kind == TokKind::Str
+            && body[i + 1].is_punct('=')
+            && body[i + 2].is_punct('>'))
+        {
+            i += 1;
+            continue;
+        }
+        let key = body[i].text.clone();
+        let mut j = i + 3;
+        let mut depth = 0i64;
+        let mut arm: Vec<Tok> = Vec::new();
+        while j < body.len() {
+            let t = &body[j];
+            if open_punct(t) {
+                depth += 1;
+            } else if close_punct(t) {
+                depth -= 1;
+                if depth < 0 {
+                    break;
+                }
+            }
+            // Next arm's `"key" =>` at depth 0 ends this arm.
+            if depth == 0
+                && t.kind == TokKind::Str
+                && j + 2 < body.len()
+                && body[j + 1].is_punct('=')
+                && body[j + 2].is_punct('>')
+            {
+                break;
+            }
+            arm.push(t.clone());
+            j += 1;
+        }
+        for f in self_fields_in(&arm) {
+            mapping.insert(f, key.clone());
+        }
+        i = j;
+    }
+    mapping
+}
+
+/// Split `apply_args`'s body into statements at depth-0 `;`/`}`
+/// boundaries; each becomes (self fields assigned, has a string
+/// literal) — a field counts as CLI-wired when some statement both
+/// assigns it and names a flag string.
+fn apply_args_segments(body: &[Tok]) -> Vec<(BTreeSet<String>, bool)> {
+    let mut segs: Vec<Vec<Tok>> = Vec::new();
+    let mut cur: Vec<Tok> = Vec::new();
+    if body.len() < 2 {
+        return Vec::new();
+    }
+    let mut depth = 0i64;
+    for t in &body[1..body.len() - 1] {
+        if open_punct(t) {
+            depth += 1;
+        } else if close_punct(t) {
+            depth -= 1;
+            if depth == 0 && t.is_punct('}') {
+                cur.push(t.clone());
+                segs.push(std::mem::take(&mut cur));
+                continue;
+            }
+        }
+        if depth == 0 && t.is_punct(';') {
+            segs.push(std::mem::take(&mut cur));
+            continue;
+        }
+        cur.push(t.clone());
+    }
+    if !cur.is_empty() {
+        segs.push(cur);
+    }
+    segs.iter()
+        .map(|seg| {
+            let has_lit = seg.iter().any(|t| t.kind == TokKind::Str);
+            (self_fields_in(seg), has_lit)
+        })
+        .collect()
+}
+
+/// ASCII word-boundary search (the fields are `[a-z0-9_]` idents).
+fn word_present(text: &str, word: &str) -> bool {
+    let is_word = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let tb = text.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = text[start..].find(word) {
+        let p = start + pos;
+        let before = p == 0 || !is_word(tb[p - 1]);
+        let after =
+            p + word.len() >= tb.len() || !is_word(tb[p + word.len()]);
+        if before && after {
+            return true;
+        }
+        // `word` starts with an ASCII byte, so `p + 1` stays on a
+        // char boundary.
+        start = p + 1;
+    }
+    false
+}
+
+pub fn run(files: &[SourceFile], readme: Option<&str>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(sf) = files.iter().find(|sf| {
+        sf.toks.len() >= 2
+            && (0..sf.toks.len() - 1).any(|i| {
+                sf.toks[i].is_ident("struct")
+                    && sf.toks[i + 1].is_ident("HapiConfig")
+            })
+    }) else {
+        return findings;
+    };
+    let toks = &sf.toks;
+    let fields = struct_fields(toks, "HapiConfig");
+    let json_map = merge_json_arms(body_of_fn(toks, "merge_json"));
+    let cli_segs = apply_args_segments(body_of_fn(toks, "apply_args"));
+    let tojson = self_fields_in(body_of_fn(toks, "to_json"));
+    for (fname, line) in &fields {
+        if !json_map.contains_key(fname) {
+            findings.push(Finding {
+                pass: "config-drift",
+                file: sf.rel.clone(),
+                line: *line,
+                func: fname.clone(),
+                msg: format!(
+                    "`HapiConfig::{fname}` has no JSON key in merge_json"
+                ),
+            });
+        }
+        let has_cli = cli_segs
+            .iter()
+            .any(|(fs, has_lit)| *has_lit && fs.contains(fname));
+        if !has_cli {
+            findings.push(Finding {
+                pass: "config-drift",
+                file: sf.rel.clone(),
+                line: *line,
+                func: fname.clone(),
+                msg: format!(
+                    "`HapiConfig::{fname}` has no CLI flag in apply_args"
+                ),
+            });
+        }
+        if !tojson.contains(fname) {
+            findings.push(Finding {
+                pass: "config-drift",
+                file: sf.rel.clone(),
+                line: *line,
+                func: fname.clone(),
+                msg: format!(
+                    "`HapiConfig::{fname}` is dropped by to_json \
+                     (save/roundtrip loses it)"
+                ),
+            });
+        }
+        if let Some(text) = readme {
+            if !word_present(text, fname) {
+                findings.push(Finding {
+                    pass: "config-drift",
+                    file: README.to_string(),
+                    line: *line,
+                    func: fname.clone(),
+                    msg: format!(
+                        "`HapiConfig::{fname}` is not mentioned in \
+                         rust/src/README.md"
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}

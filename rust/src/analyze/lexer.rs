@@ -1,0 +1,339 @@
+//! A minimal Rust lexer for `hapi-analyze`.
+//!
+//! Produces just enough structure for the passes: identifiers, string
+//! literals (with raw/byte forms and escapes), char-vs-lifetime
+//! disambiguation, numbers, and single-char punctuation, every token
+//! tagged with its 1-based source line.  Comments (including nested
+//! block comments) are skipped.  This is deliberately not a full
+//! lexer — macros, attributes and generics all come out as plain
+//! token runs, which is what the scope-walking passes want.
+
+/// Token class.  `Str` carries the literal's *contents* (quotes and
+/// raw-string hashes stripped, escapes kept verbatim) so passes can
+/// match metric names and config keys directly.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Str,
+    Char,
+    Lifetime,
+    Num,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    fn new(kind: TokKind, text: impl Into<String>, line: u32) -> Self {
+        Tok {
+            kind,
+            text: text.into(),
+            line,
+        }
+    }
+
+    /// True when this token is the given punctuation character.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1
+            && self.text.as_bytes()[0] == c as u8
+    }
+
+    /// True when this token is the given identifier.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into a token stream.  Unterminated strings/comments lex
+/// to end-of-file rather than erroring: the analyzer must keep going
+/// on any input the compiler itself would reject.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // Nested block comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and byte-raw) strings: r"…", r#"…"#, br#"…"#.
+        if let Some((skip, hashes)) = raw_string_open(&b, i) {
+            let start = i + skip;
+            let startline = line;
+            let mut j = start;
+            let close_ok = |b: &[char], j: usize| {
+                if b[j] != '"' {
+                    return false;
+                }
+                (1..=hashes).all(|k| j + k < b.len() && b[j + k] == '#')
+            };
+            while j < n && !close_ok(&b, j) {
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            let text: String = b[start..j.min(n)].iter().collect();
+            toks.push(Tok::new(TokKind::Str, text, startline));
+            i = (j + 1 + hashes).min(n);
+            continue;
+        }
+        // Plain (and byte) strings with escapes.
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"' && !prev_ident(&b, i)) {
+            let mut j = if c == '"' { i + 1 } else { i + 2 };
+            let startline = line;
+            let mut text = String::new();
+            while j < n {
+                let ch = b[j];
+                if ch == '\\' && j + 1 < n {
+                    text.push(ch);
+                    text.push(b[j + 1]);
+                    j += 2;
+                    continue;
+                }
+                if ch == '"' {
+                    break;
+                }
+                if ch == '\n' {
+                    line += 1;
+                }
+                text.push(ch);
+                j += 1;
+            }
+            toks.push(Tok::new(TokKind::Str, text, startline));
+            i = j + 1;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                let mut j = i + 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok::new(TokKind::Char, "", line));
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                toks.push(Tok::new(TokKind::Char, b[i + 1], line));
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && is_ident_char(b[j]) {
+                j += 1;
+            }
+            let text: String = b[i + 1..j].iter().collect();
+            toks.push(Tok::new(TokKind::Lifetime, text, line));
+            i = j;
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && is_ident_char(b[j]) {
+                j += 1;
+            }
+            let text: String = b[i..j].iter().collect();
+            toks.push(Tok::new(TokKind::Ident, text, line));
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_ident_char(b[j]) {
+                j += 1;
+            }
+            // Consume a fraction only when a digit follows the dot, so
+            // `0..n` and `1.min(x)` keep their punctuation.
+            if j + 1 < n && b[j] == '.' && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident_char(b[j]) {
+                    j += 1;
+                }
+            }
+            let text: String = b[i..j].iter().collect();
+            toks.push(Tok::new(TokKind::Num, text, line));
+            i = j;
+            continue;
+        }
+        toks.push(Tok::new(TokKind::Punct, c, line));
+        i += 1;
+    }
+    toks
+}
+
+/// If position `i` opens a raw string (`r`, `br`, any number of
+/// hashes, then `"`), return (chars to skip to contents, hash count).
+fn raw_string_open(b: &[char], i: usize) -> Option<(usize, usize)> {
+    if prev_ident(b, i) {
+        return None;
+    }
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == '"' {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// True when the char before `i` continues an identifier — i.e. the
+/// `r`/`b` at `i` is the tail of a name like `var`, not a prefix.
+fn prev_ident(b: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(b[i - 1])
+}
+
+/// Index of the `}` matching the `{` at `open_idx` (falls back to the
+/// last token on unbalanced input).
+pub fn match_brace(toks: &[Tok], open_idx: usize) -> usize {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Mark every token inside a `#[cfg(test)] mod … { … }` block (any
+/// `cfg(…)` whose argument list mentions `test`, e.g.
+/// `#[cfg(all(test, feature = "pjrt"))]`).  Passes use the mask to
+/// keep unit-test code out of library-code audits.
+pub fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if let Some(end) = test_mod_end(toks, i) {
+            for m in mask.iter_mut().take(end + 1).skip(i) {
+                *m = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// If a test-gated `mod` attribute starts at `i`, return the index of
+/// its closing brace.
+fn test_mod_end(toks: &[Tok], i: usize) -> Option<usize> {
+    if !toks[i].is_punct('#')
+        || i + 4 >= toks.len()
+        || !toks[i + 1].is_punct('[')
+        || !toks[i + 2].is_ident("cfg")
+        || !toks[i + 3].is_punct('(')
+    {
+        return None;
+    }
+    // Scan the cfg(...) argument list for the `test` ident.
+    let mut depth = 0i64;
+    let mut k = i + 3;
+    let mut has_test = false;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if t.is_ident("test") {
+            has_test = true;
+        }
+        k += 1;
+    }
+    if !has_test || k + 1 >= toks.len() || !toks[k + 1].is_punct(']') {
+        return None;
+    }
+    let mut j = k + 2;
+    // Skip any further attributes between cfg(test) and the mod.
+    while j < toks.len() && toks[j].is_punct('#') {
+        let mut d = 0i64;
+        j += 1;
+        while j < toks.len() {
+            if toks[j].is_punct('[') {
+                d += 1;
+            } else if toks[j].is_punct(']') {
+                d -= 1;
+                if d == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+    }
+    if j >= toks.len() || !toks[j].is_ident("mod") {
+        return None;
+    }
+    while j < toks.len() && !toks[j].is_punct('{') {
+        j += 1;
+    }
+    if j >= toks.len() {
+        return None;
+    }
+    Some(match_brace(toks, j))
+}

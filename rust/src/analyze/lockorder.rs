@@ -1,0 +1,397 @@
+//! Pass: lock-order / blocking-under-guard audit.
+//!
+//! Walks each library file tracking which `MutexGuard`s are live
+//! (`let g = x.lock()…` lives to end of block or `drop(g)`; an
+//! unbound `x.lock()…` temporary dies at the statement's `;`), and:
+//!
+//! - records an acquisition edge `held -> acquired` every time a lock
+//!   is taken while another guard is live, then reports cycles in the
+//!   whole-crate graph (the classic AB/BA deadlock);
+//! - reports re-acquisition of a lock whose own guard is still live
+//!   (self-deadlock with `std::sync::Mutex`);
+//! - reports blocking calls made while any guard is held: socket
+//!   accept/connect, `read_exact`/`write_all`/`read_to_end`, channel
+//!   `recv`/`recv_timeout`, `sleep`, and `join()`;
+//! - reports `Condvar::wait`/`wait_timeout` that atomically release
+//!   one guard while a *different* guard stays held across the block.
+//!
+//! Locks are keyed by file stem + dotted receiver chain
+//! (`planner.rs:self.inner`), an approximation that is exact for this
+//! crate's idiom of `self.field.lock()` on named fields.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{Tok, TokKind};
+use super::{Finding, SourceFile};
+
+const BLOCKING_CALLS: &[&str] = &[
+    "sleep",
+    "accept",
+    "connect",
+    "read_exact",
+    "write_all",
+    "read_to_end",
+    "recv",
+    "recv_timeout",
+];
+
+/// Where an acquisition edge was first observed.
+pub struct EdgeSite {
+    pub file: String,
+    pub line: u32,
+    pub func: String,
+}
+
+/// `(held lock key, acquired lock key)` -> first site.
+pub type EdgeMap = BTreeMap<(String, String), EdgeSite>;
+
+struct Guard {
+    name: String,
+    key: String,
+    depth: usize,
+    line: u32,
+    temp: bool,
+}
+
+/// Strip the `file.rs:` prefix for human-readable messages.
+fn tail(key: &str) -> &str {
+    match key.split_once(':') {
+        Some((_, t)) => t,
+        None => key,
+    }
+}
+
+fn held_list(guards: &[Guard]) -> String {
+    let parts: Vec<String> = guards
+        .iter()
+        .map(|g| format!("`{}` (line {})", tail(&g.key), g.line))
+        .collect();
+    parts.join(", ")
+}
+
+fn opener_kind(t: &Tok) -> Option<&'static str> {
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    match t.text.as_str() {
+        "loop" => Some("loop"),
+        "while" => Some("while"),
+        "for" => Some("for"),
+        "if" => Some("if"),
+        "match" => Some("match"),
+        _ => None,
+    }
+}
+
+/// Innermost named `fn` on the block stack.
+pub(crate) fn enclosing_fn(stack: &[(&'static str, Option<String>)]) -> String {
+    for (kind, fname) in stack.iter().rev() {
+        if *kind == "fn" {
+            if let Some(f) = fname {
+                return f.clone();
+            }
+        }
+    }
+    "<file>".to_string()
+}
+
+/// Dotted receiver chain ending at the `.` token `dot_idx`
+/// (`self.inner.lock()` -> `self.inner`); `<expr>` when the receiver
+/// is not a plain ident chain.
+fn chain_before(toks: &[Tok], dot_idx: usize) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut k = dot_idx;
+    loop {
+        if k < 1 || !toks[k].is_punct('.') {
+            break;
+        }
+        let prev = &toks[k - 1];
+        if prev.kind != TokKind::Ident {
+            break;
+        }
+        parts.push(&prev.text);
+        if k < 2 {
+            break;
+        }
+        k -= 2;
+    }
+    parts.reverse();
+    if parts.is_empty() {
+        "<expr>".to_string()
+    } else {
+        parts.join(".")
+    }
+}
+
+/// If the statement containing token `idx` starts with
+/// `let [mut] name =`, return `name`.
+fn stmt_let_binding(toks: &[Tok], idx: usize) -> Option<String> {
+    let mut k = idx;
+    loop {
+        let t = &toks[k];
+        if t.kind == TokKind::Punct
+            && (t.text == ";" || t.text == "{" || t.text == "}")
+        {
+            k += 1;
+            break;
+        }
+        if k == 0 {
+            break;
+        }
+        k -= 1;
+    }
+    if k < toks.len() && toks[k].is_ident("let") {
+        k += 1;
+        if k < toks.len() && toks[k].is_ident("mut") {
+            k += 1;
+        }
+        if k + 1 < toks.len()
+            && toks[k].kind == TokKind::Ident
+            && toks[k + 1].is_punct('=')
+        {
+            return Some(toks[k].text.clone());
+        }
+    }
+    None
+}
+
+/// Ident arguments of the call opening at `toks[open_idx] == '('`.
+fn call_arg_idents(toks: &[Tok], open_idx: usize) -> Vec<String> {
+    let mut args = Vec::new();
+    let mut depth = 0i64;
+    let mut k = open_idx;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if t.kind == TokKind::Ident {
+            args.push(t.text.clone());
+        }
+        k += 1;
+    }
+    args
+}
+
+/// Analyze one library file; acquisition edges accumulate in `edges`
+/// for the whole-crate cycle check.
+pub fn run_file(sf: &SourceFile, edges: &mut EdgeMap) -> Vec<Finding> {
+    let toks = &sf.toks;
+    let mut findings = Vec::new();
+    let stem = match sf.rel.rsplit('/').next() {
+        Some(s) => s.to_string(),
+        None => sf.rel.clone(),
+    };
+    let mut stack: Vec<(&'static str, Option<String>)> = Vec::new();
+    let mut pending: Option<&'static str> = None;
+    let mut pending_fn: Option<String> = None;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if sf.mask[i] {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        let line = t.line;
+        if t.is_ident("fn")
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == TokKind::Ident
+        {
+            pending = Some("fn");
+            pending_fn = Some(toks[i + 1].text.clone());
+        } else if let Some(kind) = opener_kind(t) {
+            pending = Some(kind);
+        } else if t.is_punct('{') {
+            let fname = if pending == Some("fn") {
+                pending_fn.take()
+            } else {
+                None
+            };
+            stack.push((pending.unwrap_or("block"), fname));
+            pending = None;
+            pending_fn = None;
+        } else if t.is_punct('}') {
+            stack.pop();
+            let depth = stack.len();
+            guards.retain(|g| g.depth <= depth);
+        } else if t.is_punct(';') {
+            guards.retain(|g| !g.temp);
+        } else if t.is_ident("drop")
+            && i + 3 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && toks[i + 2].kind == TokKind::Ident
+            && toks[i + 3].is_punct(')')
+        {
+            let victim = toks[i + 2].text.clone();
+            guards.retain(|g| g.name != victim);
+        } else if t.is_ident("lock")
+            && i >= 1
+            && toks[i - 1].is_punct('.')
+            && i + 2 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && toks[i + 2].is_punct(')')
+        {
+            let key = format!("{}:{}", stem, chain_before(toks, i - 1));
+            let fname = enclosing_fn(&stack);
+            for g in &guards {
+                if g.key == key {
+                    findings.push(Finding {
+                        pass: "lock-order",
+                        file: sf.rel.clone(),
+                        line,
+                        func: fname.clone(),
+                        msg: format!(
+                            "re-lock of `{}` while its guard (line {}) is \
+                             still live — self-deadlock",
+                            tail(&key),
+                            g.line
+                        ),
+                    });
+                } else {
+                    edges
+                        .entry((g.key.clone(), key.clone()))
+                        .or_insert_with(|| EdgeSite {
+                            file: sf.rel.clone(),
+                            line,
+                            func: fname.clone(),
+                        });
+                }
+            }
+            let name = stmt_let_binding(toks, i);
+            guards.push(Guard {
+                name: name.clone().unwrap_or_else(|| format!("<temp{line}>")),
+                key,
+                depth: stack.len(),
+                line,
+                temp: name.is_none(),
+            });
+        } else if (t.is_ident("wait") || t.is_ident("wait_timeout"))
+            && i >= 1
+            && toks[i - 1].is_punct('.')
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('(')
+        {
+            let args = call_arg_idents(toks, i + 1);
+            if !args.is_empty() {
+                let released: Vec<&Guard> = guards
+                    .iter()
+                    .filter(|g| args.contains(&g.name))
+                    .collect();
+                let still_held: Vec<&Guard> = guards
+                    .iter()
+                    .filter(|g| !args.contains(&g.name))
+                    .collect();
+                if let (Some(rel0), false) =
+                    (released.first(), still_held.is_empty())
+                {
+                    let held: Vec<String> = still_held
+                        .iter()
+                        .map(|g| format!("`{}` (line {})", tail(&g.key), g.line))
+                        .collect();
+                    findings.push(Finding {
+                        pass: "lock-order",
+                        file: sf.rel.clone(),
+                        line,
+                        func: enclosing_fn(&stack),
+                        msg: format!(
+                            "Condvar::{} releases only `{}` but {} stays \
+                             held across the block",
+                            t.text,
+                            tail(&rel0.key),
+                            held.join(", ")
+                        ),
+                    });
+                }
+            }
+        } else if t.kind == TokKind::Ident
+            && BLOCKING_CALLS.contains(&t.text.as_str())
+            && !guards.is_empty()
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && i >= 1
+            && (toks[i - 1].is_punct('.') || toks[i - 1].is_punct(':'))
+        {
+            findings.push(Finding {
+                pass: "lock-order",
+                file: sf.rel.clone(),
+                line,
+                func: enclosing_fn(&stack),
+                msg: format!(
+                    "blocking call `{}` while holding {}",
+                    t.text,
+                    held_list(&guards)
+                ),
+            });
+        } else if t.is_ident("join")
+            && !guards.is_empty()
+            && i + 2 < toks.len()
+            && toks[i + 1].is_punct('(')
+            && toks[i + 2].is_punct(')')
+            && i >= 1
+            && toks[i - 1].is_punct('.')
+        {
+            findings.push(Finding {
+                pass: "lock-order",
+                file: sf.rel.clone(),
+                line,
+                func: enclosing_fn(&stack),
+                msg: format!(
+                    "blocking call `join` while holding {}",
+                    held_list(&guards)
+                ),
+            });
+        }
+        i += 1;
+    }
+    findings
+}
+
+/// Report each distinct cycle in the crate-wide acquisition graph,
+/// anchored at the edge that closes it.
+pub fn find_cycles(edges: &EdgeMap) -> Vec<Finding> {
+    let mut graph: BTreeMap<&str, Vec<(&str, &EdgeSite)>> = BTreeMap::new();
+    for ((a, b), site) in edges {
+        graph.entry(a.as_str()).or_default().push((b.as_str(), site));
+    }
+    let mut findings = Vec::new();
+    let mut seen: BTreeSet<Vec<&str>> = BTreeSet::new();
+    for &start in graph.keys() {
+        let mut stack: Vec<(&str, Vec<&str>)> = vec![(start, vec![start])];
+        while let Some((node, path)) = stack.pop() {
+            let Some(nbrs) = graph.get(node) else {
+                continue;
+            };
+            for (nxt, site) in nbrs {
+                if *nxt == start {
+                    let mut cyc = path.clone();
+                    cyc.sort_unstable();
+                    if seen.insert(cyc) {
+                        let mut order: Vec<&str> =
+                            path.iter().map(|p| tail(p)).collect();
+                        order.push(tail(start));
+                        findings.push(Finding {
+                            pass: "lock-order",
+                            file: site.file.clone(),
+                            line: site.line,
+                            func: site.func.clone(),
+                            msg: format!(
+                                "lock-order cycle: {}",
+                                order.join(" -> ")
+                            ),
+                        });
+                    }
+                } else if !path.contains(nxt) {
+                    let mut p2 = path.clone();
+                    p2.push(nxt);
+                    stack.push((nxt, p2));
+                }
+            }
+        }
+    }
+    findings
+}

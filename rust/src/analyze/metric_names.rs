@@ -1,0 +1,439 @@
+//! Pass: metric-name consistency.
+//!
+//! The canonical metric vocabulary lives in
+//! [`crate::metrics::names`]: consts for fixed names and family
+//! functions for parameterized ones (`pipeline.path{N}.bytes`…).
+//! This pass enforces, crate-wide:
+//!
+//! - **no bypass** — every `counter("…")` / `histogram("…")` /
+//!   `gauge("…")` call outside the metrics substrate must take its
+//!   name from `names::…`, never a string/`format!` literal;
+//! - **convention** — every canonical name is `component.name` with
+//!   component ∈ {hapi, ba, pipeline, cos} and lowercase
+//!   `[a-z0-9_]`/placeholder segments;
+//! - **liveness** — every canonical name is produced somewhere in
+//!   `rust/src` (a name only tests consume is drift: the producer was
+//!   deleted or renamed);
+//! - **docs** — every canonical name matches a documented pattern in
+//!   `rust/src/README.md`, and the README documents no name that does
+//!   not exist (placeholders `{x}`/`<x>`/trailing `N` match any
+//!   segment, a trailing `*` matches any suffix).
+//!
+//! Family helpers whose template ends in `.` (e.g. `lane_prefix` →
+//! `"ba.lane.{client}."`) are eviction *prefixes*, not instruments:
+//! only the component check applies to them.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{match_brace, Tok, TokKind};
+use super::{Finding, Scope, SourceFile};
+
+const METRIC_CALLS: &[&str] = &["counter", "histogram", "gauge"];
+const COMPONENTS: &[&str] = &["hapi", "ba", "pipeline", "cos"];
+const NAMES_RS: &str = "rust/src/metrics/names.rs";
+const README: &str = "rust/src/README.md";
+
+/// Extract `const IDENT: &str = "…"` values and family-fn templates
+/// (first string literal containing `.` in each fn body) from
+/// `metrics/names.rs`.
+fn parse_names_rs(
+    toks: &[Tok],
+) -> (BTreeMap<String, String>, BTreeMap<String, String>) {
+    let mut consts = BTreeMap::new();
+    let mut fns = BTreeMap::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_ident("const")
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == TokKind::Ident
+        {
+            let name = toks[i + 1].text.clone();
+            let mut k = i + 2;
+            while k < toks.len() && !toks[k].is_punct('=') {
+                k += 1;
+            }
+            if k + 1 < toks.len() && toks[k + 1].kind == TokKind::Str {
+                consts.insert(name, toks[k + 1].text.clone());
+            }
+            i = k;
+        } else if toks[i].is_ident("fn")
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == TokKind::Ident
+        {
+            let fname = toks[i + 1].text.clone();
+            let mut k = i + 2;
+            while k < toks.len() && !toks[k].is_punct('{') {
+                k += 1;
+            }
+            if k < toks.len() {
+                let end = match_brace(toks, k);
+                for t in &toks[k..end] {
+                    if t.kind == TokKind::Str && t.text.contains('.') {
+                        fns.insert(fname, t.text.clone());
+                        break;
+                    }
+                }
+                i = end;
+            }
+        }
+        i += 1;
+    }
+    (consts, fns)
+}
+
+/// Replace a `{…}`/`<…>` span with `*` inside one segment.
+fn squash(seg: &str, open: char, close: char) -> String {
+    let mut out = String::new();
+    let mut depth = 0usize;
+    for c in seg.chars() {
+        if c == open {
+            if depth == 0 {
+                out.push('*');
+            }
+            depth += 1;
+        } else if c == close && depth > 0 {
+            depth -= 1;
+        } else if depth == 0 {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Template/doc name -> dot segments with placeholders as `*`
+/// (`pipeline.path{N}.bytes` and `pipeline.pathN.bytes` both become
+/// `["pipeline", "path*", "bytes"]`).
+fn normalize(name: &str) -> Vec<String> {
+    name.split('.')
+        .map(|seg| {
+            let s = squash(&squash(seg, '{', '}'), '<', '>');
+            match s.strip_suffix('N') {
+                Some(body)
+                    if !body.is_empty()
+                        && body.chars().all(|c| c.is_ascii_lowercase()) =>
+                {
+                    format!("{body}*")
+                }
+                _ => s,
+            }
+        })
+        .collect()
+}
+
+fn seg_match(doc: &str, name: &str) -> bool {
+    if doc == name || doc == "*" || name == "*" {
+        return true;
+    }
+    if let (Some(d), Some(n)) = (doc.strip_suffix('*'), name.strip_suffix('*'))
+    {
+        if d == n {
+            return true;
+        }
+    }
+    if let Some(d) = doc.strip_suffix('*') {
+        if name.starts_with(d) {
+            return true;
+        }
+    }
+    if let Some(n) = name.strip_suffix('*') {
+        if doc.starts_with(n) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Does the documented pattern cover the canonical name?  A trailing
+/// bare `*` in the doc pattern matches any remaining segments.
+fn pattern_covers(doc: &[String], name: &[String]) -> bool {
+    let mut di = 0;
+    let mut ni = 0;
+    while di < doc.len() && ni < name.len() {
+        if doc[di] == "*" && di == doc.len() - 1 {
+            return true;
+        }
+        if !seg_match(&doc[di], &name[ni]) {
+            return false;
+        }
+        di += 1;
+        ni += 1;
+    }
+    di == doc.len() && ni == name.len()
+}
+
+fn is_metric_pattern(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_lowercase() => {}
+        _ => return false,
+    }
+    let ok = s.chars().all(|c| {
+        c.is_ascii_lowercase()
+            || c.is_ascii_digit()
+            || matches!(c, '_' | '{' | '}' | '<' | '>' | '.' | '*')
+    });
+    ok && s.contains('.') && s.split('.').all(|seg| !seg.is_empty())
+}
+
+/// Backtick-quoted metric patterns in the README (fenced code blocks
+/// stripped; only spans whose first segment is a known component).
+fn readme_metric_patterns(readme: &str) -> BTreeSet<String> {
+    let mut kept = String::new();
+    let mut fenced = false;
+    for ln in readme.lines() {
+        if ln.trim_start().starts_with("```") {
+            fenced = !fenced;
+            continue;
+        }
+        if !fenced {
+            kept.push_str(ln);
+            kept.push('\n');
+        }
+    }
+    let mut pats = BTreeSet::new();
+    for chunk in kept.split('`').skip(1).step_by(2) {
+        if chunk.contains('\n') || !is_metric_pattern(chunk) {
+            continue;
+        }
+        let first = chunk.split('.').next().unwrap_or("");
+        if COMPONENTS.contains(&first) {
+            pats.insert(chunk.to_string());
+        }
+    }
+    pats
+}
+
+enum MetricArg {
+    Literal(String, u32),
+    Format(String, u32),
+    Other,
+}
+
+/// Classify the first argument of the metric call at
+/// `toks[i] == counter/histogram/gauge`.
+fn metric_call_arg(toks: &[Tok], i: usize) -> MetricArg {
+    let mut k = i + 2;
+    if k >= toks.len() {
+        return MetricArg::Other;
+    }
+    if toks[k].kind == TokKind::Str {
+        return MetricArg::Literal(toks[k].text.clone(), toks[k].line);
+    }
+    while k < toks.len() && (toks[k].is_punct('&') || toks[k].is_punct('*')) {
+        k += 1;
+    }
+    if k < toks.len() && toks[k].is_ident("format") {
+        k += 1;
+        while k < toks.len()
+            && toks[k].kind != TokKind::Str
+            && !toks[k].is_punct(')')
+        {
+            k += 1;
+        }
+        if k < toks.len() && toks[k].kind == TokKind::Str {
+            return MetricArg::Format(toks[k].text.clone(), toks[k].line);
+        }
+    }
+    MetricArg::Other
+}
+
+pub fn run(files: &[SourceFile], readme: Option<&str>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut consts = BTreeMap::new();
+    let mut fam_fns = BTreeMap::new();
+    for sf in files {
+        if sf.rel.ends_with("metrics/names.rs") {
+            (consts, fam_fns) = parse_names_rs(&sf.toks);
+        }
+    }
+    let mut produced: BTreeSet<String> = BTreeSet::new();
+    let mut consumed: BTreeSet<String> = BTreeSet::new();
+    for sf in files {
+        // The metrics substrate itself (registry internals + names.rs)
+        // is the one place allowed to touch raw name strings.
+        if sf.rel.contains("/metrics/") {
+            continue;
+        }
+        let toks = &sf.toks;
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            if t.kind == TokKind::Ident
+                && METRIC_CALLS.contains(&t.text.as_str())
+                && i >= 1
+                && toks[i - 1].is_punct('.')
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct('(')
+            {
+                match metric_call_arg(toks, i) {
+                    MetricArg::Literal(name, line)
+                    | MetricArg::Format(name, line) => {
+                        findings.push(Finding {
+                            pass: "metric-names",
+                            file: sf.rel.clone(),
+                            line,
+                            func: "<fn>".to_string(),
+                            msg: format!(
+                                "metric name {name:?} bypasses \
+                                 metrics::names"
+                            ),
+                        });
+                    }
+                    MetricArg::Other => {}
+                }
+            }
+            if t.is_ident("names")
+                && i + 3 < toks.len()
+                && toks[i + 1].is_punct(':')
+                && toks[i + 2].is_punct(':')
+                && toks[i + 3].kind == TokKind::Ident
+            {
+                let ident = toks[i + 3].text.clone();
+                if sf.scope == Scope::Src && !sf.mask[i] {
+                    produced.insert(ident);
+                } else {
+                    consumed.insert(ident);
+                }
+            }
+        }
+    }
+    if consts.is_empty() && fam_fns.is_empty() {
+        // No names.rs in the scanned set (fixture mode): only the
+        // bypass check applies.
+        return findings;
+    }
+    let mut canon: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    for (cname, lit) in consts.iter().chain(fam_fns.iter()) {
+        canon.insert(cname.clone(), normalize(lit));
+    }
+    let raw_of = |cname: &str| -> String {
+        consts
+            .get(cname)
+            .or_else(|| fam_fns.get(cname))
+            .cloned()
+            .unwrap_or_default()
+    };
+    // Templates ending in '.' are eviction-prefix helpers: they name
+    // a family, not an instrument.
+    let prefixes: BTreeSet<&String> = canon
+        .iter()
+        .filter(|(_, segs)| segs.last().map(|s| s.is_empty()).unwrap_or(false))
+        .map(|(c, _)| c)
+        .collect();
+    for (cname, segs) in &canon {
+        let raw = raw_of(cname);
+        let component_ok =
+            segs.first().map(|s| COMPONENTS.contains(&s.as_str()));
+        if prefixes.contains(cname) {
+            if component_ok != Some(true) {
+                findings.push(Finding {
+                    pass: "metric-names",
+                    file: NAMES_RS.to_string(),
+                    line: 0,
+                    func: cname.clone(),
+                    msg: format!(
+                        "{raw:?} violates the component.name convention"
+                    ),
+                });
+            }
+            continue;
+        }
+        if segs.len() < 2 || component_ok != Some(true) {
+            findings.push(Finding {
+                pass: "metric-names",
+                file: NAMES_RS.to_string(),
+                line: 0,
+                func: cname.clone(),
+                msg: format!(
+                    "{raw:?} violates the component.name convention"
+                ),
+            });
+            continue;
+        }
+        for seg in &segs[1..] {
+            if !seg_convention_ok(seg) {
+                findings.push(Finding {
+                    pass: "metric-names",
+                    file: NAMES_RS.to_string(),
+                    line: 0,
+                    func: cname.clone(),
+                    msg: format!(
+                        "{raw:?} segment {seg:?} violates naming \
+                         conventions"
+                    ),
+                });
+            }
+        }
+    }
+    for cname in canon.keys() {
+        if produced.contains(cname) {
+            continue;
+        }
+        let msg = if consumed.contains(cname) {
+            format!(
+                "`names::{cname}` is consumed by tests/benches but never \
+                 produced in rust/src"
+            )
+        } else {
+            format!("`names::{cname}` is never used")
+        };
+        findings.push(Finding {
+            pass: "metric-names",
+            file: NAMES_RS.to_string(),
+            line: 0,
+            func: cname.clone(),
+            msg,
+        });
+    }
+    if let Some(readme) = readme {
+        let doc_raw = readme_metric_patterns(readme);
+        let doc_pats: Vec<Vec<String>> =
+            doc_raw.iter().map(|p| normalize(p)).collect();
+        for (cname, segs) in &canon {
+            if prefixes.contains(cname) {
+                continue;
+            }
+            if !doc_pats.iter().any(|dp| pattern_covers(dp, segs)) {
+                findings.push(Finding {
+                    pass: "metric-names",
+                    file: README.to_string(),
+                    line: 0,
+                    func: cname.clone(),
+                    msg: format!(
+                        "metric {:?} (`names::{cname}`) is undocumented \
+                         in rust/src/README.md",
+                        raw_of(cname)
+                    ),
+                });
+            }
+        }
+        for dp_raw in &doc_raw {
+            let dp = normalize(dp_raw);
+            if !canon.values().any(|segs| pattern_covers(&dp, segs)) {
+                findings.push(Finding {
+                    pass: "metric-names",
+                    file: README.to_string(),
+                    line: 0,
+                    func: "<doc>".to_string(),
+                    msg: format!(
+                        "README documents unknown metric {dp_raw:?}"
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// Non-component segments: `[a-z0-9_]+`, `*`, or `[a-z]+*`.
+fn seg_convention_ok(s: &str) -> bool {
+    if s == "*" {
+        return true;
+    }
+    if let Some(body) = s.strip_suffix('*') {
+        return !body.is_empty()
+            && body.chars().all(|c| c.is_ascii_lowercase());
+    }
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}

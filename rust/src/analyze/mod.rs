@@ -1,0 +1,282 @@
+//! `hapi-analyze` — repo-native static analysis for the hapi crate.
+//!
+//! Five passes lex the crate's own sources (no rustc, no syn — the
+//! crate stays zero-dependency) and enforce invariants the compiler
+//! cannot see:
+//!
+//! - [`lockorder`] — builds the lock-acquisition graph (which locks
+//!   are taken while which guards are live), flags acquisition-order
+//!   cycles, same-lock re-entry, and blocking calls (socket I/O,
+//!   channel recv, `sleep`, `join`) made while holding a guard;
+//! - [`condvar`] — every `Condvar::wait`/`wait_timeout` must sit in a
+//!   `while`/`loop` predicate re-check, and timed waits must
+//!   recompute their deadline inside the retry loop;
+//! - [`metric_names`] — metric name literals must come from
+//!   [`crate::metrics::names`]; every canonical name must be produced
+//!   in `rust/src`, follow the `component.name` convention, and be
+//!   documented in `rust/src/README.md` (and the README must not
+//!   document names that do not exist);
+//! - [`config_drift`] — every `HapiConfig` field must have a JSON key
+//!   in `merge_json`, a CLI flag in `apply_args`, a `to_json` dump,
+//!   and a README mention;
+//! - [`panics`] — `unwrap()`/`expect()` in library code must match
+//!   the crate's safe idioms (lock/RwLock poisoning propagation,
+//!   `Condvar` wait results, thread-join in drop paths) or carry an
+//!   allowlist entry with a one-line justification.
+//!
+//! Findings that are deliberate carry entries in
+//! `rust/analyze/allowlist.txt` (`pass | file | function |
+//! justification`); entries that stop matching anything become
+//! findings themselves, so the allowlist cannot rot.  The
+//! `hapi-analyze` binary (`rust/src/bin/hapi_analyze.rs`) drives the
+//! passes and gates CI with `--deny-findings`.
+
+pub mod condvar;
+pub mod config_drift;
+pub mod lexer;
+pub mod lockorder;
+pub mod metric_names;
+pub mod panics;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use self::lexer::{lex, test_mask, Tok};
+
+/// Pass identifiers, in report order.  `allowlist` (stale/malformed
+/// entries) is a pseudo-pass produced by the driver itself.
+pub const PASSES: &[&str] = &[
+    "lock-order",
+    "condvar",
+    "panics",
+    "metric-names",
+    "config-drift",
+    "allowlist",
+];
+
+/// Where an analyzed file lives; passes use this to distinguish
+/// producers (library code) from consumers (tests/benches/examples).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Scope {
+    Src,
+    Test,
+    Bench,
+    Example,
+}
+
+/// A lexed source file plus its test-module mask.
+pub struct SourceFile {
+    /// Path relative to the repo root, `/`-separated.
+    pub rel: String,
+    pub toks: Vec<Tok>,
+    /// `mask[i]` is true when token `i` sits inside a
+    /// `#[cfg(test)] mod … { … }` block.
+    pub mask: Vec<bool>,
+    pub scope: Scope,
+}
+
+/// One analyzer finding, `file:line` addressable.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: u32,
+    /// Enclosing function (or a pass-specific anchor such as the
+    /// const name for metric findings); allowlist entries match on
+    /// (pass, file, func) so line drift does not invalidate them.
+    pub func: String,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: [{}] ({}) {}",
+            self.file, self.line, self.pass, self.func, self.msg
+        )
+    }
+}
+
+/// Result of a full analyzer run.
+pub struct Report {
+    /// Findings that survived the allowlist, sorted by
+    /// (file, line, pass).
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings suppressed by allowlist entries.
+    pub allowlisted: usize,
+}
+
+const ALLOWLIST_REL: &str = "rust/analyze/allowlist.txt";
+const README_REL: &str = "rust/src/README.md";
+
+/// Run every pass over the tree rooted at `root` (the repo root: the
+/// directory holding `rust/src`, `rust/tests`, `rust/benches` and
+/// `examples`), then apply the allowlist.
+pub fn run(root: &Path) -> Result<Report> {
+    let files = scan_tree(root)?;
+    if files.is_empty() {
+        return Err(Error::Config(format!(
+            "no .rs files under {} — wrong --root?",
+            root.display()
+        )));
+    }
+    let readme = fs::read_to_string(root.join(README_REL)).ok();
+    let mut findings = Vec::new();
+    let mut edges = lockorder::EdgeMap::new();
+    for f in files.iter().filter(|f| f.scope == Scope::Src) {
+        findings.extend(lockorder::run_file(f, &mut edges));
+        findings.extend(condvar::run_file(f));
+        findings.extend(panics::run_file(f));
+    }
+    findings.extend(lockorder::find_cycles(&edges));
+    findings.extend(metric_names::run(&files, readme.as_deref()));
+    findings.extend(config_drift::run(&files, readme.as_deref()));
+    let allow = fs::read_to_string(root.join(ALLOWLIST_REL)).unwrap_or_default();
+    let (mut kept, allowlisted) = apply_allowlist(findings, &allow);
+    kept.sort_by(|a, b| {
+        (&a.file, a.line, a.pass, &a.func)
+            .cmp(&(&b.file, b.line, b.pass, &b.func))
+    });
+    Ok(Report {
+        findings: kept,
+        files_scanned: files.len(),
+        allowlisted,
+    })
+}
+
+/// Lex every `.rs` file under the four scan roots, in deterministic
+/// (sorted) order.  Fixture snippets under `rust/analyze/fixtures/`
+/// are deliberately outside these roots.
+pub fn scan_tree(root: &Path) -> Result<Vec<SourceFile>> {
+    let roots = [
+        ("rust/src", Scope::Src),
+        ("rust/tests", Scope::Test),
+        ("rust/benches", Scope::Bench),
+        ("examples", Scope::Example),
+    ];
+    let mut out = Vec::new();
+    for (sub, scope) in roots {
+        let dir = root.join(sub);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut paths = Vec::new();
+        collect_rs(&dir, &mut paths)?;
+        paths.sort();
+        for p in paths {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(load_file(&p, rel, scope)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Lex a single file into a [`SourceFile`] (fixture tests use this to
+/// feed passes individual snippets with a chosen scope).
+pub fn load_file(path: &Path, rel: String, scope: Scope) -> Result<SourceFile> {
+    let text = fs::read_to_string(path)?;
+    let toks = lex(&text);
+    let mask = test_mask(&toks);
+    Ok(SourceFile {
+        rel,
+        toks,
+        mask,
+        scope,
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+struct AllowEntry<'a> {
+    pass: &'a str,
+    file: &'a str,
+    func: &'a str,
+    lineno: u32,
+    used: bool,
+}
+
+/// Suppress findings matched by `pass | file | function |
+/// justification` entries; malformed and stale entries become
+/// findings of the `allowlist` pseudo-pass.  Returns (surviving
+/// findings, suppressed count).
+pub fn apply_allowlist(
+    findings: Vec<Finding>,
+    text: &str,
+) -> (Vec<Finding>, usize) {
+    let mut entries: Vec<AllowEntry> = Vec::new();
+    let mut kept: Vec<Finding> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(4, '|').map(|s| s.trim()).collect();
+        if parts.len() != 4 || parts[3].is_empty() {
+            kept.push(Finding {
+                pass: "allowlist",
+                file: ALLOWLIST_REL.to_string(),
+                line: idx as u32 + 1,
+                func: "<entry>".to_string(),
+                msg: format!(
+                    "malformed entry {line:?} (want `pass | file | \
+                     function | justification`)"
+                ),
+            });
+            continue;
+        }
+        entries.push(AllowEntry {
+            pass: parts[0],
+            file: parts[1],
+            func: parts[2],
+            lineno: idx as u32 + 1,
+            used: false,
+        });
+    }
+    let mut suppressed = 0usize;
+    for f in findings {
+        let mut hit = false;
+        for e in entries.iter_mut() {
+            if e.pass == f.pass && e.file == f.file && e.func == f.func {
+                e.used = true;
+                hit = true;
+            }
+        }
+        if hit {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    for e in &entries {
+        if !e.used {
+            kept.push(Finding {
+                pass: "allowlist",
+                file: ALLOWLIST_REL.to_string(),
+                line: e.lineno,
+                func: e.func.to_string(),
+                msg: format!(
+                    "stale entry `{} | {} | {}` matches no finding — \
+                     remove it (the code it excused has changed)",
+                    e.pass, e.file, e.func
+                ),
+            });
+        }
+    }
+    (kept, suppressed)
+}

@@ -1,0 +1,126 @@
+//! Pass: panic-site audit.
+//!
+//! `unwrap()`/`expect()` in library code (`rust/src`, unit-test
+//! modules masked) is a crash waiting for a caller.  Two idioms are
+//! exempt because panicking is the crate's documented policy there:
+//!
+//! - `….lock().unwrap()` / `….read().unwrap()` / `….write().unwrap()`
+//!   — lock poisoning means another thread already panicked;
+//!   propagating is strictly better than limping on with torn state;
+//! - `….wait(…).unwrap()` / `….wait_timeout(…).unwrap()` — same
+//!   poisoning story for condvar waits;
+//! - `….join().unwrap()` — a worker that panicked must not be
+//!   silently swallowed at shutdown.
+//!
+//! Everything else must either switch to `?`/`unwrap_or` or carry an
+//! allowlist entry whose justification names the invariant that makes
+//! the panic unreachable.
+
+use super::lexer::{Tok, TokKind};
+use super::lockorder::enclosing_fn;
+use super::{Finding, SourceFile};
+
+const EXEMPT_ANY_ARGS: &[&str] = &["wait", "wait_timeout"];
+const EXEMPT_EMPTY_ARGS: &[&str] = &["lock", "read", "write", "join"];
+
+/// For `toks[i]` == `unwrap`/`expect` preceded by `.`, return the
+/// callee of the call whose result is unwrapped and whether that call
+/// had empty arguments — i.e. for `x.lock().unwrap()` returns
+/// `("lock", true)`.  `None` when the receiver is not a call.
+fn callee_before_unwrap(toks: &[Tok], i: usize) -> Option<(&str, bool)> {
+    if i < 2 || !toks[i - 2].is_punct(')') {
+        return None;
+    }
+    let close = i - 2;
+    let mut depth = 0i64;
+    let mut k = close;
+    loop {
+        let t = &toks[k];
+        if t.is_punct(')') {
+            depth += 1;
+        } else if t.is_punct('(') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        if k == 0 {
+            return None;
+        }
+        k -= 1;
+    }
+    if k >= 1 && toks[k - 1].kind == TokKind::Ident {
+        Some((toks[k - 1].text.as_str(), close == k + 1))
+    } else {
+        None
+    }
+}
+
+pub fn run_file(sf: &SourceFile) -> Vec<Finding> {
+    let toks = &sf.toks;
+    let mut findings = Vec::new();
+    let mut stack: Vec<(&'static str, Option<String>)> = Vec::new();
+    let mut pending: Option<&'static str> = None;
+    let mut pending_fn: Option<String> = None;
+    let mut i = 0;
+    while i < toks.len() {
+        if sf.mask[i] {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        if t.is_ident("fn")
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == TokKind::Ident
+        {
+            pending = Some("fn");
+            pending_fn = Some(toks[i + 1].text.clone());
+        } else if t.is_ident("loop")
+            || t.is_ident("while")
+            || t.is_ident("for")
+            || t.is_ident("if")
+            || t.is_ident("match")
+        {
+            pending = Some("block");
+        } else if t.is_punct('{') {
+            let fname = if pending == Some("fn") {
+                pending_fn.take()
+            } else {
+                None
+            };
+            stack.push((pending.unwrap_or("block"), fname));
+            pending = None;
+            pending_fn = None;
+        } else if t.is_punct('}') {
+            stack.pop();
+        } else if (t.is_ident("unwrap") || t.is_ident("expect"))
+            && i >= 1
+            && toks[i - 1].is_punct('.')
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('(')
+        {
+            let exempt = match callee_before_unwrap(toks, i) {
+                Some((callee, empty)) => {
+                    EXEMPT_ANY_ARGS.contains(&callee)
+                        || (EXEMPT_EMPTY_ARGS.contains(&callee) && empty)
+                }
+                None => false,
+            };
+            if !exempt {
+                let fname = enclosing_fn(&stack);
+                findings.push(Finding {
+                    pass: "panics",
+                    file: sf.rel.clone(),
+                    line: t.line,
+                    func: fname.clone(),
+                    msg: format!(
+                        "`{}()` in library code (fn `{fname}`)",
+                        t.text
+                    ),
+                });
+            }
+        }
+        i += 1;
+    }
+    findings
+}

@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::table::fnum;
 use crate::util::fmt_duration;
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -139,6 +140,73 @@ pub fn speedup(baseline: Duration, ours: Duration) -> String {
     format!("{}x", fnum(baseline.as_secs_f64() / ours.as_secs_f64()))
 }
 
+/// Machine-readable counterpart of the printed `bench …` lines: the
+/// bench binaries collect [`Stats`] and free-form scalars here and
+/// dump them with `--json [PATH]` (see [`json_path`]).  Keys stay in
+/// insertion order inside each entry but the report object itself is
+/// serialized through [`Json`], so the output is deterministic.
+pub struct BenchReport {
+    bench: String,
+    entries: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        BenchReport {
+            bench: bench.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record a sampled-stats result under `name` (all times in ns).
+    pub fn stats(&mut self, name: &str, s: &Stats) {
+        let obj = Json::obj(vec![
+            ("samples", Json::num(s.samples as f64)),
+            ("mean_ns", Json::num(s.mean.as_nanos() as f64)),
+            ("stddev_ns", Json::num(s.stddev.as_nanos() as f64)),
+            ("min_ns", Json::num(s.min.as_nanos() as f64)),
+            ("p50_ns", Json::num(s.p50.as_nanos() as f64)),
+            ("p95_ns", Json::num(s.p95.as_nanos() as f64)),
+        ]);
+        self.entries.push((name.to_string(), obj));
+    }
+
+    /// Record a free-form scalar (epoch seconds, MB/s, a count, …).
+    pub fn value(&mut self, name: &str, v: f64) {
+        self.entries.push((name.to_string(), Json::num(v)));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let results: Vec<(&str, Json)> = self
+            .entries
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.clone()))
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::str(self.bench.clone())),
+            ("results", Json::obj(results)),
+        ])
+    }
+
+    /// Pretty-print the report to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+}
+
+/// The `--json [PATH]` convention shared by the bench binaries: the
+/// bare flag writes the canonical `BENCH_7.json`, `--json PATH`
+/// redirects it, and no flag means no report.
+pub fn json_path(args: &crate::cli::Args) -> Option<String> {
+    if let Some(p) = args.get("json") {
+        return Some(p.to_string());
+    }
+    if args.flag("json") {
+        return Some("BENCH_7.json".to_string());
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +240,47 @@ mod tests {
         assert_eq!(
             speedup(Duration::from_secs(4), Duration::from_secs(2)),
             "2.00x"
+        );
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let s = Stats::from_samples(vec![
+            Duration::from_micros(10),
+            Duration::from_micros(30),
+        ]);
+        let mut r = BenchReport::new("unit");
+        r.stats("fast_path", &s);
+        r.value("epoch_secs", 1.25);
+        let doc = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "unit");
+        let res = doc.get("results").unwrap();
+        let fp = res.get("fast_path").unwrap();
+        assert_eq!(fp.get("samples").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(
+            fp.get("p95_ns").unwrap().as_u64().unwrap(),
+            30_000
+        );
+        assert_eq!(
+            res.get("epoch_secs").unwrap().as_f64().unwrap(),
+            1.25
+        );
+    }
+
+    #[test]
+    fn json_path_convention() {
+        let parse = |s: &[&str]| {
+            crate::cli::Args::parse(s.iter().map(|x| x.to_string()))
+                .unwrap()
+        };
+        assert_eq!(json_path(&parse(&[])), None);
+        assert_eq!(
+            json_path(&parse(&["--json"])).as_deref(),
+            Some("BENCH_7.json")
+        );
+        assert_eq!(
+            json_path(&parse(&["--json", "out.json"])).as_deref(),
+            Some("out.json")
         );
     }
 }

@@ -1,0 +1,119 @@
+//! `hapi-analyze` — run the crate's static-analysis passes over its
+//! own sources.
+//!
+//! ```text
+//! cargo run --bin hapi-analyze -- [--root DIR] [--deny-findings]
+//!                                 [--json PATH]
+//! ```
+//!
+//! - `--root DIR` — repo root to scan (default: `CARGO_MANIFEST_DIR`,
+//!   falling back to `.`);
+//! - `--deny-findings` — exit non-zero when any finding survives the
+//!   allowlist (the CI gate);
+//! - `--json PATH` — also write a machine-readable summary.
+//!
+//! Exit codes: 0 clean (or findings merely reported), 1 findings with
+//! `--deny-findings`, 2 usage/IO error.
+
+use std::path::PathBuf;
+
+use hapi::analyze;
+use hapi::cli::Args;
+use hapi::util::json::Json;
+
+fn main() {
+    std::process::exit(real_main());
+}
+
+fn real_main() -> i32 {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("hapi-analyze: argument error: {e}");
+            return 2;
+        }
+    };
+    if args.flag("help") {
+        println!(
+            "usage: hapi-analyze [--root DIR] [--deny-findings] \
+             [--json PATH]\n\npasses: {}",
+            analyze::PASSES.join(", ")
+        );
+        return 0;
+    }
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => PathBuf::from(
+            std::env::var("CARGO_MANIFEST_DIR")
+                .unwrap_or_else(|_| ".".to_string()),
+        ),
+    };
+    let report = match analyze::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("hapi-analyze: {e}");
+            return 2;
+        }
+    };
+    for f in &report.findings {
+        println!("{}", f.render());
+    }
+    let mut counts: Vec<(&str, usize)> =
+        analyze::PASSES.iter().map(|p| (*p, 0usize)).collect();
+    for f in &report.findings {
+        for c in counts.iter_mut() {
+            if c.0 == f.pass {
+                c.1 += 1;
+            }
+        }
+    }
+    let by_pass: Vec<String> = counts
+        .iter()
+        .filter(|(_, n)| *n > 0)
+        .map(|(p, n)| format!("{p}: {n}"))
+        .collect();
+    println!(
+        "hapi-analyze: {} file(s) scanned, {} finding(s), {} allowlisted{}",
+        report.files_scanned,
+        report.findings.len(),
+        report.allowlisted,
+        if by_pass.is_empty() {
+            String::new()
+        } else {
+            format!("  [{}]", by_pass.join(", "))
+        }
+    );
+    if let Some(path) = args.get("json") {
+        let findings: Vec<Json> = report
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("pass", Json::str(f.pass)),
+                    ("file", Json::str(f.file.clone())),
+                    ("line", Json::num(f.line)),
+                    ("func", Json::str(f.func.clone())),
+                    ("msg", Json::str(f.msg.clone())),
+                ])
+            })
+            .collect();
+        let count_pairs: Vec<(&str, Json)> = counts
+            .iter()
+            .map(|(p, n)| (*p, Json::num(*n as f64)))
+            .collect();
+        let doc = Json::obj(vec![
+            ("files_scanned", Json::num(report.files_scanned as f64)),
+            ("allowlisted", Json::num(report.allowlisted as f64)),
+            ("findings", Json::Arr(findings)),
+            ("counts", Json::obj(count_pairs)),
+        ]);
+        if let Err(e) = std::fs::write(path, doc.to_string_pretty()) {
+            eprintln!("hapi-analyze: cannot write {path}: {e}");
+            return 2;
+        }
+    }
+    if args.flag("deny-findings") && !report.findings.is_empty() {
+        return 1;
+    }
+    0
+}

@@ -39,7 +39,7 @@ use std::time::{Duration, Instant};
 use crate::config::HapiConfig;
 use crate::cos::protocol::CosConnection;
 use crate::error::{Error, Result};
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::netsim::Topology;
 use crate::profiler::AppProfile;
 use crate::runtime::{DeviceKind, DeviceSim, ExecBackend, Tensor};
@@ -510,7 +510,7 @@ impl HapiClient {
                     &labels[first..first + count],
                 )?;
                 self.registry
-                    .histogram("pipeline.compute_ns")
+                    .histogram(names::PIPELINE_COMPUTE_NS)
                     .record(t_comp.elapsed().as_nanos() as u64);
                 stats.comp += t_comp.elapsed();
                 stats.iterations += 1;
@@ -561,7 +561,7 @@ impl HapiClient {
                             if new != old {
                                 cur_split.store(new, Ordering::Relaxed);
                                 self.registry
-                                    .counter("pipeline.split_redecisions")
+                                    .counter(names::PIPELINE_SPLIT_REDECISIONS)
                                     .inc();
                             }
                         }

@@ -60,7 +60,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::Result;
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 
 /// One unit of pipelined work: a training iteration's shard group.
 #[derive(Debug, Clone)]
@@ -590,24 +590,24 @@ where
         jobs.iter().all(|j| !j.shards.is_empty()),
         "every job must carry at least one shard"
     );
-    registry.gauge("pipeline.depth").set(depth as i64);
-    registry.gauge("pipeline.fanout").set(fanout as i64);
+    registry.gauge(names::PIPELINE_DEPTH).set(depth as i64);
+    registry.gauge(names::PIPELINE_FANOUT).set(fanout as i64);
     let mut report = PipelineReport::default();
     if jobs.is_empty() {
         return Ok(report);
     }
     // Per-connection accounting, resolved once (workers share by index).
     let conn_bytes: Vec<_> = (0..fanout)
-        .map(|c| registry.counter(&format!("pipeline.conn{c}.bytes")))
+        .map(|c| registry.counter(&names::conn_bytes(c)))
         .collect();
     let conn_lat: Vec<_> = (0..fanout)
-        .map(|c| registry.histogram(&format!("pipeline.conn{c}.fetch_ns")))
+        .map(|c| registry.histogram(&names::conn_fetch_ns(c)))
         .collect();
-    let shard_lat = registry.histogram("pipeline.shard_fetch_ns");
-    let retries = registry.counter("pipeline.shard_retries");
-    let hedges = registry.counter("pipeline.hedges");
-    let hedge_wins = registry.counter("pipeline.hedge_wins");
-    let hedge_wasted = registry.counter("pipeline.hedge_wasted_bytes");
+    let shard_lat = registry.histogram(names::PIPELINE_SHARD_FETCH_NS);
+    let retries = registry.counter(names::PIPELINE_SHARD_RETRIES);
+    let hedges = registry.counter(names::PIPELINE_HEDGES);
+    let hedge_wins = registry.counter(names::PIPELINE_HEDGE_WINS);
+    let hedge_wasted = registry.counter(names::PIPELINE_HEDGE_WASTED_BYTES);
 
     let shared = ShardedShared {
         state: Mutex::new(ShardedState {
@@ -1004,7 +1004,7 @@ where
             };
             let stall = wait0.elapsed();
             registry
-                .histogram("pipeline.stall_ns")
+                .histogram(names::PIPELINE_STALL_NS)
                 .record(stall.as_nanos() as u64);
             let fetched = match fetched {
                 Ok(f) => f,
@@ -1024,7 +1024,7 @@ where
             report.iterations += 1;
             report.bytes += fetched.bytes;
             report.stall += stall;
-            registry.counter("pipeline.iterations").inc();
+            registry.counter(names::PIPELINE_ITERATIONS).inc();
             let delivery = Delivery {
                 seq,
                 payload: fetched.payload,
@@ -1044,7 +1044,7 @@ where
     let st = shared.state.lock().unwrap();
     report.inflight_max = st.inflight_max;
     registry
-        .gauge("pipeline.inflight_max")
+        .gauge(names::PIPELINE_INFLIGHT_MAX)
         .set(st.inflight_max as i64);
     Ok(report)
 }
@@ -1134,9 +1134,9 @@ fn finish_shard<J, S, T, A>(
             );
             if assembled.is_ok() {
                 registry
-                    .histogram("pipeline.fetch_ns")
+                    .histogram(names::PIPELINE_FETCH_NS)
                     .record(fetch_time.as_nanos() as u64);
-                registry.counter("pipeline.bytes").add(bytes);
+                registry.counter(names::PIPELINE_BYTES).add(bytes);
             }
             let mut st = shared.state.lock().unwrap();
             st.results.insert(seq, assembled);
@@ -1429,11 +1429,11 @@ mod tests {
         let jobs = jobs_for(8, 1);
         let reg = Registry::new();
         run(2, &jobs, &reg, |j| Ok(fetched(j.seq)), |_| Ok(())).unwrap();
-        assert_eq!(reg.counter("pipeline.iterations").get(), 8);
-        assert_eq!(reg.counter("pipeline.bytes").get(), 80);
-        assert!(reg.gauge("pipeline.inflight_max").get() <= 2);
-        assert_eq!(reg.gauge("pipeline.depth").get(), 2);
-        assert_eq!(reg.histogram("pipeline.fetch_ns").count(), 8);
+        assert_eq!(reg.counter(names::PIPELINE_ITERATIONS).get(), 8);
+        assert_eq!(reg.counter(names::PIPELINE_BYTES).get(), 80);
+        assert!(reg.gauge(names::PIPELINE_INFLIGHT_MAX).get() <= 2);
+        assert_eq!(reg.gauge(names::PIPELINE_DEPTH).get(), 2);
+        assert_eq!(reg.histogram(names::PIPELINE_FETCH_NS).count(), 8);
     }
 
     // --- sharded engine ------------------------------------------------
@@ -1479,11 +1479,11 @@ mod tests {
         assert_eq!(report.iterations, 8);
         assert_eq!(report.bytes, 24 * 5);
         assert!(report.inflight_max <= 2);
-        assert_eq!(reg.gauge("pipeline.fanout").get(), 4);
-        assert_eq!(reg.histogram("pipeline.shard_fetch_ns").count(), 24);
+        assert_eq!(reg.gauge(names::PIPELINE_FANOUT).get(), 4);
+        assert_eq!(reg.histogram(names::PIPELINE_SHARD_FETCH_NS).count(), 24);
         // Per-connection byte accounting sums to the total.
         let per_conn: u64 = (0..4)
-            .map(|c| reg.counter(&format!("pipeline.conn{c}.bytes")).get())
+            .map(|c| reg.counter(&names::conn_bytes(c)).get())
             .sum();
         assert_eq!(per_conn, 24 * 5);
     }
@@ -1529,7 +1529,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(report.iterations, 6);
-        assert_eq!(reg.counter("pipeline.shard_retries").get(), 4);
+        assert_eq!(reg.counter(names::PIPELINE_SHARD_RETRIES).get(), 4);
     }
 
     #[test]
@@ -1712,14 +1712,14 @@ mod tests {
         )
         .unwrap();
         assert_eq!(seen, vec![0, 1, 2, 3]);
-        assert_eq!(reg.counter("pipeline.hedges").get(), 1);
-        assert_eq!(reg.counter("pipeline.hedge_wins").get(), 1);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGES).get(), 1);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGE_WINS).get(), 1);
         // The straggler completed after losing: its payload bytes are
         // wasted, not delivered — `pipeline.bytes` counts winners only.
-        assert_eq!(reg.counter("pipeline.hedge_wasted_bytes").get(), 10);
-        assert_eq!(reg.counter("pipeline.bytes").get(), 40);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGE_WASTED_BYTES).get(), 10);
+        assert_eq!(reg.counter(names::PIPELINE_BYTES).get(), 40);
         let per_conn: u64 = (0..2)
-            .map(|c| reg.counter(&format!("pipeline.conn{c}.bytes")).get())
+            .map(|c| reg.counter(&names::conn_bytes(c)).get())
             .sum();
         assert_eq!(per_conn, 40, "losers must not land in conn bytes");
     }
@@ -1754,10 +1754,10 @@ mod tests {
             |_| Ok(()),
         )
         .unwrap();
-        assert_eq!(reg.counter("pipeline.hedges").get(), 1);
-        assert_eq!(reg.counter("pipeline.hedge_wins").get(), 0);
-        assert_eq!(reg.counter("pipeline.hedge_wasted_bytes").get(), 7);
-        assert_eq!(reg.counter("pipeline.bytes").get(), 21);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGES).get(), 1);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGE_WINS).get(), 0);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGE_WASTED_BYTES).get(), 7);
+        assert_eq!(reg.counter(names::PIPELINE_BYTES).get(), 21);
     }
 
     #[test]
@@ -1795,9 +1795,9 @@ mod tests {
         )
         .unwrap();
         assert_eq!(seen, vec![0, 1, 2]);
-        assert_eq!(reg.counter("pipeline.hedges").get(), 1);
-        assert_eq!(reg.counter("pipeline.hedge_wins").get(), 0);
-        assert_eq!(reg.counter("pipeline.hedge_wasted_bytes").get(), 0);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGES).get(), 1);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGE_WINS).get(), 0);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGE_WASTED_BYTES).get(), 0);
     }
 
     #[test]
@@ -1828,8 +1828,8 @@ mod tests {
             |_| Ok(()),
         )
         .unwrap();
-        assert_eq!(reg.counter("pipeline.hedges").get(), 0);
-        assert_eq!(reg.counter("pipeline.bytes").get(), 4);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGES).get(), 0);
+        assert_eq!(reg.counter(names::PIPELINE_BYTES).get(), 4);
     }
 
     /// Panic-guard vs hedge-win race: when a hedge wins a shard and
@@ -1881,7 +1881,7 @@ mod tests {
             }),
         );
         assert!(outcome.is_err(), "worker panic must propagate");
-        assert_eq!(reg.counter("pipeline.hedge_wins").get(), 1);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGE_WINS).get(), 1);
     }
 
     /// The satellite metric-parity fix: a failed first attempt's
@@ -1913,10 +1913,10 @@ mod tests {
             |_| Ok(()),
         )
         .unwrap();
-        assert_eq!(reg.counter("pipeline.shard_retries").get(), 6);
+        assert_eq!(reg.counter(names::PIPELINE_SHARD_RETRIES).get(), 6);
         let mut served = 0;
         for c in 0..2 {
-            let h = reg.histogram(&format!("pipeline.conn{c}.fetch_ns"));
+            let h = reg.histogram(&names::conn_fetch_ns(c));
             served += h.count();
             assert!(
                 h.max() < 40_000_000,

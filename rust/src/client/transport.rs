@@ -64,7 +64,7 @@ use std::time::{Duration, Instant};
 
 use super::pipeline::{ShardCtx, Transport};
 use crate::config::HapiConfig;
-use crate::metrics::{Counter, Histogram, Registry};
+use crate::metrics::{names, Counter, Histogram, Registry};
 use crate::netsim::Topology;
 
 /// EWMA smoothing for the goodput estimate: new samples carry 1/4.
@@ -188,11 +188,8 @@ impl TransportScheduler {
                     rx: AtomicU64::new(0),
                     last_sample_ns: AtomicU64::new(0),
                     last_probe_ns: AtomicU64::new(0),
-                    bytes: registry
-                        .counter(&format!("pipeline.path{p}.bytes")),
-                    fetch_ns: registry.histogram(&format!(
-                        "pipeline.path{p}.fetch_ns"
-                    )),
+                    bytes: registry.counter(&names::path_bytes(p)),
+                    fetch_ns: registry.histogram(&names::path_fetch_ns(p)),
                 }
             })
             .collect();
@@ -216,10 +213,10 @@ impl TransportScheduler {
             hedge_committed: AtomicU64::new(0),
             max_shard_bytes: AtomicU64::new(0),
             probe_interval: Duration::from_millis(cfg.probe_interval_ms),
-            repins: registry.counter("pipeline.repins"),
-            repins_back: registry.counter("pipeline.repins_back"),
-            probes: registry.counter("pipeline.probes"),
-            hedge_bytes: registry.counter("pipeline.hedge_bytes"),
+            repins: registry.counter(names::PIPELINE_REPINS),
+            repins_back: registry.counter(names::PIPELINE_REPINS_BACK),
+            probes: registry.counter(names::PIPELINE_PROBES),
+            hedge_bytes: registry.counter(names::PIPELINE_HEDGE_BYTES),
         }
     }
 
@@ -610,7 +607,7 @@ mod tests {
             );
         }
         assert_eq!(s.route(0), crate::client::path_for_slot(3, 2, 0));
-        assert_eq!(reg.counter("pipeline.repins").get(), 0);
+        assert_eq!(reg.counter(names::PIPELINE_REPINS).get(), 0);
     }
 
     #[test]
@@ -656,13 +653,13 @@ mod tests {
                 "slot {slot} still pinned to the degraded path"
             );
         }
-        assert_eq!(reg.counter("pipeline.repins").get(), 2);
+        assert_eq!(reg.counter(names::PIPELINE_REPINS).get(), 2);
         // Winner bytes landed per path.
-        assert!(reg.counter("pipeline.path0.bytes").get() > 0);
+        assert!(reg.counter(&names::path_bytes(0)).get() > 0);
         assert_eq!(
             s.rx_bytes(),
-            reg.counter("pipeline.path0.bytes").get()
-                + reg.counter("pipeline.path1.bytes").get()
+            reg.counter(&names::path_bytes(0)).get()
+                + reg.counter(&names::path_bytes(1)).get()
         );
     }
 
@@ -695,7 +692,7 @@ mod tests {
             );
         }
         assert_eq!(s.route(0), 0, "healthy slow path lost its slots");
-        assert_eq!(reg.counter("pipeline.repins").get(), 0);
+        assert_eq!(reg.counter(names::PIPELINE_REPINS).get(), 0);
         // A real degradation of the slow path still migrates.
         for _ in 0..32 {
             s.on_fetch(
@@ -706,7 +703,7 @@ mod tests {
             );
         }
         assert_eq!(s.route(0), 1, "true degradation must migrate");
-        assert!(reg.counter("pipeline.repins").get() >= 1);
+        assert!(reg.counter(names::PIPELINE_REPINS).get() >= 1);
     }
 
     #[test]
@@ -741,7 +738,7 @@ mod tests {
             s.goodput_estimate(1)
         );
         assert_eq!(s.route(0), 1, "slot stayed on the fail-stop path");
-        assert!(reg.counter("pipeline.repins").get() >= 1);
+        assert!(reg.counter(names::PIPELINE_REPINS).get() >= 1);
     }
 
     #[test]
@@ -805,9 +802,9 @@ mod tests {
         // Finished hedges land in the ledger.
         s.on_fetch(ctx(1, 1, true), 1000, Duration::from_millis(5), true);
         s.on_fetch(ctx(1, 1, true), 900, Duration::from_millis(5), false);
-        assert_eq!(reg.counter("pipeline.hedge_bytes").get(), 1900);
+        assert_eq!(reg.counter(names::PIPELINE_HEDGE_BYTES).get(), 1900);
         assert!(
-            reg.counter("pipeline.hedge_bytes").get()
+            reg.counter(names::PIPELINE_HEDGE_BYTES).get()
                 <= cfg.hedge_max_bytes,
             "duplicated bytes exceeded the configured cap"
         );
@@ -841,7 +838,7 @@ mod tests {
         // probe — once per window, and never for a retry.
         std::thread::sleep(Duration::from_millis(10));
         assert_eq!(s.route(0), 0, "quiet drained path must be probed");
-        assert_eq!(reg.counter("pipeline.probes").get(), 1);
+        assert_eq!(reg.counter(names::PIPELINE_PROBES).get(), 1);
         assert_eq!(s.route_retry(0), 1, "retries are never probed");
         assert_eq!(s.route(0), 1, "probe rate limit must bind");
         // The probe returns at the recovered line rate: the stale
@@ -859,7 +856,7 @@ mod tests {
             s.goodput_estimate(0)
         );
         assert_eq!(s.slot_path(0), 0, "slot must migrate back home");
-        assert_eq!(reg.counter("pipeline.repins_back").get(), 1);
+        assert_eq!(reg.counter(names::PIPELINE_REPINS_BACK).get(), 1);
     }
 
     #[test]
@@ -874,7 +871,7 @@ mod tests {
         let s = TransportScheduler::new(&cfg, 2, &net, 1, &reg);
         std::thread::sleep(Duration::from_millis(5));
         assert_eq!(s.route(0), 0);
-        assert_eq!(reg.counter("pipeline.probes").get(), 0);
+        assert_eq!(reg.counter(names::PIPELINE_PROBES).get(), 0);
     }
 
     #[test]

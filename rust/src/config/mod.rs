@@ -488,16 +488,29 @@ impl HapiConfig {
         self.probe_interval_ms =
             args.parse_or("probe-interval-ms", self.probe_interval_ms)?;
         self.storage_nodes = args.parse_or("storage-nodes", self.storage_nodes)?;
+        if let Some(v) = args.get("storage-read-rate-mbps") {
+            let m: f64 = v.parse().map_err(|_| {
+                Error::Config(format!("bad storage read rate {v:?}"))
+            })?;
+            self.storage_read_rate =
+                if m <= 0.0 { None } else { Some((m * 1e6 / 8.0) as u64) };
+        }
         self.replicas = args.parse_or("replicas", self.replicas)?;
         self.object_samples =
             args.parse_or("object-samples", self.object_samples)?;
         self.cos_gpus = args.parse_or("cos-gpus", self.cos_gpus)?;
         self.cos_gpu_mem = args.parse_or("cos-gpu-mem", self.cos_gpu_mem)?;
+        self.reserved_bytes =
+            args.parse_or("reserved-bytes", self.reserved_bytes)?;
+        self.client_gpu_mem =
+            args.parse_or("client-gpu-mem", self.client_gpu_mem)?;
         self.min_cos_batch =
             args.parse_or("min-cos-batch", self.min_cos_batch)?;
         self.default_cos_batch =
             args.parse_or("cos-batch", self.default_cos_batch)?;
         self.train_batch = args.parse_or("train-batch", self.train_batch)?;
+        self.split_window_secs =
+            args.parse_or("split-window-secs", self.split_window_secs)?;
         self.pipeline_depth =
             args.parse_or("pipeline-depth", self.pipeline_depth)?;
         self.fetch_fanout =
@@ -719,6 +732,14 @@ impl HapiConfig {
                 Json::num(self.probe_interval_ms as f64),
             ),
             ("storage_nodes", Json::num(self.storage_nodes as f64)),
+            (
+                "storage_read_rate_mbps",
+                Json::num(
+                    self.storage_read_rate
+                        .map(|b| b as f64 * 8.0 / 1e6)
+                        .unwrap_or(0.0),
+                ),
+            ),
             ("replicas", Json::num(self.replicas as f64)),
             ("object_samples", Json::num(self.object_samples as f64)),
             ("cos_gpus", Json::num(self.cos_gpus as f64)),

@@ -18,7 +18,7 @@ use std::thread::JoinHandle;
 
 use crate::error::Result;
 use crate::exec::Pool;
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::netsim::Link;
 use crate::util::json::Json;
 
@@ -123,8 +123,7 @@ impl Proxy {
             ))),
             ProxyMode::InProxy => None,
         };
-        let path_requests = registry
-            .counter(&format!("cos.path{}.requests", config.path_id));
+        let path_requests = registry.counter(&names::cos_path_requests(config.path_id));
         let shared = Arc::new(Shared {
             cluster,
             handler,
@@ -280,12 +279,12 @@ fn handle(shared: &Arc<Shared>, req: Request) -> Response {
     shared.path_requests.inc();
     match req {
         Request::Get(key) => {
-            shared.registry.counter("cos.get").inc();
+            shared.registry.counter(names::COS_GET).inc();
             match shared.cluster.get(&key) {
                 Ok(obj) => {
                     shared
                         .registry
-                        .counter("cos.get_bytes")
+                        .counter(names::COS_GET_BYTES)
                         .add(obj.len() as u64);
                     Response::Ok(obj.data.as_ref().clone())
                 }
@@ -293,10 +292,10 @@ fn handle(shared: &Arc<Shared>, req: Request) -> Response {
             }
         }
         Request::Put(key, data) => {
-            shared.registry.counter("cos.put").inc();
+            shared.registry.counter(names::COS_PUT).inc();
             shared
                 .registry
-                .counter("cos.put_bytes")
+                .counter(names::COS_PUT_BYTES)
                 .add(data.len() as u64);
             shared
                 .cluster
@@ -304,7 +303,7 @@ fn handle(shared: &Arc<Shared>, req: Request) -> Response {
             Response::Ok(Vec::new())
         }
         Request::Post(header, body) => {
-            shared.registry.counter("cos.post").inc();
+            shared.registry.counter(names::COS_POST).inc();
             let t0 = std::time::Instant::now();
             let result = match &shared.compute {
                 // Decoupled: run on the dedicated pool, wait for the slot.
@@ -326,7 +325,7 @@ fn handle(shared: &Arc<Shared>, req: Request) -> Response {
             };
             shared
                 .registry
-                .histogram("cos.post_latency_ns")
+                .histogram(names::COS_POST_LATENCY_NS)
                 .record(t0.elapsed().as_nanos() as u64);
             match result {
                 Ok((h, b)) => Response::OkPost(h, b),
@@ -486,8 +485,8 @@ mod tests {
         c0.put(&"shared".into(), vec![7; 16]).unwrap();
         assert_eq!(c1.get(&"shared".into()).unwrap(), vec![7; 16]);
         c1.get(&"shared".into()).unwrap();
-        assert_eq!(reg.counter("cos.path0.requests").get(), 1);
-        assert_eq!(reg.counter("cos.path1.requests").get(), 2);
+        assert_eq!(reg.counter(&names::cos_path_requests(0)).get(), 1);
+        assert_eq!(reg.counter(&names::cos_path_requests(1)).get(), 2);
         p0.stop();
         p1.stop();
     }

@@ -35,6 +35,7 @@
 //!   [`config`] — substrates (no serde/clap/tokio/criterion offline; we
 //!   build what we need).
 
+pub mod analyze;
 pub mod baseline;
 pub mod batch;
 pub mod benchkit;

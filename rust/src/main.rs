@@ -80,6 +80,10 @@ fn usage() {
          \x20 --train-batch N        training batch size\n\
          \x20 --bandwidth-mbps M     client<->COS bandwidth (0 = unshaped)\n\
          \x20 --cos-gpus N, --cos-gpu-mem BYTES, --no-batch-adaptation\n\
+         \x20 --reserved-bytes B     COS memory held back from grants\n\
+         \x20 --client-gpu-mem B     client device memory budget\n\
+         \x20 --storage-read-rate-mbps M  storage media read rate (0 = instant)\n\
+         \x20 --split-window-secs S  winner-selection window for Algorithm 1\n\
          \x20 --backend hlo|sim      execution backend (sim needs no artifacts)\n\
          \x20 --pipeline-depth N     prefetched iterations in flight (default 1)\n\
          \x20 --fetch-fanout N       COS connections in the sharded fetch pool\n\

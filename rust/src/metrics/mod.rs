@@ -6,6 +6,7 @@
 //! spanning µs to minutes.
 
 pub mod histogram;
+pub mod names;
 pub mod registry;
 pub mod table;
 

@@ -1,0 +1,109 @@
+//! Canonical metric names — the single definition every producer,
+//! test, bench and conservation check shares.
+//!
+//! Names follow the `component.name` convention (`hapi-analyze`'s
+//! metric-name pass enforces it): the first segment is the owning
+//! component (`hapi`, `ba`, `pipeline`, `cos`), the rest is
+//! `lower_snake` with an explicit unit suffix where one applies
+//! (`_ns`, `_bytes`, `_pct_x100`).  Per-entity families (one
+//! instrument per lane / connection / path) are constructed through
+//! the functions at the bottom so the id placement is uniform and the
+//! eviction prefixes ([`crate::metrics::Registry::evict_prefix`])
+//! cannot drift from the names they are meant to match.
+//!
+//! Adding a metric: add the const (or family fn) here, emit it via
+//! `names::…` at the producer, and document it in the metric table in
+//! `rust/src/README.md` — `hapi-analyze` fails CI on producers that
+//! bypass this module, names that never get produced, and names
+//! missing from the README table.
+
+// ---------------------------------------------------------------- hapi.*
+// Server-side request accounting (server/mod.rs).
+
+pub const HAPI_REQUESTS: &str = "hapi.requests";
+pub const HAPI_REQUEST_NS: &str = "hapi.request_ns";
+pub const HAPI_DEVICE_USED_MAX: &str = "hapi.device_used_max";
+pub const HAPI_OOM: &str = "hapi.oom";
+
+// ------------------------------------------------------------------ ba.*
+// Batch-adaptation planner (server/planner.rs).
+
+pub const BA_REQUESTS: &str = "ba.requests";
+pub const BA_GRANTS: &str = "ba.grants";
+pub const BA_RUNS: &str = "ba.runs";
+pub const BA_SOLVE_NS: &str = "ba.solve_ns";
+pub const BA_REDUCTION_PCT_X100: &str = "ba.reduction_pct_x100";
+pub const BA_BURST_WIDTH: &str = "ba.burst_width";
+pub const BA_BURST_CLAMPED: &str = "ba.burst_clamped";
+pub const BA_GATHER_WINDOW_NS: &str = "ba.gather_window_ns";
+pub const BA_LANES_ACTIVE: &str = "ba.lanes_active";
+
+// ------------------------------------------------------------ pipeline.*
+// Client-side prefetch pipeline, sharded fetch engine and transport
+// scheduler (client/pipeline.rs, client/transport.rs, client/mod.rs).
+
+pub const PIPELINE_DEPTH: &str = "pipeline.depth";
+pub const PIPELINE_FANOUT: &str = "pipeline.fanout";
+pub const PIPELINE_ITERATIONS: &str = "pipeline.iterations";
+pub const PIPELINE_BYTES: &str = "pipeline.bytes";
+pub const PIPELINE_FETCH_NS: &str = "pipeline.fetch_ns";
+pub const PIPELINE_COMPUTE_NS: &str = "pipeline.compute_ns";
+pub const PIPELINE_STALL_NS: &str = "pipeline.stall_ns";
+pub const PIPELINE_INFLIGHT_MAX: &str = "pipeline.inflight_max";
+pub const PIPELINE_SHARD_FETCH_NS: &str = "pipeline.shard_fetch_ns";
+pub const PIPELINE_SHARD_RETRIES: &str = "pipeline.shard_retries";
+pub const PIPELINE_SPLIT_REDECISIONS: &str = "pipeline.split_redecisions";
+pub const PIPELINE_HEDGES: &str = "pipeline.hedges";
+pub const PIPELINE_HEDGE_WINS: &str = "pipeline.hedge_wins";
+pub const PIPELINE_HEDGE_BYTES: &str = "pipeline.hedge_bytes";
+pub const PIPELINE_HEDGE_WASTED_BYTES: &str = "pipeline.hedge_wasted_bytes";
+pub const PIPELINE_REPINS: &str = "pipeline.repins";
+pub const PIPELINE_REPINS_BACK: &str = "pipeline.repins_back";
+pub const PIPELINE_PROBES: &str = "pipeline.probes";
+
+// ----------------------------------------------------------------- cos.*
+// Storage tier: object store + proxy front ends (cos/).
+
+pub const COS_GET: &str = "cos.get";
+pub const COS_GET_BYTES: &str = "cos.get_bytes";
+pub const COS_PUT: &str = "cos.put";
+pub const COS_PUT_BYTES: &str = "cos.put_bytes";
+pub const COS_POST: &str = "cos.post";
+pub const COS_POST_LATENCY_NS: &str = "cos.post_latency_ns";
+
+// ------------------------------------------------------- per-entity families
+
+/// `ba.lane.<client>.gather_window_ns` — per-lane gather window.
+pub fn lane_gather_window_ns(client: impl std::fmt::Display) -> String {
+    format!("ba.lane.{client}.gather_window_ns")
+}
+
+/// `ba.lane.<client>.` — eviction prefix covering one lane's family.
+pub fn lane_prefix(client: impl std::fmt::Display) -> String {
+    format!("ba.lane.{client}.")
+}
+
+/// `pipeline.conn<c>.bytes` — payload bytes served by fetch slot `c`.
+pub fn conn_bytes(c: impl std::fmt::Display) -> String {
+    format!("pipeline.conn{c}.bytes")
+}
+
+/// `pipeline.conn<c>.fetch_ns` — per-slot fetch latency.
+pub fn conn_fetch_ns(c: impl std::fmt::Display) -> String {
+    format!("pipeline.conn{c}.fetch_ns")
+}
+
+/// `pipeline.path<p>.bytes` — payload bytes carried by network path `p`.
+pub fn path_bytes(p: impl std::fmt::Display) -> String {
+    format!("pipeline.path{p}.bytes")
+}
+
+/// `pipeline.path<p>.fetch_ns` — per-path fetch latency.
+pub fn path_fetch_ns(p: impl std::fmt::Display) -> String {
+    format!("pipeline.path{p}.fetch_ns")
+}
+
+/// `cos.path<id>.requests` — requests served by the proxy on path `id`.
+pub fn cos_path_requests(id: impl std::fmt::Display) -> String {
+    format!("cos.path{id}.requests")
+}

@@ -54,7 +54,7 @@ use crate::client::{DatasetRef, HapiClient};
 use crate::config::HapiConfig;
 use crate::error::Result;
 use crate::harness::Testbed;
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::model::SIM_MODELS;
 use crate::runtime::DeviceKind;
 use crate::util::rng::Rng;
@@ -615,9 +615,9 @@ pub fn conservation(
     paths: usize,
 ) -> Vec<String> {
     let mut v = Vec::new();
-    let total = reg.counter("pipeline.bytes").get();
+    let total = reg.counter(names::PIPELINE_BYTES).get();
     let conn_sum: u64 = (0..fanout)
-        .map(|c| reg.counter(&format!("pipeline.conn{c}.bytes")).get())
+        .map(|c| reg.counter(&names::conn_bytes(c)).get())
         .sum();
     if conn_sum != total {
         v.push(format!(
@@ -625,16 +625,17 @@ pub fn conservation(
         ));
     }
     let path_sum: u64 = (0..paths)
-        .map(|p| reg.counter(&format!("pipeline.path{p}.bytes")).get())
+        .map(|p| reg.counter(&names::path_bytes(p)).get())
         .sum();
     if path_sum != total {
         v.push(format!(
             "path bytes {path_sum} != pipeline bytes {total}"
         ));
     }
-    let hedges = reg.counter("pipeline.hedges").get();
+    let hedges = reg.counter(names::PIPELINE_HEDGES).get();
     if hedges == 0 {
-        for name in ["pipeline.hedge_bytes", "pipeline.hedge_wasted_bytes"]
+        for name in
+            [names::PIPELINE_HEDGE_BYTES, names::PIPELINE_HEDGE_WASTED_BYTES]
         {
             let n = reg.counter(name).get();
             if n != 0 {
@@ -642,7 +643,7 @@ pub fn conservation(
             }
         }
     }
-    let wins = reg.counter("pipeline.hedge_wins").get();
+    let wins = reg.counter(names::PIPELINE_HEDGE_WINS).get();
     if wins > hedges {
         v.push(format!("hedge wins {wins} > hedges {hedges}"));
     }
@@ -653,15 +654,15 @@ pub fn conservation(
 fn planner_books(outcome: &ScenarioOutcome) -> Vec<String> {
     let mut v = Vec::new();
     let reg = &outcome.server_registry;
-    let requests = reg.counter("ba.requests").get();
-    let grants = reg.counter("ba.grants").get();
+    let requests = reg.counter(names::BA_REQUESTS).get();
+    let grants = reg.counter(names::BA_GRANTS).get();
     if grants > requests {
         v.push(format!(
             "ba.grants {grants} > ba.requests {requests}"
         ));
     }
     let clean = outcome.tenants.iter().all(|t| t.error.is_none());
-    let ooms = reg.counter("hapi.oom").get();
+    let ooms = reg.counter(names::HAPI_OOM).get();
     if clean && ooms == 0 && grants != requests {
         // Every admitted request on a clean, OOM-free run must end in
         // exactly one grant — a gap is a lost (or double) grant.
@@ -673,7 +674,7 @@ fn planner_books(outcome: &ScenarioOutcome) -> Vec<String> {
         v.push("requests admitted but no grants issued".into());
     }
     // The lane gauge can never exceed the distinct clients that ran.
-    let lanes = reg.gauge("ba.lanes_active").get();
+    let lanes = reg.gauge(names::BA_LANES_ACTIVE).get();
     if lanes > outcome.tenants.len() as i64 {
         v.push(format!(
             "ba.lanes_active {lanes} > {} tenants",
@@ -682,15 +683,12 @@ fn planner_books(outcome: &ScenarioOutcome) -> Vec<String> {
     }
     // When the planner gathered at all, every completed tenant's lane
     // must have recorded its gather windows.
-    if reg.histogram("ba.gather_window_ns").count() > 0 {
+    if reg.histogram(names::BA_GATHER_WINDOW_NS).count() > 0 {
         for t in &outcome.tenants {
             if t.error.is_some() {
                 continue;
             }
-            let lane = reg.histogram(&format!(
-                "ba.lane.{}.gather_window_ns",
-                t.client_id
-            ));
+            let lane = reg.histogram(&names::lane_gather_window_ns(t.client_id));
             if lane.count() == 0 {
                 v.push(format!(
                     "tenant {} granted without lane gather metrics",

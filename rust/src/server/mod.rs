@@ -34,7 +34,7 @@ use crate::cos::proxy::PostHandler;
 use crate::cos::storage::StorageCluster;
 use crate::cos::ObjectKey;
 use crate::error::{Error, Result};
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::model::ModelRegistry;
 use crate::runtime::{DeviceKind, DeviceSim, Engine, ExecBackend, Tensor};
 use crate::util::json::Json;
@@ -158,9 +158,9 @@ impl HapiServer {
         )?;
         let device = &self.devices[device_idx];
 
-        self.registry.counter("hapi.requests").inc();
+        self.registry.counter(names::HAPI_REQUESTS).inc();
         self.registry
-            .gauge("hapi.device_used_max")
+            .gauge(names::HAPI_DEVICE_USED_MAX)
             .set(device.peak_with_reserved() as i64);
 
         let out = match req.mode {
@@ -262,10 +262,10 @@ impl PostHandler for HapiServer {
         let t0 = std::time::Instant::now();
         let out = self.handle_request(req, body);
         self.registry
-            .histogram("hapi.request_ns")
+            .histogram(names::HAPI_REQUEST_NS)
             .record(t0.elapsed().as_nanos() as u64);
         if let Err(Error::Oom { .. }) = &out {
-            self.registry.counter("hapi.oom").inc();
+            self.registry.counter(names::HAPI_OOM).inc();
         }
         out
     }

@@ -56,7 +56,7 @@ use std::time::{Duration, Instant};
 
 use crate::batch::{solve, BatchRequest};
 use crate::error::{Error, Result};
-use crate::metrics::Registry;
+use crate::metrics::{names, Registry};
 use crate::runtime::{DeviceSim, Lease};
 
 /// Gather budget per expected request in a burst (≪ one request's
@@ -268,12 +268,12 @@ impl Planner {
         burst_width: usize,
         client_id: u64,
     ) -> Result<Grant> {
-        self.registry.counter("ba.requests").inc();
+        self.registry.counter(names::BA_REQUESTS).inc();
         if !self.enabled {
             let batch = default_batch.min(b_max).max(1);
             let bytes = model_bytes + batch as u64 * per_sample;
             let lease = self.devices[device].admit(bytes)?;
-            self.registry.counter("ba.grants").inc();
+            self.registry.counter(names::BA_GRANTS).inc();
             return Ok(Grant {
                 batch,
                 _lease: lease,
@@ -338,8 +338,8 @@ impl Planner {
     /// histogram, which also serves percentiles — a bare sum counter
     /// cannot (its sum is meaningless without the sample count).
     pub fn adaptation_stats(&self) -> (u64, u64, f64) {
-        let total = self.registry.counter("ba.requests").get();
-        let h = self.registry.histogram("ba.reduction_pct_x100");
+        let total = self.registry.counter(names::BA_REQUESTS).get();
+        let h = self.registry.histogram(names::BA_REDUCTION_PCT_X100);
         let reduced = h.count();
         let avg = h.mean() / 100.0;
         (total, reduced, avg)
@@ -349,7 +349,7 @@ impl Planner {
     /// percent (Table-5-style percentile reporting).
     pub fn reduction_pct_quantile(&self, q: f64) -> f64 {
         self.registry
-            .histogram("ba.reduction_pct_x100")
+            .histogram(names::BA_REDUCTION_PCT_X100)
             .quantile(q) as f64
             / 100.0
     }
@@ -413,7 +413,7 @@ fn sync_lanes(
     }
     st.lane_idle.retain(|client, since| {
         if now.duration_since(*since) >= LANE_METRICS_TTL {
-            registry.evict_prefix(&format!("ba.lane.{client}."));
+            registry.evict_prefix(&names::lane_prefix(client));
             false
         } else {
             true
@@ -452,7 +452,7 @@ fn sync_lanes(
         let (window, clamped) = gather_window(burst);
         if clamped && !lane.clamp_counted {
             lane.clamp_counted = true;
-            registry.counter("ba.burst_clamped").inc();
+            registry.counter(names::BA_BURST_CLAMPED).inc();
         }
         let deadline = (lane.gather_started + window)
             .min(lane.last_arrival + GATHER_IDLE);
@@ -465,10 +465,10 @@ fn sync_lanes(
             lane.ready_since.get_or_insert(now);
             let gathered = now.duration_since(lane.gather_started);
             registry
-                .histogram("ba.gather_window_ns")
+                .histogram(names::BA_GATHER_WINDOW_NS)
                 .record(gathered.as_nanos() as u64);
             registry
-                .histogram(&format!("ba.lane.{client}.gather_window_ns"))
+                .histogram(&names::lane_gather_window_ns(client))
                 .record(gathered.as_nanos() as u64);
         } else {
             next_deadline = Some(match next_deadline {
@@ -478,7 +478,7 @@ fn sync_lanes(
         }
     }
     registry
-        .gauge("ba.lanes_active")
+        .gauge(names::BA_LANES_ACTIVE)
         .set(st.lanes.len() as i64);
     next_deadline
 }
@@ -568,7 +568,7 @@ fn planner_loop(
             let lane_rank = |client: u64| {
                 lane_order.iter().position(|&c| c == client)
             };
-            registry.gauge("ba.burst_width").set(
+            registry.gauge(names::BA_BURST_WIDTH).set(
                 st.queue
                     .iter()
                     .filter(|p| {
@@ -650,7 +650,7 @@ fn planner_loop(
                     // until then the loop blocks instead of spinning.
                     continue;
                 };
-                registry.counter("ba.runs").inc();
+                registry.counter(names::BA_RUNS).inc();
                 for a in &sol.assignments {
                     let &i = waiting
                         .iter()
@@ -669,7 +669,7 @@ fn planner_loop(
                                     * (p.b_max - a.batch) as f64
                                     / p.b_max as f64;
                                 registry
-                                    .histogram("ba.reduction_pct_x100")
+                                    .histogram(names::BA_REDUCTION_PCT_X100)
                                     .record((pct * 100.0) as u64);
                             }
                             st.queue[i].grant = Some(Ok(Grant {
@@ -679,7 +679,7 @@ fn planner_loop(
                                     Arc::downgrade(&state),
                                 )),
                             }));
-                            registry.counter("ba.grants").inc();
+                            registry.counter(names::BA_GRANTS).inc();
                             made_progress = true;
                         }
                         Err(_) => {
@@ -694,7 +694,7 @@ fn planner_loop(
             }
         }
         registry
-            .histogram("ba.solve_ns")
+            .histogram(names::BA_SOLVE_NS)
             .record(t0.elapsed().as_nanos() as u64);
     }
 }
@@ -800,7 +800,7 @@ mod tests {
         // planner must sleep.  A poll-granularity spinner records a
         // planning pass every few ms (>50 over this window).
         std::thread::sleep(Duration::from_millis(300));
-        let passes = reg.histogram("ba.solve_ns").count();
+        let passes = reg.histogram(names::BA_SOLVE_NS).count();
         assert!(
             passes <= 8,
             "planner busy-spun while memory was full: {passes} passes"
@@ -871,9 +871,9 @@ mod tests {
             t0.elapsed()
         );
         drop(g);
-        assert!(reg.histogram("ba.gather_window_ns").count() >= 1);
+        assert!(reg.histogram(names::BA_GATHER_WINDOW_NS).count() >= 1);
         assert!(
-            reg.histogram("ba.lane.7.gather_window_ns").count() >= 1,
+            reg.histogram(&names::lane_gather_window_ns(7)).count() >= 1,
             "the lane's gather must land in its per-lane histogram"
         );
 
@@ -891,7 +891,7 @@ mod tests {
             assert_eq!(h.join().unwrap(), 20);
         }
         // At most one pass per arrival, typically one for the burst.
-        assert!(reg.counter("ba.runs").get() <= 5);
+        assert!(reg.counter(names::BA_RUNS).get() <= 5);
     }
 
     /// Regression (cross-tenant head-of-line blocking): a burst-1
@@ -942,7 +942,7 @@ mod tests {
         // ended immediately (its burst of 1 was queued on arrival),
         // bounded by its own window — far below the co-tenant's
         // 12 ms deep-burst window.
-        let lane2 = reg.histogram("ba.lane.2.gather_window_ns");
+        let lane2 = reg.histogram(&names::lane_gather_window_ns(2));
         assert!(lane2.count() >= 1, "client 2 never got a lane");
         assert!(
             lane2.max() < GATHER_IDLE.as_nanos() as u64,
@@ -951,7 +951,7 @@ mod tests {
         );
         // The co-tenant's lane did hold a real window (idle exit at the
         // earliest), proving the two gathers were independent.
-        let lane1 = reg.histogram("ba.lane.1.gather_window_ns");
+        let lane1 = reg.histogram(&names::lane_gather_window_ns(1));
         assert!(lane1.count() >= 1);
         assert!(
             lane1.max() >= (GATHER_IDLE.as_nanos() as u64) / 2,
@@ -1151,7 +1151,7 @@ mod tests {
             .admit(0, 100, 0, 20, 20, 1000, 4)
             .unwrap();
         drop(g);
-        assert_eq!(reg.counter("ba.burst_clamped").get(), 1);
+        assert_eq!(reg.counter(names::BA_BURST_CLAMPED).get(), 1);
     }
 
     /// Regression (unbounded per-lane metric cardinality): a lane that
@@ -1185,7 +1185,7 @@ mod tests {
         });
         sync_lanes(&mut st, &reg, t0);
         assert!(
-            reg.histogram("ba.lane.41.gather_window_ns").count() >= 1
+            reg.histogram(&names::lane_gather_window_ns(41)).count() >= 1
         );
         // …is granted + collected, and the lane drains.
         st.queue.clear();
@@ -1203,7 +1203,7 @@ mod tests {
                 .as_obj()
                 .unwrap()
                 .keys()
-                .filter(|k| k.starts_with("ba.lane.41."))
+                .filter(|k| k.starts_with(&names::lane_prefix(41)))
                 .count()
         };
         assert_eq!(hists(&reg), 1, "metrics evicted before the TTL");
@@ -1273,7 +1273,7 @@ mod tests {
             .as_obj()
             .unwrap()
             .keys()
-            .any(|k| k.starts_with("ba.lane.6."));
+            .any(|k| k.starts_with(&names::lane_prefix(6)));
         assert!(live, "idle clock must restart from the latest drain");
     }
 
@@ -1303,7 +1303,7 @@ mod tests {
             assert_eq!(h.join().unwrap(), 20);
         }
         assert!(
-            reg.histogram("ba.lane.0.gather_window_ns").count() >= 1,
+            reg.histogram(&names::lane_gather_window_ns(0)).count() >= 1,
             "unidentified clients must ride the shared legacy lane"
         );
     }

@@ -1,0 +1,223 @@
+//! Fixture tests for the `hapi-analyze` passes.
+//!
+//! Each known-bad snippet under `rust/analyze/fixtures/` must trigger
+//! *exactly* its own pass (with the expected finding count) and stay
+//! invisible to every other pass; `clean.rs` must come back empty
+//! everywhere.  Finally, the live tree itself must analyze clean
+//! through the allowlist — the same invariant CI enforces with
+//! `hapi-analyze --deny-findings`.
+
+use std::path::Path;
+
+use hapi::analyze::{
+    self, condvar, config_drift, lexer, lockorder, metric_names, panics,
+    Finding, Scope, SourceFile,
+};
+
+fn fixture(name: &str) -> SourceFile {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/analyze/fixtures")
+        .join(name);
+    let rel = format!("rust/analyze/fixtures/{name}");
+    analyze::load_file(&path, rel, Scope::Src).expect("fixture readable")
+}
+
+/// Findings per pass for one fixture, in PASSES order (lock-order,
+/// condvar, panics, metric-names, config-drift).  The lock-order
+/// count includes cycles found in the fixture's own edge set.
+fn per_pass(sf: &SourceFile) -> [Vec<Finding>; 5] {
+    let mut edges = lockorder::EdgeMap::new();
+    let mut lock = lockorder::run_file(sf, &mut edges);
+    lock.extend(lockorder::find_cycles(&edges));
+    let files = std::slice::from_ref(sf);
+    [
+        lock,
+        condvar::run_file(sf),
+        panics::run_file(sf),
+        metric_names::run(files, None),
+        config_drift::run(files, None),
+    ]
+}
+
+/// Assert the fixture triggers only pass `idx`, with `want` findings.
+fn assert_exclusive(name: &str, idx: usize, want: usize) -> Vec<Finding> {
+    let sf = fixture(name);
+    let by_pass = per_pass(&sf);
+    for (i, findings) in by_pass.iter().enumerate() {
+        let expect = if i == idx { want } else { 0 };
+        assert_eq!(
+            findings.len(),
+            expect,
+            "{name}: pass #{i} found {:#?}",
+            findings
+                .iter()
+                .map(|f| f.render())
+                .collect::<Vec<_>>()
+        );
+    }
+    by_pass.into_iter().nth(idx).unwrap_or_default()
+}
+
+#[test]
+fn lock_cycle_fixture() {
+    let f = assert_exclusive("bad_lock_cycle.rs", 0, 1);
+    assert!(f[0].msg.contains("lock-order cycle"), "{}", f[0].render());
+    assert!(f[0].msg.contains("self.a") && f[0].msg.contains("self.b"));
+}
+
+#[test]
+fn blocking_under_lock_fixture() {
+    let f = assert_exclusive("bad_blocking_under_lock.rs", 0, 2);
+    assert!(
+        f.iter().any(|x| x.msg.contains("blocking call `read_exact`")),
+        "missing read_exact finding"
+    );
+    assert!(
+        f.iter().any(|x| x.msg.contains("self-deadlock")),
+        "missing re-lock finding"
+    );
+    assert!(f.iter().all(|x| x.func == "pump" || x.func == "relock"));
+}
+
+#[test]
+fn condvar_if_wait_fixture() {
+    let f = assert_exclusive("bad_condvar_if_wait.rs", 1, 1);
+    assert!(
+        f[0].msg.contains("not guarded by a while/loop"),
+        "{}",
+        f[0].render()
+    );
+}
+
+#[test]
+fn wait_timeout_no_deadline_fixture() {
+    let f = assert_exclusive("bad_wait_timeout_no_deadline.rs", 1, 1);
+    assert!(
+        f[0].msg.contains("never recomputes its deadline"),
+        "{}",
+        f[0].render()
+    );
+}
+
+#[test]
+fn metric_literal_fixture() {
+    let f = assert_exclusive("bad_metric_literal.rs", 3, 2);
+    assert!(f.iter().all(|x| x.msg.contains("bypasses metrics::names")));
+    assert!(f.iter().any(|x| x.msg.contains("pipeline.iterations")));
+    // The format! template is caught too, not just plain literals.
+    assert!(f.iter().any(|x| x.msg.contains("pipeline.path{}.bytes")));
+}
+
+#[test]
+fn config_drift_fixture() {
+    let f = assert_exclusive("bad_config_drift.rs", 4, 3);
+    assert!(f.iter().all(|x| x.func == "beta"), "alpha is fully wired");
+    assert!(f.iter().any(|x| x.msg.contains("no JSON key")));
+    assert!(f.iter().any(|x| x.msg.contains("no CLI flag")));
+    assert!(f.iter().any(|x| x.msg.contains("dropped by to_json")));
+}
+
+#[test]
+fn panic_site_fixture() {
+    let f = assert_exclusive("bad_panic_site.rs", 2, 2);
+    assert!(f.iter().any(|x| x.func == "parse_port"));
+    assert!(f.iter().any(|x| x.func == "head"));
+}
+
+#[test]
+fn clean_fixture_passes_everywhere() {
+    assert_exclusive("clean.rs", 0, 0);
+}
+
+/// The live tree must be clean: every real finding was either fixed
+/// in this PR or carries an allowlist justification, and the
+/// allowlist itself is live (non-zero suppressions, no stale
+/// entries — stale entries would surface as `allowlist` findings).
+#[test]
+fn live_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analyze::run(root).expect("analyzer runs on live tree");
+    let rendered: Vec<String> =
+        report.findings.iter().map(|f| f.render()).collect();
+    assert!(
+        report.findings.is_empty(),
+        "live tree has findings:\n{}",
+        rendered.join("\n")
+    );
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+    assert!(
+        report.allowlisted > 0,
+        "allowlist suppressed nothing — did the scan roots move?"
+    );
+}
+
+#[test]
+fn allowlist_suppresses_and_reports_stale() {
+    let findings = vec![Finding {
+        pass: "panics",
+        file: "rust/src/x.rs".to_string(),
+        line: 10,
+        func: "f".to_string(),
+        msg: "`unwrap()` in library code".to_string(),
+    }];
+    let allow = "\
+# comment\n\
+panics | rust/src/x.rs | f | proven by construction\n\
+panics | rust/src/gone.rs | g | excuses code that no longer exists\n\
+malformed-entry-without-pipes\n";
+    let (kept, suppressed) = analyze::apply_allowlist(findings, allow);
+    assert_eq!(suppressed, 1);
+    // One stale entry + one malformed entry survive as findings.
+    assert_eq!(kept.len(), 2, "{kept:#?}");
+    assert!(kept.iter().all(|f| f.pass == "allowlist"));
+    assert!(kept.iter().any(|f| f.msg.contains("stale entry")));
+    assert!(kept.iter().any(|f| f.msg.contains("malformed entry")));
+}
+
+#[test]
+fn lexer_handles_rust_surface() {
+    let src = "// line comment\n\
+               /* block /* nested */ still comment */\n\
+               fn f<'a>(x: &'a str) -> char {\n\
+               let s = \"quote \\\" inside\";\n\
+               let n = 1.5 + 0x2f;\n\
+               let c = 'y';\n\
+               s.len();\n\
+               c\n\
+               }\n";
+    let toks = lexer::lex(src);
+    assert!(toks.iter().any(|t| t.is_ident("fn")));
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == lexer::TokKind::Lifetime && t.text == "a"));
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == lexer::TokKind::Str
+            && t.text.contains("quote")));
+    assert!(toks
+        .iter()
+        .any(|t| t.kind == lexer::TokKind::Char && t.text == "y"));
+    // Comments vanish entirely.
+    assert!(!toks.iter().any(|t| t.text.contains("comment")));
+}
+
+#[test]
+fn test_mask_covers_cfg_test_modules() {
+    let src = "fn live() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               fn masked() { x.parse().unwrap(); }\n\
+               }\n";
+    let sf = SourceFile {
+        rel: "rust/src/fake.rs".to_string(),
+        toks: lexer::lex(src),
+        mask: lexer::test_mask(&lexer::lex(src)),
+        scope: Scope::Src,
+    };
+    // The unwrap in the test module is masked, so no finding.
+    assert!(panics::run_file(&sf).is_empty());
+}

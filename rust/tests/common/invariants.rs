@@ -15,7 +15,7 @@
 
 #![allow(dead_code)]
 
-use hapi::metrics::Registry;
+use hapi::metrics::{names, Registry};
 
 /// Loss trajectory as raw bits: the currency of bitwise comparison.
 pub fn loss_bits(loss: &[f32]) -> Vec<u32> {
@@ -38,9 +38,9 @@ pub fn assert_bitwise_loss_identity(a: &[u32], b: &[u32], ctx: &str) {
 /// and sums to the pipeline total.  Returns the total for follow-up
 /// assertions.
 pub fn assert_conn_bytes_conserved(reg: &Registry, fanout: usize) -> u64 {
-    let total = reg.counter("pipeline.bytes").get();
+    let total = reg.counter(names::PIPELINE_BYTES).get();
     let per_conn: u64 = (0..fanout)
-        .map(|c| reg.counter(&format!("pipeline.conn{c}.bytes")).get())
+        .map(|c| reg.counter(&names::conn_bytes(c)).get())
         .sum();
     assert_eq!(
         per_conn, total,
@@ -55,9 +55,9 @@ pub fn assert_path_bytes_conserved(
     reg: &Registry,
     paths: usize,
 ) -> Vec<u64> {
-    let total = reg.counter("pipeline.bytes").get();
+    let total = reg.counter(names::PIPELINE_BYTES).get();
     let per_path: Vec<u64> = (0..paths)
-        .map(|p| reg.counter(&format!("pipeline.path{p}.bytes")).get())
+        .map(|p| reg.counter(&names::path_bytes(p)).get())
         .collect();
     assert_eq!(
         per_path.iter().sum::<u64>(),
@@ -69,17 +69,17 @@ pub fn assert_path_bytes_conserved(
 
 /// The hedge ledgers are internally consistent and under the cap.
 pub fn assert_hedge_books(reg: &Registry, cap: u64) {
-    let hedged = reg.counter("pipeline.hedge_bytes").get();
+    let hedged = reg.counter(names::PIPELINE_HEDGE_BYTES).get();
     assert!(
         hedged <= cap,
         "hedged bytes {hedged} exceed the configured cap {cap}"
     );
-    let hedges = reg.counter("pipeline.hedges").get();
-    let wins = reg.counter("pipeline.hedge_wins").get();
+    let hedges = reg.counter(names::PIPELINE_HEDGES).get();
+    let wins = reg.counter(names::PIPELINE_HEDGE_WINS).get();
     assert!(wins <= hedges, "hedge wins {wins} > hedges {hedges}");
     if hedges == 0 {
         assert_eq!(
-            reg.counter("pipeline.hedge_wasted_bytes").get(),
+            reg.counter(names::PIPELINE_HEDGE_WASTED_BYTES).get(),
             0,
             "wasted bytes recorded with zero hedges"
         );
@@ -90,13 +90,13 @@ pub fn assert_hedge_books(reg: &Registry, cap: u64) {
 /// never exceeds `ba.requests`, and matches it exactly when no OOM
 /// forced a client resubmission.  Call after all tenants completed.
 pub fn assert_no_lost_grants(reg: &Registry) {
-    let requests = reg.counter("ba.requests").get();
-    let grants = reg.counter("ba.grants").get();
+    let requests = reg.counter(names::BA_REQUESTS).get();
+    let grants = reg.counter(names::BA_GRANTS).get();
     assert!(
         grants <= requests,
         "ba.grants {grants} > ba.requests {requests}"
     );
-    if reg.counter("hapi.oom").get() == 0 {
+    if reg.counter(names::HAPI_OOM).get() == 0 {
         assert_eq!(
             grants, requests,
             "an admission leaked without a grant on an OOM-free run"

@@ -31,7 +31,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use hapi::client::pipeline::{self, Fetched, ShardFetched};
-use hapi::metrics::Registry;
+use hapi::metrics::{names, Registry};
 use hapi::util::rng::Rng;
 
 const CASES: u64 = 60;
@@ -319,7 +319,7 @@ fn sharded_flaky_shards_recover_via_retry() {
         let expected_retries =
             (0..num_shards).filter(|s| s % flaky_every == 0).count();
         assert_eq!(
-            reg.counter("pipeline.shard_retries").get(),
+            reg.counter(names::PIPELINE_SHARD_RETRIES).get(),
             expected_retries as u64,
             "seed {seed}"
         );
@@ -379,13 +379,13 @@ fn conn_metrics_attribute_to_the_serving_slot() {
         let served = served.into_inner().unwrap();
         for (c, &(count, bytes)) in served.iter().enumerate() {
             assert_eq!(
-                reg.histogram(&format!("pipeline.conn{c}.fetch_ns"))
+                reg.histogram(&names::conn_fetch_ns(c))
                     .count(),
                 count,
                 "seed {seed}: conn {c} latency samples ≠ serves"
             );
             assert_eq!(
-                reg.counter(&format!("pipeline.conn{c}.bytes")).get(),
+                reg.counter(&names::conn_bytes(c)).get(),
                 bytes,
                 "seed {seed}: conn {c} bytes ≠ served bytes"
             );
@@ -393,12 +393,12 @@ fn conn_metrics_attribute_to_the_serving_slot() {
         // And the per-slot views merge into the pipeline totals.
         let total: u64 = served.iter().map(|&(_, b)| b).sum();
         assert_eq!(
-            reg.counter("pipeline.bytes").get(),
+            reg.counter(names::PIPELINE_BYTES).get(),
             total,
             "seed {seed}"
         );
         assert_eq!(
-            reg.histogram("pipeline.shard_fetch_ns").count(),
+            reg.histogram(names::PIPELINE_SHARD_FETCH_NS).count(),
             num_shards as u64,
             "seed {seed}"
         );
@@ -433,21 +433,21 @@ fn run_wrapper_metric_parity() {
         assert_eq!(report.iterations, n_jobs, "seed {seed}");
         assert_eq!(report.bytes, 3 * n_jobs as u64, "seed {seed}");
         assert_eq!(
-            reg.counter("pipeline.iterations").get(),
+            reg.counter(names::PIPELINE_ITERATIONS).get(),
             n_jobs as u64,
             "seed {seed}"
         );
         assert_eq!(
-            reg.counter("pipeline.bytes").get(),
+            reg.counter(names::PIPELINE_BYTES).get(),
             3 * n_jobs as u64,
             "seed {seed}"
         );
         assert_eq!(
-            reg.histogram("pipeline.fetch_ns").count(),
+            reg.histogram(names::PIPELINE_FETCH_NS).count(),
             n_jobs as u64,
             "seed {seed}"
         );
-        assert_eq!(reg.gauge("pipeline.depth").get(), depth as i64);
+        assert_eq!(reg.gauge(names::PIPELINE_DEPTH).get(), depth as i64);
     }
 }
 

@@ -21,6 +21,7 @@ use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
 
+use hapi::metrics::names;
 use hapi::scenario::{self, ScenarioScript};
 
 #[path = "common/invariants.rs"]
@@ -92,15 +93,15 @@ fn canned_degrade_recover_migrates_back() {
     assert!(t.error.is_none(), "tenant failed: {:?}", t.error);
     let reg = &t.registry;
     assert!(
-        reg.counter("pipeline.repins").get() >= 1,
+        reg.counter(names::PIPELINE_REPINS).get() >= 1,
         "slot never migrated off the degraded path"
     );
     assert!(
-        reg.counter("pipeline.probes").get() >= 1,
+        reg.counter(names::PIPELINE_PROBES).get() >= 1,
         "no probe fetch ever un-staled the drained path"
     );
     assert!(
-        reg.counter("pipeline.repins_back").get() >= 1,
+        reg.counter(names::PIPELINE_REPINS_BACK).get() >= 1,
         "slot never migrated back after the path recovered"
     );
     assert_hedge_books(reg, script.config().hedge_max_bytes);

@@ -8,6 +8,7 @@ use std::time::Duration;
 
 use hapi::config::HapiConfig;
 use hapi::harness::Testbed;
+use hapi::metrics::names;
 use hapi::netsim;
 use hapi::runtime::DeviceKind;
 
@@ -76,12 +77,12 @@ fn loss_trajectory_bitwise_stable_across_depths() {
         );
         // Per-stage metrics landed in the testbed registry.
         assert_eq!(
-            bed.registry.counter("pipeline.iterations").get(),
+            bed.registry.counter(names::PIPELINE_ITERATIONS).get(),
             6
         );
-        assert!(bed.registry.gauge("pipeline.inflight_max").get() <= depth as i64);
+        assert!(bed.registry.gauge(names::PIPELINE_INFLIGHT_MAX).get() <= depth as i64);
         assert_eq!(
-            bed.registry.histogram("pipeline.fetch_ns").count(),
+            bed.registry.histogram(names::PIPELINE_FETCH_NS).count(),
             6
         );
         bed.stop();
@@ -285,8 +286,7 @@ fn tenant_loss_trajectory_independent_of_cotenants() {
         if cotenants > 0 {
             assert!(
                 bed.registry
-                    .histogram(&format!(
-                        "ba.lane.{}.gather_window_ns",
+                    .histogram(&names::lane_gather_window_ns(
                         tenant.client_id()
                     ))
                     .count()
@@ -358,7 +358,7 @@ fn legacy_post_without_client_id_still_served() {
     // The request rode the planner's shared legacy lane (id 0).
     assert!(
         bed.registry
-            .histogram("ba.lane.0.gather_window_ns")
+            .histogram(&names::lane_gather_window_ns(0))
             .count()
             > 0,
         "legacy request must be gathered on lane 0"
@@ -542,10 +542,10 @@ fn repin_and_hedging_keep_loss_bitwise_and_migrate_slots() {
         let r = Run {
             loss: loss_bits(&stats.loss),
             path_bytes: [
-                bed.registry.counter("pipeline.path0.bytes").get(),
-                bed.registry.counter("pipeline.path1.bytes").get(),
+                bed.registry.counter(&names::path_bytes(0)).get(),
+                bed.registry.counter(&names::path_bytes(1)).get(),
             ],
-            repins: bed.registry.counter("pipeline.repins").get(),
+            repins: bed.registry.counter(names::PIPELINE_REPINS).get(),
             splits: stats.splits.clone(),
         };
         assert_hedge_books(&bed.registry, hedge_cap);
@@ -662,11 +662,11 @@ fn slot_migration_spares_the_copath_tenant() {
 
     // The mover migrated off the degraded path…
     assert!(
-        mover.registry().counter("pipeline.repins").get() >= 1,
+        mover.registry().counter(names::PIPELINE_REPINS).get() >= 1,
         "mover never re-pinned"
     );
-    let p0 = mover.registry().counter("pipeline.path0.bytes").get();
-    let p1 = mover.registry().counter("pipeline.path1.bytes").get();
+    let p0 = mover.registry().counter(&names::path_bytes(0)).get();
+    let p1 = mover.registry().counter(&names::path_bytes(1)).get();
     assert!(
         p1 > p0,
         "mover's bytes never shifted off the slow path: {p0} vs {p1}"
