@@ -11,7 +11,7 @@
 //!   (sub-microsecond scale, a rounding error next to any fetch).
 //!
 //! `--json [PATH]` additionally writes every bench's stats as a
-//! machine-readable report (default `BENCH_7.json`), e.g.
+//! machine-readable report (default `BENCH_8.json`), e.g.
 //! `cargo bench --bench micro_hotpaths -- --json`.
 
 #[path = "common.rs"]

@@ -102,18 +102,19 @@ impl AllInCosClient {
         let pool: Vec<Mutex<Option<(usize, CosConnection)>>> =
             (0..fanout).map(|_| Mutex::new(None)).collect();
         // ALL_IN_COS rides the scheduler for routing and the
-        // `pipeline.pathN.*` accounting, with caveats: hedging is
+        // `pipeline.pathN.*` accounting, with one caveat: hedging is
         // forced off (an `all_in_cos` POST *trains* on the server —
         // one SGD step per request — so a duplicated request would
-        // double-apply an update; only idempotent fetches may race),
-        // and goodput-driven re-pinning cannot fire because these
-        // responses carry zero payload bytes (only the loss returns),
-        // leaving the estimates at the topology seeds.  Fetch
-        // *errors* still decay a path's estimate, so a fail-stop
-        // front end is routed around; a latency-driven signal for
-        // merely-slow paths on zero-byte workloads is recorded as
-        // future work in ROADMAP.md.  The ~0 per-path byte sums
-        // still merge into `pipeline.bytes`.
+        // double-apply an update; only idempotent fetches may race).
+        // Goodput-driven re-pinning cannot fire on these zero-payload
+        // responses (only the loss returns, so the estimates stay at
+        // the topology seeds), but every request still records a
+        // latency sample, and the analytic transport policy's latency
+        // leg re-pins slots away from a path whose p95 degrades —
+        // merely-slow front ends are evacuated, not just fail-stopped
+        // ones (whose fetch *errors* decay the goodput estimate).
+        // The ~0 per-path byte sums still merge into
+        // `pipeline.bytes`.
         let scheduler = crate::client::TransportScheduler::new(
             &self.cfg,
             self.client_id,

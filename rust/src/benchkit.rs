@@ -195,16 +195,77 @@ impl BenchReport {
 }
 
 /// The `--json [PATH]` convention shared by the bench binaries: the
-/// bare flag writes the canonical `BENCH_7.json`, `--json PATH`
+/// bare flag writes the canonical `BENCH_8.json`, `--json PATH`
 /// redirects it, and no flag means no report.
 pub fn json_path(args: &crate::cli::Args) -> Option<String> {
     if let Some(p) = args.get("json") {
         return Some(p.to_string());
     }
     if args.flag("json") {
-        return Some("BENCH_7.json".to_string());
+        return Some("BENCH_8.json".to_string());
     }
     None
+}
+
+/// One compared headline number between two bench reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchDelta {
+    pub name: String,
+    pub old: f64,
+    pub new: f64,
+    /// Relative change in percent: `(new - old) / old × 100`.
+    pub pct: f64,
+}
+
+/// Diff two bench reports written by [`BenchReport::write`] (e.g. the
+/// current `BENCH_8.json` against a prior `BENCH_*.json`): every
+/// free-form scalar, and every sampled-stats entry's `mean_ns`,
+/// present in *both* reports is compared.  Returns the per-name
+/// deltas plus how many moved by more than `threshold_pct` in either
+/// direction — purely informational; whether a move is a regression
+/// (time up) or an improvement (throughput up) is the caller's read.
+/// Names present in only one report are skipped, so trajectories stay
+/// comparable across bench-suite growth.
+pub fn compare_reports(
+    old: &Json,
+    new: &Json,
+    threshold_pct: f64,
+) -> crate::error::Result<(Vec<BenchDelta>, usize)> {
+    let old_results = old.get("results")?.as_obj()?;
+    let new_results = new.get("results")?.as_obj()?;
+    let scalar = |v: &Json| -> Option<f64> {
+        match v {
+            Json::Num(n) => Some(*n),
+            Json::Obj(m) => {
+                m.get("mean_ns").and_then(|j| j.as_f64().ok())
+            }
+            _ => None,
+        }
+    };
+    let mut deltas = Vec::new();
+    let mut flagged = 0usize;
+    for (name, nv) in new_results {
+        let Some(ov) = old_results.get(name) else {
+            continue;
+        };
+        let (Some(o), Some(n)) = (scalar(ov), scalar(nv)) else {
+            continue;
+        };
+        if o == 0.0 {
+            continue; // no meaningful relative change
+        }
+        let pct = (n - o) / o * 100.0;
+        if pct.abs() > threshold_pct {
+            flagged += 1;
+        }
+        deltas.push(BenchDelta {
+            name: name.clone(),
+            old: o,
+            new: n,
+            pct,
+        });
+    }
+    Ok((deltas, flagged))
 }
 
 #[cfg(test)]
@@ -276,11 +337,57 @@ mod tests {
         assert_eq!(json_path(&parse(&[])), None);
         assert_eq!(
             json_path(&parse(&["--json"])).as_deref(),
-            Some("BENCH_7.json")
+            Some("BENCH_8.json")
         );
         assert_eq!(
             json_path(&parse(&["--json", "out.json"])).as_deref(),
             Some("out.json")
         );
+    }
+
+    #[test]
+    fn compare_reports_flags_large_moves_only() {
+        let report = |epoch: f64, mean_us: u64| {
+            let s = Stats::from_samples(vec![
+                Duration::from_micros(mean_us),
+                Duration::from_micros(mean_us),
+            ]);
+            let mut r = BenchReport::new("unit");
+            r.stats("fetch", &s);
+            r.value("epoch_secs", epoch);
+            r.value("zero_base", 0.0);
+            r.to_json()
+        };
+        // Identical reports: every shared name compares, nothing flagged.
+        let (deltas, flagged) =
+            compare_reports(&report(2.0, 100), &report(2.0, 100), 20.0)
+                .unwrap();
+        assert_eq!(flagged, 0);
+        // `zero_base` is skipped (no relative change from 0).
+        assert_eq!(deltas.len(), 2);
+        assert!(deltas.iter().all(|d| d.pct == 0.0));
+
+        // epoch_secs +50% and mean_ns -50%: both exceed 20%.
+        let (deltas, flagged) =
+            compare_reports(&report(2.0, 100), &report(3.0, 50), 20.0)
+                .unwrap();
+        assert_eq!(flagged, 2);
+        let epoch = deltas
+            .iter()
+            .find(|d| d.name == "epoch_secs")
+            .unwrap();
+        assert!((epoch.pct - 50.0).abs() < 1e-9);
+        let fetch =
+            deltas.iter().find(|d| d.name == "fetch").unwrap();
+        assert!((fetch.pct + 50.0).abs() < 1e-9);
+
+        // A name present in only one report never blocks the diff.
+        let mut extra = BenchReport::new("unit");
+        extra.value("brand_new", 9.0);
+        let (deltas, flagged) =
+            compare_reports(&report(2.0, 100), &extra.to_json(), 20.0)
+                .unwrap();
+        assert!(deltas.is_empty());
+        assert_eq!(flagged, 0);
     }
 }

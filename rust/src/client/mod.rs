@@ -41,10 +41,11 @@ use crate::cos::protocol::CosConnection;
 use crate::error::{Error, Result};
 use crate::metrics::{names, Registry};
 use crate::netsim::Topology;
+use crate::policy::{self, SplitPolicy, SplitSignals, TraceSink};
 use crate::profiler::AppProfile;
 use crate::runtime::{DeviceKind, DeviceSim, ExecBackend, Tensor};
 use crate::server::request::{PostRequest, RequestMode};
-use crate::split::{choose_split_idx, SplitDecision};
+use crate::split::{self, SplitDecision};
 
 pub use dataset::{DatasetRef, DatasetSpec};
 pub use pipeline::{
@@ -120,6 +121,38 @@ pub(crate) fn path_for_slot(
     (client_id as usize).wrapping_add(slot) % num_paths.max(1)
 }
 
+/// Run the configured split policy over fresh signals and record the
+/// decision (trace line + `pipeline.policy_decisions`).  Shared by the
+/// initial (construction-time) decision and the adaptive per-window
+/// re-decision, so both route through the same [`SplitPolicy`].
+fn run_split_policy(
+    split_policy: &dyn SplitPolicy,
+    trace: Option<&TraceSink>,
+    registry: &Registry,
+    app: &AppProfile,
+    bandwidth: Option<u64>,
+    cfg: &HapiConfig,
+) -> usize {
+    let sig = SplitSignals::from_app(
+        app,
+        bandwidth,
+        cfg.split_window_secs,
+        cfg.train_batch,
+        cfg.pipeline_depth,
+    );
+    let idx = split_policy.choose(&sig);
+    if let Some(t) = trace {
+        t.record(
+            "split",
+            split_policy.name(),
+            sig.to_json(),
+            policy::split_decision_json(idx),
+        );
+    }
+    registry.counter(names::PIPELINE_POLICY_DECISIONS).inc();
+    idx
+}
+
 pub struct HapiClient {
     pub app: AppProfile,
     /// The initial (Algorithm 1) decision; `adaptive_split` re-decides
@@ -138,12 +171,17 @@ pub struct HapiClient {
     /// gathers this client's burst in its own lane.
     client_id: u64,
     registry: Registry,
+    /// The split decision rule (`split_policy` knob; Algorithm 1 by
+    /// default), shared by the initial and the adaptive re-decisions.
+    split_policy: Box<dyn SplitPolicy>,
+    /// Decision-trace sink (`decision_trace` knob; `None` = off).
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl HapiClient {
     /// General constructor over any execution backend.  `split_override`
     /// forces a split index (the §7.3 static-freeze competitor); `None`
-    /// runs Algorithm 1.
+    /// runs the configured [`SplitPolicy`] (Algorithm 1 by default).
     pub fn from_backend(
         app: AppProfile,
         backend: ExecBackend,
@@ -153,23 +191,13 @@ impl HapiClient {
         device_kind: DeviceKind,
         split_override: Option<usize>,
     ) -> HapiClient {
-        let split = match split_override {
-            Some(idx) => SplitDecision {
-                split_idx: idx,
-                out_bytes_per_sample: app.out_bytes(idx),
-                bytes_per_iteration: app.out_bytes(idx)
-                    * cfg.train_batch as u64,
-                candidates: vec![idx],
-            },
-            None => choose_split_idx(
-                &app,
-                // Algorithm 1 sees the whole storage network: summed
-                // path rates, clamped by the client-NIC cap.
-                net.total_rate(),
-                cfg.split_window_secs,
-                cfg.train_batch,
-            ),
-        };
+        let split = split_override.map(|idx| SplitDecision {
+            split_idx: idx,
+            out_bytes_per_sample: app.out_bytes(idx),
+            bytes_per_iteration: app.out_bytes(idx)
+                * cfg.train_batch as u64,
+            candidates: vec![idx],
+        });
         Self::assemble(app, backend, cfg, addrs, net, device_kind, split)
     }
 
@@ -193,9 +221,20 @@ impl HapiClient {
             bytes_per_iteration: app.input_bytes() * cfg.train_batch as u64,
             candidates: vec![],
         };
-        Self::assemble(app, backend, cfg, addrs, net, device_kind, split)
+        Self::assemble(
+            app,
+            backend,
+            cfg,
+            addrs,
+            net,
+            device_kind,
+            Some(split),
+        )
     }
 
+    /// `split: None` runs the configured split policy for the initial
+    /// decision; `Some` (static freeze / BASELINE) bypasses it — those
+    /// competitors make no decision worth recording.
     fn assemble(
         app: AppProfile,
         backend: ExecBackend,
@@ -203,7 +242,7 @@ impl HapiClient {
         addrs: Vec<String>,
         net: Topology,
         device_kind: DeviceKind,
-        split: SplitDecision,
+        split: Option<SplitDecision>,
     ) -> HapiClient {
         assert!(
             !addrs.is_empty(),
@@ -213,6 +252,25 @@ impl HapiClient {
             DeviceSim::new("client-dev", device_kind, cfg.client_gpu_mem, 0);
         let tail_params = Mutex::new(backend.initial_tail_params());
         let client_id = resolve_client_id(&cfg);
+        // Config validation rejects unknown names before a client is
+        // built; the fallback keeps construction infallible.
+        let split_policy = policy::split_policy(&cfg.split_policy)
+            .unwrap_or_else(|_| Box::new(policy::AnalyticSplit));
+        let trace = policy::sink_for(&cfg.decision_trace);
+        let registry = Registry::new();
+        let split = split.unwrap_or_else(|| {
+            let idx = run_split_policy(
+                split_policy.as_ref(),
+                trace.as_deref(),
+                &registry,
+                &app,
+                // Algorithm 1 sees the whole storage network: summed
+                // path rates, clamped by the client-NIC cap.
+                net.total_rate(),
+                &cfg,
+            );
+            split::decision_for(&app, idx, cfg.train_batch)
+        });
         HapiClient {
             app,
             split,
@@ -225,7 +283,9 @@ impl HapiClient {
             tail_params,
             next_req_id: AtomicU64::new(1),
             client_id,
-            registry: Registry::new(),
+            registry,
+            split_policy,
+            trace,
         }
     }
 
@@ -548,15 +608,15 @@ impl HapiClient {
                         win_rx = rx;
                         win_t = now;
                         if stalled {
-                            let d = choose_split_idx(
+                            let idx = run_split_policy(
+                                self.split_policy.as_ref(),
+                                self.trace.as_deref(),
+                                &self.registry,
                                 &self.app,
                                 Some(bw as u64),
-                                self.cfg.split_window_secs,
-                                self.cfg.train_batch,
+                                &self.cfg,
                             );
-                            let new = d
-                                .split_idx
-                                .max(self.split.split_idx);
+                            let new = idx.max(self.split.split_idx);
                             let old = cur_split.load(Ordering::Relaxed);
                             if new != old {
                                 cur_split.store(new, Ordering::Relaxed);

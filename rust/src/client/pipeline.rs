@@ -282,6 +282,14 @@ pub trait Transport: Sync {
     fn on_fetch_error(&self, ctx: ShardCtx) {
         let _ = ctx;
     }
+
+    /// The uniform per-path signals view this policy decides from
+    /// (goodput/p95/sample snapshots + slot maps), for diagnostics and
+    /// decision tracing.  `None` (the default) means the policy keeps
+    /// no estimator state — true for the static single-path transports.
+    fn signals(&self) -> Option<crate::policy::TransportSignals> {
+        None
+    }
 }
 
 /// The default policy behind [`run_sharded`]: every slot on path 0,

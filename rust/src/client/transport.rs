@@ -34,6 +34,17 @@
 //!   is the ledger), so uniform-shard workloads can never exceed the
 //!   cap.
 //!
+//! Since PR 8 the re-pin *decision rule* lives behind
+//! [`crate::policy::TransportPolicy`]: the scheduler snapshots a
+//! uniform [`crate::policy::TransportSignals`] view (per-path
+//! goodput/p95/samples + slot maps), the policy returns typed moves,
+//! and the scheduler applies them — the `transport_policy` knob swaps
+//! the rule, `decision_trace` records every invocation.  The default
+//! `analytic` policy reproduces the goodput rule bit-for-bit and adds
+//! the p95-latency degradation leg, so zero-payload ALL_IN_COS
+//! streams (which never move the goodput estimates) can evacuate a
+//! latency-degraded path too.
+//!
 //! Neither policy can change training values: routing and hedging
 //! select *transport* only, and the engine's reassembly/delivery
 //! protocol ignores them — trajectories stay bitwise identical with
@@ -66,6 +77,9 @@ use super::pipeline::{ShardCtx, Transport};
 use crate::config::HapiConfig;
 use crate::metrics::{names, Counter, Histogram, Registry};
 use crate::netsim::Topology;
+use crate::policy::{
+    self, PathSnapshot, RepinKind, TraceSink, TransportPolicy, TransportSignals,
+};
 
 /// EWMA smoothing for the goodput estimate: new samples carry 1/4.
 const GOODPUT_ALPHA: f64 = 0.25;
@@ -149,10 +163,17 @@ pub struct TransportScheduler {
     /// fetch is redirected onto it as a probe (zero = probing off;
     /// only active while re-pinning is on).
     probe_interval: Duration,
+    /// The re-pin decision rule (`transport_policy` knob; the analytic
+    /// goodput+latency rule by default).  The scheduler owns all gating
+    /// and applies the returned moves; the policy is pure.
+    policy: Box<dyn TransportPolicy>,
+    /// Decision-trace sink (`decision_trace` knob; `None` = off).
+    trace: Option<Arc<TraceSink>>,
     repins: Arc<Counter>,
     repins_back: Arc<Counter>,
     probes: Arc<Counter>,
     hedge_bytes: Arc<Counter>,
+    policy_decisions: Arc<Counter>,
 }
 
 impl TransportScheduler {
@@ -213,10 +234,16 @@ impl TransportScheduler {
             hedge_committed: AtomicU64::new(0),
             max_shard_bytes: AtomicU64::new(0),
             probe_interval: Duration::from_millis(cfg.probe_interval_ms),
+            // Config validation rejects unknown names before a client
+            // is built; the fallback keeps construction infallible.
+            policy: policy::transport_policy(&cfg.transport_policy)
+                .unwrap_or_else(|_| Box::new(policy::AnalyticRepin)),
+            trace: policy::sink_for(&cfg.decision_trace),
             repins: registry.counter(names::PIPELINE_REPINS),
             repins_back: registry.counter(names::PIPELINE_REPINS_BACK),
             probes: registry.counter(names::PIPELINE_PROBES),
             hedge_bytes: registry.counter(names::PIPELINE_HEDGE_BYTES),
+            policy_decisions: registry.counter(names::PIPELINE_POLICY_DECISIONS),
         }
     }
 
@@ -346,52 +373,64 @@ impl TransportScheduler {
         {
             return;
         }
-        let est: Vec<f64> =
-            self.paths.iter().map(|p| p.goodput_est()).collect();
-        // A path with no estimate at all (unshaped, no samples yet)
-        // gives the mean no meaning — wait for data.
-        if est.iter().any(|&e| !(e.is_finite() && e > 0.0)) {
-            return;
+        // The decision itself is delegated: snapshot the signals, ask
+        // the policy (the analytic goodput+latency rule by default —
+        // see `policy::AnalyticRepin` for the degradation criteria),
+        // apply the moves verbatim.  Evacuations count in
+        // `pipeline.repins`; migrate-backs in both `pipeline.repins`
+        // and `pipeline.repins_back`, exactly as before the refactor.
+        let sig = self.snapshot();
+        let moves = self.policy.repin(&sig);
+        if let Some(trace) = &self.trace {
+            trace.record(
+                "transport",
+                self.policy.name(),
+                sig.to_json(),
+                policy::transport_decision_json(&moves),
+            );
         }
-        let mean = est.iter().sum::<f64>() / est.len() as f64;
-        let pct = self.repin_threshold_pct as f64 / 100.0;
-        let cutoff = mean * pct;
-        // Degraded = below the threshold fraction of the per-path
-        // mean AND of the path's own configured baseline (when
-        // known).  The second leg keeps a legitimately slower
-        // configured path (heterogeneous rates) from being evacuated
-        // for merely being below the mean while running exactly at
-        // its own healthy rate.
-        let degraded = |i: usize| {
-            est[i] < cutoff
-                && (self.paths[i].seed <= 0.0
-                    || est[i] < self.paths[i].seed * pct)
-        };
-        let healthy: Vec<usize> =
-            (0..est.len()).filter(|&i| !degraded(i)).collect();
-        if healthy.is_empty() {
-            return;
-        }
-        let mut next = 0usize;
-        for (s, slot) in self.slots.iter().enumerate() {
-            let cur = slot.load(Ordering::Relaxed);
-            let home = self.static_paths[s];
-            if cur < est.len() && degraded(cur) {
-                // Evacuate: round-robin over the healthy paths.
-                slot.store(
-                    healthy[next % healthy.len()],
-                    Ordering::Relaxed,
-                );
-                next += 1;
-                self.repins.inc();
-            } else if cur != home && !degraded(home) {
-                // Migrate back: the slot's static home recovered
-                // (probe fetches un-staled its estimate), so undo the
-                // earlier evacuation and restore the static layout.
-                slot.store(home, Ordering::Relaxed);
-                self.repins.inc();
-                self.repins_back.inc();
+        self.policy_decisions.inc();
+        for m in &moves {
+            let Some(slot) = self.slots.get(m.slot) else { continue };
+            slot.store(m.path, Ordering::Relaxed);
+            match m.kind {
+                RepinKind::Evacuate => self.repins.inc(),
+                RepinKind::MigrateBack => {
+                    self.repins.inc();
+                    self.repins_back.inc();
+                }
             }
+        }
+    }
+
+    /// The uniform signals view policies decide from: per-path
+    /// goodput/p95/sample snapshots plus the current and home slot
+    /// maps.  Also exported through [`Transport::signals`].
+    fn snapshot(&self) -> TransportSignals {
+        let paths = self
+            .paths
+            .iter()
+            .enumerate()
+            .map(|(i, p)| PathSnapshot {
+                path: i,
+                goodput: p.goodput_est(),
+                seed: p.seed,
+                p95_ns: p
+                    .lat_mean_ns
+                    .load(Ordering::Relaxed)
+                    .saturating_add(2 * p.lat_dev_ns.load(Ordering::Relaxed)),
+                samples: p.samples.load(Ordering::Relaxed),
+            })
+            .collect();
+        TransportSignals {
+            paths,
+            slot_paths: self
+                .slots
+                .iter()
+                .map(|s| s.load(Ordering::Relaxed))
+                .collect(),
+            home_paths: self.static_paths.clone(),
+            threshold_pct: self.repin_threshold_pct,
         }
     }
 
@@ -451,6 +490,10 @@ impl Transport for TransportScheduler {
         // Never probe a retry: it is the shard's last attempt, and a
         // quiet path may be quiet because it is dead.
         self.slot_path(conn)
+    }
+
+    fn signals(&self) -> Option<TransportSignals> {
+        Some(self.snapshot())
     }
 
     fn hedging_enabled(&self) -> bool {

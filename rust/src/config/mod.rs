@@ -47,6 +47,13 @@
 //!   the goodput-aware slot→path re-pinner and hedged shard fetches
 //!   ([`crate::client::TransportScheduler`]).  Both default off: the
 //!   default config reproduces static pinning byte-identically.
+//! - decision policies (`split_policy`/`--split-policy`,
+//!   `batch_policy`/`--batch-policy`,
+//!   `transport_policy`/`--transport-policy`, all default `analytic`;
+//!   `decision_trace`/`--decision-trace`, default empty = tracing
+//!   off) — named [`crate::policy`] implementations plugged into the
+//!   three decision sites, plus the JSONL decision-trace path that
+//!   `hapi policy-eval` replays offline.
 
 use std::path::{Path, PathBuf};
 
@@ -112,6 +119,25 @@ pub struct HapiConfig {
     /// 0 = probing off.  Only active while `repin_threshold_pct` > 0 —
     /// in static-pinning mode routing never deviates from the map.
     pub probe_interval_ms: u64,
+
+    // --- decision policies (split/batch/transport seams) --------------
+    /// Named [`crate::policy::SplitPolicy`] deciding the split index:
+    /// `"analytic"` (Algorithm 1, the default) or `"freeze"` (always
+    /// the freeze layer).
+    pub split_policy: String,
+    /// Named [`crate::policy::BatchPolicy`] solving the planner's
+    /// Eq. 4: `"analytic"` (the water-filling solver, the default) or
+    /// `"floor"` (minimum batches only, no water-fill).
+    pub batch_policy: String,
+    /// Named [`crate::policy::TransportPolicy`] for slot→path re-pin
+    /// decisions: `"analytic"` (goodput + latency degradation rule,
+    /// the default) or `"static"` (never re-pin).
+    pub transport_policy: String,
+    /// Path of the JSONL decision trace: every policy invocation
+    /// (split, batch, transport) appends one `DecisionRecord` with its
+    /// signals-in and decision-out.  Empty (the default) = tracing
+    /// off.  Replay a recorded trace with `hapi policy-eval`.
+    pub decision_trace: String,
 
     // --- COS ----------------------------------------------------------
     pub storage_nodes: usize,
@@ -254,6 +280,10 @@ impl Default for HapiConfig {
             hedge_factor_pct: 0,
             hedge_max_bytes: 64 << 20,
             probe_interval_ms: 500,
+            split_policy: "analytic".into(),
+            batch_policy: "analytic".into(),
+            transport_policy: "analytic".into(),
+            decision_trace: String::new(),
             storage_nodes: 3,
             replicas: 2,
             storage_read_rate: None,
@@ -397,6 +427,18 @@ impl HapiConfig {
                 "probe_interval_ms" => {
                     self.probe_interval_ms = v.as_u64()?
                 }
+                "split_policy" => {
+                    self.split_policy = v.as_str()?.to_string()
+                }
+                "batch_policy" => {
+                    self.batch_policy = v.as_str()?.to_string()
+                }
+                "transport_policy" => {
+                    self.transport_policy = v.as_str()?.to_string()
+                }
+                "decision_trace" => {
+                    self.decision_trace = v.as_str()?.to_string()
+                }
                 "storage_nodes" => self.storage_nodes = v.as_usize()?,
                 "storage_read_rate_mbps" => {
                     let m = v.as_f64()?;
@@ -487,6 +529,18 @@ impl HapiConfig {
             args.parse_or("hedge-max-bytes", self.hedge_max_bytes)?;
         self.probe_interval_ms =
             args.parse_or("probe-interval-ms", self.probe_interval_ms)?;
+        if let Some(v) = args.get("split-policy") {
+            self.split_policy = v.to_string();
+        }
+        if let Some(v) = args.get("batch-policy") {
+            self.batch_policy = v.to_string();
+        }
+        if let Some(v) = args.get("transport-policy") {
+            self.transport_policy = v.to_string();
+        }
+        if let Some(v) = args.get("decision-trace") {
+            self.decision_trace = v.to_string();
+        }
         self.storage_nodes = args.parse_or("storage-nodes", self.storage_nodes)?;
         if let Some(v) = args.get("storage-read-rate-mbps") {
             let m: f64 = v.parse().map_err(|_| {
@@ -586,6 +640,12 @@ impl HapiConfig {
                     .into(),
             ));
         }
+        // Policy names must resolve in the registry up front — a typo
+        // silently falling back to the analytic default would defeat
+        // the point of selecting a policy.
+        crate::policy::split_policy(&self.split_policy)?;
+        crate::policy::batch_policy(&self.batch_policy)?;
+        crate::policy::transport_policy(&self.transport_policy)?;
         // Ids ride the JSON header (and config files) as f64: above
         // 2^53 they would silently round, which could merge two pinned
         // tenants into one gather lane.
@@ -731,6 +791,13 @@ impl HapiConfig {
                 "probe_interval_ms",
                 Json::num(self.probe_interval_ms as f64),
             ),
+            ("split_policy", Json::str(self.split_policy.clone())),
+            ("batch_policy", Json::str(self.batch_policy.clone())),
+            (
+                "transport_policy",
+                Json::str(self.transport_policy.clone()),
+            ),
+            ("decision_trace", Json::str(self.decision_trace.clone())),
             ("storage_nodes", Json::num(self.storage_nodes as f64)),
             (
                 "storage_read_rate_mbps",
@@ -1005,6 +1072,51 @@ mod tests {
         // The threshold is a percentage of the mean.
         let mut bad = HapiConfig::default();
         bad.repin_threshold_pct = 101;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn policy_knobs_parse_roundtrip_and_validate() {
+        let cfg = HapiConfig::from_args(&args(&[
+            "--split-policy",
+            "freeze",
+            "--batch-policy",
+            "floor",
+            "--transport-policy",
+            "static",
+            "--decision-trace",
+            "trace.jsonl",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.split_policy, "freeze");
+        assert_eq!(cfg.batch_policy, "floor");
+        assert_eq!(cfg.transport_policy, "static");
+        assert_eq!(cfg.decision_trace, "trace.jsonl");
+
+        // …and the knobs survive a JSON roundtrip.
+        let mut cfg2 = HapiConfig::default();
+        cfg2.merge_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.split_policy, "freeze");
+        assert_eq!(cfg2.batch_policy, "floor");
+        assert_eq!(cfg2.transport_policy, "static");
+        assert_eq!(cfg2.decision_trace, "trace.jsonl");
+
+        // Defaults: analytic everywhere, tracing off.
+        let d = HapiConfig::default();
+        assert_eq!(d.split_policy, "analytic");
+        assert_eq!(d.batch_policy, "analytic");
+        assert_eq!(d.transport_policy, "analytic");
+        assert!(d.decision_trace.is_empty());
+
+        // Unknown policy names are rejected at validation.
+        let mut bad = HapiConfig::default();
+        bad.split_policy = "nope".into();
+        assert!(bad.validate().is_err());
+        let mut bad = HapiConfig::default();
+        bad.batch_policy = "nope".into();
+        assert!(bad.validate().is_err());
+        let mut bad = HapiConfig::default();
+        bad.transport_policy = "nope".into();
         assert!(bad.validate().is_err());
     }
 

@@ -29,6 +29,9 @@
 //! - [`baseline`] — BASELINE / ALL_IN_COS / static-freeze-split
 //!   competitors from §7.
 //! - [`theory`] — the §4 cost model (Eqs. 1–3).
+//! - [`policy`] — pluggable decision policies (split/batch/transport)
+//!   behind traits, recorded decision traces (JSONL) and the offline
+//!   policy-replay scorer behind `hapi policy-eval`.
 //! - [`scenario`] — seed-replayable chaos scenarios over the testbed
 //!   (the fuzzer's script generator, executor and invariant checks).
 //! - [`util`], [`cli`], [`exec`], [`metrics`], [`benchkit`], [`workload`],
@@ -49,6 +52,7 @@ pub mod harness;
 pub mod metrics;
 pub mod model;
 pub mod netsim;
+pub mod policy;
 pub mod profiler;
 pub mod runtime;
 pub mod scenario;

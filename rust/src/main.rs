@@ -14,7 +14,14 @@
 //!   (reference run + chaos run) and check the fuzzer's invariants;
 //!   `--scenario-seed <u64>` replays one randomized script (the
 //!   documented one-command replay of a failing fuzz seed), no seed
-//!   runs the canned regression scenarios.
+//!   runs the canned regression scenarios; `--decision-trace PATH`
+//!   records every policy decision of the chaos run as JSONL;
+//! - `policy-eval` — replay a recorded decision trace through a
+//!   candidate policy set offline and score the agreement
+//!   (decision-match rate + predicted cost deltas per site);
+//! - `bench-compare` — informational diff of two bench JSON reports
+//!   (`BENCH_8.json` vs a prior `BENCH_*.json`), flagging headline
+//!   numbers that moved more than a threshold.
 
 use hapi::cli::Args;
 use hapi::config::{BackendKind, HapiConfig};
@@ -60,6 +67,8 @@ fn run(args: &Args) -> hapi::Result<()> {
         Some("train") => train(cfg, args),
         Some("serve") => serve(cfg),
         Some("scenario") => scenario_cmd(args),
+        Some("policy-eval") => policy_eval_cmd(args),
+        Some("bench-compare") => bench_compare_cmd(args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
@@ -72,7 +81,8 @@ fn run(args: &Args) -> hapi::Result<()> {
 
 fn usage() {
     println!(
-        "usage: hapi <info|profile|split|train|serve|scenario> [options]\n\n\
+        "usage: hapi <info|profile|split|train|serve|scenario|\
+         policy-eval|bench-compare> [options]\n\n\
          common options:\n\
          \x20 --artifacts DIR        artifacts directory (default: discover)\n\
          \x20 --scale tiny|paper     profile scale for analytics\n\
@@ -96,7 +106,18 @@ fn usage() {
          \x20 --samples N            (train) dataset size\n\
          \x20 --epochs N             (train) epochs to run\n\
          \x20 --scenario-seed S      (scenario) replay one randomized chaos\n\
-         \x20                        script by seed (default: canned scenarios)"
+         \x20                        script by seed (default: canned scenarios)\n\
+         \x20 --split-policy NAME    split decision policy (analytic|freeze)\n\
+         \x20 --batch-policy NAME    batch decision policy (analytic|floor)\n\
+         \x20 --transport-policy NAME  re-pin decision policy (analytic|static)\n\
+         \x20 --decision-trace PATH  record policy decisions as JSONL\n\
+         \x20                        (scenario: traces the chaos run)\n\
+         \x20 --trace PATH           (policy-eval) recorded trace to replay\n\
+         \x20 --policy NAME          (policy-eval) candidate for all sites,\n\
+         \x20                        default analytic; per-site --*-policy wins\n\
+         \x20 --min-match-pct P      (policy-eval) fail below this match rate\n\
+         \x20 --old/--new PATH       (bench-compare) reports to diff\n\
+         \x20 --threshold-pct P      (bench-compare) flag moves above P (20)"
     );
 }
 
@@ -280,7 +301,15 @@ fn scenario_cmd(args: &Args) -> hapi::Result<()> {
             println!("  t+{:>4} ms  {:?}", e.at.as_millis(), e.kind);
         }
         let reference = scenario::run(script, false)?;
-        let chaos = scenario::run(script, true)?;
+        // Record the *chaos* run's decisions when asked (the reference
+        // run stays untraced so the file holds one run's records; with
+        // several scripts the last one's trace wins).
+        let chaos = match args.get("decision-trace") {
+            Some(path) => scenario::run_with(script, true, |c| {
+                c.decision_trace = path.to_string();
+            })?,
+            None => scenario::run(script, true)?,
+        };
         let mut t = Table::new(
             &format!("{label}: tenants under chaos"),
             &["tenant", "model", "iters", "expected", "status"],
@@ -317,6 +346,110 @@ fn scenario_cmd(args: &Args) -> hapi::Result<()> {
             "scenario invariants violated (see above)".to_string(),
         ));
     }
+    Ok(())
+}
+
+/// Replay a recorded decision trace through a candidate policy set and
+/// score the agreement per site.  `--policy NAME` picks the candidate
+/// for every site; `--split-policy` / `--batch-policy` /
+/// `--transport-policy` override per site.  `--min-match-pct P` turns
+/// the report into a gate (non-zero exit below P) — CI replays a fresh
+/// trace with the default policies at 100.
+fn policy_eval_cmd(args: &Args) -> hapi::Result<()> {
+    use hapi::policy;
+    let trace = args.require("trace")?;
+    let umbrella = args.str_or("policy", "analytic");
+    let set = policy::PolicySet {
+        split: policy::split_policy(&args.str_or("split-policy", &umbrella))?,
+        batch: policy::batch_policy(&args.str_or("batch-policy", &umbrella))?,
+        transport: policy::transport_policy(
+            &args.str_or("transport-policy", &umbrella),
+        )?,
+    };
+    let report = policy::eval_trace(trace, &set)?;
+    let mut t = Table::new(
+        &format!("policy-eval: {trace}"),
+        &["site", "policy", "records", "matched", "match %", "mean |delta|"],
+    );
+    for (site, score) in &report.sites {
+        let candidate = match site.as_str() {
+            "split" => set.split.name(),
+            "batch" => set.batch.name(),
+            _ => set.transport.name(),
+        };
+        t.row(vec![
+            site.clone(),
+            candidate.to_string(),
+            score.records.to_string(),
+            score.matched.to_string(),
+            format!("{:.1}", score.match_pct()),
+            fnum(score.mean_delta()),
+        ]);
+    }
+    t.print();
+    println!(
+        "overall: {}/{} decisions matched ({:.1}%); {} unknown-site \
+         record(s) skipped",
+        report.matched(),
+        report.records(),
+        report.match_pct(),
+        report.skipped,
+    );
+    let min_pct: f64 = args.parse_or("min-match-pct", 0.0)?;
+    if report.match_pct() < min_pct {
+        return Err(hapi::Error::Config(format!(
+            "decision-match {:.1}% below required {min_pct}%",
+            report.match_pct()
+        )));
+    }
+    Ok(())
+}
+
+/// Informational bench-trajectory diff: every headline number shared
+/// by the two reports is compared; moves beyond `--threshold-pct`
+/// (default 20%) are flagged but never fail the command — whether a
+/// move is a regression (time up) or an improvement (throughput up)
+/// needs a human read.
+fn bench_compare_cmd(args: &Args) -> hapi::Result<()> {
+    use hapi::benchkit::compare_reports;
+    use hapi::util::json::Json;
+    let old_path = args.str_or("old", "BENCH_7.json");
+    let new_path = args.str_or("new", "BENCH_8.json");
+    let threshold: f64 = args.parse_or("threshold-pct", 20.0)?;
+    for path in [&old_path, &new_path] {
+        if !std::path::Path::new(path).exists() {
+            println!(
+                "bench-compare: {path} not found — nothing to compare"
+            );
+            return Ok(());
+        }
+    }
+    let old = Json::parse_file(&old_path)?;
+    let new = Json::parse_file(&new_path)?;
+    let (deltas, flagged) = compare_reports(&old, &new, threshold)?;
+    let mut t = Table::new(
+        &format!("bench trajectory: {old_path} -> {new_path}"),
+        &["name", "old", "new", "delta %", "flag"],
+    );
+    for d in &deltas {
+        t.row(vec![
+            d.name.clone(),
+            fnum(d.old),
+            fnum(d.new),
+            format!("{:+.1}", d.pct),
+            if d.pct.abs() > threshold {
+                format!(">{threshold:.0}%")
+            } else {
+                String::new()
+            },
+        ]);
+    }
+    t.print();
+    println!(
+        "{flagged} of {} shared headline number(s) moved more than \
+         {threshold}% (informational)",
+        deltas.len(),
+    );
     Ok(())
 }
 

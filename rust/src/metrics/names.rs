@@ -37,6 +37,7 @@ pub const BA_BURST_WIDTH: &str = "ba.burst_width";
 pub const BA_BURST_CLAMPED: &str = "ba.burst_clamped";
 pub const BA_GATHER_WINDOW_NS: &str = "ba.gather_window_ns";
 pub const BA_LANES_ACTIVE: &str = "ba.lanes_active";
+pub const BA_POLICY_DECISIONS: &str = "ba.policy_decisions";
 
 // ------------------------------------------------------------ pipeline.*
 // Client-side prefetch pipeline, sharded fetch engine and transport
@@ -60,6 +61,7 @@ pub const PIPELINE_HEDGE_WASTED_BYTES: &str = "pipeline.hedge_wasted_bytes";
 pub const PIPELINE_REPINS: &str = "pipeline.repins";
 pub const PIPELINE_REPINS_BACK: &str = "pipeline.repins_back";
 pub const PIPELINE_PROBES: &str = "pipeline.probes";
+pub const PIPELINE_POLICY_DECISIONS: &str = "pipeline.policy_decisions";
 
 // ----------------------------------------------------------------- cos.*
 // Storage tier: object store + proxy front ends (cos/).

@@ -1,0 +1,1273 @@
+//! Pluggable decision policies, recorded decision traces and offline
+//! policy replay.
+//!
+//! HAPI's three control decisions — split choice (Algorithm 1 in
+//! [`crate::split`]), storage-side batch adaptation (Eq. 4 in
+//! [`crate::batch`], driven by `server/planner.rs`) and transport
+//! slot→path re-pinning (`client/transport.rs`) — were hard-coded
+//! analytic solvers reading overlapping signals through private
+//! plumbing.  This module factors each site into the BYOM shape (see
+//! PAPERS.md): the *system* gathers a signals snapshot and applies the
+//! decision, the *policy* maps signals → decision and is swappable per
+//! deployment via the `split_policy` / `batch_policy` /
+//! `transport_policy` knobs.  The analytic solvers stay the defaults
+//! and remain byte-identical to the pre-refactor code (pinned by
+//! `rust/tests/policy_golden.rs`).
+//!
+//! **Decision traces.**  With the `decision_trace` knob set to a file
+//! path, every policy invocation appends a [`DecisionRecord`] —
+//! timestamped signals-in + decision-out — as one compact JSON line.
+//! All sites of one process share a [`TraceSink`] per path, so records
+//! from the client, the transport scheduler and the planner interleave
+//! under one global sequence number with line-atomic writes.
+//!
+//! **Offline replay.**  [`eval_trace`] replays a recorded trace against
+//! a candidate [`PolicySet`] and scores it without a live run:
+//! decision-match rate per site, plus a predicted-delta per the
+//! `theory/` cost model (seconds of per-iteration transfer for split,
+//! planned bytes for batch, differently-routed slots for transport).
+//! `hapi policy-eval --trace <file> --policy <name>` is the CLI front
+//! end.
+
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::batch::{self, Assignment, BatchRequest, Solution};
+use crate::error::{Error, Result};
+use crate::profiler::AppProfile;
+use crate::split;
+use crate::theory;
+use crate::util::json::Json;
+
+/// Latency samples a path needs before its p95 estimate participates
+/// in degradation detection (mirrors the hedger's sample floor).
+pub const MIN_LAT_SAMPLES: u64 = 8;
+
+// ---------------------------------------------------------------------
+// Split
+// ---------------------------------------------------------------------
+
+/// Everything Algorithm 1 (or a replacement) may look at when choosing
+/// a split index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitSignals {
+    /// Application input bytes per sample (`L_0`).
+    pub input_bytes: u64,
+    /// Last frozen unit — the deepest admissible split.
+    pub freeze_idx: usize,
+    /// `out_bytes[i - 1]` = bytes/sample leaving unit `i` (1-based,
+    /// up to the freeze index).
+    pub out_bytes: Vec<u64>,
+    /// Measured bandwidth in bytes/sec (`None` = unshaped/unknown).
+    pub bandwidth: Option<u64>,
+    /// The paper's "1 s" decision window.
+    pub window_secs: f64,
+    /// Training batch (scales per-sample outputs to per-iteration).
+    pub train_batch: usize,
+    /// The client's prefetch depth (context for non-analytic policies).
+    pub pipeline_depth: usize,
+}
+
+impl SplitSignals {
+    pub fn from_app(
+        app: &AppProfile,
+        bandwidth: Option<u64>,
+        window_secs: f64,
+        train_batch: usize,
+        pipeline_depth: usize,
+    ) -> SplitSignals {
+        SplitSignals {
+            input_bytes: app.input_bytes(),
+            freeze_idx: app.freeze_idx(),
+            out_bytes: (1..=app.freeze_idx()).map(|i| app.out_bytes(i)).collect(),
+            bandwidth,
+            window_secs,
+            train_batch,
+            pipeline_depth,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let out = self.out_bytes.iter().map(|&b| Json::num(b as f64)).collect();
+        Json::obj(vec![
+            ("input_bytes", Json::num(self.input_bytes as f64)),
+            ("freeze_idx", Json::num(self.freeze_idx as f64)),
+            ("out_bytes", Json::Arr(out)),
+            (
+                "bandwidth",
+                match self.bandwidth {
+                    Some(bw) => Json::num(bw as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("window_secs", Json::num(self.window_secs)),
+            ("train_batch", Json::num(self.train_batch as f64)),
+            ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SplitSignals> {
+        let out_bytes = j
+            .get("out_bytes")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_u64())
+            .collect::<Result<Vec<u64>>>()?;
+        Ok(SplitSignals {
+            input_bytes: j.get("input_bytes")?.as_u64()?,
+            freeze_idx: j.get("freeze_idx")?.as_usize()?,
+            out_bytes,
+            bandwidth: match j.get("bandwidth")? {
+                Json::Null => None,
+                bw => Some(bw.as_u64()?),
+            },
+            window_secs: j.get("window_secs")?.as_f64()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            pipeline_depth: j.get("pipeline_depth")?.as_usize()?,
+        })
+    }
+}
+
+/// Signals → split index.  Implementations must stay pure (no side
+/// effects): the same signals must yield the same decision, or the
+/// offline replay scoring is meaningless.
+pub trait SplitPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn choose(&self, sig: &SplitSignals) -> usize;
+}
+
+/// The paper's Algorithm 1 (the default): earliest candidate whose
+/// per-iteration transfer fits under `bandwidth × window`.
+pub struct AnalyticSplit;
+
+impl SplitPolicy for AnalyticSplit {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn choose(&self, sig: &SplitSignals) -> usize {
+        split::choose_split_from(
+            sig.input_bytes,
+            sig.freeze_idx,
+            &sig.out_bytes,
+            sig.bandwidth,
+            sig.window_secs,
+            sig.train_batch,
+        )
+    }
+}
+
+/// Always split at the freeze index — the static-freeze competitor's
+/// choice, and Algorithm 1's scarce-bandwidth fallback.
+pub struct FreezeSplit;
+
+impl SplitPolicy for FreezeSplit {
+    fn name(&self) -> &'static str {
+        "freeze"
+    }
+
+    fn choose(&self, sig: &SplitSignals) -> usize {
+        sig.freeze_idx
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batch
+// ---------------------------------------------------------------------
+
+/// One planning pass's view: the ready-lane requests (in lane-rank
+/// order) and the device memory budget.
+#[derive(Debug, Clone)]
+pub struct BatchSignals {
+    pub requests: Vec<BatchRequest>,
+    /// Free device bytes this pass may plan into.
+    pub budget: u64,
+    /// Operator minimum batch (paper: 25).
+    pub b_min: usize,
+    /// Execution granularity (the AOT micro-batch).
+    pub step: usize,
+}
+
+impl BatchSignals {
+    pub fn to_json(&self) -> Json {
+        let reqs = self
+            .requests
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("data_bytes_per_sample", Json::num(r.data_bytes_per_sample as f64)),
+                    ("model_bytes", Json::num(r.model_bytes as f64)),
+                    ("b_max", Json::num(r.b_max as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("requests", Json::Arr(reqs)),
+            ("budget", Json::num(self.budget as f64)),
+            ("b_min", Json::num(self.b_min as f64)),
+            ("step", Json::num(self.step as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BatchSignals> {
+        let requests = j
+            .get("requests")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(BatchRequest {
+                    id: r.get("id")?.as_u64()?,
+                    data_bytes_per_sample: r.get("data_bytes_per_sample")?.as_u64()?,
+                    model_bytes: r.get("model_bytes")?.as_u64()?,
+                    b_max: r.get("b_max")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<BatchRequest>>>()?;
+        Ok(BatchSignals {
+            requests,
+            budget: j.get("budget")?.as_u64()?,
+            b_min: j.get("b_min")?.as_usize()?,
+            step: j.get("step")?.as_usize()?,
+        })
+    }
+}
+
+/// Signals → per-lane grants.  [`Error::Infeasible`] means even one
+/// request at its floor cannot fit (the planner skips the pass).
+pub trait BatchPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn plan(&self, sig: &BatchSignals) -> Result<Solution>;
+}
+
+/// The Eq. 4 water-filling solver (the default).
+pub struct AnalyticBatch;
+
+impl BatchPolicy for AnalyticBatch {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn plan(&self, sig: &BatchSignals) -> Result<Solution> {
+        batch::solve(&sig.requests, sig.budget, sig.b_min, sig.step)
+    }
+}
+
+/// Grant every request its floor batch (`min(b_min, b_max)`) and never
+/// water-fill — a deliberately conservative baseline for policy-eval
+/// comparisons.  Shares the solver's drop-tail behaviour when even the
+/// floors do not fit.
+pub struct FloorBatch;
+
+impl BatchPolicy for FloorBatch {
+    fn name(&self) -> &'static str {
+        "floor"
+    }
+
+    fn plan(&self, sig: &BatchSignals) -> Result<Solution> {
+        let reqs = &sig.requests;
+        if reqs.is_empty() {
+            return Ok(Solution {
+                assignments: vec![],
+                deferred: vec![],
+                planned_bytes: 0,
+            });
+        }
+        let floor_of = |r: &BatchRequest| {
+            r.model_bytes + sig.b_min.min(r.b_max) as u64 * r.data_bytes_per_sample
+        };
+        let mut active = reqs.len();
+        loop {
+            let floor: u64 = reqs[..active].iter().map(floor_of).sum();
+            if floor <= sig.budget {
+                break;
+            }
+            active -= 1;
+            if active == 0 {
+                return Err(Error::Infeasible(format!(
+                    "request {} needs {} bytes at b_min={}, budget {}",
+                    reqs[0].id,
+                    floor_of(&reqs[0]),
+                    sig.b_min,
+                    sig.budget
+                )));
+            }
+        }
+        let planned: u64 = reqs[..active].iter().map(floor_of).sum();
+        Ok(Solution {
+            assignments: reqs[..active]
+                .iter()
+                .map(|r| Assignment {
+                    id: r.id,
+                    batch: sig.b_min.min(r.b_max),
+                })
+                .collect(),
+            deferred: reqs[active..].iter().map(|r| r.id).collect(),
+            planned_bytes: planned,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transport
+// ---------------------------------------------------------------------
+
+/// One path's estimator snapshot at decision time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathSnapshot {
+    pub path: usize,
+    /// Goodput EWMA estimate, bytes/sec.
+    pub goodput: f64,
+    /// Configured healthy-baseline rate, bytes/sec (0 = unknown).
+    pub seed: f64,
+    /// p95 fetch-latency estimate in ns (EWMA mean + 2·deviation).
+    pub p95_ns: u64,
+    /// Estimator samples folded in so far — latency samples land even
+    /// for zero-payload responses, so ALL_IN_COS streams count here.
+    pub samples: u64,
+}
+
+/// The uniform signals view a transport policy decides from: per-path
+/// goodput/p95/sample snapshots plus the current and home slot maps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransportSignals {
+    pub paths: Vec<PathSnapshot>,
+    /// Current slot→path map.
+    pub slot_paths: Vec<usize>,
+    /// Each slot's static home path.
+    pub home_paths: Vec<usize>,
+    /// The `repin_threshold_pct` knob (1..=100 while re-pinning is on).
+    pub threshold_pct: u64,
+}
+
+impl TransportSignals {
+    pub fn to_json(&self) -> Json {
+        let paths = self
+            .paths
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("path", Json::num(p.path as f64)),
+                    ("goodput", Json::num(p.goodput)),
+                    ("seed", Json::num(p.seed)),
+                    ("p95_ns", Json::num(p.p95_ns as f64)),
+                    ("samples", Json::num(p.samples as f64)),
+                ])
+            })
+            .collect();
+        let slot_paths = self.slot_paths.iter().map(|&p| Json::num(p as f64)).collect();
+        let home_paths = self.home_paths.iter().map(|&p| Json::num(p as f64)).collect();
+        Json::obj(vec![
+            ("paths", Json::Arr(paths)),
+            ("slot_paths", Json::Arr(slot_paths)),
+            ("home_paths", Json::Arr(home_paths)),
+            ("threshold_pct", Json::num(self.threshold_pct as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TransportSignals> {
+        let paths = j
+            .get("paths")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(PathSnapshot {
+                    path: p.get("path")?.as_usize()?,
+                    goodput: p.get("goodput")?.as_f64()?,
+                    seed: p.get("seed")?.as_f64()?,
+                    p95_ns: p.get("p95_ns")?.as_u64()?,
+                    samples: p.get("samples")?.as_u64()?,
+                })
+            })
+            .collect::<Result<Vec<PathSnapshot>>>()?;
+        Ok(TransportSignals {
+            paths,
+            slot_paths: j.get("slot_paths")?.as_usize_vec()?,
+            home_paths: j.get("home_paths")?.as_usize_vec()?,
+            threshold_pct: j.get("threshold_pct")?.as_u64()?,
+        })
+    }
+}
+
+/// Why a slot moves — drives the scheduler's metric attribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepinKind {
+    /// Slot leaves a degraded path (counted in `pipeline.repins`).
+    Evacuate,
+    /// Slot returns to its recovered static home (counted in both
+    /// `pipeline.repins` and `pipeline.repins_back`).
+    MigrateBack,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepinMove {
+    pub slot: usize,
+    pub path: usize,
+    pub kind: RepinKind,
+}
+
+/// Signals → slot moves.  The scheduler applies the moves verbatim and
+/// owns all gating (knob off, interval amortisation), so a policy is
+/// only consulted while re-pinning is enabled.
+pub trait TransportPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn repin(&self, sig: &TransportSignals) -> Vec<RepinMove>;
+}
+
+/// The goodput-threshold re-pin rule (the default), extended with the
+/// p95-latency leg:
+///
+/// - **Goodput leg** (PR 5, byte-identical): a path is degraded when
+///   its estimate fell below `threshold_pct`% of both the per-path
+///   mean and its own configured baseline.
+/// - **Latency leg** (the PR 5 carried-over close): once at least two
+///   paths have [`MIN_LAT_SAMPLES`] latency samples, a path whose p95
+///   exceeds the ready-path mean by the inverse threshold factor
+///   (`p95 × pct > mean_p95`) is degraded too.  Zero-payload streams
+///   (ALL_IN_COS returns only a loss scalar) never move the goodput
+///   estimates, but every response is a latency sample — this leg is
+///   what lets them evacuate a slow path at all.
+///
+/// Slots on degraded paths evacuate round-robin over the healthy ones;
+/// a displaced slot migrates back once its home is healthy again.
+pub struct AnalyticRepin;
+
+impl TransportPolicy for AnalyticRepin {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn repin(&self, sig: &TransportSignals) -> Vec<RepinMove> {
+        let est: Vec<f64> = sig.paths.iter().map(|p| p.goodput).collect();
+        // A path with no estimate at all (unshaped, no samples yet)
+        // gives the mean no meaning — wait for data.
+        if est.len() < 2 || est.iter().any(|&e| !(e.is_finite() && e > 0.0)) {
+            return vec![];
+        }
+        let mean = est.iter().sum::<f64>() / est.len() as f64;
+        let pct = sig.threshold_pct.min(100) as f64 / 100.0;
+        let cutoff = mean * pct;
+        let lat_ready = |i: usize| sig.paths[i].samples >= MIN_LAT_SAMPLES;
+        let ready: Vec<usize> = (0..sig.paths.len()).filter(|&i| lat_ready(i)).collect();
+        let mean_p95 = if ready.len() >= 2 {
+            ready.iter().map(|&i| sig.paths[i].p95_ns as f64).sum::<f64>() / ready.len() as f64
+        } else {
+            0.0
+        };
+        let degraded = |i: usize| {
+            let goodput_bad = est[i] < cutoff
+                && (sig.paths[i].seed <= 0.0 || est[i] < sig.paths[i].seed * pct);
+            let latency_bad =
+                mean_p95 > 0.0 && lat_ready(i) && sig.paths[i].p95_ns as f64 * pct > mean_p95;
+            goodput_bad || latency_bad
+        };
+        let healthy: Vec<usize> = (0..est.len()).filter(|&i| !degraded(i)).collect();
+        if healthy.is_empty() {
+            return vec![];
+        }
+        let mut moves = Vec::new();
+        let mut next = 0usize;
+        for (s, &cur) in sig.slot_paths.iter().enumerate() {
+            let Some(&home) = sig.home_paths.get(s) else { continue };
+            if cur < est.len() && degraded(cur) {
+                moves.push(RepinMove {
+                    slot: s,
+                    path: healthy[next % healthy.len()],
+                    kind: RepinKind::Evacuate,
+                });
+                next += 1;
+            } else if cur != home && home < est.len() && !degraded(home) {
+                moves.push(RepinMove {
+                    slot: s,
+                    path: home,
+                    kind: RepinKind::MigrateBack,
+                });
+            }
+        }
+        moves
+    }
+}
+
+/// Never moves a slot — the PR 4 static pinning as an explicit policy.
+pub struct StaticPin;
+
+impl TransportPolicy for StaticPin {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn repin(&self, _sig: &TransportSignals) -> Vec<RepinMove> {
+        Vec::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// By-name registry (config/CLI resolve through these)
+// ---------------------------------------------------------------------
+
+pub fn split_policy(name: &str) -> Result<Box<dyn SplitPolicy>> {
+    match name {
+        "analytic" => Ok(Box::new(AnalyticSplit)),
+        "freeze" => Ok(Box::new(FreezeSplit)),
+        _ => Err(Error::Config(format!(
+            "unknown split_policy '{name}' (known: analytic, freeze)"
+        ))),
+    }
+}
+
+pub fn batch_policy(name: &str) -> Result<Box<dyn BatchPolicy>> {
+    match name {
+        "analytic" => Ok(Box::new(AnalyticBatch)),
+        "floor" => Ok(Box::new(FloorBatch)),
+        _ => Err(Error::Config(format!(
+            "unknown batch_policy '{name}' (known: analytic, floor)"
+        ))),
+    }
+}
+
+pub fn transport_policy(name: &str) -> Result<Box<dyn TransportPolicy>> {
+    match name {
+        "analytic" => Ok(Box::new(AnalyticRepin)),
+        "static" => Ok(Box::new(StaticPin)),
+        _ => Err(Error::Config(format!(
+            "unknown transport_policy '{name}' (known: analytic, static)"
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decision records + trace sink
+// ---------------------------------------------------------------------
+
+/// One recorded policy invocation, serialized as a single compact JSON
+/// line:
+///
+/// ```text
+/// {"seq":3,"t_us":1754650000000000,"site":"split","policy":"analytic",
+///  "signals":{...},"decision":{...}}
+/// ```
+///
+/// `t_us` is µs since the Unix epoch — ns would overflow the exact
+/// integer range of `util::json`'s f64 numbers.  Readers must tolerate
+/// unknown fields (the replay harness only touches keys it knows), so
+/// the schema can grow without breaking recorded traces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    pub seq: u64,
+    pub t_us: u64,
+    /// Decision site: `"split"`, `"batch"` or `"transport"`.
+    pub site: String,
+    /// Name of the policy that produced the decision.
+    pub policy: String,
+    pub signals: Json,
+    pub decision: Json,
+}
+
+impl DecisionRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("t_us", Json::num(self.t_us as f64)),
+            ("site", Json::str(self.site.clone())),
+            ("policy", Json::str(self.policy.clone())),
+            ("signals", self.signals.clone()),
+            ("decision", self.decision.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DecisionRecord> {
+        Ok(DecisionRecord {
+            seq: j.get("seq")?.as_u64()?,
+            t_us: j.get("t_us")?.as_u64()?,
+            site: j.get("site")?.as_str()?.to_string(),
+            policy: j.get("policy")?.as_str()?.to_string(),
+            signals: j.get("signals")?.clone(),
+            decision: j.get("decision")?.clone(),
+        })
+    }
+}
+
+/// Append-only JSONL writer shared by every decision site recording to
+/// the same path.  Obtained through [`sink_for`]; the first opener
+/// truncates, later openers join the live sink (a process-wide weak
+/// registry keyed by path), so one scenario's client + scheduler +
+/// planner interleave into one file with a global sequence.
+pub struct TraceSink {
+    path: String,
+    seq: AtomicU64,
+    file: Mutex<std::fs::File>,
+}
+
+fn sinks() -> &'static Mutex<BTreeMap<String, Weak<TraceSink>>> {
+    static SINKS: OnceLock<Mutex<BTreeMap<String, Weak<TraceSink>>>> = OnceLock::new();
+    SINKS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Open (or join) the decision-trace sink for `path`.  An empty path
+/// means tracing is off; open errors are swallowed — tracing is
+/// best-effort diagnostics, never a reason to fail training.
+pub fn sink_for(path: &str) -> Option<Arc<TraceSink>> {
+    if path.is_empty() {
+        return None;
+    }
+    let mut map = sinks().lock().unwrap();
+    if let Some(live) = map.get(path).and_then(|w| w.upgrade()) {
+        return Some(live);
+    }
+    let file = OpenOptions::new()
+        .create(true)
+        .write(true)
+        .truncate(true)
+        .open(path)
+        .ok()?;
+    let sink = Arc::new(TraceSink {
+        path: path.to_string(),
+        seq: AtomicU64::new(0),
+        file: Mutex::new(file),
+    });
+    map.insert(path.to_string(), Arc::downgrade(&sink));
+    Some(sink)
+}
+
+impl TraceSink {
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Append one [`DecisionRecord`] line (io errors swallowed).
+    pub fn record(&self, site: &str, policy: &str, signals: Json, decision: Json) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let t_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        let rec = DecisionRecord {
+            seq,
+            t_us,
+            site: site.to_string(),
+            policy: policy.to_string(),
+            signals,
+            decision,
+        };
+        let line = rec.to_json().to_string_compact();
+        let mut f = self.file.lock().unwrap();
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+/// Canonical decision-out JSON for a split choice.
+pub fn split_decision_json(split_idx: usize) -> Json {
+    Json::obj(vec![("split_idx", Json::num(split_idx as f64))])
+}
+
+/// Canonical decision-out JSON for a batch plan (or its infeasibility).
+pub fn batch_decision_json(res: &Result<Solution>) -> Json {
+    match res {
+        Ok(sol) => {
+            let assignments = sol
+                .assignments
+                .iter()
+                .map(|a| {
+                    Json::obj(vec![
+                        ("id", Json::num(a.id as f64)),
+                        ("batch", Json::num(a.batch as f64)),
+                    ])
+                })
+                .collect();
+            let deferred = sol.deferred.iter().map(|&d| Json::num(d as f64)).collect();
+            Json::obj(vec![
+                ("assignments", Json::Arr(assignments)),
+                ("deferred", Json::Arr(deferred)),
+                ("planned_bytes", Json::num(sol.planned_bytes as f64)),
+            ])
+        }
+        Err(_) => Json::obj(vec![("infeasible", Json::Bool(true))]),
+    }
+}
+
+/// Canonical decision-out JSON for a set of slot moves.
+pub fn transport_decision_json(moves: &[RepinMove]) -> Json {
+    let arr = moves
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("slot", Json::num(m.slot as f64)),
+                ("path", Json::num(m.path as f64)),
+                (
+                    "kind",
+                    Json::str(match m.kind {
+                        RepinKind::Evacuate => "evacuate",
+                        RepinKind::MigrateBack => "migrate_back",
+                    }),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("moves", Json::Arr(arr))])
+}
+
+// ---------------------------------------------------------------------
+// Offline replay + scoring
+// ---------------------------------------------------------------------
+
+/// The three policies a replay evaluates as one unit.
+pub struct PolicySet {
+    pub split: Box<dyn SplitPolicy>,
+    pub batch: Box<dyn BatchPolicy>,
+    pub transport: Box<dyn TransportPolicy>,
+}
+
+impl PolicySet {
+    /// The byte-identical defaults.
+    pub fn analytic() -> PolicySet {
+        PolicySet {
+            split: Box::new(AnalyticSplit),
+            batch: Box::new(AnalyticBatch),
+            transport: Box::new(AnalyticRepin),
+        }
+    }
+}
+
+/// Per-site replay score.
+#[derive(Debug, Clone, Default)]
+pub struct SiteScore {
+    pub records: usize,
+    /// Records where the candidate reproduced the recorded decision.
+    pub matched: usize,
+    /// Summed |predicted cost delta| between candidate and recorded
+    /// decisions.  Units per site: seconds of per-iteration transfer
+    /// (split, via [`theory::t_data_bytes`]), planned bytes (batch),
+    /// differently-routed slots (transport).
+    pub delta_sum: f64,
+}
+
+impl SiteScore {
+    pub fn match_pct(&self) -> f64 {
+        if self.records == 0 {
+            100.0
+        } else {
+            self.matched as f64 * 100.0 / self.records as f64
+        }
+    }
+
+    pub fn mean_delta(&self) -> f64 {
+        if self.records == 0 {
+            0.0
+        } else {
+            self.delta_sum / self.records as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalReport {
+    /// Scores keyed by site name (`split` / `batch` / `transport`).
+    pub sites: BTreeMap<String, SiteScore>,
+    /// Records whose site this harness does not know (tolerated for
+    /// forward compatibility, counted so they are not silent).
+    pub skipped: usize,
+}
+
+impl EvalReport {
+    pub fn records(&self) -> usize {
+        self.sites.values().map(|s| s.records).sum()
+    }
+
+    pub fn matched(&self) -> usize {
+        self.sites.values().map(|s| s.matched).sum()
+    }
+
+    pub fn match_pct(&self) -> f64 {
+        let n = self.records();
+        if n == 0 {
+            100.0
+        } else {
+            self.matched() as f64 * 100.0 / n as f64
+        }
+    }
+}
+
+fn parse_recorded_split(decision: &Json) -> Result<usize> {
+    decision.get("split_idx")?.as_usize()
+}
+
+/// `None` = recorded as infeasible.
+type BatchOutcome = Option<(Vec<Assignment>, Vec<u64>, u64)>;
+
+fn parse_recorded_batch(decision: &Json) -> Result<BatchOutcome> {
+    if let Some(Json::Bool(true)) = decision.opt("infeasible") {
+        return Ok(None);
+    }
+    let assignments = decision
+        .get("assignments")?
+        .as_arr()?
+        .iter()
+        .map(|a| {
+            Ok(Assignment {
+                id: a.get("id")?.as_u64()?,
+                batch: a.get("batch")?.as_usize()?,
+            })
+        })
+        .collect::<Result<Vec<Assignment>>>()?;
+    let deferred = decision
+        .get("deferred")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_u64())
+        .collect::<Result<Vec<u64>>>()?;
+    let planned = decision.get("planned_bytes")?.as_u64()?;
+    Ok(Some((assignments, deferred, planned)))
+}
+
+fn batch_outcome(res: &Result<Solution>) -> BatchOutcome {
+    res.as_ref()
+        .ok()
+        .map(|sol| (sol.assignments.clone(), sol.deferred.clone(), sol.planned_bytes))
+}
+
+fn parse_recorded_moves(decision: &Json) -> Result<Vec<RepinMove>> {
+    decision
+        .get("moves")?
+        .as_arr()?
+        .iter()
+        .map(|m| {
+            let kind = match m.get("kind")?.as_str()? {
+                "evacuate" => RepinKind::Evacuate,
+                "migrate_back" => RepinKind::MigrateBack,
+                other => {
+                    return Err(Error::Json(format!("unknown repin kind '{other}'")));
+                }
+            };
+            Ok(RepinMove {
+                slot: m.get("slot")?.as_usize()?,
+                path: m.get("path")?.as_usize()?,
+                kind,
+            })
+        })
+        .collect()
+}
+
+fn apply_moves(slots: &[usize], moves: &[RepinMove]) -> Vec<usize> {
+    let mut out = slots.to_vec();
+    for m in moves {
+        if m.slot < out.len() {
+            out[m.slot] = m.path;
+        }
+    }
+    out
+}
+
+/// Replay every record in `text` (one JSON object per line, blank
+/// lines skipped) against `policies` and score per site.  A malformed
+/// line is an error — a trace that cannot be parsed should not be
+/// silently scored — but unknown *fields* and unknown *sites* are
+/// tolerated for forward compatibility.
+pub fn eval_records(text: &str, policies: &PolicySet) -> Result<EvalReport> {
+    let mut report = EvalReport::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| Error::Json(format!("trace line {}: {e}", lineno + 1)))?;
+        let rec = DecisionRecord::from_json(&j)
+            .map_err(|e| Error::Json(format!("trace line {}: {e}", lineno + 1)))?;
+        match rec.site.as_str() {
+            "split" => {
+                let sig = SplitSignals::from_json(&rec.signals)?;
+                let recorded = parse_recorded_split(&rec.decision)?;
+                let cand = policies.split.choose(&sig);
+                let s = report.sites.entry("split".into()).or_default();
+                s.records += 1;
+                if cand == recorded {
+                    s.matched += 1;
+                }
+                if let Some(bw) = sig.bandwidth {
+                    let per_iter = |idx: usize| {
+                        let out =
+                            sig.out_bytes.get(idx.saturating_sub(1)).copied().unwrap_or(0);
+                        out as f64 * sig.train_batch as f64
+                    };
+                    s.delta_sum += (theory::t_data_bytes(per_iter(cand), bw as f64)
+                        - theory::t_data_bytes(per_iter(recorded), bw as f64))
+                    .abs();
+                }
+            }
+            "batch" => {
+                let sig = BatchSignals::from_json(&rec.signals)?;
+                let recorded = parse_recorded_batch(&rec.decision)?;
+                let cand = batch_outcome(&policies.batch.plan(&sig));
+                let s = report.sites.entry("batch".into()).or_default();
+                s.records += 1;
+                if cand == recorded {
+                    s.matched += 1;
+                }
+                if let (Some((_, _, a)), Some((_, _, b))) = (&cand, &recorded) {
+                    s.delta_sum += (*a as f64 - *b as f64).abs();
+                }
+            }
+            "transport" => {
+                let sig = TransportSignals::from_json(&rec.signals)?;
+                let recorded = parse_recorded_moves(&rec.decision)?;
+                let cand = policies.transport.repin(&sig);
+                let s = report.sites.entry("transport".into()).or_default();
+                s.records += 1;
+                if cand == recorded {
+                    s.matched += 1;
+                }
+                let a = apply_moves(&sig.slot_paths, &cand);
+                let b = apply_moves(&sig.slot_paths, &recorded);
+                s.delta_sum +=
+                    a.iter().zip(&b).filter(|(x, y)| x != y).count() as f64;
+            }
+            _ => report.skipped += 1,
+        }
+    }
+    Ok(report)
+}
+
+/// [`eval_records`] over a trace file.
+pub fn eval_trace(path: &str, policies: &PolicySet) -> Result<EvalReport> {
+    let text = std::fs::read_to_string(path)?;
+    eval_records(&text, policies)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn split_sig(bandwidth: Option<u64>) -> SplitSignals {
+        SplitSignals {
+            input_bytes: 1000,
+            freeze_idx: 5,
+            out_bytes: vec![1500, 800, 1200, 200, 100],
+            bandwidth,
+            window_secs: 1.0,
+            train_batch: 10,
+            pipeline_depth: 2,
+        }
+    }
+
+    fn batch_sig(budget: u64) -> BatchSignals {
+        BatchSignals {
+            requests: vec![
+                BatchRequest {
+                    id: 1,
+                    data_bytes_per_sample: 100,
+                    model_bytes: 1000,
+                    b_max: 80,
+                },
+                BatchRequest {
+                    id: 2,
+                    data_bytes_per_sample: 50,
+                    model_bytes: 500,
+                    b_max: 100,
+                },
+            ],
+            budget,
+            b_min: 20,
+            step: 20,
+        }
+    }
+
+    fn transport_sig(goodputs: &[f64], p95s: &[u64], samples: u64) -> TransportSignals {
+        TransportSignals {
+            paths: goodputs
+                .iter()
+                .zip(p95s)
+                .enumerate()
+                .map(|(i, (&g, &p))| PathSnapshot {
+                    path: i,
+                    goodput: g,
+                    seed: g.max(1.0),
+                    p95_ns: p,
+                    samples,
+                })
+                .collect(),
+            slot_paths: (0..goodputs.len()).collect(),
+            home_paths: (0..goodputs.len()).collect(),
+            threshold_pct: 60,
+        }
+    }
+
+    #[test]
+    fn signal_jsons_round_trip() {
+        for bw in [None, Some(3000u64)] {
+            let sig = split_sig(bw);
+            assert_eq!(SplitSignals::from_json(&sig.to_json()).unwrap(), sig);
+        }
+        let b = batch_sig(6000);
+        let back = BatchSignals::from_json(&b.to_json()).unwrap();
+        assert_eq!(back.budget, 6000);
+        assert_eq!(back.requests.len(), 2);
+        assert_eq!(back.requests[1].id, 2);
+        let t = transport_sig(&[100.0, 200.0], &[10, 20], 9);
+        assert_eq!(TransportSignals::from_json(&t.to_json()).unwrap(), t);
+    }
+
+    #[test]
+    fn analytic_split_matches_algorithm_one() {
+        // Same fixture as split/mod.rs: scarce bandwidth walks toward
+        // the freeze index.
+        assert_eq!(AnalyticSplit.choose(&split_sig(Some(1_000_000_000))), 2);
+        assert_eq!(AnalyticSplit.choose(&split_sig(Some(3000))), 4);
+        assert_eq!(AnalyticSplit.choose(&split_sig(Some(600))), 5);
+        assert_eq!(AnalyticSplit.choose(&split_sig(None)), 2);
+        assert_eq!(FreezeSplit.choose(&split_sig(None)), 5);
+    }
+
+    #[test]
+    fn floor_batch_grants_floors_and_drops_tail() {
+        let sol = FloorBatch.plan(&batch_sig(1 << 30)).unwrap();
+        assert_eq!(sol.assignments.len(), 2);
+        assert!(sol.assignments.iter().all(|a| a.batch == 20));
+        // Budget fits request 1's floor (3000) but not both (4500).
+        let sol = FloorBatch.plan(&batch_sig(3500)).unwrap();
+        assert_eq!(sol.assignments.len(), 1);
+        assert_eq!(sol.deferred, vec![2]);
+        // Even one floor cannot fit.
+        let err = FloorBatch.plan(&batch_sig(100)).unwrap_err();
+        assert!(matches!(err, Error::Infeasible(_)));
+    }
+
+    #[test]
+    fn analytic_repin_goodput_leg_matches_scheduler_rule() {
+        // Path 0 collapsed to 1/20th: evacuate its slot to path 1.
+        let mut sig = transport_sig(&[50_000.0, 1_000_000.0], &[0, 0], 0);
+        sig.paths[0].seed = 1_000_000.0;
+        sig.paths[1].seed = 1_000_000.0;
+        let moves = AnalyticRepin.repin(&sig);
+        assert_eq!(
+            moves,
+            vec![RepinMove {
+                slot: 0,
+                path: 1,
+                kind: RepinKind::Evacuate
+            }]
+        );
+        // A displaced slot migrates back once home is healthy.
+        let mut back = transport_sig(&[1_000_000.0, 1_000_000.0], &[0, 0], 0);
+        back.slot_paths = vec![1, 1];
+        let moves = AnalyticRepin.repin(&back);
+        assert_eq!(
+            moves,
+            vec![RepinMove {
+                slot: 0,
+                path: 0,
+                kind: RepinKind::MigrateBack
+            }]
+        );
+        // Heterogeneous rates: running at its own seed is healthy.
+        let mut het = transport_sig(&[2_000_000.0, 8_000_000.0], &[0, 0], 0);
+        het.paths[0].seed = 2_000_000.0;
+        het.paths[1].seed = 8_000_000.0;
+        assert!(AnalyticRepin.repin(&het).is_empty());
+    }
+
+    #[test]
+    fn analytic_repin_latency_leg_catches_zero_payload_streams() {
+        // Equal goodputs (seeded, never moved by zero-byte samples):
+        // the goodput leg sees nothing.  Path 0's p95 is 6x path 1's,
+        // which at 60% exceeds the inverse-threshold bound.
+        let sig = transport_sig(
+            &[100_000.0, 100_000.0],
+            &[600_000_000, 100_000_000],
+            MIN_LAT_SAMPLES,
+        );
+        let moves = AnalyticRepin.repin(&sig);
+        assert_eq!(
+            moves,
+            vec![RepinMove {
+                slot: 0,
+                path: 1,
+                kind: RepinKind::Evacuate
+            }]
+        );
+        // Below the sample floor the latency leg stays inert.
+        let cold = transport_sig(
+            &[100_000.0, 100_000.0],
+            &[600_000_000, 100_000_000],
+            MIN_LAT_SAMPLES - 1,
+        );
+        assert!(AnalyticRepin.repin(&cold).is_empty());
+        // Uniform latencies never trip the leg.
+        let uniform = transport_sig(&[100_000.0, 100_000.0], &[5_000_000, 5_000_000], 50);
+        assert!(AnalyticRepin.repin(&uniform).is_empty());
+        assert!(StaticPin.repin(&sig).is_empty());
+    }
+
+    #[test]
+    fn record_round_trips_and_tolerates_unknown_fields() {
+        let rec = DecisionRecord {
+            seq: 7,
+            t_us: 1_754_650_000_000_000,
+            site: "split".into(),
+            policy: "analytic".into(),
+            signals: split_sig(Some(3000)).to_json(),
+            decision: split_decision_json(4),
+        };
+        let mut j = rec.to_json();
+        assert_eq!(DecisionRecord::from_json(&j).unwrap(), rec);
+        // Forward compat: an extra top-level field parses fine.
+        if let Json::Obj(m) = &mut j {
+            m.insert("future_field".into(), Json::str("ignored"));
+        }
+        assert_eq!(DecisionRecord::from_json(&j).unwrap(), rec);
+    }
+
+    fn trace_text() -> String {
+        let mut lines = Vec::new();
+        for (seq, bw) in [Some(1_000_000_000u64), Some(3000), Some(600), None]
+            .iter()
+            .enumerate()
+        {
+            let sig = split_sig(*bw);
+            let rec = DecisionRecord {
+                seq: seq as u64,
+                t_us: 1,
+                site: "split".into(),
+                policy: "analytic".into(),
+                decision: split_decision_json(AnalyticSplit.choose(&sig)),
+                signals: sig.to_json(),
+            };
+            lines.push(rec.to_json().to_string_compact());
+        }
+        for (seq, budget) in [1u64 << 30, 6000, 100].iter().enumerate() {
+            let sig = batch_sig(*budget);
+            let rec = DecisionRecord {
+                seq: seq as u64,
+                t_us: 2,
+                site: "batch".into(),
+                policy: "analytic".into(),
+                decision: batch_decision_json(&AnalyticBatch.plan(&sig)),
+                signals: sig.to_json(),
+            };
+            lines.push(rec.to_json().to_string_compact());
+        }
+        let mut tsig = transport_sig(&[50_000.0, 1_000_000.0], &[0, 0], 0);
+        tsig.paths[0].seed = 1_000_000.0;
+        let rec = DecisionRecord {
+            seq: 0,
+            t_us: 3,
+            site: "transport".into(),
+            policy: "analytic".into(),
+            decision: transport_decision_json(&AnalyticRepin.repin(&tsig)),
+            signals: tsig.to_json(),
+        };
+        lines.push(rec.to_json().to_string_compact());
+        lines.join("\n")
+    }
+
+    #[test]
+    fn replaying_defaults_scores_full_match() {
+        let report = eval_records(&trace_text(), &PolicySet::analytic()).unwrap();
+        assert_eq!(report.records(), 8);
+        assert_eq!(report.matched(), 8);
+        assert_eq!(report.match_pct(), 100.0);
+        assert_eq!(report.skipped, 0);
+        for s in report.sites.values() {
+            assert_eq!(s.mean_delta(), 0.0);
+        }
+    }
+
+    #[test]
+    fn replaying_a_different_policy_scores_mismatches() {
+        let policies = PolicySet {
+            split: Box::new(FreezeSplit),
+            batch: Box::new(FloorBatch),
+            transport: Box::new(StaticPin),
+        };
+        let report = eval_records(&trace_text(), &policies).unwrap();
+        assert!(report.match_pct() < 100.0);
+        let split = &report.sites["split"];
+        // FreezeSplit agrees only where Algorithm 1 already fell back
+        // to the freeze index (the 600 B/s record).
+        assert_eq!(split.matched, 1);
+        assert!(split.delta_sum > 0.0, "cost-model delta must be scored");
+        let transport = &report.sites["transport"];
+        assert_eq!(transport.matched, 0);
+        assert_eq!(transport.delta_sum, 1.0, "one slot routed differently");
+    }
+
+    #[test]
+    fn eval_tolerates_unknown_sites_and_blank_lines() {
+        let extra = format!(
+            "{}\n\n{}\n",
+            trace_text(),
+            Json::obj(vec![
+                ("seq", Json::num(99.0)),
+                ("t_us", Json::num(1.0)),
+                ("site", Json::str("admission")),
+                ("policy", Json::str("learned")),
+                ("signals", Json::obj(vec![])),
+                ("decision", Json::obj(vec![])),
+            ])
+            .to_string_compact()
+        );
+        let report = eval_records(&extra, &PolicySet::analytic()).unwrap();
+        assert_eq!(report.match_pct(), 100.0);
+        assert_eq!(report.skipped, 1);
+    }
+
+    #[test]
+    fn eval_rejects_malformed_lines() {
+        assert!(eval_records("{not json", &PolicySet::analytic()).is_err());
+        let noise = Json::obj(vec![("seq", Json::num(1.0))]).to_string_compact();
+        assert!(eval_records(&noise, &PolicySet::analytic()).is_err());
+    }
+
+    #[test]
+    fn by_name_registry_rejects_unknown_policies() {
+        assert!(split_policy("analytic").is_ok());
+        assert!(split_policy("freeze").is_ok());
+        assert!(batch_policy("floor").is_ok());
+        assert!(transport_policy("static").is_ok());
+        for bad in [
+            split_policy("nope").err(),
+            batch_policy("nope").err(),
+            transport_policy("nope").err(),
+        ] {
+            assert!(matches!(bad, Some(Error::Config(_))));
+        }
+    }
+
+    #[test]
+    fn trace_sink_interleaves_sites_with_one_sequence() {
+        let path = std::env::temp_dir().join(format!(
+            "hapi_policy_sink_test_{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_string_lossy().to_string();
+        {
+            let a = sink_for(&path_str).unwrap();
+            let b = sink_for(&path_str).unwrap();
+            assert!(Arc::ptr_eq(&a, &b), "same path must share one sink");
+            a.record("split", "analytic", split_sig(None).to_json(), split_decision_json(2));
+            b.record(
+                "batch",
+                "analytic",
+                batch_sig(1 << 30).to_json(),
+                batch_decision_json(&AnalyticBatch.plan(&batch_sig(1 << 30))),
+            );
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let seqs: Vec<u64> = text
+            .lines()
+            .map(|l| {
+                DecisionRecord::from_json(&Json::parse(l).unwrap())
+                    .unwrap()
+                    .seq
+            })
+            .collect();
+        assert_eq!(seqs, vec![0, 1]);
+        let report = eval_records(&text, &PolicySet::analytic()).unwrap();
+        assert_eq!(report.match_pct(), 100.0);
+        let _ = std::fs::remove_file(&path);
+        assert!(sink_for("").is_none(), "empty path = tracing off");
+    }
+}

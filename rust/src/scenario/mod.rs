@@ -382,7 +382,22 @@ pub struct ScenarioOutcome {
 /// the events are not replayed and arrivals are zeroed — the
 /// *reference* run the chaos run is compared against.
 pub fn run(script: &ScenarioScript, chaos: bool) -> Result<ScenarioOutcome> {
-    let bed = Testbed::launch(script.config())?;
+    run_with(script, chaos, |_| {})
+}
+
+/// [`run`] with a config tweak applied on top of the script's own
+/// [`ScenarioScript::config`] — e.g. pointing `decision_trace` at a
+/// file so the run records every policy decision.  The tweak reaches
+/// every tenant: per-tenant overrides (client id, pipeline shape) are
+/// layered on the tweaked config.
+pub fn run_with(
+    script: &ScenarioScript,
+    chaos: bool,
+    tweak: impl Fn(&mut HapiConfig),
+) -> Result<ScenarioOutcome> {
+    let mut cfg = script.config();
+    tweak(&mut cfg);
+    let bed = Testbed::launch(cfg)?;
     let mut data = Vec::with_capacity(script.tenants.len());
     for plan in &script.tenants {
         let name = format!("scn-t{}", plan.tenant);

@@ -72,11 +72,15 @@ impl HapiServer {
                 )
             })
             .collect();
-        let planner = Planner::new(
+        let batch_policy = crate::policy::batch_policy(&cfg.batch_policy)
+            .unwrap_or_else(|_| Box::new(crate::policy::AnalyticBatch));
+        let planner = Planner::new_with(
             devices.clone(),
             cfg.min_cos_batch,
             cfg.batch_adaptation,
             registry.clone(),
+            Arc::from(batch_policy),
+            crate::policy::sink_for(&cfg.decision_trace),
         );
         Arc::new(HapiServer {
             engine,

@@ -10,6 +10,13 @@
 //! queued and are re-planned as running leases release (the paper's
 //! retry-after-removal loop).
 //!
+//! The Eq. 4 solve itself sits behind [`crate::policy::BatchPolicy`]:
+//! the default [`policy::AnalyticBatch`] delegates to
+//! [`crate::batch::solve`] byte-identically, and every planning pass
+//! can append a `DecisionRecord` (gathered requests in, grants out) to
+//! the configured decision trace — `ba.policy_decisions` counts the
+//! passes routed through the policy seam.
+//!
 //! Scheduling refinements over the paper's constant-window design:
 //!
 //! - **Per-client gather lanes** — clients report a stable `client_id`
@@ -54,9 +61,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
-use crate::batch::{solve, BatchRequest};
+use crate::batch::BatchRequest;
 use crate::error::{Error, Result};
 use crate::metrics::{names, Registry};
+use crate::policy::{self, BatchPolicy, BatchSignals, TraceSink};
 use crate::runtime::{DeviceSim, Lease};
 
 /// Gather budget per expected request in a burst (≪ one request's
@@ -201,11 +209,35 @@ pub struct Planner {
 }
 
 impl Planner {
+    /// Planner with the default Eq. 4 solver ([`policy::AnalyticBatch`])
+    /// and no decision trace.
     pub fn new(
         devices: Vec<Arc<DeviceSim>>,
         min_batch: usize,
         enabled: bool,
         registry: Registry,
+    ) -> Planner {
+        Planner::new_with(
+            devices,
+            min_batch,
+            enabled,
+            registry,
+            Arc::new(policy::AnalyticBatch),
+            None,
+        )
+    }
+
+    /// Planner with an explicit [`BatchPolicy`] and optional decision
+    /// trace.  Every planning pass routes its gathered requests through
+    /// `batch_policy.plan` and (when tracing) appends one
+    /// `DecisionRecord` per pass — including infeasible outcomes.
+    pub fn new_with(
+        devices: Vec<Arc<DeviceSim>>,
+        min_batch: usize,
+        enabled: bool,
+        registry: Registry,
+        batch_policy: Arc<dyn BatchPolicy>,
+        trace: Option<Arc<TraceSink>>,
     ) -> Planner {
         let state = Arc::new((
             Mutex::new(State {
@@ -226,7 +258,17 @@ impl Planner {
             Some(
                 std::thread::Builder::new()
                     .name("hapi-planner".into())
-                    .spawn(move || planner_loop(st, devs, min_batch, reg, sd))
+                    .spawn(move || {
+                        planner_loop(
+                            st,
+                            devs,
+                            min_batch,
+                            reg,
+                            sd,
+                            batch_policy,
+                            trace,
+                        )
+                    })
                     .expect("spawn planner"),
             )
         } else {
@@ -506,6 +548,8 @@ fn planner_loop(
     min_batch: usize,
     registry: Registry,
     shutdown: Arc<AtomicBool>,
+    batch_policy: Arc<dyn BatchPolicy>,
+    trace: Option<Arc<TraceSink>>,
 ) {
     let (lock, cv) = &*state;
     // Wakeup epoch consumed by the last planning pass: the loop only
@@ -642,9 +686,25 @@ fn planner_loop(
                         }
                     })
                     .collect();
-                let budget = device.free();
-                let Ok(sol) = solve(&reqs, budget, min_batch, min_batch)
-                else {
+                let sig = BatchSignals {
+                    requests: reqs,
+                    budget: device.free(),
+                    b_min: min_batch,
+                    step: min_batch,
+                };
+                let res = batch_policy.plan(&sig);
+                if let Some(trace) = &trace {
+                    trace.record(
+                        "batch",
+                        batch_policy.name(),
+                        sig.to_json(),
+                        policy::batch_decision_json(&res),
+                    );
+                }
+                registry
+                    .counter(names::BA_POLICY_DECISIONS)
+                    .inc();
+                let Ok(sol) = res else {
                     // Nothing fits right now; the next lease release or
                     // arrival bumps `wakeups` and re-triggers planning —
                     // until then the loop blocks instead of spinning.

@@ -30,12 +30,56 @@ pub struct SplitDecision {
     pub candidates: Vec<usize>,
 }
 
+/// Phase 1 on raw signals: candidate units whose output is smaller
+/// than the input, up to the freeze index.  `out_bytes[i - 1]` is the
+/// per-sample output of unit `i` (1-based), as carried by
+/// [`crate::policy::SplitSignals`].
+pub fn candidates_from(input_bytes: u64, freeze_idx: usize, out_bytes: &[u64]) -> Vec<usize> {
+    (1..=freeze_idx.min(out_bytes.len()))
+        .filter(|&i| out_bytes[i - 1] < input_bytes)
+        .collect()
+}
+
+/// Phase 2 on raw signals: the full Algorithm 1, returning only the
+/// winning index.  This is the pure core [`crate::policy::AnalyticSplit`]
+/// delegates to; [`choose_split_idx`] wraps it for `AppProfile` callers.
+pub fn choose_split_from(
+    input_bytes: u64,
+    freeze_idx: usize,
+    out_bytes: &[u64],
+    bandwidth: Option<u64>,
+    window_secs: f64,
+    train_batch: usize,
+) -> usize {
+    let budget = bandwidth
+        .map(|bw| (bw as f64 * window_secs) as u64)
+        .unwrap_or(u64::MAX);
+    let mut winner = freeze_idx;
+    for i in candidates_from(input_bytes, freeze_idx, out_bytes) {
+        let per_iter = out_bytes[i - 1] * train_batch as u64;
+        if per_iter < budget {
+            winner = i;
+            break;
+        }
+    }
+    winner
+}
+
 /// Phase 1: candidate units (output < application input, before freeze).
 pub fn candidates(app: &AppProfile) -> Vec<usize> {
-    let input = app.input_bytes();
-    (1..=app.freeze_idx())
-        .filter(|&i| app.out_bytes(i) < input)
-        .collect()
+    let out: Vec<u64> = (1..=app.freeze_idx()).map(|i| app.out_bytes(i)).collect();
+    candidates_from(app.input_bytes(), app.freeze_idx(), &out)
+}
+
+/// Expand a chosen split index into the full [`SplitDecision`] record
+/// (byte sizes + the phase-1 candidate list for diagnostics).
+pub fn decision_for(app: &AppProfile, split_idx: usize, train_batch: usize) -> SplitDecision {
+    SplitDecision {
+        split_idx,
+        out_bytes_per_sample: app.out_bytes(split_idx),
+        bytes_per_iteration: app.out_bytes(split_idx) * train_batch as u64,
+        candidates: candidates(app),
+    }
 }
 
 /// Phase 2: the full Algorithm 1.
@@ -49,25 +93,16 @@ pub fn choose_split_idx(
     window_secs: f64,
     train_batch: usize,
 ) -> SplitDecision {
-    let cands = candidates(app);
-    let budget = bandwidth
-        .map(|bw| (bw as f64 * window_secs) as u64)
-        .unwrap_or(u64::MAX);
-
-    let mut winner = app.freeze_idx();
-    for &i in &cands {
-        let per_iter = app.out_bytes(i) * train_batch as u64;
-        if per_iter < budget {
-            winner = i;
-            break;
-        }
-    }
-    SplitDecision {
-        split_idx: winner,
-        out_bytes_per_sample: app.out_bytes(winner),
-        bytes_per_iteration: app.out_bytes(winner) * train_batch as u64,
-        candidates: cands,
-    }
+    let out: Vec<u64> = (1..=app.freeze_idx()).map(|i| app.out_bytes(i)).collect();
+    let winner = choose_split_from(
+        app.input_bytes(),
+        app.freeze_idx(),
+        &out,
+        bandwidth,
+        window_secs,
+        train_batch,
+    );
+    decision_for(app, winner, train_batch)
 }
 
 #[cfg(test)]

@@ -81,9 +81,16 @@ pub fn c_client(
     batches * (k.c21 * train_batch as f64 * l_split + k.c22 * l_client)
 }
 
+/// T_Data on raw signals: seconds to move `bytes` at `bandwidth`
+/// bytes/sec.  The policy-replay scorer uses this directly (it has no
+/// `AppProfile`, only recorded byte counts).
+pub fn t_data_bytes(bytes: f64, bandwidth: f64) -> f64 {
+    bytes / bandwidth
+}
+
 /// T_Data: network transfer time for one epoch.
 pub fn t_data(app: &AppProfile, split: usize, dataset: usize, bandwidth: f64) -> f64 {
-    app.out_bytes(split) as f64 * dataset as f64 / bandwidth
+    t_data_bytes(app.out_bytes(split) as f64 * dataset as f64, bandwidth)
 }
 
 /// Full Eq. 3 objective for a candidate split.

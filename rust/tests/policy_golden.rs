@@ -1,0 +1,356 @@
+//! Golden byte-identity suite for the pluggable decision policies.
+//!
+//! The PR 8 refactor moved all three decision sites (split, batch,
+//! transport re-pin) behind `hapi::policy` traits.  These tests pin the
+//! refactor's core promise: with the default `analytic` policies the
+//! system behaves **bitwise** identically to the pre-refactor solvers —
+//! same split indices, same grant sequences, same loss trajectories —
+//! and a recorded decision trace replays offline at a 100% match.
+//!
+//! Four families:
+//!
+//! - **Solver identity** — each default policy reproduces its
+//!   underlying analytic solver over randomized signal grids, both on
+//!   in-memory signals and after the JSON roundtrip replay reads.
+//! - **Live-run identity** — naming the defaults explicitly and turning
+//!   `decision_trace` on changes nothing a tenant computes (e2e on the
+//!   sim stack, via the shared invariant helpers).
+//! - **Trace/replay loop** — a canned chaos scenario records a trace;
+//!   `policy::eval_records` scores the defaults at 100% on it, and
+//!   tolerates unknown fields/sites (forward compatibility).
+//! - **Latency-leg e2e** — a zero-payload ALL_IN_COS stream (goodput
+//!   estimates never move) still evacuates a latency-degraded path via
+//!   the analytic transport policy's p95 leg.
+
+use std::time::Duration;
+
+use hapi::batch::{self, BatchRequest};
+use hapi::config::HapiConfig;
+use hapi::harness::Testbed;
+use hapi::metrics::names;
+use hapi::policy::{
+    self, AnalyticBatch, AnalyticRepin, AnalyticSplit, BatchPolicy, BatchSignals, PathSnapshot,
+    PolicySet, SplitPolicy, SplitSignals, TransportPolicy, TransportSignals,
+};
+use hapi::runtime::DeviceKind;
+use hapi::scenario::{self, ScenarioScript};
+use hapi::split;
+use hapi::util::json::Json;
+
+#[path = "common/invariants.rs"]
+mod invariants;
+use invariants::{
+    assert_bitwise_loss_identity, assert_conn_bytes_conserved, assert_no_lost_grants, loss_bits,
+};
+
+/// Per-test temp file (tests in this binary run concurrently; the
+/// trace-sink registry is keyed by path, so paths must not collide).
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("hapi_policy_golden_{tag}_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .to_string()
+}
+
+/// Deterministic LCG so the signal grids are reproducible.
+fn lcg(state: &mut u64) -> u64 {
+    *state = state
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407);
+    *state >> 11
+}
+
+/// Algorithm 1 re-derived from the paper's pseudo-code, independent of
+/// `split::choose_split_from`: phase 1 keeps units whose output is
+/// strictly smaller than the application input (up to the freeze
+/// index); phase 2 picks the *earliest* candidate whose per-iteration
+/// transfer fits under `C = bandwidth × window`, falling back to the
+/// freeze index when none qualifies.
+fn reference_algorithm_one(sig: &SplitSignals) -> usize {
+    let budget = match sig.bandwidth {
+        Some(bw) => (bw as f64 * sig.window_secs) as u64,
+        None => u64::MAX,
+    };
+    for i in 1..=sig.freeze_idx.min(sig.out_bytes.len()) {
+        let out = sig.out_bytes[i - 1];
+        if out >= sig.input_bytes {
+            continue;
+        }
+        if out * sig.train_batch as u64 < budget {
+            return i;
+        }
+    }
+    sig.freeze_idx
+}
+
+#[test]
+fn analytic_split_is_bitwise_algorithm_one_over_a_signal_grid() {
+    let mut st = 0x5eed_0001u64;
+    for case in 0..400 {
+        let freeze = 1 + (lcg(&mut st) % 8) as usize;
+        let sig = SplitSignals {
+            input_bytes: 200 + lcg(&mut st) % 4000,
+            freeze_idx: freeze,
+            out_bytes: (0..freeze).map(|_| 50 + lcg(&mut st) % 4000).collect(),
+            bandwidth: match lcg(&mut st) % 4 {
+                0 => None,
+                _ => Some(10 + lcg(&mut st) % 200_000),
+            },
+            // Binary-exact windows: the budget cast must not wobble.
+            window_secs: [0.25, 1.0, 2.0][(lcg(&mut st) % 3) as usize],
+            train_batch: 1 + (lcg(&mut st) % 64) as usize,
+            pipeline_depth: 1 + (lcg(&mut st) % 4) as usize,
+        };
+        let want = reference_algorithm_one(&sig);
+        assert_eq!(AnalyticSplit.choose(&sig), want, "case {case}: {sig:?}");
+        // The policy seam must not transform signals: the raw split
+        // core agrees…
+        assert_eq!(
+            split::choose_split_from(
+                sig.input_bytes,
+                sig.freeze_idx,
+                &sig.out_bytes,
+                sig.bandwidth,
+                sig.window_secs,
+                sig.train_batch,
+            ),
+            want,
+            "split core diverged from the policy, case {case}"
+        );
+        // …and so does the JSON roundtrip offline replay reads back.
+        let back = SplitSignals::from_json(&sig.to_json()).unwrap();
+        assert_eq!(back, sig, "signal roundtrip drifted, case {case}");
+        assert_eq!(AnalyticSplit.choose(&back), want, "replay diverged, case {case}");
+    }
+}
+
+#[test]
+fn analytic_batch_is_bitwise_eq4_solver_over_random_signals() {
+    let mut st = 0xba7c_0002u64;
+    for case in 0..300 {
+        let n = (lcg(&mut st) % 6) as usize;
+        let requests: Vec<BatchRequest> = (0..n)
+            .map(|i| BatchRequest {
+                id: i as u64 + 1,
+                data_bytes_per_sample: 1 + lcg(&mut st) % 500,
+                model_bytes: lcg(&mut st) % 10_000,
+                b_max: 1 + (lcg(&mut st) % 200) as usize,
+            })
+            .collect();
+        let b_min = 1 + (lcg(&mut st) % 40) as usize;
+        let budget = lcg(&mut st) % 300_000;
+        let sig = BatchSignals {
+            requests: requests.clone(),
+            budget,
+            b_min,
+            step: b_min,
+        };
+        let want = batch::solve(&requests, budget, b_min, b_min);
+        let got = AnalyticBatch.plan(&sig);
+        match (&want, &got) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.assignments, b.assignments, "grants diverged, case {case}");
+                assert_eq!(a.deferred, b.deferred, "deferrals diverged, case {case}");
+                assert_eq!(a.planned_bytes, b.planned_bytes, "bytes diverged, case {case}");
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("case {case}: feasibility diverged: {want:?} vs {got:?}"),
+        }
+        // Replay reads the signals back through JSON; the grant
+        // sequence must stay byte-identical through that wire.
+        let back = BatchSignals::from_json(&sig.to_json()).unwrap();
+        let replayed = AnalyticBatch.plan(&back);
+        assert_eq!(
+            policy::batch_decision_json(&got).to_string_compact(),
+            policy::batch_decision_json(&replayed).to_string_compact(),
+            "replayed plan diverged, case {case}"
+        );
+    }
+}
+
+#[test]
+fn analytic_repin_is_stable_through_the_trace_encoding() {
+    let mut st = 0x0007_ea50u64;
+    for case in 0..300 {
+        let paths = 2 + (lcg(&mut st) % 3) as usize;
+        let slots = 1 + (lcg(&mut st) % 4) as usize;
+        let sig = TransportSignals {
+            paths: (0..paths)
+                .map(|i| PathSnapshot {
+                    path: i,
+                    goodput: (1 + lcg(&mut st) % 1_000_000) as f64,
+                    seed: (1 + lcg(&mut st) % 1_000_000) as f64,
+                    p95_ns: lcg(&mut st) % 1_000_000_000,
+                    samples: lcg(&mut st) % 16,
+                })
+                .collect(),
+            slot_paths: (0..slots).map(|_| (lcg(&mut st) % paths as u64) as usize).collect(),
+            home_paths: (0..slots).map(|s| s % paths).collect(),
+            threshold_pct: 40 + lcg(&mut st) % 60,
+        };
+        let moves = AnalyticRepin.repin(&sig);
+        let back = TransportSignals::from_json(&sig.to_json()).unwrap();
+        assert_eq!(back, sig, "signal roundtrip drifted, case {case}");
+        assert_eq!(AnalyticRepin.repin(&back), moves, "replayed moves diverged, case {case}");
+    }
+}
+
+/// The live-run identity: naming the default policies explicitly and
+/// recording a decision trace may change *nothing* a tenant computes —
+/// loss trajectory, split decisions and iteration count are bitwise
+/// the config-default run's, and the byte conservation + grant
+/// invariants hold in both.  The recorded trace then replays at 100%.
+#[test]
+fn explicit_defaults_and_tracing_keep_the_run_bitwise_identical() {
+    let trace_path = tmp_path("e2e");
+    let run = |explicit: bool| -> (Vec<u32>, Vec<usize>) {
+        let mut cfg = HapiConfig::sim();
+        cfg.bandwidth = None;
+        cfg.pipeline_depth = 2;
+        cfg.fetch_fanout = 2;
+        if explicit {
+            cfg.split_policy = "analytic".into();
+            cfg.batch_policy = "analytic".into();
+            cfg.transport_policy = "analytic".into();
+            cfg.decision_trace = trace_path.clone();
+        }
+        let bed = Testbed::launch(cfg).unwrap();
+        let (ds, labels) = bed.dataset("gold-ds", "simnet", 240).unwrap();
+        let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+        let stats = client.train_epoch(&ds, &labels).unwrap();
+        assert_eq!(stats.iterations, 6);
+        let total = assert_conn_bytes_conserved(&bed.registry, 2);
+        assert!(total > 0);
+        assert_no_lost_grants(&bed.registry);
+        bed.stop();
+        (loss_bits(&stats.loss), stats.splits.clone())
+    };
+
+    let (default_loss, default_splits) = run(false);
+    let (traced_loss, traced_splits) = run(true);
+    assert_bitwise_loss_identity(
+        &default_loss,
+        &traced_loss,
+        "explicit analytic policies + decision trace vs config defaults",
+    );
+    assert_eq!(default_splits, traced_splits, "split decisions diverged");
+
+    // The trace the explicit run recorded replays at a full match
+    // under the same defaults.
+    let report = policy::eval_trace(&trace_path, &PolicySet::analytic()).unwrap();
+    assert!(report.records() >= 1, "traced run recorded no decisions");
+    assert_eq!(
+        report.match_pct(),
+        100.0,
+        "default policies must reproduce their own trace: {:?}",
+        report.sites
+    );
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// The record→replay loop on a canned chaos scenario: every decision
+/// the live run recorded scores a 100% match when replayed with the
+/// default [`PolicySet`], and the replay harness tolerates unknown
+/// fields and unknown sites (the trace schema may grow).
+#[test]
+fn scenario_trace_replays_at_full_match_with_default_policies() {
+    let trace_path = tmp_path("scenario");
+    let script = ScenarioScript::degrade_recover_migrate_back();
+    let outcome = scenario::run_with(&script, true, |cfg| {
+        cfg.decision_trace = trace_path.clone();
+    })
+    .unwrap();
+    for t in &outcome.tenants {
+        assert!(t.error.is_none(), "tenant {} failed: {:?}", t.tenant, t.error);
+    }
+
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let report = policy::eval_records(&text, &PolicySet::analytic()).unwrap();
+    assert!(report.records() > 0, "scenario recorded no decisions");
+    assert!(
+        report.sites.contains_key("split") && report.sites.contains_key("transport"),
+        "missing decision sites: {:?}",
+        report.sites.keys().collect::<Vec<_>>()
+    );
+    assert_eq!(
+        report.match_pct(),
+        100.0,
+        "pure default policies must reproduce their own trace: {:?}",
+        report.sites
+    );
+    assert_eq!(report.skipped, 0);
+
+    // Forward compatibility: an unknown field on every record and a
+    // record from an unknown site are tolerated, never scored.
+    let mut grown = String::new();
+    for line in text.lines() {
+        let mut j = Json::parse(line).unwrap();
+        if let Json::Obj(m) = &mut j {
+            m.insert("future_field".into(), Json::str("ignored"));
+        }
+        grown.push_str(&j.to_string_compact());
+        grown.push('\n');
+    }
+    grown.push_str(
+        &Json::obj(vec![
+            ("seq", Json::num(9999.0)),
+            ("t_us", Json::num(1.0)),
+            ("site", Json::str("admission")),
+            ("policy", Json::str("learned")),
+            ("signals", Json::obj(vec![])),
+            ("decision", Json::obj(vec![])),
+        ])
+        .to_string_compact(),
+    );
+    let grown_report = policy::eval_records(&grown, &PolicySet::analytic()).unwrap();
+    assert_eq!(grown_report.records(), report.records());
+    assert_eq!(grown_report.match_pct(), 100.0, "unknown fields broke the replay");
+    assert_eq!(grown_report.skipped, 1, "unknown site must be skipped, not scored");
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// The p95-latency degradation leg, end to end: an ALL_IN_COS stream
+/// returns only loss scalars, so per-path goodput estimates never move
+/// off their seeds and the goodput leg is blind — but every response
+/// is a latency sample, and once both paths have enough of them the
+/// analytic transport policy evacuates the slot pinned to a
+/// latency-degraded front end (`pipeline.repins` > 0 where the pure
+/// goodput rule would have recorded none).
+#[test]
+fn all_in_cos_latency_degradation_evacuates_the_slow_path() {
+    let mut cfg = HapiConfig::sim();
+    cfg.net_paths = 2;
+    cfg.bandwidth = Some(100_000);
+    cfg.pipeline_depth = 2;
+    cfg.fetch_fanout = 2;
+    cfg.client_id = 2; // even id: slot i → path i
+    cfg.repin_threshold_pct = 60;
+    cfg.repin_interval_ms = 10;
+    let bed = Testbed::launch(cfg).unwrap();
+    let (ds, _labels) = bed.dataset("aic-lat", "simnet", 800).unwrap();
+    let aic = bed.all_in_cos_client("simnet").unwrap();
+    // One front end turns merely *slow* — latency, not rate or
+    // fail-stop — after the client is built: the case the goodput rule
+    // cannot see on a zero-payload stream.
+    bed.net.set_path_latency(0, Duration::from_millis(120));
+    let stats = aic.train_epoch(&ds).unwrap();
+
+    assert_eq!(stats.iterations, 40); // one POST per shard
+    assert!(stats.loss.iter().all(|l| l.is_finite()));
+    // Only losses crossed the wire: the goodput estimates had nothing
+    // to chew on, so any migration below is the latency leg's.
+    assert!(
+        stats.bytes_from_cos < 100_000,
+        "payload unexpectedly large: {}",
+        stats.bytes_from_cos
+    );
+    assert!(
+        bed.registry.counter(names::PIPELINE_POLICY_DECISIONS).get() >= 1,
+        "transport policy was never consulted"
+    );
+    assert!(
+        bed.registry.counter(names::PIPELINE_REPINS).get() >= 1,
+        "zero-payload stream never evacuated the latency-degraded path"
+    );
+    bed.stop();
+}
