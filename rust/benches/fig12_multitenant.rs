@@ -18,6 +18,7 @@
 #[path = "common.rs"]
 mod common;
 
+use hapi::cli::Args;
 use hapi::config::BackendKind;
 use hapi::harness::Testbed;
 use hapi::metrics::{names, Table};
@@ -26,6 +27,16 @@ use hapi::util::fmt_duration;
 use hapi::workload::{run_tenants_with, tenant_model_for};
 
 fn main() {
+    let args = Args::from_env().expect("args");
+    // `--planner-scale N`: run only the planner-scale sweep at N
+    // tenants (the CI smoke; the full bench sweeps 100 → 1000).
+    let scale_only: usize = args.parse_or("planner-scale", 0).expect(
+        "--planner-scale takes a tenant count",
+    );
+    if scale_only > 0 {
+        planner_scale_sweep(&[scale_only]);
+        return;
+    }
     println!("== Fig 12: multi-tenant scalability ==\n");
     let hlo = common::bench_config_or_sim().backend == BackendKind::Hlo;
     let mut t = Table::new(
@@ -135,6 +146,7 @@ fn main() {
     }
 
     lane_isolation();
+    planner_scale_sweep(&[100, 1000]);
 }
 
 /// Per-client gather lanes: a burst-1 tenant trains next to a co-tenant
@@ -210,5 +222,85 @@ fn lane_isolation() {
         "burst-1 tenant's lane gather stays flat as the co-tenant's \
          burst grows: {shallow_p95:?} ns — grants are independent of \
          co-tenant depth × shards."
+    );
+}
+
+/// Thousand-tenant planner sweep: N concurrent tenants (one gather
+/// lane each) hammer a bare planner; reports p99 time-to-grant and
+/// grant throughput.  Device memory scales with N (N/10 full-batch
+/// grants fit at once) so contention and queueing — not Eq. 4
+/// infeasibility — are what is measured.  This is the O(1000)-lane
+/// scalability pin for the sharded lane table, per-ticket gates, and
+/// indexed solve.
+fn planner_scale_sweep(scales: &[usize]) {
+    use hapi::metrics::Registry;
+    use hapi::runtime::DeviceSim;
+    use hapi::server::Planner;
+
+    println!("\n== Fig 12c: planner scale (time-to-grant) ==\n");
+    let mut t = Table::new(
+        "planner scale: N concurrent tenants × 5 grants each",
+        &["tenants", "grants", "p99 time-to-grant", "grants/sec"],
+    );
+    const GRANTS_EACH: usize = 5;
+    for &n in scales {
+        let reg = Registry::new();
+        let devices = vec![DeviceSim::new(
+            "scale-gpu0",
+            DeviceKind::Gpu,
+            2_000 * (n as u64 / 10).max(10),
+            0,
+        )];
+        let planner = std::sync::Arc::new(Planner::new(
+            devices,
+            20,
+            true,
+            reg.clone(),
+        ));
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n);
+            for i in 0..n {
+                let p = planner.clone();
+                let h = std::thread::Builder::new()
+                    .stack_size(128 * 1024)
+                    .spawn_scoped(scope, move || {
+                        for _ in 0..GRANTS_EACH {
+                            let grant = p
+                                .admit(0, 100, 0, 20, 20, 1, i as u64 + 1)
+                                .expect("grant");
+                            drop(grant);
+                        }
+                    })
+                    .expect("spawn tenant");
+                handles.push(h);
+            }
+            for h in handles {
+                h.join().expect("tenant thread");
+            }
+        });
+        let elapsed = t0.elapsed();
+        let grants = reg.counter(names::BA_GRANTS).get();
+        assert_eq!(
+            grants,
+            (n * GRANTS_EACH) as u64,
+            "every admission must end in a grant"
+        );
+        let p99 = reg.histogram(names::BA_TIME_TO_GRANT_NS).p99();
+        t.row(vec![
+            n.to_string(),
+            grants.to_string(),
+            format!("{:.3} ms", p99 as f64 / 1e6),
+            format!(
+                "{:.0}",
+                hapi::benchkit::throughput(grants, elapsed)
+            ),
+        ]);
+        planner.shutdown();
+    }
+    t.print();
+    println!(
+        "per-pass planner work is indexed by touched lanes, so \
+         time-to-grant stays bounded as tenants grow 100 → 1000."
     );
 }

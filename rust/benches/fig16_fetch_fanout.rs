@@ -32,7 +32,7 @@
 //! Artifact-free by construction (SimBackend): runs on a fresh clone.
 //!
 //! `--json [PATH]` additionally writes every section's headline
-//! numbers as a machine-readable report (default `BENCH_8.json`).
+//! numbers as a machine-readable report (default `BENCH_9.json`).
 
 use hapi::benchkit::{json_path, BenchReport};
 use hapi::cli::Args;

@@ -11,7 +11,7 @@
 //!   (sub-microsecond scale, a rounding error next to any fetch).
 //!
 //! `--json [PATH]` additionally writes every bench's stats as a
-//! machine-readable report (default `BENCH_8.json`), e.g.
+//! machine-readable report (default `BENCH_9.json`), e.g.
 //! `cargo bench --bench micro_hotpaths -- --json`.
 
 #[path = "common.rs"]
@@ -170,6 +170,79 @@ fn main() {
             acc
         });
     report.stats("grad_accumulate_1M", &stats);
+
+    // 8. Planner pass cost at 1000 pending gather lanes.  A held
+    // device lease leaves headroom for exactly one grant, so ~1000
+    // lanes stay queued while the planner solves continuously; the
+    // per-pass solve (`ba.solve_ns`) must stay far under the paper's
+    // 25 ms budget even at 100× the paper's tenancy — the pin for the
+    // sharded lane table and the indexed (touched-lanes-only) solve.
+    {
+        use hapi::metrics::{names, Registry};
+        use hapi::runtime::DeviceSim;
+        use hapi::server::Planner;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        const LANES: usize = 1000;
+        let reg = Registry::new();
+        let capacity = 4_000u64;
+        let devices = vec![DeviceSim::new(
+            "micro-gpu0",
+            hapi::runtime::DeviceKind::Gpu,
+            capacity,
+            0,
+        )];
+        let device = devices[0].clone();
+        let planner = Arc::new(Planner::new(devices, 20, true, reg.clone()));
+        // One 2 000-byte grant of headroom: every pass makes progress,
+        // yet the lane table stays full while we sample.
+        let hold = device.admit(capacity - 2_000).expect("hold lease");
+        let stop = Arc::new(AtomicBool::new(false));
+        let waiters: Vec<_> = (0..LANES)
+            .map(|i| {
+                let p = planner.clone();
+                let stop = stop.clone();
+                std::thread::Builder::new()
+                    .stack_size(128 * 1024)
+                    .spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            match p.admit(0, 100, 0, 20, 20, 1, i as u64 + 1) {
+                                Ok(grant) => drop(grant),
+                                Err(_) => break, // planner shut down
+                            }
+                        }
+                    })
+                    .expect("spawn lane")
+            })
+            .collect();
+        let solve = reg.histogram(names::BA_SOLVE_NS);
+        let t0 = std::time::Instant::now();
+        while solve.count() < 50
+            && t0.elapsed() < std::time::Duration::from_secs(20)
+        {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        stop.store(true, Ordering::Relaxed);
+        planner.shutdown();
+        drop(hold);
+        for w in waiters {
+            w.join().expect("lane thread");
+        }
+        assert!(solve.count() > 0, "planner never completed a pass");
+        let p50 = solve.p50();
+        println!(
+            "bench {:40} p50 {:.3} ms over {} passes at {LANES} lanes",
+            "planner_pass_1000_lanes",
+            p50 as f64 / 1e6,
+            solve.count()
+        );
+        assert!(
+            p50 < 10_000_000,
+            "planner pass p50 {p50} ns at {LANES} lanes blows the 10 ms pin"
+        );
+        report.value("planner_pass_1000_lanes_p50_ns", p50 as f64);
+    }
 
     if let Some(path) = json_path(&args) {
         report.write(&path).expect("write bench report");

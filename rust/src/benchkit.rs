@@ -195,14 +195,14 @@ impl BenchReport {
 }
 
 /// The `--json [PATH]` convention shared by the bench binaries: the
-/// bare flag writes the canonical `BENCH_8.json`, `--json PATH`
+/// bare flag writes the canonical `BENCH_9.json`, `--json PATH`
 /// redirects it, and no flag means no report.
 pub fn json_path(args: &crate::cli::Args) -> Option<String> {
     if let Some(p) = args.get("json") {
         return Some(p.to_string());
     }
     if args.flag("json") {
-        return Some("BENCH_8.json".to_string());
+        return Some("BENCH_9.json".to_string());
     }
     None
 }
@@ -218,7 +218,7 @@ pub struct BenchDelta {
 }
 
 /// Diff two bench reports written by [`BenchReport::write`] (e.g. the
-/// current `BENCH_8.json` against a prior `BENCH_*.json`): every
+/// current `BENCH_9.json` against a prior `BENCH_*.json`): every
 /// free-form scalar, and every sampled-stats entry's `mean_ns`,
 /// present in *both* reports is compared.  Returns the per-name
 /// deltas plus how many moved by more than `threshold_pct` in either
@@ -337,7 +337,7 @@ mod tests {
         assert_eq!(json_path(&parse(&[])), None);
         assert_eq!(
             json_path(&parse(&["--json"])).as_deref(),
-            Some("BENCH_8.json")
+            Some("BENCH_9.json")
         );
         assert_eq!(
             json_path(&parse(&["--json", "out.json"])).as_deref(),

@@ -344,34 +344,62 @@ impl HapiClient {
         let key = crate::cos::ObjectKey::shard(&ds.name, shard);
         let addr = &self.addrs[path % self.addrs.len()];
         let link = self.net.path(path);
-        CosConnection::with_pooled(slot, path, addr, link, |conn| {
-            if split == 0 {
-                let body = conn.get(&key)?;
-                return Tensor::from_raw(
-                    crate::runtime::DType::F32,
-                    dims,
-                    body,
-                );
+        // Bounded admission maps to retry-with-backoff: a planner
+        // `Busy` reject is backpressure, not a fault — back off
+        // (2 ms doubling, 100 ms cap) and re-offer the request instead
+        // of waiting forever in a queue the server chose to bound.
+        let mut backoff = std::time::Duration::from_millis(2);
+        let mut attempts = 0u32;
+        loop {
+            let res =
+                CosConnection::with_pooled(slot, path, addr, link, |conn| {
+                    if split == 0 {
+                        let body = conn.get(&key)?;
+                        return Tensor::from_raw(
+                            crate::runtime::DType::F32,
+                            dims.clone(),
+                            body,
+                        );
+                    }
+                    let mem = self.app.memory();
+                    let req = PostRequest {
+                        id: self.req_id(),
+                        model: self.app.model.name.clone(),
+                        split_idx: split,
+                        object: key.clone(),
+                        labels_object: String::new(),
+                        input_dims: dims.clone(),
+                        b_max: self.cfg.object_samples.min(samples),
+                        mem_data_per_sample: mem
+                            .fe_data_bytes_per_sample(split),
+                        mem_model_bytes: mem.fe_model_bytes(split),
+                        burst_width,
+                        client_id: self.client_id,
+                        mode: RequestMode::FeatureExtract,
+                    };
+                    let (header, body) =
+                        conn.post(req.to_json(), Vec::new())?;
+                    let out_dims =
+                        header.get("out_dims")?.as_usize_vec()?;
+                    Tensor::from_raw(
+                        crate::runtime::DType::F32,
+                        out_dims,
+                        body,
+                    )
+                });
+            match res {
+                Err(e) if e.is_rejected() && attempts < 8 => {
+                    attempts += 1;
+                    self.registry
+                        .counter(names::PIPELINE_ADMIT_RETRIES)
+                        .inc();
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2)
+                        .min(std::time::Duration::from_millis(100));
+                }
+                other => return other,
             }
-            let mem = self.app.memory();
-            let req = PostRequest {
-                id: self.req_id(),
-                model: self.app.model.name.clone(),
-                split_idx: split,
-                object: key,
-                labels_object: String::new(),
-                input_dims: dims,
-                b_max: self.cfg.object_samples.min(samples),
-                mem_data_per_sample: mem.fe_data_bytes_per_sample(split),
-                mem_model_bytes: mem.fe_model_bytes(split),
-                burst_width,
-                client_id: self.client_id,
-                mode: RequestMode::FeatureExtract,
-            };
-            let (header, body) = conn.post(req.to_json(), Vec::new())?;
-            let out_dims = header.get("out_dims")?.as_usize_vec()?;
-            Tensor::from_raw(crate::runtime::DType::F32, out_dims, body)
-        })
+        }
     }
 
     /// Compute phase for one iteration: leftover frozen units at the
@@ -452,6 +480,30 @@ impl HapiClient {
     /// iterations are prefetched against the COS while earlier ones
     /// compute, delivered strictly in order.
     pub fn train_epoch(&self, ds: &DatasetRef, labels: &[i32]) -> Result<EpochStats> {
+        self.train_epoch_inner(ds, labels, None)
+    }
+
+    /// [`HapiClient::train_epoch`] with a scripted tenant crash: the
+    /// epoch aborts with an error after `abort_after` delivered
+    /// iterations (`None` = run to completion).  Exists for the churn
+    /// suite — a tenant dying mid-epoch abandons whatever it still has
+    /// queued in the storage-side planner, and the planner must reap
+    /// those waiters rather than leak lanes, leases, and metrics.
+    pub fn train_epoch_limited(
+        &self,
+        ds: &DatasetRef,
+        labels: &[i32],
+        abort_after: Option<usize>,
+    ) -> Result<EpochStats> {
+        self.train_epoch_inner(ds, labels, abort_after)
+    }
+
+    fn train_epoch_inner(
+        &self,
+        ds: &DatasetRef,
+        labels: &[i32],
+        abort_after: Option<usize>,
+    ) -> Result<EpochStats> {
         if labels.len() != ds.num_samples {
             return Err(Error::other("labels/dataset size mismatch"));
         }
@@ -552,6 +604,13 @@ impl HapiClient {
                 Ok((tensor, split))
             },
             |delivery| {
+                // Scripted tenant crash: die before consuming this
+                // delivery, leaving in-flight planner work abandoned.
+                if abort_after == Some(stats.iterations) {
+                    return Err(Error::other(
+                        "tenant crashed (scripted)",
+                    ));
+                }
                 let (feats, split) = delivery.payload;
                 stats.comm += delivery.stall;
                 let shards = &jobs[delivery.seq].shards;

@@ -54,6 +54,14 @@
 //!   off) — named [`crate::policy`] implementations plugged into the
 //!   three decision sites, plus the JSONL decision-trace path that
 //!   `hapi policy-eval` replays offline.
+//! - planner admission and fairness (`admission_queue_cap`/
+//!   `--admission-queue-cap`, default 0 = unbounded;
+//!   `fairness_weights`/`--fairness-weights`, default empty =
+//!   oldest-ready-first) — bounded admission with early reject
+//!   ([`crate::Error::Busy`], client retry-with-backoff) and weighted
+//!   lane ordering in the gather-lane planner
+//!   ([`crate::server::planner`]).  Both default off: the default
+//!   config reproduces the unbounded planner byte-identically.
 
 use std::path::{Path, PathBuf};
 
@@ -171,6 +179,20 @@ pub struct HapiConfig {
     pub split_window_secs: f64,
     /// Enable server-side batch adaptation (§5.5).
     pub batch_adaptation: bool,
+    /// Bound on the planner's admission queue (queued tenants across
+    /// all gather lanes).  0 (the default) = unbounded, byte-identical
+    /// to the pre-bounded planner; when set, a request arriving at a
+    /// full queue is rejected with [`crate::Error::Busy`] *before*
+    /// queueing and the client retries with backoff.  Under
+    /// `path_queue_model` the effective cap additionally shrinks with
+    /// observed network-path utilisation.
+    pub admission_queue_cap: usize,
+    /// Per-tenant planner fairness weights, `"client:weight,…"`
+    /// (e.g. `"7:4,9:1"`).  Empty (the default) = oldest-ready-first,
+    /// byte-identical to the unweighted planner.  Weights bias lane
+    /// order by `age × weight`, so a light tenant still ages its way
+    /// to the front — no starvation.  Unlisted clients weigh 1.
+    pub fairness_weights: String,
 
     // --- client pipeline (§4–5 cross-tier overlap) ---------------------
     /// Prefetch window: iterations allowed in flight (submitted, not yet
@@ -302,6 +324,8 @@ impl Default for HapiConfig {
             train_batch: 200,
             split_window_secs: 1.0,
             batch_adaptation: true,
+            admission_queue_cap: 0,
+            fairness_weights: String::new(),
             pipeline_depth: 1,
             fetch_fanout: 0,
             adaptive_split: false,
@@ -465,6 +489,12 @@ impl HapiConfig {
                 "batch_adaptation" => {
                     self.batch_adaptation = v.as_bool()?
                 }
+                "admission_queue_cap" => {
+                    self.admission_queue_cap = v.as_usize()?
+                }
+                "fairness_weights" => {
+                    self.fairness_weights = v.as_str()?.to_string()
+                }
                 "pipeline_depth" => self.pipeline_depth = v.as_usize()?,
                 "fetch_fanout" => self.fetch_fanout = v.as_usize()?,
                 "adaptive_split" => self.adaptive_split = v.as_bool()?,
@@ -584,6 +614,11 @@ impl HapiConfig {
         if args.flag("no-batch-adaptation") {
             self.batch_adaptation = false;
         }
+        self.admission_queue_cap = args
+            .parse_or("admission-queue-cap", self.admission_queue_cap)?;
+        if let Some(v) = args.get("fairness-weights") {
+            self.fairness_weights = v.to_string();
+        }
         Ok(())
     }
 
@@ -646,6 +681,9 @@ impl HapiConfig {
         crate::policy::split_policy(&self.split_policy)?;
         crate::policy::batch_policy(&self.batch_policy)?;
         crate::policy::transport_policy(&self.transport_policy)?;
+        // Malformed fairness weights must fail up front, not silently
+        // degrade a tenant to the default weight.
+        self.parse_fairness_weights()?;
         // Ids ride the JSON header (and config files) as f64: above
         // 2^53 they would silently round, which could merge two pinned
         // tenants into one gather lane.
@@ -660,6 +698,44 @@ impl HapiConfig {
             ));
         }
         Ok(())
+    }
+
+    /// Parse [`HapiConfig::fairness_weights`] into `(client, weight)`
+    /// pairs.  Empty string → empty vec (the oldest-ready default).
+    /// Rejects malformed entries and zero weights — a zero weight
+    /// would freeze a tenant's lane rank and starve it.
+    pub fn parse_fairness_weights(&self) -> Result<Vec<(u64, u64)>> {
+        let mut out = Vec::new();
+        for entry in self
+            .fairness_weights
+            .split(',')
+            .map(str::trim)
+            .filter(|e| !e.is_empty())
+        {
+            let Some((client, weight)) = entry.split_once(':') else {
+                return Err(Error::Config(format!(
+                    "fairness_weights entry `{entry}` is not \
+                     `client:weight`"
+                )));
+            };
+            let (Ok(client), Ok(weight)) = (
+                client.trim().parse::<u64>(),
+                weight.trim().parse::<u64>(),
+            ) else {
+                return Err(Error::Config(format!(
+                    "fairness_weights entry `{entry}` has a \
+                     non-numeric client or weight"
+                )));
+            };
+            if weight == 0 {
+                return Err(Error::Config(format!(
+                    "fairness weight for client {client} is 0; a \
+                     zero-weight lane would starve"
+                )));
+            }
+            out.push((client, weight));
+        }
+        Ok(out)
     }
 
     pub fn profiles_dir(&self) -> PathBuf {
@@ -821,6 +897,14 @@ impl HapiConfig {
             ("train_batch", Json::num(self.train_batch as f64)),
             ("split_window_secs", Json::num(self.split_window_secs)),
             ("batch_adaptation", Json::Bool(self.batch_adaptation)),
+            (
+                "admission_queue_cap",
+                Json::num(self.admission_queue_cap as f64),
+            ),
+            (
+                "fairness_weights",
+                Json::str(self.fairness_weights.clone()),
+            ),
             ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
             ("fetch_fanout", Json::num(self.fetch_fanout as f64)),
             ("adaptive_split", Json::Bool(self.adaptive_split)),
@@ -1118,6 +1202,45 @@ mod tests {
         let mut bad = HapiConfig::default();
         bad.transport_policy = "nope".into();
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn admission_knobs_parse_roundtrip_and_validate() {
+        let cfg = HapiConfig::from_args(&args(&[
+            "--admission-queue-cap",
+            "64",
+            "--fairness-weights",
+            "7:4, 9:1",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.admission_queue_cap, 64);
+        assert_eq!(
+            cfg.parse_fairness_weights().unwrap(),
+            vec![(7, 4), (9, 1)]
+        );
+        cfg.validate().unwrap();
+
+        // …and the knobs survive a JSON roundtrip.
+        let mut cfg2 = HapiConfig::default();
+        cfg2.merge_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.admission_queue_cap, 64);
+        assert_eq!(cfg2.fairness_weights, "7:4, 9:1");
+
+        // Defaults: unbounded admission, oldest-ready fairness —
+        // byte-identical to the pre-bounded planner.
+        let d = HapiConfig::default();
+        assert_eq!(d.admission_queue_cap, 0);
+        assert!(d.parse_fairness_weights().unwrap().is_empty());
+
+        // Malformed or zero weights fail validation up front.
+        for weights in ["7", "7:0", "x:2", "7:y"] {
+            let mut bad = HapiConfig::default();
+            bad.fairness_weights = weights.into();
+            assert!(
+                bad.validate().is_err(),
+                "weights `{weights}` should be rejected"
+            );
+        }
     }
 
     #[test]

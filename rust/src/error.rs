@@ -30,6 +30,13 @@ pub enum Error {
         free: u64,
         capacity: u64,
     },
+    /// Planner admission queue full (bounded admission): the request
+    /// was rejected *before* queueing — a backpressure signal the
+    /// client maps to retry-with-backoff, not a hard fault.
+    Busy {
+        queued: usize,
+        cap: usize,
+    },
     Protocol(String),
     Cos(String),
     /// Batch-adaptation optimisation infeasible even at minimum batch.
@@ -52,6 +59,11 @@ impl fmt::Display for Error {
             } => write!(
                 f,
                 "device OOM: need {needed} bytes, free {free} of {capacity}"
+            ),
+            Error::Busy { queued, cap } => write!(
+                f,
+                "planner busy: admission queue full \
+                 ({queued} queued, cap {cap}); retry later"
             ),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
             Error::Cos(m) => write!(f, "object store: {m}"),
@@ -100,6 +112,21 @@ impl Error {
             _ => false,
         }
     }
+
+    /// True when the error is the planner's bounded-admission reject —
+    /// including rejects raised on the COS and surfaced to the client
+    /// as a wire-level error string (the `planner busy` marker is
+    /// stable; see [`Error::Busy`]'s Display form).  The client's
+    /// fetch path maps this to retry-with-backoff.
+    pub fn is_rejected(&self) -> bool {
+        match self {
+            Error::Busy { .. } => true,
+            Error::Cos(m) | Error::Other(m) => {
+                m.contains("planner busy")
+            }
+            _ => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +144,20 @@ mod tests {
         assert!(e.is_oom());
         assert!(Error::Cos(e.to_string()).is_oom());
         assert!(!Error::Config("x".into()).is_oom());
+    }
+
+    #[test]
+    fn busy_display_is_stable() {
+        let e = Error::Busy { queued: 5, cap: 4 };
+        assert_eq!(
+            e.to_string(),
+            "planner busy: admission queue full \
+             (5 queued, cap 4); retry later"
+        );
+        assert!(e.is_rejected());
+        assert!(!e.is_oom());
+        assert!(Error::Cos(e.to_string()).is_rejected());
+        assert!(!Error::Config("x".into()).is_rejected());
     }
 
     #[test]

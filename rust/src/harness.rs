@@ -67,6 +67,7 @@ impl Testbed {
                 StorageCluster::from_nodes(nodes, cfg.replicas)
             }
         });
+        let net = cfg.topology();
         let server = HapiServer::new(
             engine.clone(),
             models.clone(),
@@ -74,6 +75,17 @@ impl Testbed {
             cfg.clone(),
             registry.clone(),
         );
+        // With the queueing-delay model on, the planner's bounded
+        // admission sees the network's load: the cap shrinks as path
+        // utilisation rises (tf.data-service-style backpressure from
+        // the server-visible queue signal).  Without the model the
+        // signal reads 0 and the cap stays at its configured value.
+        if cfg.path_queue_model {
+            let signal_net = net.clone();
+            server.planner().set_queue_signal(Arc::new(move || {
+                signal_net.peak_utilisation()
+            }));
+        }
         // Do not cap request concurrency below what the devices'
         // admission control allows: the paper serves each POST in its
         // own process.  The sharded client keeps up to
@@ -84,7 +96,6 @@ impl Testbed {
             (cfg.train_batch / cfg.object_samples).max(1);
         let compute_workers =
             16.max(cfg.resolved_fanout(shards_per_iter));
-        let net = cfg.topology();
         // One proxy front end per path — the multi-proxy COS face the
         // paper's S3-style testbed reads through.  All instances share
         // the cluster and the embedded server, so planner/devices stay

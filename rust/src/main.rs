@@ -20,7 +20,7 @@
 //!   candidate policy set offline and score the agreement
 //!   (decision-match rate + predicted cost deltas per site);
 //! - `bench-compare` — informational diff of two bench JSON reports
-//!   (`BENCH_8.json` vs a prior `BENCH_*.json`), flagging headline
+//!   (`BENCH_9.json` vs a prior `BENCH_*.json`), flagging headline
 //!   numbers that moved more than a threshold.
 
 use hapi::cli::Args;
@@ -413,8 +413,8 @@ fn policy_eval_cmd(args: &Args) -> hapi::Result<()> {
 fn bench_compare_cmd(args: &Args) -> hapi::Result<()> {
     use hapi::benchkit::compare_reports;
     use hapi::util::json::Json;
-    let old_path = args.str_or("old", "BENCH_7.json");
-    let new_path = args.str_or("new", "BENCH_8.json");
+    let old_path = args.str_or("old", "BENCH_8.json");
+    let new_path = args.str_or("new", "BENCH_9.json");
     let threshold: f64 = args.parse_or("threshold-pct", 20.0)?;
     for path in [&old_path, &new_path] {
         if !std::path::Path::new(path).exists() {

@@ -38,6 +38,9 @@ pub const BA_BURST_CLAMPED: &str = "ba.burst_clamped";
 pub const BA_GATHER_WINDOW_NS: &str = "ba.gather_window_ns";
 pub const BA_LANES_ACTIVE: &str = "ba.lanes_active";
 pub const BA_POLICY_DECISIONS: &str = "ba.policy_decisions";
+pub const BA_REJECTS: &str = "ba.rejects";
+pub const BA_REAPED: &str = "ba.reaped";
+pub const BA_TIME_TO_GRANT_NS: &str = "ba.time_to_grant_ns";
 
 // ------------------------------------------------------------ pipeline.*
 // Client-side prefetch pipeline, sharded fetch engine and transport
@@ -62,6 +65,7 @@ pub const PIPELINE_REPINS: &str = "pipeline.repins";
 pub const PIPELINE_REPINS_BACK: &str = "pipeline.repins_back";
 pub const PIPELINE_PROBES: &str = "pipeline.probes";
 pub const PIPELINE_POLICY_DECISIONS: &str = "pipeline.policy_decisions";
+pub const PIPELINE_ADMIT_RETRIES: &str = "pipeline.admit_retries";
 
 // ----------------------------------------------------------------- cos.*
 // Storage tier: object store + proxy front ends (cos/).
@@ -83,6 +87,11 @@ pub fn lane_gather_window_ns(client: impl std::fmt::Display) -> String {
 /// `ba.lane.<client>.` — eviction prefix covering one lane's family.
 pub fn lane_prefix(client: impl std::fmt::Display) -> String {
     format!("ba.lane.{client}.")
+}
+
+/// `ba.shard<i>.lanes` — live lanes held by planner shard `i`.
+pub fn shard_lanes(i: impl std::fmt::Display) -> String {
+    format!("ba.shard{i}.lanes")
 }
 
 /// `pipeline.conn<c>.bytes` — payload bytes served by fetch slot `c`.

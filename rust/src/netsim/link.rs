@@ -196,6 +196,23 @@ impl Link {
         ((s.acc_bytes / QUEUE_TAU) / rate.max(1) as f64).min(RHO_MAX)
     }
 
+    /// Read-only variant of [`Link::utilisation`]: the current ρ with
+    /// only decay applied — no bytes folded in, no meter state written.
+    /// The planner's bounded-admission cap samples this (via
+    /// [`crate::netsim::Topology::peak_utilisation`]) so an observer
+    /// polling the signal never inflates the load it is measuring.
+    pub fn utilisation_estimate(&self) -> f64 {
+        let (Some(q), Some(rate)) = (&self.queue, self.rate()) else {
+            return 0.0;
+        };
+        let s = q.lock().unwrap();
+        let dt = Instant::now()
+            .saturating_duration_since(s.last)
+            .as_secs_f64();
+        let acc = s.acc_bytes * (-dt / QUEUE_TAU).exp();
+        ((acc / QUEUE_TAU) / rate.max(1) as f64).min(RHO_MAX)
+    }
+
     fn delay(&self, n: u64) {
         let base = self.latency();
         if base.is_zero() {
@@ -303,6 +320,35 @@ mod tests {
         let un = Link::unshaped();
         un.set_rate(99);
         assert_eq!(un.rate(), None);
+    }
+
+    #[test]
+    fn utilisation_estimate_reads_without_inflating() {
+        // Queue-modeled path with a shaped rate and zero latency (the
+        // delay itself is inert, only the meter matters here).
+        let nic = Arc::new(LinkStats::default());
+        let link = Link::path(
+            Some(100 * 1024 * 1024),
+            Duration::ZERO,
+            None,
+            nic,
+            true,
+        );
+        assert_eq!(link.utilisation_estimate(), 0.0);
+        link.recv(8 * 1024 * 1024);
+        let rho = link.utilisation_estimate();
+        assert!(rho > 0.0, "load should register: ρ = {rho}");
+        assert!(rho <= RHO_MAX);
+        // Polling is read-only: back-to-back estimates never grow.
+        assert!(link.utilisation_estimate() <= rho);
+
+        // No queue model (or no shaped rate) → no signal.
+        assert_eq!(Link::unshaped().utilisation_estimate(), 0.0);
+        assert_eq!(
+            Link::shaped(1024).utilisation_estimate(),
+            0.0,
+            "plain shaped link carries no queue meter"
+        );
     }
 
     #[test]

@@ -153,6 +153,18 @@ impl Topology {
         })
     }
 
+    /// The most-loaded path's utilisation estimate ρ ∈ [0, RHO_MAX]
+    /// (read-only; see [`Link::utilisation_estimate`]).  0 everywhere
+    /// the queue model is off — the planner's bounded-admission cap
+    /// polls this as its server-visible queueing signal, and a zero
+    /// signal leaves the cap at its configured value.
+    pub fn peak_utilisation(&self) -> f64 {
+        self.paths
+            .iter()
+            .map(Link::utilisation_estimate)
+            .fold(0.0, f64::max)
+    }
+
     /// The shared client-NIC cap, if one is configured.
     pub fn aggregate_rate(&self) -> Option<u64> {
         self.aggregate.as_ref().map(|b| b.rate())
@@ -201,6 +213,34 @@ impl Topology {
 mod tests {
     use super::*;
     use std::time::Instant;
+
+    #[test]
+    fn peak_utilisation_tracks_the_loaded_path() {
+        let spec = TopologySpec {
+            paths: vec![
+                PathSpec {
+                    rate: Some(100 * 1024 * 1024),
+                    latency: Duration::ZERO,
+                    queue_model: true,
+                },
+                PathSpec {
+                    rate: Some(100 * 1024 * 1024),
+                    latency: Duration::ZERO,
+                    queue_model: true,
+                },
+            ],
+            aggregate_rate: None,
+        };
+        let net = Topology::new(&spec);
+        assert_eq!(net.peak_utilisation(), 0.0);
+        net.path(1).recv(8 * 1024 * 1024);
+        assert!(net.peak_utilisation() > 0.0);
+
+        // The classic single link carries no queue meter → no signal.
+        let single = Topology::single(Some(1024 * 1024));
+        single.path(0).recv(4096);
+        assert_eq!(single.peak_utilisation(), 0.0);
+    }
 
     #[test]
     fn single_path_behaves_like_the_old_link() {

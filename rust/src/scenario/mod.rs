@@ -105,6 +105,12 @@ pub struct TenantPlan {
     /// time only, never values — heterogeneous tenants stay bitwise
     /// comparable to the reference.
     pub gflops: f64,
+    /// Scripted tenant crash: abort the epoch after this many
+    /// delivered iterations (strictly mid-epoch), abandoning whatever
+    /// the tenant still has queued in the storage-side planner.
+    /// Applied only in the *chaos* run — the reference run always
+    /// completes, like arrivals are zeroed there.  `None` = survives.
+    pub crash_iters: Option<usize>,
 }
 
 /// A deterministic, seed-replayable scenario.
@@ -212,19 +218,34 @@ impl ScenarioScript {
                     _ if t % 2 == 0 => Duration::ZERO,
                     _ => wave,
                 };
+                let model = *rng.choose(&SIM_MODELS);
+                let samples = 40 * rng.range(2, 4) as usize;
+                let pipeline_depth = rng.range(1, 3) as usize;
+                let fetch_fanout = if has_crash {
+                    paths
+                } else {
+                    rng.range(1, 3) as usize
+                };
+                let gflops = *rng.choose(&[0.0, 4.0, 16.0]);
+                // Tenant churn: ~1 in 4 tenants dies strictly
+                // mid-epoch (after ≥1 iteration, before the last).
+                // Drawn *last* so pre-churn seeds keep the rest of
+                // their plan shape.
+                let crash_iters = if rng.below(4) == 0 {
+                    Some(1 + rng.usize_below(samples / 40 - 1))
+                } else {
+                    None
+                };
                 TenantPlan {
                     tenant: t,
                     client_id: (t + 1) as u64,
-                    model: *rng.choose(&SIM_MODELS),
+                    model,
                     arrival,
-                    samples: 40 * rng.range(2, 4) as usize,
-                    pipeline_depth: rng.range(1, 3) as usize,
-                    fetch_fanout: if has_crash {
-                        paths
-                    } else {
-                        rng.range(1, 3) as usize
-                    },
-                    gflops: *rng.choose(&[0.0, 4.0, 16.0]),
+                    samples,
+                    pipeline_depth,
+                    fetch_fanout,
+                    gflops,
+                    crash_iters,
                 }
             })
             .collect();
@@ -263,6 +284,7 @@ impl ScenarioScript {
                 pipeline_depth: 2,
                 fetch_fanout: 2,
                 gflops: 0.0,
+                crash_iters: None,
             }],
             events: vec![
                 ScenarioEvent {
@@ -299,6 +321,7 @@ impl ScenarioScript {
                     pipeline_depth: 2,
                     fetch_fanout: 2,
                     gflops: 0.0,
+                    crash_iters: None,
                 },
                 TenantPlan {
                     tenant: 1,
@@ -309,6 +332,7 @@ impl ScenarioScript {
                     pipeline_depth: 2,
                     fetch_fanout: 2,
                     gflops: 4.0,
+                    crash_iters: None,
                 },
             ],
             events: vec![
@@ -343,11 +367,19 @@ impl ScenarioScript {
     }
 
     /// Whether any scripted event fail-stops a proxy (tenant failures
-    /// are tolerated by [`verify`] only in that case).
+    /// are tolerated by [`verify`] only in that case, or when the
+    /// tenant's own crash is scripted — see
+    /// [`ScenarioScript::has_tenant_crash`]).
     pub fn has_crash(&self) -> bool {
         self.events
             .iter()
             .any(|e| matches!(e.kind, EventKind::CrashProxy { .. }))
+    }
+
+    /// Whether any tenant is scripted to die mid-epoch
+    /// ([`TenantPlan::crash_iters`]).
+    pub fn has_tenant_crash(&self) -> bool {
+        self.tenants.iter().any(|t| t.crash_iters.is_some())
     }
 }
 
@@ -514,7 +546,10 @@ fn run_tenant(
     // Keep the client's default private registry (no `set_registry`):
     // conservation checks need this tenant's counters unmixed.
     outcome.registry = client.registry().clone();
-    match client.train_epoch(ds, labels) {
+    // Scripted tenant crashes are chaos, so the reference run (like
+    // zeroed arrivals) always completes.
+    let abort = if chaos { plan.crash_iters } else { None };
+    match client.train_epoch_limited(ds, labels, abort) {
         Ok(stats) => {
             outcome.loss_bits =
                 stats.loss.iter().map(|l| l.to_bits()).collect();
@@ -561,11 +596,25 @@ pub fn verify(
         return v;
     }
     let crash_scripted = script.has_crash();
-    for (r, c) in reference.tenants.iter().zip(&chaos.tenants) {
+    for ((plan, r), c) in script
+        .tenants
+        .iter()
+        .zip(&reference.tenants)
+        .zip(&chaos.tenants)
+    {
         if let Some(e) = &r.error {
             v.push(format!(
                 "tenant {}: failed even without chaos: {e}",
                 r.tenant
+            ));
+            continue;
+        }
+        // A scripted tenant crash must actually fire in the chaos run.
+        if plan.crash_iters.is_some() && c.error.is_none() {
+            v.push(format!(
+                "tenant {}: scripted crash after {:?} iterations \
+                 never fired",
+                c.tenant, plan.crash_iters
             ));
             continue;
         }
@@ -589,14 +638,16 @@ pub fn verify(
                     ));
                 }
             }
-            Some(e) if !crash_scripted => {
+            Some(e) if !crash_scripted && plan.crash_iters.is_none() => {
                 v.push(format!(
                     "tenant {}: failed without a scripted crash: {e}",
                     c.tenant
                 ));
             }
-            // A scripted fail-stop may legitimately take a tenant
-            // down; losing it is not a lost grant.
+            // A scripted fail-stop (proxy- or tenant-side) may
+            // legitimately take a tenant down; losing it is not a
+            // lost grant — the no-lost-work invariant is relaxed for
+            // exactly these tenants.
             Some(_) => {}
         }
     }
@@ -678,11 +729,17 @@ fn planner_books(outcome: &ScenarioOutcome) -> Vec<String> {
     }
     let clean = outcome.tenants.iter().all(|t| t.error.is_none());
     let ooms = reg.counter(names::HAPI_OOM).get();
-    if clean && ooms == 0 && grants != requests {
+    let rejects = reg.counter(names::BA_REJECTS).get();
+    let reaped = reg.counter(names::BA_REAPED).get();
+    if clean && ooms == 0 && grants + rejects + reaped != requests {
         // Every admitted request on a clean, OOM-free run must end in
-        // exactly one grant — a gap is a lost (or double) grant.
+        // exactly one of: a grant, a bounded-admission reject (the
+        // client retried, each retry is a fresh request), or a janitor
+        // reap of an abandoned waiter.  A gap is a lost (or double)
+        // grant.
         v.push(format!(
-            "ba.grants {grants} != ba.requests {requests} on a clean run"
+            "ba.grants {grants} + ba.rejects {rejects} + ba.reaped \
+             {reaped} != ba.requests {requests} on a clean run"
         ));
     }
     if clean && requests > 0 && grants == 0 {
@@ -799,6 +856,16 @@ mod tests {
                     assert_eq!(
                         t.fetch_fanout, s.paths,
                         "seed {seed}: crash script needs full fanout"
+                    );
+                }
+                // A scripted tenant crash is strictly mid-epoch:
+                // after ≥1 delivered iteration, before the last.
+                if let Some(k) = t.crash_iters {
+                    let iters = t.samples / 40;
+                    assert!(
+                        (1..iters).contains(&k),
+                        "seed {seed}: crash_iters {k} not mid-epoch \
+                         for {iters} iterations"
                     );
                 }
             }

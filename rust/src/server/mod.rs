@@ -5,10 +5,13 @@
 //! 1. reads the referenced object (a *storage request* to the storage
 //!    nodes) and, for ALL_IN_COS jobs, the matching label shard;
 //! 2. registers with the [`planner`] which assigns a device
-//!    (round-robin, §5.5: "distributes requests evenly on the existing
-//!    GPUs") and — when batch adaptation is on — solves Eq. 4 over the
-//!    queued requests after a short gather window, granting each request
-//!    a COS batch size and a memory lease;
+//!    (lane-affine: hashed on `client_id` so one tenant's shards stay
+//!    on one device and its `model_bytes` stages once, with round-robin
+//!    for legacy anonymous requests — §5.5's "distributes requests
+//!    evenly on the existing GPUs" now holds across *tenants*) and —
+//!    when batch adaptation is on — solves Eq. 4 over the queued
+//!    requests after a short gather window, granting each request a COS
+//!    batch size and a memory lease;
 //! 3. executes feature extraction up to the split index — real AOT HLO
 //!    on the PJRT engine or the artifact-free SimBackend, per the
 //!    configured [`crate::config::BackendKind`] — charging the simulated
@@ -39,8 +42,26 @@ use crate::model::ModelRegistry;
 use crate::runtime::{DeviceKind, DeviceSim, Engine, ExecBackend, Tensor};
 use crate::util::json::Json;
 
-pub use planner::Planner;
+pub use planner::{FairnessPolicy, Planner};
 pub use request::{PostRequest, RequestMode};
+
+/// Device for a request.  Lane-affine: keyed on `client_id` so one
+/// tenant's shards land on a single device and its `model_bytes` is
+/// staged once per grant cycle instead of scattering (and re-staging)
+/// across every device.  Legacy anonymous requests (`client_id` 0, the
+/// shared gather lane) keep the classic per-request round-robin — they
+/// carry no tenant identity to be affine to.
+fn assign_device(
+    client_id: u64,
+    num_devices: usize,
+    round_robin: &AtomicUsize,
+) -> usize {
+    if client_id == 0 {
+        round_robin.fetch_add(1, Ordering::Relaxed) % num_devices.max(1)
+    } else {
+        planner::device_for(client_id, num_devices)
+    }
+}
 
 pub struct HapiServer {
     engine: Arc<Engine>,
@@ -74,13 +95,18 @@ impl HapiServer {
             .collect();
         let batch_policy = crate::policy::batch_policy(&cfg.batch_policy)
             .unwrap_or_else(|_| Box::new(crate::policy::AnalyticBatch));
-        let planner = Planner::new_with(
+        let fairness = FairnessPolicy::weighted(
+            cfg.parse_fairness_weights().unwrap_or_default(),
+        );
+        let planner = Planner::new_tuned(
             devices.clone(),
             cfg.min_cos_batch,
             cfg.batch_adaptation,
             registry.clone(),
             Arc::from(batch_policy),
             crate::policy::sink_for(&cfg.decision_trace),
+            cfg.admission_queue_cap,
+            fairness,
         );
         Arc::new(HapiServer {
             engine,
@@ -148,9 +174,12 @@ impl HapiServer {
         // Storage request: fetch the training-data object.
         let input = self.read_object_tensor(&req.object, &req.input_dims)?;
 
-        // Device assignment (round-robin) + batch adaptation (Eq. 4).
-        let device_idx =
-            self.next_device.fetch_add(1, Ordering::Relaxed) % self.devices.len();
+        // Device assignment (lane-affine) + batch adaptation (Eq. 4).
+        let device_idx = assign_device(
+            req.client_id,
+            self.devices.len(),
+            &self.next_device,
+        );
         let grant = self.planner.admit(
             device_idx,
             req.mem_data_per_sample,
@@ -272,5 +301,42 @@ impl PostHandler for HapiServer {
             self.registry.counter(names::HAPI_OOM).inc();
         }
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Regression: device assignment used to round-robin *per request*,
+    // scattering one tenant's shards across devices and re-staging
+    // model_bytes on every grant.  It must be lane-affine now.
+    #[test]
+    fn device_assignment_is_lane_affine() {
+        let rr = AtomicUsize::new(0);
+        for client in [1u64, 7, 42, 1 << 40] {
+            let first = assign_device(client, 4, &rr);
+            for _ in 0..8 {
+                assert_eq!(
+                    assign_device(client, 4, &rr),
+                    first,
+                    "client {client} hopped devices between requests"
+                );
+            }
+        }
+        // Affine requests must not advance the round-robin cursor.
+        assert_eq!(rr.load(Ordering::Relaxed), 0);
+
+        // Legacy anonymous requests (client 0) keep round-robin.
+        let seq: Vec<usize> =
+            (0..6).map(|_| assign_device(0, 3, &rr)).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+
+        // Tenants spread: 64 clients on 4 devices touch every device.
+        let mut hit = [false; 4];
+        for client in 1..=64u64 {
+            hit[assign_device(client, 4, &rr)] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "a device got no tenants: {hit:?}");
     }
 }

@@ -39,22 +39,56 @@
 //!   [`Grant`] drop) or a new arrival, instead of polling at a fixed
 //!   interval.
 //!
+//! Scale refinements (the thousand-tenant planner):
+//!
+//! - **Sharded lane table** — lanes live in [`LANE_SHARDS`] hash
+//!   shards, each with its own arrival inbox, per-shard gather
+//!   deadline and ready counts; a planning pass refreshes only shards
+//!   that are dirty (saw an arrival, grant, or reap) or whose gather
+//!   deadline expired, so per-pass bookkeeping is proportional to
+//!   *touched* lanes, not total tenants.
+//! - **Per-ticket grant gates** — every `admit` waits on its own
+//!   [`Gate`]; the planner deposits exactly one verdict and wakes
+//!   exactly one waiter.  The pre-gate design `notify_all`'d every
+//!   waiter on every grant, each re-scanning a shared queue — an
+//!   O(n²) thundering herd at 1000 tenants.
+//! - **Bounded admission** — an optional `admission_queue_cap`
+//!   (0 = unbounded, the historical behaviour) rejects arrivals with
+//!   [`Error::Busy`] once the queue is full instead of letting them
+//!   wait unboundedly; the effective cap shrinks under pressure from
+//!   an optional server-visible queueing signal
+//!   ([`Planner::set_queue_signal`], fed by `path_queue_model`).
+//!   Clients map the reject to retry-with-backoff.
+//! - **Explicit fairness** — ready lanes are ordered by a
+//!   [`FairnessPolicy`]: `OldestReady` (the byte-identical default)
+//!   or `Weighted` (per-tenant weights, age × weight aging so light
+//!   tenants still cannot starve).
+//! - **Churn safety** — a waiter that vanishes mid-`admit` (its gate
+//!   has no other holder) is reaped by a periodic janitor sweep, and
+//!   an `Ok` grant deposited to a vanished waiter releases its device
+//!   lease when the gate drops, so tenant churn leaks neither queue
+//!   entries nor memory.
+//!
 //! Observability: every completed lane gather lands in the global
 //! `ba.gather_window_ns` histogram and the per-lane
 //! `ba.lane.<client_id>.gather_window_ns` histogram; `ba.requests`
-//! counts admissions attempted and `ba.grants` the `Ok` grants issued
-//! (their difference is exactly the failed admissions — the
-//! conservation predicate the scenario fuzzer checks); `ba.lanes_active`
-//! tracks how many lanes currently hold un-granted requests, and
-//! `ba.burst_clamped` counts gathers whose reported burst exceeded
-//! [`MAX_GATHER_BURST`].  Per-lane metric cardinality is bounded: once
-//! a client's lane has drained and stayed idle past
-//! [`LANE_METRICS_TTL`], its `ba.lane.<id>.*` instruments are evicted
-//! from the registry ([`Registry::evict_prefix`]) — with the default
-//! auto-allocated (process-unique) client ids a long-lived planner no
-//! longer accumulates one histogram per client ever seen.  A client
-//! that returns after eviction simply re-creates its instruments
-//! (counts restart from zero).
+//! counts admissions attempted, `ba.grants` the `Ok` grants issued,
+//! `ba.rejects` the bounded-admission rejects and `ba.reaped` the
+//! abandoned waiters reclaimed (on OOM-free runs
+//! `grants + rejects + reaped = requests` — the conservation
+//! predicate the scenario fuzzer checks); `ba.time_to_grant_ns`
+//! records admission-to-grant latency, `ba.lanes_active` tracks how
+//! many lanes currently hold un-granted requests (per shard:
+//! `ba.shard<i>.lanes`), and `ba.burst_clamped` counts gathers whose
+//! reported burst exceeded [`MAX_GATHER_BURST`].  Per-lane metric
+//! cardinality is bounded: once a client's lane has drained and
+//! stayed idle past [`LANE_METRICS_TTL`], its `ba.lane.<id>.*`
+//! instruments are evicted from the registry
+//! ([`Registry::evict_prefix`]) — with the default auto-allocated
+//! (process-unique) client ids a long-lived planner no longer
+//! accumulates one histogram per client ever seen.  A client that
+//! returns after eviction simply re-creates its instruments (counts
+//! restart from zero).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -94,11 +128,42 @@ const WAIT_TIMEOUT: Duration = Duration::from_millis(50);
 /// `ba.lane.<id>.*` instruments are evicted from the registry.  Long
 /// enough that a tenant pausing between epochs keeps its metrics;
 /// short enough that auto-allocated one-shot client ids cannot grow
-/// the registry without bound.  Idle lanes are scanned at least every
-/// [`WAIT_TIMEOUT`], so eviction lands within `TTL + 50 ms`.
+/// the registry without bound.  Idle lanes are scanned by the janitor
+/// sweep, which is [`WAIT_TIMEOUT`]-gated, so eviction lands within
+/// `TTL + ~100 ms`.
 const LANE_METRICS_TTL: Duration = Duration::from_secs(10);
+/// Number of hash shards the lane table is split across.  A planning
+/// pass refreshes only dirty / deadline-due shards, so with O(1000)
+/// lanes the per-pass bookkeeping touches ~1/16th of them on average.
+const LANE_SHARDS: usize = 16;
+
+/// Cheap 64-bit mix (Fibonacci multiply + fold) — spreads sequential
+/// client ids across shards and devices.
+fn hash64(x: u64) -> u64 {
+    let mut x = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 32;
+    x
+}
+
+fn shard_of(client: u64) -> usize {
+    hash64(client) as usize % LANE_SHARDS
+}
+
+/// Stable client→device affinity: one tenant's requests always land on
+/// the same device, so its `model_bytes` are staged once instead of on
+/// every grant.  Legacy requests (client id 0) are routed round-robin
+/// by the caller instead — they share one lane and would otherwise all
+/// pile onto one device.
+pub fn device_for(client_id: u64, num_devices: usize) -> usize {
+    (hash64(client_id) as usize) % num_devices.max(1)
+}
 
 type PlannerShared = (Mutex<State>, Condvar);
+
+/// Admission-pressure probe in `[0, 1]`: 1.0 means the storage tier's
+/// network paths are saturated and the effective admission cap shrinks
+/// to its floor of 1.
+pub type QueueSignal = Arc<dyn Fn() -> f64 + Send + Sync>;
 
 /// What a request receives once planned.
 #[derive(Debug)]
@@ -136,6 +201,28 @@ impl Drop for ReleaseNotify {
     }
 }
 
+/// One waiter's grant slot.  `admit` blocks on its own gate and the
+/// planner deposits exactly one verdict — a targeted wakeup instead of
+/// broadcasting every grant to every waiter.  Lock order is strictly
+/// state → gate.  The waiter holds one `Arc` clone; a queued entry
+/// whose gate has no other holder is an abandoned waiter, reaped by
+/// the janitor.  An `Ok` verdict that is never collected releases its
+/// device lease when the last gate handle drops (the `Grant` inside
+/// the slot drops with it).
+#[derive(Default)]
+struct Gate {
+    slot: Mutex<Option<Result<Grant>>>,
+    cv: Condvar,
+}
+
+/// Deposit a verdict and wake the gate's single waiter.
+fn deposit(gate: &Gate, res: Result<Grant>) {
+    let mut slot = gate.slot.lock().unwrap();
+    *slot = Some(res);
+    drop(slot);
+    gate.cv.notify_one();
+}
+
 struct Pending {
     /// Planner-internal ticket: unique across clients (request ids come
     /// from per-client counters and collide between tenants).
@@ -149,7 +236,9 @@ struct Pending {
     b_max: usize,
     /// Client-reported burst width (0 = unreported, treated as 1).
     burst: usize,
-    grant: Option<Result<Grant>>,
+    /// Where this request's verdict is delivered; the other holder is
+    /// the waiting `admit` call.
+    gate: Arc<Gate>,
 }
 
 /// Gather state for one client's lane.
@@ -180,22 +269,171 @@ struct Lane {
     /// `ba.burst_clamped` was already counted for the current gather
     /// (re-armed when a fresh burst re-opens the window).
     clamp_counted: bool,
+    /// Widest reported burst among this lane's pending requests
+    /// (cached by [`sync_shard`] so `ba.burst_width` never rescans the
+    /// queue inside the solve lock).
+    burst: usize,
+    /// This lane's un-granted requests, in arrival order — the
+    /// per-lane pending list that replaces the single global queue
+    /// (and with it the O(lanes × queue) rank filtering per pass).
+    pending: Vec<Pending>,
 }
 
-struct State {
-    queue: Vec<Pending>,
+impl Lane {
+    fn new(now: Instant) -> Lane {
+        Lane {
+            gather_started: now,
+            last_arrival: now,
+            last_ticket: 0,
+            ready: false,
+            ready_since: None,
+            planned_ready: false,
+            clamp_counted: false,
+            burst: 1,
+            pending: Vec::new(),
+        }
+    }
+}
+
+/// One hash shard of the lane table.  All bookkeeping a planning pass
+/// needs (earliest gather deadline, ready counts) is maintained per
+/// shard so untouched shards cost nothing per pass.
+#[derive(Default)]
+struct Shard {
+    /// Arrivals parked by `admit` under the state lock; folded into
+    /// lanes at the next [`sync_shard`] refresh.
+    inbox: Vec<Pending>,
     /// One gather lane per client with un-granted requests.
     lanes: BTreeMap<u64, Lane>,
     /// Clients whose lane has drained, keyed to when it drained: after
     /// [`LANE_METRICS_TTL`] of continued silence their `ba.lane.<id>.*`
     /// instruments are evicted from the registry.
-    lane_idle: BTreeMap<u64, Instant>,
+    idle: BTreeMap<u64, Instant>,
+    /// This shard saw an arrival, grant, or reap since its last
+    /// refresh.
+    dirty: bool,
+    /// Earliest gather deadline among this shard's not-ready lanes.
+    next_deadline: Option<Instant>,
+    /// Lanes currently ready (as of the last refresh).
+    ready: usize,
+    /// Ready lanes not yet offered to a planning pass.
+    unplanned_ready: usize,
+}
+
+struct State {
+    shards: Vec<Shard>,
+    /// Un-granted requests across all shards (inboxes + lane pending
+    /// lists) — the bounded-admission occupancy check, O(1) per
+    /// `admit`.
+    pending_total: usize,
+    /// When the janitor last swept (TTL eviction + abandoned-waiter
+    /// reaping); sweeps are [`WAIT_TIMEOUT`]-gated.
+    last_sweep: Option<Instant>,
     closed: bool,
     /// Bumped on every event that can change a planning pass's outcome:
     /// request arrival, lease release, shutdown.  The planner loop
     /// sleeps until it moves instead of re-solving a provably unchanged
     /// problem (the busy-spin fix).
     wakeups: u64,
+    /// Grant-scheduling order across ready lanes.
+    fairness: FairnessPolicy,
+}
+
+impl State {
+    fn new() -> State {
+        State {
+            shards: (0..LANE_SHARDS).map(|_| Shard::default()).collect(),
+            pending_total: 0,
+            last_sweep: None,
+            closed: false,
+            wakeups: 0,
+            fairness: FairnessPolicy::default(),
+        }
+    }
+
+    fn push(&mut self, p: Pending) {
+        let shard = &mut self.shards[shard_of(p.client)];
+        shard.inbox.push(p);
+        shard.dirty = true;
+        self.pending_total += 1;
+    }
+
+    #[cfg(test)]
+    fn lane(&self, client: u64) -> Option<&Lane> {
+        self.shards[shard_of(client)].lanes.get(&client)
+    }
+
+    #[cfg(test)]
+    fn lane_mut(&mut self, client: u64) -> Option<&mut Lane> {
+        let shard = &mut self.shards[shard_of(client)];
+        shard.dirty = true;
+        shard.lanes.get_mut(&client)
+    }
+
+    #[cfg(test)]
+    fn idle_since(&self, client: u64) -> Option<Instant> {
+        self.shards[shard_of(client)].idle.get(&client).copied()
+    }
+}
+
+/// How ready lanes are ordered when a planning pass offers them to the
+/// Eq. 4 solver.  The solver defers infeasible requests from the
+/// *tail* of its input, so earlier-ordered lanes are deferred last —
+/// the ordering IS the fairness policy.
+#[derive(Clone, Debug, Default)]
+pub enum FairnessPolicy {
+    /// Oldest-`ready_since` lane first (ties broken by client id for
+    /// determinism) — the historical behaviour and the starvation
+    /// bound: the longest-ready lane is always the last one deferred.
+    #[default]
+    OldestReady,
+    /// Weighted aging: lanes are ordered by `age × weight` descending
+    /// (age = time since first ready, weight defaults to 1 for
+    /// unlisted tenants).  A weight-10 tenant is served like one that
+    /// has waited 10× as long — but any waiting lane's weighted age
+    /// grows without bound, so light tenants still cannot starve.
+    Weighted(BTreeMap<u64, u64>),
+}
+
+impl FairnessPolicy {
+    /// Build a weighted policy from `(client_id, weight)` pairs; an
+    /// empty list falls back to [`FairnessPolicy::OldestReady`].
+    pub fn weighted(
+        weights: impl IntoIterator<Item = (u64, u64)>,
+    ) -> FairnessPolicy {
+        let w: BTreeMap<u64, u64> = weights.into_iter().collect();
+        if w.is_empty() {
+            FairnessPolicy::OldestReady
+        } else {
+            FairnessPolicy::Weighted(w)
+        }
+    }
+
+    /// Order `(ready_since, client)` pairs into grant-scheduling
+    /// order.
+    fn order(
+        &self,
+        mut ready: Vec<(Instant, u64)>,
+        now: Instant,
+    ) -> Vec<u64> {
+        match self {
+            FairnessPolicy::OldestReady => ready.sort(),
+            FairnessPolicy::Weighted(w) => {
+                ready.sort_by_key(|&(since, client)| {
+                    let weight =
+                        w.get(&client).copied().unwrap_or(1).max(1);
+                    let age = now
+                        .saturating_duration_since(since)
+                        .as_nanos() as u64;
+                    (
+                        std::cmp::Reverse(age.saturating_mul(weight)),
+                        client,
+                    )
+                });
+            }
+        }
+        ready.into_iter().map(|(_, c)| c).collect()
+    }
 }
 
 pub struct Planner {
@@ -206,6 +444,11 @@ pub struct Planner {
     next_ticket: AtomicU64,
     thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     shutdown: Arc<AtomicBool>,
+    /// Admission-queue bound; 0 = unbounded (the historical default).
+    queue_cap: usize,
+    /// Optional server-visible queueing pressure (see
+    /// [`Planner::set_queue_signal`]); shrinks the effective cap.
+    queue_signal: Mutex<Option<QueueSignal>>,
 }
 
 impl Planner {
@@ -239,16 +482,7 @@ impl Planner {
         batch_policy: Arc<dyn BatchPolicy>,
         trace: Option<Arc<TraceSink>>,
     ) -> Planner {
-        let state = Arc::new((
-            Mutex::new(State {
-                queue: Vec::new(),
-                lanes: BTreeMap::new(),
-                lane_idle: BTreeMap::new(),
-                closed: false,
-                wakeups: 0,
-            }),
-            Condvar::new(),
-        ));
+        let state = Arc::new((Mutex::new(State::new()), Condvar::new()));
         let shutdown = Arc::new(AtomicBool::new(false));
         let thread = if enabled {
             let st = state.clone();
@@ -282,7 +516,48 @@ impl Planner {
             next_ticket: AtomicU64::new(1),
             thread: Mutex::new(thread),
             shutdown,
+            queue_cap: 0,
+            queue_signal: Mutex::new(None),
         }
+    }
+
+    /// Planner with explicit admission control and fairness on top of
+    /// [`Planner::new_with`]: `admission_queue_cap` bounds the
+    /// un-granted queue (0 = unbounded) and `fairness` orders ready
+    /// lanes.  The defaults (`0`, [`FairnessPolicy::OldestReady`]) are
+    /// byte-identical to [`Planner::new_with`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_tuned(
+        devices: Vec<Arc<DeviceSim>>,
+        min_batch: usize,
+        enabled: bool,
+        registry: Registry,
+        batch_policy: Arc<dyn BatchPolicy>,
+        trace: Option<Arc<TraceSink>>,
+        admission_queue_cap: usize,
+        fairness: FairnessPolicy,
+    ) -> Planner {
+        let mut p = Planner::new_with(
+            devices,
+            min_batch,
+            enabled,
+            registry,
+            batch_policy,
+            trace,
+        );
+        p.queue_cap = admission_queue_cap;
+        p.state.0.lock().unwrap().fairness = fairness;
+        p
+    }
+
+    /// Install the server-visible queueing-pressure probe (with
+    /// `path_queue_model` on, the harness wires the topology's peak
+    /// path utilisation here).  Only consulted when an
+    /// `admission_queue_cap` is set: the effective cap is
+    /// `cap × (1 − pressure)`, floored at 1, so a saturated storage
+    /// tier sheds load earlier than a full queue would.
+    pub fn set_queue_signal(&self, signal: QueueSignal) {
+        *self.queue_signal.lock().unwrap() = Some(signal);
     }
 
     /// Admit one request: returns its granted COS batch + lease.
@@ -324,13 +599,37 @@ impl Planner {
         }
 
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let gate = Arc::new(Gate::default());
+        // Effective cap under pressure, computed before taking the
+        // state lock (the signal may block on its own locks).
+        let cap = if self.queue_cap > 0 {
+            let pressure = {
+                let sig = self.queue_signal.lock().unwrap();
+                match sig.as_ref() {
+                    Some(f) => f(),
+                    None => 0.0,
+                }
+            };
+            let pressure = pressure.clamp(0.0, 1.0);
+            ((self.queue_cap as f64 * (1.0 - pressure)) as usize).max(1)
+        } else {
+            0
+        };
         let (lock, cv) = &*self.state;
         {
             let mut st = lock.lock().unwrap();
             if st.closed {
                 return Err(Error::other("planner shut down"));
             }
-            st.queue.push(Pending {
+            if cap > 0 && st.pending_total >= cap {
+                self.registry.counter(names::BA_REJECTS).inc();
+                return Err(Error::Busy {
+                    queued: st.pending_total,
+                    cap,
+                });
+            }
+            st.push(Pending {
                 ticket,
                 client: client_id,
                 device,
@@ -338,26 +637,27 @@ impl Planner {
                 model_bytes,
                 b_max,
                 burst: burst_width,
-                grant: None,
+                gate: gate.clone(),
             });
             st.wakeups += 1;
+            drop(st);
             cv.notify_all();
         }
-        // Wait for our grant.
-        let mut st = lock.lock().unwrap();
+        // Wait on our own gate: the planner (or shutdown) deposits
+        // exactly one verdict — no shared-queue rescans, no
+        // thundering-herd wakeups.
+        let mut slot = gate.slot.lock().unwrap();
         loop {
-            if let Some(pos) = st
-                .queue
-                .iter()
-                .position(|p| p.ticket == ticket && p.grant.is_some())
-            {
-                let p = st.queue.remove(pos);
-                return p.grant.unwrap();
+            if let Some(res) = slot.take() {
+                drop(slot);
+                if res.is_ok() {
+                    self.registry
+                        .histogram(names::BA_TIME_TO_GRANT_NS)
+                        .record(t0.elapsed().as_nanos() as u64);
+                }
+                return res;
             }
-            if st.closed {
-                return Err(Error::other("planner shut down"));
-            }
-            st = cv.wait(st).unwrap();
+            slot = gate.cv.wait(slot).unwrap();
         }
     }
 
@@ -371,14 +671,35 @@ impl Planner {
         let mut st = lock.lock().unwrap();
         st.closed = true;
         st.wakeups += 1;
+        // Fail every queued waiter through its gate (idempotent: a
+        // second call finds the shards already drained).
+        for shard in st.shards.iter_mut() {
+            for p in shard.inbox.drain(..) {
+                deposit(&p.gate, Err(Error::other("planner shut down")));
+            }
+            for (_, lane) in std::mem::take(&mut shard.lanes) {
+                for p in lane.pending {
+                    deposit(
+                        &p.gate,
+                        Err(Error::other("planner shut down")),
+                    );
+                }
+            }
+            shard.dirty = true;
+            shard.next_deadline = None;
+            shard.ready = 0;
+            shard.unplanned_ready = 0;
+        }
+        st.pending_total = 0;
         drop(st);
         cv.notify_all();
     }
 
     /// Stats snapshot for Table 5: (total requests, reduced requests,
-    /// mean reduction %).  The mean comes from the `ba.reduction_pct`
-    /// histogram, which also serves percentiles — a bare sum counter
-    /// cannot (its sum is meaningless without the sample count).
+    /// mean reduction %).  The mean comes from the
+    /// `ba.reduction_pct_x100` histogram, which also serves
+    /// percentiles — a bare sum counter cannot (its sum is meaningless
+    /// without the sample count).
     pub fn adaptation_stats(&self) -> (u64, u64, f64) {
         let total = self.registry.counter(names::BA_REQUESTS).get();
         let h = self.registry.histogram(names::BA_REDUCTION_PCT_X100);
@@ -416,62 +737,46 @@ fn gather_window(burst: usize) -> (Duration, bool) {
     (w.min(MAX_GATHER_WINDOW), clamped)
 }
 
-/// Refresh the per-client lanes against the queue: open lanes for
-/// clients whose first request just arrived, advance each lane's
-/// arrival bookkeeping, mark lanes ready (their client's whole burst is
-/// queued, their window expired, or the burst went quiet), and drop
-/// lanes that drained.  Returns the earliest deadline among not-ready
-/// lanes, for the caller's sleep.
-fn sync_lanes(
-    st: &mut State,
-    registry: &Registry,
-    now: Instant,
-) -> Option<Instant> {
-    // (waiting count, widest reported burst, highest ticket) per client.
-    let mut per_client: BTreeMap<u64, (usize, usize, u64)> =
-        BTreeMap::new();
-    for p in st.queue.iter().filter(|p| p.grant.is_none()) {
-        let e = per_client.entry(p.client).or_insert((0, 1, 0));
-        e.0 += 1;
-        e.1 = e.1.max(p.burst.max(1));
-        e.2 = e.2.max(p.ticket);
+/// Refresh one shard's lanes: fold the arrival inbox into per-client
+/// lanes, advance arrival bookkeeping, mark lanes ready (their
+/// client's whole burst is queued, their window expired, or the burst
+/// went quiet), drop lanes that drained (starting their metrics-idle
+/// clock), and recompute the shard's deadline / ready counts.
+fn sync_shard(shard: &mut Shard, registry: &Registry, now: Instant) {
+    let Shard {
+        inbox,
+        lanes,
+        idle,
+        dirty,
+        next_deadline,
+        ready,
+        unplanned_ready,
+    } = shard;
+    for p in inbox.drain(..) {
+        idle.remove(&p.client);
+        lanes
+            .entry(p.client)
+            .or_insert_with(|| Lane::new(now))
+            .pending
+            .push(p);
     }
-    // Lanes that just drained start their metrics-idle clock; clients
-    // with live work are never idle.  Past the TTL, the drained lane's
-    // per-lane instruments leave the registry — the cardinality bound
-    // for auto-allocated (one-per-client-ever) ids.
-    let drained: Vec<u64> = st
-        .lanes
-        .keys()
-        .filter(|&c| !per_client.contains_key(c))
-        .copied()
-        .collect();
-    st.lanes.retain(|c, _| per_client.contains_key(c));
-    for c in drained {
-        st.lane_idle.entry(c).or_insert(now);
-    }
-    for c in per_client.keys() {
-        st.lane_idle.remove(c);
-    }
-    st.lane_idle.retain(|client, since| {
-        if now.duration_since(*since) >= LANE_METRICS_TTL {
-            registry.evict_prefix(&names::lane_prefix(client));
-            false
-        } else {
-            true
+    *next_deadline = None;
+    *ready = 0;
+    *unplanned_ready = 0;
+    let mut drained: Vec<u64> = Vec::new();
+    for (&client, lane) in lanes.iter_mut() {
+        if lane.pending.is_empty() {
+            drained.push(client);
+            continue;
         }
-    });
-    let mut next_deadline: Option<Instant> = None;
-    for (&client, &(waiting, burst, max_ticket)) in &per_client {
-        let lane = st.lanes.entry(client).or_insert(Lane {
-            gather_started: now,
-            last_arrival: now,
-            last_ticket: 0,
-            ready: false,
-            ready_since: None,
-            planned_ready: false,
-            clamp_counted: false,
-        });
+        let waiting = lane.pending.len();
+        let mut burst = 1usize;
+        let mut max_ticket = 0u64;
+        for p in &lane.pending {
+            burst = burst.max(p.burst.max(1));
+            max_ticket = max_ticket.max(p.ticket);
+        }
+        lane.burst = burst;
         if max_ticket > lane.last_ticket {
             lane.last_ticket = max_ticket;
             lane.last_arrival = now;
@@ -488,58 +793,157 @@ fn sync_lanes(
                 lane.clamp_counted = false;
             }
         }
+        if !lane.ready {
+            let (window, clamped) = gather_window(burst);
+            if clamped && !lane.clamp_counted {
+                lane.clamp_counted = true;
+                registry.counter(names::BA_BURST_CLAMPED).inc();
+            }
+            let deadline = (lane.gather_started + window)
+                .min(lane.last_arrival + GATHER_IDLE);
+            // This lane's whole burst queued (a burst-1 client never
+            // waits at all), its window spent, or its burst went quiet
+            // before filling out (steady state refills one iteration's
+            // shards at a time): the lane is ready to plan.
+            if waiting >= burst || now >= deadline {
+                lane.ready = true;
+                lane.ready_since.get_or_insert(now);
+                let gathered = now.duration_since(lane.gather_started);
+                registry
+                    .histogram(names::BA_GATHER_WINDOW_NS)
+                    .record(gathered.as_nanos() as u64);
+                registry
+                    .histogram(&names::lane_gather_window_ns(client))
+                    .record(gathered.as_nanos() as u64);
+            } else {
+                *next_deadline = Some(match *next_deadline {
+                    Some(d) => d.min(deadline),
+                    None => deadline,
+                });
+            }
+        }
         if lane.ready {
-            continue;
+            *ready += 1;
+            if !lane.planned_ready {
+                *unplanned_ready += 1;
+            }
         }
-        let (window, clamped) = gather_window(burst);
-        if clamped && !lane.clamp_counted {
-            lane.clamp_counted = true;
-            registry.counter(names::BA_BURST_CLAMPED).inc();
+    }
+    // Lanes that just drained start their metrics-idle clock; clients
+    // with live work are never idle (arrivals above cancel the clock).
+    for c in drained {
+        lanes.remove(&c);
+        idle.entry(c).or_insert(now);
+    }
+    *dirty = false;
+}
+
+/// Periodic sweep ([`WAIT_TIMEOUT`]-gated): evict idle lanes' metrics
+/// past their TTL and reap abandoned waiters — queued entries whose
+/// gate has no other holder (the admitting thread is gone, nobody
+/// will ever collect a verdict).  Without the reap, a tenant crashing
+/// mid-`admit` would strand its `Pending` entry in the queue forever.
+fn janitor(st: &mut State, registry: &Registry, now: Instant) {
+    let mut reaped_total = 0usize;
+    for shard in st.shards.iter_mut() {
+        shard.idle.retain(|client, since| {
+            if now.duration_since(*since) >= LANE_METRICS_TTL {
+                registry.evict_prefix(&names::lane_prefix(client));
+                false
+            } else {
+                true
+            }
+        });
+        let live = |p: &Pending| Arc::strong_count(&p.gate) > 1;
+        let before = shard.inbox.len()
+            + shard
+                .lanes
+                .values()
+                .map(|l| l.pending.len())
+                .sum::<usize>();
+        shard.inbox.retain(live);
+        for lane in shard.lanes.values_mut() {
+            lane.pending.retain(live);
         }
-        let deadline = (lane.gather_started + window)
-            .min(lane.last_arrival + GATHER_IDLE);
-        // This lane's whole burst queued (a burst-1 client never waits
-        // at all), its window spent, or its burst went quiet before
-        // filling out (steady state refills one iteration's shards at a
-        // time): the lane is ready to plan.
-        if waiting >= burst || now >= deadline {
-            lane.ready = true;
-            lane.ready_since.get_or_insert(now);
-            let gathered = now.duration_since(lane.gather_started);
+        let after = shard.inbox.len()
+            + shard
+                .lanes
+                .values()
+                .map(|l| l.pending.len())
+                .sum::<usize>();
+        if after < before {
+            shard.dirty = true;
+            reaped_total += before - after;
+        }
+    }
+    if reaped_total > 0 {
+        st.pending_total =
+            st.pending_total.saturating_sub(reaped_total);
+        registry
+            .counter(names::BA_REAPED)
+            .add(reaped_total as u64);
+    }
+}
+
+/// Refresh the lane table: run the janitor when its sweep is due, then
+/// refresh only the shards that are dirty (saw an arrival, grant, or
+/// reap) or whose gather deadline expired — per-pass bookkeeping is
+/// proportional to touched lanes, not total tenants.  Returns the
+/// earliest gather deadline among not-ready lanes, for the caller's
+/// sleep.
+fn sync_lanes(
+    st: &mut State,
+    registry: &Registry,
+    now: Instant,
+) -> Option<Instant> {
+    let sweep_due = match st.last_sweep {
+        None => true,
+        Some(t) => now.duration_since(t) >= WAIT_TIMEOUT,
+    };
+    if sweep_due {
+        st.last_sweep = Some(now);
+        janitor(st, registry, now);
+    }
+    let mut next_deadline: Option<Instant> = None;
+    let mut lanes_total = 0usize;
+    for (i, shard) in st.shards.iter_mut().enumerate() {
+        let due = matches!(shard.next_deadline, Some(d) if now >= d);
+        if shard.dirty || due {
+            sync_shard(shard, registry, now);
             registry
-                .histogram(names::BA_GATHER_WINDOW_NS)
-                .record(gathered.as_nanos() as u64);
-            registry
-                .histogram(&names::lane_gather_window_ns(client))
-                .record(gathered.as_nanos() as u64);
-        } else {
+                .gauge(&names::shard_lanes(i))
+                .set(shard.lanes.len() as i64);
+        }
+        lanes_total += shard.lanes.len();
+        if let Some(d) = shard.next_deadline {
             next_deadline = Some(match next_deadline {
-                Some(d) => d.min(deadline),
-                None => deadline,
+                Some(nd) => nd.min(d),
+                None => d,
             });
         }
     }
     registry
         .gauge(names::BA_LANES_ACTIVE)
-        .set(st.lanes.len() as i64);
+        .set(lanes_total as i64);
     next_deadline
 }
 
-/// The ready lanes in grant-scheduling order: **oldest-ready first**
-/// (ties broken by client id for determinism).  The Eq. 4 solver defers
-/// infeasible requests from the tail of its input, so this ordering is
-/// the starvation bound — the longest-ready lane is always the last one
-/// deferred, and with each pass it can only move toward the front.
-fn ready_lane_order(lanes: &BTreeMap<u64, Lane>) -> Vec<u64> {
-    let mut ready: Vec<(Instant, u64)> = lanes
-        .iter()
-        .filter(|(_, l)| l.ready)
-        .map(|(&c, l)| {
-            (l.ready_since.expect("ready lanes have ready_since"), c)
-        })
-        .collect();
-    ready.sort();
-    ready.into_iter().map(|(_, c)| c).collect()
+/// Every ready lane as a `(ready_since, client)` pair — the input a
+/// [`FairnessPolicy`] orders.  Shards with no ready lanes are skipped
+/// wholesale.
+fn ready_lanes(st: &State) -> Vec<(Instant, u64)> {
+    let mut out = Vec::new();
+    for shard in &st.shards {
+        if shard.ready == 0 {
+            continue;
+        }
+        for (&client, l) in &shard.lanes {
+            if let (true, Some(since)) = (l.ready, l.ready_since) {
+                out.push((since, client));
+            }
+        }
+    }
+    out
 }
 
 fn planner_loop(
@@ -571,11 +975,9 @@ fn planner_loop(
                 }
                 let now = Instant::now();
                 let next_deadline = sync_lanes(&mut st, &registry, now);
-                let any_ready = st.lanes.values().any(|l| l.ready);
-                let newly_ready = st
-                    .lanes
-                    .values()
-                    .any(|l| l.ready && !l.planned_ready);
+                let any_ready = st.shards.iter().any(|s| s.ready > 0);
+                let newly_ready =
+                    st.shards.iter().any(|s| s.unplanned_ready > 0);
                 if any_ready
                     && (newly_ready || st.wakeups != planned_wakeups)
                 {
@@ -593,7 +995,6 @@ fn planner_loop(
 
         // --- planning pass over every ready lane ---------------------
         let t0 = Instant::now();
-        let mut made_progress = false;
         {
             let mut st = lock.lock().unwrap();
             // Shutdown is checked at the top of every planning pass: a
@@ -605,87 +1006,85 @@ fn planner_loop(
             // Events landing while we hold the lock and solve will bump
             // `wakeups` past this and trigger another pass immediately.
             planned_wakeups = st.wakeups;
-            let lane_order = ready_lane_order(&st.lanes);
-            for c in &lane_order {
-                st.lanes.get_mut(c).unwrap().planned_ready = true;
+            let st = &mut *st;
+            let now = Instant::now();
+            let lane_order = st.fairness.order(ready_lanes(st), now);
+            // Mark every offered lane planned and refresh
+            // `ba.burst_width` from the per-lane cached bursts — no
+            // queue scan inside the solve lock.
+            let mut widest = 1usize;
+            for &client in &lane_order {
+                let shard = &mut st.shards[shard_of(client)];
+                let Some(lane) = shard.lanes.get_mut(&client) else {
+                    continue;
+                };
+                widest = widest.max(lane.burst);
+                if !lane.planned_ready {
+                    lane.planned_ready = true;
+                    shard.unplanned_ready =
+                        shard.unplanned_ready.saturating_sub(1);
+                }
             }
-            let lane_rank = |client: u64| {
-                lane_order.iter().position(|&c| c == client)
-            };
-            registry.gauge(names::BA_BURST_WIDTH).set(
-                st.queue
-                    .iter()
-                    .filter(|p| {
-                        p.grant.is_none()
-                            && lane_rank(p.client).is_some()
-                    })
-                    .map(|p| p.burst.max(1))
-                    .max()
-                    .unwrap_or(1) as i64,
-            );
+            registry
+                .gauge(names::BA_BURST_WIDTH)
+                .set(widest as i64);
+            let mut granted = 0usize;
+            let mut failed = 0usize;
             for (dev_idx, device) in devices.iter().enumerate() {
-                // Anything that can never fit alone fails fast with OOM.
-                let waiting: Vec<usize> = st
-                    .queue
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, p)| {
-                        p.device == dev_idx
-                            && p.grant.is_none()
-                            && lane_rank(p.client).is_some()
-                    })
-                    .map(|(i, _)| i)
-                    .collect();
-                if waiting.is_empty() {
-                    continue;
-                }
-                for &i in &waiting {
-                    let p = &st.queue[i];
-                    let floor = p.model_bytes
-                        + (min_batch.min(p.b_max)) as u64 * p.per_sample;
-                    if floor > device.usable() {
-                        let err = Err(Error::Oom {
-                            needed: floor,
-                            free: device.usable(),
-                            capacity: device.capacity(),
-                        });
-                        st.queue[i].grant = Some(err);
-                        made_progress = true;
-                    }
-                }
-                let mut waiting: Vec<usize> = st
-                    .queue
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, p)| {
-                        p.device == dev_idx
-                            && p.grant.is_none()
-                            && lane_rank(p.client).is_some()
-                    })
-                    .map(|(i, _)| i)
-                    .collect();
-                if waiting.is_empty() {
-                    continue;
-                }
-                // Fairness across tenants: requests reach the solver in
-                // lane-readiness order (oldest-ready lane first), not
-                // queue order.  The sort is stable, so within one lane
-                // arrival order is preserved.
-                waiting.sort_by_key(|&i| {
-                    lane_rank(st.queue[i].client).unwrap()
-                });
-                let reqs: Vec<BatchRequest> = waiting
-                    .iter()
-                    .map(|&i| {
-                        let p = &st.queue[i];
-                        BatchRequest {
+                // Gather this device's requests in fairness order
+                // (within one lane, arrival order); anything that can
+                // never fit alone fails fast with OOM through its
+                // gate.  `owner` maps ticket → client so assignments
+                // resolve without scanning lanes.
+                let mut reqs: Vec<BatchRequest> = Vec::new();
+                let mut owner: BTreeMap<u64, u64> = BTreeMap::new();
+                for &client in &lane_order {
+                    let shard = &mut st.shards[shard_of(client)];
+                    let Some(lane) = shard.lanes.get_mut(&client)
+                    else {
+                        continue;
+                    };
+                    let mut lane_removed = false;
+                    let mut i = 0;
+                    while i < lane.pending.len() {
+                        if lane.pending[i].device != dev_idx {
+                            i += 1;
+                            continue;
+                        }
+                        let p = &lane.pending[i];
+                        let floor = p.model_bytes
+                            + (min_batch.min(p.b_max)) as u64
+                                * p.per_sample;
+                        if floor > device.usable() {
+                            let p = lane.pending.remove(i);
+                            deposit(
+                                &p.gate,
+                                Err(Error::Oom {
+                                    needed: floor,
+                                    free: device.usable(),
+                                    capacity: device.capacity(),
+                                }),
+                            );
+                            failed += 1;
+                            lane_removed = true;
+                            continue;
+                        }
+                        owner.insert(p.ticket, client);
+                        reqs.push(BatchRequest {
                             id: p.ticket,
                             data_bytes_per_sample: p.per_sample,
                             model_bytes: p.model_bytes,
                             b_max: p.b_max,
-                        }
-                    })
-                    .collect();
+                        });
+                        i += 1;
+                    }
+                    if lane_removed {
+                        shard.dirty = true;
+                    }
+                }
+                if reqs.is_empty() {
+                    continue;
+                }
                 let sig = BatchSignals {
                     requests: reqs,
                     budget: device.free(),
@@ -712,46 +1111,58 @@ fn planner_loop(
                 };
                 registry.counter(names::BA_RUNS).inc();
                 for a in &sol.assignments {
-                    let &i = waiting
+                    let Some(&client) = owner.get(&a.id) else {
+                        continue;
+                    };
+                    let shard = &mut st.shards[shard_of(client)];
+                    let Some(lane) = shard.lanes.get_mut(&client)
+                    else {
+                        continue;
+                    };
+                    let Some(pos) = lane
+                        .pending
                         .iter()
-                        .find(|&&i| st.queue[i].ticket == a.id)
-                        .unwrap();
-                    let p = &st.queue[i];
-                    let bytes =
-                        p.model_bytes + a.batch as u64 * p.per_sample;
-                    match device.admit(bytes) {
-                        Ok(lease) => {
-                            if a.batch < p.b_max {
-                                // The histogram's count doubles as the
-                                // "reduced requests" tally — no
-                                // separate counter to keep in sync.
-                                let pct = 100.0
-                                    * (p.b_max - a.batch) as f64
-                                    / p.b_max as f64;
-                                registry
-                                    .histogram(names::BA_REDUCTION_PCT_X100)
-                                    .record((pct * 100.0) as u64);
-                            }
-                            st.queue[i].grant = Some(Ok(Grant {
+                        .position(|p| p.ticket == a.id)
+                    else {
+                        continue;
+                    };
+                    let bytes = lane.pending[pos].model_bytes
+                        + a.batch as u64
+                            * lane.pending[pos].per_sample;
+                    // A failed device admit means we raced another
+                    // allocation; the loser's lease release will wake
+                    // us to retry.
+                    if let Ok(lease) = device.admit(bytes) {
+                        let p = lane.pending.remove(pos);
+                        if a.batch < p.b_max {
+                            // The histogram's count doubles as the
+                            // "reduced requests" tally — no separate
+                            // counter to keep in sync.
+                            let pct = 100.0
+                                * (p.b_max - a.batch) as f64
+                                / p.b_max as f64;
+                            registry
+                                .histogram(names::BA_REDUCTION_PCT_X100)
+                                .record((pct * 100.0) as u64);
+                        }
+                        deposit(
+                            &p.gate,
+                            Ok(Grant {
                                 batch: a.batch,
                                 _lease: lease,
                                 _notify: Some(ReleaseNotify(
                                     Arc::downgrade(&state),
                                 )),
-                            }));
-                            registry.counter(names::BA_GRANTS).inc();
-                            made_progress = true;
-                        }
-                        Err(_) => {
-                            // Raced with another allocation; the loser's
-                            // lease release will wake us to retry.
-                        }
+                            }),
+                        );
+                        registry.counter(names::BA_GRANTS).inc();
+                        granted += 1;
+                        shard.dirty = true;
                     }
                 }
             }
-            if made_progress {
-                cv.notify_all();
-            }
+            st.pending_total =
+                st.pending_total.saturating_sub(granted + failed);
         }
         registry
             .histogram(names::BA_SOLVE_NS)
@@ -766,6 +1177,30 @@ mod tests {
 
     fn devices(cap: u64) -> Vec<Arc<DeviceSim>> {
         vec![DeviceSim::new("d0", DeviceKind::Gpu, cap, 0)]
+    }
+
+    /// A queued request plus the gate clone its (synthetic) waiter
+    /// would hold — tests keep the clone alive so the janitor does not
+    /// reap the entry as abandoned.
+    fn pend(
+        ticket: u64,
+        client: u64,
+        burst: usize,
+    ) -> (Pending, Arc<Gate>) {
+        let gate = Arc::new(Gate::default());
+        (
+            Pending {
+                ticket,
+                client,
+                device: 0,
+                per_sample: 1,
+                model_bytes: 0,
+                b_max: 20,
+                burst,
+                gate: gate.clone(),
+            },
+            gate,
+        )
     }
 
     #[test]
@@ -1020,34 +1455,101 @@ mod tests {
         );
     }
 
-    /// Fairness rule, pinned deterministically: ready lanes are
-    /// scheduled oldest-`ready_since` first, regardless of client id or
-    /// map order; lanes still gathering are not scheduled at all.
+    /// Fairness rule, pinned deterministically: under the default
+    /// [`FairnessPolicy::OldestReady`], ready lanes are scheduled
+    /// oldest-`ready_since` first, regardless of client id, and ties
+    /// break by client id.
     #[test]
     fn ready_lane_order_is_oldest_first() {
         let t0 = Instant::now();
-        let lane = |ready: Option<Duration>| Lane {
-            gather_started: t0,
-            last_arrival: t0,
-            last_ticket: 1,
-            ready: ready.is_some(),
-            ready_since: ready.map(|d| t0 + d),
-            planned_ready: false,
-            clamp_counted: false,
-        };
-        let mut lanes = BTreeMap::new();
-        lanes.insert(2, lane(Some(Duration::from_millis(5))));
-        lanes.insert(3, lane(Some(Duration::from_millis(1))));
-        lanes.insert(7, lane(None)); // still gathering: excluded
-        lanes.insert(9, lane(Some(Duration::from_millis(9))));
-        assert_eq!(ready_lane_order(&lanes), vec![3, 2, 9]);
+        let at = |d: u64| t0 + Duration::from_millis(d);
+        let policy = FairnessPolicy::default();
+        let ready = vec![(at(5), 2), (at(1), 3), (at(9), 9)];
+        assert_eq!(policy.order(ready.clone(), at(10)), vec![3, 2, 9]);
         // Tie on ready time: deterministic by client id.
-        lanes.insert(1, lane(Some(Duration::from_millis(1))));
-        assert_eq!(ready_lane_order(&lanes), vec![1, 3, 2, 9]);
-        // A re-gathering lane (ready cleared, seniority kept) is not
-        // offered until its new burst's window completes.
-        lanes.get_mut(&3).unwrap().ready = false;
-        assert_eq!(ready_lane_order(&lanes), vec![1, 2, 9]);
+        let mut tied = ready;
+        tied.push((at(1), 1));
+        assert_eq!(policy.order(tied, at(10)), vec![1, 3, 2, 9]);
+    }
+
+    /// Lanes still gathering are not offered at all: [`ready_lanes`]
+    /// only surfaces lanes whose gather completed — including across
+    /// shards (the per-shard ready counters must stay truthful when
+    /// only some shards are refreshed).
+    #[test]
+    fn ready_lanes_exclude_gathering_lanes() {
+        let reg = Registry::new();
+        let mut st = State::new();
+        let (p1, _g1) = pend(1, 3, 1); // burst 1: ready on arrival
+        let (p2, _g2) = pend(2, 7, 4); // burst 4: still gathering
+        st.push(p1);
+        st.push(p2);
+        let t0 = Instant::now();
+        sync_lanes(&mut st, &reg, t0);
+        let ready = ready_lanes(&st);
+        assert_eq!(ready.len(), 1, "gathering lane must be excluded");
+        assert_eq!(ready[0].1, 3);
+        // Idle-exit passes: the gathering lane goes ready too (its
+        // shard re-syncs off its own deadline, no dirty flag needed).
+        sync_lanes(&mut st, &reg, t0 + GATHER_IDLE + GATHER_IDLE);
+        let mut clients: Vec<u64> =
+            ready_lanes(&st).into_iter().map(|(_, c)| c).collect();
+        clients.sort_unstable();
+        assert_eq!(clients, vec![3, 7]);
+    }
+
+    /// Weighted fairness: a heavier tenant is served like one that has
+    /// waited `weight×` as long — but weighted age still grows without
+    /// bound, so a long-waiting light tenant eventually outranks it
+    /// (no starvation).  Unlisted tenants default to weight 1; an
+    /// empty weight table degrades to the oldest-ready default.
+    #[test]
+    fn weighted_fairness_prefers_heavy_but_ages_light_tenants() {
+        let t0 = Instant::now();
+        let policy = FairnessPolicy::weighted([(1, 10), (2, 1)]);
+        let now = t0 + Duration::from_millis(100);
+        // Equal ready time: the weight-10 tenant goes first (under
+        // oldest-ready the tie would break toward client 1 anyway, so
+        // also check against an unlisted heavy-id tenant).
+        assert_eq!(
+            policy.order(vec![(t0, 2), (t0, 1)], now),
+            vec![1, 2]
+        );
+        assert_eq!(
+            policy.order(vec![(t0, 9), (t0, 1)], now),
+            vec![1, 9],
+            "unlisted tenants default to weight 1"
+        );
+        // The light tenant has waited >10× as long: weighted age wins.
+        let heavy_since = t0 + Duration::from_millis(95); // age 5 ms ×10
+        assert_eq!(
+            policy.order(vec![(heavy_since, 1), (t0, 2)], now),
+            vec![2, 1],
+            "a long-waiting light tenant must not starve"
+        );
+        assert!(matches!(
+            FairnessPolicy::weighted(Vec::new()),
+            FairnessPolicy::OldestReady
+        ));
+    }
+
+    /// The hash-affine device map: stable per client, in range, and
+    /// actually spreading clients across devices.
+    #[test]
+    fn device_for_is_stable_and_spreads() {
+        let mut used = [false; 4];
+        for id in 1..100u64 {
+            let d = device_for(id, 4);
+            assert!(d < 4);
+            assert_eq!(d, device_for(id, 4), "must be stable");
+            used[d] = true;
+        }
+        assert!(
+            used.iter().all(|&u| u),
+            "hash must spread clients over all devices: {used:?}"
+        );
+        // Degenerate: no devices reported still yields index 0.
+        assert_eq!(device_for(7, 0), 0);
     }
 
     /// Regression (pass-per-straggler): a fresh burst arriving at an
@@ -1059,67 +1561,69 @@ mod tests {
     #[test]
     fn arrival_to_ready_lane_reopens_gather_but_keeps_seniority() {
         let reg = Registry::new();
-        let mut st = State {
-            queue: Vec::new(),
-            lanes: BTreeMap::new(),
-            lane_idle: BTreeMap::new(),
-            closed: false,
-            wakeups: 0,
-        };
-        let pend = |ticket: u64, burst: usize| Pending {
-            ticket,
-            client: 5,
-            device: 0,
-            per_sample: 1,
-            model_bytes: 0,
-            b_max: 20,
-            burst,
-            grant: None,
+        let mut st = State::new();
+        let mut gates = Vec::new();
+        let mut push = |st: &mut State, ticket: u64| {
+            let (p, g) = pend(ticket, 5, 4);
+            gates.push(g);
+            st.push(p);
         };
         let t0 = Instant::now();
         // One request of a reported 4-wide burst: gathering, not ready.
-        st.queue.push(pend(1, 4));
+        push(&mut st, 1);
         sync_lanes(&mut st, &reg, t0);
-        assert!(!st.lanes[&5].ready);
+        assert!(!st.lane(5).unwrap().ready);
         // Idle-exit passes: the lane goes ready.
         let t1 = t0 + GATHER_IDLE + GATHER_IDLE;
         sync_lanes(&mut st, &reg, t1);
-        assert!(st.lanes[&5].ready);
-        let first_ready = st.lanes[&5].ready_since.unwrap();
+        assert!(st.lane(5).unwrap().ready);
+        let first_ready = st.lane(5).unwrap().ready_since.unwrap();
         // A fresh burst starts arriving: the gather re-opens…
-        st.queue.push(pend(2, 4));
+        push(&mut st, 2);
         let t2 = t1 + Duration::from_micros(200);
         sync_lanes(&mut st, &reg, t2);
         assert!(
-            !st.lanes[&5].ready,
+            !st.lane(5).unwrap().ready,
             "new arrival must re-open the lane's gather"
         );
         // …without losing the lane's first-ready seniority.
-        assert_eq!(st.lanes[&5].ready_since, Some(first_ready));
+        assert_eq!(
+            st.lane(5).unwrap().ready_since,
+            Some(first_ready)
+        );
         // The whole burst queued → gather completes early.
-        st.queue.push(pend(3, 4));
-        st.queue.push(pend(4, 4));
+        push(&mut st, 3);
+        push(&mut st, 4);
         let t3 = t2 + Duration::from_micros(200);
         sync_lanes(&mut st, &reg, t3);
         assert!(
-            st.lanes[&5].ready,
+            st.lane(5).unwrap().ready,
             "whole burst queued: re-opened gather must complete"
         );
-        assert_eq!(st.lanes[&5].ready_since, Some(first_ready));
+        assert_eq!(
+            st.lane(5).unwrap().ready_since,
+            Some(first_ready)
+        );
         // Race regression: grants drain part of the lane in the same
         // breath as a new arrival — the waiting count shrinks (4 → 2)
         // but the ticket high-water grows, and that alone must re-open
         // the gather (a waiting-count delta would cancel out and solve
         // the straggler solo).
-        st.queue.retain(|p| p.ticket == 4); // 1-3 granted + collected
-        st.queue.push(pend(5, 4));
+        st.lane_mut(5)
+            .unwrap()
+            .pending
+            .retain(|p| p.ticket == 4); // 1-3 granted + collected
+        push(&mut st, 5);
         let t4 = t3 + Duration::from_micros(200);
         sync_lanes(&mut st, &reg, t4);
         assert!(
-            !st.lanes[&5].ready,
+            !st.lane(5).unwrap().ready,
             "arrival masked by simultaneous grants must still re-open"
         );
-        assert_eq!(st.lanes[&5].ready_since, Some(first_ready));
+        assert_eq!(
+            st.lane(5).unwrap().ready_since,
+            Some(first_ready)
+        );
     }
 
     /// Fairness end to end: grants go to the oldest-*ready* lane, not
@@ -1223,35 +1727,21 @@ mod tests {
     #[test]
     fn idle_lane_metrics_evicted_after_ttl() {
         let reg = Registry::new();
-        let mut st = State {
-            queue: Vec::new(),
-            lanes: BTreeMap::new(),
-            lane_idle: BTreeMap::new(),
-            closed: false,
-            wakeups: 0,
-        };
+        let mut st = State::new();
         let t0 = Instant::now();
         // Client 41's burst-1 request arrives and is gathered (lane
         // ready on arrival → per-lane histogram recorded)…
-        st.queue.push(Pending {
-            ticket: 1,
-            client: 41,
-            device: 0,
-            per_sample: 1,
-            model_bytes: 0,
-            b_max: 20,
-            burst: 1,
-            grant: None,
-        });
+        let (p, _g) = pend(1, 41, 1);
+        st.push(p);
         sync_lanes(&mut st, &reg, t0);
         assert!(
             reg.histogram(&names::lane_gather_window_ns(41)).count() >= 1
         );
         // …is granted + collected, and the lane drains.
-        st.queue.clear();
+        st.lane_mut(41).unwrap().pending.clear();
         let t1 = t0 + GATHER_IDLE;
         sync_lanes(&mut st, &reg, t1);
-        assert!(st.lanes.is_empty());
+        assert!(st.lane(41).is_none());
         // Inside the TTL the metrics survive (a tenant pausing between
         // epochs keeps its history).
         let t2 = t1 + LANE_METRICS_TTL / 2;
@@ -1272,16 +1762,8 @@ mod tests {
         sync_lanes(&mut st, &reg, t3);
         assert_eq!(hists(&reg), 0, "idle lane metrics must be evicted");
         // A returning client re-opens a lane and fresh instruments.
-        st.queue.push(Pending {
-            ticket: 2,
-            client: 41,
-            device: 0,
-            per_sample: 1,
-            model_bytes: 0,
-            b_max: 20,
-            burst: 1,
-            grant: None,
-        });
+        let (p, _g2) = pend(2, 41, 1);
+        st.push(p);
         sync_lanes(&mut st, &reg, t3 + GATHER_IDLE);
         assert_eq!(hists(&reg), 1, "returning client re-creates metrics");
     }
@@ -1291,35 +1773,21 @@ mod tests {
     #[test]
     fn returning_client_resets_idle_clock() {
         let reg = Registry::new();
-        let mut st = State {
-            queue: Vec::new(),
-            lanes: BTreeMap::new(),
-            lane_idle: BTreeMap::new(),
-            closed: false,
-            wakeups: 0,
-        };
+        let mut st = State::new();
         let t0 = Instant::now();
-        let pend = |ticket: u64| Pending {
-            ticket,
-            client: 6,
-            device: 0,
-            per_sample: 1,
-            model_bytes: 0,
-            b_max: 20,
-            burst: 1,
-            grant: None,
-        };
-        st.queue.push(pend(1));
+        let (p1, _g1) = pend(1, 6, 1);
+        st.push(p1);
         sync_lanes(&mut st, &reg, t0);
-        st.queue.clear();
+        st.lane_mut(6).unwrap().pending.clear();
         sync_lanes(&mut st, &reg, t0 + GATHER_IDLE); // drained: idle starts
         // Returns just inside the TTL…
         let t_back = t0 + LANE_METRICS_TTL - Duration::from_millis(1);
-        st.queue.push(pend(2));
+        let (p2, _g2) = pend(2, 6, 1);
+        st.push(p2);
         sync_lanes(&mut st, &reg, t_back);
-        assert!(!st.lane_idle.contains_key(&6));
+        assert!(st.idle_since(6).is_none());
         // …then drains again; only a *full* fresh TTL evicts.
-        st.queue.clear();
+        st.lane_mut(6).unwrap().pending.clear();
         sync_lanes(&mut st, &reg, t_back + GATHER_IDLE);
         sync_lanes(
             &mut st,
@@ -1366,5 +1834,166 @@ mod tests {
             reg.histogram(&names::lane_gather_window_ns(0)).count() >= 1,
             "unidentified clients must ride the shared legacy lane"
         );
+    }
+
+    /// Spin until the planner's un-granted queue holds exactly `n`
+    /// entries (bounded-admission tests need the waiters queued before
+    /// probing the cap).
+    fn wait_pending(planner: &Planner, n: usize) {
+        let t0 = Instant::now();
+        loop {
+            if planner.state.0.lock().unwrap().pending_total == n {
+                return;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(2),
+                "queue never reached {n} pending entries"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Churn regression: a client that vanishes mid-`admit` (its gate
+    /// has no holder besides the queue) must not leak its `Pending`
+    /// entry — the janitor reaps it from the inbox and from mid-lane,
+    /// counts it in `ba.reaped`, and live co-tenants are untouched.
+    /// `sync_lanes` and the janitor are pure in `now`, so the sweep is
+    /// exercised deterministically.
+    #[test]
+    fn abandoned_waiters_are_reaped() {
+        let reg = Registry::new();
+        let mut st = State::new();
+        let t0 = Instant::now();
+        // Abandoned in the inbox: the waiter's gate clone is dropped
+        // before the first sweep runs.
+        let (p_lost, g_lost) = pend(1, 11, 1);
+        st.push(p_lost);
+        drop(g_lost);
+        // Live co-tenant: its gate is held, it must survive sweeps.
+        let (p_live, _g_live) = pend(2, 12, 1);
+        st.push(p_live);
+        sync_lanes(&mut st, &reg, t0); // first sweep runs the janitor
+        assert!(st.lane(11).is_none(), "abandoned entry opened a lane");
+        assert_eq!(st.lane(12).unwrap().pending.len(), 1);
+        assert_eq!(reg.counter(names::BA_REAPED).get(), 1);
+        assert_eq!(st.pending_total, 1);
+        // Abandoned mid-lane: a second request joins client 12's lane,
+        // then its waiter vanishes before the next due sweep.
+        let (p3, g3) = pend(3, 12, 1);
+        st.push(p3);
+        sync_lanes(&mut st, &reg, t0 + Duration::from_millis(1));
+        assert_eq!(st.lane(12).unwrap().pending.len(), 2);
+        drop(g3);
+        let t_sweep = t0 + WAIT_TIMEOUT + Duration::from_millis(1);
+        sync_lanes(&mut st, &reg, t_sweep);
+        assert_eq!(
+            st.lane(12).unwrap().pending.len(),
+            1,
+            "mid-lane abandoned entry must be reaped"
+        );
+        assert_eq!(reg.counter(names::BA_REAPED).get(), 2);
+        assert_eq!(st.pending_total, 1);
+    }
+
+    /// Churn safety for the grant side: an `Ok` verdict deposited to a
+    /// waiter that already vanished must release its device lease when
+    /// the gate drops — a granted-but-never-collected lease must not
+    /// stay charged forever.
+    #[test]
+    fn deposited_grant_to_vanished_waiter_releases_lease() {
+        let devs = devices(10_000);
+        let gate = Arc::new(Gate::default());
+        let lease = devs[0].admit(2_000).unwrap();
+        deposit(
+            &gate,
+            Ok(Grant {
+                batch: 20,
+                _lease: lease,
+                _notify: None,
+            }),
+        );
+        assert_eq!(devs[0].used(), 2_000);
+        drop(gate);
+        assert_eq!(devs[0].used(), 0, "uncollected grant leaked lease");
+    }
+
+    /// Bounded admission: with `admission_queue_cap` set, an arrival
+    /// that finds the queue full is rejected with [`Error::Busy`]
+    /// (counted in `ba.rejects`) instead of waiting unboundedly, and
+    /// queued waiters are granted normally once memory frees — with
+    /// their admission→grant latency landing in `ba.time_to_grant_ns`.
+    #[test]
+    fn bounded_admission_rejects_when_queue_full() {
+        let reg = Registry::new();
+        let devs = devices(2_100);
+        let planner = Arc::new(Planner::new_tuned(
+            devs.clone(),
+            20,
+            true,
+            reg.clone(),
+            Arc::new(policy::AnalyticBatch),
+            None,
+            2,
+            FairnessPolicy::default(),
+        ));
+        let hold = planner.admit(0, 100, 0, 20, 20, 1, 1).unwrap();
+        let waiters: Vec<_> = (2..4u64)
+            .map(|c| {
+                let p = planner.clone();
+                std::thread::spawn(move || {
+                    p.admit(0, 100, 0, 20, 20, 1, c)
+                })
+            })
+            .collect();
+        wait_pending(&planner, 2);
+        let err =
+            planner.admit(0, 100, 0, 20, 20, 1, 9).unwrap_err();
+        assert!(err.is_rejected(), "expected Busy, got {err}");
+        assert_eq!(reg.counter(names::BA_REJECTS).get(), 1);
+        drop(hold);
+        for w in waiters {
+            assert_eq!(w.join().unwrap().unwrap().batch, 20);
+        }
+        // hold + 2 waiters granted, each recording time-to-grant.
+        assert_eq!(
+            reg.histogram(names::BA_TIME_TO_GRANT_NS).count(),
+            3
+        );
+        // Conservation with rejects: requests = grants + rejects.
+        assert_eq!(reg.counter(names::BA_REQUESTS).get(), 4);
+        assert_eq!(reg.counter(names::BA_GRANTS).get(), 3);
+    }
+
+    /// The queueing-pressure signal shrinks the effective cap: at
+    /// pressure 0.75 a cap of 4 admits only one queued request, and
+    /// the floor of 1 keeps a saturated tier from rejecting everything
+    /// outright.
+    #[test]
+    fn queue_signal_scales_admission_cap() {
+        let reg = Registry::new();
+        let devs = devices(2_100);
+        let planner = Arc::new(Planner::new_tuned(
+            devs.clone(),
+            20,
+            true,
+            reg.clone(),
+            Arc::new(policy::AnalyticBatch),
+            None,
+            4,
+            FairnessPolicy::default(),
+        ));
+        planner.set_queue_signal(Arc::new(|| 0.75));
+        let hold = planner.admit(0, 100, 0, 20, 20, 1, 1).unwrap();
+        let p2 = planner.clone();
+        let waiter = std::thread::spawn(move || {
+            p2.admit(0, 100, 0, 20, 20, 1, 2)
+        });
+        wait_pending(&planner, 1);
+        // Effective cap = 4 × (1 − 0.75) = 1 → already full.
+        let err =
+            planner.admit(0, 100, 0, 20, 20, 1, 3).unwrap_err();
+        assert!(err.is_rejected());
+        drop(hold);
+        assert_eq!(waiter.join().unwrap().unwrap().batch, 20);
     }
 }

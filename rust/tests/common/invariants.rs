@@ -86,20 +86,28 @@ pub fn assert_hedge_books(reg: &Registry, cap: u64) {
     }
 }
 
-/// Every planner admission ended in exactly one grant: `ba.grants`
-/// never exceeds `ba.requests`, and matches it exactly when no OOM
-/// forced a client resubmission.  Call after all tenants completed.
+/// Every planner admission ended in exactly one verdict: a grant, a
+/// bounded-admission reject (the client retried — each retry is a
+/// fresh request), or a janitor reap of an abandoned waiter.
+/// `ba.grants` never exceeds `ba.requests`, and the three verdicts sum
+/// to it exactly when no OOM forced a client resubmission.  Call after
+/// all tenants completed.
 pub fn assert_no_lost_grants(reg: &Registry) {
     let requests = reg.counter(names::BA_REQUESTS).get();
     let grants = reg.counter(names::BA_GRANTS).get();
+    let rejects = reg.counter(names::BA_REJECTS).get();
+    let reaped = reg.counter(names::BA_REAPED).get();
     assert!(
         grants <= requests,
         "ba.grants {grants} > ba.requests {requests}"
     );
     if reg.counter(names::HAPI_OOM).get() == 0 {
         assert_eq!(
-            grants, requests,
-            "an admission leaked without a grant on an OOM-free run"
+            grants + rejects + reaped,
+            requests,
+            "an admission leaked without a verdict on an OOM-free run \
+             (grants {grants} + rejects {rejects} + reaped {reaped} \
+             != requests {requests})"
         );
     }
 }

@@ -22,7 +22,7 @@ use std::thread;
 use std::time::Duration;
 
 use hapi::metrics::names;
-use hapi::scenario::{self, ScenarioScript};
+use hapi::scenario::{self, ScenarioScript, TenantPlan};
 
 #[path = "common/invariants.rs"]
 mod invariants;
@@ -139,6 +139,74 @@ fn canned_proxy_crash_restart_completes_all_tenants() {
         v.is_empty(),
         "invariant violations: {v:#?}\n{}",
         replay_cmd(script.seed)
+    );
+}
+
+/// Canned tenant churn: tenant 0 dies strictly mid-epoch (a scripted
+/// client crash, not a proxy fault), abandoning its in-flight planner
+/// work.  The no-lost-work invariant is relaxed for the crashed tenant
+/// only — the surviving co-tenant must still complete every iteration
+/// with reference-identical loss, and the planner must not wedge on
+/// the abandoned lane.
+#[test]
+fn canned_tenant_crash_mid_epoch_spares_cotenant() {
+    let tenant = |t: usize, crash_iters: Option<usize>| TenantPlan {
+        tenant: t,
+        client_id: (t + 1) as u64,
+        model: "simnet",
+        arrival: Duration::ZERO,
+        samples: 120,
+        pipeline_depth: 2,
+        fetch_fanout: 2,
+        gflops: 0.0,
+        crash_iters,
+    };
+    let script = ScenarioScript {
+        seed: 0x7e4a_c4a5,
+        paths: 2,
+        path_rate: 300_000,
+        path_latency: Duration::ZERO,
+        queue_model: false,
+        tenants: vec![tenant(0, Some(1)), tenant(1, None)],
+        events: Vec::new(),
+    };
+    assert!(script.has_tenant_crash());
+
+    let reference = scenario::run(&script, false).unwrap();
+    let chaos = scenario::run(&script, true).unwrap();
+    let v = scenario::verify(&script, &reference, &chaos);
+    assert!(
+        v.is_empty(),
+        "invariant violations: {v:#?}\n{}",
+        replay_cmd(script.seed)
+    );
+
+    // The crash is chaos-only: the reference run completes everywhere.
+    assert!(reference.tenants.iter().all(|t| t.error.is_none()));
+
+    let crashed = &chaos.tenants[0];
+    let err = crashed.error.as_deref().unwrap_or_default();
+    assert!(
+        err.contains("crashed"),
+        "tenant 0 should die its scripted death, got: {err:?}"
+    );
+    // An errored epoch reports no stats at all — nothing half-counted.
+    assert_eq!(crashed.iterations, 0);
+    assert!(crashed.loss_bits.is_empty());
+
+    let survivor = &chaos.tenants[1];
+    assert!(
+        survivor.error.is_none(),
+        "co-tenant failed: {:?}",
+        survivor.error
+    );
+    assert_eq!(
+        survivor.iterations, survivor.expected_iterations,
+        "co-tenant lost iterations to a neighbour's crash"
+    );
+    assert_eq!(
+        survivor.loss_bits, reference.tenants[1].loss_bits,
+        "co-tenant loss diverged under a neighbour's crash"
     );
 }
 
