@@ -1,0 +1,27 @@
+// Fixture: a TcpStream::connect whose stream never gets socket
+// deadlines — the net-timeouts pass must flag it.  A second connect
+// that arms only the read deadline must be flagged too (both
+// directions are required), while the fully-armed helper is clean.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn connect_no_deadlines(addr: &str) -> std::io::Result<TcpStream> {
+    // BAD: a gray-stalled peer parks every read on this stream forever.
+    TcpStream::connect(addr)
+}
+
+fn connect_read_only(addr: &str) -> std::io::Result<TcpStream> {
+    // BAD: writes can still block forever on a zero-window peer.
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    Ok(stream)
+}
+
+fn connect_armed(addr: &str) -> std::io::Result<TcpStream> {
+    // GOOD: both directions bounded.
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    Ok(stream)
+}

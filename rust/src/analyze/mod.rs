@@ -1,6 +1,6 @@
 //! `hapi-analyze` — repo-native static analysis for the hapi crate.
 //!
-//! Five passes lex the crate's own sources (no rustc, no syn — the
+//! Six passes lex the crate's own sources (no rustc, no syn — the
 //! crate stays zero-dependency) and enforce invariants the compiler
 //! cannot see:
 //!
@@ -22,7 +22,11 @@
 //! - [`panics`] — `unwrap()`/`expect()` in library code must match
 //!   the crate's safe idioms (lock/RwLock poisoning propagation,
 //!   `Condvar` wait results, thread-join in drop paths) or carry an
-//!   allowlist entry with a one-line justification.
+//!   allowlist entry with a one-line justification;
+//! - [`net_timeouts`] — every `TcpStream::connect` in library code
+//!   must arm both `set_read_timeout` and `set_write_timeout` in the
+//!   same function (or carry an allowlist entry): an unbounded socket
+//!   read under a gray-stalled peer is a hang no retry can reach.
 //!
 //! Findings that are deliberate carry entries in
 //! `rust/analyze/allowlist.txt` (`pass | file | function |
@@ -36,6 +40,7 @@ pub mod config_drift;
 pub mod lexer;
 pub mod lockorder;
 pub mod metric_names;
+pub mod net_timeouts;
 pub mod panics;
 
 use std::fs;
@@ -50,6 +55,7 @@ pub const PASSES: &[&str] = &[
     "lock-order",
     "condvar",
     "panics",
+    "net-timeouts",
     "metric-names",
     "config-drift",
     "allowlist",
@@ -129,6 +135,7 @@ pub fn run(root: &Path) -> Result<Report> {
         findings.extend(lockorder::run_file(f, &mut edges));
         findings.extend(condvar::run_file(f));
         findings.extend(panics::run_file(f));
+        findings.extend(net_timeouts::run_file(f));
     }
     findings.extend(lockorder::find_cycles(&edges));
     findings.extend(metric_names::run(&files, readme.as_deref()));

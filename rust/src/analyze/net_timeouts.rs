@@ -1,0 +1,154 @@
+//! Pass: socket-deadline audit.
+//!
+//! A `TcpStream::connect` whose stream never gets both
+//! `set_read_timeout` *and* `set_write_timeout` is a gray-failure
+//! hazard: a stalled peer (half-dead proxy, black-holed route) parks
+//! the calling thread forever, and no retry or circuit breaker above
+//! it ever gets to run.  Library code (`rust/src`, unit-test modules
+//! masked) must therefore arm both socket deadlines in the same
+//! function that connects — in practice by funnelling every connect
+//! through `CosConnection::connect_opts`, which applies
+//! `io_deadline_ms` to both directions.
+//!
+//! A connect that is deliberately deadline-free (there are none today)
+//! must carry an allowlist entry naming why an unbounded block is
+//! safe there.
+
+use super::lexer::TokKind;
+use super::lockorder::enclosing_fn;
+use super::{Finding, SourceFile};
+
+/// Per-function audit state: where the function connected, and which
+/// deadline setters its body mentions.
+struct FnFrame {
+    name: String,
+    connect_lines: Vec<u32>,
+    sets_read: bool,
+    sets_write: bool,
+}
+
+pub fn run_file(sf: &SourceFile) -> Vec<Finding> {
+    let toks = &sf.toks;
+    let mut findings = Vec::new();
+    // Block stack mirroring the panics pass; `fn` frames additionally
+    // index into `frames` so idents can be attributed to the
+    // innermost enclosing function.
+    let mut stack: Vec<(&'static str, Option<String>)> = Vec::new();
+    let mut frames: Vec<FnFrame> = Vec::new();
+    let mut pending: Option<&'static str> = None;
+    let mut pending_fn: Option<String> = None;
+    let mut i = 0;
+    while i < toks.len() {
+        if sf.mask[i] {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        if t.is_ident("fn")
+            && i + 1 < toks.len()
+            && toks[i + 1].kind == TokKind::Ident
+        {
+            pending = Some("fn");
+            pending_fn = Some(toks[i + 1].text.clone());
+        } else if t.is_ident("loop")
+            || t.is_ident("while")
+            || t.is_ident("for")
+            || t.is_ident("if")
+            || t.is_ident("match")
+        {
+            pending = Some("block");
+        } else if t.is_punct('{') {
+            let fname = if pending == Some("fn") {
+                pending_fn.take()
+            } else {
+                None
+            };
+            if let Some(name) = &fname {
+                frames.push(FnFrame {
+                    name: name.clone(),
+                    connect_lines: Vec::new(),
+                    sets_read: false,
+                    sets_write: false,
+                });
+            }
+            stack.push((pending.unwrap_or("block"), fname));
+            pending = None;
+            pending_fn = None;
+        } else if t.is_punct('}') {
+            if let Some((kind, _)) = stack.pop() {
+                if kind == "fn" {
+                    if let Some(fr) = frames.pop() {
+                        findings.extend(close_frame(sf, fr));
+                    }
+                }
+            }
+        } else if t.is_ident("connect")
+            && i >= 3
+            && toks[i - 1].is_punct(':')
+            && toks[i - 2].is_punct(':')
+            && toks[i - 3].is_ident("TcpStream")
+        {
+            if let Some(fr) = frames.last_mut() {
+                fr.connect_lines.push(t.line);
+            } else {
+                // A connect outside any function (const init, macro
+                // soup) still deserves a finding.
+                findings.push(finding(sf, t.line, enclosing_fn(&stack)));
+            }
+        } else if t.is_ident("set_read_timeout") {
+            if let Some(fr) = frames.last_mut() {
+                fr.sets_read = true;
+            }
+        } else if t.is_ident("set_write_timeout") {
+            if let Some(fr) = frames.last_mut() {
+                fr.sets_write = true;
+            }
+        }
+        i += 1;
+    }
+    // Unbalanced braces (the lexer never errors): flush what is left.
+    while let Some(fr) = frames.pop() {
+        findings.extend(close_frame(sf, fr));
+    }
+    findings
+}
+
+fn close_frame(sf: &SourceFile, fr: FnFrame) -> Vec<Finding> {
+    if fr.connect_lines.is_empty() || (fr.sets_read && fr.sets_write) {
+        return Vec::new();
+    }
+    let missing = match (fr.sets_read, fr.sets_write) {
+        (false, false) => "set_read_timeout/set_write_timeout",
+        (true, false) => "set_write_timeout",
+        (false, true) => "set_read_timeout",
+        _ => unreachable!(),
+    };
+    fr.connect_lines
+        .iter()
+        .map(|&line| Finding {
+            pass: "net-timeouts",
+            file: sf.rel.clone(),
+            line,
+            func: fr.name.clone(),
+            msg: format!(
+                "`TcpStream::connect` in fn `{}` without {missing} — \
+                 a stalled peer parks this thread forever",
+                fr.name
+            ),
+        })
+        .collect()
+}
+
+fn finding(sf: &SourceFile, line: u32, func: String) -> Finding {
+    Finding {
+        pass: "net-timeouts",
+        file: sf.rel.clone(),
+        line,
+        func: func.clone(),
+        msg: format!(
+            "`TcpStream::connect` in fn `{func}` without \
+             set_read_timeout/set_write_timeout — a stalled peer parks \
+             this thread forever"
+        ),
+    }
+}

@@ -37,7 +37,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::HapiConfig;
-use crate::cos::protocol::CosConnection;
+use crate::cos::protocol::{ConnOpts, CosConnection};
 use crate::error::{Error, Result};
 use crate::metrics::{names, Registry};
 use crate::netsim::Topology;
@@ -344,15 +344,48 @@ impl HapiClient {
         let key = crate::cos::ObjectKey::shard(&ds.name, shard);
         let addr = &self.addrs[path % self.addrs.len()];
         let link = self.net.path(path);
+        let opts = ConnOpts::from_cfg(
+            self.cfg.io_deadline_ms,
+            self.cfg.frame_integrity,
+        );
         // Bounded admission maps to retry-with-backoff: a planner
         // `Busy` reject is backpressure, not a fault — back off
         // (2 ms doubling, 100 ms cap) and re-offer the request instead
         // of waiting forever in a queue the server chose to bound.
-        let mut backoff = std::time::Duration::from_millis(2);
-        let mut attempts = 0u32;
-        loop {
-            let res =
-                CosConnection::with_pooled(slot, path, addr, link, |conn| {
+        // Integrity failures share the loop: a corrupted frame is
+        // transient per-frame noise, so re-sending on the same path is
+        // the right remedy.  Timeouts deliberately do NOT retry here —
+        // a stall is path-sticky, so they propagate to the sharded
+        // engine, whose retry re-routes to another connection/path.
+        let policy = crate::util::retry::RetryPolicy::backoff(
+            8,
+            std::time::Duration::from_millis(2),
+            std::time::Duration::from_millis(100),
+        )
+        .jitter(
+            self.cfg
+                .seed
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                .wrapping_add(self.client_id | 1),
+        );
+        crate::util::retry::run(
+            &policy,
+            |e| e.is_rejected() || e.is_integrity(),
+            |_, e| {
+                if e.is_rejected() {
+                    self.registry
+                        .counter(names::PIPELINE_ADMIT_RETRIES)
+                        .inc();
+                }
+            },
+            |_| {
+                let res = CosConnection::with_pooled_opts(
+                    slot,
+                    path,
+                    addr,
+                    link,
+                    opts,
+                    |conn| {
                     if split == 0 {
                         let body = conn.get(&key)?;
                         return Tensor::from_raw(
@@ -386,20 +419,22 @@ impl HapiClient {
                         out_dims,
                         body,
                     )
-                });
-            match res {
-                Err(e) if e.is_rejected() && attempts < 8 => {
-                    attempts += 1;
-                    self.registry
-                        .counter(names::PIPELINE_ADMIT_RETRIES)
-                        .inc();
-                    std::thread::sleep(backoff);
-                    backoff = (backoff * 2)
-                        .min(std::time::Duration::from_millis(100));
+                },
+                );
+                if let Err(e) = &res {
+                    if e.is_timeout() {
+                        self.registry
+                            .counter(names::PIPELINE_TIMEOUTS)
+                            .inc();
+                    } else if e.is_integrity() {
+                        self.registry
+                            .counter(names::PIPELINE_INTEGRITY_FAIL)
+                            .inc();
+                    }
                 }
-                other => return other,
-            }
-        }
+                res
+            },
+        )
     }
 
     /// Compute phase for one iteration: leftover frozen units at the

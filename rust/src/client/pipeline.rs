@@ -54,12 +54,13 @@
 //! [`StaticTransport`] (everything on path 0, no hedging) is the
 //! default behind [`run_sharded`].
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::{names, Registry};
 
 /// One unit of pipelined work: a training iteration's shard group.
@@ -278,9 +279,14 @@ pub trait Transport: Sync {
     /// neither goodput nor p95 estimators — but it *is* a
     /// path-quality signal: a fail-stop front end produces only
     /// errors, which a successful-samples-only estimator would never
-    /// see, leaving its estimate frozen at a healthy value.
-    fn on_fetch_error(&self, ctx: ShardCtx) {
-        let _ = ctx;
+    /// see, leaving its estimate frozen at a healthy value.  `err`
+    /// says *how* the attempt failed, so a policy can treat gray
+    /// failures ([`Error::is_timeout`] / [`Error::is_integrity`])
+    /// differently from backpressure — the circuit breaker in
+    /// `TransportScheduler` counts only the former toward tripping a
+    /// path open.
+    fn on_fetch_error(&self, ctx: ShardCtx, err: &Error) {
+        let _ = (ctx, err);
     }
 
     /// The uniform per-path signals view this policy decides from
@@ -845,44 +851,58 @@ where
                             settled: Some(settled.clone()),
                             armed: true,
                         };
-                        let mut used = ShardCtx {
+                        // Retry once on another connection slot (the
+                        // same, reconnected, slot when fanout == 1),
+                        // routed afresh so a re-pinned slot lands on
+                        // its current path.  Only retryable errors
+                        // re-run (a fatal `Config`/`Oom`/… would fail
+                        // identically anywhere); skipped when a hedge
+                        // already won the shard.  The failed attempt
+                        // is a path-quality signal first.
+                        let used = Cell::new(ShardCtx {
                             conn: w,
                             attempt: 0,
                             path,
                             hedge: false,
-                        };
-                        let mut t0 = Instant::now();
-                        let mut res =
-                            fetch_shard(used, &ctx, &jobs[seq], shard);
-                        if res.is_err()
-                            && retry
-                            && !settled.load(Ordering::Acquire)
-                        {
-                            // Retry once on another connection slot
-                            // (the same, reconnected, slot when
-                            // fanout == 1), routed afresh so a
-                            // re-pinned slot lands on its current
-                            // path.  Skipped when a hedge already won
-                            // the shard.  The failed attempt is a
-                            // path-quality signal first.
-                            transport.on_fetch_error(used);
-                            used = ShardCtx {
-                                conn: (w + 1) % fanout,
-                                attempt: 1,
-                                path: transport
-                                    .route_retry((w + 1) % fanout),
-                                hedge: false,
-                            };
-                            retries.inc();
-                            t0 = Instant::now();
-                            res = fetch_shard(
-                                used, &ctx, &jobs[seq], shard,
-                            );
-                        }
+                        });
+                        let t0 = Cell::new(Instant::now());
+                        let res = crate::util::retry::run(
+                            &crate::util::retry::RetryPolicy::immediate(
+                                retry as u32,
+                            ),
+                            |e| {
+                                e.is_retryable()
+                                    && !settled.load(Ordering::Acquire)
+                            },
+                            |_, e| {
+                                transport.on_fetch_error(used.get(), e);
+                                retries.inc();
+                            },
+                            |attempt| {
+                                if attempt > 0 {
+                                    used.set(ShardCtx {
+                                        conn: (w + 1) % fanout,
+                                        attempt: 1,
+                                        path: transport.route_retry(
+                                            (w + 1) % fanout,
+                                        ),
+                                        hedge: false,
+                                    });
+                                    t0.set(Instant::now());
+                                }
+                                fetch_shard(
+                                    used.get(),
+                                    &ctx,
+                                    &jobs[seq],
+                                    shard,
+                                )
+                            },
+                        );
+                        let used = used.get();
                         // Per-attempt timing: a failed first try is
                         // never charged to the slot/path that actually
                         // served the shard.
-                        let elapsed = t0.elapsed();
+                        let elapsed = t0.get().elapsed();
                         let won = !settled.swap(true, Ordering::AcqRel);
                         if hedging {
                             remove_track(shared, seq, shard);
@@ -913,7 +933,7 @@ where
                                 }
                             }
                             Err(e) => {
-                                transport.on_fetch_error(used);
+                                transport.on_fetch_error(used, &e);
                                 // An original that settles with an
                                 // error fails the job exactly as
                                 // before hedging existed; if a hedge
@@ -983,13 +1003,13 @@ where
                                     hedge_wasted.add(sf.bytes);
                                 }
                             }
-                            Err(_) => {
+                            Err(e) => {
                                 // A failed hedge never settles the
                                 // race: the original attempt (and its
                                 // retry) still owns the shard; its
                                 // budget reservation simply burns
                                 // (never refunded, by design).
-                                transport.on_fetch_error(hctx);
+                                transport.on_fetch_error(hctx, &e);
                             }
                         }
                         guard.armed = false;

@@ -68,14 +68,36 @@
 //! The re-pin pass then migrates slots *back*: a slot living away from
 //! its static home returns as soon as the home path is healthy again
 //! (`pipeline.repins_back`, also counted in `pipeline.repins`).
+//!
+//! **Circuit breaker** (`breaker_threshold` > 0): transport-level
+//! failures — [`Error::is_timeout`], [`Error::is_integrity`], and raw
+//! connection errors ([`Error::Io`]: refused, reset, EOF), reported
+//! through [`Transport::on_fetch_error`] — are counted per path; once
+//! a path
+//! accumulates `breaker_threshold` *consecutive* gray failures it
+//! trips **open** (`pipeline.breaker_trips`, with the number of
+//! currently-open paths in the `pipeline.breaker_open` gauge) and
+//! [`Transport::route`]/[`Transport::route_retry`] divert its slots to
+//! the best non-open path (original path kept when every path is
+//! open, so routing never deadlocks).  Probe fetches are the
+//! **half-open** test: an open path is treated as drained (its slots'
+//! traffic is diverted), so after a sample-quiet probe interval one
+//! first-attempt fetch is routed onto it undiverted — a success
+//! resets the failure count and re-closes the breaker (slots stream
+//! back immediately, the map itself never moved), another gray
+//! failure leaves it open for the next probe window.  Any successful
+//! attempt on the path resets the consecutive count, so an isolated
+//! flake never accumulates toward a trip.  Default 0 = no breaker,
+//! routing byte-identical.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::pipeline::{ShardCtx, Transport};
 use crate::config::HapiConfig;
-use crate::metrics::{names, Counter, Histogram, Registry};
+use crate::error::Error;
+use crate::metrics::{names, Counter, Gauge, Histogram, Registry};
 use crate::netsim::Topology;
 use crate::policy::{
     self, PathSnapshot, RepinKind, TraceSink, TransportPolicy, TransportSignals,
@@ -121,6 +143,12 @@ struct PathState {
     /// Epoch-clock ns of the last probe claimed for this path — rate
     /// limits probes to one per interval per path.
     last_probe_ns: AtomicU64,
+    /// Consecutive transport failures (timeout/integrity/conn) with
+    /// no intervening success — the circuit breaker's trip counter.
+    consec_fails: AtomicU64,
+    /// Breaker state: `true` = open, slots routed off this path until
+    /// a probe succeeds.  Inert unless `breaker_threshold` > 0.
+    broken: AtomicBool,
     /// `pipeline.path<i>.bytes` / `pipeline.path<i>.fetch_ns`:
     /// winner-only, so per-path sums merge into `pipeline.bytes`.
     bytes: Arc<Counter>,
@@ -161,8 +189,11 @@ pub struct TransportScheduler {
     max_shard_bytes: AtomicU64,
     /// How long a path may stay sample-quiet before a first-attempt
     /// fetch is redirected onto it as a probe (zero = probing off;
-    /// only active while re-pinning is on).
+    /// active while re-pinning or the circuit breaker is on).
     probe_interval: Duration,
+    /// Consecutive gray failures that trip a path's breaker open
+    /// (0 = breaker off, routing byte-identical).
+    breaker_threshold: u64,
     /// The re-pin decision rule (`transport_policy` knob; the analytic
     /// goodput+latency rule by default).  The scheduler owns all gating
     /// and applies the returned moves; the policy is pure.
@@ -174,6 +205,10 @@ pub struct TransportScheduler {
     probes: Arc<Counter>,
     hedge_bytes: Arc<Counter>,
     policy_decisions: Arc<Counter>,
+    /// Number of currently-open path breakers (gauge) and total
+    /// open transitions (counter).
+    breaker_open: Arc<Gauge>,
+    breaker_trips: Arc<Counter>,
 }
 
 impl TransportScheduler {
@@ -209,6 +244,8 @@ impl TransportScheduler {
                     rx: AtomicU64::new(0),
                     last_sample_ns: AtomicU64::new(0),
                     last_probe_ns: AtomicU64::new(0),
+                    consec_fails: AtomicU64::new(0),
+                    broken: AtomicBool::new(false),
                     bytes: registry.counter(&names::path_bytes(p)),
                     fetch_ns: registry.histogram(&names::path_fetch_ns(p)),
                 }
@@ -234,6 +271,7 @@ impl TransportScheduler {
             hedge_committed: AtomicU64::new(0),
             max_shard_bytes: AtomicU64::new(0),
             probe_interval: Duration::from_millis(cfg.probe_interval_ms),
+            breaker_threshold: cfg.breaker_threshold,
             // Config validation rejects unknown names before a client
             // is built; the fallback keeps construction infallible.
             policy: policy::transport_policy(&cfg.transport_policy)
@@ -244,6 +282,9 @@ impl TransportScheduler {
             probes: registry.counter(names::PIPELINE_PROBES),
             hedge_bytes: registry.counter(names::PIPELINE_HEDGE_BYTES),
             policy_decisions: registry.counter(names::PIPELINE_POLICY_DECISIONS),
+            breaker_open: registry.gauge(names::PIPELINE_BREAKER_OPEN),
+            breaker_trips: registry
+                .counter(names::PIPELINE_BREAKER_TRIPS),
         }
     }
 
@@ -287,27 +328,38 @@ impl TransportScheduler {
     /// (at most one per interval per path, elected by CAS).  Without
     /// probes a fully-evacuated path would never produce another
     /// sample, so its estimate — and the slots that fled it — could
-    /// never recover.  Only active while re-pinning is on: with the
-    /// scheduler in static-pinning mode, routing must stay
-    /// byte-identical to the static map.
+    /// never recover.  Only active while re-pinning or the circuit
+    /// breaker is on: with the scheduler in static-pinning mode,
+    /// routing must stay byte-identical to the static map.  An
+    /// **open-breaker** path doubles as a probe target even though
+    /// the slot map still points at it (its traffic is diverted, so
+    /// it is effectively drained): that probe is the breaker's
+    /// half-open test.  With re-pinning off, *only* open paths are
+    /// probed.
     fn probe_target(&self) -> Option<usize> {
         let interval_ns = self.probe_interval.as_nanos() as u64;
+        let breaker = self.breaker_threshold > 0;
         if interval_ns == 0
-            || self.repin_threshold_pct == 0
+            || (self.repin_threshold_pct == 0 && !breaker)
             || self.paths.len() < 2
         {
             return None;
         }
         let now_ns = self.started.elapsed().as_nanos() as u64;
         for (i, p) in self.paths.iter().enumerate() {
+            let open = breaker && p.broken.load(Ordering::Relaxed);
+            if self.repin_threshold_pct == 0 && !open {
+                continue; // static pinning: probe open paths only
+            }
             let last = p.last_sample_ns.load(Ordering::Relaxed);
             if now_ns.saturating_sub(last) < interval_ns {
                 continue; // fresh sample: nothing to probe
             }
-            if self
-                .slots
-                .iter()
-                .any(|s| s.load(Ordering::Relaxed) == i)
+            if !open
+                && self
+                    .slots
+                    .iter()
+                    .any(|s| s.load(Ordering::Relaxed) == i)
             {
                 continue; // hosts slots: natural traffic samples it
             }
@@ -343,6 +395,45 @@ impl TransportScheduler {
             }
         }
         best
+    }
+
+    /// Whether `path`'s circuit breaker is currently open (for tests
+    /// and diagnostics).
+    pub fn breaker_is_open(&self, path: usize) -> bool {
+        self.breaker_threshold > 0
+            && self
+                .paths
+                .get(path)
+                .is_some_and(|p| p.broken.load(Ordering::Relaxed))
+    }
+
+    /// Breaker diversion: an attempt bound for an open path goes to
+    /// the best *non-open* path instead.  The slot map itself never
+    /// moves — when the breaker re-closes, traffic streams back to
+    /// the pinned path with no migration pass.  When every path is
+    /// open the original stands (failing fast on the pinned path
+    /// beats deadlocking on "nowhere to route").
+    fn divert(&self, path: usize) -> usize {
+        if self.breaker_threshold == 0 {
+            return path;
+        }
+        let Some(p) = self.paths.get(path) else { return path };
+        if !p.broken.load(Ordering::Relaxed) {
+            return path;
+        }
+        let mut best = None;
+        let mut best_g = f64::MIN;
+        for (i, q) in self.paths.iter().enumerate() {
+            if q.broken.load(Ordering::Relaxed) {
+                continue;
+            }
+            let g = q.goodput_est();
+            if g > best_g {
+                best_g = g;
+                best = Some(i);
+            }
+        }
+        best.unwrap_or(path)
     }
 
     /// Amortised re-pin pass: at most once per `repin_interval`, move
@@ -481,15 +572,19 @@ impl TransportScheduler {
 impl Transport for TransportScheduler {
     fn route(&self, conn: usize) -> usize {
         match self.probe_target() {
+            // A probe is never diverted: probing an open path is the
+            // breaker's half-open test.
             Some(probe) => probe,
-            None => self.slot_path(conn),
+            None => self.divert(self.slot_path(conn)),
         }
     }
 
     fn route_retry(&self, conn: usize) -> usize {
         // Never probe a retry: it is the shard's last attempt, and a
-        // quiet path may be quiet because it is dead.
-        self.slot_path(conn)
+        // quiet path may be quiet because it is dead.  Diversion
+        // still applies — a retry sent to an open path would eat
+        // another deadline for nothing.
+        self.divert(self.slot_path(conn))
     }
 
     fn signals(&self) -> Option<TransportSignals> {
@@ -554,6 +649,17 @@ impl Transport for TransportScheduler {
         // Every completion is an estimator sample — losers and hedges
         // measured real path behaviour too.
         self.observe(ctx.path, bytes, latency);
+        // Any success is evidence the path moves frames again: reset
+        // the consecutive-failure count and re-close the breaker (a
+        // half-open probe succeeding lands here).
+        if self.breaker_threshold > 0 {
+            if let Some(p) = self.paths.get(ctx.path) {
+                p.consec_fails.store(0, Ordering::Relaxed);
+                if p.broken.swap(false, Ordering::Relaxed) {
+                    self.breaker_open.add(-1);
+                }
+            }
+        }
         if ctx.hedge {
             self.hedge_bytes.add(bytes);
         }
@@ -567,8 +673,26 @@ impl Transport for TransportScheduler {
         self.maybe_repin();
     }
 
-    fn on_fetch_error(&self, ctx: ShardCtx) {
+    fn on_fetch_error(&self, ctx: ShardCtx, err: &Error) {
         let Some(p) = self.paths.get(ctx.path) else { return };
+        // Transport-level failures (a deadline expiring, a corrupted
+        // frame, a connection dying under us) feed the path's circuit
+        // breaker; backpressure and fatal errors do not — a planner
+        // `Busy` or a config error says nothing about the wire.
+        if self.breaker_threshold > 0
+            && (err.is_timeout()
+                || err.is_integrity()
+                || matches!(err, Error::Io(_)))
+        {
+            let fails =
+                p.consec_fails.fetch_add(1, Ordering::Relaxed) + 1;
+            if fails >= self.breaker_threshold
+                && !p.broken.swap(true, Ordering::Relaxed)
+            {
+                self.breaker_trips.inc();
+                self.breaker_open.add(1);
+            }
+        }
         // Multiplicative decay: a fail-stop front end produces only
         // errors, which the sample-driven EWMA would never see — its
         // estimate would stay frozen at a healthy value, keeping it
@@ -772,7 +896,7 @@ mod tests {
         );
         // …while path 0 only errors.
         for _ in 0..6 {
-            s.on_fetch_error(ctx(0, 0, false));
+            s.on_fetch_error(ctx(0, 0, false), &Error::other("dead"));
         }
         assert!(
             s.goodput_estimate(0) < s.goodput_estimate(1) * 0.2,
@@ -915,6 +1039,107 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         assert_eq!(s.route(0), 0);
         assert_eq!(reg.counter(names::PIPELINE_PROBES).get(), 0);
+    }
+
+    #[test]
+    fn breaker_trips_on_consecutive_gray_failures_and_diverts() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000, 1_000_000]);
+        let mut cfg = sched_cfg(0, 0, 0);
+        cfg.breaker_threshold = 3;
+        cfg.probe_interval_ms = 60_000; // keep probes out of this test
+        let s = TransportScheduler::new(&cfg, 2, &net, 2, &reg);
+        // Non-gray errors never count toward the breaker.
+        for _ in 0..10 {
+            s.on_fetch_error(
+                ctx(0, 0, false),
+                &Error::Busy("queue full".into()),
+            );
+        }
+        assert!(!s.breaker_is_open(0));
+        // Two timeouts: still below threshold …
+        let to = Error::Timeout("read deadline".into());
+        s.on_fetch_error(ctx(0, 0, false), &to);
+        s.on_fetch_error(ctx(0, 0, false), &to);
+        assert!(!s.breaker_is_open(0));
+        assert_eq!(s.route(0), 0);
+        // … a success resets the count …
+        s.on_fetch(ctx(0, 0, false), 1000, Duration::from_millis(5), true);
+        s.on_fetch_error(ctx(0, 0, false), &to);
+        s.on_fetch_error(ctx(0, 0, false), &to);
+        assert!(!s.breaker_is_open(0), "reset must clear the count");
+        // … and a third consecutive gray failure trips it open.
+        s.on_fetch_error(
+            ctx(0, 0, false),
+            &Error::Integrity("fnv mismatch".into()),
+        );
+        assert!(s.breaker_is_open(0));
+        assert_eq!(reg.counter(names::PIPELINE_BREAKER_TRIPS).get(), 1);
+        assert_eq!(reg.gauge(names::PIPELINE_BREAKER_OPEN).get(), 1);
+        // Slot 0 (pinned to the open path) diverts; slot 1 stays.
+        assert_eq!(s.route(0), 1, "open path must divert");
+        assert_eq!(s.route_retry(0), 1, "retries divert too");
+        assert_eq!(s.route(1), 1);
+        assert_eq!(s.slot_path(0), 0, "the slot map itself never moves");
+        // Tripping again while already open is not a new trip.
+        s.on_fetch_error(ctx(0, 0, false), &to);
+        assert_eq!(reg.counter(names::PIPELINE_BREAKER_TRIPS).get(), 1);
+        // Both paths open: the original path stands (fail fast, never
+        // deadlock on "nowhere to route").
+        for _ in 0..3 {
+            s.on_fetch_error(ctx(1, 1, false), &to);
+        }
+        assert_eq!(reg.gauge(names::PIPELINE_BREAKER_OPEN).get(), 2);
+        assert_eq!(s.route(0), 0);
+        assert_eq!(s.route(1), 1);
+    }
+
+    #[test]
+    fn breaker_closes_via_half_open_probe() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000, 1_000_000]);
+        let mut cfg = sched_cfg(0, 0, 0);
+        cfg.breaker_threshold = 2;
+        cfg.probe_interval_ms = 5;
+        let s = TransportScheduler::new(&cfg, 2, &net, 2, &reg);
+        let to = Error::Timeout("read deadline".into());
+        s.on_fetch_error(ctx(0, 0, false), &to);
+        s.on_fetch_error(ctx(0, 0, false), &to);
+        assert!(s.breaker_is_open(0));
+        std::thread::sleep(Duration::from_millis(10));
+        // The sample-quiet open path is claimed as a probe — routed
+        // undiverted even though it is open: the half-open test.
+        assert_eq!(s.route(0), 0, "probe must target the open path");
+        assert_eq!(reg.counter(names::PIPELINE_PROBES).get(), 1);
+        // Rate limit: the next route in the same window diverts.
+        assert_eq!(s.route(0), 1);
+        // The probe succeeds: breaker closes, traffic streams back.
+        s.on_fetch(ctx(0, 0, false), 1000, Duration::from_millis(5), true);
+        assert!(!s.breaker_is_open(0));
+        assert_eq!(reg.gauge(names::PIPELINE_BREAKER_OPEN).get(), 0);
+        assert_eq!(s.route(0), 0, "closed breaker restores the pin");
+        assert_eq!(reg.counter(names::PIPELINE_BREAKER_TRIPS).get(), 1);
+    }
+
+    #[test]
+    fn breaker_off_is_routing_inert() {
+        let reg = Registry::new();
+        let net = net(&[1_000_000, 1_000_000]);
+        let s = TransportScheduler::new(
+            &sched_cfg(0, 0, 0), // breaker_threshold defaults to 0
+            2,
+            &net,
+            2,
+            &reg,
+        );
+        let to = Error::Timeout("read deadline".into());
+        for _ in 0..50 {
+            s.on_fetch_error(ctx(0, 0, false), &to);
+        }
+        assert!(!s.breaker_is_open(0));
+        assert_eq!(s.route(0), 0, "no breaker: static pin holds");
+        assert_eq!(reg.counter(names::PIPELINE_BREAKER_TRIPS).get(), 0);
+        assert_eq!(reg.gauge(names::PIPELINE_BREAKER_OPEN).get(), 0);
     }
 
     #[test]

@@ -47,6 +47,14 @@
 //!   the goodput-aware slot→path re-pinner and hedged shard fetches
 //!   ([`crate::client::TransportScheduler`]).  Both default off: the
 //!   default config reproduces static pinning byte-identically.
+//! - gray-failure hardening (`io_deadline_ms`/`--io-deadline-ms`,
+//!   default 0 = no deadline; `frame_integrity`/`--frame-integrity`,
+//!   default off = wire-identical frames; `breaker_threshold`/
+//!   `--breaker-threshold`, default 0 = breaker off) — socket
+//!   deadlines on every client→COS connection, FNV-1a frame
+//!   checksums, and the per-path circuit breaker that stops retries
+//!   from re-landing on a flapping front end.  All default off: the
+//!   default config is byte-identical on the wire.
 //! - decision policies (`split_policy`/`--split-policy`,
 //!   `batch_policy`/`--batch-policy`,
 //!   `transport_policy`/`--transport-policy`, all default `analytic`;
@@ -127,6 +135,25 @@ pub struct HapiConfig {
     /// 0 = probing off.  Only active while `repin_threshold_pct` > 0 —
     /// in static-pinning mode routing never deviates from the map.
     pub probe_interval_ms: u64,
+
+    // --- gray-failure hardening (COS data plane) ----------------------
+    /// Per-operation I/O deadline on every client→COS socket,
+    /// milliseconds: a front end that accepts the connection and then
+    /// stalls surfaces a retryable [`crate::Error::Timeout`] instead
+    /// of hanging the fetch forever.  0 (the default) = no deadline,
+    /// byte-identical to the unbounded-blocking behaviour.
+    pub io_deadline_ms: u64,
+    /// Checksum every wire frame (FNV-1a-64 payload trailer), verified
+    /// on both ends: a corrupted frame surfaces a retryable
+    /// [`crate::Error::Integrity`] and is never consumed, so loss
+    /// trajectories stay bitwise-correct under corruption.  Off (the
+    /// default) = wire-identical frames.
+    pub frame_integrity: bool,
+    /// Per-path circuit breaker in the transport scheduler: this many
+    /// *consecutive* timeout/integrity failures trip the path open (no
+    /// new fetches routed onto it; probe fetches are the half-open
+    /// test that re-closes it).  0 (the default) = breaker off.
+    pub breaker_threshold: u64,
 
     // --- decision policies (split/batch/transport seams) --------------
     /// Named [`crate::policy::SplitPolicy`] deciding the split index:
@@ -302,6 +329,9 @@ impl Default for HapiConfig {
             hedge_factor_pct: 0,
             hedge_max_bytes: 64 << 20,
             probe_interval_ms: 500,
+            io_deadline_ms: 0,
+            frame_integrity: false,
+            breaker_threshold: 0,
             split_policy: "analytic".into(),
             batch_policy: "analytic".into(),
             transport_policy: "analytic".into(),
@@ -451,6 +481,15 @@ impl HapiConfig {
                 "probe_interval_ms" => {
                     self.probe_interval_ms = v.as_u64()?
                 }
+                "io_deadline_ms" => {
+                    self.io_deadline_ms = v.as_u64()?
+                }
+                "frame_integrity" => {
+                    self.frame_integrity = v.as_bool()?
+                }
+                "breaker_threshold" => {
+                    self.breaker_threshold = v.as_u64()?
+                }
                 "split_policy" => {
                     self.split_policy = v.as_str()?.to_string()
                 }
@@ -559,6 +598,13 @@ impl HapiConfig {
             args.parse_or("hedge-max-bytes", self.hedge_max_bytes)?;
         self.probe_interval_ms =
             args.parse_or("probe-interval-ms", self.probe_interval_ms)?;
+        self.io_deadline_ms =
+            args.parse_or("io-deadline-ms", self.io_deadline_ms)?;
+        if args.flag("frame-integrity") {
+            self.frame_integrity = true;
+        }
+        self.breaker_threshold =
+            args.parse_or("breaker-threshold", self.breaker_threshold)?;
         if let Some(v) = args.get("split-policy") {
             self.split_policy = v.to_string();
         }
@@ -866,6 +912,15 @@ impl HapiConfig {
             (
                 "probe_interval_ms",
                 Json::num(self.probe_interval_ms as f64),
+            ),
+            (
+                "io_deadline_ms",
+                Json::num(self.io_deadline_ms as f64),
+            ),
+            ("frame_integrity", Json::Bool(self.frame_integrity)),
+            (
+                "breaker_threshold",
+                Json::num(self.breaker_threshold as f64),
             ),
             ("split_policy", Json::str(self.split_policy.clone())),
             ("batch_policy", Json::str(self.batch_policy.clone())),
@@ -1241,6 +1296,36 @@ mod tests {
                 "weights `{weights}` should be rejected"
             );
         }
+    }
+
+    #[test]
+    fn gray_failure_knobs_parse_roundtrip_and_default_off() {
+        let cfg = HapiConfig::from_args(&args(&[
+            "--io-deadline-ms",
+            "250",
+            "--frame-integrity",
+            "--breaker-threshold",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.io_deadline_ms, 250);
+        assert!(cfg.frame_integrity);
+        assert_eq!(cfg.breaker_threshold, 3);
+        cfg.validate().unwrap();
+
+        // …and the knobs survive a JSON roundtrip.
+        let mut cfg2 = HapiConfig::default();
+        cfg2.merge_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.io_deadline_ms, 250);
+        assert!(cfg2.frame_integrity);
+        assert_eq!(cfg2.breaker_threshold, 3);
+
+        // Defaults: no deadline, no checksums, breaker off —
+        // byte-identical on the wire to the unhardened data plane.
+        let d = HapiConfig::default();
+        assert_eq!(d.io_deadline_ms, 0);
+        assert!(!d.frame_integrity);
+        assert_eq!(d.breaker_threshold, 0);
     }
 
     #[test]

@@ -27,6 +27,24 @@ use super::object::ObjectKey;
 
 const MAX_FRAME: u32 = 1 << 30; // 1 GiB sanity bound
 
+/// Opcode bit marking a checksummed frame (`frame_integrity` knob): the
+/// payload is followed by an 8-byte little-endian FNV-1a-64 trailer
+/// computed over the payload bytes.  The bit is clear in every defined
+/// opcode, so the frame is self-describing — a receiver needs no
+/// configuration, and the proxy simply mirrors the flag it saw on the
+/// request onto its response.
+const OP_INTEGRITY: u8 = 0x40;
+
+/// FNV-1a-64 over `bytes` — the checksum behind [`OP_INTEGRITY`].
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Get(ObjectKey),
@@ -180,22 +198,87 @@ impl Response {
     }
 }
 
+/// Gray-failure options for an outbound connection: an optional I/O
+/// deadline bounding every socket read/write (`io_deadline_ms`), and
+/// whether outgoing frames carry the FNV-1a integrity trailer
+/// (`frame_integrity`).  `Default` is the legacy behaviour — blocking
+/// forever, no trailer — and is byte-identical on the wire.
+#[derive(Clone, Copy, Default)]
+pub struct ConnOpts {
+    pub deadline: Option<std::time::Duration>,
+    pub integrity: bool,
+}
+
+impl ConnOpts {
+    /// Map the config knobs: `io_deadline_ms == 0` means no deadline.
+    pub fn from_cfg(io_deadline_ms: u64, frame_integrity: bool) -> Self {
+        ConnOpts {
+            deadline: (io_deadline_ms > 0).then(|| {
+                std::time::Duration::from_millis(io_deadline_ms)
+            }),
+            integrity: frame_integrity,
+        }
+    }
+}
+
 /// A framed, metered connection.  Used on both ends: the client charges
 /// its shaped [`Link`]; the proxy passes an unshaped link (shaping once is
 /// both sufficient and avoids double-charging the same bytes).
 pub struct CosConnection {
     stream: TcpStream,
     link: Link,
+    /// Outgoing frames carry the integrity trailer (client side,
+    /// `frame_integrity` knob).
+    integrity: bool,
+    /// Server side: the peer sent a checksummed request, so responses
+    /// are checksummed too (the flag is mirrored, never configured).
+    reply_integrity: bool,
+    /// Chaos hook ([`CosConnection::corrupt_next_frame`]): flip a
+    /// payload byte of the next outgoing frame *after* the checksum is
+    /// computed — a gray link corrupting bytes in flight.
+    corrupt_next: bool,
 }
 
 impl CosConnection {
     pub fn new(stream: TcpStream, link: Link) -> Self {
         stream.set_nodelay(true).ok();
-        CosConnection { stream, link }
+        CosConnection {
+            stream,
+            link,
+            integrity: false,
+            reply_integrity: false,
+            corrupt_next: false,
+        }
     }
 
     pub fn connect(addr: &str, link: Link) -> Result<Self> {
-        Ok(CosConnection::new(TcpStream::connect(addr)?, link))
+        CosConnection::connect_opts(addr, link, ConnOpts::default())
+    }
+
+    /// Connect with gray-failure options.  Both socket directions get
+    /// the deadline (or are explicitly unbounded): a peer that accepts
+    /// the connection and then stalls mid-frame surfaces
+    /// [`Error::Timeout`] instead of hanging `read_exact` forever.
+    /// `hapi-analyze`'s net-timeouts pass keeps every future
+    /// `TcpStream::connect` site honest about setting both.
+    pub fn connect_opts(
+        addr: &str,
+        link: Link,
+        opts: ConnOpts,
+    ) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(opts.deadline)?;
+        stream.set_write_timeout(opts.deadline)?;
+        let mut conn = CosConnection::new(stream, link);
+        conn.integrity = opts.integrity;
+        Ok(conn)
+    }
+
+    /// Corrupt the next outgoing frame's payload (one byte XORed after
+    /// the checksum is computed).  Frames with an empty payload pass
+    /// through untouched and keep the hook armed.
+    pub fn corrupt_next_frame(&mut self) {
+        self.corrupt_next = true;
     }
 
     /// Run one exchange on a pooled connection `slot` (lazily connected
@@ -217,10 +300,31 @@ impl CosConnection {
         link: &Link,
         f: impl FnOnce(&mut CosConnection) -> Result<T>,
     ) -> Result<T> {
+        CosConnection::with_pooled_opts(
+            slot,
+            path,
+            addr,
+            link,
+            ConnOpts::default(),
+            f,
+        )
+    }
+
+    /// [`CosConnection::with_pooled`] with gray-failure options; `opts`
+    /// only matters when the slot reconnects (an existing pooled
+    /// connection keeps the deadline it was opened with).
+    pub fn with_pooled_opts<T>(
+        slot: &std::sync::Mutex<Option<(usize, CosConnection)>>,
+        path: usize,
+        addr: &str,
+        link: &Link,
+        opts: ConnOpts,
+        f: impl FnOnce(&mut CosConnection) -> Result<T>,
+    ) -> Result<T> {
         let mut guard = slot.lock().unwrap();
         let mut conn = match guard.take() {
             Some((p, c)) if p == path => c,
-            _ => CosConnection::connect(addr, link.clone())?,
+            _ => CosConnection::connect_opts(addr, link.clone(), opts)?,
         };
         let result = f(&mut conn);
         if result.is_ok() {
@@ -234,13 +338,27 @@ impl CosConnection {
     }
 
     fn write_frame(&mut self, op: u8, payload: &[u8]) -> Result<()> {
-        let total = 5 + payload.len() as u64;
-        self.link.send(total);
+        let with_sum = self.integrity || self.reply_integrity;
+        let trailer = if with_sum { 8 } else { 0 };
+        self.link.send(5 + payload.len() as u64 + trailer);
         let mut head = [0u8; 5];
-        head[0] = op;
+        head[0] = if with_sum { op | OP_INTEGRITY } else { op };
         head[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
         self.stream.write_all(&head)?;
-        self.stream.write_all(payload)?;
+        // The chaos hook corrupts what goes on the wire, not what the
+        // checksum covers — that is exactly the fault the trailer exists
+        // to catch.
+        if self.corrupt_next && !payload.is_empty() {
+            self.corrupt_next = false;
+            let mut p = payload.to_vec();
+            p[payload.len() / 2] ^= 0x5a;
+            self.stream.write_all(&p)?;
+        } else {
+            self.stream.write_all(payload)?;
+        }
+        if with_sum {
+            self.stream.write_all(&fnv1a64(payload).to_le_bytes())?;
+        }
         Ok(())
     }
 
@@ -249,12 +367,39 @@ impl CosConnection {
         self.stream.read_exact(&mut head)?;
         let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
         if len > MAX_FRAME {
+            // The 5 header bytes *were* consumed off the wire: charge
+            // them before bailing so per-path byte conservation holds
+            // under malformed input.  (The happy path keeps its single
+            // `recv` call — the link charges per-frame latency per
+            // call, so splitting it would double the propagation
+            // delay.)
+            self.link.recv(5);
             return Err(Error::Protocol(format!("frame too large: {len}")));
         }
+        let flagged = head[0] & OP_INTEGRITY != 0;
+        let op = head[0] & !OP_INTEGRITY;
         let mut payload = vec![0u8; len as usize];
         self.stream.read_exact(&mut payload)?;
-        self.link.recv(5 + len as u64);
-        Ok((head[0], payload))
+        if !flagged {
+            self.link.recv(5 + len as u64);
+            return Ok((op, payload));
+        }
+        let mut sum = [0u8; 8];
+        self.stream.read_exact(&mut sum)?;
+        self.link.recv(5 + len as u64 + 8);
+        // Mirror the flag: a server that saw a checksummed request
+        // checksums its response.
+        self.reply_integrity = true;
+        let want = u64::from_le_bytes(sum);
+        let got = fnv1a64(&payload);
+        if got != want {
+            // The corrupted payload is dropped, never consumed: the
+            // caller retries and loss trajectories stay bitwise-exact.
+            return Err(Error::Integrity(format!(
+                "op {op} len {len}: fnv {got:#018x} != {want:#018x}"
+            )));
+        }
+        Ok((op, payload))
     }
 
     // --- client side -------------------------------------------------
@@ -388,6 +533,218 @@ mod tests {
         assert!(Request::decode(OP_PUT, vec![5, 0, b'a']).is_err());
         assert!(Request::decode(OP_POST, vec![10, 0, 0, 0, b'{']).is_err());
         assert!(Response::decode(77, vec![]).is_err());
+    }
+
+    /// Echo server used by the gray-failure tests: optionally corrupts
+    /// the wire bytes of every `mangle`-th response.
+    fn echo_server(
+        listener: std::net::TcpListener,
+        mangle: Option<usize>,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = CosConnection::new(s, Link::unshaped());
+            let mut served = 0usize;
+            while let Ok(Some(req)) = conn.read_request() {
+                let resp = match req {
+                    Request::Get(k) => {
+                        Response::Ok(k.as_str().as_bytes().to_vec())
+                    }
+                    Request::Put(..) => Response::Ok(vec![]),
+                    Request::Post(h, b) => Response::OkPost(h, b),
+                    Request::Stat => Response::Ok(b"{}".to_vec()),
+                };
+                if mangle.is_some_and(|m| served % m == 0) {
+                    conn.corrupt_next_frame();
+                }
+                served += 1;
+                if conn.write_response(&resp).is_err() {
+                    return;
+                }
+            }
+        })
+    }
+
+    /// Satellite pin: on the `frame too large` error path the 5
+    /// already-consumed header bytes are charged to the link, so byte
+    /// conservation holds under malformed input.
+    #[test]
+    fn oversized_frame_charges_header_bytes() {
+        use std::io::Write;
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut head = [0u8; 5];
+            head[0] = OP_OK;
+            head[1..5]
+                .copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+            s.write_all(&head).unwrap();
+            // Keep the socket open until the client has judged the
+            // header; the error must come from the length check, not
+            // a racing EOF.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        });
+        let link = Link::unshaped();
+        let mut conn =
+            CosConnection::connect(&addr.to_string(), link.clone())
+                .unwrap();
+        let err = conn.get(&"x".into()).unwrap_err();
+        assert!(
+            err.to_string().contains("frame too large"),
+            "unexpected error: {err}"
+        );
+        // 5 header bytes received and charged; nothing else was read.
+        assert_eq!(link.stats().rx_bytes(), 5);
+        server.join().unwrap();
+    }
+
+    /// `frame_integrity` roundtrip: the client flags its requests, the
+    /// server mirrors the flag onto responses, and both directions pay
+    /// exactly 8 extra wire bytes per frame.
+    #[test]
+    fn integrity_roundtrip_charges_trailer_bytes() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = echo_server(listener, None);
+        let link = Link::unshaped();
+        let mut conn = CosConnection::connect_opts(
+            &addr.to_string(),
+            link.clone(),
+            ConnOpts { deadline: None, integrity: true },
+        )
+        .unwrap();
+        assert_eq!(conn.get(&"hello".into()).unwrap(), b"hello".to_vec());
+        // GET "hello": 5-byte head + 5-byte payload + 8-byte trailer,
+        // both directions.
+        assert_eq!(link.stats().tx_bytes(), 18);
+        assert_eq!(link.stats().rx_bytes(), 18);
+        drop(conn);
+        server.join().unwrap();
+    }
+
+    /// A corrupted checksummed frame surfaces `Error::Integrity` and is
+    /// never consumed; the connection stays frame-aligned, so the retry
+    /// on the same connection succeeds.
+    #[test]
+    fn corrupted_frame_is_detected_and_never_consumed() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Corrupt every 2nd response starting with the first.
+        let server = echo_server(listener, Some(2));
+        let mut conn = CosConnection::connect_opts(
+            &addr.to_string(),
+            Link::unshaped(),
+            ConnOpts { deadline: None, integrity: true },
+        )
+        .unwrap();
+        let err = conn.get(&"payload".into()).unwrap_err();
+        assert!(err.is_integrity(), "unexpected error: {err}");
+        assert!(err.is_retryable());
+        assert_eq!(
+            conn.get(&"payload".into()).unwrap(),
+            b"payload".to_vec(),
+            "clean retry must see the true bytes"
+        );
+        drop(conn);
+        server.join().unwrap();
+    }
+
+    /// Without `frame_integrity` the same corruption is silent — the
+    /// hazard the knob exists to close.
+    #[test]
+    fn corruption_without_integrity_is_silent() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = echo_server(listener, Some(1));
+        let mut conn = CosConnection::connect(
+            &addr.to_string(),
+            Link::unshaped(),
+        )
+        .unwrap();
+        let got = conn.get(&"payload".into()).unwrap();
+        assert_ne!(got, b"payload".to_vec(), "corruption went undetected");
+        drop(conn);
+        server.join().unwrap();
+    }
+
+    /// A frame truncated at *any* offset (header, payload or trailer)
+    /// surfaces a clean error — never a garbled payload.
+    #[test]
+    fn truncated_frame_errors_at_every_offset() {
+        use std::io::Write;
+        use std::net::TcpListener;
+        // A full checksummed OK frame for payload "abc".
+        let payload = b"abc";
+        let mut full = Vec::new();
+        full.push(OP_OK | OP_INTEGRITY);
+        full.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        full.extend_from_slice(payload);
+        full.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+        for cut in 0..full.len() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let prefix = full[..cut].to_vec();
+            let server = std::thread::spawn(move || {
+                let (mut s, _) = listener.accept().unwrap();
+                // Drain the request, write a partial response, drop.
+                let mut conn = CosConnection::new(
+                    s.try_clone().unwrap(),
+                    Link::unshaped(),
+                );
+                conn.read_request().unwrap();
+                s.write_all(&prefix).unwrap();
+            });
+            let mut conn = CosConnection::connect(
+                &addr.to_string(),
+                Link::unshaped(),
+            )
+            .unwrap();
+            let err = conn.get(&"abc".into()).unwrap_err();
+            assert!(
+                err.is_retryable(),
+                "cut at {cut}: truncation must be retryable, got {err}"
+            );
+            server.join().unwrap();
+        }
+    }
+
+    /// `io_deadline_ms`: a peer that accepts and then stalls surfaces
+    /// `Error::Timeout` instead of hanging the read forever.
+    #[test]
+    fn deadline_times_out_on_stalled_peer() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+        let server = std::thread::spawn(move || {
+            let (_s, _) = listener.accept().unwrap();
+            // Hold the connection open, never respond.
+            let _ = done_rx.recv();
+        });
+        let mut conn = CosConnection::connect_opts(
+            &addr.to_string(),
+            Link::unshaped(),
+            ConnOpts {
+                deadline: Some(std::time::Duration::from_millis(50)),
+                integrity: false,
+            },
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let err = conn.get(&"k".into()).unwrap_err();
+        assert!(err.is_timeout(), "unexpected error: {err}");
+        assert!(err.is_retryable());
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "deadline must bound the stall"
+        );
+        drop(done_tx);
+        server.join().unwrap();
     }
 
     #[test]

@@ -12,9 +12,10 @@
 //!   the design the paper ships.
 
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::exec::Pool;
@@ -101,6 +102,51 @@ struct Shared {
     /// Clones of every accepted stream, so [`Proxy::fail`] can
     /// fail-stop connections that are blocked inside a read.
     conns: Mutex<Vec<TcpStream>>,
+    /// Proxy-wide shutdown flag (shared with the accept loop) so
+    /// parked gray-stalled connection threads can exit on stop.
+    shutdown: Arc<AtomicBool>,
+    /// Gray-stall switch ([`Proxy::stall`]): while set, connection
+    /// threads park after reading a request and answer nothing.
+    /// Unlike a crash, nothing errors and nothing is severed — the
+    /// client observes a silent hang, bounded only by its own
+    /// `io_deadline_ms`.  This is the gray failure the paper's
+    /// deadline/breaker machinery exists for.
+    stalled: AtomicBool,
+    /// Percentage (0–100) of response frames whose payload gets one
+    /// wire byte flipped *after* checksumming ([`Proxy::set_corrupt`])
+    /// — detectable iff the client enabled `frame_integrity`.
+    corrupt_pct: AtomicU64,
+    /// Deterministic draw counter for `corrupt_pct` (same seed, same
+    /// corrupted-frame pattern, every run).
+    corrupt_seq: AtomicU64,
+    /// Flap period in ns (0 = not flapping): starting from
+    /// `flap_started_ns` the front end alternates `period` down /
+    /// `period` up — the *first* window is down, so a flap event has
+    /// a deterministic immediate effect.
+    flap_period_ns: AtomicU64,
+    /// Epoch-clock ns (on `started`) when [`Proxy::flap`] was called.
+    flap_started_ns: AtomicU64,
+    /// Time base for the flap phase clock.
+    started: Instant,
+}
+
+impl Shared {
+    /// Flapping and currently in a down window?
+    fn flap_down(&self) -> bool {
+        let period = self.flap_period_ns.load(Ordering::Relaxed);
+        if period == 0 {
+            return false;
+        }
+        let start = self.flap_started_ns.load(Ordering::Relaxed);
+        let now = self.started.elapsed().as_nanos() as u64;
+        (now.saturating_sub(start) / period) % 2 == 0
+    }
+
+    /// Refusing service right now (crashed, or flap-down)?  Unlike a
+    /// stall this is fail-stop: requests error instead of hanging.
+    fn refusing(&self) -> bool {
+        self.crashed.load(Ordering::Relaxed) || self.flap_down()
+    }
 }
 
 impl Proxy {
@@ -136,6 +182,13 @@ impl Proxy {
             path_requests,
             crashed: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
+            shutdown: shutdown.clone(),
+            stalled: AtomicBool::new(false),
+            corrupt_pct: AtomicU64::new(0),
+            corrupt_seq: AtomicU64::new(0),
+            flap_period_ns: AtomicU64::new(0),
+            flap_started_ns: AtomicU64::new(0),
+            started: Instant::now(),
         });
 
         let sd = shutdown.clone();
@@ -149,13 +202,10 @@ impl Proxy {
                 while !sd.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            // A crashed front end refuses service: the
-                            // connection is dropped before a single
-                            // byte is served.
-                            if accept_shared
-                                .crashed
-                                .load(Ordering::Relaxed)
-                            {
+                            // A crashed (or flap-down) front end
+                            // refuses service: the connection is
+                            // dropped before a single byte is served.
+                            if accept_shared.refusing() {
                                 drop(stream);
                                 continue;
                             }
@@ -214,14 +264,64 @@ impl Proxy {
     /// Bring a [`Proxy::fail`]ed front end back: new connections are
     /// accepted and served again.  Connections killed by the crash stay
     /// dead — clients must reconnect (the pooled-connection layer does
-    /// this on its next fetch).
+    /// this on its next fetch).  Recovery clears *every* fault mode —
+    /// crash, stall, flap and frame corruption — a restarted process
+    /// starts healthy.
     pub fn recover(&self) {
         self.shared.crashed.store(false, Ordering::Relaxed);
+        self.shared.stalled.store(false, Ordering::Relaxed);
+        self.shared.corrupt_pct.store(0, Ordering::Relaxed);
+        self.shared.flap_period_ns.store(0, Ordering::Relaxed);
     }
 
     /// Whether this front end is currently failed.
     pub fn is_failed(&self) -> bool {
         self.shared.crashed.load(Ordering::Relaxed)
+    }
+
+    /// Gray-stall this front end: connections stay up and requests
+    /// are still *read*, but nothing is ever answered until
+    /// [`Proxy::unstall`].  The client side sees a silent hang — no
+    /// error, no EOF — which only an `io_deadline_ms` bounds.
+    pub fn stall(&self) {
+        self.shared.stalled.store(true, Ordering::Relaxed);
+    }
+
+    /// Clear [`Proxy::stall`]: parked connection threads resume and
+    /// answer the request they were holding.
+    pub fn unstall(&self) {
+        self.shared.stalled.store(false, Ordering::Relaxed);
+    }
+
+    /// Whether this front end is currently gray-stalled.
+    pub fn is_stalled(&self) -> bool {
+        self.shared.stalled.load(Ordering::Relaxed)
+    }
+
+    /// Corrupt `pct`% of response frames (one payload byte flipped on
+    /// the wire after checksumming, drawn deterministically).  0
+    /// clears.  Clients running with `frame_integrity` detect every
+    /// corrupted frame; without it the damage is silent.
+    pub fn set_corrupt(&self, pct: u64) {
+        self.shared
+            .corrupt_pct
+            .store(pct.min(100), Ordering::Relaxed);
+    }
+
+    /// Start flapping: alternate `period` refusing service / `period`
+    /// serving, starting (deterministically) with a down window.
+    /// Down windows behave like a crash at the request boundary — new
+    /// connections are dropped at accept, read requests are dropped
+    /// unanswered — but established connections are not severed.
+    /// Cleared by [`Proxy::recover`].
+    pub fn flap(&self, period: Duration) {
+        let now = self.shared.started.elapsed().as_nanos() as u64;
+        self.shared
+            .flap_started_ns
+            .store(now, Ordering::Relaxed);
+        self.shared
+            .flap_period_ns
+            .store((period.as_nanos() as u64).max(1), Ordering::Relaxed);
     }
 
     pub fn stop(mut self) {
@@ -249,6 +349,24 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
         let req = match conn.read_request() {
             Ok(Some(r)) => r,
             Ok(None) => return, // clean EOF
+            Err(e) if e.is_integrity() => {
+                // The client's request frame arrived corrupted.  The
+                // whole frame (trailer included) was consumed before
+                // verification, so the stream is still frame-aligned:
+                // answer with an error the client can retry on
+                // instead of tearing the connection down.
+                shared
+                    .registry
+                    .counter(names::COS_INTEGRITY_FAIL)
+                    .inc();
+                if conn
+                    .write_response(&Response::Err(e.to_string()))
+                    .is_err()
+                {
+                    return;
+                }
+                continue;
+            }
             Err(e) => {
                 crate::util::logging::debug(
                     "proxy",
@@ -257,10 +375,22 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
                 return;
             }
         };
-        // A crash that lands between the read and the dispatch still
-        // fail-stops the request: drop the connection unanswered, like
-        // a process killed mid-flight.
-        if shared.crashed.load(Ordering::Relaxed) {
+        // A gray stall parks here, *after* the read: the request's
+        // bytes are consumed but nothing is ever answered — the
+        // silent hang only a client-side deadline bounds.  Crash /
+        // shutdown / flap-down break the park (fail-stop beats
+        // leaking a parked thread forever).
+        while shared.stalled.load(Ordering::Relaxed)
+            && !shared.shutdown.load(Ordering::Relaxed)
+            && !shared.refusing()
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // A crash (or flap-down) that lands between the read and the
+        // dispatch still fail-stops the request: drop the connection
+        // unanswered, like a process killed mid-flight.
+        if shared.refusing() || shared.shutdown.load(Ordering::Relaxed)
+        {
             return;
         }
         let _green = shared
@@ -268,6 +398,20 @@ fn serve_conn(stream: TcpStream, shared: Arc<Shared>) {
             .as_ref()
             .map(|m| m.lock().unwrap());
         let resp = handle(&shared, req);
+        let pct = shared.corrupt_pct.load(Ordering::Relaxed);
+        if pct > 0 {
+            // Deterministic per-frame draw: the Nth response frame of
+            // a run is corrupted iff its draw lands under the
+            // configured percentage — replayable chaos, like every
+            // other fault in the scenario engine.
+            let seq =
+                shared.corrupt_seq.fetch_add(1, Ordering::Relaxed);
+            if crate::util::Rng::new(seq ^ 0xc0de_f00d).below(100)
+                < pct
+            {
+                conn.corrupt_next_frame();
+            }
+        }
         if conn.write_response(&resp).is_err() {
             return;
         }
@@ -517,6 +661,155 @@ mod tests {
         let mut c3 =
             CosConnection::connect(proxy.addr(), Link::unshaped()).unwrap();
         assert_eq!(c3.get(&"k".into()).unwrap(), vec![1; 8]);
+        proxy.stop();
+    }
+
+    #[test]
+    fn stalled_proxy_hangs_until_deadline_then_serves_after_unstall() {
+        use super::super::protocol::ConnOpts;
+        let (proxy, _cluster) = start_proxy(Arc::new(NoPost));
+        let mut conn = CosConnection::connect_opts(
+            proxy.addr(),
+            Link::unshaped(),
+            ConnOpts {
+                deadline: Some(Duration::from_millis(50)),
+                integrity: false,
+            },
+        )
+        .unwrap();
+        conn.put(&"k".into(), vec![9; 8]).unwrap();
+
+        proxy.stall();
+        assert!(proxy.is_stalled());
+        // The stalled front end reads the request and answers
+        // nothing: only the client-side deadline unblocks us.
+        let t0 = std::time::Instant::now();
+        let err = conn.get(&"k".into()).unwrap_err();
+        assert!(err.is_timeout(), "unexpected error: {err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "deadline must bound the stall"
+        );
+
+        proxy.unstall();
+        // A fresh connection (the timed-out one is poisoned — the
+        // stalled response may still arrive on it) serves normally.
+        let mut c2 = CosConnection::connect(
+            proxy.addr(),
+            Link::unshaped(),
+        )
+        .unwrap();
+        assert_eq!(c2.get(&"k".into()).unwrap(), vec![9; 8]);
+        proxy.stop();
+    }
+
+    #[test]
+    fn corrupted_responses_surface_integrity_errors_then_clear() {
+        use super::super::protocol::ConnOpts;
+        let (proxy, _cluster) = start_proxy(Arc::new(NoPost));
+        let mut conn = CosConnection::connect_opts(
+            proxy.addr(),
+            Link::unshaped(),
+            ConnOpts {
+                deadline: None,
+                integrity: true,
+            },
+        )
+        .unwrap();
+        conn.put(&"k".into(), vec![3; 32]).unwrap();
+
+        proxy.set_corrupt(100);
+        let err = conn.get(&"k".into()).unwrap_err();
+        assert!(err.is_integrity(), "unexpected error: {err}");
+        assert!(err.is_retryable());
+
+        // The corrupted frame was fully consumed: the *same*
+        // connection retries cleanly once corruption clears.
+        proxy.set_corrupt(0);
+        assert_eq!(conn.get(&"k".into()).unwrap(), vec![3; 32]);
+        proxy.stop();
+    }
+
+    #[test]
+    fn corrupted_request_is_counted_and_answered_with_err() {
+        use super::super::protocol::ConnOpts;
+        let cluster = Arc::new(StorageCluster::new(3, 2));
+        let reg = Registry::new();
+        let proxy = Proxy::start(
+            cluster,
+            Arc::new(NoPost),
+            ProxyConfig::default(),
+            reg.clone(),
+        )
+        .unwrap();
+        let mut conn = CosConnection::connect_opts(
+            proxy.addr(),
+            Link::unshaped(),
+            ConnOpts {
+                deadline: None,
+                integrity: true,
+            },
+        )
+        .unwrap();
+        conn.put(&"k".into(), vec![7; 16]).unwrap();
+
+        // Corrupt our *own* next request frame: the proxy must detect
+        // it, count it, and answer an error — without dropping the
+        // connection.
+        conn.corrupt_next_frame();
+        let err = conn.get(&"k".into()).unwrap_err();
+        assert!(err.is_integrity(), "unexpected error: {err}");
+        assert_eq!(
+            reg.counter(names::COS_INTEGRITY_FAIL).get(),
+            1,
+            "proxy must count the corrupted request"
+        );
+        // Same connection, clean frame: served.
+        assert_eq!(conn.get(&"k".into()).unwrap(), vec![7; 16]);
+        proxy.stop();
+    }
+
+    #[test]
+    fn flapping_proxy_refuses_then_comes_back() {
+        let (proxy, _cluster) = start_proxy(Arc::new(NoPost));
+        let mut conn =
+            CosConnection::connect(proxy.addr(), Link::unshaped())
+                .unwrap();
+        conn.put(&"k".into(), vec![1; 8]).unwrap();
+
+        // The first flap window is *down*, deterministically: the
+        // request read right after the flap event is dropped
+        // unanswered and the connection torn down at dispatch.
+        proxy.flap(Duration::from_millis(40));
+        assert!(conn.get(&"k".into()).is_err());
+
+        // The front end alternates back up: keep reconnecting until a
+        // served window lands (bounded — the up window is as long as
+        // the down window).
+        let t0 = std::time::Instant::now();
+        let mut served = false;
+        while t0.elapsed() < Duration::from_secs(10) {
+            if let Ok(mut c) = CosConnection::connect(
+                proxy.addr(),
+                Link::unshaped(),
+            ) {
+                if c.get(&"k".into()).is_ok() {
+                    served = true;
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(served, "flapping proxy never served an up window");
+
+        // recover() clears the flap entirely: service is steady again.
+        proxy.recover();
+        let mut c2 =
+            CosConnection::connect(proxy.addr(), Link::unshaped())
+                .unwrap();
+        for _ in 0..5 {
+            assert_eq!(c2.get(&"k".into()).unwrap(), vec![1; 8]);
+        }
         proxy.stop();
     }
 

@@ -37,6 +37,16 @@ pub enum Error {
         queued: usize,
         cap: usize,
     },
+    /// An I/O deadline (`io_deadline_ms`) expired mid-exchange: the
+    /// peer accepted the connection but stopped making progress — the
+    /// gray-failure analogue of a crash.  Retryable: the slot drops
+    /// its connection and the fetch re-lands elsewhere.
+    Timeout(String),
+    /// Frame checksum mismatch (`frame_integrity`): the payload was
+    /// corrupted in flight and was **not** consumed.  Retryable: the
+    /// same bytes re-fetched are overwhelmingly likely to arrive
+    /// clean.
+    Integrity(String),
     Protocol(String),
     Cos(String),
     /// Batch-adaptation optimisation infeasible even at minimum batch.
@@ -65,6 +75,8 @@ impl fmt::Display for Error {
                 "planner busy: admission queue full \
                  ({queued} queued, cap {cap}); retry later"
             ),
+            Error::Timeout(m) => write!(f, "i/o timeout: {m}"),
+            Error::Integrity(m) => write!(f, "frame integrity: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
             Error::Cos(m) => write!(f, "object store: {m}"),
             Error::Infeasible(m) => {
@@ -86,7 +98,16 @@ impl std::error::Error for Error {
 
 impl From<io::Error> for Error {
     fn from(e: io::Error) -> Self {
-        Error::Io(e)
+        // Socket deadlines surface as TimedOut (or WouldBlock on some
+        // platforms' `set_read_timeout`); classify them as the gray
+        // timeout, not a generic I/O fault, so retry/breaker logic can
+        // tell a stalled peer from a severed one.
+        match e.kind() {
+            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => {
+                Error::Timeout(e.to_string())
+            }
+            _ => Error::Io(e),
+        }
     }
 }
 
@@ -127,6 +148,52 @@ impl Error {
             _ => false,
         }
     }
+
+    /// True when the error is an expired I/O deadline — including
+    /// timeouts surfaced as a wire-level error string (the
+    /// `i/o timeout` marker is stable; see [`Error::Timeout`]'s
+    /// Display form).
+    pub fn is_timeout(&self) -> bool {
+        match self {
+            Error::Timeout(_) => true,
+            Error::Cos(m) | Error::Other(m) => m.contains("i/o timeout"),
+            _ => false,
+        }
+    }
+
+    /// True when the error is a frame checksum mismatch — including
+    /// mismatches the proxy detected on a request and surfaced as a
+    /// wire-level error string (the `frame integrity` marker is
+    /// stable; see [`Error::Integrity`]'s Display form).
+    pub fn is_integrity(&self) -> bool {
+        match self {
+            Error::Integrity(_) => true,
+            Error::Cos(m) | Error::Other(m) => {
+                m.contains("frame integrity")
+            }
+            _ => false,
+        }
+    }
+
+    /// The retryable-vs-fatal split the sharded engine's
+    /// retry-on-another-connection and the client backoff loop unify
+    /// on.  Transport-domain faults (severed/stalled/corrupted
+    /// connections, busy planners, garbled frames, server-side error
+    /// strings) are retryable: a fresh attempt on a fresh connection
+    /// can legitimately succeed.  Resource and logic faults (device
+    /// OOM, infeasible batch plans, bad config/artifacts, compute
+    /// errors) are fatal: retrying re-runs the same deterministic
+    /// failure.
+    pub fn is_retryable(&self) -> bool {
+        !matches!(
+            self,
+            Error::Oom { .. }
+                | Error::Infeasible(_)
+                | Error::Config(_)
+                | Error::Artifact(_)
+                | Error::Xla(_)
+        )
+    }
 }
 
 #[cfg(test)]
@@ -166,5 +233,55 @@ mod tests {
             io::Error::new(io::ErrorKind::NotFound, "gone").into();
         assert!(std::error::Error::source(&e).is_some());
         assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn timeout_display_is_stable() {
+        let e = Error::Timeout("read deadline expired".into());
+        assert_eq!(e.to_string(), "i/o timeout: read deadline expired");
+        assert!(e.is_timeout());
+        assert!(Error::Cos(e.to_string()).is_timeout());
+        assert!(!Error::Config("x".into()).is_timeout());
+        // Socket-level deadline kinds classify as Timeout on conversion.
+        let t: Error =
+            io::Error::new(io::ErrorKind::TimedOut, "slow").into();
+        assert!(t.is_timeout());
+        let w: Error =
+            io::Error::new(io::ErrorKind::WouldBlock, "slow").into();
+        assert!(w.is_timeout());
+    }
+
+    #[test]
+    fn integrity_display_is_stable() {
+        let e = Error::Integrity("checksum mismatch".into());
+        assert_eq!(e.to_string(), "frame integrity: checksum mismatch");
+        assert!(e.is_integrity());
+        assert!(Error::Cos(e.to_string()).is_integrity());
+        assert!(!Error::Protocol("x".into()).is_integrity());
+    }
+
+    #[test]
+    fn retryable_vs_fatal_split() {
+        for retryable in [
+            Error::Timeout("t".into()),
+            Error::Integrity("i".into()),
+            Error::Busy { queued: 1, cap: 1 },
+            Error::Io(io::Error::new(io::ErrorKind::BrokenPipe, "x")),
+            Error::Cos("server said no".into()),
+            Error::Protocol("garbled".into()),
+            Error::Json("garbled".into()),
+            Error::Other("flaky".into()),
+        ] {
+            assert!(retryable.is_retryable(), "{retryable}");
+        }
+        for fatal in [
+            Error::Oom { needed: 2, free: 1, capacity: 1 },
+            Error::Infeasible("min batch".into()),
+            Error::Config("bad knob".into()),
+            Error::Artifact("missing".into()),
+            Error::Xla("compile".into()),
+        ] {
+            assert!(!fatal.is_retryable(), "{fatal}");
+        }
     }
 }

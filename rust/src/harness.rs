@@ -156,6 +156,31 @@ impl Testbed {
         self.proxies[path].is_failed()
     }
 
+    /// Gray-stall the front end serving `path`: requests are read but
+    /// never answered until [`Testbed::unstall_proxy`] — see
+    /// [`Proxy::stall`].
+    pub fn stall_proxy(&self, path: usize) {
+        self.proxies[path].stall();
+    }
+
+    /// Clear a gray stall on `path`'s front end.
+    pub fn unstall_proxy(&self, path: usize) {
+        self.proxies[path].unstall();
+    }
+
+    /// Corrupt `pct`% of `path`'s response frames on the wire (0
+    /// clears) — see [`Proxy::set_corrupt`].
+    pub fn set_corrupt_frames(&self, path: usize, pct: u64) {
+        self.proxies[path].set_corrupt(pct);
+    }
+
+    /// Flap `path`'s front end: alternate `period` down / `period` up
+    /// starting with a down window; cleared by
+    /// [`Testbed::restart_proxy`] — see [`Proxy::flap`].
+    pub fn flap_proxy(&self, path: usize, period: std::time::Duration) {
+        self.proxies[path].flap(period);
+    }
+
     pub fn app(&self, model: &str) -> Result<AppProfile> {
         Ok(AppProfile::new(self.models.get(model)?, self.cfg.scale))
     }

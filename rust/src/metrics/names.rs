@@ -66,6 +66,10 @@ pub const PIPELINE_REPINS_BACK: &str = "pipeline.repins_back";
 pub const PIPELINE_PROBES: &str = "pipeline.probes";
 pub const PIPELINE_POLICY_DECISIONS: &str = "pipeline.policy_decisions";
 pub const PIPELINE_ADMIT_RETRIES: &str = "pipeline.admit_retries";
+pub const PIPELINE_TIMEOUTS: &str = "pipeline.timeouts";
+pub const PIPELINE_INTEGRITY_FAIL: &str = "pipeline.integrity_fail";
+pub const PIPELINE_BREAKER_OPEN: &str = "pipeline.breaker_open";
+pub const PIPELINE_BREAKER_TRIPS: &str = "pipeline.breaker_trips";
 
 // ----------------------------------------------------------------- cos.*
 // Storage tier: object store + proxy front ends (cos/).
@@ -76,6 +80,7 @@ pub const COS_PUT: &str = "cos.put";
 pub const COS_PUT_BYTES: &str = "cos.put_bytes";
 pub const COS_POST: &str = "cos.post";
 pub const COS_POST_LATENCY_NS: &str = "cos.post_latency_ns";
+pub const COS_INTEGRITY_FAIL: &str = "cos.integrity_fail";
 
 // ------------------------------------------------------- per-entity families
 

@@ -16,6 +16,16 @@
 //! - **`CrashProxy` / `RestartProxy`** — fail-stop one COS front end
 //!   and bring it back on the same address (exercises connection-error
 //!   retry routing and slot evacuation).
+//! - **`StallProxy` / `UnstallProxy`** — gray-stall one front end:
+//!   requests are read but never answered, no error, no EOF
+//!   (exercises `io_deadline_ms` — without deadlines this is a hang).
+//! - **`CorruptFrames`** — flip one wire byte in a percentage of a
+//!   front end's response frames (exercises `frame_integrity`
+//!   checksums and the corrupted-frame retry; pct 0 clears).
+//! - **`FlapProxy`** — alternate refuse/serve windows on one front
+//!   end, starting down (exercises the per-path circuit breaker:
+//!   consecutive gray failures trip it open, a half-open probe
+//!   re-closes it).  Cleared by `RestartProxy`.
 //!
 //! Scripts come from three places: [`ScenarioScript::random`] derives
 //! one from a `u64` seed via [`crate::util::rng::Rng`] (the fuzzer's
@@ -27,7 +37,7 @@
 //! while each tenant sleeps to its arrival, builds a private-registry
 //! [`HapiClient`], and trains one epoch.  Running the same script with
 //! `chaos = false` yields the *reference* run — no events, no arrival
-//! stagger, same data and config — and [`verify`] checks the three
+//! stagger, same data and config — and [`verify`] checks the four
 //! global invariants between the pair:
 //!
 //! 1. **Bitwise loss identity** — chaos may move bytes and time, never
@@ -35,12 +45,14 @@
 //!    bit for bit.
 //! 2. **No lost work** — every tenant either completes all
 //!    `samples / train_batch` iterations or its failure is explained
-//!    by a scripted proxy crash.
+//!    by a scripted fail-stop (proxy crash or flap).
 //! 3. **Metrics conservation** — per tenant,
 //!    `Σ pipeline.conn*.bytes == pipeline.bytes == Σ pipeline.path*.bytes`
 //!    (winner-only accounting must agree across both decompositions),
 //!    hedge ledgers are zero when no hedge ran, and the planner's
 //!    `ba.grants` ledger matches `ba.requests` on clean OOM-free runs.
+//! 4. **No hang** — gray failures may slow a run, never wedge it:
+//!    both runs must finish inside a generous makespan bound.
 //!
 //! Replay: every failure report carries the script seed; rerun it with
 //! `hapi scenario --scenario-seed <u64>` (or
@@ -72,8 +84,22 @@ pub enum EventKind {
     /// Fail-stop `path`'s COS front end: established connections die,
     /// new ones are dropped.  The address stays valid.
     CrashProxy { path: usize },
-    /// Bring a crashed front end back on its original address.
+    /// Bring a crashed front end back on its original address — also
+    /// clears every gray fault (stall, corruption, flap) on it.
     RestartProxy { path: usize },
+    /// Gray-stall `path`'s front end: requests are read but never
+    /// answered — no error, no EOF.  Only `io_deadline_ms` turns this
+    /// from a hang into a retryable timeout.
+    StallProxy { path: usize },
+    /// Clear a gray stall; parked requests are answered.
+    UnstallProxy { path: usize },
+    /// Corrupt `pct`% of `path`'s response frames on the wire (one
+    /// flipped payload byte per corrupted frame); `pct: 0` clears.
+    /// Only `frame_integrity` checksums make this detectable.
+    CorruptFrames { path: usize, pct: u64 },
+    /// Flap `path`'s front end: alternate `period` down / `period` up,
+    /// starting down.  Cleared by [`EventKind::RestartProxy`].
+    FlapProxy { path: usize, period: Duration },
 }
 
 /// An [`EventKind`] scheduled at an offset from scenario start.
@@ -135,11 +161,19 @@ impl ScenarioScript {
     /// script *survivable*:
     ///
     /// - chaos comes in fault/clear pairs (degrade→recover,
-    ///   jitter→restore, crash→restart), the clear strictly after the
-    ///   fault, so each path's final scripted state is healthy;
-    /// - at most one path ever crashes per script, and when one does,
+    ///   jitter→restore, crash→restart, stall→unstall, corrupt→clear,
+    ///   flap→restart), the clear strictly after the fault, so each
+    ///   path's final scripted state is healthy;
+    /// - fail-stop-ish faults (crash, stall, flap) all land on one
+    ///   designated fault path per script, and when any is present
     ///   every tenant's fanout is forced to `paths` so a shard retry
     ///   always has a live front end to land on;
+    /// - stall windows stay ≤ 400 ms, well under the 2 s `io_deadline`
+    ///   [`ScenarioScript::config`] auto-enables for stall scripts, so
+    ///   a parked request is served before its deadline (overlapping
+    ///   windows can only truncate each other, never extend);
+    /// - corruption rates stay ≤ 40%, so the client's local bounded
+    ///   integrity retry (8 attempts) succeeds with overwhelming odds;
     /// - degraded rates stay ≥ `path_rate / 7` — slow, never stuck.
     pub fn random(seed: u64) -> ScenarioScript {
         let mut rng = Rng::new(seed);
@@ -150,12 +184,15 @@ impl ScenarioScript {
         let queue_model = path_latency > Duration::ZERO && rng.bool();
 
         let mut events: Vec<ScenarioEvent> = Vec::new();
-        let mut crash_path: Option<usize> = None;
+        // One designated fault path shared by every fail-stop-ish
+        // family (crash, stall, flap): the other paths stay reliable,
+        // so a cross-path retry always has somewhere to land.
+        let mut fault_path: Option<usize> = None;
         for _ in 0..rng.usize_below(4) {
             let at = Duration::from_millis(rng.range(40, 600));
             let clear = at + Duration::from_millis(rng.range(120, 400));
             let path = rng.usize_below(paths);
-            match rng.below(3) {
+            match rng.below(6) {
                 0 => {
                     let rate = path_rate / rng.range(4, 7);
                     events.push(ScenarioEvent {
@@ -185,11 +222,46 @@ impl ScenarioScript {
                         },
                     });
                 }
-                _ => {
-                    let path = *crash_path.get_or_insert(path);
+                2 => {
+                    let path = *fault_path.get_or_insert(path);
                     events.push(ScenarioEvent {
                         at,
                         kind: EventKind::CrashProxy { path },
+                    });
+                    events.push(ScenarioEvent {
+                        at: clear,
+                        kind: EventKind::RestartProxy { path },
+                    });
+                }
+                3 => {
+                    let path = *fault_path.get_or_insert(path);
+                    events.push(ScenarioEvent {
+                        at,
+                        kind: EventKind::StallProxy { path },
+                    });
+                    events.push(ScenarioEvent {
+                        at: clear,
+                        kind: EventKind::UnstallProxy { path },
+                    });
+                }
+                4 => {
+                    let pct = rng.range(10, 40);
+                    events.push(ScenarioEvent {
+                        at,
+                        kind: EventKind::CorruptFrames { path, pct },
+                    });
+                    events.push(ScenarioEvent {
+                        at: clear,
+                        kind: EventKind::CorruptFrames { path, pct: 0 },
+                    });
+                }
+                _ => {
+                    let path = *fault_path.get_or_insert(path);
+                    let period =
+                        Duration::from_millis(rng.range(40, 120));
+                    events.push(ScenarioEvent {
+                        at,
+                        kind: EventKind::FlapProxy { path, period },
                     });
                     events.push(ScenarioEvent {
                         at: clear,
@@ -202,7 +274,7 @@ impl ScenarioScript {
         // (strictly later), and equal-time cross-pair order follows
         // push order — deterministic.
         events.sort_by_key(|e| e.at);
-        let has_crash = crash_path.is_some();
+        let fail_stop = fault_path.is_some();
 
         let n_tenants = 1 + rng.usize_below(3);
         let wave = Duration::from_millis(rng.range(80, 250));
@@ -221,7 +293,7 @@ impl ScenarioScript {
                 let model = *rng.choose(&SIM_MODELS);
                 let samples = 40 * rng.range(2, 4) as usize;
                 let pipeline_depth = rng.range(1, 3) as usize;
-                let fetch_fanout = if has_crash {
+                let fetch_fanout = if fail_stop {
                     paths
                 } else {
                     rng.range(1, 3) as usize
@@ -348,6 +420,124 @@ impl ScenarioScript {
         }
     }
 
+    /// Canned regression: one tenant across two paths; path 0's front
+    /// end gray-stalls at 80 ms and stays silent until 800 ms.  The
+    /// auto-enabled `io_deadline` (2 s) is deliberately longer than
+    /// the stall, so the scenario passes as-is; the scenario_fuzz
+    /// harness re-runs it with a 250 ms deadline tweak to force real
+    /// timeouts and cross-path retries (`pipeline.timeouts > 0`) while
+    /// the loss trajectory stays reference-identical.
+    pub fn stalled_proxy_deadline() -> ScenarioScript {
+        ScenarioScript {
+            seed: 0x57a1_1ed0,
+            paths: 2,
+            path_rate: 300_000,
+            path_latency: Duration::ZERO,
+            queue_model: false,
+            tenants: vec![TenantPlan {
+                tenant: 0,
+                client_id: 2,
+                model: "simnet",
+                arrival: Duration::ZERO,
+                samples: 400,
+                pipeline_depth: 2,
+                fetch_fanout: 2,
+                gflops: 0.0,
+                crash_iters: None,
+            }],
+            events: vec![
+                ScenarioEvent {
+                    at: Duration::from_millis(80),
+                    kind: EventKind::StallProxy { path: 0 },
+                },
+                ScenarioEvent {
+                    at: Duration::from_millis(800),
+                    kind: EventKind::UnstallProxy { path: 0 },
+                },
+            ],
+        }
+    }
+
+    /// Canned regression: path 0's front end corrupts 30% of its
+    /// response frames from 60 ms to 900 ms.  The auto-enabled
+    /// `frame_integrity` checksums catch every flipped byte before it
+    /// reaches training; the client's local bounded retry refetches,
+    /// so `pipeline.integrity_fail > 0` while the loss trajectory
+    /// stays bitwise reference-identical.
+    pub fn corrupt_frames_integrity() -> ScenarioScript {
+        ScenarioScript {
+            seed: 0x0c44_0b17,
+            paths: 2,
+            path_rate: 300_000,
+            path_latency: Duration::ZERO,
+            queue_model: false,
+            tenants: vec![TenantPlan {
+                tenant: 0,
+                client_id: 2,
+                model: "simnet",
+                arrival: Duration::ZERO,
+                samples: 400,
+                pipeline_depth: 2,
+                fetch_fanout: 2,
+                gflops: 0.0,
+                crash_iters: None,
+            }],
+            events: vec![
+                ScenarioEvent {
+                    at: Duration::from_millis(60),
+                    kind: EventKind::CorruptFrames { path: 0, pct: 30 },
+                },
+                ScenarioEvent {
+                    at: Duration::from_millis(900),
+                    kind: EventKind::CorruptFrames { path: 0, pct: 0 },
+                },
+            ],
+        }
+    }
+
+    /// Canned regression: path 0's front end flaps (120 ms down /
+    /// 120 ms up, starting down) from 100 ms until a restart at
+    /// 1100 ms.  The auto-enabled circuit breaker (threshold 3) must
+    /// trip on the consecutive down-window failures
+    /// (`pipeline.breaker_trips ≥ 1`), divert the path's slots, and —
+    /// once the restart clears the flap — re-close via a half-open
+    /// probe so traffic migrates back (`pipeline.breaker_open == 0` at
+    /// the end of the run).  The run is sized to outlive the restart
+    /// by a wide margin.
+    pub fn flapping_proxy_breaker() -> ScenarioScript {
+        ScenarioScript {
+            seed: 0xf1a9_b4ea,
+            paths: 2,
+            path_rate: 150_000,
+            path_latency: Duration::ZERO,
+            queue_model: false,
+            tenants: vec![TenantPlan {
+                tenant: 0,
+                client_id: 2,
+                model: "simnet",
+                arrival: Duration::ZERO,
+                samples: 800,
+                pipeline_depth: 2,
+                fetch_fanout: 2,
+                gflops: 0.0,
+                crash_iters: None,
+            }],
+            events: vec![
+                ScenarioEvent {
+                    at: Duration::from_millis(100),
+                    kind: EventKind::FlapProxy {
+                        path: 0,
+                        period: Duration::from_millis(120),
+                    },
+                },
+                ScenarioEvent {
+                    at: Duration::from_millis(1100),
+                    kind: EventKind::RestartProxy { path: 0 },
+                },
+            ],
+        }
+    }
+
     /// The testbed config this script runs under: sim backend, the
     /// script's topology, and the full chaos-ready transport (re-pin,
     /// probe, hedge) tuned for sub-second fault windows.
@@ -363,17 +553,59 @@ impl ScenarioScript {
         cfg.probe_interval_ms = 50;
         cfg.hedge_factor_pct = 50;
         cfg.hedge_max_bytes = 512 * 1024;
+        // Gray-failure knobs ride only when the script injects the
+        // matching fault, so chaos-free scripts keep exercising the
+        // default (deadline-less, checksum-less) data plane:
+        //
+        // - stalls need a deadline or the run wedges.  2 s clears the
+        //   longest random stall window (400 ms) with margin to spare
+        //   even on a degraded path, so a timeout always means the
+        //   stall, never a slow-but-healthy fetch.
+        // - corruption needs checksums or bad bytes reach training.
+        // - flapping needs the breaker so repeated down-windows stop
+        //   hammering the sick path between probes.
+        if self.has_stall() {
+            cfg.io_deadline_ms = 2_000;
+        }
+        if self.has_corruption() {
+            cfg.frame_integrity = true;
+        }
+        if self.has_flap() {
+            cfg.breaker_threshold = 3;
+        }
         cfg
     }
 
     /// Whether any scripted event fail-stops a proxy (tenant failures
-    /// are tolerated by [`verify`] only in that case, or when the
-    /// tenant's own crash is scripted — see
-    /// [`ScenarioScript::has_tenant_crash`]).
+    /// are tolerated by [`verify`] only for fail-stop-ish scripts —
+    /// this, [`ScenarioScript::has_flap`] — or when the tenant's own
+    /// crash is scripted, see [`ScenarioScript::has_tenant_crash`]).
     pub fn has_crash(&self) -> bool {
         self.events
             .iter()
             .any(|e| matches!(e.kind, EventKind::CrashProxy { .. }))
+    }
+
+    /// Whether any scripted event gray-stalls a proxy.
+    pub fn has_stall(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::StallProxy { .. }))
+    }
+
+    /// Whether any scripted event corrupts frames (a `pct: 0` clear
+    /// alone does not count).
+    pub fn has_corruption(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(e.kind, EventKind::CorruptFrames { pct, .. } if pct > 0)
+        })
+    }
+
+    /// Whether any scripted event flaps a proxy.
+    pub fn has_flap(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::FlapProxy { .. }))
     }
 
     /// Whether any tenant is scripted to die mid-epoch
@@ -504,6 +736,14 @@ fn apply_event(bed: &Testbed, kind: &EventKind, full_rate: u64) {
         }
         EventKind::CrashProxy { path } => bed.crash_proxy(path),
         EventKind::RestartProxy { path } => bed.restart_proxy(path),
+        EventKind::StallProxy { path } => bed.stall_proxy(path),
+        EventKind::UnstallProxy { path } => bed.unstall_proxy(path),
+        EventKind::CorruptFrames { path, pct } => {
+            bed.set_corrupt_frames(path, pct)
+        }
+        EventKind::FlapProxy { path, period } => {
+            bed.flap_proxy(path, period)
+        }
     }
 }
 
@@ -576,7 +816,7 @@ fn build_client(
     ))
 }
 
-/// Check the three scenario invariants between a reference run and a
+/// Check the four scenario invariants between a reference run and a
 /// chaos run of the same script.  Returns human-readable violations —
 /// empty means the script passed.  Non-panicking so both the fuzzer
 /// (which adds the replay seed to its panic message) and the
@@ -595,7 +835,12 @@ pub fn verify(
         ));
         return v;
     }
-    let crash_scripted = script.has_crash();
+    // Fail-stop-ish faults (crash, flap) can legitimately take a
+    // tenant down when every retry lands in a dead window; gray-but-
+    // recoverable faults (stall under a deadline, corruption under
+    // checksums) never may — their whole point is that the data plane
+    // rides them out.
+    let crash_scripted = script.has_crash() || script.has_flap();
     for ((plan, r), c) in script
         .tenants
         .iter()
@@ -666,6 +911,24 @@ pub fn verify(
         }
         for m in planner_books(outcome) {
             v.push(format!("{label} run: {m}"));
+        }
+    }
+    // Invariant 4: no hang.  A gray failure may slow a run down, never
+    // wedge it.  The bound is generous (CI boxes are slow and scripts
+    // stack several tenants), but a stalled data plane without
+    // deadlines blows straight through it — the fuzzer's watchdog
+    // would abort the whole process; this catches near-misses with a
+    // replayable report instead.
+    const NO_HANG: Duration = Duration::from_secs(90);
+    for (label, outcome) in
+        [("reference", reference), ("chaos", chaos)]
+    {
+        if outcome.makespan > NO_HANG {
+            v.push(format!(
+                "{label} run makespan {:?} exceeds the no-hang bound \
+                 {NO_HANG:?}",
+                outcome.makespan
+            ));
         }
     }
     v
@@ -798,7 +1061,7 @@ mod tests {
                 s.events.windows(2).all(|w| w[0].at <= w[1].at),
                 "seed {seed}: events out of order"
             );
-            let mut crashed_paths = std::collections::BTreeSet::new();
+            let mut fail_stop_paths = std::collections::BTreeSet::new();
             for e in &s.events {
                 match e.kind {
                     EventKind::DegradePath { path, rate } => {
@@ -808,15 +1071,27 @@ mod tests {
                             "seed {seed}: degrade too deep"
                         );
                     }
-                    EventKind::CrashProxy { path } => {
-                        crashed_paths.insert(path);
+                    EventKind::CrashProxy { path }
+                    | EventKind::StallProxy { path }
+                    | EventKind::FlapProxy { path, .. } => {
+                        fail_stop_paths.insert(path);
+                    }
+                    EventKind::CorruptFrames { path, pct } => {
+                        assert!(path < s.paths, "seed {seed}");
+                        assert!(
+                            pct <= 40,
+                            "seed {seed}: corruption too hot for the \
+                             bounded integrity retry"
+                        );
                     }
                     _ => {}
                 }
             }
+            // Crash, stall and flap all share one designated fault
+            // path per script.
             assert!(
-                crashed_paths.len() <= 1,
-                "seed {seed}: more than one path crashes"
+                fail_stop_paths.len() <= 1,
+                "seed {seed}: fail-stop faults on more than one path"
             );
             // Every fault has a strictly later clearing action on the
             // same path.
@@ -844,6 +1119,64 @@ mod tests {
                                 )),
                         "seed {seed}: crash without restart"
                     ),
+                    EventKind::StallProxy { path } => {
+                        // A stall must clear (unstall, or a restart
+                        // that wipes every gray fault) within the
+                        // auto-enabled deadline's budget.
+                        assert!(
+                            s.events[i + 1..].iter().any(|l| matches!(
+                                l.kind,
+                                EventKind::UnstallProxy { path: p }
+                                | EventKind::RestartProxy { path: p }
+                                    if p == path
+                            )),
+                            "seed {seed}: stall without unstall"
+                        );
+                        let cleared_at = s.events[i + 1..]
+                            .iter()
+                            .find(|l| matches!(
+                                l.kind,
+                                EventKind::UnstallProxy { path: p }
+                                | EventKind::RestartProxy { path: p }
+                                    if p == path
+                            ))
+                            .map(|l| l.at)
+                            .unwrap();
+                        assert!(
+                            cleared_at - e.at
+                                <= Duration::from_millis(400),
+                            "seed {seed}: stall window outlives the \
+                             survivability budget"
+                        );
+                    }
+                    EventKind::CorruptFrames { path, pct } if pct > 0 => {
+                        assert!(
+                            s.events[i + 1..].iter().any(|l| matches!(
+                                l.kind,
+                                EventKind::CorruptFrames { path: p, pct: 0 }
+                                    if p == path
+                            ) || matches!(
+                                l.kind,
+                                EventKind::RestartProxy { path: p }
+                                    if p == path
+                            )),
+                            "seed {seed}: corruption never cleared"
+                        );
+                    }
+                    EventKind::FlapProxy { path, period } => {
+                        assert!(
+                            period >= Duration::from_millis(40),
+                            "seed {seed}: flap period too short"
+                        );
+                        assert!(
+                            s.events[i + 1..].iter().any(|l| matches!(
+                                l.kind,
+                                EventKind::RestartProxy { path: p }
+                                    if p == path
+                            )),
+                            "seed {seed}: flap without restart"
+                        );
+                    }
                     _ => {}
                 }
             }
@@ -852,10 +1185,10 @@ mod tests {
                 assert!(t.client_id > 0, "seed {seed}");
                 assert!(t.pipeline_depth >= 1, "seed {seed}");
                 assert!(t.fetch_fanout >= 1, "seed {seed}");
-                if s.has_crash() {
+                if s.has_crash() || s.has_stall() || s.has_flap() {
                     assert_eq!(
                         t.fetch_fanout, s.paths,
-                        "seed {seed}: crash script needs full fanout"
+                        "seed {seed}: fail-stop script needs full fanout"
                     );
                 }
                 // A scripted tenant crash is strictly mid-epoch:
@@ -901,6 +1234,41 @@ mod tests {
             c.events[1].kind,
             EventKind::RestartProxy { path: 1 }
         ));
+
+        let s = ScenarioScript::stalled_proxy_deadline();
+        assert!(s.has_stall() && !s.has_crash());
+        assert!(matches!(
+            s.events[0].kind,
+            EventKind::StallProxy { path: 0 }
+        ));
+        assert!(matches!(
+            s.events[1].kind,
+            EventKind::UnstallProxy { path: 0 }
+        ));
+        assert!(s.tenants.iter().all(|t| t.fetch_fanout == s.paths));
+
+        let k = ScenarioScript::corrupt_frames_integrity();
+        assert!(k.has_corruption() && !k.has_crash());
+        assert!(matches!(
+            k.events[0].kind,
+            EventKind::CorruptFrames { path: 0, pct: 30 }
+        ));
+        assert!(matches!(
+            k.events[1].kind,
+            EventKind::CorruptFrames { path: 0, pct: 0 }
+        ));
+
+        let f = ScenarioScript::flapping_proxy_breaker();
+        assert!(f.has_flap() && !f.has_crash());
+        assert!(matches!(
+            f.events[0].kind,
+            EventKind::FlapProxy { path: 0, .. }
+        ));
+        assert!(matches!(
+            f.events[1].kind,
+            EventKind::RestartProxy { path: 0 }
+        ));
+        assert!(f.tenants.iter().all(|t| t.fetch_fanout == f.paths));
     }
 
     #[test]
@@ -917,5 +1285,50 @@ mod tests {
         assert_eq!(cfg.seed, s.seed);
         assert!(cfg.repin_threshold_pct > 0, "re-pinning must be on");
         assert!(cfg.probe_interval_ms > 0, "probing must be on");
+    }
+
+    #[test]
+    fn random_generator_covers_gray_families() {
+        // The widened event taxonomy must actually come out of the
+        // generator: across a modest seed range every gray family
+        // (stall, corruption, flap) appears at least once, so the
+        // fuzz sweep keeps exercising deadlines, checksums and the
+        // breaker without hand-picked seeds.
+        let (mut stall, mut corrupt, mut flap) = (false, false, false);
+        for seed in 0..300 {
+            let s = ScenarioScript::random(seed);
+            stall |= s.has_stall();
+            corrupt |= s.has_corruption();
+            flap |= s.has_flap();
+        }
+        assert!(
+            stall && corrupt && flap,
+            "gray coverage gap: stall={stall} corrupt={corrupt} \
+             flap={flap}"
+        );
+    }
+
+    #[test]
+    fn gray_knobs_auto_enable_per_fault_family() {
+        // Chaos-free (and gray-free) scripts keep the stock data
+        // plane: no deadline, no checksums, no breaker.
+        let plain = ScenarioScript::degrade_recover_migrate_back();
+        let cfg = plain.config();
+        assert_eq!(cfg.io_deadline_ms, 0);
+        assert!(!cfg.frame_integrity);
+        assert_eq!(cfg.breaker_threshold, 0);
+
+        let stall = ScenarioScript::stalled_proxy_deadline().config();
+        assert_eq!(stall.io_deadline_ms, 2_000);
+        assert!(!stall.frame_integrity);
+
+        let corrupt =
+            ScenarioScript::corrupt_frames_integrity().config();
+        assert!(corrupt.frame_integrity);
+        assert_eq!(corrupt.io_deadline_ms, 0);
+
+        let flap = ScenarioScript::flapping_proxy_breaker().config();
+        assert_eq!(flap.breaker_threshold, 3);
+        assert!(!flap.frame_integrity);
     }
 }

@@ -5,6 +5,7 @@
 pub mod fmtsize;
 pub mod json;
 pub mod logging;
+pub mod retry;
 pub mod rng;
 
 pub use fmtsize::{fmt_bytes, fmt_duration};

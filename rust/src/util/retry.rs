@@ -1,0 +1,217 @@
+//! One retry loop for every client-side retry site.
+//!
+//! Three callers share this shape: the planner-busy backoff in the
+//! client fetch path (capped exponential sleep), the sharded engine's
+//! retry-on-another-connection (immediate, the re-route *is* the
+//! backoff), and the gray-failure retries for [`Error::Timeout`] /
+//! [`Error::Integrity`].  Keeping them on one helper means the cap,
+//! the classifier hook and the per-attempt metric hook cannot drift
+//! apart.
+//!
+//! The caller supplies three closures: `retryable` classifies an error
+//! (see [`Error::is_retryable`] for the crate-wide retryable-vs-fatal
+//! split), `on_retry` fires before each retry (metric increments,
+//! re-routing), and `attempt` runs the operation with its 0-based
+//! attempt index — later attempts can route differently.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Retry budget and pacing.  `max_retries` counts *re*-tries: the
+/// operation runs at most `max_retries + 1` times.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    /// Sleep before the first retry; doubles per retry up to
+    /// `backoff_cap`.  [`Duration::ZERO`] = retry immediately.
+    pub backoff: Duration,
+    pub backoff_cap: Duration,
+    /// Non-zero: each sleep is jittered to 50–100% of its nominal
+    /// value, deterministically from this seed — concurrent tenants
+    /// backing off from the same busy planner de-synchronise instead
+    /// of thundering back in lockstep.
+    pub jitter_seed: u64,
+}
+
+impl RetryPolicy {
+    /// Retry up to `max_retries` times with no sleep in between — the
+    /// sharded engine's shape, where re-routing to another connection
+    /// is the real remedy and waiting adds nothing.
+    pub fn immediate(max_retries: u32) -> Self {
+        RetryPolicy {
+            max_retries,
+            backoff: Duration::ZERO,
+            backoff_cap: Duration::ZERO,
+            jitter_seed: 0,
+        }
+    }
+
+    /// Capped exponential backoff starting at `backoff`.
+    pub fn backoff(
+        max_retries: u32,
+        backoff: Duration,
+        backoff_cap: Duration,
+    ) -> Self {
+        RetryPolicy {
+            max_retries,
+            backoff,
+            backoff_cap,
+            jitter_seed: 0,
+        }
+    }
+
+    /// Jitter the sleeps from `seed` (0 = no jitter).
+    pub fn jitter(mut self, seed: u64) -> Self {
+        self.jitter_seed = seed;
+        self
+    }
+}
+
+/// Run `attempt` under `policy`.  On an error that `retryable` accepts
+/// while budget remains, `on_retry(attempt_idx, &err)` fires, the
+/// backoff (if any) is slept, and the operation re-runs with the next
+/// attempt index.  Fatal errors and budget exhaustion return the last
+/// error unchanged.
+pub fn run<T>(
+    policy: &RetryPolicy,
+    mut retryable: impl FnMut(&Error) -> bool,
+    mut on_retry: impl FnMut(u32, &Error),
+    mut attempt: impl FnMut(u32) -> Result<T>,
+) -> Result<T> {
+    let mut rng = (policy.jitter_seed != 0)
+        .then(|| Rng::new(policy.jitter_seed));
+    let mut sleep = policy.backoff;
+    let mut tries = 0u32;
+    loop {
+        match attempt(tries) {
+            Ok(v) => return Ok(v),
+            Err(e) if tries < policy.max_retries && retryable(&e) => {
+                on_retry(tries, &e);
+                if !sleep.is_zero() {
+                    let wait = match &mut rng {
+                        Some(r) => {
+                            sleep.mul_f64(0.5 + 0.5 * r.f32() as f64)
+                        }
+                        None => sleep,
+                    };
+                    std::thread::sleep(wait);
+                    sleep = (sleep * 2).min(policy.backoff_cap);
+                }
+                tries += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_success_never_retries() {
+        let mut hooks = 0;
+        let v = run(
+            &RetryPolicy::immediate(3),
+            |_| true,
+            |_, _| hooks += 1,
+            |_| Ok(7),
+        )
+        .unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(hooks, 0);
+    }
+
+    #[test]
+    fn retries_until_success_with_attempt_indices() {
+        let mut seen = Vec::new();
+        let v = run(
+            &RetryPolicy::immediate(5),
+            |e| e.is_retryable(),
+            |i, _| seen.push(i),
+            |i| {
+                if i < 3 {
+                    Err(Error::other("flaky"))
+                } else {
+                    Ok(i)
+                }
+            },
+        )
+        .unwrap();
+        assert_eq!(v, 3);
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fatal_errors_propagate_immediately() {
+        let mut hooks = 0;
+        let err = run(
+            &RetryPolicy::immediate(5),
+            |e| e.is_retryable(),
+            |_, _| hooks += 1,
+            |_| -> Result<()> {
+                Err(Error::Config("bad".into()))
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+        assert_eq!(hooks, 0);
+    }
+
+    #[test]
+    fn budget_exhaustion_returns_last_error() {
+        let mut attempts = 0;
+        let err = run(
+            &RetryPolicy::immediate(2),
+            |_| true,
+            |_, _| {},
+            |i| -> Result<()> {
+                attempts += 1;
+                Err(Error::other(format!("fail {i}")))
+            },
+        )
+        .unwrap_err();
+        assert_eq!(attempts, 3, "1 attempt + 2 retries");
+        assert!(err.to_string().contains("fail 2"));
+    }
+
+    #[test]
+    fn backoff_sleeps_and_caps() {
+        let policy = RetryPolicy::backoff(
+            3,
+            Duration::from_millis(2),
+            Duration::from_millis(4),
+        );
+        let t0 = std::time::Instant::now();
+        let _ = run(
+            &policy,
+            |_| true,
+            |_, _| {},
+            |_| -> Result<()> { Err(Error::other("x")) },
+        );
+        // 2 + 4 + 4 ms of nominal sleep.
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn jitter_shrinks_but_never_inflates_the_sleep() {
+        let policy = RetryPolicy::backoff(
+            2,
+            Duration::from_millis(20),
+            Duration::from_millis(20),
+        )
+        .jitter(0x5eed);
+        let t0 = std::time::Instant::now();
+        let _ = run(
+            &policy,
+            |_| true,
+            |_, _| {},
+            |_| -> Result<()> { Err(Error::other("x")) },
+        );
+        let elapsed = t0.elapsed();
+        // Two sleeps, each in [10, 20] ms.
+        assert!(elapsed >= Duration::from_millis(19), "{elapsed:?}");
+    }
+}

@@ -10,8 +10,8 @@
 use std::path::Path;
 
 use hapi::analyze::{
-    self, condvar, config_drift, lexer, lockorder, metric_names, panics,
-    Finding, Scope, SourceFile,
+    self, condvar, config_drift, lexer, lockorder, metric_names,
+    net_timeouts, panics, Finding, Scope, SourceFile,
 };
 
 fn fixture(name: &str) -> SourceFile {
@@ -23,9 +23,10 @@ fn fixture(name: &str) -> SourceFile {
 }
 
 /// Findings per pass for one fixture, in PASSES order (lock-order,
-/// condvar, panics, metric-names, config-drift).  The lock-order
-/// count includes cycles found in the fixture's own edge set.
-fn per_pass(sf: &SourceFile) -> [Vec<Finding>; 5] {
+/// condvar, panics, net-timeouts, metric-names, config-drift).  The
+/// lock-order count includes cycles found in the fixture's own edge
+/// set.
+fn per_pass(sf: &SourceFile) -> [Vec<Finding>; 6] {
     let mut edges = lockorder::EdgeMap::new();
     let mut lock = lockorder::run_file(sf, &mut edges);
     lock.extend(lockorder::find_cycles(&edges));
@@ -34,6 +35,7 @@ fn per_pass(sf: &SourceFile) -> [Vec<Finding>; 5] {
         lock,
         condvar::run_file(sf),
         panics::run_file(sf),
+        net_timeouts::run_file(sf),
         metric_names::run(files, None),
         config_drift::run(files, None),
     ]
@@ -101,7 +103,7 @@ fn wait_timeout_no_deadline_fixture() {
 
 #[test]
 fn metric_literal_fixture() {
-    let f = assert_exclusive("bad_metric_literal.rs", 3, 2);
+    let f = assert_exclusive("bad_metric_literal.rs", 4, 2);
     assert!(f.iter().all(|x| x.msg.contains("bypasses metrics::names")));
     assert!(f.iter().any(|x| x.msg.contains("pipeline.iterations")));
     // The format! template is caught too, not just plain literals.
@@ -110,7 +112,7 @@ fn metric_literal_fixture() {
 
 #[test]
 fn config_drift_fixture() {
-    let f = assert_exclusive("bad_config_drift.rs", 4, 3);
+    let f = assert_exclusive("bad_config_drift.rs", 5, 3);
     assert!(f.iter().all(|x| x.func == "beta"), "alpha is fully wired");
     assert!(f.iter().any(|x| x.msg.contains("no JSON key")));
     assert!(f.iter().any(|x| x.msg.contains("no CLI flag")));
@@ -122,6 +124,21 @@ fn panic_site_fixture() {
     let f = assert_exclusive("bad_panic_site.rs", 2, 2);
     assert!(f.iter().any(|x| x.func == "parse_port"));
     assert!(f.iter().any(|x| x.func == "head"));
+}
+
+#[test]
+fn connect_no_timeout_fixture() {
+    let f = assert_exclusive("bad_connect_no_timeout.rs", 3, 2);
+    assert!(
+        f.iter().any(|x| x.func == "connect_no_deadlines"
+            && x.msg.contains("set_read_timeout/set_write_timeout")),
+        "missing no-deadlines finding: {f:#?}"
+    );
+    assert!(
+        f.iter().any(|x| x.func == "connect_read_only"
+            && x.msg.contains("without set_write_timeout")),
+        "missing write-only finding: {f:#?}"
+    );
 }
 
 #[test]

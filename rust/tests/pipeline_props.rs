@@ -326,6 +326,96 @@ fn sharded_flaky_shards_recover_via_retry() {
     }
 }
 
+/// Gray-failure regression: a fetch that dies mid-frame — a deadline
+/// expiring halfway through a payload, or a checksum mismatch on a
+/// fully-read frame — surfaces a retryable error having consumed
+/// *none* of the shard.  The engine must retry it on another slot and
+/// deliver every (job, shard) pair exactly once: no duplicated shard,
+/// no lost shard, and bytes charged only for the attempt that
+/// actually served.
+#[test]
+fn sharded_mid_frame_truncation_fetches_exactly_once() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x6A47);
+        let depth = rng.range(1, 4) as usize;
+        let fanout = rng.range(2, 6) as usize;
+        let num_shards = rng.range(2, 30) as usize;
+        let per_iter = rng.range(1, 4) as usize;
+        let cut_every = rng.range(2, 5) as usize;
+        let jobs = pipeline::jobs_for(num_shards, per_iter);
+        let n_jobs = jobs.len();
+        let reg = Registry::new();
+        let served = Mutex::new(Vec::<usize>::new());
+        let mut order = Vec::new();
+
+        pipeline::run_sharded(
+            depth,
+            fanout,
+            &jobs,
+            &reg,
+            true,
+            |_| (),
+            |ctx, _: &(), job, shard_pos| {
+                let shard = job.shards[shard_pos];
+                if ctx.attempt == 0 && shard % cut_every == 0 {
+                    // Alternate the two gray flavours a truncated
+                    // frame surfaces as in the real transport.
+                    return Err(if shard % 2 == 0 {
+                        hapi::Error::Timeout(
+                            "read 3/16 payload bytes".into(),
+                        )
+                    } else {
+                        hapi::Error::Integrity(
+                            "payload checksum mismatch".into(),
+                        )
+                    });
+                }
+                served.lock().unwrap().push(shard);
+                Ok(ShardFetched {
+                    payload: shard,
+                    bytes: 1,
+                })
+            },
+            |job, _, parts| {
+                assert_eq!(parts, job.shards, "seed {seed}");
+                Ok(job.seq)
+            },
+            |d| {
+                order.push(d.payload);
+                Ok(())
+            },
+        )
+        .unwrap();
+
+        assert_eq!(
+            order,
+            (0..n_jobs).collect::<Vec<_>>(),
+            "seed {seed}: truncation retries broke delivery order"
+        );
+        // Exactly-once: each shard served once, by any slot.
+        let mut served = served.into_inner().unwrap();
+        served.sort_unstable();
+        assert_eq!(
+            served,
+            (0..num_shards).collect::<Vec<_>>(),
+            "seed {seed}: duplicated or lost shard after truncation"
+        );
+        let truncated =
+            (0..num_shards).filter(|s| s % cut_every == 0).count();
+        assert_eq!(
+            reg.counter(names::PIPELINE_SHARD_RETRIES).get(),
+            truncated as u64,
+            "seed {seed}"
+        );
+        // The truncated attempts charged no bytes anywhere.
+        assert_eq!(
+            reg.counter(names::PIPELINE_BYTES).get(),
+            num_shards as u64,
+            "seed {seed}: failed attempts leaked byte accounting"
+        );
+    }
+}
+
 /// Metric-parity: `pipeline.connN.*` always reflects the connection
 /// slot that **actually served** each shard — for any depth / fanout /
 /// flaky-shard pattern, the per-slot success counts and bytes the

@@ -1,7 +1,7 @@
 //! Scenario fuzzer: randomized chaos scripts through the full sim
-//! stack, checking the three global invariants (bitwise loss identity
-//! vs a chaos-free reference, no lost work, metrics conservation) —
-//! see `hapi::scenario`.
+//! stack, checking the four global invariants (bitwise loss identity
+//! vs a chaos-free reference, no lost work, metrics conservation, no
+//! hang) — see `hapi::scenario`.
 //!
 //! Modes:
 //!
@@ -210,11 +210,105 @@ fn canned_tenant_crash_mid_epoch_spares_cotenant() {
     );
 }
 
+/// Canned gray-stall scenario: path 0's front end reads requests and
+/// goes silent for 720 ms.  With the deadline tweaked below the stall
+/// window, every fetch caught in it must expire (`pipeline.timeouts`)
+/// and retry cross-path instead of wedging — and the loss trajectory
+/// must not move a bit.
+#[test]
+fn canned_stalled_proxy_times_out_and_retries_cross_path() {
+    let script = ScenarioScript::stalled_proxy_deadline();
+    // The script's auto-deadline (2 s) outlives this stall; tighten it
+    // so the timeout path actually fires.  The tweak reaches both runs
+    // — deadlines on a healthy reference never expire.
+    let tweak =
+        |cfg: &mut hapi::config::HapiConfig| cfg.io_deadline_ms = 250;
+    let reference = scenario::run_with(&script, false, tweak).unwrap();
+    let chaos = scenario::run_with(&script, true, tweak).unwrap();
+    let v = scenario::verify(&script, &reference, &chaos);
+    assert!(
+        v.is_empty(),
+        "invariant violations: {v:#?}\n{}",
+        replay_cmd(script.seed)
+    );
+    let t = &chaos.tenants[0];
+    assert!(t.error.is_none(), "tenant failed: {:?}", t.error);
+    assert_eq!(t.iterations, t.expected_iterations);
+    assert!(
+        t.registry.counter(names::PIPELINE_TIMEOUTS).get() >= 1,
+        "a 720 ms stall under a 250 ms deadline produced no timeout"
+    );
+}
+
+/// Canned corruption scenario: path 0 flips a byte in 30% of its
+/// response frames for most of the run.  FNV-framed integrity must
+/// catch every one before it reaches training (`pipeline.integrity_fail`),
+/// the bounded local retry must refetch, and the loss trajectory must
+/// stay bitwise reference-identical — corrupt bytes never train.
+#[test]
+fn canned_corrupt_frames_detected_and_bitwise_clean() {
+    let script = ScenarioScript::corrupt_frames_integrity();
+    assert!(script.config().frame_integrity, "auto-knob must arm checksums");
+    let reference = scenario::run(&script, false).unwrap();
+    let chaos = scenario::run(&script, true).unwrap();
+    let v = scenario::verify(&script, &reference, &chaos);
+    assert!(
+        v.is_empty(),
+        "invariant violations: {v:#?}\n{}",
+        replay_cmd(script.seed)
+    );
+    let t = &chaos.tenants[0];
+    assert!(t.error.is_none(), "tenant failed: {:?}", t.error);
+    assert_eq!(t.iterations, t.expected_iterations);
+    assert!(
+        t.registry.counter(names::PIPELINE_INTEGRITY_FAIL).get() >= 1,
+        "30% corruption for 840 ms tripped no checksum"
+    );
+}
+
+/// Canned flapping scenario: path 0 alternates 120 ms down / 120 ms
+/// up until a restart clears it.  The auto-armed circuit breaker must
+/// trip on consecutive down-window failures (`pipeline.breaker_trips`),
+/// divert traffic, and — once the flap clears — re-close via a
+/// half-open probe (`pipeline.breaker_open` back to 0) with traffic
+/// home and the loss trajectory untouched.
+#[test]
+fn canned_flapping_proxy_trips_and_recloses_breaker() {
+    let script = ScenarioScript::flapping_proxy_breaker();
+    assert_eq!(script.config().breaker_threshold, 3);
+    let reference = scenario::run(&script, false).unwrap();
+    let chaos = scenario::run(&script, true).unwrap();
+    let v = scenario::verify(&script, &reference, &chaos);
+    assert!(
+        v.is_empty(),
+        "invariant violations: {v:#?}\n{}",
+        replay_cmd(script.seed)
+    );
+    let t = &chaos.tenants[0];
+    assert!(t.error.is_none(), "tenant failed: {:?}", t.error);
+    assert_eq!(t.iterations, t.expected_iterations);
+    let reg = &t.registry;
+    assert!(
+        reg.counter(names::PIPELINE_BREAKER_TRIPS).get() >= 1,
+        "five down-windows of consecutive failures never tripped the \
+         breaker"
+    );
+    assert_eq!(
+        reg.gauge(names::PIPELINE_BREAKER_OPEN).get(),
+        0,
+        "breaker still open at run end — the half-open probe never \
+         re-closed it after the restart"
+    );
+}
+
 /// Fixed seed corpus: shapes that stay pinned forever, independent of
-/// the randomized sweep.  If one regresses, its seed replays it.
+/// the randomized sweep.  If one regresses, its seed replays it.  The
+/// tail seeds were added with the gray-failure fault families
+/// (stall/corrupt/flap) so the corpus keeps exercising the widened
+/// event taxonomy.
 #[test]
 fn fixed_seed_corpus_holds_invariants() {
-    const CORPUS: [u64; 8] = [
+    const CORPUS: [u64; 12] = [
         1,
         7,
         42,
@@ -223,6 +317,10 @@ fn fixed_seed_corpus_holds_invariants() {
         0xBAD_C0FFEE,
         0x5EED_CAFE,
         u64::MAX,
+        0x6e7_da7a,
+        0x57a1_100f,
+        0xf1a9_0c0d,
+        0xc0de_c0de,
     ];
     for seed in CORPUS {
         run_script_checked(

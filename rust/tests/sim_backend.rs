@@ -688,6 +688,74 @@ fn slot_migration_spares_the_copath_tenant() {
     bed.stop();
 }
 
+/// The gray-hardening knobs are byte-transparent on a healthy net,
+/// end to end:
+///
+/// - `io_deadline_ms` is a pure watchdog — identical loss AND
+///   identical wire bytes (a deadline that never expires must not
+///   change a thing);
+/// - `breaker_threshold` is routing-only — identical loss and wire
+///   bytes while it never trips;
+/// - `frame_integrity` keeps the loss bitwise identical while costing
+///   strictly more wire bytes (the 8-byte FNV trailer per checksummed
+///   frame) — and nothing ever fails verification without a fault.
+///
+/// This pins the defaults contract: all three knobs off is
+/// byte-identical to the pre-hardening data plane.
+#[test]
+fn gray_knobs_are_byte_transparent_on_healthy_net() {
+    let run = |tweak: fn(&mut HapiConfig)| -> (Vec<u32>, u64, u64, u64) {
+        let mut cfg = sim_cfg();
+        cfg.net_paths = 2;
+        cfg.bandwidth = Some(2_000_000); // shaped → NIC meter active
+        cfg.pipeline_depth = 2;
+        cfg.fetch_fanout = 2;
+        tweak(&mut cfg);
+        let bed = Testbed::launch(cfg).unwrap();
+        let (ds, labels) =
+            bed.dataset("gray-ds", "simnet", 240).unwrap();
+        let client = bed.hapi_client("simnet", DeviceKind::Gpu).unwrap();
+        let stats = client.train_epoch(&ds, &labels).unwrap();
+        assert_eq!(stats.iterations, 6);
+        let rx = bed.net.stats().rx_bytes();
+        let timeouts =
+            bed.registry.counter(names::PIPELINE_TIMEOUTS).get();
+        let integrity_fails =
+            bed.registry.counter(names::PIPELINE_INTEGRITY_FAIL).get();
+        bed.stop();
+        (loss_bits(&stats.loss), rx, timeouts, integrity_fails)
+    };
+
+    let (base_loss, base_rx, _, _) = run(|_| {});
+
+    let (loss, rx, timeouts, _) = run(|c| c.io_deadline_ms = 2_000);
+    assert_bitwise_loss_identity(&base_loss, &loss, "io_deadline on");
+    assert_eq!(
+        rx, base_rx,
+        "an unexpired deadline changed wire bytes on a healthy net"
+    );
+    assert_eq!(timeouts, 0, "a healthy net expired a 2 s deadline");
+
+    let (loss, rx, _, _) = run(|c| c.breaker_threshold = 3);
+    assert_bitwise_loss_identity(&base_loss, &loss, "breaker on");
+    assert_eq!(
+        rx, base_rx,
+        "an untripped breaker changed wire bytes on a healthy net"
+    );
+
+    let (loss, rx, _, integrity_fails) =
+        run(|c| c.frame_integrity = true);
+    assert_bitwise_loss_identity(&base_loss, &loss, "frame_integrity on");
+    assert!(
+        rx > base_rx,
+        "checksummed frames must cost trailer bytes: {rx} vs {base_rx}"
+    );
+    assert_eq!(
+        integrity_fails, 0,
+        "a healthy net failed checksum verification"
+    );
+}
+
 /// The weak-client story holds on the sim backend with modeled time:
 /// the pipeline hides COS latency for a compute-bound CPU client too.
 #[test]
